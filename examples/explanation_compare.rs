@@ -1,0 +1,61 @@
+//! Generation-quality comparison (paper §4.4 / Table 3): the same
+//! explanation-style prompt under Full KV and ASR-KF-EGR with identical
+//! sampling parameters; reports active-KV compression and an entropy-
+//! based fluency proxy alongside both outputs.
+//!
+//!     cargo run --release --example explanation_compare
+
+use asrkf::baselines::make_policy;
+use asrkf::config::EngineConfig;
+use asrkf::engine::Generator;
+use asrkf::runtime::Runtime;
+use asrkf::util::bench::Table;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let cfg = EngineConfig::default();
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let gen = Generator::new(&rt, cfg.clone());
+
+    let prompt = "the recovery ladder monitors the entropy trace. the scheduler freezes \
+                  the key value pairs then the engine restores the frozen rows. ";
+    let max_new = 220;
+
+    let mut table = Table::new(
+        "Explanation task comparison (T=0.7, top-k=40, top-p=0.9)",
+        &["Metric", "Baseline (full)", "ASR-KF-EGR"],
+    );
+    let mut outs = Vec::new();
+    for policy in ["full", "asrkf"] {
+        let out = gen.generate(prompt, make_policy(policy, &cfg.freeze)?, max_new)?;
+        outs.push(out);
+    }
+    let mean_entropy = |o: &asrkf::engine::GenOutcome| {
+        o.trace.iter().map(|t| t.entropy as f64).sum::<f64>() / o.trace.len() as f64
+    };
+    table.row(&[
+        "Active KV".into(),
+        format!("{} tokens", outs[0].stats.final_active_kv),
+        format!("{} tokens", outs[1].stats.final_active_kv),
+    ]);
+    table.row(&[
+        "Compression".into(),
+        format!("{:.2}%", outs[0].stats.compression * 100.0),
+        format!("{:.2}%", outs[1].stats.compression * 100.0),
+    ]);
+    table.row(&[
+        "Mean entropy (nats)".into(),
+        format!("{:.3}", mean_entropy(&outs[0])),
+        format!("{:.3}", mean_entropy(&outs[1])),
+    ]);
+    table.row(&[
+        "Wall time".into(),
+        format!("{:.2?}", outs[0].stats.wall),
+        format!("{:.2?}", outs[1].stats.wall),
+    ]);
+    table.print();
+
+    println!("\n--- baseline output ---\n{}", outs[0].text);
+    println!("\n--- ASR-KF-EGR output ---\n{}", outs[1].text);
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT artifacts, generate text under the
+//! ASR-KF-EGR policy, and print the memory-compression stats.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Python is NOT involved: the model weights live inside
+//! `artifacts/*.hlo.txt`, loaded and executed through PJRT.
+
+use asrkf::baselines::make_policy;
+use asrkf::config::EngineConfig;
+use asrkf::engine::Generator;
+use asrkf::runtime::Runtime;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+
+    // 1. load the runtime (compiles HLO programs on first use)
+    let cfg = EngineConfig::default();
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+
+    // 2. build the paper's policy (swap "asrkf" for "full", "h2o" or
+    //    "streaming" to compare)
+    let policy = make_policy("asrkf", &cfg.freeze)?;
+
+    // 3. generate
+    let gen = Generator::new(&rt, cfg);
+    let prompt = "the router balances every request then the cache freezes the key value pairs. ";
+    let out = gen.generate(prompt, policy, 160)?;
+
+    println!("prompt : {prompt}");
+    println!("output : {}", out.text);
+    println!();
+    println!(
+        "tokens {} | active KV {} | mean active {:.0} | compression {:.1}% | {} freezes, {} restores",
+        out.stats.total_tokens,
+        out.stats.final_active_kv,
+        out.stats.mean_active_kv,
+        out.stats.compression * 100.0,
+        out.stats.freezes,
+        out.stats.restores,
+    );
+    println!(
+        "wall {:.2?} (upload {:.2?} execute {:.2?} download {:.2?} host {:.2?})",
+        out.stats.wall, out.stats.upload, out.stats.execute, out.stats.download, out.stats.host
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! End-to-end serving driver (the repo's E2E validation workload):
+//! spawns the continuous-batching coordinator in-process, submits a
+//! Poisson trace of requests against it, and reports latency and
+//! throughput — all through the public API.
+//!
+//!     cargo run --release --example serving_benchmark
+
+use std::time::{Duration, Instant};
+
+use asrkf::config::{EngineConfig, ServerConfig};
+use asrkf::coordinator::{spawn, GenParams};
+use asrkf::util::bench::Table;
+use asrkf::workload::trace::poisson_trace;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let cfg = EngineConfig::default();
+    let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
+    let (handle, join) = spawn(cfg, server)?;
+
+    // Poisson arrivals: 24 requests, ~3 req/s, short generations
+    let trace = poisson_trace(42, 24, 3.0, 40, 120, 32);
+    let t0 = Instant::now();
+    let mut waits = Vec::new();
+    for req in &trace {
+        let target = Duration::from_millis(req.arrival_ms);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let rx = handle.submit(GenParams {
+            prompt: req.prompt.clone(),
+            max_new: req.max_new,
+            policy: "asrkf".into(),
+            seed: req.arrival_ms,
+        })?;
+        waits.push((req.arrival_ms, rx));
+    }
+
+    let mut table = Table::new(
+        "Serving benchmark (continuous batching, ASR-KF-EGR)",
+        &["req", "prompt_toks", "gen_toks", "ttft_ms", "e2e_ms", "compression"],
+    );
+    let mut total_tokens = 0usize;
+    let (mut ttft_sum, mut e2e_sum) = (0.0f64, 0.0f64);
+    let n = waits.len();
+    for (i, (_, rx)) in waits.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if let Some(e) = &resp.error {
+            println!("request {i} failed: {e}");
+            continue;
+        }
+        total_tokens += resp.generated_tokens;
+        ttft_sum += resp.ttft.as_secs_f64() * 1000.0;
+        e2e_sum += resp.e2e.as_secs_f64() * 1000.0;
+        table.row(&[
+            format!("{i}"),
+            resp.prompt_tokens.to_string(),
+            resp.generated_tokens.to_string(),
+            format!("{:.1}", resp.ttft.as_secs_f64() * 1000.0),
+            format!("{:.1}", resp.e2e.as_secs_f64() * 1000.0),
+            format!("{:.1}%", resp.compression * 100.0),
+        ]);
+    }
+    let wall = t0.elapsed();
+    table.print();
+    println!(
+        "\n{} requests, {} tokens in {:.2?} -> {:.1} tok/s (mean ttft {:.0} ms, mean e2e {:.0} ms)",
+        n,
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall.as_secs_f64(),
+        ttft_sum / n as f64,
+        e2e_sum / n as f64,
+    );
+
+    drop(handle); // disconnect -> coordinator drains and exits
+    let _ = join.join();
+    Ok(())
+}

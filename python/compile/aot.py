@@ -1,0 +1,126 @@
+"""AOT export: train (cached) -> lower every program variant -> HLO text.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Trained parameters are closed over and therefore baked into the HLO as
+constants — the rust binary feeds only dynamic state (tokens, KV, masks,
+freeze/restore row transfers) and is fully self-contained at runtime.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--retrain]
+Env:    ASRKF_TRAIN_STEPS=N   override training steps (CI smoke: 60)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT_EXPORT, DEFAULT_MODEL, DEFAULT_TRAIN, TrainConfig, manifest_dict
+from .model import decode_step, prefill_apply
+from .train import load_params, save_params, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides big literals as `{...}`, silently dropping the baked model
+    # weights from the interchange text.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_prefill(params, cfg, b, l):
+    def fn(tokens, length):
+        return prefill_apply(params, cfg, tokens, length)
+
+    return jax.jit(fn).lower(_spec((b, l), jnp.int32), _spec((b,), jnp.int32))
+
+
+def lower_decode(params, cfg, b, s, block_k):
+    """Lower the pure decode step: (token, kv, mask, pos) ->
+    (logits, k_new, v_new, scores). All cache mutations (row write,
+    freeze/restore movement) are host-side rust operations."""
+    nl, h, d = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    def fn(token, kv, mask, pos):
+        return decode_step(params, cfg, token, kv, mask, pos, block_k=block_k)
+
+    return jax.jit(fn).lower(
+        _spec((b,), jnp.int32),
+        _spec((nl, 2, b, s, h, d)),
+        _spec((b, s)),
+        _spec((b,), jnp.int32),
+    )
+
+
+def get_params(out_dir: str, retrain: bool):
+    cfg, tc = DEFAULT_MODEL, DEFAULT_TRAIN
+    steps_env = os.environ.get("ASRKF_TRAIN_STEPS")
+    if steps_env:
+        tc = TrainConfig(steps=int(steps_env), warmup=min(tc.warmup, int(steps_env) // 4 + 1))
+    params_path = os.path.join(out_dir, "params.npz")
+    if os.path.exists(params_path) and not retrain:
+        print(f"[aot] loading cached params from {params_path}")
+        return load_params(params_path, cfg)
+    print(f"[aot] training stand-in model: {tc.steps} steps")
+    params, _ = train(cfg, tc, log_path=os.path.join(out_dir, "train_log.json"))
+    save_params(params, params_path)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg, ex = DEFAULT_MODEL, DEFAULT_EXPORT
+    params = get_params(args.out_dir, args.retrain)
+
+    manifest = manifest_dict(cfg, ex)
+    manifest["programs"] = {}
+
+    jobs = []
+    for (b, l) in ex.prefill_buckets:
+        jobs.append((f"prefill_b{b}_l{l}", lambda b=b, l=l: lower_prefill(params, cfg, b, l),
+                     {"kind": "prefill", "batch": b, "len": l}))
+    for (b, s) in ex.decode_buckets:
+        jobs.append((f"decode_b{b}_s{s}",
+                     lambda b=b, s=s: lower_decode(params, cfg, b, s, ex.block_k),
+                     {"kind": "decode", "batch": b, "kv_len": s, "r_budget": ex.r_budget}))
+
+    for name, lower, meta in jobs:
+        t0 = time.time()
+        text = to_hlo_text(lower())
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        meta["file"] = fname
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        meta["bytes"] = len(text)
+        manifest["programs"][name] = meta
+        print(f"[aot] {name}: {len(text)/1e6:.1f} MB HLO text ({time.time()-t0:.1f}s)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(jobs)} programs to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Model / export configuration shared by the whole compile path.
+
+Single source of truth for dimensions; `aot.py` serializes this into
+`artifacts/manifest.json`, which `rust/src/runtime/artifacts.rs` reads.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """ByteGPT decoder dimensions (the LLaMA-3-8B stand-in, see DESIGN.md §3)."""
+
+    vocab: int = 256          # raw byte vocabulary
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 384           # SwiGLU inner width
+    max_len: int = 2048       # decode-time KV capacity (S)
+    rope_theta: float = 10000.0
+
+    @property
+    def kv_row_floats(self) -> int:
+        """Floats per token KV row across all layers (K and V)."""
+        return self.n_layers * 2 * self.n_heads * self.d_head
+
+
+@dataclass(frozen=True)
+class ExportConfig:
+    """Which program variants `aot.py` lowers to HLO text."""
+
+    # prefill buckets: (batch, padded prompt length)
+    prefill_buckets: Tuple[Tuple[int, int], ...] = ((1, 128), (1, 512), (1, 1024), (1, 2048))
+    # decode buckets: (batch, KV capacity S)
+    decode_buckets: Tuple[Tuple[int, int], ...] = ((1, 1024), (1, 2048), (4, 1024), (8, 512))
+    # advisory per-step freeze/restore transfer budget (engine-side config;
+    # recorded in the manifest for the rust default)
+    r_budget: int = 64
+    # pallas KV tile rows
+    block_k: int = 64
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Build-time training of the stand-in model (python/compile/train.py)."""
+
+    # sized for the single-core CPU build environment (DESIGN.md §3):
+    # templated byte corpus is low-entropy, so a short run converges
+    seq_len: int = 256
+    batch: int = 8
+    steps: int = 1800
+    lr: float = 3e-3
+    warmup: int = 50
+    weight_decay: float = 0.01
+    seed: int = 1234
+    # fraction of training sequences that are passkey copy-curriculum samples
+    passkey_frac: float = 0.55
+
+
+DEFAULT_MODEL = ModelConfig()
+DEFAULT_EXPORT = ExportConfig()
+DEFAULT_TRAIN = TrainConfig()
+
+
+def manifest_dict(model: ModelConfig, export: ExportConfig) -> dict:
+    d = asdict(model)
+    d["kv_row_floats"] = model.kv_row_floats
+    return {
+        "model": d,
+        "export": {
+            "prefill_buckets": [list(b) for b in export.prefill_buckets],
+            "decode_buckets": [list(b) for b in export.decode_buckets],
+            "r_budget": export.r_budget,
+            "block_k": export.block_k,
+        },
+    }

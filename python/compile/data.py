@@ -1,0 +1,114 @@
+"""Synthetic byte-level training corpus + passkey curriculum.
+
+The paper evaluates on LLaMA-3 8B with natural-language prompts and a
+passkey-retrieval needle test. We have no model weights or corpus in
+this environment (repro band 0), so we build the closest synthetic
+equivalent (DESIGN.md §3): a template-generated English-like corpus the
+ByteGPT stand-in can actually learn, plus a copy curriculum that makes
+passkey retrieval a learnable skill — which is exactly what the
+needle-in-haystack experiment (Table 2) needs to be meaningful.
+
+Everything is deterministic given a seed; raw bytes are the vocabulary.
+"""
+
+import numpy as np
+
+SUBJECTS = [
+    "the model", "the system", "the cache", "a token", "the scheduler",
+    "the server", "a request", "the window", "the kernel", "the router",
+    "the engine", "a batch", "the queue", "memory", "the process",
+    "the network", "a signal", "the buffer", "an index", "the store",
+]
+VERBS = [
+    "updates", "freezes", "restores", "computes", "routes", "stores",
+    "evicts", "scans", "emits", "tracks", "samples", "decodes",
+    "encodes", "schedules", "balances", "monitors", "rewrites", "reads",
+]
+OBJECTS = [
+    "the key value pairs", "the attention scores", "a sliding window",
+    "the frozen rows", "the active cache", "every request", "the logits",
+    "the relevance signal", "a freeze timer", "the entropy trace",
+    "the next token", "the decode step", "the batch queue",
+    "the memory budget", "the recovery ladder", "the context",
+]
+ADVERBS = [
+    "quickly", "slowly", "carefully", "eagerly", "lazily", "often",
+    "rarely", "smoothly", "safely", "twice", "in order", "at once",
+]
+CONNECTIVES = ["then", "meanwhile", "however", "therefore", "later", "next"]
+
+FILLER_SENTENCES = [
+    "the grass is green and the sky is blue here. ",
+    "one two three four five six seven eight nine ten. ",
+    "the quick brown fox jumps over the lazy dog again. ",
+    "rain falls on the hills and rivers run to the sea. ",
+    "day follows night and night follows day as always. ",
+]
+
+PASSKEY_PREFIX = b"the pass key is "
+PASSKEY_QUERY = b"what is the pass key? the pass key is "
+
+
+def sentence(rng: np.random.Generator) -> str:
+    s = f"{rng.choice(SUBJECTS)} {rng.choice(VERBS)} {rng.choice(OBJECTS)}"
+    if rng.random() < 0.4:
+        s += f" {rng.choice(ADVERBS)}"
+    if rng.random() < 0.3:
+        s += f" {rng.choice(CONNECTIVES)} {rng.choice(SUBJECTS)} {rng.choice(VERBS)} {rng.choice(OBJECTS)}"
+    return s + ". "
+
+
+def prose(rng: np.random.Generator, n_bytes: int) -> bytes:
+    out = []
+    total = 0
+    while total < n_bytes:
+        s = sentence(rng).encode()
+        out.append(s)
+        total += len(s)
+    return b"".join(out)[:n_bytes]
+
+
+def filler(rng: np.random.Generator, n_bytes: int) -> bytes:
+    """Repetitive low-information filler, like the paper's haystack text."""
+    out = []
+    total = 0
+    while total < n_bytes:
+        s = FILLER_SENTENCES[int(rng.integers(len(FILLER_SENTENCES)))].encode()
+        out.append(s)
+        total += len(s)
+    return b"".join(out)[:n_bytes]
+
+
+def passkey_sample(rng: np.random.Generator, seq_len: int, key: str | None = None) -> bytes:
+    """`the pass key is NNNNN. <filler> what is the pass key? the pass key is NNNNN.`"""
+    if key is None:
+        key = f"{rng.integers(10000, 100000)}"
+    head = PASSKEY_PREFIX + key.encode() + b". remember it. "
+    tail = PASSKEY_QUERY + key.encode() + b". "
+    fill_len = max(0, seq_len - len(head) - len(tail))
+    return (head + filler(rng, fill_len) + tail)[:seq_len]
+
+
+def make_passkey_prompt(rng: np.random.Generator, total_len: int, key: str) -> bytes:
+    """Evaluation prompt: needle + filler + query, WITHOUT the answer."""
+    head = PASSKEY_PREFIX + key.encode() + b". remember it. "
+    tail = PASSKEY_QUERY
+    fill_len = max(0, total_len - len(head) - len(tail))
+    return head + filler(rng, fill_len) + tail
+
+
+def batch_iterator(seed: int, batch: int, seq_len: int, passkey_frac: float):
+    """Yields [batch, seq_len] uint8 arrays forever (deterministic)."""
+    rng = np.random.default_rng(seed)
+    while True:
+        rows = []
+        for _ in range(batch):
+            if rng.random() < passkey_frac:
+                # vary needle distance so retrieval generalises across lengths
+                sub_len = int(rng.integers(seq_len // 4, seq_len + 1))
+                sample = passkey_sample(rng, sub_len)
+                sample = prose(rng, seq_len - len(sample)) + sample
+            else:
+                sample = prose(rng, seq_len)
+            rows.append(np.frombuffer(sample[:seq_len].ljust(seq_len, b" "), dtype=np.uint8))
+        yield np.stack(rows)

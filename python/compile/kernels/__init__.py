@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls) and are validated against the pure-jnp oracles in ref.py.
+"""
+
+from .fused import fused_decode_attention
+from .freeze_attention import freeze_masked_attention
+from .relevance import relevance_scores
+from . import ref

@@ -1,0 +1,87 @@
+"""Standalone freeze-masked flash-decode attention kernel (no relevance).
+
+The unfused variant of `fused.py` — used by tests to isolate the
+attention math, and by the L2 ablation comparing fused vs unfused HLO
+(DESIGN.md §Perf: the fused kernel makes one pass over KV, the unfused
+pair makes two).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+BIG = 1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *, scale, n_blocks):
+    sb = pl.program_id(1)
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    mask = mask_ref[0]
+
+    qk = jnp.einsum("hd,jhd->hj", q, k, preferred_element_type=jnp.float32)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[0, :] = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+        l_ref[0, :] = jnp.zeros((q.shape[0],), jnp.float32)
+        o_ref[0] = jnp.zeros_like(q)
+
+    logits = qk * scale - (1.0 - mask)[None, :] * BIG
+    m_prev = m_ref[0, :]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None]) * mask[None, :]
+
+    m_ref[0, :] = m_new
+    l_ref[0, :] = l_ref[0, :] * alpha + p.sum(axis=1)
+    o_ref[0] = o_ref[0] * alpha[:, None] + jnp.einsum(
+        "hj,jhd->hd", p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(sb == n_blocks - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / l_ref[0, :][:, None]
+
+
+def freeze_masked_attention(q, k, v, mask, *, block_k=64, interpret=True):
+    """Freeze-masked single-query attention over the KV cache.
+
+    Args/returns as `ref.ref_decode_attention`: q [B,H,D], k/v [B,S,H,D],
+    mask [B,S] -> out [B,H,D].
+    """
+    b, h, d = q.shape
+    s = k.shape[1]
+    bk = min(block_k, s)
+    if s % bk != 0:
+        raise ValueError(f"S={s} not divisible by block_k={bk}")
+    n_blocks = s // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, n_blocks=n_blocks)
+    out, _m, _l = pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+    return out

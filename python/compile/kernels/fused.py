@@ -1,0 +1,201 @@
+"""Fused decode hot path: freeze-masked flash attention + Eq.2 relevance.
+
+One pass over the KV cache per (batch, KV-tile) grid step computes BOTH
+the attention output and the relevance scores the L3 freeze scheduler
+consumes — the paper's per-token bookkeeping collapsed into a single
+streamed kernel (DESIGN.md §Hardware-Adaptation).
+
+TPU mapping:
+  * the grid's second axis walks the KV cache in `block_k`-row tiles;
+    the BlockSpec index maps express the HBM->VMEM stream the CUDA
+    version would do with cp.async into shared memory;
+  * the activity mask is a [block_k] f32 tile folded into the logits as
+    an additive -1e30 *and* a multiplicative zero on the exp'd weights,
+    so frozen rows are excluded branch-free (correct even for tiles
+    that are entirely frozen);
+  * running-softmax state (m, l, running numerator) is carried in
+    revisited output blocks whose index map ignores the KV axis — the
+    standard Pallas accumulation pattern; with d_head=32, H=4,
+    block_k=64 the resident K+V tile is 64 KiB, far inside VMEM even
+    double-buffered.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against `ref.py` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+BIG = 1e30
+
+
+def _fused_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, s_ref, m_ref, l_ref, *, scale, n_blocks):
+    sb = pl.program_id(1)
+
+    q = q_ref[0]          # [H, D]
+    k = k_ref[0]          # [BK, H, D]
+    v = v_ref[0]          # [BK, H, D]
+    mask = mask_ref[0]    # [BK]
+
+    # [H, BK] raw interaction, per head: qk[h, j] = q[h, :] . k[j, h, :]
+    qk = jnp.einsum("hd,jhd->hj", q, k, preferred_element_type=jnp.float32)
+
+    # Eq. 2 relevance for this tile (unscaled |q.k| averaged over heads)
+    s_ref[0, :] = jnp.abs(qk).mean(axis=0) * mask
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[0, :] = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+        l_ref[0, :] = jnp.zeros((q.shape[0],), jnp.float32)
+        o_ref[0] = jnp.zeros_like(q)
+
+    logits = qk * scale - (1.0 - mask)[None, :] * BIG  # frozen rows -> -1e30
+
+    m_prev = m_ref[0, :]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)                     # rescale factor for old state
+    p = jnp.exp(logits - m_new[:, None]) * mask[None, :]  # [H, BK]; frozen rows exactly 0
+
+    m_ref[0, :] = m_new
+    l_ref[0, :] = l_ref[0, :] * alpha + p.sum(axis=1)
+    # numerator accumulation: o[h, d] += sum_j p[h, j] * v[j, h, d]
+    o_ref[0] = o_ref[0] * alpha[:, None] + jnp.einsum(
+        "hj,jhd->hd", p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(sb == n_blocks - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / l_ref[0, :][:, None]
+
+
+def fused_decode_attention_parts(q, k, v, mask, *, block_k=64, interpret=True):
+    """Fused freeze-masked attention over the cache, UNNORMALIZED.
+
+    Returns `(acc [B,H,D], m [B,H], l [B,H], scores [B,S])` — the
+    running-softmax state after the cache pass, so the caller can fold
+    additional rows (the current token, computed in the same graph but
+    not yet written to the cache) before normalizing:
+
+        m2 = max(m, s_new); l2 = l*exp(m-m2) + exp(s_new-m2)
+        out = (acc*exp(m-m2) + exp(s_new-m2) * v_new) / l2
+
+    This is the hot-path variant the decode graph uses: the cache stays
+    a pure input (no in-graph scatter), which removes every full-cache
+    copy from the step (DESIGN.md §Perf).
+    """
+    b, h, d = q.shape
+    s = k.shape[1]
+    bk = min(block_k, s)
+    if s % bk != 0:
+        raise ValueError(f"S={s} not divisible by block_k={bk}")
+    n_blocks = s // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_fused_kernel_parts, scale=scale)
+    acc, scores, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+    return acc, m, l, scores
+
+
+def _fused_kernel_parts(q_ref, k_ref, v_ref, mask_ref, o_ref, s_ref, m_ref, l_ref, *, scale):
+    """Same running-softmax pass as `_fused_kernel`, minus the final
+    normalization (the caller merges extra rows first)."""
+    sb = pl.program_id(1)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    mask = mask_ref[0]
+
+    qk = jnp.einsum("hd,jhd->hj", q, k, preferred_element_type=jnp.float32)
+    s_ref[0, :] = jnp.abs(qk).mean(axis=0) * mask
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[0, :] = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+        l_ref[0, :] = jnp.zeros((q.shape[0],), jnp.float32)
+        o_ref[0] = jnp.zeros_like(q)
+
+    logits = qk * scale - (1.0 - mask)[None, :] * BIG
+    m_prev = m_ref[0, :]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None]) * mask[None, :]
+
+    m_ref[0, :] = m_new
+    l_ref[0, :] = l_ref[0, :] * alpha + p.sum(axis=1)
+    o_ref[0] = o_ref[0] * alpha[:, None] + jnp.einsum(
+        "hj,jhd->hd", p, v, preferred_element_type=jnp.float32
+    )
+
+
+def fused_decode_attention(q, k, v, mask, *, block_k=64, interpret=True):
+    """Fused freeze-masked attention + relevance.
+
+    Args:
+      q:    [B, H, D] f32 — current-token queries (RoPE applied).
+      k,v:  [B, S, H, D] f32 — KV cache (RoPE applied to k at write time).
+      mask: [B, S] f32 — 1.0 active, 0.0 frozen/unwritten. Each sequence
+            must have at least one active row (the current token is).
+      block_k: KV tile rows (VMEM working-set knob).
+    Returns:
+      (out [B, H, D], scores [B, S]) — attention output and Eq.2 relevance.
+    """
+    b, h, d = q.shape
+    s = k.shape[1]
+    bk = min(block_k, s)
+    if s % bk != 0:
+        raise ValueError(f"S={s} not divisible by block_k={bk}")
+    n_blocks = s // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_fused_kernel, scale=scale, n_blocks=n_blocks)
+    out, scores, _m, _l = pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, h), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+    return out, scores

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package has
+a matching function here, and `python/tests/test_kernels.py` sweeps
+shapes with hypothesis asserting allclose between the two.
+
+Shapes (decode step, single query per sequence):
+    q    [B, H, D]     current-token queries (RoPE already applied)
+    k    [B, S, H, D]  key cache rows (RoPE already applied at write time)
+    v    [B, S, H, D]  value cache rows
+    mask [B, S]        1.0 = active row, 0.0 = frozen / unwritten
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_decode_attention(q, k, v, mask):
+    """Freeze-masked single-query attention (paper Eq. 1 over active rows).
+
+    Returns [B, H, D]. Rows with mask==0 receive -inf logits pre-softmax,
+    i.e. they are *excluded from active attention computation* (§3.3).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    # [B, H, S]
+    logits = jnp.einsum("bhd,bshd->bhs", q, k) * scale
+    logits = jnp.where(mask[:, None, :] > 0.5, logits, NEG_INF)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", w, v)
+
+
+def ref_relevance(q, k, mask):
+    """Paper Eq. 2: s_j = (1/H) * sum_h |q_h . k_{j,h}|, masked to 0 elsewhere.
+
+    Returns [B, S]. Note: *un*-scaled dot product, matching the paper
+    (no 1/sqrt(d) factor in Eq. 2).
+    """
+    s = jnp.abs(jnp.einsum("bhd,bshd->bhs", q, k)).mean(axis=1)
+    return s * (mask > 0.5)
+
+
+def ref_fused(q, k, v, mask):
+    """Oracle for the fused hot-path kernel: (attention out, relevance)."""
+    return ref_decode_attention(q, k, v, mask), ref_relevance(q, k, mask)

@@ -1,0 +1,51 @@
+"""Standalone Eq. 2 relevance kernel.
+
+Kept separate from the fused hot path for (a) unit-testing the relevance
+math in isolation and (b) the `relevance_only` ablation in
+`rust/benches/ablation_sweep.rs`, where the coordinator re-scores frozen
+candidates without recomputing attention.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relevance_kernel(q_ref, k_ref, mask_ref, s_ref):
+    q = q_ref[0]          # [H, D]
+    k = k_ref[0]          # [BK, H, D]
+    mask = mask_ref[0]    # [BK]
+    qk = jnp.einsum("hd,jhd->hj", q, k, preferred_element_type=jnp.float32)
+    s_ref[0, :] = jnp.abs(qk).mean(axis=0) * mask
+
+
+def relevance_scores(q, k, mask, *, block_k=64, interpret=True):
+    """Paper Eq. 2: s_j = (1/H) sum_h |q_h . k_{j,h}| for active rows.
+
+    Args:
+      q:    [B, H, D] f32 current-token queries.
+      k:    [B, S, H, D] f32 key cache.
+      mask: [B, S] f32 activity mask.
+    Returns:
+      scores [B, S] f32, zero on inactive rows.
+    """
+    b, h, d = q.shape
+    s = k.shape[1]
+    bk = min(block_k, s)
+    if s % bk != 0:
+        raise ValueError(f"S={s} not divisible by block_k={bk}")
+
+    return pl.pallas_call(
+        _relevance_kernel,
+        grid=(b, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bk, h, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, s), jnp.float32),
+        interpret=interpret,
+    )(q, k, mask)

@@ -1,0 +1,334 @@
+"""Layer-2 JAX model: ByteGPT decoder with an externally-managed KV cache.
+
+Three entry points, all lowered to HLO text by `aot.py` with trained
+parameters baked in as constants:
+
+  * `prefill_apply`  — full-prompt forward; returns last-position logits,
+    the KV rows for the whole prompt, and the last query's Eq.2 relevance
+    scores (the freeze scheduler's initial signal).
+  * `decode_apply`   — one generation step over the rust-owned KV cache.
+    Besides the usual (token, kv, mask, pos) it takes *freeze/restore row
+    transfers*: the graph scatters restored rows back into the cache,
+    gathers rows being frozen (returning them for the host to stash) and
+    zeroes them on-"device", making the paper's soft freeze a real data
+    movement rather than a flag (DESIGN.md §1).
+  * `train_forward`  — plain causal forward used only by train.py.
+
+Array layouts:
+  kv          [nl, 2, B, S, H, D]   (axis 1: 0=K, 1=V; RoPE applied to K)
+  row bundle  [R, nl, 2, H, D]      one token's KV across layers
+  pad index   S (one past the end)  for unused freeze/restore slots
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.fused import fused_decode_attention, fused_decode_attention_parts
+
+BIG = 1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    """Initialise parameters (scaled-normal, tied embedding/unembedding)."""
+    keys = jax.random.split(rng, 2 + cfg.n_layers)
+
+    def dense(key, n_in, n_out):
+        return jax.random.normal(key, (n_in, n_out), jnp.float32) * (n_in ** -0.5)
+
+    d, h, dh, f = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 7)
+        params["layers"].append({
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "wq": dense(ks[0], d, h * dh),
+            "wk": dense(ks[1], d, h * dh),
+            "wv": dense(ks[2], d, h * dh),
+            "wo": dense(ks[3], h * dh, d),
+            "w_gate": dense(ks[4], d, f),
+            "w_up": dense(ks[5], d, f),
+            "w_down": dense(ks[6], f, d),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+
+
+def _layer_norm(x, p):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def _rope_angles(pos, dh, theta):
+    """pos [...], returns (cos, sin) of shape [..., dh//2]."""
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, pos, theta):
+    """Rotary embedding. x [..., H, D], pos broadcastable to x[..., ] batch dims."""
+    dh = x.shape[-1]
+    cos, sin = _rope_angles(pos, dh, theta)          # [..., dh//2]
+    cos, sin = cos[..., None, :], sin[..., None, :]  # add head axis
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _swiglu(x, p):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def _qkv(x, p, cfg):
+    """x [..., d] -> q, k, v [..., H, D]."""
+    def split(w):
+        y = x @ w
+        return y.reshape(y.shape[:-1] + (cfg.n_heads, cfg.d_head))
+    return split(p["wq"]), split(p["wk"]), split(p["wv"])
+
+
+# ---------------------------------------------------------------------------
+# Row scatter/gather helpers (freeze/restore data movement)
+
+
+def _scatter_rows_one(kv_b, idx, rows):
+    """kv_b [nl,2,S,H,D]; idx [R] (pad=S drops); rows [R,nl,2,H,D]."""
+    rows_t = jnp.moveaxis(rows, 0, 2)  # [nl,2,R,H,D]
+    return kv_b.at[:, :, idx].set(rows_t, mode="drop")
+
+
+def _gather_rows_one(kv_b, idx):
+    """kv_b [nl,2,S,H,D]; idx [R] -> [R,nl,2,H,D] (pad slots = 0)."""
+    rows = jnp.take(kv_b, idx, axis=2, mode="fill", fill_value=0.0)  # [nl,2,R,H,D]
+    return jnp.moveaxis(rows, 2, 0)
+
+
+def _zero_rows_one(kv_b, idx):
+    zeros = jnp.zeros((kv_b.shape[0], kv_b.shape[1], idx.shape[0]) + kv_b.shape[3:], kv_b.dtype)
+    return kv_b.at[:, :, idx].set(zeros, mode="drop")
+
+
+def _write_row_one(cache_b, pos, row):
+    """cache_b [S,H,D]; write row [H,D] at pos (scalar)."""
+    return cache_b.at[pos].set(row)
+
+
+_scatter_rows = jax.vmap(_scatter_rows_one, in_axes=(2, 0, 0), out_axes=2)
+_gather_rows = jax.vmap(_gather_rows_one, in_axes=(2, 0), out_axes=0)
+_zero_rows = jax.vmap(_zero_rows_one, in_axes=(2, 0), out_axes=2)
+_write_row = jax.vmap(_write_row_one, in_axes=(0, 0, 0), out_axes=0)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (hot path): PURE function of the cache.
+#
+# The cache is a read-only input — no in-graph scatter/gather/update.
+# The rust engine owns every state mutation (writing the new row,
+# freeze/restore data movement); this removes all full-cache copies
+# from the step graph (§Perf: the original stateful variant spent most
+# of its time in dynamic-update-slice materializations).
+
+
+def decode_step(params, cfg: ModelConfig, token, kv, mask, pos, *, block_k=64):
+    """One generation step over a read-only KV cache.
+
+    Args:
+      token [B] i32 — token sampled at the previous step (its KV row is
+          NOT yet in the cache; it is computed here and folded into the
+          attention in-kernel state before normalization).
+      kv    [nl,2,B,S,H,D] f32 — cache. Frozen rows are zeroed and
+          masked; the row at `pos` is ignored (mask 0).
+      mask  [B,S] f32 — activity mask (current position NOT set).
+      pos   [B] i32 — position of `token` (for RoPE).
+
+    Returns:
+      logits [B,V], k_new [nl,B,H,D], v_new [nl,B,H,D], scores [B,S].
+      The engine writes k_new/v_new into its cache at `pos` after the
+      call; Eq.2 scores cover cache rows (zero on frozen/invalid).
+    """
+    b = token.shape[0]
+    x = params["embed"][token]                      # [B, d]
+    scores_acc = jnp.zeros_like(mask)
+    k_rows, v_rows = [], []
+    for li, lp in enumerate(params["layers"]):
+        h_in = _layer_norm(x, lp["ln1"])
+        q, k_new, v_new = _qkv(h_in, lp, cfg)       # [B,H,D] each
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+        k_rows.append(k_new)
+        v_rows.append(v_new)
+
+        acc, m, l, scores = fused_decode_attention_parts(
+            q, kv[li, 0], kv[li, 1], mask, block_k=block_k)
+        # fold the current token's row into the running softmax
+        scale = cfg.d_head ** -0.5
+        s_new = jnp.einsum("bhd,bhd->bh", q, k_new) * scale   # [B,H]
+        m2 = jnp.maximum(m, s_new)
+        alpha = jnp.exp(m - m2)
+        p_new = jnp.exp(s_new - m2)
+        l2 = l * alpha + p_new
+        attn = (acc * alpha[..., None] + p_new[..., None] * v_new) / l2[..., None]
+
+        scores_acc = scores_acc + scores
+        x = x + attn.reshape(b, -1) @ lp["wo"]
+        x = x + _swiglu(_layer_norm(x, lp["ln2"]), lp)
+
+    x = _layer_norm(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(k_rows), jnp.stack(v_rows), scores_acc / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Decode step (stateful reference variant, kept for tests/ablation):
+# performs restore-scatter, freeze-gather+zero and the row write inside
+# the graph. The AOT export uses `decode_step` above.
+
+
+def decode_apply(params, cfg: ModelConfig, token, kv, mask, pos,
+                 restore_idx, restore_rows, freeze_idx, *, block_k=64):
+    """One generation step.
+
+    Args:
+      token        [B] i32 — token sampled at the previous step.
+      kv           [nl,2,B,S,H,D] f32 — cache (authoritative copy may be
+                   host- or device-resident; the graph is agnostic).
+      mask         [B,S] f32 — activity mask for THIS step: restored rows
+                   already 1, rows frozen this step already 0. The graph
+                   itself activates the current position.
+      pos          [B] i32 — write position of `token`'s KV row.
+      restore_idx  [B,R] i32 — rows to scatter back (pad = S).
+      restore_rows [B,R,nl,2,H,D] f32 — their stashed contents.
+      freeze_idx   [B,R] i32 — rows to gather + zero (pad = S).
+
+    Returns:
+      logits       [B,V] f32
+      kv_out       [nl,2,B,S,H,D] f32 — updated cache.
+      scores       [B,S] f32 — Eq.2 relevance, averaged over layers.
+      frozen_rows  [B,R,nl,2,H,D] f32 — contents of rows frozen this step
+                   (payload for the host-side frozen store).
+    """
+    # 1. restore previously-frozen rows, then extract + zero freshly-frozen ones
+    kv = _scatter_rows(kv, restore_idx, restore_rows)
+    frozen_rows = _gather_rows(kv, freeze_idx)
+    kv = _zero_rows(kv, freeze_idx)
+
+    # 2. activate current position in the attention mask
+    b = token.shape[0]
+    mask = _write_row(mask[..., None], pos, jnp.ones((b, 1)))[..., 0]
+
+    x = params["embed"][token]                      # [B, d]
+    scores_acc = jnp.zeros_like(mask)
+    for li, lp in enumerate(params["layers"]):
+        h_in = _layer_norm(x, lp["ln1"])
+        q, k_new, v_new = _qkv(h_in, lp, cfg)       # [B,H,D] each
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+        k_cache = _write_row(kv[li, 0], pos, k_new)  # [B,S,H,D]
+        v_cache = _write_row(kv[li, 1], pos, v_new)
+        kv = kv.at[li, 0].set(k_cache).at[li, 1].set(v_cache)
+
+        attn, scores = fused_decode_attention(q, k_cache, v_cache, mask, block_k=block_k)
+        scores_acc = scores_acc + scores
+        x = x + attn.reshape(b, -1) @ lp["wo"]
+        x = x + _swiglu(_layer_norm(x, lp["ln2"]), lp)
+
+    x = _layer_norm(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    return logits, kv, scores_acc / cfg.n_layers, frozen_rows
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+
+
+def prefill_apply(params, cfg: ModelConfig, tokens, length):
+    """Full-prompt forward with causal attention.
+
+    Args:
+      tokens [B,L] i32 (right-padded), length [B] i32 valid lengths.
+    Returns:
+      logits_last [B,V] — logits at position length-1.
+      kv          [nl,2,B,L,H,D] — RoPE'd KV rows for the prompt.
+      scores_last [B,L] — Eq.2 relevance of the final query vs the prompt.
+    """
+    b, l = tokens.shape
+    pos = jnp.arange(l)
+    valid = (pos[None, :] < length[:, None])                       # [B,L]
+    causal = pos[None, :] <= pos[:, None]                          # [L,L]
+    attn_mask = causal[None] & valid[:, None, :]                   # [B,L,L]
+
+    x = params["embed"][tokens]                                    # [B,L,d]
+    kv_rows = []
+    scores_last = jnp.zeros((b, l))
+    scale = cfg.d_head ** -0.5
+    for lp in params["layers"]:
+        h_in = _layer_norm(x, lp["ln1"])
+        q, k, v = _qkv(h_in, lp, cfg)                              # [B,L,H,D]
+        q = apply_rope(q, pos[None, :], cfg.rope_theta)
+        k = apply_rope(k, pos[None, :], cfg.rope_theta)
+        kv_rows.append(jnp.stack([k, v]))                          # [2,B,L,H,D]
+
+        logits = jnp.einsum("bihd,bjhd->bhij", q, k) * scale
+        logits = jnp.where(attn_mask[:, None], logits, -BIG)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhij,bjhd->bihd", w, v)
+        x = x + attn.reshape(b, l, -1) @ lp["wo"]
+        x = x + _swiglu(_layer_norm(x, lp["ln2"]), lp)
+
+        # Eq.2 relevance of the last valid query against every position
+        q_last = jnp.take_along_axis(
+            q, (length - 1)[:, None, None, None].astype(jnp.int32), axis=1
+        )[:, 0]                                                    # [B,H,D]
+        s = jnp.abs(jnp.einsum("bhd,bjhd->bjh", q_last, k)).mean(-1)
+        scores_last = scores_last + s * valid
+
+    x = _layer_norm(x, params["ln_f"])
+    logits_all = x @ params["embed"].T                             # [B,L,V]
+    logits_last = jnp.take_along_axis(
+        logits_all, (length - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    return logits_last, jnp.stack(kv_rows), scores_last / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Training forward (build-time only)
+
+
+def train_forward(params, cfg: ModelConfig, tokens):
+    """Causal LM forward for training: tokens [B,L] -> logits [B,L,V]."""
+    b, l = tokens.shape
+    pos = jnp.arange(l)
+    causal = pos[None, :] <= pos[:, None]
+    x = params["embed"][tokens]
+    scale = cfg.d_head ** -0.5
+    for lp in params["layers"]:
+        h_in = _layer_norm(x, lp["ln1"])
+        q, k, v = _qkv(h_in, lp, cfg)
+        q = apply_rope(q, pos[None, :], cfg.rope_theta)
+        k = apply_rope(k, pos[None, :], cfg.rope_theta)
+        logits = jnp.einsum("bihd,bjhd->bhij", q, k) * scale
+        logits = jnp.where(causal[None, None], logits, -BIG)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhij,bjhd->bihd", w, v)
+        x = x + attn.reshape(b, l, -1) @ lp["wo"]
+        x = x + _swiglu(_layer_norm(x, lp["ln2"]), lp)
+    x = _layer_norm(x, params["ln_f"])
+    return x @ params["embed"].T

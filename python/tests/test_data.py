@@ -1,0 +1,61 @@
+"""Synthetic corpus + passkey curriculum tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.data import (
+    batch_iterator, filler, make_passkey_prompt, passkey_sample, prose, sentence,
+)
+
+
+def test_sentence_structure():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        s = sentence(rng)
+        assert s.endswith(". ")
+        assert s.islower() or any(c.isdigit() for c in s) or True
+        assert len(s.split()) >= 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(50, 2000), st.integers(0, 2**31 - 1))
+def test_prose_exact_length(n, seed):
+    rng = np.random.default_rng(seed)
+    assert len(prose(rng, n)) == n
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(120, 1500), st.integers(0, 2**31 - 1))
+def test_passkey_sample_contains_key_twice(seq_len, seed):
+    rng = np.random.default_rng(seed)
+    s = passkey_sample(rng, seq_len, key="31415")
+    assert s.count(b"31415") == 2, s
+    assert s.startswith(b"the pass key is 31415")
+    assert len(s) <= seq_len
+
+
+def test_passkey_prompt_withholds_answer():
+    rng = np.random.default_rng(3)
+    p = make_passkey_prompt(rng, 500, "98765")
+    # needle appears once (at the start), never after the query
+    assert p.count(b"98765") == 1
+    assert p.endswith(b"what is the pass key? the pass key is ")
+
+
+def test_batch_iterator_shapes_and_determinism():
+    it1 = batch_iterator(7, batch=4, seq_len=128, passkey_frac=0.5)
+    it2 = batch_iterator(7, batch=4, seq_len=128, passkey_frac=0.5)
+    for _ in range(3):
+        a, b = next(it1), next(it2)
+        assert a.shape == (4, 128)
+        assert a.dtype == np.uint8
+        np.testing.assert_array_equal(a, b)
+
+
+def test_batch_iterator_mixes_tasks():
+    it = batch_iterator(1, batch=8, seq_len=256, passkey_frac=0.5)
+    batch = next(it)
+    texts = [bytes(row) for row in batch]
+    with_key = sum(b"pass key" in t for t in texts)
+    assert 0 < with_key < 8, f"{with_key} passkey rows of 8"

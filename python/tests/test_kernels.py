@@ -1,0 +1,190 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, mask densities and magnitudes; this is the
+core correctness signal for the decode hot path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused import fused_decode_attention
+from compile.kernels.freeze_attention import freeze_masked_attention
+from compile.kernels.relevance import relevance_scores
+from compile.kernels.ref import ref_decode_attention, ref_fused, ref_relevance
+
+ATOL = 2e-5
+
+
+def _mk(rng, b, s, h, d, density, scale=1.0):
+    q = jnp.asarray(rng.normal(size=(b, h, d)) * scale, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)) * scale, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)) * scale, jnp.float32)
+    mask = (rng.random((b, s)) < density).astype(np.float32)
+    mask[:, 0] = 1.0  # at least one active row per sequence
+    return q, k, v, jnp.asarray(mask)
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 4),                      # B
+    st.sampled_from([64, 128, 192, 256]),   # S (multiple of block)
+    st.integers(1, 4),                      # H
+    st.sampled_from([8, 16, 32]),           # D
+    st.floats(0.05, 1.0),                   # mask density
+    st.integers(0, 2 ** 31 - 1),            # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_fused_matches_ref(args):
+    b, s, h, d, density, seed = args
+    rng = np.random.default_rng(seed)
+    q, k, v, mask = _mk(rng, b, s, h, d, density)
+    o_ref, s_ref = ref_fused(q, k, v, mask)
+    o, sc = fused_decode_attention(q, k, v, mask, block_k=64)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL)
+    np.testing.assert_allclose(sc, s_ref, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_strategy)
+def test_unfused_attention_matches_ref(args):
+    b, s, h, d, density, seed = args
+    rng = np.random.default_rng(seed)
+    q, k, v, mask = _mk(rng, b, s, h, d, density)
+    out = freeze_masked_attention(q, k, v, mask, block_k=64)
+    np.testing.assert_allclose(out, ref_decode_attention(q, k, v, mask), atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_strategy)
+def test_relevance_matches_ref(args):
+    b, s, h, d, density, seed = args
+    rng = np.random.default_rng(seed)
+    q, k, _, mask = _mk(rng, b, s, h, d, density)
+    sc = relevance_scores(q, k, mask, block_k=64)
+    np.testing.assert_allclose(sc, ref_relevance(q, k, mask), atol=ATOL)
+
+
+@pytest.mark.parametrize("block_k", [16, 32, 64, 128])
+def test_block_size_invariance(block_k):
+    rng = np.random.default_rng(7)
+    q, k, v, mask = _mk(rng, 2, 128, 4, 32, 0.5)
+    o_ref, s_ref = ref_fused(q, k, v, mask)
+    o, sc = fused_decode_attention(q, k, v, mask, block_k=block_k)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL)
+    np.testing.assert_allclose(sc, s_ref, atol=ATOL)
+
+
+def test_single_active_row_attends_only_there():
+    """With exactly one active row, attention output == that row's value."""
+    rng = np.random.default_rng(3)
+    b, s, h, d = 2, 128, 4, 32
+    q, k, v, _ = _mk(rng, b, s, h, d, 1.0)
+    mask = np.zeros((b, s), np.float32)
+    mask[:, 17] = 1.0
+    out, _ = fused_decode_attention(q, k, v, jnp.asarray(mask))
+    np.testing.assert_allclose(out, v[:, 17], atol=ATOL)
+
+
+def test_frozen_rows_do_not_influence_output():
+    """Changing the contents of masked rows must not change the output."""
+    rng = np.random.default_rng(11)
+    q, k, v, mask = _mk(rng, 2, 128, 4, 32, 0.4)
+    o1, s1 = fused_decode_attention(q, k, v, mask)
+    noise = jnp.asarray(rng.normal(size=k.shape) * 100, jnp.float32)
+    inactive = (1.0 - mask)[:, :, None, None]
+    o2, s2 = fused_decode_attention(k=k + noise * inactive, v=v + noise * inactive, q=q, mask=mask)
+    np.testing.assert_allclose(o1, o2, atol=ATOL)
+    np.testing.assert_allclose(s1, s2, atol=ATOL)
+
+
+def test_all_active_equals_plain_softmax_attention():
+    rng = np.random.default_rng(5)
+    b, s, h, d = 1, 64, 2, 16
+    q, k, v, _ = _mk(rng, b, s, h, d, 1.0)
+    mask = jnp.ones((b, s), jnp.float32)
+    out, _ = fused_decode_attention(q, k, v, mask)
+    scale = 1.0 / np.sqrt(d)
+    logits = np.einsum("bhd,bshd->bhs", q, k) * scale
+    w = np.exp(logits - logits.max(-1, keepdims=True))
+    w /= w.sum(-1, keepdims=True)
+    expected = np.einsum("bhs,bshd->bhd", w, v)
+    np.testing.assert_allclose(out, expected, atol=ATOL)
+
+
+def test_relevance_is_unscaled_and_nonnegative():
+    rng = np.random.default_rng(9)
+    q, k, _, mask = _mk(rng, 2, 64, 4, 32, 0.7)
+    sc = relevance_scores(q, k, mask)
+    assert (np.asarray(sc) >= 0).all()
+    # frozen rows must score exactly 0
+    assert np.all(np.asarray(sc)[np.asarray(mask) == 0] == 0)
+
+
+def test_large_magnitude_stability():
+    """Running softmax must stay finite with large logits."""
+    rng = np.random.default_rng(13)
+    q, k, v, mask = _mk(rng, 1, 128, 2, 16, 0.5, scale=30.0)
+    out, sc = fused_decode_attention(q, k, v, mask)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(np.asarray(sc)).all()
+    np.testing.assert_allclose(out, ref_decode_attention(q, k, v, mask), atol=1e-3)
+
+
+def test_rejects_non_divisible_s():
+    rng = np.random.default_rng(1)
+    q, k, v, mask = _mk(rng, 1, 96, 2, 16, 1.0)
+    with pytest.raises(ValueError):
+        fused_decode_attention(q, k, v, mask, block_k=64)
+
+
+# ---------------------------------------------------------------------------
+# Unnormalized "parts" variant (the AOT hot path)
+
+from compile.kernels.fused import fused_decode_attention_parts
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_strategy)
+def test_parts_recompose_to_full_attention(args):
+    b, s, h, d, density, seed = args
+    rng = np.random.default_rng(seed)
+    q, k, v, mask = _mk(rng, b, s, h, d, density)
+    acc, m, l, scores = fused_decode_attention_parts(q, k, v, mask, block_k=64)
+    out = np.asarray(acc) / np.asarray(l)[..., None]
+    o_ref, s_ref = ref_fused(q, k, v, mask)
+    np.testing.assert_allclose(out, o_ref, atol=ATOL)
+    np.testing.assert_allclose(scores, s_ref, atol=ATOL)
+
+
+def test_parts_fold_extra_row_equals_full_attention():
+    """Folding one extra row into (acc, m, l) must equal attention over
+    the cache WITH that row present and active — the exact identity the
+    decode graph relies on for the current token."""
+    rng = np.random.default_rng(17)
+    b, s, h, d = 2, 128, 4, 32
+    q, k, v, mask = _mk(rng, b, s, h, d, 0.6)
+    # reserve slot 5 (inactive in EVERY batch row) for the folded row
+    mask = mask.at[:, 5].set(0.0)
+    k_new = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+
+    acc, m, l, _ = fused_decode_attention_parts(q, k, v, mask, block_k=64)
+    scale = 1.0 / np.sqrt(d)
+    s_new = jnp.einsum("bhd,bhd->bh", q, k_new) * scale
+    m2 = jnp.maximum(m, s_new)
+    alpha = jnp.exp(m - m2)
+    p_new = jnp.exp(s_new - m2)
+    l2 = l * alpha + p_new
+    out = (acc * alpha[..., None] + p_new[..., None] * v_new) / l2[..., None]
+
+    # reference: put the row at the reserved masked slot and activate it
+    slot = 5
+    k2 = k.at[:, slot].set(k_new)
+    v2 = v.at[:, slot].set(v_new)
+    mask2 = mask.at[:, slot].set(1.0)
+    expected = ref_decode_attention(q, k2, v2, mask2)
+    np.testing.assert_allclose(out, expected, atol=1e-4)

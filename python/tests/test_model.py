@@ -1,0 +1,296 @@
+"""L2 model consistency: decode path == training-time causal forward.
+
+The strongest available oracle: running `decode_apply` step by step with
+an all-active mask must reproduce exactly the logits that the plain
+causal `train_forward` produces on the same (growing) sequence, and
+`prefill_apply` must agree with both. Also covers the freeze/restore
+row-transfer semantics of the decode graph.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.config import ModelConfig
+from compile.model import (
+    decode_apply, init_params, prefill_apply, train_forward,
+)
+
+CFG = ModelConfig(vocab=256, d_model=32, n_layers=2, n_heads=2, d_head=16,
+                  d_ff=64, max_len=64)
+R = 4  # freeze/restore budget used in tests
+ATOL = 1e-4
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _empty_kv(b, s):
+    return jnp.zeros((CFG.n_layers, 2, b, s, CFG.n_heads, CFG.d_head), jnp.float32)
+
+
+def _no_transfer(b, s):
+    """Padded (inert) freeze/restore inputs: index S is dropped by the graph."""
+    idx = jnp.full((b, R), s, jnp.int32)
+    rows = jnp.zeros((b, R, CFG.n_layers, 2, CFG.n_heads, CFG.d_head), jnp.float32)
+    return idx, rows, idx
+
+
+def _decode(params, token, kv, mask, pos, ri=None, rr=None, fi=None):
+    b, s = mask.shape
+    d_ri, d_rr, d_fi = _no_transfer(b, s)
+    return decode_apply(
+        params, CFG, token, kv, mask, pos,
+        d_ri if ri is None else ri,
+        d_rr if rr is None else rr,
+        d_fi if fi is None else fi,
+        block_k=32,
+    )
+
+
+def test_decode_matches_causal_forward(params):
+    """Greedy decode via decode_apply == train_forward on the full prefix."""
+    rng = np.random.default_rng(0)
+    b, s, prompt_len, n_steps = 1, 64, 5, 6
+    tokens = rng.integers(32, 127, size=prompt_len).tolist()
+
+    kv = _empty_kv(b, s)
+    mask = jnp.zeros((b, s), jnp.float32)
+    logits = None
+    for i, t in enumerate(tokens + [0] * (n_steps - 1)):
+        if i >= prompt_len:
+            t = int(jnp.argmax(logits[0]))
+            tokens.append(t)
+        logits, kv, scores, _ = _decode(
+            params, jnp.asarray([t], jnp.int32), kv, mask, jnp.asarray([i], jnp.int32))
+        mask = mask.at[0, i].set(1.0)
+
+    full = train_forward(params, CFG, jnp.asarray([tokens], jnp.int32))
+    np.testing.assert_allclose(logits[0], full[0, -1], atol=ATOL)
+
+
+def test_prefill_matches_causal_forward(params):
+    rng = np.random.default_rng(1)
+    l = 16
+    tokens = jnp.asarray(rng.integers(32, 127, size=(1, l)), jnp.int32)
+    logits_last, kv, scores_last = prefill_apply(params, CFG, tokens, jnp.asarray([l], jnp.int32))
+    full = train_forward(params, CFG, tokens)
+    np.testing.assert_allclose(logits_last[0], full[0, -1], atol=ATOL)
+    assert kv.shape == (CFG.n_layers, 2, 1, l, CFG.n_heads, CFG.d_head)
+    assert (np.asarray(scores_last) >= 0).all()
+
+
+def test_prefill_padding_invariance(params):
+    """Padding the prompt must not change last-position logits or KV rows."""
+    rng = np.random.default_rng(2)
+    l = 10
+    tokens = rng.integers(32, 127, size=(1, l))
+    t1 = jnp.asarray(tokens, jnp.int32)
+    t2 = jnp.asarray(np.pad(tokens, ((0, 0), (0, 6)), constant_values=32), jnp.int32)
+    len_arr = jnp.asarray([l], jnp.int32)
+    lo1, kv1, sc1 = prefill_apply(params, CFG, t1, len_arr)
+    lo2, kv2, sc2 = prefill_apply(params, CFG, t2, len_arr)
+    np.testing.assert_allclose(lo1, lo2, atol=ATOL)
+    np.testing.assert_allclose(kv1, kv2[:, :, :, :l], atol=ATOL)
+    np.testing.assert_allclose(sc1, sc2[:, :l], atol=ATOL)
+
+
+def test_prefill_then_decode_consistent(params):
+    """prefill_apply + one decode step == train_forward on prompt+1."""
+    rng = np.random.default_rng(3)
+    b, s, l = 1, 64, 12
+    tokens = rng.integers(32, 127, size=(1, l))
+    logits_last, kv_rows, _ = prefill_apply(
+        params, CFG, jnp.asarray(tokens, jnp.int32), jnp.asarray([l], jnp.int32))
+    nxt = int(np.argmax(logits_last[0]))
+
+    kv = _empty_kv(b, s).at[:, :, :, :l].set(kv_rows)
+    mask = jnp.zeros((b, s), jnp.float32).at[0, :l].set(1.0)
+    logits, _, _, _ = _decode(
+        params, jnp.asarray([nxt], jnp.int32), kv, mask, jnp.asarray([l], jnp.int32))
+
+    seq = np.concatenate([tokens, [[nxt]]], axis=1)
+    full = train_forward(params, CFG, jnp.asarray(seq, jnp.int32))
+    np.testing.assert_allclose(logits[0], full[0, -1], atol=ATOL)
+
+
+def test_freeze_gather_returns_rows_and_zeroes_cache(params):
+    rng = np.random.default_rng(4)
+    b, s = 1, 64
+    kv = jnp.asarray(rng.normal(size=_empty_kv(b, s).shape), jnp.float32)
+    mask = jnp.ones((b, s), jnp.float32)
+    fi = jnp.asarray([[3, 10, s, s]], jnp.int32)  # freeze rows 3 and 10
+    _, kv_out, _, frozen = _decode(
+        params, jnp.asarray([65], jnp.int32), kv, mask, jnp.asarray([20], jnp.int32), fi=fi)
+
+    # gathered contents match the original cache rows
+    np.testing.assert_allclose(frozen[0, 0], kv[:, :, 0, 3], atol=ATOL)
+    np.testing.assert_allclose(frozen[0, 1], kv[:, :, 0, 10], atol=ATOL)
+    # padded slots are zero
+    assert np.all(np.asarray(frozen[0, 2:]) == 0)
+    # frozen rows are zeroed in the cache that comes back
+    assert np.all(np.asarray(kv_out[:, :, 0, 3]) == 0)
+    assert np.all(np.asarray(kv_out[:, :, 0, 10]) == 0)
+    # untouched row survives
+    np.testing.assert_allclose(kv_out[:, :, 0, 5], kv[:, :, 0, 5], atol=ATOL)
+
+
+def test_restore_scatter_writes_rows(params):
+    rng = np.random.default_rng(5)
+    b, s = 1, 64
+    kv = _empty_kv(b, s)
+    mask = jnp.ones((b, s), jnp.float32)
+    rows = jnp.asarray(
+        rng.normal(size=(b, R, CFG.n_layers, 2, CFG.n_heads, CFG.d_head)), jnp.float32)
+    ri = jnp.asarray([[7, 9, s, s]], jnp.int32)
+    _, kv_out, _, _ = _decode(
+        params, jnp.asarray([65], jnp.int32), kv, mask, jnp.asarray([20], jnp.int32),
+        ri=ri, rr=rows)
+    np.testing.assert_allclose(kv_out[:, :, 0, 7], rows[0, 0], atol=ATOL)
+    np.testing.assert_allclose(kv_out[:, :, 0, 9], rows[0, 1], atol=ATOL)
+
+
+def test_freeze_restore_roundtrip_preserves_rows(params):
+    """Freeze rows at step i, restore the stashed payload at step i+1:
+    the cache rows must come back bit-identical (reversibility, §3.3)."""
+    rng = np.random.default_rng(6)
+    b, s = 1, 64
+    kv = jnp.asarray(rng.normal(size=_empty_kv(b, s).shape), jnp.float32)
+    mask = jnp.ones((b, s), jnp.float32)
+    fi = jnp.asarray([[2, 5, 11, s]], jnp.int32)
+    _, kv1, _, frozen = _decode(
+        params, jnp.asarray([65], jnp.int32), kv, mask, jnp.asarray([20], jnp.int32), fi=fi)
+    _, kv2, _, _ = _decode(
+        params, jnp.asarray([66], jnp.int32), kv1, mask, jnp.asarray([21], jnp.int32),
+        ri=fi, rr=frozen)
+    for r in [2, 5, 11]:
+        np.testing.assert_allclose(kv2[:, :, 0, r], kv[:, :, 0, r], atol=ATOL)
+
+
+def test_masked_decode_ignores_frozen_rows(params):
+    """Logits with (frozen rows zeroed + mask 0) == logits with those rows
+    never having existed in the active set."""
+    rng = np.random.default_rng(7)
+    b, s, l = 1, 64, 16
+    tokens = jnp.asarray(rng.integers(32, 127, size=(1, l)), jnp.int32)
+    _, kv_rows, _ = prefill_apply(params, CFG, tokens, jnp.asarray([l], jnp.int32))
+    kv = _empty_kv(b, s).at[:, :, :, :l].set(kv_rows)
+
+    frozen_set = [4, 7, 8]
+    mask = jnp.zeros((b, s), jnp.float32).at[0, :l].set(1.0)
+    for f in frozen_set:
+        mask = mask.at[0, f].set(0.0)
+
+    # variant A: rows present but masked
+    lo_a, _, sc_a, _ = _decode(
+        params, jnp.asarray([65], jnp.int32), kv, mask, jnp.asarray([l], jnp.int32))
+    # variant B: rows additionally zeroed (as the freeze path does)
+    kv_b = kv
+    for f in frozen_set:
+        kv_b = kv_b.at[:, :, 0, f].set(0.0)
+    lo_b, _, sc_b, _ = _decode(
+        params, jnp.asarray([65], jnp.int32), kv_b, mask, jnp.asarray([l], jnp.int32))
+    np.testing.assert_allclose(lo_a, lo_b, atol=ATOL)
+    np.testing.assert_allclose(sc_a, sc_b, atol=ATOL)
+
+
+def test_batched_decode_matches_single(params):
+    """Each sequence in a batch evolves as if decoded alone."""
+    rng = np.random.default_rng(8)
+    b, s, l = 3, 64, 8
+    toks = rng.integers(32, 127, size=(b, l))
+    kv_b = _empty_kv(b, s)
+    mask_b = jnp.zeros((b, s), jnp.float32)
+    for i in range(l):
+        lo_b, kv_b, _, _ = _decode(
+            params, jnp.asarray(toks[:, i], jnp.int32), kv_b, mask_b,
+            jnp.full((b,), i, jnp.int32))
+        mask_b = mask_b.at[:, i].set(1.0)
+
+    for seq in range(b):
+        kv1 = _empty_kv(1, s)
+        mask1 = jnp.zeros((1, s), jnp.float32)
+        for i in range(l):
+            lo1, kv1, _, _ = _decode(
+                params, jnp.asarray([toks[seq, i]], jnp.int32), kv1, mask1,
+                jnp.asarray([i], jnp.int32))
+            mask1 = mask1.at[0, i].set(1.0)
+        np.testing.assert_allclose(lo_b[seq], lo1[0], atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Pure decode_step (the AOT-exported hot path): cache is read-only; the
+# current token's row is folded in-kernel before normalization.
+
+from compile.model import decode_step
+
+
+def _write_row(kv, pos, k_new, v_new):
+    """Engine-side row write: k_new/v_new [nl,B,H,D] -> kv at pos."""
+    return kv.at[:, 0, :, pos].set(k_new).at[:, 1, :, pos].set(v_new)
+
+
+def test_decode_step_matches_causal_forward(params):
+    rng = np.random.default_rng(20)
+    b, s, prompt_len, n_steps = 1, 64, 5, 6
+    tokens = rng.integers(32, 127, size=prompt_len).tolist()
+
+    kv = _empty_kv(b, s)
+    mask = jnp.zeros((b, s), jnp.float32)
+    logits = None
+    for i, t in enumerate(tokens + [0] * (n_steps - 1)):
+        if i >= prompt_len:
+            t = int(jnp.argmax(logits[0]))
+            tokens.append(t)
+        logits, k_new, v_new, scores = decode_step(
+            params, CFG, jnp.asarray([t], jnp.int32), kv, mask,
+            jnp.asarray([i], jnp.int32), block_k=32)
+        kv = _write_row(kv, i, k_new, v_new)
+        mask = mask.at[0, i].set(1.0)
+
+    full = train_forward(params, CFG, jnp.asarray([tokens], jnp.int32))
+    np.testing.assert_allclose(logits[0], full[0, -1], atol=ATOL)
+
+
+def test_decode_step_agrees_with_stateful_decode_apply(params):
+    """The pure and stateful decode variants must produce identical
+    logits/scores given equivalent state."""
+    rng = np.random.default_rng(21)
+    b, s, l = 1, 64, 12
+    tokens = jnp.asarray(rng.integers(32, 127, size=(1, l)), jnp.int32)
+    _, kv_rows, _ = prefill_apply(params, CFG, tokens, jnp.asarray([l], jnp.int32))
+    kv = _empty_kv(b, s).at[:, :, :, :l].set(kv_rows)
+    mask = jnp.zeros((b, s), jnp.float32).at[0, :l].set(1.0)
+    tok = jnp.asarray([65], jnp.int32)
+    pos = jnp.asarray([l], jnp.int32)
+
+    lo_pure, k_new, v_new, sc_pure = decode_step(params, CFG, tok, kv, mask, pos, block_k=32)
+    lo_state, kv_out, sc_state, _ = _decode(params, tok, kv, mask, pos)
+    np.testing.assert_allclose(lo_pure, lo_state, atol=ATOL)
+    # stateful variant wrote the row in-graph; pure variant returns it
+    np.testing.assert_allclose(
+        _write_row(kv, l, k_new, v_new), kv_out, atol=ATOL)
+    # scores: stateful includes the just-written row's column at pos
+    np.testing.assert_allclose(sc_pure[:, :l], sc_state[:, :l], atol=ATOL)
+
+
+def test_decode_step_ignores_masked_row_content(params):
+    rng = np.random.default_rng(22)
+    b, s = 1, 64
+    kv = jnp.asarray(rng.normal(size=_empty_kv(b, s).shape), jnp.float32)
+    mask = jnp.ones((b, s), jnp.float32).at[0, 7].set(0.0).at[0, 33].set(0.0)
+    tok = jnp.asarray([65], jnp.int32)
+    pos = jnp.asarray([40], jnp.int32)
+    # also mask everything beyond len=40
+    mask = mask * (jnp.arange(s)[None, :] < 40)
+
+    lo1, _, _, sc1 = decode_step(params, CFG, tok, kv, mask, pos, block_k=32)
+    noise = jnp.asarray(rng.normal(size=kv.shape) * 50, jnp.float32)
+    inactive = (1.0 - mask)[None, None, :, :, None, None]
+    lo2, _, _, sc2 = decode_step(params, CFG, tok, kv + noise * inactive, mask, pos, block_k=32)
+    np.testing.assert_allclose(lo1, lo2, atol=1e-4)
+    np.testing.assert_allclose(sc1, sc2, atol=1e-4)
+    assert float(sc1[0, 7]) == 0.0 and float(sc1[0, 33]) == 0.0

@@ -1,0 +1,68 @@
+"""Training-loop and AOT-export tests (tiny configs — seconds, not
+minutes; the real training run happens in `make artifacts`)."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig, TrainConfig
+from compile.aot import lower_decode, lower_prefill, to_hlo_text
+from compile.model import init_params
+from compile.train import load_params, save_params, train
+
+TINY = ModelConfig(vocab=256, d_model=32, n_layers=2, n_heads=2, d_head=16,
+                   d_ff=64, max_len=64)
+
+
+def test_train_reduces_loss():
+    tc = TrainConfig(seq_len=64, batch=4, steps=30, warmup=5, seed=0)
+    _, log = train(TINY, tc)
+    assert log[0]["loss"] > log[-1]["loss"] + 0.5, log
+
+
+def test_params_save_load_roundtrip(tmp_path):
+    params = init_params(jax.random.PRNGKey(1), TINY)
+    path = str(tmp_path / "p.npz")
+    save_params(params, path)
+    loaded = load_params(path, TINY)
+    flat_a = jax.tree_util.tree_leaves(params)
+    flat_b = jax.tree_util.tree_leaves(loaded)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lower_decode_emits_full_hlo():
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    text = to_hlo_text(lower_decode(params, TINY, 1, 64, 32))
+    assert "ENTRY" in text
+    # the printer must NOT elide weights (the bug this guards against:
+    # default as_hlo_text drops large constants as `{...}`)
+    assert "{...}" not in text
+    # entry has exactly the 4 dynamic params (token, kv, mask, pos)
+    assert "parameter(3)" in text
+
+
+def test_lower_prefill_emits_full_hlo():
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    text = to_hlo_text(lower_prefill(params, TINY, 1, 32))
+    assert "ENTRY" in text
+    assert "{...}" not in text
+
+
+@pytest.mark.skipif(not os.path.exists("../artifacts/manifest.json"),
+                    reason="run `make artifacts` first")
+def test_manifest_consistent_with_artifacts():
+    import json
+    with open("../artifacts/manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["model"]["kv_row_floats"] == (
+        manifest["model"]["n_layers"] * 2 * manifest["model"]["n_heads"]
+        * manifest["model"]["d_head"]
+    )
+    for name, prog in manifest["programs"].items():
+        path = os.path.join("../artifacts", prog["file"])
+        assert os.path.exists(path), f"{name}: missing {path}"
+        assert os.path.getsize(path) > 1_000_000, f"{name}: suspiciously small HLO"

@@ -1,0 +1,60 @@
+//! §6 "Threshold Sensitivity" ablation: sweep the paper's three
+//! hyper-parameters (tau, K, k) one factor at a time around the
+//! defaults and report compression + quality proxies. Also ablates the
+//! sink-pinning extension (DESIGN.md §5).
+//!
+//! Output: table + artifacts/ablation_sweep.csv
+
+use asrkf::baselines::make_policy;
+use asrkf::config::EngineConfig;
+use asrkf::engine::Generator;
+use asrkf::runtime::Runtime;
+use asrkf::util::bench::Table;
+
+const PROMPT: &str = "the system routes every request. ";
+const NEW_TOKENS: usize = 250;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let base = EngineConfig::default();
+    let rt = Runtime::load(&base.artifacts_dir)?;
+
+    let mut table = Table::new(
+        "Ablation: tau / window K / softness k / sinks",
+        &["Variant", "Active KV", "Mean Active", "Compression", "Mean Entropy", "Freezes"],
+    );
+
+    type Mut = Box<dyn Fn(&mut EngineConfig)>;
+    let variants: Vec<(String, Mut)> = vec![
+        ("defaults (tau=1.0 K=32 k=2 sinks=4)".into(), Box::new(|_| {})),
+        ("tau=0.5".into(), Box::new(|c| c.freeze.tau = 0.5)),
+        ("tau=1.5".into(), Box::new(|c| c.freeze.tau = 1.5)),
+        ("K=16".into(), Box::new(|c| c.freeze.window_k = 16)),
+        ("K=64".into(), Box::new(|c| c.freeze.window_k = 64)),
+        ("k=1".into(), Box::new(|c| c.freeze.softness_k = 1.0)),
+        ("k=4".into(), Box::new(|c| c.freeze.softness_k = 4.0)),
+        ("no sinks".into(), Box::new(|c| c.freeze.n_sink = 0)),
+        ("W=64".into(), Box::new(|c| c.freeze.history_w = 64)),
+    ];
+
+    for (label, mutate) in variants {
+        let mut cfg = base.clone();
+        mutate(&mut cfg);
+        let gen = Generator::new(&rt, cfg.clone());
+        let out = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, NEW_TOKENS)?;
+        let s = &out.stats;
+        let ent =
+            out.trace.iter().map(|t| t.entropy as f64).sum::<f64>() / out.trace.len() as f64;
+        table.row(&[
+            label,
+            s.final_active_kv.to_string(),
+            format!("{:.0}", s.mean_active_kv),
+            format!("{:.2}%", s.compression * 100.0),
+            format!("{:.3}", ent),
+            s.freezes.to_string(),
+        ]);
+    }
+    table.print();
+    table.write_csv("artifacts/ablation_sweep.csv")?;
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Micro-benchmarks for the §Perf iteration log: per-component costs of
+//! the decode hot path — literal construction (host->device analog),
+//! PJRT execute, output download, and the rust-side policy bookkeeping.
+//!
+//! Output: timing lines + artifacts/micro_runtime.csv
+
+use asrkf::config::FreezeConfig;
+use asrkf::kv::{AsrKfPolicy, KvPolicy};
+use asrkf::runtime::{literal, DecodeInputs, Runtime};
+use asrkf::util::bench::{Bencher, Table};
+use asrkf::util::rng::Pcg64;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let rt = Runtime::load("artifacts")?;
+    let model = rt.manifest.model.clone();
+    let decode = rt.decode_for(1, 1024)?;
+    let s = decode.kv_len;
+
+    let mut rng = Pcg64::new(7);
+    let kv: Vec<f32> = (0..decode.kv_floats()).map(|_| rng.f32() - 0.5).collect();
+    let mut mask = vec![0.0f32; s];
+    for m in mask.iter_mut().take(500) {
+        *m = 1.0;
+    }
+    let b = Bencher::new(3, 15);
+    let mut table = Table::new("Micro: decode hot-path components", &["component", "mean_us", "p50_us"]);
+
+    let st = b.run("literal: kv upload (16 MiB)", || {
+        let _ = literal::lit_f32(&[model.n_layers, 2, 1, s, model.n_heads, model.d_head], &kv)
+            .unwrap();
+    });
+    table.row(&["kv_literal_build".into(), st.mean.as_micros().to_string(), st.p50.as_micros().to_string()]);
+
+    let st = b.run("decode step (end to end)", || {
+        let _ = decode
+            .run(&DecodeInputs { tokens: &[65], kv: &kv, mask: &mask, pos: &[500] })
+            .unwrap();
+    });
+    table.row(&["decode_step".into(), st.mean.as_micros().to_string(), st.p50.as_micros().to_string()]);
+
+    // policy bookkeeping alone (no graph)
+    let cfg = FreezeConfig::default();
+    let scores: Vec<f32> = (0..1000).map(|_| rng.f32()).collect();
+    let st = b.run("policy: observe+plan (1000 tokens)", || {
+        let mut p = AsrKfPolicy::new(cfg.clone());
+        p.on_prefill(&scores[..500], 500);
+        for step in 1..50 {
+            p.observe(step, &scores, 1000);
+            let _ = p.plan(step, 1000, 64);
+        }
+    });
+    table.row(&["policy_50_steps".into(), st.mean.as_micros().to_string(), st.p50.as_micros().to_string()]);
+
+    table.print();
+    table.write_csv("artifacts/micro_runtime.csv")?;
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Entropy-guided recovery ablation (paper §3.6 — future work there,
+//! implemented here): generation with aggressive freezing, recovery
+//! ladder off vs on. Reports entropy statistics, intervention counts
+//! per ladder level (SR/WR/FR/RR), and quality proxies.
+//!
+//! Output: table + artifacts/recovery_ablation.csv
+
+use asrkf::baselines::make_policy;
+use asrkf::config::EngineConfig;
+use asrkf::engine::Generator;
+use asrkf::runtime::Runtime;
+use asrkf::util::bench::Table;
+
+const PROMPT: &str = "the system routes every request. ";
+const NEW_TOKENS: usize = 380;
+
+fn repetition_score(text: &str) -> f64 {
+    let b = text.as_bytes();
+    if b.len() < 16 {
+        return 0.0;
+    }
+    let mut seen = std::collections::HashSet::new();
+    let (mut repeats, mut total) = (0usize, 0usize);
+    for w in b.windows(8) {
+        total += 1;
+        if !seen.insert(w.to_vec()) {
+            repeats += 1;
+        }
+    }
+    repeats as f64 / total as f64
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let rt = Runtime::load("artifacts")?;
+
+    {
+        // compile warmup so Time rows are compile-free
+        let mut cfg = EngineConfig::default();
+        cfg.freeze.softness_k = 1.0;
+        let gen = Generator::new(&rt, cfg.clone());
+        let _ = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, 4)?;
+    }
+    let mut table = Table::new(
+        "Recovery ladder ablation (aggressive freeze: k=1)",
+        &["Variant", "Compression", "Mean H", "p95 H", "Repetition", "SR/WR/FR/RR", "Time"],
+    );
+    for recovery in [false, true] {
+        let mut cfg = EngineConfig::default();
+        cfg.freeze.softness_k = 1.0;
+        cfg.recovery.enabled = recovery;
+        let gen = Generator::new(&rt, cfg.clone());
+        let out = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, NEW_TOKENS)?;
+
+        let mut hs: Vec<f64> = out.trace.iter().map(|t| t.entropy as f64).collect();
+        hs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean_h = hs.iter().sum::<f64>() / hs.len() as f64;
+        let p95 = hs[(hs.len() as f64 * 0.95) as usize];
+        let by = out.stats.recovery_by_level;
+
+        table.row(&[
+            if recovery { "recovery ON".into() } else { "recovery OFF".to_string() },
+            format!("{:.1}%", out.stats.compression * 100.0),
+            format!("{mean_h:.3}"),
+            format!("{p95:.3}"),
+            format!("{:.3}", repetition_score(&out.text)),
+            format!("{}/{}/{}/{}", by[0], by[1], by[2], by[3]),
+            format!("{:.2}s", out.stats.wall.as_secs_f64()),
+        ]);
+    }
+    table.print();
+    table.write_csv("artifacts/recovery_ablation.csv")?;
+    println!("\npaper §3.6 proposes SR->WR->FR->RR as an escalation ladder (future work there).");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Serving throughput/latency: the continuous-batching coordinator
+//! under a Poisson trace, batched (B=4) vs sequential (B=1 equivalent:
+//! one request at a time through the single-sequence engine).
+//!
+//! Not a paper table — this validates that the paper's technique
+//! composes with a production-style serving loop (the "memory-
+//! constrained deployment" the paper motivates).
+//!
+//! Output: table + artifacts/serving_throughput.csv
+
+use std::time::Instant;
+
+use asrkf::baselines::make_policy;
+use asrkf::config::{EngineConfig, ServerConfig};
+use asrkf::coordinator::{spawn, GenParams};
+use asrkf::engine::Generator;
+use asrkf::runtime::Runtime;
+use asrkf::util::bench::Table;
+use asrkf::workload::trace::poisson_trace;
+
+const N_REQ: usize = 12;
+const MAX_NEW: usize = 32;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let trace = poisson_trace(42, N_REQ, 100.0, 40, 120, MAX_NEW); // all arrive ~immediately
+    let mut table = Table::new(
+        "Serving: batched coordinator vs sequential engine",
+        &["Mode", "Requests", "Tokens", "Wall", "tok/s", "mean e2e (ms)"],
+    );
+
+    // --- batched coordinator (B=4)
+    {
+        let cfg = EngineConfig::default();
+        let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
+        let (handle, join) = spawn(cfg, server)?;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = trace
+            .iter()
+            .map(|r| {
+                handle.submit(GenParams {
+                    prompt: r.prompt.clone(),
+                    max_new: r.max_new,
+                    policy: "asrkf".into(),
+                    seed: r.arrival_ms,
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let mut tokens = 0usize;
+        let mut e2e_sum = 0.0;
+        for rx in rxs {
+            let resp = rx.recv()?;
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            tokens += resp.generated_tokens;
+            e2e_sum += resp.e2e.as_secs_f64() * 1000.0;
+        }
+        let wall = t0.elapsed();
+        table.row(&[
+            "continuous batch (B=4)".into(),
+            N_REQ.to_string(),
+            tokens.to_string(),
+            format!("{:.2}s", wall.as_secs_f64()),
+            format!("{:.1}", tokens as f64 / wall.as_secs_f64()),
+            format!("{:.0}", e2e_sum / N_REQ as f64),
+        ]);
+        drop(handle);
+        let _ = join.join();
+    }
+
+    // --- sequential single-sequence engine
+    {
+        let cfg = EngineConfig::default();
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let gen = Generator::new(&rt, cfg.clone());
+        let t0 = Instant::now();
+        let mut tokens = 0usize;
+        let mut e2e_sum = 0.0;
+        for r in &trace {
+            let t1 = Instant::now();
+            let out = gen.generate(&r.prompt, make_policy("asrkf", &cfg.freeze)?, r.max_new)?;
+            tokens += out.stats.generated_tokens;
+            e2e_sum += t1.elapsed().as_secs_f64() * 1000.0;
+        }
+        let wall = t0.elapsed();
+        table.row(&[
+            "sequential (B=1)".into(),
+            N_REQ.to_string(),
+            tokens.to_string(),
+            format!("{:.2}s", wall.as_secs_f64()),
+            format!("{:.1}", tokens as f64 / wall.as_secs_f64()),
+            format!("{:.0}", e2e_sum / N_REQ as f64),
+        ]);
+    }
+
+    table.print();
+    table.write_csv("artifacts/serving_throughput.csv")?;
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Paper Table 1: memory efficiency on a 500-token generation task.
+//!
+//! Paper reports (LLaMA-3 8B): Full KV 514/514 active, 7.55s;
+//! ASR-KF-EGR 170/514 active (66.93% compression), 38.96s (5x overhead
+//! from Python bookkeeping + per-token transfers).
+//!
+//! We reproduce the *shape*: the compression band and the relative
+//! overhead of the freeze policy vs Full KV on identical settings.
+//! Two ASR-KF-EGR rows: the paper's softness k=2 and k=1 (which, under
+//! our budget-limited transfer engine, lands on the paper's 67% — see
+//! EXPERIMENTS.md discussion).
+//!
+//! Output: table + artifacts/table1_memory.csv
+
+use asrkf::baselines::make_policy;
+use asrkf::config::EngineConfig;
+use asrkf::engine::Generator;
+use asrkf::runtime::Runtime;
+use asrkf::util::bench::Table;
+
+const PROMPT: &str = "the system routes every request. ";
+const NEW_TOKENS: usize = 480;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let base = EngineConfig::default();
+    let rt = Runtime::load(&base.artifacts_dir)?;
+
+    let mut table = Table::new(
+        "Table 1: memory efficiency, 500-token generation",
+        &["Method", "Total Tokens", "Active KV", "Mean Active", "Compression", "Time", "Freezes"],
+    );
+
+    // warmup: compile prefill+decode programs so Time rows are compile-free
+    {
+        let gen = Generator::new(&rt, base.clone());
+        let _ = gen.generate(PROMPT, make_policy("full", &base.freeze)?, 4)?;
+    }
+
+    let runs: Vec<(&str, &str, f32)> = vec![
+        ("Full KV (Baseline)", "full", 2.0),
+        ("ASR-KF-EGR (k=2)", "asrkf", 2.0),
+        ("ASR-KF-EGR (k=1)", "asrkf", 1.0),
+    ];
+    for (label, policy, softness) in runs {
+        let mut cfg = base.clone();
+        cfg.freeze.softness_k = softness;
+        let gen = Generator::new(&rt, cfg.clone());
+        let out = gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, NEW_TOKENS)?;
+        let s = &out.stats;
+        table.row(&[
+            label.to_string(),
+            s.total_tokens.to_string(),
+            s.final_active_kv.to_string(),
+            format!("{:.0}", s.mean_active_kv),
+            format!("{:.2}%", s.compression * 100.0),
+            format!("{:.2}s", s.wall.as_secs_f64()),
+            s.freezes.to_string(),
+        ]);
+    }
+    table.print();
+    table.write_csv("artifacts/table1_memory.csv")?;
+    println!("\npaper reference: Full KV 514/514 0% 7.55s | ASR-KF-EGR 170/514 66.93% 38.96s");
+    println!("csv: artifacts/table1_memory.csv");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Paper Table 2: passkey retrieval (greedy decoding, T=0).
+//!
+//! Paper reports PASS for ASR-KF-EGR with a 5-digit needle in ~1500
+//! tokens of filler. Our stand-in model was trained with passkey
+//! curriculum up to its 256-byte training horizon; we sweep haystack
+//! sizes and — crucially — report Full KV on the same sizes, because
+//! the paper's claim is that freezing does not *lose* the needle
+//! relative to the baseline. StreamingLLM is included to show what
+//! irreversible eviction does to the same task.
+//!
+//! Output: table + artifacts/table2_passkey.csv
+
+use asrkf::config::EngineConfig;
+use asrkf::runtime::Runtime;
+use asrkf::util::bench::Table;
+use asrkf::workload::passkey::run_passkey;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let cfg = EngineConfig::default();
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+
+    let mut table = Table::new(
+        "Table 2: passkey retrieval (greedy, T=0)",
+        &["Method", "Haystack", "Target", "Retrieved", "E2E", "Needle-KV recoverable", "Compression"],
+    );
+    let mut recover_counts = std::collections::BTreeMap::new();
+    for &haystack in &[200usize, 400, 600, 900] {
+        for policy in ["full", "asrkf", "h2o", "streaming"] {
+            // 3 seeds per cell
+            let mut passes = 0;
+            let mut recov = 0.0;
+            let mut last = None;
+            for seed in 1..=3u64 {
+                let o = run_passkey(&rt, &cfg, policy, haystack, seed)?;
+                if o.pass {
+                    passes += 1;
+                }
+                recov += o.needle_recoverable;
+                last = Some(o);
+            }
+            let o = last.unwrap();
+            *recover_counts.entry(policy).or_insert(0.0) += recov;
+            table.row(&[
+                policy.to_string(),
+                format!("{haystack}B"),
+                o.target.clone(),
+                o.retrieved.clone(),
+                format!("{passes}/3"),
+                format!("{:.0}%", recov / 3.0 * 100.0),
+                format!("{:.1}%", o.stats.compression * 100.0),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv("artifacts/table2_passkey.csv")?;
+    println!("\nmean needle-KV recoverability across cells: {recover_counts:?}");
+    println!("paper reference: ASR-KF-EGR retrieves 44181 -> PASS (~1500-token haystack, 8B model).");
+    println!("NOTE: the 3.3M stand-in model lacks induction-copy skill (E2E column fails for ALL");
+    println!("policies incl. Full KV — model limitation, not a KV-policy effect; EXPERIMENTS.md).");
+    println!("The recoverability column measures the paper's reversibility claim directly.");
+    println!("csv: artifacts/table2_passkey.csv");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Paper Table 3: qualitative comparison on an explanation task.
+//!
+//! Paper reports (explanation prompt, identical sampling): baseline 269
+//! active tokens vs ASR-KF-EGR 119 active (55.76% compression), both
+//! "coherent, on-topic". We reproduce the compression band at the same
+//! generation length and report a quantitative fluency proxy (mean
+//! next-token entropy + repetition score) alongside both outputs.
+//!
+//! Output: table + artifacts/table3_quality.csv
+
+use asrkf::baselines::make_policy;
+use asrkf::config::EngineConfig;
+use asrkf::engine::Generator;
+use asrkf::runtime::Runtime;
+use asrkf::util::bench::Table;
+
+const PROMPT: &str = "the recovery ladder monitors the entropy trace. the scheduler freezes \
+                      the key value pairs then the engine restores the frozen rows. ";
+const NEW_TOKENS: usize = 200;
+
+/// Fraction of 8-byte windows that repeat earlier in the text (lower =
+/// less degenerate repetition).
+fn repetition_score(text: &str) -> f64 {
+    let b = text.as_bytes();
+    if b.len() < 16 {
+        return 0.0;
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut repeats = 0usize;
+    let mut total = 0usize;
+    for w in b.windows(8) {
+        total += 1;
+        if !seen.insert(w.to_vec()) {
+            repeats += 1;
+        }
+    }
+    repeats as f64 / total as f64
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let cfg = EngineConfig::default();
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let gen = Generator::new(&rt, cfg.clone());
+
+    let mut table = Table::new(
+        "Table 3: explanation task (T=0.7, top-k=40, top-p=0.9)",
+        &["Metric", "Baseline", "ASR-KF-EGR"],
+    );
+    let _ = gen.generate(PROMPT, make_policy("full", &cfg.freeze)?, 4)?; // compile warmup
+    let mut outs = Vec::new();
+    for policy in ["full", "asrkf"] {
+        outs.push(gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, NEW_TOKENS)?);
+    }
+    let ent = |o: &asrkf::engine::GenOutcome| {
+        o.trace.iter().map(|t| t.entropy as f64).sum::<f64>() / o.trace.len() as f64
+    };
+    table.row(&[
+        "Active KV".into(),
+        format!("{} tokens", outs[0].stats.final_active_kv),
+        format!("{} tokens", outs[1].stats.final_active_kv),
+    ]);
+    table.row(&[
+        "Compression".into(),
+        format!("{:.2}%", outs[0].stats.compression * 100.0),
+        format!("{:.2}%", outs[1].stats.compression * 100.0),
+    ]);
+    table.row(&[
+        "Mean entropy (nats)".into(),
+        format!("{:.3}", ent(&outs[0])),
+        format!("{:.3}", ent(&outs[1])),
+    ]);
+    table.row(&[
+        "Repetition score".into(),
+        format!("{:.3}", repetition_score(&outs[0].text)),
+        format!("{:.3}", repetition_score(&outs[1].text)),
+    ]);
+    table.row(&[
+        "Wall time".into(),
+        format!("{:.2}s", outs[0].stats.wall.as_secs_f64()),
+        format!("{:.2}s", outs[1].stats.wall.as_secs_f64()),
+    ]);
+    table.print();
+    table.write_csv("artifacts/table3_quality.csv")?;
+
+    println!("\n--- baseline ---\n{}", outs[0].text);
+    println!("\n--- asr-kf-egr ---\n{}", outs[1].text);
+    println!("\npaper reference: 269 vs 119 active tokens (55.76% compression), comparable fluency");
+    Ok(())
+}

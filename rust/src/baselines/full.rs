@@ -1,0 +1,64 @@
+//! Full KV baseline: no compression, every token stays active forever.
+//! This is the paper's Table 1 / Table 3 comparison point.
+
+use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
+
+#[derive(Debug, Default)]
+pub struct FullKvPolicy {
+    len: usize,
+}
+
+impl KvPolicy for FullKvPolicy {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn on_prefill(&mut self, _scores: &[f32], len: usize) {
+        self.len = len;
+    }
+
+    fn plan(&mut self, _step: u64, len: usize, _r_budget: usize) -> Plan {
+        self.len = len;
+        Plan::default()
+    }
+
+    fn observe(&mut self, _step: u64, _scores: &[f32], len: usize) {
+        self.len = len;
+    }
+
+    fn request_unfreeze(&mut self, _scope: UnfreezeScope) -> usize {
+        0
+    }
+
+    fn force_all_active(&mut self) {}
+
+    fn active_count(&self) -> usize {
+        self.len
+    }
+
+    fn frozen_positions(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn is_frozen(&self, _pos: usize) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_plans_anything() {
+        let mut p = FullKvPolicy::default();
+        p.on_prefill(&[0.0; 10], 10);
+        for step in 0..100 {
+            p.observe(step, &vec![0.0; 10 + step as usize], 10 + step as usize);
+            let plan = p.plan(step, 10 + step as usize, 16);
+            assert!(plan.freeze.is_empty() && plan.restore.is_empty());
+        }
+        assert_eq!(p.active_count(), 109);
+        assert_eq!(p.frozen_count(), 0);
+    }
+}

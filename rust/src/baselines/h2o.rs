@@ -1,0 +1,167 @@
+//! H2O (Heavy-Hitter Oracle, Zhang et al. 2024) baseline.
+//!
+//! Keeps attention sinks + a recent window + the "heavy hitters" with
+//! the largest cumulative attention mass, evicting the rest
+//! permanently. We use the Eq.2 relevance scores as the attention-mass
+//! proxy (both are |q.k|-derived; the original uses post-softmax
+//! weights — the ranking behaviour is equivalent for this comparison
+//! and documented in DESIGN.md §3).
+//!
+//! The active-set budget is `budget_frac * total_len`, floored at
+//! sinks + window, matching H2O's "20-40% heavy hitter" operating
+//! range (we default to 33%).
+
+use crate::config::FreezeConfig;
+use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
+use crate::kv::state::TokenTable;
+
+pub struct H2oPolicy {
+    cfg: FreezeConfig,
+    pub budget_frac: f32,
+    table: TokenTable,
+    cum: Vec<f32>,
+    len: usize,
+}
+
+impl H2oPolicy {
+    pub fn new(cfg: FreezeConfig) -> Self {
+        H2oPolicy { cfg, budget_frac: 0.33, table: TokenTable::default(), cum: Vec::new(), len: 0 }
+    }
+
+    pub fn with_budget(cfg: FreezeConfig, budget_frac: f32) -> Self {
+        H2oPolicy { budget_frac, ..Self::new(cfg) }
+    }
+
+    fn budget(&self, len: usize) -> usize {
+        let floor = self.cfg.n_sink + self.cfg.window_k;
+        ((len as f32 * self.budget_frac) as usize).max(floor)
+    }
+}
+
+impl KvPolicy for H2oPolicy {
+    fn name(&self) -> &'static str {
+        "h2o"
+    }
+
+    fn on_prefill(&mut self, scores: &[f32], len: usize) {
+        self.table.grow_to(len);
+        self.cum.resize(len, 0.0);
+        for (i, &s) in scores.iter().take(len).enumerate() {
+            self.cum[i] += s;
+        }
+        self.len = len;
+    }
+
+    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan {
+        self.table.grow_to(len);
+        self.cum.resize(len, 0.0);
+        self.len = len;
+
+        let budget = self.budget(len);
+        let window_start = len.saturating_sub(self.cfg.window_k);
+        let mut active = self.table.active_count();
+        let mut evict = Vec::new();
+        while active > budget && evict.len() < r_budget {
+            // lowest cumulative attention among evictable positions
+            let victim = (self.cfg.n_sink..window_start)
+                .filter(|&p| self.table.is_active(p) && !evict.contains(&p))
+                .min_by(|&a, &b| self.cum[a].partial_cmp(&self.cum[b]).unwrap());
+            match victim {
+                Some(p) => {
+                    self.table.freeze(p, u32::MAX, step); // permanent
+                    evict.push(p);
+                    active -= 1;
+                }
+                None => break,
+            }
+        }
+        Plan { freeze: evict, restore: Vec::new(), drop_payload: true }
+    }
+
+    fn observe(&mut self, _step: u64, scores: &[f32], len: usize) {
+        self.table.grow_to(len);
+        self.cum.resize(len, 0.0);
+        for p in 0..len {
+            if self.table.is_active(p) {
+                self.cum[p] += scores[p];
+            }
+        }
+        self.len = len;
+    }
+
+    fn request_unfreeze(&mut self, _scope: UnfreezeScope) -> usize {
+        0 // evicted rows are gone; recovery cannot help H2O
+    }
+
+    fn force_all_active(&mut self) {}
+
+    fn active_count(&self) -> usize {
+        self.table.active_count() + self.len.saturating_sub(self.table.len())
+    }
+
+    fn frozen_positions(&self) -> Vec<usize> {
+        self.table.frozen_positions()
+    }
+
+    fn is_frozen(&self, pos: usize) -> bool {
+        self.table.is_frozen(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FreezeConfig {
+        FreezeConfig { n_sink: 2, window_k: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn evicts_down_to_budget() {
+        let mut p = H2oPolicy::with_budget(cfg(), 0.5);
+        let len = 40;
+        let scores: Vec<f32> = (0..len).map(|i| i as f32).collect(); // early = cold
+        p.on_prefill(&scores, len);
+        let mut evicted = 0;
+        for step in 0..10 {
+            let plan = p.plan(step, len, 16);
+            assert!(plan.drop_payload);
+            assert!(plan.restore.is_empty());
+            evicted += plan.freeze.len();
+        }
+        assert_eq!(evicted, len - p.budget(len));
+        assert_eq!(p.active_count(), p.budget(len));
+    }
+
+    #[test]
+    fn evicts_coldest_first_and_spares_sinks_window() {
+        let mut p = H2oPolicy::with_budget(cfg(), 0.5);
+        let len = 20;
+        let mut scores = vec![10.0f32; len];
+        scores[7] = 0.0; // coldest evictable
+        p.on_prefill(&scores, len);
+        let plan = p.plan(0, len, 1);
+        assert_eq!(plan.freeze, vec![7]);
+        // sinks (0,1) and window (16..20) never evicted
+        for step in 1..20 {
+            let plan = p.plan(step, len, 4);
+            for &f in &plan.freeze {
+                assert!(f >= 2 && f < 16, "evicted protected pos {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_is_permanent() {
+        let mut p = H2oPolicy::with_budget(cfg(), 0.3);
+        let len = 40;
+        p.on_prefill(&vec![1.0; len], len);
+        while !p.plan(0, len, 16).freeze.is_empty() {}
+        let frozen = p.frozen_count();
+        assert!(frozen > 0);
+        assert_eq!(p.request_unfreeze(UnfreezeScope::Full), 0);
+        let plan = p.plan(1, len, 16);
+        assert!(plan.restore.is_empty());
+        assert_eq!(p.frozen_count(), frozen);
+    }
+}

@@ -1,0 +1,44 @@
+//! Baseline KV policies the paper compares against (related work §2):
+//! Full KV (the paper's Table 1/3 baseline), H2O heavy-hitter eviction,
+//! and StreamingLLM sinks+window. All drive the exact same engine as
+//! ASR-KF-EGR via the `KvPolicy` trait; the crucial behavioural
+//! difference is `Plan::drop_payload = true` — their evictions are
+//! irreversible.
+
+pub mod full;
+pub mod h2o;
+pub mod streaming;
+
+pub use full::FullKvPolicy;
+pub use h2o::H2oPolicy;
+pub use streaming::StreamingLlmPolicy;
+
+use crate::config::FreezeConfig;
+use crate::kv::KvPolicy;
+
+/// Policy factory used by the CLI, server, and benches.
+pub fn make_policy(name: &str, cfg: &FreezeConfig) -> Result<Box<dyn KvPolicy>, String> {
+    match name {
+        "asrkf" | "asr-kf-egr" => Ok(Box::new(crate::kv::AsrKfPolicy::new(cfg.clone()))),
+        "full" | "baseline" => Ok(Box::new(FullKvPolicy::default())),
+        "h2o" => Ok(Box::new(H2oPolicy::new(cfg.clone()))),
+        "streaming" | "streamingllm" => Ok(Box::new(StreamingLlmPolicy::new(cfg.clone()))),
+        other => Err(format!(
+            "unknown policy '{other}' (expected asrkf|full|h2o|streaming)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_knows_all_policies() {
+        let cfg = FreezeConfig::default();
+        for name in ["asrkf", "full", "h2o", "streaming"] {
+            assert!(make_policy(name, &cfg).is_ok(), "{name}");
+        }
+        assert!(make_policy("nope", &cfg).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! StreamingLLM (Xiao et al. 2024) baseline: keep only the attention
+//! sinks (first `n_sink` tokens) and a recent sliding window; evict
+//! everything else permanently as it ages out of the window. Enables
+//! unbounded generation but loses mid-context access — exactly the
+//! failure mode the paper's passkey test (Table 2) exposes.
+
+use crate::config::FreezeConfig;
+use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
+use crate::kv::state::TokenTable;
+
+pub struct StreamingLlmPolicy {
+    cfg: FreezeConfig,
+    table: TokenTable,
+    len: usize,
+}
+
+impl StreamingLlmPolicy {
+    pub fn new(cfg: FreezeConfig) -> Self {
+        StreamingLlmPolicy { cfg, table: TokenTable::default(), len: 0 }
+    }
+}
+
+impl KvPolicy for StreamingLlmPolicy {
+    fn name(&self) -> &'static str {
+        "streaming"
+    }
+
+    fn on_prefill(&mut self, _scores: &[f32], len: usize) {
+        self.table.grow_to(len);
+        self.len = len;
+    }
+
+    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan {
+        self.table.grow_to(len);
+        self.len = len;
+        let window_start = len.saturating_sub(self.cfg.window_k);
+        let mut evict = Vec::new();
+        for p in self.cfg.n_sink..window_start {
+            if self.table.is_active(p) {
+                self.table.freeze(p, u32::MAX, step);
+                evict.push(p);
+                if evict.len() >= r_budget {
+                    break;
+                }
+            }
+        }
+        Plan { freeze: evict, restore: Vec::new(), drop_payload: true }
+    }
+
+    fn observe(&mut self, _step: u64, _scores: &[f32], len: usize) {
+        self.table.grow_to(len);
+        self.len = len;
+    }
+
+    fn request_unfreeze(&mut self, _scope: UnfreezeScope) -> usize {
+        0
+    }
+
+    fn force_all_active(&mut self) {}
+
+    fn active_count(&self) -> usize {
+        self.table.active_count() + self.len.saturating_sub(self.table.len())
+    }
+
+    fn frozen_positions(&self) -> Vec<usize> {
+        self.table.frozen_positions()
+    }
+
+    fn is_frozen(&self, pos: usize) -> bool {
+        self.table.is_frozen(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FreezeConfig {
+        FreezeConfig { n_sink: 4, window_k: 8, r_budget: 16, ..Default::default() }
+    }
+
+    #[test]
+    fn keeps_exactly_sinks_plus_window() {
+        let mut p = StreamingLlmPolicy::new(cfg());
+        let len = 50;
+        p.on_prefill(&vec![1.0; len], len);
+        // drain the eviction backlog
+        for step in 0..10 {
+            if p.plan(step, len, 16).freeze.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(p.active_count(), 4 + 8);
+        // active set is exactly sinks + window
+        for pos in 0..len {
+            let should_be_active = pos < 4 || pos >= len - 8;
+            assert_eq!(!p.is_frozen(pos), should_be_active, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn evicts_as_window_slides() {
+        let mut p = StreamingLlmPolicy::new(cfg());
+        let mut len = 12; // sinks + window exactly: nothing evictable
+        p.on_prefill(&vec![1.0; len], len);
+        assert!(p.plan(0, len, 16).freeze.is_empty());
+        // each new token pushes one position out of the window
+        for step in 1..=5u64 {
+            len += 1;
+            let plan = p.plan(step, len, 16);
+            assert_eq!(plan.freeze, vec![3 + step as usize]);
+        }
+    }
+
+    #[test]
+    fn short_context_untouched() {
+        let mut p = StreamingLlmPolicy::new(cfg());
+        p.on_prefill(&vec![1.0; 10], 10);
+        let plan = p.plan(0, 10, 16);
+        assert!(plan.freeze.is_empty());
+        assert_eq!(p.active_count(), 10);
+    }
+}

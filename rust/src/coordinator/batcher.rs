@@ -1,0 +1,294 @@
+//! Continuous batching engine: the vLLM-style serving core.
+//!
+//! One coordinator thread owns the PJRT runtime, a persistent batched
+//! KV buffer with `B` session slots, and the request loop:
+//!
+//!   1. admit queued requests into free slots (prefill via the B=1
+//!      prefill bucket, rows copied into the slot),
+//!   2. run ONE batched decode step for all occupied slots,
+//!   3. per-slot policy bookkeeping (freeze/restore transfers are
+//!      assembled into the shared `[B,R]` index tensors),
+//!   4. retire finished sessions and answer their channels.
+//!
+//! Sessions join and leave between steps — decode never waits for the
+//! batch to fill (continuous batching, not static batching).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use crate::baselines::make_policy;
+use crate::config::{EngineConfig, ServerConfig};
+use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::engine::layout::{insert_prefill, KvGeom};
+use crate::engine::session::Session;
+use crate::error::{Error, Result};
+use crate::metrics::{Histogram, ServingStats};
+use crate::model::tokenizer;
+use crate::runtime::{DecodeInputs, DecodeProgram, Runtime};
+
+struct Slot {
+    session: Session,
+    arrived: Instant,
+    first_token_at: Option<Instant>,
+    respond: std::sync::mpsc::Sender<GenResponse>,
+    id: u64,
+}
+
+pub struct BatchEngine {
+    rt: Runtime,
+    cfg: EngineConfig,
+    decode: std::rc::Rc<DecodeProgram>,
+    geom: KvGeom,
+    kv: Vec<f32>,
+    slots: Vec<Option<Slot>>,
+    pub stats: ServingStats,
+    pub ttft_hist: Histogram,
+    pub e2e_hist: Histogram,
+    pub step_hist: Histogram,
+}
+
+impl BatchEngine {
+    pub fn new(cfg: EngineConfig, server: ServerConfig) -> Result<Self> {
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let model = rt.manifest.model.clone();
+        // pick the decode bucket whose batch matches max_batch (largest
+        // batch <= max_batch available in the manifest)
+        let decode = {
+            let spec = rt
+                .manifest
+                .programs
+                .values()
+                .filter_map(|p| match p.kind {
+                    crate::runtime::ProgramKind::Decode { .. }
+                        if p.batch <= server.max_batch && p.batch > 1 =>
+                    {
+                        Some((p.batch, p.name.clone()))
+                    }
+                    _ => None,
+                })
+                .max_by_key(|(b, _)| *b)
+                .ok_or_else(|| {
+                    Error::Coordinator(format!(
+                        "no batched decode bucket with batch <= {}",
+                        server.max_batch
+                    ))
+                })?;
+            rt.decode_program(&spec.1)?
+        };
+        let geom = KvGeom::new(&model, decode.batch, decode.kv_len);
+        let kv = vec![0.0f32; geom.floats()];
+        let slots = (0..decode.batch).map(|_| None).collect();
+        Ok(BatchEngine {
+            rt,
+            cfg,
+            decode,
+            geom,
+            kv,
+            slots,
+            stats: ServingStats::default(),
+            ttft_hist: Histogram::default(),
+            e2e_hist: Histogram::default(),
+            step_hist: Histogram::default(),
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn kv_capacity(&self) -> usize {
+        self.decode.kv_len
+    }
+
+    fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Serve until `rx` disconnects and all in-flight sessions finish.
+    pub fn run(&mut self, rx: Receiver<GenRequest>) {
+        let mut disconnected = false;
+        loop {
+            // admit as many requests as there are free slots
+            while self.occupied() < self.slots.len() && !disconnected {
+                match rx.try_recv() {
+                    Ok(req) => self.admit(req),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                    }
+                }
+            }
+            if self.occupied() == 0 {
+                if disconnected {
+                    return;
+                }
+                // idle: block for the next request
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(req) => self.admit(req),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+                continue;
+            }
+            if let Err(e) = self.step() {
+                log::error!("batched decode step failed: {e}");
+                self.fail_all(&format!("engine failure: {e}"));
+            }
+        }
+    }
+
+    /// Admit one request: prefill and bind to a free slot.
+    fn admit(&mut self, req: GenRequest) {
+        let slot_idx = match self.slots.iter().position(|s| s.is_none()) {
+            Some(i) => i,
+            None => {
+                let _ = req
+                    .respond
+                    .send(GenResponse::error(req.id, "no free slot (admission bug)"));
+                return;
+            }
+        };
+        match self.prefill_into_slot(&req, slot_idx) {
+            Ok(()) => {}
+            Err(e) => {
+                self.stats.requests_rejected += 1;
+                let _ = req.respond.send(GenResponse::error(req.id, format!("{e}")));
+            }
+        }
+    }
+
+    fn prefill_into_slot(&mut self, req: &GenRequest, slot_idx: usize) -> Result<()> {
+        let model = self.rt.manifest.model.clone();
+        let tokens = tokenizer::encode(&req.params.prompt);
+        if tokens.is_empty() {
+            return Err(Error::Coordinator("empty prompt".into()));
+        }
+        let need = tokens.len() + req.params.max_new;
+        if need > self.decode.kv_len {
+            return Err(Error::Coordinator(format!(
+                "request needs {need} KV rows, bucket capacity is {} (admission control)",
+                self.decode.kv_len
+            )));
+        }
+        let prefill = self.rt.prefill_for(tokens.len())?;
+        let l = prefill.len;
+        let mut padded = tokens.clone();
+        padded.resize(l, b' ' as i32);
+        let pf = prefill.run(&padded, &[tokens.len() as i32])?;
+        self.stats.prefill_tokens += tokens.len() as u64;
+
+        insert_prefill(&mut self.kv, &self.geom, slot_idx, &pf.kv, l, tokens.len());
+
+        let mut cfg = self.cfg.clone();
+        cfg.sampling.seed = req.params.seed;
+        let policy = make_policy(&req.params.policy, &cfg.freeze)
+            .map_err(Error::Coordinator)?;
+        let mut session = Session::new(
+            req.id,
+            tokens.clone(),
+            req.params.max_new,
+            policy,
+            &cfg,
+            self.decode.kv_len,
+            model.kv_row_floats,
+        );
+        session.seed_prefill(pf.logits_last, &pf.scores_last, tokens.len());
+
+        self.slots[slot_idx] = Some(Slot {
+            session,
+            arrived: req.arrived,
+            first_token_at: None,
+            respond: req.respond.clone(),
+            id: req.id,
+        });
+        Ok(())
+    }
+
+    /// One batched decode step over all occupied slots.
+    pub fn step(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let b = self.slots.len();
+        let s = self.decode.kv_len;
+        let r = self.cfg.freeze.r_budget.min(self.decode.r_budget.max(1));
+
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut mask = vec![0.0f32; b * s];
+        let mut plans: Vec<Option<crate::kv::Plan>> = (0..b).map(|_| None).collect();
+
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(slot) = slot {
+                let sess = &mut slot.session;
+                tokens[i] = sess.next_token();
+                // per-slot freeze/restore data movement on the shared cache
+                let plan = sess.apply_plan(&mut self.kv, &self.geom, i, r);
+                pos[i] = sess.len as i32;
+                mask[i * s..(i + 1) * s].copy_from_slice(&sess.mask);
+                plans[i] = Some(plan);
+            }
+            // free slots decode a dummy token at pos 0; outputs ignored
+            // and their KV rows are overwritten on the next prefill.
+        }
+
+        let out = self.decode.run(&DecodeInputs {
+            tokens: &tokens,
+            kv: &self.kv,
+            mask: &mask,
+            pos: &pos,
+        })?;
+        self.stats.batches_dispatched += 1;
+        self.stats.batch_occupancy_sum += self.occupied() as u64;
+
+        let model_vocab = self.rt.manifest.model.vocab;
+        let now = Instant::now();
+        for i in 0..b {
+            let Some(plan) = plans[i].take() else { continue };
+            let slot_pos = pos[i] as usize;
+            // write the new KV row for this lane
+            crate::engine::layout::write_new_row(
+                &mut self.kv, &self.geom, i, slot_pos, &out.k_new, &out.v_new,
+            );
+            let slot = self.slots[i].as_mut().unwrap();
+            let sess = &mut slot.session;
+            let logits = out.logits[i * model_vocab..(i + 1) * model_vocab].to_vec();
+            let scores = &out.scores[i * s..(i + 1) * s];
+            // recovery in batched mode: SR/WR/FR apply via policy; RR is
+            // disabled (rewalk would stall the whole batch — documented)
+            let _ = sess.absorb(tokens[i], logits, scores, &plan, out.timing, Duration::ZERO);
+            if slot.first_token_at.is_none() {
+                slot.first_token_at = Some(now);
+                self.ttft_hist.record(now - slot.arrived);
+            }
+            self.stats.tokens_generated += 1;
+
+            if sess.is_done() {
+                let e2e = now - slot.arrived;
+                self.e2e_hist.record(e2e);
+                let resp = GenResponse {
+                    id: slot.id,
+                    text: sess.generated_text(),
+                    error: None,
+                    prompt_tokens: sess.prompt_len,
+                    generated_tokens: sess.generated(),
+                    final_active_kv: sess.active_kv(),
+                    compression: 1.0 - sess.active_kv() as f64 / sess.len.max(1) as f64,
+                    ttft: slot.first_token_at.unwrap() - slot.arrived,
+                    e2e,
+                };
+                let _ = slot.respond.send(resp);
+                self.stats.requests_completed += 1;
+                self.slots[i] = None;
+            }
+        }
+        self.step_hist.record(t0.elapsed());
+        Ok(())
+    }
+
+    fn fail_all(&mut self, msg: &str) {
+        for slot in self.slots.iter_mut() {
+            if let Some(s) = slot.take() {
+                let _ = s.respond.send(GenResponse::error(s.id, msg));
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving coordinator: request admission, continuous batching, and
+//! the coordinator thread that owns the PJRT runtime.
+//!
+//! Architecture (one box per thread):
+//!
+//! ```text
+//!   TCP conn threads ──(bounded mpsc)──> coordinator thread
+//!        ^                                 BatchEngine: slots + batched
+//!        └──(per-request channel)──────────  decode + KV policies
+//! ```
+
+pub mod batcher;
+pub mod request;
+
+pub use batcher::BatchEngine;
+pub use request::{GenParams, GenRequest, GenResponse};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Instant;
+
+use crate::config::{EngineConfig, ServerConfig};
+use crate::error::{Error, Result};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Client-side handle: submit requests, receive responses.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: SyncSender<GenRequest>,
+}
+
+impl CoordinatorHandle {
+    /// Submit a request; returns the receiver for its response.
+    /// Errors immediately when the queue is full (admission control).
+    pub fn submit(&self, params: GenParams) -> Result<std::sync::mpsc::Receiver<GenResponse>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = GenRequest {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            params,
+            arrived: Instant::now(),
+            respond: tx,
+        };
+        self.tx
+            .try_send(req)
+            .map_err(|e| match e {
+                std::sync::mpsc::TrySendError::Full(_) => {
+                    Error::Coordinator("queue full (admission control)".into())
+                }
+                std::sync::mpsc::TrySendError::Disconnected(_) => {
+                    Error::Coordinator("coordinator stopped".into())
+                }
+            })?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn generate_blocking(&self, params: GenParams) -> Result<GenResponse> {
+        let rx = self.submit(params)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))
+    }
+}
+
+/// Spawn the coordinator thread; returns (handle, join handle).
+///
+/// Dropping every `CoordinatorHandle` clone disconnects the queue and
+/// the thread exits after finishing in-flight sessions.
+pub fn spawn(
+    cfg: EngineConfig,
+    server: ServerConfig,
+) -> Result<(CoordinatorHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx): (SyncSender<GenRequest>, Receiver<GenRequest>) =
+        sync_channel(server.queue_cap);
+    // Engine construction happens inside the thread (PJRT client is not
+    // Send), so surface startup errors through a one-shot channel.
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Option<String>>();
+    let join = std::thread::Builder::new()
+        .name("asrkf-coordinator".into())
+        .spawn(move || {
+            let mut engine = match BatchEngine::new(cfg, server) {
+                Ok(e) => {
+                    let _ = ready_tx.send(None);
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Some(format!("{e}")));
+                    return;
+                }
+            };
+            log::info!(
+                "coordinator up: batch={} kv_capacity={}",
+                engine.batch_size(),
+                engine.kv_capacity()
+            );
+            engine.run(rx);
+            log::info!(
+                "coordinator down: {} completed, {} rejected, {} tokens, mean batch occupancy {:.2}",
+                engine.stats.requests_completed,
+                engine.stats.requests_rejected,
+                engine.stats.tokens_generated,
+                engine.stats.mean_batch_occupancy()
+            );
+            log::info!("{}", engine.ttft_hist.summary("ttft"));
+            log::info!("{}", engine.e2e_hist.summary("e2e"));
+            log::info!("{}", engine.step_hist.summary("step"));
+        })
+        .map_err(Error::Io)?;
+    match ready_rx.recv() {
+        Ok(None) => Ok((CoordinatorHandle { tx }, join)),
+        Ok(Some(err)) => Err(Error::Coordinator(err)),
+        Err(_) => Err(Error::Coordinator("coordinator thread died at startup".into())),
+    }
+}

@@ -1,0 +1,52 @@
+//! Request/response types flowing between the server frontend and the
+//! coordinator thread.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub prompt: String,
+    pub max_new: usize,
+    pub policy: String,
+    pub seed: u64,
+}
+
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub params: GenParams,
+    pub arrived: Instant,
+    pub respond: mpsc::Sender<GenResponse>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub text: String,
+    pub error: Option<String>,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub final_active_kv: usize,
+    pub compression: f64,
+    /// time to first token (includes queueing + prefill)
+    pub ttft: Duration,
+    /// total end-to-end latency
+    pub e2e: Duration,
+}
+
+impl GenResponse {
+    pub fn error(id: u64, msg: impl Into<String>) -> Self {
+        GenResponse {
+            id,
+            text: String::new(),
+            error: Some(msg.into()),
+            prompt_tokens: 0,
+            generated_tokens: 0,
+            final_active_kv: 0,
+            compression: 0.0,
+            ttft: Duration::ZERO,
+            e2e: Duration::ZERO,
+        }
+    }
+}

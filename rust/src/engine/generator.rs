@@ -1,0 +1,274 @@
+//! Single-sequence generation engine: prefill -> rolling decode loop
+//! with the freeze policy in charge of the active set each step.
+//! This is the engine behind Table 1, Figure 1, Tables 2-3 and the
+//! quickstart example; the batched serving engine lives in
+//! `crate::coordinator`.
+
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use crate::config::EngineConfig;
+use crate::engine::layout::{insert_prefill, scatter_row, KvGeom};
+use crate::engine::session::{Session, StepRecord};
+use crate::error::{Error, Result};
+use crate::kv::policy::KvPolicy;
+use crate::model::tokenizer;
+use crate::recovery::Action;
+use crate::runtime::{DecodeInputs, DecodeProgram, Runtime};
+
+/// Aggregate statistics for one generation run.
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    pub total_tokens: usize,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub final_active_kv: usize,
+    pub mean_active_kv: f64,
+    pub peak_active_kv: usize,
+    /// 1 - final_active / total (the paper's Table 1/3 metric)
+    pub compression: f64,
+    pub freezes: u64,
+    pub restores: u64,
+    pub recovery_interventions: usize,
+    /// interventions by ladder level [SR, WR, FR, RR]
+    pub recovery_by_level: [usize; 4],
+    pub wall: Duration,
+    pub upload: Duration,
+    pub execute: Duration,
+    pub download: Duration,
+    pub host: Duration,
+}
+
+/// Final disposition of one KV row (mechanism-level retrieval probe,
+/// Table 2): a row is *recoverable* iff its data is either in the
+/// active cache or stashed in the frozen store. Irreversible baselines
+/// leave `Lost` rows — exactly the failure the paper's soft freeze
+/// removes (§3.3 "no permanent information loss").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowState {
+    Active,
+    /// frozen, payload stashed — restorable on demand
+    Recoverable,
+    /// evicted, payload dropped — gone forever
+    Lost,
+}
+
+pub struct GenOutcome {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub trace: Vec<StepRecord>,
+    pub stats: GenStats,
+    /// per-position row disposition at end of generation (len entries)
+    pub row_states: Vec<RowState>,
+}
+
+pub struct Generator<'rt> {
+    rt: &'rt Runtime,
+    cfg: EngineConfig,
+}
+
+impl<'rt> Generator<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Self {
+        Generator { rt, cfg }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Generate `max_new` tokens from `prompt` under `policy`.
+    pub fn generate(
+        &self,
+        prompt: &str,
+        policy: Box<dyn KvPolicy>,
+        max_new: usize,
+    ) -> Result<GenOutcome> {
+        let t_start = Instant::now();
+        let model = self.rt.manifest.model.clone();
+        let prompt_tokens = tokenizer::encode(prompt);
+        if prompt_tokens.is_empty() {
+            return Err(Error::Engine("empty prompt".into()));
+        }
+
+        // --- bucket selection
+        let need = prompt_tokens.len() + max_new;
+        let decode: Rc<DecodeProgram> = self.rt.decode_for(1, need)?;
+        let s = decode.kv_len;
+        // per-step transfer budget: engine config, capped by the
+        // manifest's advisory value
+        let r = self.cfg.freeze.r_budget.min(decode.r_budget.max(1));
+        let geom = KvGeom::new(&model, 1, s);
+
+        // --- prefill
+        let prefill = self.rt.prefill_for(prompt_tokens.len())?;
+        let l = prefill.len;
+        let mut padded = prompt_tokens.clone();
+        padded.resize(l, b' ' as i32);
+        let pf = prefill.run(&padded, &[prompt_tokens.len() as i32])?;
+
+        let mut kv = vec![0.0f32; geom.floats()];
+        insert_prefill(&mut kv, &geom, 0, &pf.kv, l, prompt_tokens.len());
+
+        let mut session = Session::new(
+            0,
+            prompt_tokens.clone(),
+            max_new,
+            policy,
+            &self.cfg,
+            s,
+            model.kv_row_floats,
+        );
+        session.seed_prefill(pf.logits_last, &pf.scores_last, prompt_tokens.len());
+
+        let mut upload = pf.timing.upload;
+        let mut execute = pf.timing.execute;
+        let mut download = pf.timing.download;
+        let mut host = Duration::ZERO;
+
+        // --- rolling decode loop (paper Algorithm 1)
+        while !session.is_done() {
+            let t_host = Instant::now();
+            let token = session.next_token();
+            // freeze/restore data movement on the host-owned cache
+            let plan = session.apply_plan(&mut kv, &geom, 0, r);
+            let host_pre = t_host.elapsed();
+
+            let inputs = DecodeInputs {
+                tokens: &[token],
+                kv: &kv,
+                mask: &session.mask,
+                pos: &[session.len as i32],
+            };
+            let out = decode.run(&inputs)?;
+
+            let t_host2 = Instant::now();
+            // the graph is pure: rust writes the new KV row itself
+            crate::engine::layout::write_new_row(
+                &mut kv, &geom, 0, session.len, &out.k_new, &out.v_new,
+            );
+            let action =
+                session.absorb(token, out.logits, &out.scores, &plan, out.timing, host_pre);
+            let host_post = t_host2.elapsed();
+
+            upload += out.timing.upload;
+            execute += out.timing.execute;
+            download += out.timing.download;
+            host += host_pre + host_post;
+
+            if let Action::Rewalk { depth } = action {
+                self.apply_rewalk(&mut session, &mut kv, &geom, &decode, depth)?;
+            }
+        }
+
+        let trace = session.trace.clone();
+        let (mut sum_active, mut peak) = (0u64, 0usize);
+        for t in &trace {
+            sum_active += t.active as u64;
+            peak = peak.max(t.active);
+        }
+        let total = session.len;
+        let final_active = session.active_kv();
+        let stats = GenStats {
+            total_tokens: total,
+            prompt_tokens: session.prompt_len,
+            generated_tokens: session.generated(),
+            final_active_kv: final_active,
+            mean_active_kv: if trace.is_empty() {
+                total as f64
+            } else {
+                sum_active as f64 / trace.len() as f64
+            },
+            peak_active_kv: peak,
+            compression: 1.0 - final_active as f64 / total.max(1) as f64,
+            freezes: session.store.total_stashed + session.store.total_dropped,
+            restores: session.store.total_restored,
+            recovery_interventions: session
+                .ladder
+                .as_ref()
+                .map(|l| l.interventions.len())
+                .unwrap_or(0),
+            recovery_by_level: session
+                .ladder
+                .as_ref()
+                .map(|l| {
+                    let mut by = [0usize; 4];
+                    for (_, a) in &l.interventions {
+                        match a {
+                            Action::SoftReset => by[0] += 1,
+                            Action::WindowReset { .. } => by[1] += 1,
+                            Action::FullReset => by[2] += 1,
+                            Action::Rewalk { .. } => by[3] += 1,
+                            Action::None => {}
+                        }
+                    }
+                    by
+                })
+                .unwrap_or_default(),
+            wall: t_start.elapsed(),
+            upload,
+            execute,
+            download,
+            host,
+        };
+        let row_states = (0..session.len)
+            .map(|pos| {
+                if !session.policy.is_frozen(pos) {
+                    RowState::Active
+                } else if session.store.contains(pos) {
+                    RowState::Recoverable
+                } else {
+                    RowState::Lost
+                }
+            })
+            .collect();
+        Ok(GenOutcome {
+            text: session.generated_text(),
+            tokens: session.tokens.clone(),
+            trace,
+            stats,
+            row_states,
+        })
+    }
+
+    /// RR recovery: merge every frozen payload back into the cache
+    /// (CPU-storage -> active), rewind `depth` generated tokens, and
+    /// recompute the logits at the new frontier by re-running the last
+    /// surviving token through the decode graph.
+    fn apply_rewalk(
+        &self,
+        session: &mut Session,
+        kv: &mut [f32],
+        geom: &KvGeom,
+        decode: &DecodeProgram,
+        depth: usize,
+    ) -> Result<()> {
+        log::warn!(
+            "RR recovery: rewinding {depth} tokens at step {} (len {})",
+            session.step,
+            session.len
+        );
+        for (pos, row) in session.store.drain_all() {
+            scatter_row(kv, geom, 0, pos, &row);
+        }
+        session.rewind(depth);
+
+        // recompute frontier logits: re-run the last surviving token at
+        // its own position. The pure decode graph folds the "current"
+        // token separately from the cache, so its cache row must be
+        // masked out for this call (it is already written).
+        let last = *session.tokens.last().expect("rewind kept >= 1 token");
+        let mut mask = session.mask.clone();
+        mask[session.len - 1] = 0.0;
+        let out = decode.run(&DecodeInputs {
+            tokens: &[last],
+            kv,
+            mask: &mask,
+            pos: &[(session.len - 1) as i32],
+        })?;
+        crate::engine::layout::write_new_row(
+            kv, geom, 0, session.len - 1, &out.k_new, &out.v_new,
+        );
+        session.last_logits = out.logits;
+        Ok(())
+    }
+}

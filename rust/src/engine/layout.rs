@@ -1,0 +1,193 @@
+//! KV buffer layout helpers.
+//!
+//! Decode cache layout (matches python `decode_apply`):
+//!     kv [nl, 2, B, S, H, D]  (f32, row-major)
+//! Prefill output layout:
+//!     kv [nl, 2, B, L, H, D]
+//! Row bundle (frozen payloads, matches `frozen_rows`):
+//!     [nl, 2, H, D] per token.
+
+use crate::runtime::ModelSpec;
+
+/// Geometry of one decode cache buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct KvGeom {
+    pub nl: usize,
+    pub b: usize,
+    pub s: usize,
+    pub hd: usize, // H * D floats per row per plane
+}
+
+impl KvGeom {
+    pub fn new(m: &ModelSpec, b: usize, s: usize) -> Self {
+        KvGeom { nl: m.n_layers, b, s, hd: m.n_heads * m.d_head }
+    }
+
+    pub fn planes(&self) -> usize {
+        self.nl * 2
+    }
+
+    pub fn floats(&self) -> usize {
+        self.planes() * self.b * self.s * self.hd
+    }
+
+    pub fn row_floats(&self) -> usize {
+        self.planes() * self.hd
+    }
+
+    /// Offset of (plane p, slot b, position pos) in the flat buffer.
+    #[inline]
+    pub fn offset(&self, p: usize, slot: usize, pos: usize) -> usize {
+        ((p * self.b + slot) * self.s + pos) * self.hd
+    }
+}
+
+/// Copy a prefill KV ([nl,2,1,L,H,D], `valid` rows used) into slot
+/// `slot` of a decode cache buffer ([nl,2,B,S,H,D]).
+pub fn insert_prefill(
+    dst: &mut [f32],
+    geom: &KvGeom,
+    slot: usize,
+    prefill_kv: &[f32],
+    l_bucket: usize,
+    valid: usize,
+) {
+    debug_assert_eq!(dst.len(), geom.floats());
+    debug_assert_eq!(prefill_kv.len(), geom.planes() * l_bucket * geom.hd);
+    debug_assert!(valid <= l_bucket && valid <= geom.s);
+    for p in 0..geom.planes() {
+        let src = &prefill_kv[p * l_bucket * geom.hd..][..valid * geom.hd];
+        let d0 = geom.offset(p, slot, 0);
+        dst[d0..d0 + valid * geom.hd].copy_from_slice(src);
+    }
+}
+
+/// Scatter a frozen row bundle ([nl,2,H,D]) back into the cache at
+/// `pos` (host-side emergency restore — the RR recovery path).
+pub fn scatter_row(dst: &mut [f32], geom: &KvGeom, slot: usize, pos: usize, row: &[f32]) {
+    debug_assert_eq!(row.len(), geom.row_floats());
+    for p in 0..geom.planes() {
+        let d0 = geom.offset(p, slot, pos);
+        dst[d0..d0 + geom.hd].copy_from_slice(&row[p * geom.hd..][..geom.hd]);
+    }
+}
+
+/// Gather a row bundle out of the cache (tests / diagnostics).
+pub fn gather_row(src: &[f32], geom: &KvGeom, slot: usize, pos: usize) -> Vec<f32> {
+    let mut row = vec![0.0f32; geom.row_floats()];
+    for p in 0..geom.planes() {
+        let s0 = geom.offset(p, slot, pos);
+        row[p * geom.hd..][..geom.hd].copy_from_slice(&src[s0..s0 + geom.hd]);
+    }
+    row
+}
+
+/// Zero a row in the cache (the "device" side of a freeze: the row's
+/// data leaves the active cache entirely, recoverable only from the
+/// host-side FrozenStore).
+pub fn zero_row(dst: &mut [f32], geom: &KvGeom, slot: usize, pos: usize) {
+    for p in 0..geom.planes() {
+        let d0 = geom.offset(p, slot, pos);
+        dst[d0..d0 + geom.hd].fill(0.0);
+    }
+}
+
+/// Write the decode step's new KV row into the cache at `pos`:
+/// `k_new`/`v_new` are the graph outputs, layout `[nl, B, H, D]`.
+pub fn write_new_row(
+    dst: &mut [f32],
+    geom: &KvGeom,
+    slot: usize,
+    pos: usize,
+    k_new: &[f32],
+    v_new: &[f32],
+) {
+    debug_assert_eq!(k_new.len(), geom.nl * geom.b * geom.hd);
+    debug_assert_eq!(v_new.len(), k_new.len());
+    for l in 0..geom.nl {
+        let src = (l * geom.b + slot) * geom.hd;
+        let dk = geom.offset(l * 2, slot, pos);
+        dst[dk..dk + geom.hd].copy_from_slice(&k_new[src..src + geom.hd]);
+        let dv = geom.offset(l * 2 + 1, slot, pos);
+        dst[dv..dv + geom.hd].copy_from_slice(&v_new[src..src + geom.hd]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelSpec;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            vocab: 256,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 16,
+            max_len: 64,
+            kv_row_floats: 2 * 2 * 2 * 4,
+        }
+    }
+
+    #[test]
+    fn geometry() {
+        let g = KvGeom::new(&spec(), 2, 16);
+        assert_eq!(g.planes(), 4);
+        assert_eq!(g.floats(), 4 * 2 * 16 * 8);
+        assert_eq!(g.row_floats(), 32);
+        assert_eq!(g.offset(0, 0, 0), 0);
+        assert_eq!(g.offset(0, 0, 1), 8);
+        assert_eq!(g.offset(0, 1, 0), 16 * 8);
+        assert_eq!(g.offset(1, 0, 0), 2 * 16 * 8);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let g = KvGeom::new(&spec(), 2, 16);
+        let mut kv = vec![0.0f32; g.floats()];
+        let row: Vec<f32> = (0..g.row_floats()).map(|i| i as f32 + 1.0).collect();
+        scatter_row(&mut kv, &g, 1, 5, &row);
+        assert_eq!(gather_row(&kv, &g, 1, 5), row);
+        // other slot/pos untouched
+        assert!(gather_row(&kv, &g, 0, 5).iter().all(|&v| v == 0.0));
+        assert!(gather_row(&kv, &g, 1, 4).iter().all(|&v| v == 0.0));
+        zero_row(&mut kv, &g, 1, 5);
+        assert!(kv.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn write_new_row_hits_k_and_v_planes() {
+        let g = KvGeom::new(&spec(), 2, 16);
+        let mut kv = vec![0.0f32; g.floats()];
+        // k_new/v_new: [nl, B, H*D]
+        let k_new: Vec<f32> = (0..g.nl * g.b * g.hd).map(|i| i as f32 + 1.0).collect();
+        let v_new: Vec<f32> = (0..g.nl * g.b * g.hd).map(|i| -(i as f32) - 1.0).collect();
+        write_new_row(&mut kv, &g, 1, 7, &k_new, &v_new);
+        let row = gather_row(&kv, &g, 1, 7); // [nl,2,H,D] flattened
+        for l in 0..g.nl {
+            let src = (l * g.b + 1) * g.hd;
+            assert_eq!(&row[(l * 2) * g.hd..][..g.hd], &k_new[src..src + g.hd]);
+            assert_eq!(&row[(l * 2 + 1) * g.hd..][..g.hd], &v_new[src..src + g.hd]);
+        }
+        // slot 0 untouched
+        assert!(gather_row(&kv, &g, 0, 7).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prefill_insertion_lands_in_slot() {
+        let g = KvGeom::new(&spec(), 2, 16);
+        let l_bucket = 8;
+        let valid = 5;
+        let prefill: Vec<f32> = (0..g.planes() * l_bucket * g.hd).map(|i| i as f32).collect();
+        let mut kv = vec![0.0f32; g.floats()];
+        insert_prefill(&mut kv, &g, 1, &prefill, l_bucket, valid);
+        // row 0 of plane 0, slot 1 == prefill row 0 of plane 0
+        assert_eq!(gather_row(&kv, &g, 1, 0)[..g.hd], prefill[..g.hd]);
+        // beyond valid is zero
+        assert!(gather_row(&kv, &g, 1, valid).iter().all(|&v| v == 0.0));
+        // slot 0 untouched
+        assert!(gather_row(&kv, &g, 0, 0).iter().all(|&v| v == 0.0));
+    }
+}

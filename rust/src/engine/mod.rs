@@ -1,0 +1,11 @@
+//! Generation engines: KV layout helpers, per-sequence session state,
+//! and the single-sequence generator. The batched serving path is in
+//! `crate::coordinator`.
+
+pub mod generator;
+pub mod layout;
+pub mod session;
+
+pub use generator::{GenOutcome, GenStats, Generator};
+pub use layout::KvGeom;
+pub use session::{Session, StepRecord};

@@ -1,0 +1,248 @@
+//! Per-sequence generation state: tokens, activity mask, frozen-row
+//! store, policy, sampler, entropy monitor and step trace. Shared by
+//! the single-sequence generator and the batched coordinator — the KV
+//! *data* itself is owned by whichever engine drives the session.
+
+use std::time::Duration;
+
+use crate::config::EngineConfig;
+use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
+use crate::kv::FrozenStore;
+use crate::model::logits::{logits_entropy, top1_prob};
+use crate::model::sampling::Sampler;
+use crate::recovery::{Action, EntropyMonitor, RecoveryLadder};
+use crate::runtime::CallTiming;
+
+/// One decode step's trace record (drives Figure 1 and §Perf).
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    /// tokens in the sequence after this step
+    pub total: usize,
+    /// active KV rows after this step
+    pub active: usize,
+    pub frozen: usize,
+    pub entropy: f32,
+    pub froze: usize,
+    pub restored: usize,
+    pub upload: Duration,
+    pub execute: Duration,
+    pub download: Duration,
+    /// rust-side bookkeeping (plan + stash + mask updates)
+    pub host: Duration,
+    pub recovery_level: u8,
+}
+
+
+pub struct Session {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub policy: Box<dyn KvPolicy>,
+    pub store: FrozenStore,
+    /// activity mask [S] for this session's decode bucket
+    pub mask: Vec<f32>,
+    /// rows written to the cache so far (== next write position)
+    pub len: usize,
+    pub sampler: Sampler,
+    pub last_logits: Vec<f32>,
+    pub step: u64,
+    pub trace: Vec<StepRecord>,
+    pub monitor: Option<EntropyMonitor>,
+    pub ladder: Option<RecoveryLadder>,
+    /// sampler stream positions indexed by generated-token count (RR rewind)
+    draws_at: Vec<u64>,
+    s_capacity: usize,
+}
+
+impl Session {
+    pub fn new(
+        id: u64,
+        prompt_tokens: Vec<i32>,
+        max_new: usize,
+        policy: Box<dyn KvPolicy>,
+        cfg: &EngineConfig,
+        s_capacity: usize,
+        row_floats: usize,
+    ) -> Self {
+        let (monitor, ladder) = if cfg.recovery.enabled {
+            (
+                Some(EntropyMonitor::new(cfg.recovery.clone())),
+                Some(RecoveryLadder::new(cfg.recovery.clone())),
+            )
+        } else {
+            (None, None)
+        };
+        Session {
+            id,
+            prompt_len: prompt_tokens.len(),
+            tokens: prompt_tokens,
+            max_new,
+            policy,
+            store: FrozenStore::new(row_floats),
+            mask: vec![0.0; s_capacity],
+            len: 0,
+            sampler: Sampler::new(cfg.sampling.clone()),
+            last_logits: Vec::new(),
+            step: 0,
+            trace: Vec::new(),
+            monitor,
+            ladder,
+            draws_at: Vec::new(),
+            s_capacity,
+        }
+    }
+
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated() >= self.max_new || self.len >= self.s_capacity
+    }
+
+    pub fn generated_text(&self) -> String {
+        crate::model::tokenizer::decode(&self.tokens[self.prompt_len..])
+    }
+
+    /// Record prefill results: `valid` rows live, logits for sampling.
+    pub fn seed_prefill(&mut self, logits_last: Vec<f32>, scores_last: &[f32], valid: usize) {
+        for m in self.mask.iter_mut().take(valid) {
+            *m = 1.0;
+        }
+        self.len = valid;
+        self.policy.on_prefill(&scores_last[..valid], valid);
+        self.last_logits = logits_last;
+    }
+
+    /// Sample the next token (records the sampler position for RR).
+    pub fn next_token(&mut self) -> i32 {
+        self.draws_at.push(self.sampler.checkpoint_draws());
+        self.sampler.sample(&self.last_logits) as i32
+    }
+
+    /// Ask the policy for this step's plan and apply the data movement
+    /// to the (engine-owned) KV cache: restores scatter stashed rows
+    /// back, freezes gather+zero rows into the store. Mask is updated
+    /// (restores -> 1, freezes -> 0). `slot` selects the batch lane.
+    pub fn apply_plan(
+        &mut self,
+        kv: &mut [f32],
+        geom: &crate::engine::layout::KvGeom,
+        slot: usize,
+        r_budget: usize,
+    ) -> Plan {
+        use crate::engine::layout::{gather_row, scatter_row, zero_row};
+        let plan = self.policy.plan(self.step, self.len, r_budget);
+        for &pos in &plan.restore {
+            let payload = self
+                .store
+                .take(pos)
+                .unwrap_or_else(|| panic!("restore of pos {pos} with no stashed payload"));
+            scatter_row(kv, geom, slot, pos, &payload);
+            self.mask[pos] = 1.0;
+        }
+        for &pos in &plan.freeze {
+            if plan.drop_payload {
+                self.store.drop_row(pos); // irreversible baselines: data is gone
+            } else {
+                self.store.stash(pos, gather_row(kv, geom, slot, pos));
+            }
+            zero_row(kv, geom, slot, pos);
+            self.mask[pos] = 0.0;
+        }
+        plan
+    }
+
+    /// Absorb one decode step's outputs (after the engine wrote the new
+    /// KV row). Returns a recovery action for the engine to apply (RR
+    /// needs KV access, so it propagates up).
+    pub fn absorb(
+        &mut self,
+        token: i32,
+        logits: Vec<f32>,
+        scores: &[f32],
+        plan: &Plan,
+        timing: CallTiming,
+        host: Duration,
+    ) -> Action {
+        self.mask[self.len] = 1.0;
+        self.len += 1;
+        self.tokens.push(token);
+        self.step += 1;
+
+        self.policy.observe(self.step, &scores[..self.len], self.len);
+
+        let entropy = logits_entropy(&logits);
+        let top1 = top1_prob(&logits);
+        self.last_logits = logits;
+
+        let mut action = Action::None;
+        if let (Some(mon), Some(ladder)) = (self.monitor.as_mut(), self.ladder.as_mut()) {
+            let signal = mon.observe(entropy, top1);
+            action = ladder.step(self.step, signal);
+            match action {
+                Action::SoftReset => {
+                    self.policy.request_unfreeze(UnfreezeScope::Soft);
+                }
+                Action::WindowReset { horizon } => {
+                    self.policy
+                        .request_unfreeze(UnfreezeScope::Window { n: horizon, now: self.step });
+                }
+                Action::FullReset => {
+                    self.policy.request_unfreeze(UnfreezeScope::Full);
+                }
+                Action::Rewalk { .. } | Action::None => {}
+            }
+            if action != Action::None && !matches!(action, Action::Rewalk { .. }) {
+                mon.reset();
+            }
+        }
+
+        self.trace.push(StepRecord {
+            step: self.step,
+            total: self.len,
+            active: self.policy.active_count(),
+            frozen: self.policy.frozen_count(),
+            entropy,
+            froze: plan.freeze.len(),
+            restored: plan.restore.len(),
+            upload: timing.upload,
+            execute: timing.execute,
+            download: timing.download,
+            host,
+            recovery_level: self.ladder.as_ref().map(|l| l.level()).unwrap_or(0),
+        });
+        action
+    }
+
+    /// Rewind bookkeeping for RR: truncate `back` generated tokens,
+    /// reactivate every position < new len, rewind the sampler, reset
+    /// the monitor. The engine has already merged frozen payloads back
+    /// into the KV buffer (store is drained).
+    pub fn rewind(&mut self, back: usize) {
+        assert!(self.store.is_empty(), "rewind before draining the frozen store");
+        let back = back.min(self.generated().saturating_sub(1));
+        let new_gen = self.generated() - back;
+        self.tokens.truncate(self.prompt_len + new_gen);
+        let new_len = self.len - back;
+        for p in 0..self.s_capacity {
+            self.mask[p] = if p < new_len { 1.0 } else { 0.0 };
+        }
+        self.len = new_len;
+        self.policy.force_all_active();
+        if let Some(mon) = self.monitor.as_mut() {
+            mon.reset();
+        }
+        // rewind the sampler stream to where token `new_gen` was drawn
+        if let Some(&draws) = self.draws_at.get(new_gen) {
+            self.sampler.rewind_to_draws(draws);
+            self.draws_at.truncate(new_gen);
+        }
+    }
+
+    pub fn active_kv(&self) -> usize {
+        self.policy.active_count()
+    }
+}

@@ -1,0 +1,35 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("engine: {0}")]
+    Engine(String),
+
+    #[error("server: {0}")]
+    Server(String),
+
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Engine(s)
+    }
+}

@@ -1,0 +1,120 @@
+//! Sublinear freeze scheduling (paper §3.4, Eq. 3):
+//! `d_j = floor(sqrt(c_j) / k)`, where `c_j` counts low-importance detections for token j within the
+//! history window W, and `k` is the softness parameter (default 2.0).
+
+/// Freeze duration for a detection count `c` and softness `k`.
+///
+/// Paper properties this must satisfy (§3.4):
+///   * gentle early penalty: c=1 -> d=0 (no freeze)
+///   * gradual escalation:   c=4 -> 1, c=9 -> 1, c=16 -> 2 (k=2)
+///   * bounded growth:       d grows as O(sqrt(c))
+pub fn freeze_duration(c: u32, k: f32) -> u32 {
+    debug_assert!(k > 0.0, "softness k must be positive");
+    ((c as f32).sqrt() / k).floor() as u32
+}
+
+/// Detection counter over a rolling history window of W steps.
+///
+/// Stores the step numbers of the most recent detections and prunes
+/// those older than `step - w` — an exact implementation of "count
+/// within a history window W" rather than a decayed approximation.
+#[derive(Debug, Clone, Default)]
+pub struct DetectionWindow {
+    steps: std::collections::VecDeque<u64>,
+}
+
+impl DetectionWindow {
+    /// Record a detection at `step`, prune to window `w`, return c.
+    pub fn record(&mut self, step: u64, w: u64) -> u32 {
+        self.steps.push_back(step);
+        self.prune(step, w);
+        self.steps.len() as u32
+    }
+
+    /// Count without recording (pruned to window at `step`).
+    pub fn count(&mut self, step: u64, w: u64) -> u32 {
+        self.prune(step, w);
+        self.steps.len() as u32
+    }
+
+    pub fn clear(&mut self) {
+        self.steps.clear();
+    }
+
+    fn prune(&mut self, step: u64, w: u64) {
+        while let Some(&front) = self.steps.front() {
+            if front + w <= step {
+                self.steps.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_examples_k2() {
+        // §3.4: c=1 -> 0, c=4 -> 1, c=9 -> 1, c=16 -> 2
+        assert_eq!(freeze_duration(1, 2.0), 0);
+        assert_eq!(freeze_duration(4, 2.0), 1);
+        assert_eq!(freeze_duration(9, 2.0), 1);
+        assert_eq!(freeze_duration(16, 2.0), 2);
+    }
+
+    #[test]
+    fn first_detection_never_freezes() {
+        for k in [1.5f32, 2.0, 3.0] {
+            assert_eq!(freeze_duration(1, k), 0, "k={k}");
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing_in_c() {
+        let mut prev = 0;
+        for c in 0..1000 {
+            let d = freeze_duration(c, 2.0);
+            assert!(d >= prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn sublinear_growth() {
+        // doubling c must far-less-than-double d for large c
+        let d100 = freeze_duration(100, 2.0);
+        let d400 = freeze_duration(400, 2.0);
+        assert_eq!(d100, 5);
+        assert_eq!(d400, 10); // sqrt scaling: 4x count -> 2x duration
+    }
+
+    #[test]
+    fn softer_k_means_shorter_freezes() {
+        for c in [4u32, 16, 64, 256] {
+            assert!(freeze_duration(c, 3.0) <= freeze_duration(c, 2.0));
+            assert!(freeze_duration(c, 2.0) <= freeze_duration(c, 1.0));
+        }
+    }
+
+    #[test]
+    fn window_prunes_old_detections() {
+        let mut w = DetectionWindow::default();
+        assert_eq!(w.record(0, 10), 1);
+        assert_eq!(w.record(5, 10), 2);
+        // step 10: detection at 0 has aged out (0 + 10 <= 10)
+        assert_eq!(w.record(10, 10), 2);
+        // step 30: everything aged out except the new one
+        assert_eq!(w.record(30, 10), 1);
+    }
+
+    #[test]
+    fn count_does_not_record() {
+        let mut w = DetectionWindow::default();
+        w.record(1, 100);
+        assert_eq!(w.count(2, 100), 1);
+        assert_eq!(w.count(3, 100), 1);
+    }
+}

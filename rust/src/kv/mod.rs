@@ -1,0 +1,17 @@
+//! KV-cache management — the paper's core contribution.
+//!
+//! * `state`     — per-token Active/Frozen state machine
+//! * `freeze`    — sublinear freeze scheduling (Eq. 3) + detection windows
+//! * `relevance` — Eq. 2 thresholding and candidate selection
+//! * `policy`    — the `KvPolicy` trait and the ASR-KF-EGR policy
+//! * `store`     — host-side frozen-row storage (the paper's "CPU storage")
+
+pub mod freeze;
+pub mod policy;
+pub mod relevance;
+pub mod state;
+pub mod store;
+
+pub use policy::{AsrKfPolicy, KvPolicy, Plan, UnfreezeScope};
+pub use state::{TokenMeta, TokenState, TokenTable};
+pub use store::FrozenStore;

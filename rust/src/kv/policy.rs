@@ -1,0 +1,366 @@
+//! The `KvPolicy` trait — the interface between the engine's decode
+//! loop and a KV-cache management strategy — plus the paper's
+//! ASR-KF-EGR policy. Baselines (Full KV, H2O, StreamingLLM) implement
+//! the same trait in `crate::baselines` so every bench drives each
+//! method through the identical engine.
+
+use crate::config::FreezeConfig;
+use crate::kv::freeze::freeze_duration;
+use crate::kv::relevance::detect_low_importance;
+use crate::kv::state::{TokenState, TokenTable};
+
+/// What the engine must do before the next decode step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Plan {
+    /// Rows to move active -> frozen storage (gathered + zeroed by the
+    /// graph; payload stashed by the engine).
+    pub freeze: Vec<usize>,
+    /// Rows to move frozen storage -> active (scattered by the graph).
+    pub restore: Vec<usize>,
+    /// If true, frozen payloads are DISCARDED (irreversible eviction —
+    /// baselines only; ASR-KF-EGR always keeps payloads).
+    pub drop_payload: bool,
+}
+
+/// Scope of a recovery-triggered unfreeze (paper §3.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnfreezeScope {
+    /// SR: tokens with remaining duration > 1.
+    Soft,
+    /// WR: tokens frozen within the last `n` steps.
+    Window { n: u64, now: u64 },
+    /// FR: every frozen token; also clears all detection counters.
+    Full,
+}
+
+pub trait KvPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Called once after prefill with the last query's Eq.2 relevance
+    /// scores over the prompt (`scores[0..len]`).
+    fn on_prefill(&mut self, scores: &[f32], len: usize);
+
+    /// Called before decode step `step`; `len` tokens exist so far.
+    /// Returned lists must each respect the engine's r_budget.
+    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan;
+
+    /// Called after the decode step with fresh Eq.2 scores
+    /// (`scores[pos]` valid for pos < len; frozen rows score 0).
+    fn observe(&mut self, step: u64, scores: &[f32], len: usize);
+
+    /// Recovery request: schedule unfreezes (applied by later plans).
+    /// Returns the number of tokens scheduled.
+    fn request_unfreeze(&mut self, scope: UnfreezeScope) -> usize;
+
+    /// Force-reset after an engine-level emergency restore (RR): all
+    /// tokens active, counters cleared.
+    fn force_all_active(&mut self);
+
+    fn active_count(&self) -> usize;
+    fn frozen_count(&self) -> usize {
+        self.frozen_positions().len()
+    }
+    fn frozen_positions(&self) -> Vec<usize>;
+    fn is_frozen(&self, pos: usize) -> bool;
+}
+
+// ---------------------------------------------------------------------------
+// ASR-KF-EGR (the paper's Algorithm 1)
+
+pub struct AsrKfPolicy {
+    cfg: FreezeConfig,
+    pub table: TokenTable,
+    /// Freeze candidates queued by `observe` (score-ascending), applied
+    /// by the next `plan` within the transfer budget.
+    pending_freeze: Vec<(usize, u32, f32)>, // (pos, duration, score)
+    /// Restores whose timers expired but exceeded the budget.
+    pending_restore: std::collections::VecDeque<usize>,
+    len: usize,
+    pub stat_freezes: u64,
+    pub stat_restores: u64,
+}
+
+impl AsrKfPolicy {
+    pub fn new(cfg: FreezeConfig) -> Self {
+        AsrKfPolicy {
+            cfg,
+            table: TokenTable::default(),
+            pending_freeze: Vec::new(),
+            pending_restore: std::collections::VecDeque::new(),
+            len: 0,
+            stat_freezes: 0,
+            stat_restores: 0,
+        }
+    }
+
+    fn detect(&mut self, step: u64, scores: &[f32], len: usize) {
+        self.table.grow_to(len);
+        self.len = len;
+        let table = &self.table;
+        let detections = detect_low_importance(&self.cfg, scores, len, |p| table.is_active(p));
+        for (pos, score) in detections {
+            let c = self.table.meta[pos].window.record(step, self.cfg.history_w as u64);
+            let d = freeze_duration(c, self.cfg.softness_k);
+            if d > 0 && !self.pending_freeze.iter().any(|&(p, _, _)| p == pos) {
+                self.pending_freeze.push((pos, d, score));
+            }
+        }
+        // freeze least-relevant first when the budget binds
+        self.pending_freeze
+            .sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal));
+    }
+}
+
+impl KvPolicy for AsrKfPolicy {
+    fn name(&self) -> &'static str {
+        "asrkf"
+    }
+
+    fn on_prefill(&mut self, scores: &[f32], len: usize) {
+        // Seed detection counters from the prompt's relevance profile;
+        // freezing itself only begins during decode.
+        self.detect(0, scores, len);
+    }
+
+    fn plan(&mut self, _step: u64, len: usize, r_budget: usize) -> Plan {
+        self.table.grow_to(len);
+
+        // Rolling re-evaluation (§3.5): decrement timers, queue expired.
+        for pos in self.table.tick_timers() {
+            self.pending_restore.push_back(pos);
+        }
+
+        // Budget-capped restores (oldest first).
+        let mut restore = Vec::new();
+        while restore.len() < r_budget {
+            match self.pending_restore.pop_front() {
+                Some(pos) if self.table.is_frozen(pos) => {
+                    self.table.unfreeze(pos);
+                    restore.push(pos);
+                }
+                Some(_) => continue, // already active (e.g. recovery raced)
+                None => break,
+            }
+        }
+        self.stat_restores += restore.len() as u64;
+
+        // Budget-capped freezes (lowest score first).
+        let window_start = len.saturating_sub(self.cfg.window_k);
+        let mut freeze = Vec::new();
+        let mut rest = Vec::new();
+        for (pos, d, score) in self.pending_freeze.drain(..) {
+            let eligible = self.table.is_active(pos)
+                && pos < window_start
+                && pos >= self.cfg.n_sink
+                && !restore.contains(&pos);
+            if !eligible {
+                continue; // stale candidate — drop
+            }
+            if freeze.len() < r_budget {
+                self.table.freeze(pos, d, _step);
+                freeze.push(pos);
+            } else {
+                rest.push((pos, d, score));
+            }
+        }
+        self.pending_freeze = rest;
+        self.stat_freezes += freeze.len() as u64;
+
+        Plan { freeze, restore, drop_payload: false }
+    }
+
+    fn observe(&mut self, step: u64, scores: &[f32], len: usize) {
+        self.detect(step, scores, len);
+    }
+
+    fn request_unfreeze(&mut self, scope: UnfreezeScope) -> usize {
+        let mut n = 0;
+        for pos in 0..self.table.len() {
+            let m = &mut self.table.meta[pos];
+            let hit = match (m.state, scope) {
+                (TokenState::Frozen { remaining }, UnfreezeScope::Soft) => remaining > 1,
+                (TokenState::Frozen { .. }, UnfreezeScope::Window { n, now }) => {
+                    m.frozen_at + n >= now
+                }
+                (TokenState::Frozen { .. }, UnfreezeScope::Full) => true,
+                _ => false,
+            };
+            if hit {
+                // expire the timer; the normal tick/restore path (with
+                // its transfer budget) brings the row back
+                m.state = TokenState::Frozen { remaining: 1 };
+                n += 1;
+            }
+            if matches!(scope, UnfreezeScope::Full) {
+                m.window.clear();
+            }
+        }
+        if matches!(scope, UnfreezeScope::Full) {
+            self.pending_freeze.clear();
+        }
+        n
+    }
+
+    fn force_all_active(&mut self) {
+        for m in &mut self.table.meta {
+            m.state = TokenState::Active;
+            m.window.clear();
+        }
+        self.pending_freeze.clear();
+        self.pending_restore.clear();
+    }
+
+    fn active_count(&self) -> usize {
+        // tokens beyond the table (not yet observed) are active
+        self.table.active_count() + self.len.saturating_sub(self.table.len())
+    }
+
+    fn frozen_positions(&self) -> Vec<usize> {
+        self.table.frozen_positions()
+    }
+
+    fn is_frozen(&self, pos: usize) -> bool {
+        self.table.is_frozen(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FreezeConfig {
+        FreezeConfig {
+            window_k: 4,
+            n_sink: 1,
+            tau: 0.5,
+            softness_k: 2.0,
+            history_w: 64,
+            r_budget: 4,
+            relative_tau: false,
+        }
+    }
+
+    /// Feed low scores for `pos` until it freezes; returns steps taken.
+    fn freeze_pos_by_detections(p: &mut AsrKfPolicy, pos: usize, len: usize) -> u64 {
+        for step in 1..100 {
+            let mut scores = vec![1.0f32; len];
+            scores[pos] = 0.0;
+            p.observe(step, &scores, len);
+            let plan = p.plan(step + 1, len, 4);
+            if plan.freeze.contains(&pos) {
+                return step;
+            }
+        }
+        panic!("pos {pos} never froze");
+    }
+
+    #[test]
+    fn needs_four_detections_to_freeze() {
+        // d = floor(sqrt(c)/2) > 0 requires c >= 4
+        let mut p = AsrKfPolicy::new(cfg());
+        let steps = freeze_pos_by_detections(&mut p, 2, 12);
+        assert_eq!(steps, 4);
+    }
+
+    #[test]
+    fn frozen_token_restores_after_duration() {
+        let mut p = AsrKfPolicy::new(cfg());
+        freeze_pos_by_detections(&mut p, 2, 12);
+        assert!(p.is_frozen(2));
+        // c=4 -> d=1: one tick later the timer expires and it restores
+        let plan = p.plan(50, 12, 4);
+        assert!(plan.restore.contains(&2));
+        assert!(!p.is_frozen(2));
+    }
+
+    #[test]
+    fn sink_and_window_tokens_never_freeze() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 12;
+        let mut total_freezes = 0usize;
+        for step in 1..40 {
+            let scores = vec![0.0f32; len]; // everything looks irrelevant
+            p.observe(step, &scores, len);
+            let plan = p.plan(step, len, 16);
+            total_freezes += plan.freeze.len();
+            assert!(!plan.freeze.contains(&0), "sink frozen at step {step}");
+            for w in len - 4..len {
+                assert!(!plan.freeze.contains(&w), "window pos {w} frozen");
+            }
+        }
+        // but middle tokens did freeze (and may oscillate back)
+        assert!(total_freezes > 0);
+    }
+
+    #[test]
+    fn budget_caps_freeze_rate() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 40;
+        for step in 1..=4 {
+            p.observe(step, &vec![0.0f32; len], len);
+        }
+        let plan = p.plan(5, len, 4);
+        assert_eq!(plan.freeze.len(), 4); // 35 candidates, budget 4
+        let plan = p.plan(6, len, 4);
+        assert_eq!(plan.freeze.len(), 4); // queue drains over steps
+    }
+
+    #[test]
+    fn soft_reset_unfreezes_long_timers_only() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 30;
+        // accumulate many detections so some durations exceed 1
+        for step in 1..=40 {
+            p.observe(step, &vec![0.0f32; len], len);
+            p.plan(step, len, 16);
+        }
+        let frozen_before = p.frozen_count();
+        assert!(frozen_before > 0);
+        let n = p.request_unfreeze(UnfreezeScope::Soft);
+        // Soft touches only remaining > 1 tokens; afterwards all frozen
+        // tokens have remaining <= 1, so one plan restores up to budget
+        let plan = p.plan(100, len, 64);
+        assert!(plan.restore.len() >= n.min(1));
+    }
+
+    #[test]
+    fn full_reset_clears_counters() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 20;
+        for step in 1..=10 {
+            p.observe(step, &vec![0.0f32; len], len);
+            p.plan(step, len, 16);
+        }
+        p.request_unfreeze(UnfreezeScope::Full);
+        let plan = p.plan(11, len, 64);
+        assert_eq!(p.frozen_count(), 0, "all restored after FR, {plan:?}");
+        // counters cleared: next detection is c=1 -> d=0 -> no freeze
+        p.observe(12, &vec![0.0f32; len], len);
+        let plan = p.plan(13, len, 64);
+        assert!(plan.freeze.is_empty());
+    }
+
+    #[test]
+    fn restore_and_freeze_disjoint() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 30;
+        for step in 1..=50 {
+            p.observe(step, &vec![0.0f32; len], len);
+            let plan = p.plan(step, len, 8);
+            for r in &plan.restore {
+                assert!(!plan.freeze.contains(r), "pos {r} in both lists");
+            }
+        }
+    }
+
+    #[test]
+    fn active_count_conserved() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 25;
+        for step in 1..=60 {
+            p.observe(step, &vec![0.1f32; len], len);
+            p.plan(step, len, 8);
+            assert_eq!(p.active_count() + p.frozen_count(), len);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Relevance thresholding (paper §3.2).
+//!
+//! The graph returns Eq.2 scores `s_j` for every active row each step;
+//! this module decides which of those constitute a "low-importance
+//! detection": active, outside the sliding window of the K most recent
+//! tokens, not a pinned sink, and `s_j < tau_eff`.
+//!
+//! `tau_eff` is either the raw paper threshold (tau=0.5 on LLaMA-3) or,
+//! by default, `tau * mean(candidate scores)` — the stand-in model's
+//! score scale differs from LLaMA-3's, so relative thresholding keeps
+//! the paper's "half as relevant as typical" semantics (DESIGN.md §5).
+
+use crate::config::FreezeConfig;
+
+/// Positions eligible for scoring this step: active, unpinned, and
+/// outside the sliding window `[len - window_k, len)`.
+pub fn scoreable_positions<'a>(
+    cfg: &'a FreezeConfig,
+    len: usize,
+    is_active: impl Fn(usize) -> bool + 'a,
+) -> impl Iterator<Item = usize> + 'a {
+    let window_start = len.saturating_sub(cfg.window_k);
+    (cfg.n_sink.min(window_start)..window_start).filter(move |&p| is_active(p))
+}
+
+/// Effective threshold given this step's candidate scores.
+pub fn effective_tau(cfg: &FreezeConfig, candidate_scores: &[f32]) -> f32 {
+    if !cfg.relative_tau || candidate_scores.is_empty() {
+        return cfg.tau;
+    }
+    let mean = candidate_scores.iter().sum::<f32>() / candidate_scores.len() as f32;
+    cfg.tau * mean
+}
+
+/// Detect low-importance positions: returns (position, score) pairs
+/// with score < tau_eff among scoreable positions.
+pub fn detect_low_importance(
+    cfg: &FreezeConfig,
+    scores: &[f32],
+    len: usize,
+    is_active: impl Fn(usize) -> bool + Copy,
+) -> Vec<(usize, f32)> {
+    let cands: Vec<usize> = scoreable_positions(cfg, len, is_active).collect();
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let cand_scores: Vec<f32> = cands.iter().map(|&p| scores[p]).collect();
+    let tau_eff = effective_tau(cfg, &cand_scores);
+    cands
+        .into_iter()
+        .zip(cand_scores)
+        .filter(|&(_, s)| s < tau_eff)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FreezeConfig {
+        FreezeConfig { window_k: 4, n_sink: 2, relative_tau: false, tau: 0.5, ..Default::default() }
+    }
+
+    #[test]
+    fn window_and_sinks_excluded() {
+        let c = cfg();
+        // len=10, window covers 6..10, sinks 0..2 -> scoreable = 2..6
+        let pos: Vec<usize> = scoreable_positions(&c, 10, |_| true).collect();
+        assert_eq!(pos, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn short_context_has_no_candidates() {
+        let c = cfg();
+        let pos: Vec<usize> = scoreable_positions(&c, 4, |_| true).collect();
+        assert!(pos.is_empty());
+        let pos: Vec<usize> = scoreable_positions(&c, 1, |_| true).collect();
+        assert!(pos.is_empty());
+    }
+
+    #[test]
+    fn frozen_positions_not_rescored() {
+        let c = cfg();
+        let pos: Vec<usize> = scoreable_positions(&c, 10, |p| p != 3).collect();
+        assert_eq!(pos, vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn absolute_tau_detection() {
+        let c = cfg();
+        let mut scores = vec![1.0f32; 10];
+        scores[2] = 0.1; // low
+        scores[5] = 0.49; // low
+        scores[7] = 0.0; // inside window - must NOT be detected
+        let det = detect_low_importance(&c, &scores, 10, |_| true);
+        let positions: Vec<usize> = det.iter().map(|d| d.0).collect();
+        assert_eq!(positions, vec![2, 5]);
+    }
+
+    #[test]
+    fn relative_tau_scales_with_score_magnitude() {
+        let c = FreezeConfig { relative_tau: true, ..cfg() };
+        // scores 100x larger than tau=0.5; mean=100 -> tau_eff=50
+        let mut scores = vec![100.0f32; 10];
+        scores[3] = 10.0;
+        let det = detect_low_importance(&c, &scores, 10, |_| true);
+        assert_eq!(det.len(), 1);
+        assert_eq!(det[0].0, 3);
+    }
+
+    #[test]
+    fn empty_candidates_return_raw_tau() {
+        let c = FreezeConfig { relative_tau: true, ..cfg() };
+        assert_eq!(effective_tau(&c, &[]), c.tau);
+    }
+}

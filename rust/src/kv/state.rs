@@ -1,0 +1,170 @@
+//! Per-token state machine shared by all KV policies.
+
+use crate::kv::freeze::DetectionWindow;
+
+/// Lifecycle of a token's KV row (paper §3.3: Active <-> Frozen).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenState {
+    /// Row is in the active cache and participates in attention.
+    Active,
+    /// Row was moved to off-GPU storage; `remaining` steps until the
+    /// timer expires and it is restored. `u32::MAX` = permanent
+    /// eviction (baselines only — ASR-KF-EGR never does this).
+    Frozen { remaining: u32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenMeta {
+    pub state: TokenState,
+    /// Low-importance detection history within window W.
+    pub window: DetectionWindow,
+    /// Total times this token has been frozen (stats/traces).
+    pub freezes: u32,
+    /// Step at which the current freeze began (WR recovery scope).
+    pub frozen_at: u64,
+}
+
+impl Default for TokenMeta {
+    fn default() -> Self {
+        TokenMeta {
+            state: TokenState::Active,
+            window: DetectionWindow::default(),
+            freezes: 0,
+            frozen_at: 0,
+        }
+    }
+}
+
+/// Token table: per-position metadata for one sequence.
+#[derive(Debug, Default)]
+pub struct TokenTable {
+    pub meta: Vec<TokenMeta>,
+}
+
+impl TokenTable {
+    /// Grow the table to cover `len` tokens (new tokens start Active).
+    pub fn grow_to(&mut self, len: usize) {
+        if self.meta.len() < len {
+            self.meta.resize_with(len, TokenMeta::default);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    pub fn is_active(&self, pos: usize) -> bool {
+        matches!(self.meta.get(pos).map(|m| m.state), Some(TokenState::Active) | None)
+    }
+
+    pub fn is_frozen(&self, pos: usize) -> bool {
+        matches!(self.meta.get(pos).map(|m| m.state), Some(TokenState::Frozen { .. }))
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.meta.iter().filter(|m| m.state == TokenState::Active).count()
+    }
+
+    pub fn frozen_positions(&self) -> Vec<usize> {
+        self.meta
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| matches!(m.state, TokenState::Frozen { .. }))
+            .map(|(p, _)| p)
+            .collect()
+    }
+
+    pub fn freeze(&mut self, pos: usize, duration: u32, step: u64) {
+        let m = &mut self.meta[pos];
+        debug_assert_eq!(m.state, TokenState::Active, "freezing non-active pos {pos}");
+        m.state = TokenState::Frozen { remaining: duration };
+        m.freezes += 1;
+        m.frozen_at = step;
+    }
+
+    pub fn unfreeze(&mut self, pos: usize) {
+        let m = &mut self.meta[pos];
+        debug_assert!(matches!(m.state, TokenState::Frozen { .. }));
+        m.state = TokenState::Active;
+    }
+
+    /// Decrement all finite freeze timers; return positions whose timer
+    /// just expired (1 -> 0). Positions already at 0 (expired earlier,
+    /// awaiting a budget slot to restore) are not re-reported.
+    pub fn tick_timers(&mut self) -> Vec<usize> {
+        let mut expired = Vec::new();
+        for (pos, m) in self.meta.iter_mut().enumerate() {
+            if let TokenState::Frozen { remaining } = &mut m.state {
+                if *remaining == u32::MAX || *remaining == 0 {
+                    continue; // permanent eviction / already awaiting restore
+                }
+                *remaining -= 1;
+                if *remaining == 0 {
+                    expired.push(pos);
+                }
+            }
+        }
+        expired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_makes_active_tokens() {
+        let mut t = TokenTable::default();
+        t.grow_to(5);
+        assert_eq!(t.active_count(), 5);
+        assert!(t.is_active(3));
+        t.grow_to(3); // never shrinks
+        assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn freeze_unfreeze_cycle() {
+        let mut t = TokenTable::default();
+        t.grow_to(4);
+        t.freeze(2, 3, 10);
+        assert!(t.is_frozen(2));
+        assert_eq!(t.active_count(), 3);
+        assert_eq!(t.meta[2].freezes, 1);
+        assert_eq!(t.meta[2].frozen_at, 10);
+        t.unfreeze(2);
+        assert!(t.is_active(2));
+    }
+
+    #[test]
+    fn timers_expire_in_order() {
+        let mut t = TokenTable::default();
+        t.grow_to(3);
+        t.freeze(0, 1, 0);
+        t.freeze(1, 2, 0);
+        assert_eq!(t.tick_timers(), vec![0]);
+        assert_eq!(t.tick_timers(), vec![1]);
+        assert!(t.tick_timers().is_empty());
+    }
+
+    #[test]
+    fn permanent_eviction_never_expires() {
+        let mut t = TokenTable::default();
+        t.grow_to(1);
+        t.freeze(0, u32::MAX, 0);
+        for _ in 0..1000 {
+            assert!(t.tick_timers().is_empty());
+        }
+        assert!(t.is_frozen(0));
+    }
+
+    #[test]
+    fn positions_beyond_table_are_active() {
+        let t = TokenTable::default();
+        assert!(t.is_active(99));
+        assert!(!t.is_frozen(99));
+    }
+}

@@ -1,0 +1,125 @@
+//! Frozen-row storage: the paper's off-GPU ("CPU") side of the soft
+//! freeze. Holds the KV row bundles gathered by the decode graph until
+//! their freeze timers expire; restoring scatters them back.
+//!
+//! Rows are keyed by sequence position. One row bundle = the token's
+//! K and V vectors across all layers = `kv_row_floats` f32s.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct FrozenStore {
+    rows: HashMap<usize, Vec<f32>>,
+    row_floats: usize,
+    /// lifetime counters for memory-accounting traces
+    pub total_stashed: u64,
+    pub total_restored: u64,
+    pub total_dropped: u64,
+}
+
+impl FrozenStore {
+    pub fn new(row_floats: usize) -> Self {
+        FrozenStore { rows: HashMap::new(), row_floats, ..Default::default() }
+    }
+
+    /// Stash a gathered row bundle for `pos` (moves active -> frozen).
+    pub fn stash(&mut self, pos: usize, row: Vec<f32>) {
+        debug_assert_eq!(row.len(), self.row_floats, "row bundle size");
+        debug_assert!(!self.rows.contains_key(&pos), "double-freeze of pos {pos}");
+        self.rows.insert(pos, row);
+        self.total_stashed += 1;
+    }
+
+    /// Take the payload for a restore (frozen -> active).
+    pub fn take(&mut self, pos: usize) -> Option<Vec<f32>> {
+        let r = self.rows.remove(&pos);
+        if r.is_some() {
+            self.total_restored += 1;
+        }
+        r
+    }
+
+    /// Drop a payload permanently (irreversible-eviction baselines).
+    pub fn drop_row(&mut self, pos: usize) {
+        if self.rows.remove(&pos).is_some() {
+            self.total_dropped += 1;
+        }
+    }
+
+    pub fn contains(&self, pos: usize) -> bool {
+        self.rows.contains_key(&pos)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Bytes currently held in off-GPU storage.
+    pub fn bytes(&self) -> usize {
+        self.rows.len() * self.row_floats * std::mem::size_of::<f32>()
+    }
+
+    /// Drain everything (pos, payload) — used by the engine's emergency
+    /// full restore (RR recovery rewind).
+    pub fn drain_all(&mut self) -> Vec<(usize, Vec<f32>)> {
+        let n = self.rows.len() as u64;
+        self.total_restored += n;
+        self.rows.drain().collect()
+    }
+
+    pub fn positions(&self) -> Vec<usize> {
+        let mut p: Vec<usize> = self.rows.keys().copied().collect();
+        p.sort_unstable();
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stash_take_roundtrip() {
+        let mut s = FrozenStore::new(4);
+        s.stash(7, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(s.contains(7));
+        assert_eq!(s.bytes(), 16);
+        assert_eq!(s.take(7), Some(vec![1.0, 2.0, 3.0, 4.0]));
+        assert!(!s.contains(7));
+        assert_eq!(s.take(7), None);
+    }
+
+    #[test]
+    fn drop_is_permanent() {
+        let mut s = FrozenStore::new(2);
+        s.stash(1, vec![5.0, 6.0]);
+        s.drop_row(1);
+        assert_eq!(s.take(1), None);
+        assert_eq!(s.total_dropped, 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // debug_assert is compiled out in release
+    #[should_panic(expected = "double-freeze")]
+    fn double_stash_panics_in_debug() {
+        let mut s = FrozenStore::new(1);
+        s.stash(3, vec![0.0]);
+        s.stash(3, vec![1.0]);
+    }
+
+    #[test]
+    fn drain_all_returns_everything() {
+        let mut s = FrozenStore::new(1);
+        s.stash(1, vec![1.0]);
+        s.stash(9, vec![9.0]);
+        let mut all = s.drain_all();
+        all.sort_by_key(|(p, _)| *p);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[1], (9, vec![9.0]));
+        assert!(s.is_empty());
+    }
+}

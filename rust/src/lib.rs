@@ -1,0 +1,20 @@
+//! ASR-KF-EGR: Adaptive Soft Rolling KV Freeze with Entropy-Guided
+//! Recovery — a three-layer (rust coordinator / JAX model / Pallas
+//! kernel) serving stack reproducing Metinov et al., 2025.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-reproduction results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod error;
+pub mod kv;
+pub mod metrics;
+pub mod model;
+pub mod recovery;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

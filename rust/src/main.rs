@@ -1,0 +1,151 @@
+//! `asrkf` — ASR-KF-EGR serving CLI.
+//!
+//! Subcommands:
+//!   generate  — single-sequence generation with a chosen KV policy
+//!   passkey   — needle-in-haystack retrieval check (paper Table 2)
+//!   serve     — start the TCP serving coordinator
+//!   bench-client — drive a running server with a synthetic workload
+//!   info      — print manifest / artifact info
+
+use asrkf::baselines::make_policy;
+use asrkf::config::EngineConfig;
+use asrkf::engine::Generator;
+use asrkf::error::Result;
+use asrkf::runtime::Runtime;
+use asrkf::util::cli::Args;
+use asrkf::util::logging;
+
+fn main() {
+    logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(args),
+        Some("passkey") => cmd_passkey(args),
+        Some("serve") => cmd_serve(args),
+        Some("bench-client") => cmd_bench_client(args),
+        Some("info") => cmd_info(args),
+        other => {
+            eprintln!("usage: asrkf <generate|passkey|serve|bench-client|info> [--flags]");
+            if let Some(o) = other {
+                eprintln!("unknown subcommand: {o}");
+            }
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.str_or("artifacts", "artifacts"))?;
+    let m = &rt.manifest.model;
+    println!(
+        "model: vocab={} d_model={} layers={} heads={} d_head={} max_len={}",
+        m.vocab, m.d_model, m.n_layers, m.n_heads, m.d_head, m.max_len
+    );
+    println!("programs:");
+    for (name, p) in &rt.manifest.programs {
+        println!("  {name}: kind={:?} batch={} file={}", p.kind, p.batch, p.file.display());
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = EngineConfig::from_args(args)?;
+    let policy_name = args.str_or("policy", "asrkf");
+    let prompt = args.str_or(
+        "prompt",
+        "the system routes every request then the scheduler freezes the key value pairs. ",
+    );
+    let max_new = args.usize_or("max-new-tokens", 200)?;
+
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let gen = Generator::new(&rt, cfg.clone());
+    let policy = make_policy(&policy_name, &cfg.freeze)?;
+    let out = gen.generate(&prompt, policy, max_new)?;
+
+    println!("--- generated ({} tokens, policy={policy_name}) ---", out.stats.generated_tokens);
+    println!("{}", out.text);
+    let s = &out.stats;
+    println!("--- stats ---");
+    println!("total tokens      : {}", s.total_tokens);
+    println!("active KV (final) : {}", s.final_active_kv);
+    println!("active KV (mean)  : {:.1}", s.mean_active_kv);
+    println!("compression       : {:.2}%", s.compression * 100.0);
+    println!("freezes/restores  : {}/{}", s.freezes, s.restores);
+    println!("recovery events   : {}", s.recovery_interventions);
+    println!(
+        "wall {:.2?}  (upload {:.2?}, execute {:.2?}, download {:.2?}, host {:.2?})",
+        s.wall, s.upload, s.execute, s.download, s.host
+    );
+    if let Some(path) = args.str_opt("trace-csv") {
+        let rows: Vec<Vec<String>> = out
+            .trace
+            .iter()
+            .map(|t| {
+                vec![
+                    t.step.to_string(),
+                    t.total.to_string(),
+                    t.active.to_string(),
+                    t.frozen.to_string(),
+                    format!("{:.4}", t.entropy),
+                    t.froze.to_string(),
+                    t.restored.to_string(),
+                ]
+            })
+            .collect();
+        asrkf::metrics::write_csv_rows(
+            path,
+            &["step", "total", "active", "frozen", "entropy", "froze", "restored"],
+            &rows,
+        )?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_passkey(args: &Args) -> Result<()> {
+    let cfg = EngineConfig::from_args(args)?;
+    let policy_name = args.str_or("policy", "asrkf");
+    let haystack = args.usize_or("haystack", 600)?;
+    let seed = args.u64_or("workload-seed", 1)?;
+
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let outcome = asrkf::workload::passkey::run_passkey(&rt, &cfg, &policy_name, haystack, seed)?;
+    println!("{}", outcome.report());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = EngineConfig::from_args(args)?;
+    let server_cfg = asrkf::config::ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:7341"),
+        queue_cap: args.usize_or("queue-cap", 256)?,
+        max_batch: args.usize_or("max-batch", 8)?,
+        batch_wait_us: args.u64_or("batch-wait-us", 2000)?,
+    };
+    asrkf::server::serve_blocking(cfg, server_cfg)
+}
+
+fn cmd_bench_client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7341");
+    let n = args.usize_or("requests", 16)?;
+    let concurrency = args.usize_or("concurrency", 4)?;
+    let max_new = args.usize_or("max-new-tokens", 48)?;
+    asrkf::server::client::run_bench_client(&addr, n, concurrency, max_new)
+}

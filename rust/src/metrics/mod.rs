@@ -1,0 +1,154 @@
+//! Serving metrics: latency histograms, counters, and CSV export used
+//! by the coordinator and the bench harness.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (microseconds, ~1.6x bucket growth).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1u64; // 1us
+        while b < 600_000_000 {
+            bounds.push(b);
+            b = (b as f64 * 1.6).ceil() as u64;
+        }
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], total: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds.partition_point(|&b| b <= us);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.total)
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let us = if i < self.bounds.len() { self.bounds[i] } else { self.max_us };
+                return Duration::from_micros(us.min(self.max_us));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.3?} p50={:.3?} p90={:.3?} p99={:.3?} max={:.3?}",
+            self.total,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.9),
+            self.quantile(0.99),
+            Duration::from_micros(self.max_us),
+        )
+    }
+}
+
+/// Aggregated serving counters (exported as JSON by the server).
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    pub requests_completed: u64,
+    pub requests_rejected: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub batches_dispatched: u64,
+    pub batch_occupancy_sum: u64,
+}
+
+impl ServingStats {
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches_dispatched == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum as f64 / self.batches_dispatched as f64
+        }
+    }
+}
+
+/// Simple CSV writer for trace/figure exports.
+pub fn write_csv_rows(path: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", headers.join(","));
+    for r in rows {
+        let _ = writeln!(out, "{}", r.join(","));
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::default();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!(p50 >= Duration::from_millis(40) && p50 <= Duration::from_millis(80), "{p50:?}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn mean_accumulates() {
+        let mut h = Histogram::default();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn occupancy_math() {
+        let s = ServingStats {
+            batches_dispatched: 4,
+            batch_occupancy_sum: 10,
+            ..Default::default()
+        };
+        assert_eq!(s.mean_batch_occupancy(), 2.5);
+    }
+}

@@ -1,0 +1,89 @@
+//! Logits utilities: softmax, entropy, argmax — computed on the rust
+//! side each step (vocab = 256, negligible cost). The entropy feeds the
+//! recovery monitor (paper §3.6).
+
+/// Numerically-stable in-place softmax; returns the log-sum-exp.
+pub fn softmax_inplace(logits: &mut [f32]) -> f32 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in logits.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in logits.iter_mut() {
+        *v /= sum;
+    }
+    max + sum.ln()
+}
+
+/// Shannon entropy (nats) of a probability vector.
+pub fn entropy(probs: &[f32]) -> f32 {
+    -probs
+        .iter()
+        .filter(|&&p| p > 1e-12)
+        .map(|&p| p * p.ln())
+        .sum::<f32>()
+}
+
+/// Entropy of raw logits (softmax applied on a scratch copy).
+pub fn logits_entropy(logits: &[f32]) -> f32 {
+    let mut p = logits.to_vec();
+    softmax_inplace(&mut p);
+    entropy(&p)
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Max probability after softmax (confidence signal for recovery).
+pub fn top1_prob(logits: &[f32]) -> f32 {
+    let mut p = logits.to_vec();
+    softmax_inplace(&mut p);
+    p.iter().copied().fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut v);
+        let sum: f32 = v.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(v[3] > v[2] && v[2] > v[1]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut v = vec![1000.0, 999.0];
+        softmax_inplace(&mut v);
+        assert!(v.iter().all(|p| p.is_finite()));
+        assert!((v[0] + v[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_entropy_is_log_n() {
+        let probs = vec![0.25f32; 4];
+        assert!((entropy(&probs) - (4.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_distribution_has_zero_entropy() {
+        let probs = vec![1.0, 0.0, 0.0];
+        assert!(entropy(&probs).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Model-side utilities that run on the request path: tokenizer,
+//! sampling, logits math. The model weights themselves live inside the
+//! AOT-compiled HLO (runtime/).
+
+pub mod logits;
+pub mod sampling;
+pub mod tokenizer;

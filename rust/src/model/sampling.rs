@@ -1,0 +1,165 @@
+//! Token sampling: temperature / top-k / top-p (paper §4.1 settings),
+//! plus greedy decoding (T=0, used by the passkey test, paper Table 2).
+//!
+//! The sampler owns a `Pcg64` whose draw counter is checkpointable —
+//! the RR recovery level rewinds generation by restoring the counter
+//! and replaying (util::rng::Pcg64::fast_forward_to).
+
+use crate::config::SamplingConfig;
+use crate::model::logits::softmax_inplace;
+use crate::util::rng::Pcg64;
+
+pub struct Sampler {
+    pub cfg: SamplingConfig,
+    rng: Pcg64,
+}
+
+/// A checkpoint of the sampler's RNG stream position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SamplerCheckpoint {
+    draws: u64,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplingConfig) -> Self {
+        let rng = Pcg64::new(cfg.seed);
+        Sampler { cfg, rng }
+    }
+
+    pub fn checkpoint(&self) -> SamplerCheckpoint {
+        SamplerCheckpoint { draws: self.rng.draws }
+    }
+
+    /// Raw draw counter (per-token rewind bookkeeping in `Session`).
+    pub fn checkpoint_draws(&self) -> u64 {
+        self.rng.draws
+    }
+
+    /// Rewind to a raw draw counter (RR recovery).
+    pub fn rewind_to_draws(&mut self, draws: u64) {
+        self.restore(SamplerCheckpoint { draws });
+    }
+
+    /// Rewind to a previous stream position (RR recovery).
+    pub fn restore(&mut self, cp: SamplerCheckpoint) {
+        assert!(cp.draws <= self.rng.draws, "cannot rewind forward");
+        let mut fresh = Pcg64::new(self.cfg.seed);
+        fresh.fast_forward_to(cp.draws);
+        self.rng = fresh;
+    }
+
+    /// Sample a token id from raw logits.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        if self.cfg.temperature <= 0.0 {
+            return crate::model::logits::argmax(logits);
+        }
+        let mut probs: Vec<f32> =
+            logits.iter().map(|&l| l / self.cfg.temperature).collect();
+        softmax_inplace(&mut probs);
+
+        // rank vocabulary by probability (vocab=256; full sort is cheap)
+        let mut order: Vec<usize> = (0..probs.len()).collect();
+        order.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+
+        // top-k cut
+        let k = if self.cfg.top_k == 0 { order.len() } else { self.cfg.top_k.min(order.len()) };
+        // top-p (nucleus) cut within the top-k prefix
+        let mut kept = 0usize;
+        let mut cum = 0.0f32;
+        for &idx in order.iter().take(k) {
+            kept += 1;
+            cum += probs[idx];
+            if cum >= self.cfg.top_p {
+                break;
+            }
+        }
+        let kept = kept.max(1);
+
+        let total: f32 = order.iter().take(kept).map(|&i| probs[i]).sum();
+        let mut u = self.rng.f32() * total;
+        for &idx in order.iter().take(kept) {
+            u -= probs[idx];
+            if u <= 0.0 {
+                return idx;
+            }
+        }
+        order[kept - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_peaked(n: usize, peak: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        v[peak] = 10.0;
+        v
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(SamplingConfig::greedy());
+        assert_eq!(s.sample(&logits_peaked(256, 42)), 42);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SamplingConfig { seed: 7, ..SamplingConfig::default() };
+        let logits: Vec<f32> = (0..256).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let mut a = Sampler::new(cfg.clone());
+        let mut b = Sampler::new(cfg);
+        let seq_a: Vec<usize> = (0..50).map(|_| a.sample(&logits)).collect();
+        let seq_b: Vec<usize> = (0..50).map(|_| b.sample(&logits)).collect();
+        assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let cfg = SamplingConfig { temperature: 1.0, top_k: 2, top_p: 1.0, seed: 3 };
+        let mut s = Sampler::new(cfg);
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 5.0;
+        logits[9] = 4.0;
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 3 || t == 9, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_at_least_one() {
+        let cfg = SamplingConfig { temperature: 1.0, top_k: 0, top_p: 0.01, seed: 5 };
+        let mut s = Sampler::new(cfg);
+        let logits = logits_peaked(64, 7);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 7);
+        }
+    }
+
+    #[test]
+    fn rewind_replays_stream() {
+        let cfg = SamplingConfig { seed: 11, ..SamplingConfig::default() };
+        let logits: Vec<f32> = (0..256).map(|i| ((i * 13) % 19) as f32 * 0.2).collect();
+        let mut s = Sampler::new(cfg);
+        for _ in 0..10 {
+            s.sample(&logits);
+        }
+        let cp = s.checkpoint();
+        let expected: Vec<usize> = (0..20).map(|_| s.sample(&logits)).collect();
+        s.restore(cp);
+        let replayed: Vec<usize> = (0..20).map(|_| s.sample(&logits)).collect();
+        assert_eq!(expected, replayed);
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        // with very low T, almost always the argmax
+        let cfg = SamplingConfig { temperature: 0.05, top_k: 0, top_p: 1.0, seed: 13 };
+        let mut s = Sampler::new(cfg);
+        let mut logits = vec![0.0f32; 32];
+        logits[5] = 2.0;
+        let hits = (0..200).filter(|_| s.sample(&logits) == 5).count();
+        assert!(hits > 190, "hits {hits}");
+    }
+}

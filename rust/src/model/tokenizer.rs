@@ -1,0 +1,48 @@
+//! Byte-level tokenizer (vocab = 256 raw bytes), matching the python
+//! training pipeline. Lossless for arbitrary UTF-8 text.
+
+/// Encode text into token ids (raw bytes).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode token ids back into text (lossy on invalid UTF-8 boundaries).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Decode a single token for streaming output (may be a partial UTF-8
+/// sequence; callers buffer until valid).
+pub fn byte_of(token: i32) -> u8 {
+    token.clamp(0, 255) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let text = "the pass key is 44181.";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let text = "Бишкек — Kyrgyzstan";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        let toks = encode("ab");
+        assert_eq!(toks, vec![97, 98]);
+    }
+
+    #[test]
+    fn out_of_range_clamped() {
+        assert_eq!(byte_of(300), 255);
+        assert_eq!(byte_of(-5), 0);
+    }
+}

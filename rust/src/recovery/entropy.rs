@@ -1,0 +1,133 @@
+//! Entropy monitoring (paper §3.6): detects "entropy spikes or
+//! confidence drops" against an exponentially-weighted baseline.
+//!
+//! The monitor keeps an EMA of the per-step logits entropy and its
+//! variance; a step triggers when
+//!     H_t > ema + lambda * std      (spike)
+//! or  top1_t < 0.5 * top1_ema      (confidence collapse)
+//! after a short warmup so the baseline is meaningful.
+
+use crate::config::RecoveryConfig;
+
+#[derive(Debug, Clone)]
+pub struct EntropyMonitor {
+    cfg: RecoveryConfig,
+    ema: f32,
+    var: f32,
+    top1_ema: f32,
+    steps: u64,
+    warmup: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    Ok,
+    Spike,
+    ConfidenceDrop,
+}
+
+impl EntropyMonitor {
+    pub fn new(cfg: RecoveryConfig) -> Self {
+        EntropyMonitor { cfg, ema: 0.0, var: 0.0, top1_ema: 0.0, steps: 0, warmup: 8 }
+    }
+
+    /// Feed one step's entropy (nats) and top-1 probability.
+    pub fn observe(&mut self, entropy: f32, top1: f32) -> Signal {
+        self.steps += 1;
+        if self.steps <= self.warmup {
+            // seed the baseline
+            if self.steps == 1 {
+                self.ema = entropy;
+                self.top1_ema = top1;
+            } else {
+                self.update(entropy, top1);
+            }
+            return Signal::Ok;
+        }
+
+        let std = self.var.sqrt().max(0.05); // floor avoids zero-variance hair triggers
+        let signal = if entropy > self.ema + self.cfg.lambda * std {
+            Signal::Spike
+        } else if top1 < 0.5 * self.top1_ema {
+            Signal::ConfidenceDrop
+        } else {
+            Signal::Ok
+        };
+        self.update(entropy, top1);
+        signal
+    }
+
+    fn update(&mut self, entropy: f32, top1: f32) {
+        let a = self.cfg.ema_decay;
+        let delta = entropy - self.ema;
+        self.ema = a * self.ema + (1.0 - a) * entropy;
+        self.var = a * self.var + (1.0 - a) * delta * delta;
+        self.top1_ema = a * self.top1_ema + (1.0 - a) * top1;
+    }
+
+    /// Reset after an intervention so the new regime sets a fresh baseline.
+    pub fn reset(&mut self) {
+        self.steps = 0;
+        self.ema = 0.0;
+        self.var = 0.0;
+        self.top1_ema = 0.0;
+    }
+
+    pub fn baseline(&self) -> (f32, f32) {
+        (self.ema, self.var.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mon() -> EntropyMonitor {
+        EntropyMonitor::new(RecoveryConfig { lambda: 3.0, ema_decay: 0.9, ..Default::default() })
+    }
+
+    #[test]
+    fn stable_stream_never_triggers() {
+        let mut m = mon();
+        for i in 0..200 {
+            let h = 2.0 + 0.01 * ((i % 7) as f32 - 3.0);
+            assert_eq!(m.observe(h, 0.6), Signal::Ok, "step {i}");
+        }
+    }
+
+    #[test]
+    fn spike_detected_after_warmup() {
+        let mut m = mon();
+        for _ in 0..50 {
+            m.observe(2.0, 0.6);
+        }
+        assert_eq!(m.observe(5.5, 0.6), Signal::Spike);
+    }
+
+    #[test]
+    fn confidence_collapse_detected() {
+        let mut m = mon();
+        for _ in 0..50 {
+            m.observe(2.0, 0.8);
+        }
+        assert_eq!(m.observe(2.0, 0.1), Signal::ConfidenceDrop);
+    }
+
+    #[test]
+    fn no_trigger_during_warmup() {
+        let mut m = mon();
+        for i in 0..8 {
+            assert_eq!(m.observe(if i == 5 { 50.0 } else { 2.0 }, 0.5), Signal::Ok);
+        }
+    }
+
+    #[test]
+    fn reset_requires_new_warmup() {
+        let mut m = mon();
+        for _ in 0..50 {
+            m.observe(2.0, 0.6);
+        }
+        m.reset();
+        assert_eq!(m.observe(9.0, 0.6), Signal::Ok); // warmup again
+    }
+}

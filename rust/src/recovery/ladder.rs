@@ -1,0 +1,161 @@
+//! The four-level recovery escalation ladder (paper §3.6):
+//! SR -> WR -> FR -> RR, with cooldowns between interventions and
+//! de-escalation after a quiet period.
+
+use crate::config::RecoveryConfig;
+use crate::recovery::entropy::Signal;
+
+/// Intervention the engine must apply this step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    None,
+    /// SR: unfreeze tokens with remaining duration > 1.
+    SoftReset,
+    /// WR: unfreeze tokens frozen in the last N steps.
+    WindowReset { horizon: u64 },
+    /// FR: unfreeze everything, clear all counters.
+    FullReset,
+    /// RR: FR + rewind and regenerate the last k tokens.
+    Rewalk { depth: usize },
+}
+
+#[derive(Debug)]
+pub struct RecoveryLadder {
+    cfg: RecoveryConfig,
+    /// current escalation level (0 = calm, 1..=4 applied levels)
+    level: u8,
+    /// steps remaining before another intervention may fire
+    cooldown: usize,
+    /// quiet steps observed since the last intervention
+    quiet: usize,
+    pub interventions: Vec<(u64, Action)>,
+}
+
+impl RecoveryLadder {
+    pub fn new(cfg: RecoveryConfig) -> Self {
+        RecoveryLadder { cfg, level: 0, cooldown: 0, quiet: 0, interventions: Vec::new() }
+    }
+
+    /// Feed the monitor's signal for `step`; returns the action to apply.
+    pub fn step(&mut self, step: u64, signal: Signal) -> Action {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+        }
+        match signal {
+            Signal::Ok => {
+                self.quiet += 1;
+                // de-escalate after a sustained quiet period
+                if self.level > 0 && self.quiet >= self.cfg.escalation_patience * 4 {
+                    self.level = 0;
+                }
+                Action::None
+            }
+            Signal::Spike | Signal::ConfidenceDrop => {
+                self.quiet = 0;
+                if self.cooldown > 0 {
+                    return Action::None;
+                }
+                // escalate: repeated triggers walk up the ladder
+                self.level = (self.level + 1).min(4);
+                self.cooldown = self.cfg.cooldown;
+                let action = match self.level {
+                    1 => Action::SoftReset,
+                    2 => Action::WindowReset { horizon: self.cfg.wr_horizon as u64 },
+                    3 => Action::FullReset,
+                    _ => Action::Rewalk { depth: self.cfg.rr_depth },
+                };
+                self.interventions.push((step, action));
+                action
+            }
+        }
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> RecoveryLadder {
+        RecoveryLadder::new(RecoveryConfig {
+            cooldown: 3,
+            escalation_patience: 2,
+            wr_horizon: 16,
+            rr_depth: 4,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn escalates_through_all_levels() {
+        let mut l = ladder();
+        let mut actions = Vec::new();
+        let mut step = 0u64;
+        for _ in 0..4 {
+            // trigger, then wait out the cooldown with more trouble
+            loop {
+                step += 1;
+                let a = l.step(step, Signal::Spike);
+                if a != Action::None {
+                    actions.push(a);
+                    break;
+                }
+            }
+        }
+        assert_eq!(
+            actions,
+            vec![
+                Action::SoftReset,
+                Action::WindowReset { horizon: 16 },
+                Action::FullReset,
+                Action::Rewalk { depth: 4 },
+            ]
+        );
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_interventions() {
+        let mut l = ladder();
+        assert_ne!(l.step(1, Signal::Spike), Action::None);
+        assert_eq!(l.step(2, Signal::Spike), Action::None);
+        assert_eq!(l.step(3, Signal::Spike), Action::None);
+    }
+
+    #[test]
+    fn deescalates_after_quiet_period() {
+        let mut l = ladder();
+        l.step(1, Signal::Spike);
+        assert_eq!(l.level(), 1);
+        for s in 2..12 {
+            l.step(s, Signal::Ok);
+        }
+        assert_eq!(l.level(), 0);
+        // next trouble starts from SR again
+        let mut a = Action::None;
+        let mut s = 12;
+        while a == Action::None {
+            s += 1;
+            a = l.step(s, Signal::Spike);
+        }
+        assert_eq!(a, Action::SoftReset);
+    }
+
+    #[test]
+    fn rewalk_is_terminal_level() {
+        let mut l = ladder();
+        let mut step = 0;
+        for _ in 0..10 {
+            loop {
+                step += 1;
+                if l.step(step, Signal::Spike) != Action::None {
+                    break;
+                }
+            }
+        }
+        assert!(matches!(l.interventions.last().unwrap().1, Action::Rewalk { .. }));
+        assert_eq!(l.level(), 4);
+    }
+}

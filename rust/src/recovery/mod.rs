@@ -1,0 +1,9 @@
+//! Entropy-guided recovery (paper §3.6 — listed as future work there,
+//! implemented here as a first-class feature): an entropy monitor and
+//! the SR -> WR -> FR -> RR escalation ladder.
+
+pub mod entropy;
+pub mod ladder;
+
+pub use entropy::{EntropyMonitor, Signal};
+pub use ladder::{Action, RecoveryLadder};

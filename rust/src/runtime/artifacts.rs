@@ -1,0 +1,230 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+/// Model dimensions (mirrors python `ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    /// floats per token KV row bundle across layers (nl * 2 * H * D)
+    pub kv_row_floats: usize,
+}
+
+/// One exported program variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub kind: ProgramKind,
+    pub batch: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProgramKind {
+    /// prompt length bucket L
+    Prefill { len: usize },
+    /// KV capacity S + per-step transfer budget R
+    Decode { kv_len: usize, r_budget: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelSpec,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub block_k: usize,
+    pub r_budget: usize,
+    pub dir: PathBuf,
+}
+
+fn req_usize(v: &Json, key: &str, ctx: &str) -> Result<usize> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| Error::Manifest(format!("{ctx}: missing/invalid '{key}'")))
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Self::parse_str(&text, dir)
+    }
+
+    pub fn parse_str(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = parse(text).map_err(Error::Manifest)?;
+        let m = root.get("model");
+        let model = ModelSpec {
+            vocab: req_usize(m, "vocab", "model")?,
+            d_model: req_usize(m, "d_model", "model")?,
+            n_layers: req_usize(m, "n_layers", "model")?,
+            n_heads: req_usize(m, "n_heads", "model")?,
+            d_head: req_usize(m, "d_head", "model")?,
+            d_ff: req_usize(m, "d_ff", "model")?,
+            max_len: req_usize(m, "max_len", "model")?,
+            kv_row_floats: req_usize(m, "kv_row_floats", "model")?,
+        };
+        let expected_row = model.n_layers * 2 * model.n_heads * model.d_head;
+        if model.kv_row_floats != expected_row {
+            return Err(Error::Manifest(format!(
+                "kv_row_floats {} inconsistent with dims ({} expected)",
+                model.kv_row_floats, expected_row
+            )));
+        }
+
+        let export = root.get("export");
+        let block_k = req_usize(export, "block_k", "export")?;
+        let r_budget = req_usize(export, "r_budget", "export")?;
+
+        let progs = root
+            .get("programs")
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("missing 'programs'".into()))?;
+        let mut programs = BTreeMap::new();
+        for (name, p) in progs {
+            let batch = req_usize(p, "batch", name)?;
+            let file = dir.join(
+                p.get("file")
+                    .as_str()
+                    .ok_or_else(|| Error::Manifest(format!("{name}: missing 'file'")))?,
+            );
+            let kind = match p.get("kind").as_str() {
+                Some("prefill") => ProgramKind::Prefill { len: req_usize(p, "len", name)? },
+                Some("decode") => ProgramKind::Decode {
+                    kv_len: req_usize(p, "kv_len", name)?,
+                    r_budget: req_usize(p, "r_budget", name)?,
+                },
+                other => {
+                    return Err(Error::Manifest(format!("{name}: unknown kind {other:?}")))
+                }
+            };
+            programs.insert(name.clone(), ProgramSpec { name: name.clone(), kind, batch, file });
+        }
+        if programs.is_empty() {
+            return Err(Error::Manifest("no programs in manifest".into()));
+        }
+        Ok(Manifest { model, programs, block_k, r_budget, dir })
+    }
+
+    /// Smallest prefill bucket with len >= prompt_len (batch 1).
+    pub fn prefill_bucket(&self, prompt_len: usize) -> Result<&ProgramSpec> {
+        self.programs
+            .values()
+            .filter_map(|p| match p.kind {
+                ProgramKind::Prefill { len } if len >= prompt_len && p.batch == 1 => {
+                    Some((len, p))
+                }
+                _ => None,
+            })
+            .min_by_key(|(len, _)| *len)
+            .map(|(_, p)| p)
+            .ok_or_else(|| {
+                Error::Manifest(format!("no prefill bucket fits prompt_len={prompt_len}"))
+            })
+    }
+
+    /// Smallest decode bucket with batch >= `batch` and kv_len >= `need_len`.
+    pub fn decode_bucket(&self, batch: usize, need_len: usize) -> Result<&ProgramSpec> {
+        self.programs
+            .values()
+            .filter_map(|p| match p.kind {
+                ProgramKind::Decode { kv_len, .. }
+                    if kv_len >= need_len && p.batch >= batch =>
+                {
+                    Some(((p.batch, kv_len), p))
+                }
+                _ => None,
+            })
+            .min_by_key(|(key, _)| *key)
+            .map(|(_, p)| p)
+            .ok_or_else(|| {
+                Error::Manifest(format!(
+                    "no decode bucket fits batch={batch} need_len={need_len}"
+                ))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const SAMPLE: &str = r#"{
+      "model": {"vocab":256,"d_model":128,"n_layers":4,"n_heads":4,"d_head":32,
+                "d_ff":384,"max_len":2048,"rope_theta":10000.0,"kv_row_floats":1024},
+      "export": {"prefill_buckets":[[1,128],[1,512]],
+                 "decode_buckets":[[1,1024],[4,1024],[8,512]],
+                 "r_budget":16,"block_k":64},
+      "programs": {
+        "prefill_b1_l128": {"kind":"prefill","batch":1,"len":128,"file":"prefill_b1_l128.hlo.txt"},
+        "prefill_b1_l512": {"kind":"prefill","batch":1,"len":512,"file":"prefill_b1_l512.hlo.txt"},
+        "decode_b1_s1024": {"kind":"decode","batch":1,"kv_len":1024,"r_budget":16,"file":"decode_b1_s1024.hlo.txt"},
+        "decode_b4_s1024": {"kind":"decode","batch":4,"kv_len":1024,"r_budget":16,"file":"decode_b4_s1024.hlo.txt"},
+        "decode_b8_s512": {"kind":"decode","batch":8,"kv_len":512,"r_budget":16,"file":"decode_b8_s512.hlo.txt"}
+      }
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse_str(SAMPLE, PathBuf::from("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_model_and_programs() {
+        let m = manifest();
+        assert_eq!(m.model.n_layers, 4);
+        assert_eq!(m.model.kv_row_floats, 1024);
+        assert_eq!(m.programs.len(), 5);
+        assert_eq!(m.block_k, 64);
+    }
+
+    #[test]
+    fn prefill_bucket_selection() {
+        let m = manifest();
+        assert!(matches!(
+            m.prefill_bucket(100).unwrap().kind,
+            ProgramKind::Prefill { len: 128 }
+        ));
+        assert!(matches!(
+            m.prefill_bucket(128).unwrap().kind,
+            ProgramKind::Prefill { len: 128 }
+        ));
+        assert!(matches!(
+            m.prefill_bucket(129).unwrap().kind,
+            ProgramKind::Prefill { len: 512 }
+        ));
+        assert!(m.prefill_bucket(513).is_err());
+    }
+
+    #[test]
+    fn decode_bucket_selection() {
+        let m = manifest();
+        let p = m.decode_bucket(1, 600).unwrap();
+        assert_eq!(p.batch, 1);
+        let p = m.decode_bucket(3, 600).unwrap();
+        assert_eq!(p.batch, 4);
+        let p = m.decode_bucket(8, 100).unwrap();
+        assert_eq!(p.batch, 8);
+        assert!(m.decode_bucket(8, 600).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_row_floats() {
+        let bad = SAMPLE.replace("\"kv_row_floats\":1024", "\"kv_row_floats\":7");
+        assert!(Manifest::parse_str(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! The runtime: a PJRT CPU client plus a lazily-compiled program
+//! registry keyed by manifest program name.
+//!
+//! Adapted from the verified /opt/xla-example/load_hlo pattern:
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile`. Compilation is cached per program; the engine owns
+//! a `Runtime` on a single thread (PJRT CPU client is not `Sync`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::PjRtClient;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{Manifest, ProgramKind};
+use crate::runtime::program::{DecodeProgram, PrefillProgram};
+
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    decode_cache: RefCell<BTreeMap<String, Rc<DecodeProgram>>>,
+    prefill_cache: RefCell<BTreeMap<String, Rc<PrefillProgram>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        log::info!(
+            "runtime: platform={} programs={}",
+            client.platform_name(),
+            manifest.programs.len()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            decode_cache: RefCell::new(BTreeMap::new()),
+            prefill_cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    fn compile(&self, file: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            file.to_str()
+                .ok_or_else(|| Error::Manifest(format!("non-utf8 path {file:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!("compiled {} in {:.1}s", file.display(), t0.elapsed().as_secs_f64());
+        Ok(exe)
+    }
+
+    /// Get (compiling on first use) the decode program with this name.
+    pub fn decode_program(&self, name: &str) -> Result<Rc<DecodeProgram>> {
+        if let Some(p) = self.decode_cache.borrow().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self
+            .manifest
+            .programs
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown program '{name}'")))?
+            .clone();
+        let ProgramKind::Decode { kv_len, r_budget } = spec.kind else {
+            return Err(Error::Manifest(format!("'{name}' is not a decode program")));
+        };
+        let exe = self.compile(&spec.file)?;
+        let prog = Rc::new(DecodeProgram::new(
+            exe,
+            spec.batch,
+            kv_len,
+            r_budget,
+            self.manifest.model.clone(),
+        ));
+        self.decode_cache.borrow_mut().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Get (compiling on first use) the prefill program with this name.
+    pub fn prefill_program(&self, name: &str) -> Result<Rc<PrefillProgram>> {
+        if let Some(p) = self.prefill_cache.borrow().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self
+            .manifest
+            .programs
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown program '{name}'")))?
+            .clone();
+        let ProgramKind::Prefill { len } = spec.kind else {
+            return Err(Error::Manifest(format!("'{name}' is not a prefill program")));
+        };
+        let exe = self.compile(&spec.file)?;
+        let prog = Rc::new(PrefillProgram::new(exe, spec.batch, len, self.manifest.model.clone()));
+        self.prefill_cache.borrow_mut().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Decode program for the smallest bucket fitting (batch, need_len).
+    pub fn decode_for(&self, batch: usize, need_len: usize) -> Result<Rc<DecodeProgram>> {
+        let name = self.manifest.decode_bucket(batch, need_len)?.name.clone();
+        self.decode_program(&name)
+    }
+
+    /// Prefill program for the smallest bucket fitting prompt_len.
+    pub fn prefill_for(&self, prompt_len: usize) -> Result<Rc<PrefillProgram>> {
+        let name = self.manifest.prefill_bucket(prompt_len)?.name.clone();
+        self.prefill_program(&name)
+    }
+}

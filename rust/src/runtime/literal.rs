@@ -1,0 +1,77 @@
+//! Literal <-> rust buffer conversion helpers.
+//!
+//! The decode hot loop builds several literals per step; these helpers
+//! keep that path allocation-light and give one audited home to the
+//! (safe-for-POD) byte reinterpretation.
+
+use xla::{ElementType, Literal};
+
+use crate::error::Result;
+
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    // SAFETY: f32/i32 are plain-old-data with no padding; the slice
+    // lifetime is preserved and alignment of u8 is 1.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// Build an f32 literal of the given logical shape.
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        as_bytes(data),
+    )?)
+}
+
+/// Build an i32 literal of the given logical shape.
+pub fn lit_i32(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        as_bytes(data),
+    )?)
+}
+
+/// Copy a literal's f32 contents into a (correctly sized) slice.
+pub fn copy_f32_into(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to(dst)?;
+    Ok(())
+}
+
+/// Extract a literal's f32 contents as a fresh Vec.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        let lit = lit_f32(&[2, 3, 4], &data).unwrap();
+        assert_eq!(lit.element_count(), 24);
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data: Vec<i32> = vec![5, -1, 7, 2048];
+        let lit = lit_i32(&[4], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn copy_into_preallocated() {
+        let data: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let lit = lit_f32(&[8], &data).unwrap();
+        let mut dst = vec![0.0f32; 8];
+        copy_f32_into(&lit, &mut dst).unwrap();
+        assert_eq!(dst, data);
+    }
+}

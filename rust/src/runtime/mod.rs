@@ -1,0 +1,11 @@
+//! Runtime layer: loads AOT HLO artifacts and executes them via the
+//! PJRT CPU client (`xla` crate). Python never runs here.
+
+pub mod artifacts;
+pub mod client;
+pub mod literal;
+pub mod program;
+
+pub use artifacts::{Manifest, ModelSpec, ProgramKind, ProgramSpec};
+pub use client::Runtime;
+pub use program::{CallTiming, DecodeInputs, DecodeOutputs, DecodeProgram, PrefillOutputs, PrefillProgram};

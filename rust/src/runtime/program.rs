@@ -1,0 +1,198 @@
+//! Typed wrappers over compiled PJRT executables: `PrefillProgram` and
+//! `DecodeProgram` match the signatures exported by `aot.py` (see
+//! DESIGN.md §1 for the contract, python/compile/model.py for shapes).
+//!
+//! The decode program is a PURE function of the cache: rust owns every
+//! state mutation (row writes, freeze/restore data movement) host-side;
+//! the graph only computes. This keeps the step free of in-graph
+//! full-cache copies (§Perf).
+
+use std::time::{Duration, Instant};
+
+use xla::{Literal, PjRtLoadedExecutable};
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::ModelSpec;
+use crate::runtime::literal::{lit_f32, lit_i32, to_vec_f32};
+
+/// Per-call timing breakdown, aggregated by the engine for §Perf.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CallTiming {
+    /// building input literals (host -> "device" transfer analog)
+    pub upload: Duration,
+    /// PJRT execute
+    pub execute: Duration,
+    /// fetching output literals ("device" -> host transfer analog)
+    pub download: Duration,
+}
+
+impl CallTiming {
+    pub fn total(&self) -> Duration {
+        self.upload + self.execute + self.download
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Inputs to one decode step (slices borrowed from the session state).
+pub struct DecodeInputs<'a> {
+    pub tokens: &'a [i32], // [B]
+    pub kv: &'a [f32],     // [nl,2,B,S,H,D] flattened, read-only
+    pub mask: &'a [f32],   // [B,S] (current position NOT set)
+    pub pos: &'a [i32],    // [B]
+}
+
+/// Outputs of one decode step.
+pub struct DecodeOutputs {
+    pub logits: Vec<f32>, // [B,V]
+    pub k_new: Vec<f32>,  // [nl,B,H,D] — rust writes these at pos
+    pub v_new: Vec<f32>,  // [nl,B,H,D]
+    pub scores: Vec<f32>, // [B,S] Eq.2 relevance over cache rows
+    pub timing: CallTiming,
+}
+
+pub struct DecodeProgram {
+    exe: PjRtLoadedExecutable,
+    pub batch: usize,
+    pub kv_len: usize,
+    pub r_budget: usize,
+    pub model: ModelSpec,
+}
+
+impl DecodeProgram {
+    pub fn new(
+        exe: PjRtLoadedExecutable,
+        batch: usize,
+        kv_len: usize,
+        r_budget: usize,
+        model: ModelSpec,
+    ) -> Self {
+        DecodeProgram { exe, batch, kv_len, r_budget, model }
+    }
+
+    /// Total floats in the KV cache array for this bucket.
+    pub fn kv_floats(&self) -> usize {
+        self.model.n_layers * 2 * self.batch * self.kv_len * self.model.n_heads * self.model.d_head
+    }
+
+    pub fn run(&self, inp: &DecodeInputs) -> Result<DecodeOutputs> {
+        let (b, s) = (self.batch, self.kv_len);
+        let m = &self.model;
+        self.check_len("tokens", inp.tokens.len(), b)?;
+        self.check_len("kv", inp.kv.len(), self.kv_floats())?;
+        self.check_len("mask", inp.mask.len(), b * s)?;
+        self.check_len("pos", inp.pos.len(), b)?;
+
+        let t0 = Instant::now();
+        let args: Vec<Literal> = vec![
+            lit_i32(&[b], inp.tokens)?,
+            lit_f32(&[m.n_layers, 2, b, s, m.n_heads, m.d_head], inp.kv)?,
+            lit_f32(&[b, s], inp.mask)?,
+            lit_i32(&[b], inp.pos)?,
+        ];
+        let upload = t0.elapsed();
+
+        let t1 = Instant::now();
+        let result = self.exe.execute::<Literal>(&args)?;
+        let execute = t1.elapsed();
+
+        let t2 = Instant::now();
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 4 {
+            return Err(Error::Engine(format!(
+                "decode returned {} outputs, expected 4",
+                parts.len()
+            )));
+        }
+        let mut it = parts.into_iter();
+        let logits = to_vec_f32(&it.next().unwrap())?;
+        let k_new = to_vec_f32(&it.next().unwrap())?;
+        let v_new = to_vec_f32(&it.next().unwrap())?;
+        let scores = to_vec_f32(&it.next().unwrap())?;
+        let download = t2.elapsed();
+
+        debug_assert_eq!(k_new.len(), m.n_layers * b * m.n_heads * m.d_head);
+        Ok(DecodeOutputs {
+            logits,
+            k_new,
+            v_new,
+            scores,
+            timing: CallTiming { upload, execute, download },
+        })
+    }
+
+    fn check_len(&self, name: &str, got: usize, want: usize) -> Result<()> {
+        if got != want {
+            return Err(Error::Engine(format!(
+                "decode input '{name}': got {got} elements, expected {want}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Outputs of a prefill call.
+pub struct PrefillOutputs {
+    pub logits_last: Vec<f32>, // [B,V]
+    pub kv: Vec<f32>,          // [nl,2,B,L,H,D]
+    pub scores_last: Vec<f32>, // [B,L]
+    pub timing: CallTiming,
+}
+
+pub struct PrefillProgram {
+    exe: PjRtLoadedExecutable,
+    pub batch: usize,
+    pub len: usize,
+    pub model: ModelSpec,
+}
+
+impl PrefillProgram {
+    pub fn new(exe: PjRtLoadedExecutable, batch: usize, len: usize, model: ModelSpec) -> Self {
+        PrefillProgram { exe, batch, len, model }
+    }
+
+    /// Run prefill over right-padded `tokens` ([B, L]) with valid `lengths`.
+    pub fn run(&self, tokens: &[i32], lengths: &[i32]) -> Result<PrefillOutputs> {
+        let (b, l) = (self.batch, self.len);
+        if tokens.len() != b * l || lengths.len() != b {
+            return Err(Error::Engine(format!(
+                "prefill input shapes: tokens {} (want {}), lengths {} (want {b})",
+                tokens.len(),
+                b * l,
+                lengths.len()
+            )));
+        }
+        let t0 = Instant::now();
+        let args = vec![lit_i32(&[b, l], tokens)?, lit_i32(&[b], lengths)?];
+        let upload = t0.elapsed();
+
+        let t1 = Instant::now();
+        let result = self.exe.execute::<Literal>(&args)?;
+        let execute = t1.elapsed();
+
+        let t2 = Instant::now();
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Engine(format!(
+                "prefill returned {} outputs, expected 3",
+                parts.len()
+            )));
+        }
+        let mut it = parts.into_iter();
+        let logits_last = to_vec_f32(&it.next().unwrap())?;
+        let kv = to_vec_f32(&it.next().unwrap())?;
+        let scores_last = to_vec_f32(&it.next().unwrap())?;
+        let download = t2.elapsed();
+
+        Ok(PrefillOutputs {
+            logits_last,
+            kv,
+            scores_last,
+            timing: CallTiming { upload, execute, download },
+        })
+    }
+}

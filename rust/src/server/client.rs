@@ -1,0 +1,109 @@
+//! Blocking client for the JSON-lines protocol + a synthetic-workload
+//! bench client (used by `asrkf bench-client` and the serving bench).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Json};
+use crate::util::rng::Pcg64;
+use crate::workload::synthetic::prose;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClientResult {
+    pub text: String,
+    pub compression: f64,
+    pub generated_tokens: usize,
+    pub ttft_ms: f64,
+    pub e2e_ms: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        policy: &str,
+        seed: u64,
+    ) -> Result<ClientResult> {
+        let req = Json::obj(vec![
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+            ("policy", Json::str(policy)),
+            ("seed", Json::num(seed as f64)),
+        ]);
+        let mut line = String::new();
+        crate::util::json::write_json(&req, &mut line);
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        let v = parse(resp.trim()).map_err(Error::Server)?;
+        if let Some(err) = v.get("error").as_str() {
+            return Err(Error::Server(err.to_string()));
+        }
+        Ok(ClientResult {
+            text: v.get("text").as_str().unwrap_or_default().to_string(),
+            compression: v.get("compression").as_f64().unwrap_or(0.0),
+            generated_tokens: v.get("generated_tokens").as_usize().unwrap_or(0),
+            ttft_ms: v.get("ttft_ms").as_f64().unwrap_or(0.0),
+            e2e_ms: v.get("e2e_ms").as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+/// Drive a running server with `n` requests over `concurrency`
+/// connections; prints latency/throughput and returns mean e2e ms.
+pub fn run_bench_client(addr: &str, n: usize, concurrency: usize, max_new: usize) -> Result<()> {
+    let t0 = Instant::now();
+    let per = n.div_ceil(concurrency);
+    let addr = addr.to_string();
+    let mut handles = Vec::new();
+    for c in 0..concurrency {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<(f64, f64, usize)>> {
+            let mut rng = Pcg64::new(1000 + c as u64);
+            let mut client = Client::connect(&addr)?;
+            let mut out = Vec::new();
+            for i in 0..per {
+                let prompt = prose(&mut rng, 48 + (i * 13) % 64);
+                let r = client.generate(&prompt, max_new, "asrkf", c as u64 * 100 + i as u64)?;
+                out.push((r.ttft_ms, r.e2e_ms, r.generated_tokens));
+            }
+            Ok(out)
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().map_err(|_| Error::Server("client thread panicked".into()))??);
+    }
+    let wall = t0.elapsed();
+    let total_tokens: usize = all.iter().map(|a| a.2).sum();
+    let mean_ttft = all.iter().map(|a| a.0).sum::<f64>() / all.len() as f64;
+    let mean_e2e = all.iter().map(|a| a.1).sum::<f64>() / all.len() as f64;
+    println!(
+        "bench-client: {} requests, {} tokens in {:.2?}  ({:.1} tok/s)",
+        all.len(),
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall.as_secs_f64()
+    );
+    println!("  mean ttft {mean_ttft:.1} ms, mean e2e {mean_e2e:.1} ms");
+    Ok(())
+}
+
+

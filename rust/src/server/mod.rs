@@ -1,0 +1,59 @@
+//! TCP serving frontend: one thread per connection, JSON-lines
+//! protocol, bounded handoff to the coordinator thread. (tokio is
+//! unavailable offline; a thread-per-connection frontend is fully
+//! adequate at the batch sizes the single-core CPU backend supports.)
+
+pub mod client;
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::config::{EngineConfig, ServerConfig};
+use crate::coordinator::{self, CoordinatorHandle};
+use crate::error::Result;
+
+/// Start the coordinator and serve on `server.addr` until process exit.
+pub fn serve_blocking(cfg: EngineConfig, server: ServerConfig) -> Result<()> {
+    let (handle, _join) = coordinator::spawn(cfg, server.clone())?;
+    let listener = TcpListener::bind(&server.addr)?;
+    log::info!("listening on {}", server.addr);
+    println!("asrkf serving on {}", server.addr);
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, h) {
+                        log::debug!("connection closed: {e}");
+                    }
+                });
+            }
+            Err(e) => log::warn!("accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, handle: CoordinatorHandle) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    log::debug!("connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match protocol::parse_request(&line) {
+            Err(e) => protocol::error_line(&e),
+            Ok(params) => match handle.generate_blocking(params) {
+                Ok(resp) => protocol::response_line(&resp),
+                Err(e) => protocol::error_line(&format!("{e}")),
+            },
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.flush()?;
+    }
+    Ok(())
+}

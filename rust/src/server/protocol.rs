@@ -1,0 +1,115 @@
+//! JSON-lines wire protocol.
+//!
+//! Request (one line):
+//!   {"prompt": "...", "max_new": 64, "policy": "asrkf", "seed": 0}
+//! Response (one line):
+//!   {"id": 3, "text": "...", "prompt_tokens": 12, "generated_tokens": 64,
+//!    "final_active_kv": 40, "compression": 0.47, "ttft_ms": 12.1,
+//!    "e2e_ms": 480.9}
+//! or {"error": "..."}.
+
+use crate::coordinator::{GenParams, GenResponse};
+use crate::util::json::{parse, Json};
+
+pub fn parse_request(line: &str) -> Result<GenParams, String> {
+    let v = parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let prompt = v
+        .get("prompt")
+        .as_str()
+        .ok_or("missing 'prompt'")?
+        .to_string();
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    Ok(GenParams {
+        prompt,
+        max_new: v.get("max_new").as_usize().unwrap_or(64),
+        policy: v.get("policy").as_str().unwrap_or("asrkf").to_string(),
+        seed: v.get("seed").as_f64().unwrap_or(0.0) as u64,
+    })
+}
+
+pub fn response_line(resp: &GenResponse) -> String {
+    let v = match &resp.error {
+        Some(e) => Json::obj(vec![("id", Json::num(resp.id as f64)), ("error", Json::str(e))]),
+        None => Json::obj(vec![
+            ("id", Json::num(resp.id as f64)),
+            ("text", Json::str(&resp.text)),
+            ("prompt_tokens", Json::num(resp.prompt_tokens as f64)),
+            ("generated_tokens", Json::num(resp.generated_tokens as f64)),
+            ("final_active_kv", Json::num(resp.final_active_kv as f64)),
+            ("compression", Json::num((resp.compression * 1e4).round() / 1e4)),
+            ("ttft_ms", Json::num((resp.ttft.as_secs_f64() * 1e4).round() / 10.0)),
+            ("e2e_ms", Json::num((resp.e2e.as_secs_f64() * 1e4).round() / 10.0)),
+        ]),
+    };
+    let mut s = String::new();
+    crate::util::json::write_json(&v, &mut s);
+    s.push('\n');
+    s
+}
+
+pub fn error_line(msg: &str) -> String {
+    let v = Json::obj(vec![("error", Json::str(msg))]);
+    let mut s = String::new();
+    crate::util::json::write_json(&v, &mut s);
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn request_roundtrip() {
+        let p = parse_request(r#"{"prompt": "hello", "max_new": 10, "policy": "full"}"#).unwrap();
+        assert_eq!(p.prompt, "hello");
+        assert_eq!(p.max_new, 10);
+        assert_eq!(p.policy, "full");
+        assert_eq!(p.seed, 0);
+    }
+
+    #[test]
+    fn request_defaults() {
+        let p = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(p.max_new, 64);
+        assert_eq!(p.policy, "asrkf");
+    }
+
+    #[test]
+    fn request_rejects_bad_input() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"max_new": 5}"#).is_err());
+        assert!(parse_request(r#"{"prompt": ""}"#).is_err());
+    }
+
+    #[test]
+    fn response_line_shape() {
+        let r = GenResponse {
+            id: 7,
+            text: "hi".into(),
+            error: None,
+            prompt_tokens: 3,
+            generated_tokens: 2,
+            final_active_kv: 4,
+            compression: 0.25,
+            ttft: Duration::from_millis(12),
+            e2e: Duration::from_millis(100),
+        };
+        let line = response_line(&r);
+        assert!(line.ends_with('\n'));
+        let v = parse(line.trim()).unwrap();
+        assert_eq!(v.get("id").as_usize(), Some(7));
+        assert_eq!(v.get("text").as_str(), Some("hi"));
+        assert_eq!(v.get("compression").as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn error_response() {
+        let r = GenResponse::error(1, "boom");
+        let v = parse(response_line(&r).trim()).unwrap();
+        assert_eq!(v.get("error").as_str(), Some("boom"));
+    }
+}

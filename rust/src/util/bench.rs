@@ -1,0 +1,255 @@
+//! Micro-benchmark + table-report harness.
+//!
+//! criterion is unavailable offline; `cargo bench` targets in
+//! `rust/benches/` are `harness = false` binaries built on this module.
+//! It provides (a) `Bencher` — warmup + timed iterations with robust
+//! percentile stats, and (b) `Table`/`Series` — formatted reproduction
+//! output matching the paper's tables and figures, also exported as CSV
+//! under `artifacts/` for EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// Timing statistics over a set of iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        Stats {
+            iters: n,
+            mean,
+            p50: pick(0.5),
+            p90: pick(0.9),
+            p99: pick(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Warmup-then-measure runner.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, iters: 20 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Bencher { warmup_iters, iters }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "{name:<42} mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}  ({} iters)",
+            stats.mean, stats.p50, stats.p99, stats.iters
+        );
+        stats
+    }
+}
+
+/// A paper-style results table.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-+-"));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write rows as CSV (headers included) for EXPERIMENTS.md ingestion.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+/// A per-step series (figure data), with ASCII sparkline rendering.
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Downsampled ASCII plot: `width` columns, `height` rows.
+    pub fn ascii_plot(series: &[&Series], width: usize, height: usize) -> String {
+        let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+        if all.is_empty() {
+            return String::new();
+        }
+        let (xmin, xmax) = all.iter().fold((f64::MAX, f64::MIN), |(a, b), p| (a.min(p.0), b.max(p.0)));
+        let (ymin, ymax) = all.iter().fold((f64::MAX, f64::MIN), |(a, b), p| (a.min(p.1), b.max(p.1)));
+        let yspan = (ymax - ymin).max(1e-9);
+        let xspan = (xmax - xmin).max(1e-9);
+        let mut grid = vec![vec![' '; width]; height];
+        let marks = ['*', '+', 'o', 'x'];
+        for (si, s) in series.iter().enumerate() {
+            for &(x, y) in &s.points {
+                let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+                let row = height - 1 - (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+                grid[row][col] = marks[si % marks.len()];
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "y: {ymin:.0}..{ymax:.0}   x: {xmin:.0}..{xmax:.0}");
+        for (si, s) in series.iter().enumerate() {
+            let _ = writeln!(out, "  [{}] {}", marks[si % marks.len()], s.name);
+        }
+        for row in grid {
+            let _ = writeln!(out, "|{}", row.into_iter().collect::<String>());
+        }
+        out
+    }
+
+    /// Export one or more aligned series as CSV: x,name1,name2...
+    pub fn write_csv(series: &[&Series], path: &str) -> std::io::Result<()> {
+        let mut out = String::new();
+        let names: Vec<&str> = series.iter().map(|s| s.name.as_str()).collect();
+        let _ = writeln!(out, "x,{}", names.join(","));
+        let n = series.iter().map(|s| s.points.len()).max().unwrap_or(0);
+        for i in 0..n {
+            let x = series
+                .iter()
+                .find_map(|s| s.points.get(i).map(|p| p.0))
+                .unwrap_or(i as f64);
+            let cells: Vec<String> = series
+                .iter()
+                .map(|s| s.points.get(i).map(|p| format!("{}", p.1)).unwrap_or_default())
+                .collect();
+            let _ = writeln!(out, "{x},{}", cells.join(","));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        let s = Stats::from_samples(samples);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(100));
+        assert_eq!(s.p50, Duration::from_millis(51)); // index round(99*0.5)=50 -> sample 51
+        assert_eq!(s.p99, Duration::from_millis(99));
+    }
+
+    #[test]
+    fn table_render_alignment() {
+        let mut t = Table::new("Table 1", &["Method", "Active KV"]);
+        t.row(&["Full KV".into(), "514".into()]);
+        t.row(&["ASR-KF-EGR".into(), "170".into()]);
+        let r = t.render();
+        assert!(r.contains("Table 1"));
+        assert!(r.contains("ASR-KF-EGR"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn series_plot_nonempty() {
+        let mut s = Series::new("kv");
+        for i in 0..100 {
+            s.push(i as f64, (i as f64).sqrt());
+        }
+        let plot = Series::ascii_plot(&[&s], 40, 10);
+        assert!(plot.contains('*'));
+    }
+
+    #[test]
+    fn bencher_runs() {
+        let b = Bencher::new(1, 5);
+        let mut count = 0;
+        b.run("noop", || count += 1);
+        assert_eq!(count, 6);
+    }
+}

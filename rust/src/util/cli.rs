@@ -1,0 +1,128 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and a
+//! positional subcommand. Typed getters parse on access with
+//! contextual error messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: invalid integer '{v}' ({e})")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: invalid integer '{v}' ({e})")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: invalid number '{v}' ({e})")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32, String> {
+        self.f64_or(key, default as f64).map(|v| v as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--port", "7777", "--verbose", "--tau=0.4"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0).unwrap(), 7777);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.f64_or("tau", 0.5).unwrap(), 0.4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["gen"]);
+        assert_eq!(a.usize_or("steps", 500).unwrap(), 500);
+        assert_eq!(a.str_or("policy", "asrkf"), "asrkf");
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn invalid_number_is_error() {
+        let a = parse(&["gen", "--steps", "abc"]);
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["run", "file1", "file2"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities replacing crates unavailable in the offline
+//! environment (DESIGN.md §3): JSON, CLI parsing, RNG, property testing,
+//! micro-benchmarking and logging.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

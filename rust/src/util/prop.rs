@@ -1,0 +1,132 @@
+//! Mini property-based testing harness (proptest is unavailable offline).
+//!
+//! Usage pattern, mirroring proptest's loop:
+//!
+//! ```ignore
+//! prop_check(128, |g| {
+//!     let len = g.usize(1, 100);
+//!     let xs = g.vec_f32(len, -1.0, 1.0);
+//!     // ... assert invariant, or return Err(msg) ...
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case runs with a distinct deterministic seed; failures report
+//! the seed so the case can be replayed exactly. No shrinking — cases
+//! are kept small by construction instead.
+
+use super::rng::Pcg64;
+
+/// Value generator handed to each property case.
+pub struct G {
+    pub rng: Pcg64,
+    pub case_seed: u64,
+}
+
+impl G {
+    pub fn usize(&mut self, lo: usize, hi_incl: usize) -> usize {
+        self.rng.gen_range(lo as u64, hi_incl as u64 + 1) as usize
+    }
+
+    pub fn u32(&mut self, lo: u32, hi_incl: u32) -> u32 {
+        self.rng.gen_range(lo as u64, hi_incl as u64 + 1) as u32
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.f64() < p_true
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi_incl: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize(lo, hi_incl)).collect()
+    }
+
+    /// Random subset of 0..n (each element included with probability p).
+    pub fn subset(&mut self, n: usize, p: f64) -> Vec<usize> {
+        (0..n).filter(|_| self.bool(p)).collect()
+    }
+}
+
+/// Run `cases` property cases; panics with the failing seed on error.
+pub fn prop_check<F>(cases: usize, mut property: F)
+where
+    F: FnMut(&mut G) -> Result<(), String>,
+{
+    let base = match std::env::var("ASRKF_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("ASRKF_PROP_SEED must be u64"),
+        Err(_) => 0x5eed,
+    };
+    for case in 0..cases {
+        let case_seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = G { rng: Pcg64::new(case_seed), case_seed };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property failed on case {case}/{cases} (replay with ASRKF_PROP_SEED={base}, case seed {case_seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning Err instead of panicking, for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(50, |g| {
+            count += 1;
+            let len = g.usize(0, 10);
+            let v = g.vec_f32(len, -1.0, 1.0);
+            if v.iter().any(|x| !(-1.0..=1.0).contains(x)) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        prop_check(10, |g| {
+            let x = g.usize(0, 100);
+            if x > 50 {
+                return Err(format!("x={x} too big"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn subset_is_sorted_unique() {
+        prop_check(20, |g| {
+            let s = g.subset(64, 0.3);
+            if s.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("not strictly increasing".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,183 @@
+//! PCG-XSH-RR 64/32 pseudo-random generator + sampling helpers.
+//!
+//! The `rand` crate is unavailable offline; we implement `rand_core`'s
+//! `RngCore` over a PCG so any future `rand`-based code interoperates.
+//! Deterministic seeding is load-bearing: the RR recovery level rewinds
+//! the sampler by reseeding from a recorded stream position, and every
+//! bench/workload is reproducible from its seed.
+
+use rand_core::RngCore;
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014), default stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// number of `u32` draws so far — recorded/rewound by RR recovery.
+    pub draws: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = (stream << 1) | 1;
+        let mut rng = Self { state: 0, inc, draws: 0 };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.draws = 0;
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        self.draws += 1;
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) single precision.
+    pub fn f32(&mut self) -> f32 {
+        (self.step() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [lo, hi) via Lemire's method (hi > lo).
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        let span = hi - lo;
+        // rejection-free enough for our span sizes; simple modulo with
+        // 64-bit draw keeps bias < 2^-40 for spans < 2^24
+        lo + self.next_u64() % span
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.gen_range(0, items.len() as u64) as usize]
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate lambda (Poisson inter-arrival times).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-12).ln() / lambda
+    }
+
+    /// Advance the generator until `draws == target` (target >= draws).
+    /// Used by RR recovery to replay the sampler from a checkpoint.
+    pub fn fast_forward_to(&mut self, target: u64) {
+        while self.draws < target {
+            self.step();
+        }
+    }
+}
+
+impl RngCore for Pcg64 {
+    fn next_u32(&mut self) -> u32 {
+        self.step()
+    }
+    fn next_u64(&mut self) -> u64 {
+        (self.step() as u64) << 32 | self.step() as u64
+    }
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        for chunk in dest.chunks_mut(4) {
+            let v = self.step().to_le_bytes();
+            chunk.copy_from_slice(&v[..chunk.len()]);
+        }
+    }
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), rand_core::Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_roughly_uniform() {
+        let mut r = Pcg64::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let v = r.gen_range(10, 20);
+            assert!((10..20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn fast_forward_replays_stream() {
+        let mut a = Pcg64::new(5);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let checkpoint = a.draws;
+        let expected = a.next_u32();
+
+        let mut b = Pcg64::new(5);
+        b.fast_forward_to(checkpoint);
+        assert_eq!(b.next_u32(), expected);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Workload generation: synthetic template prompts (in-distribution for
+//! the stand-in model), passkey retrieval tasks, and Poisson serving
+//! traces.
+
+pub mod passkey;
+pub mod synthetic;
+pub mod trace;

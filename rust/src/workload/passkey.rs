@@ -1,0 +1,96 @@
+//! Needle-in-haystack passkey retrieval (paper §4.3, Table 2).
+//!
+//! A 5-digit passkey is embedded at the start of a filler haystack; the
+//! prompt ends with the query. Retrieval succeeds iff the model's
+//! greedy continuation starts with the passkey digits. The experiment
+//! runs under any `KvPolicy`, so benches can compare ASR-KF-EGR against
+//! Full KV (parity is the paper's claim) and against irreversible
+//! baselines (which lose the needle).
+
+use crate::baselines::make_policy;
+use crate::config::{EngineConfig, SamplingConfig};
+use crate::engine::{GenStats, Generator};
+use crate::error::Result;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+use crate::workload::synthetic::{passkey_prompt, random_passkey};
+
+#[derive(Debug, Clone)]
+pub struct PasskeyOutcome {
+    pub policy: String,
+    pub target: String,
+    pub retrieved: String,
+    /// end-to-end retrieval: the model's greedy continuation matches
+    /// the needle (requires the stand-in model to have copy skill —
+    /// see EXPERIMENTS.md Table-2 discussion)
+    pub pass: bool,
+    /// mechanism-level probe: fraction of the needle's KV rows that are
+    /// active or restorable at the end of the run. This is the paper's
+    /// §3.3 reversibility claim measured directly: 1.0 for ASR-KF-EGR
+    /// and Full KV, < 1.0 for irreversible eviction baselines once the
+    /// needle leaves their kept set.
+    pub needle_recoverable: f64,
+    pub haystack_len: usize,
+    pub stats: GenStats,
+}
+
+impl PasskeyOutcome {
+    pub fn report(&self) -> String {
+        format!(
+            "passkey[{}] haystack={}B target={} retrieved={:?} -> {} | needle KV recoverable {:.0}% -> {}  (active {}/{}, compression {:.1}%)",
+            self.policy,
+            self.haystack_len,
+            self.target,
+            self.retrieved,
+            if self.pass { "PASS" } else { "FAIL" },
+            self.needle_recoverable * 100.0,
+            if self.needle_recoverable == 1.0 { "PASS" } else { "FAIL" },
+            self.stats.final_active_kv,
+            self.stats.total_tokens,
+            self.stats.compression * 100.0,
+        )
+    }
+}
+
+/// Run one passkey retrieval under `policy_name`. Greedy decoding
+/// (T = 0), matching the paper's Table 2 setting.
+pub fn run_passkey(
+    rt: &Runtime,
+    cfg: &EngineConfig,
+    policy_name: &str,
+    haystack_len: usize,
+    seed: u64,
+) -> Result<PasskeyOutcome> {
+    let mut rng = Pcg64::new(seed);
+    let target = random_passkey(&mut rng);
+    let prompt = passkey_prompt(&mut rng, haystack_len, &target);
+
+    let mut gen_cfg = cfg.clone();
+    gen_cfg.sampling = SamplingConfig::greedy();
+    let gen = Generator::new(rt, gen_cfg);
+    let policy = make_policy(policy_name, &cfg.freeze)?;
+    let out = gen.generate(&prompt, policy, 8)?;
+
+    // needle digit positions: "the pass key is " is 16 bytes
+    let needle_range = 16usize..21;
+    let recoverable = needle_range
+        .clone()
+        .filter(|&p| {
+            matches!(
+                out.row_states.get(p),
+                Some(crate::engine::generator::RowState::Active)
+                    | Some(crate::engine::generator::RowState::Recoverable)
+            )
+        })
+        .count();
+    let retrieved: String = out.text.chars().take(5).collect();
+    Ok(PasskeyOutcome {
+        policy: policy_name.to_string(),
+        pass: retrieved == target,
+        target,
+        retrieved,
+        needle_recoverable: recoverable as f64 / needle_range.len() as f64,
+        haystack_len,
+        stats: out.stats,
+    })
+}

@@ -1,0 +1,145 @@
+//! Synthetic workload text generator — the rust port of
+//! `python/compile/data.py`'s template corpus, so serving-time prompts
+//! are in-distribution for the build-time-trained stand-in model.
+
+use crate::util::rng::Pcg64;
+
+pub const SUBJECTS: &[&str] = &[
+    "the model", "the system", "the cache", "a token", "the scheduler",
+    "the server", "a request", "the window", "the kernel", "the router",
+    "the engine", "a batch", "the queue", "memory", "the process",
+    "the network", "a signal", "the buffer", "an index", "the store",
+];
+pub const VERBS: &[&str] = &[
+    "updates", "freezes", "restores", "computes", "routes", "stores",
+    "evicts", "scans", "emits", "tracks", "samples", "decodes",
+    "encodes", "schedules", "balances", "monitors", "rewrites", "reads",
+];
+pub const OBJECTS: &[&str] = &[
+    "the key value pairs", "the attention scores", "a sliding window",
+    "the frozen rows", "the active cache", "every request", "the logits",
+    "the relevance signal", "a freeze timer", "the entropy trace",
+    "the next token", "the decode step", "the batch queue",
+    "the memory budget", "the recovery ladder", "the context",
+];
+pub const ADVERBS: &[&str] = &[
+    "quickly", "slowly", "carefully", "eagerly", "lazily", "often",
+    "rarely", "smoothly", "safely", "twice", "in order", "at once",
+];
+pub const CONNECTIVES: &[&str] = &["then", "meanwhile", "however", "therefore", "later", "next"];
+
+pub const FILLER_SENTENCES: &[&str] = &[
+    "the grass is green and the sky is blue here. ",
+    "one two three four five six seven eight nine ten. ",
+    "the quick brown fox jumps over the lazy dog again. ",
+    "rain falls on the hills and rivers run to the sea. ",
+    "day follows night and night follows day as always. ",
+];
+
+/// One template sentence (mirrors data.py `sentence`).
+pub fn sentence(rng: &mut Pcg64) -> String {
+    let mut s = format!(
+        "{} {} {}",
+        rng.choice(SUBJECTS),
+        rng.choice(VERBS),
+        rng.choice(OBJECTS)
+    );
+    if rng.f64() < 0.4 {
+        s.push(' ');
+        s.push_str(*rng.choice(ADVERBS));
+    }
+    if rng.f64() < 0.3 {
+        s.push(' ');
+        s.push_str(*rng.choice(CONNECTIVES));
+        s.push_str(&format!(
+            " {} {} {}",
+            rng.choice(SUBJECTS),
+            rng.choice(VERBS),
+            rng.choice(OBJECTS)
+        ));
+    }
+    s.push_str(". ");
+    s
+}
+
+/// Template prose of at least `n_bytes` bytes (truncated to exactly).
+pub fn prose(rng: &mut Pcg64, n_bytes: usize) -> String {
+    let mut out = String::new();
+    while out.len() < n_bytes {
+        out.push_str(&sentence(rng));
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+/// Repetitive haystack filler (mirrors data.py `filler`).
+pub fn filler(rng: &mut Pcg64, n_bytes: usize) -> String {
+    let mut out = String::new();
+    while out.len() < n_bytes {
+        out.push_str(*rng.choice(FILLER_SENTENCES));
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+/// Passkey retrieval prompt WITHOUT the answer (mirrors
+/// data.py `make_passkey_prompt`): the model must produce the digits.
+pub fn passkey_prompt(rng: &mut Pcg64, total_len: usize, key: &str) -> String {
+    let head = format!("the pass key is {key}. remember it. ");
+    let tail = "what is the pass key? the pass key is ";
+    let fill = total_len.saturating_sub(head.len() + tail.len());
+    format!("{head}{}{tail}", filler(rng, fill))
+}
+
+/// A random 5-digit passkey (paper §4.3).
+pub fn random_passkey(rng: &mut Pcg64) -> String {
+    format!("{}", rng.gen_range(10_000, 100_000))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prose_has_requested_length() {
+        let mut rng = Pcg64::new(1);
+        assert_eq!(prose(&mut rng, 500).len(), 500);
+    }
+
+    #[test]
+    fn sentences_are_templates() {
+        let mut rng = Pcg64::new(2);
+        for _ in 0..20 {
+            let s = sentence(&mut rng);
+            assert!(s.ends_with(". "));
+            assert!(SUBJECTS.iter().any(|sub| s.starts_with(sub)), "{s}");
+        }
+    }
+
+    #[test]
+    fn passkey_prompt_contains_needle_and_query() {
+        let mut rng = Pcg64::new(3);
+        let p = passkey_prompt(&mut rng, 600, "44181");
+        assert!(p.contains("the pass key is 44181. remember it."));
+        assert!(p.ends_with("what is the pass key? the pass key is "));
+        assert!(!p[40..p.len() - 40].contains("44181"), "answer leaked into filler");
+        assert!((590..=610).contains(&p.len()));
+    }
+
+    #[test]
+    fn random_passkey_is_five_digits() {
+        let mut rng = Pcg64::new(4);
+        for _ in 0..100 {
+            let k = random_passkey(&mut rng);
+            assert_eq!(k.len(), 5);
+            assert!(k.chars().all(|c| c.is_ascii_digit()));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        assert_eq!(prose(&mut a, 200), prose(&mut b, 200));
+    }
+}

@@ -1,0 +1,67 @@
+//! Serving workload traces: Poisson arrivals of generation requests
+//! with template prompts — drives the serving_throughput bench and the
+//! bench-client CLI.
+
+use crate::util::rng::Pcg64;
+use crate::workload::synthetic::prose;
+
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// arrival offset from trace start, in milliseconds
+    pub arrival_ms: u64,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// Generate a Poisson-arrival request trace.
+///
+/// * `rate_per_s` — mean arrival rate
+/// * `n` — number of requests
+/// * prompt lengths uniform in [min_prompt, max_prompt] bytes
+pub fn poisson_trace(
+    seed: u64,
+    n: usize,
+    rate_per_s: f64,
+    min_prompt: usize,
+    max_prompt: usize,
+    max_new: usize,
+) -> Vec<TraceRequest> {
+    let mut rng = Pcg64::new(seed);
+    let mut t_ms = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t_ms += rng.exponential(rate_per_s) * 1000.0;
+            let plen = rng.gen_range(min_prompt as u64, max_prompt as u64 + 1) as usize;
+            TraceRequest {
+                arrival_ms: t_ms as u64,
+                prompt: prose(&mut rng, plen),
+                max_new,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_ordered_and_rate_roughly_matches() {
+        let tr = poisson_trace(7, 200, 10.0, 32, 64, 16);
+        assert_eq!(tr.len(), 200);
+        assert!(tr.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        // 200 arrivals at 10/s ~ 20s span; tolerate 2x spread
+        let span_s = tr.last().unwrap().arrival_ms as f64 / 1000.0;
+        assert!((10.0..40.0).contains(&span_s), "span {span_s}");
+    }
+
+    #[test]
+    fn prompts_in_range_and_deterministic() {
+        let a = poisson_trace(3, 20, 5.0, 40, 80, 8);
+        let b = poisson_trace(3, 20, 5.0, 40, 80, 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert!((40..=80).contains(&x.prompt.len()));
+        }
+    }
+}

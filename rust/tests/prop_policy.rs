@@ -1,0 +1,188 @@
+//! Property-based tests on KV-policy + scheduler invariants (the L3
+//! analog of the python hypothesis sweeps). Uses the in-repo
+//! `util::prop` harness (proptest is unavailable offline — DESIGN.md §3).
+
+use asrkf::baselines::{H2oPolicy, StreamingLlmPolicy};
+use asrkf::config::FreezeConfig;
+use asrkf::kv::freeze::freeze_duration;
+use asrkf::kv::policy::{AsrKfPolicy, KvPolicy, UnfreezeScope};
+use asrkf::prop_assert;
+use asrkf::util::prop::{prop_check, G};
+
+fn random_cfg(g: &mut G) -> FreezeConfig {
+    FreezeConfig {
+        window_k: g.usize(2, 48),
+        tau: g.f32(0.2, 1.5),
+        softness_k: g.f32(0.5, 4.0),
+        history_w: g.usize(16, 512),
+        n_sink: g.usize(0, 6),
+        r_budget: g.usize(1, 64),
+        relative_tau: g.bool(0.5),
+    }
+}
+
+#[test]
+fn prop_asrkf_freeze_restore_disjoint_and_budgeted() {
+    prop_check(60, |g| {
+        let cfg = random_cfg(g);
+        let r = cfg.r_budget;
+        let mut p = AsrKfPolicy::new(cfg);
+        let start = g.usize(1, 64);
+        p.on_prefill(&g.vec_f32(start, 0.0, 1.0), start);
+        let mut len = start;
+        for step in 1..=80u64 {
+            let plan = p.plan(step, len, r);
+            prop_assert!(plan.freeze.len() <= r, "freeze budget exceeded: {}", plan.freeze.len());
+            prop_assert!(plan.restore.len() <= r, "restore budget exceeded");
+            for f in &plan.freeze {
+                prop_assert!(!plan.restore.contains(f), "pos {f} frozen and restored in one step");
+            }
+            prop_assert!(!plan.drop_payload, "asrkf must never drop payloads");
+            len += 1;
+            let scores = g.vec_f32(len, 0.0, 1.0);
+            p.observe(step, &scores, len);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_asrkf_conservation_active_plus_frozen() {
+    prop_check(40, |g| {
+        let cfg = random_cfg(g);
+        let r = cfg.r_budget;
+        let mut p = AsrKfPolicy::new(cfg);
+        let start = g.usize(4, 32);
+        p.on_prefill(&g.vec_f32(start, 0.0, 1.0), start);
+        let mut len = start;
+        for step in 1..=60u64 {
+            p.plan(step, len, r);
+            len += 1;
+            p.observe(step, &g.vec_f32(len, 0.0, 1.0), len);
+            prop_assert!(
+                p.active_count() + p.frozen_count() == len,
+                "conservation violated at step {step}: {} + {} != {len}",
+                p.active_count(),
+                p.frozen_count()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_asrkf_sinks_and_window_never_frozen() {
+    prop_check(40, |g| {
+        let cfg = random_cfg(g);
+        let r = cfg.r_budget;
+        let n_sink = cfg.n_sink;
+        let window_k = cfg.window_k;
+        let mut p = AsrKfPolicy::new(cfg);
+        let start = g.usize(8, 64);
+        p.on_prefill(&g.vec_f32(start, 0.0, 0.01), start);
+        let mut len = start;
+        for step in 1..=60u64 {
+            let plan = p.plan(step, len, r);
+            let window_start = len.saturating_sub(window_k);
+            for &f in &plan.freeze {
+                prop_assert!(f >= n_sink, "sink {f} frozen (n_sink {n_sink})");
+                prop_assert!(f < window_start, "window pos {f} frozen (start {window_start})");
+            }
+            len += 1;
+            // adversarially low scores to maximize freeze pressure
+            p.observe(step, &g.vec_f32(len, 0.0, 0.01), len);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_full_reset_eventually_restores_everything() {
+    prop_check(30, |g| {
+        let cfg = random_cfg(g);
+        let r = cfg.r_budget.max(4);
+        let mut p = AsrKfPolicy::new(cfg);
+        let start = g.usize(16, 64);
+        p.on_prefill(&g.vec_f32(start, 0.0, 0.01), start);
+        let mut len = start;
+        for step in 1..=40u64 {
+            p.plan(step, len, r);
+            len += 1;
+            p.observe(step, &g.vec_f32(len, 0.0, 0.01), len);
+        }
+        p.request_unfreeze(UnfreezeScope::Full);
+        // drain restores (budget-capped, so iterate)
+        for step in 41..=200u64 {
+            let plan = p.plan(step, len, r);
+            if plan.restore.is_empty() && p.frozen_count() == 0 {
+                break;
+            }
+        }
+        prop_assert!(p.frozen_count() == 0, "still {} frozen after FR drain", p.frozen_count());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_freeze_duration_matches_formula() {
+    prop_check(200, |g| {
+        let c = g.u32(0, 100_000);
+        let k = g.f32(0.25, 8.0);
+        let d = freeze_duration(c, k);
+        let expected = ((c as f64).sqrt() / k as f64).floor() as u32;
+        prop_assert!(d == expected, "c={c} k={k}: got {d}, want {expected}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_h2o_active_set_bounded_after_drain() {
+    prop_check(30, |g| {
+        let cfg = random_cfg(g);
+        let r = cfg.r_budget.max(8);
+        let frac = g.f32(0.2, 0.8);
+        let floor = cfg.n_sink + cfg.window_k;
+        let mut p = H2oPolicy::with_budget(cfg, frac);
+        let len = g.usize(40, 160);
+        p.on_prefill(&g.vec_f32(len, 0.0, 1.0), len);
+        for step in 1..=100u64 {
+            let plan = p.plan(step, len, r);
+            prop_assert!(!plan.freeze.iter().any(|f| plan.restore.contains(f)), "overlap");
+            prop_assert!(plan.restore.is_empty(), "h2o never restores");
+            if plan.freeze.is_empty() {
+                break;
+            }
+        }
+        let budget = ((len as f32 * frac) as usize).max(floor);
+        prop_assert!(
+            p.active_count() <= budget.max(floor),
+            "active {} exceeds budget {budget}",
+            p.active_count()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_converges_to_sinks_plus_window() {
+    prop_check(30, |g| {
+        let cfg = random_cfg(g);
+        let r = cfg.r_budget.max(8);
+        let n_sink = cfg.n_sink;
+        let window_k = cfg.window_k;
+        let mut p = StreamingLlmPolicy::new(cfg);
+        let len = g.usize(window_k + n_sink + 1, 200);
+        p.on_prefill(&g.vec_f32(len, 0.0, 1.0), len);
+        for step in 1..=100u64 {
+            if p.plan(step, len, r).freeze.is_empty() {
+                break;
+            }
+        }
+        prop_assert!(
+            p.active_count() == n_sink + window_k,
+            "active {} != sinks {n_sink} + window {window_k}",
+            p.active_count()
+        );
+        Ok(())
+    });
+}
