@@ -6,6 +6,11 @@
 //! composes with a production-style serving loop (the "memory-
 //! constrained deployment" the paper motivates).
 //!
+//! The offload columns expose the tiered frozen-KV store's
+//! memory/latency trade: per-tier peak occupancy, the staged-hit rate
+//! (restores served without inline dequantization), and per-tier
+//! restore latencies.
+//!
 //! Output: table + artifacts/serving_throughput.csv
 
 use std::time::Instant;
@@ -14,6 +19,7 @@ use asrkf::baselines::make_policy;
 use asrkf::config::{EngineConfig, ServerConfig};
 use asrkf::coordinator::{spawn, GenParams};
 use asrkf::engine::Generator;
+use asrkf::offload::OffloadSummary;
 use asrkf::runtime::Runtime;
 use asrkf::util::bench::Table;
 use asrkf::workload::trace::poisson_trace;
@@ -21,12 +27,58 @@ use asrkf::workload::trace::poisson_trace;
 const N_REQ: usize = 12;
 const MAX_NEW: usize = 32;
 
+/// Aggregate per-request offload summaries into the five CSV columns:
+/// per-request peak hot/cold KB (the max high-water mark any single
+/// session reached — summing peaks of sessions that never coexisted
+/// would overstate the footprint), staged-hit %, and mean hot / cold
+/// restore µs weighted by restore count.
+fn offload_columns(summaries: &[OffloadSummary]) -> [String; 5] {
+    let peak_hot: usize =
+        summaries.iter().map(|s| s.occupancy.peak_hot_bytes).max().unwrap_or(0);
+    let peak_cold: usize =
+        summaries.iter().map(|s| s.occupancy.peak_cold_bytes).max().unwrap_or(0);
+    let hits: u64 = summaries.iter().map(|s| s.staged_hits).sum();
+    let misses: u64 = summaries.iter().map(|s| s.staged_misses).sum();
+    let hit_pct = if hits + misses == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.0}%", 100.0 * hits as f64 / (hits + misses) as f64)
+    };
+    let weighted_us = |n: fn(&OffloadSummary) -> u64, us: fn(&OffloadSummary) -> u64| {
+        let total: u64 = summaries.iter().map(n).sum();
+        if total == 0 {
+            return "-".to_string();
+        }
+        let sum: u64 = summaries.iter().map(|s| n(s) * us(s)).sum();
+        format!("{}", sum / total)
+    };
+    [
+        format!("{:.1}", peak_hot as f64 / 1024.0),
+        format!("{:.1}", peak_cold as f64 / 1024.0),
+        hit_pct,
+        weighted_us(|s| s.restores_hot, |s| s.restore_hot_mean_us),
+        weighted_us(|s| s.restores_cold, |s| s.restore_cold_mean_us),
+    ]
+}
+
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
     let trace = poisson_trace(42, N_REQ, 100.0, 40, 120, MAX_NEW); // all arrive ~immediately
     let mut table = Table::new(
         "Serving: batched coordinator vs sequential engine",
-        &["Mode", "Requests", "Tokens", "Wall", "tok/s", "mean e2e (ms)"],
+        &[
+            "Mode",
+            "Requests",
+            "Tokens",
+            "Wall",
+            "tok/s",
+            "mean e2e (ms)",
+            "hot KB (peak/req)",
+            "cold KB (peak/req)",
+            "staged hit",
+            "restore hot (us)",
+            "restore cold (us)",
+        ],
     );
 
     // --- batched coordinator (B=4)
@@ -48,21 +100,26 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             .collect::<Result<_, _>>()?;
         let mut tokens = 0usize;
         let mut e2e_sum = 0.0;
+        let mut summaries = Vec::new();
         for rx in rxs {
             let resp = rx.recv()?;
             assert!(resp.error.is_none(), "{:?}", resp.error);
             tokens += resp.generated_tokens;
             e2e_sum += resp.e2e.as_secs_f64() * 1000.0;
+            summaries.push(resp.offload);
         }
         let wall = t0.elapsed();
-        table.row(&[
-            "continuous batch (B=4)".into(),
+        let off = offload_columns(&summaries);
+        let mut row = vec![
+            "continuous batch (B=4)".to_string(),
             N_REQ.to_string(),
             tokens.to_string(),
             format!("{:.2}s", wall.as_secs_f64()),
             format!("{:.1}", tokens as f64 / wall.as_secs_f64()),
             format!("{:.0}", e2e_sum / N_REQ as f64),
-        ]);
+        ];
+        row.extend(off);
+        table.row(&row);
         drop(handle);
         let _ = join.join();
     }
@@ -75,21 +132,26 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let t0 = Instant::now();
         let mut tokens = 0usize;
         let mut e2e_sum = 0.0;
+        let mut summaries = Vec::new();
         for r in &trace {
             let t1 = Instant::now();
             let out = gen.generate(&r.prompt, make_policy("asrkf", &cfg.freeze)?, r.max_new)?;
             tokens += out.stats.generated_tokens;
             e2e_sum += t1.elapsed().as_secs_f64() * 1000.0;
+            summaries.push(out.stats.offload);
         }
         let wall = t0.elapsed();
-        table.row(&[
-            "sequential (B=1)".into(),
+        let off = offload_columns(&summaries);
+        let mut row = vec![
+            "sequential (B=1)".to_string(),
             N_REQ.to_string(),
             tokens.to_string(),
             format!("{:.2}s", wall.as_secs_f64()),
             format!("{:.1}", tokens as f64 / wall.as_secs_f64()),
             format!("{:.0}", e2e_sum / N_REQ as f64),
-        ]);
+        ];
+        row.extend(off);
+        table.row(&row);
     }
 
     table.print();

@@ -75,7 +75,7 @@ impl KvPolicy for H2oPolicy {
                 None => break,
             }
         }
-        Plan { freeze: evict, restore: Vec::new(), drop_payload: true }
+        Plan { freeze: evict, drop_payload: true, ..Plan::default() }
     }
 
     fn observe(&mut self, _step: u64, scores: &[f32], len: usize) {

@@ -44,7 +44,7 @@ impl KvPolicy for StreamingLlmPolicy {
                 }
             }
         }
-        Plan { freeze: evict, restore: Vec::new(), drop_payload: true }
+        Plan { freeze: evict, drop_payload: true, ..Plan::default() }
     }
 
     fn observe(&mut self, _step: u64, _scores: &[f32], len: usize) {

@@ -96,6 +96,104 @@ impl SamplingConfig {
     }
 }
 
+/// Tiered off-GPU frozen-KV storage knobs (`crate::offload`).
+///
+/// The store keeps every frozen row (the paper's "no permanent
+/// information loss") but grades residency by predicted thaw step:
+/// rows expected back soon stay **hot** (uncompressed host rows in a
+/// block pool), rows predicted to stay frozen are demoted to the
+/// **cold** tier (u8-per-float quantized, ~4x smaller) and optionally
+/// to a file-backed **spill** tier for very long contexts.
+#[derive(Debug, Clone)]
+pub struct OffloadConfig {
+    /// Byte budget for the hot tier (uncompressed rows). Exceeding it
+    /// demotes the rows with the farthest predicted thaw first.
+    pub hot_budget_bytes: usize,
+    /// Byte budget for the cold tier; exceeding it spills (when a
+    /// spill dir is configured) — rows are never dropped.
+    pub cold_budget_bytes: usize,
+    /// Admission/demotion horizon (steps): a row whose predicted thaw
+    /// is at least this far away is quantized straight into the cold
+    /// tier; hot rows that outstay this residency age are demoted.
+    pub cold_after_steps: u64,
+    /// Quantize cold-tier rows (u8 + per-row scale). The escape hatch
+    /// (`--no-cold-quant`) disables demotion entirely: every frozen
+    /// row stays uncompressed in the hot tier and the byte budgets
+    /// become advisory (lossless storage, unbounded growth).
+    pub quantize_cold: bool,
+    /// Documented worst-case quantization error as a fraction of the
+    /// per-row value range (u8 affine: half a quantization step, plus
+    /// f32 rounding at the row's magnitude). Verified by
+    /// `tests/prop_offload.rs`.
+    pub cold_quant_rel_error: f32,
+    /// Directory for the file-backed spill tier; `None` disables
+    /// spilling (cold tier then overflows its budget rather than drop).
+    pub spill_dir: Option<String>,
+    /// Staging look-ahead in steps: rows predicted to thaw within this
+    /// many steps are promoted back into the hot tier ahead of their
+    /// restore (prefetch-ahead). Applies to both the policy's hints
+    /// (which reach at most `kv::PREFETCH_HORIZON` steps out) and the
+    /// entropy-pressure sweep (whose effective ceiling is
+    /// `cold_after_steps`, so speculative promotions are never undone
+    /// by the next residency sweep). 0 disables prefetch.
+    pub prefetch_ahead: u64,
+    /// Entropy-pressure threshold (0..1 of the recovery trigger) above
+    /// which the session stages likely-recovery rows ahead of time.
+    pub stage_pressure: f32,
+    /// Hot-pool slab granularity in rows (block layout for batched
+    /// gather/scatter).
+    pub block_rows: usize,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> Self {
+        OffloadConfig {
+            hot_budget_bytes: 64 << 20,
+            cold_budget_bytes: 256 << 20,
+            cold_after_steps: 8,
+            quantize_cold: true,
+            // u8 affine quantization: worst case = range/255/2 ≈ 0.00196;
+            // small headroom for f32 rounding.
+            cold_quant_rel_error: 0.002,
+            spill_dir: None,
+            prefetch_ahead: 2,
+            stage_pressure: 0.5,
+            block_rows: 32,
+        }
+    }
+}
+
+impl OffloadConfig {
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let d = OffloadConfig::default();
+        Ok(OffloadConfig {
+            hot_budget_bytes: args.usize_or("hot-budget-mb", d.hot_budget_bytes >> 20)? << 20,
+            cold_budget_bytes: args.usize_or("cold-budget-mb", d.cold_budget_bytes >> 20)? << 20,
+            cold_after_steps: args.u64_or("cold-after", d.cold_after_steps)?,
+            quantize_cold: !args.bool("no-cold-quant"),
+            cold_quant_rel_error: d.cold_quant_rel_error,
+            spill_dir: {
+                let s = args.str_or("spill-dir", "");
+                if s.is_empty() { None } else { Some(s) }
+            },
+            prefetch_ahead: args.u64_or("prefetch-ahead", d.prefetch_ahead)?,
+            stage_pressure: args.f32_or("stage-pressure", d.stage_pressure)?,
+            block_rows: d.block_rows,
+        })
+    }
+
+    /// Per-slot budget partition for the batched coordinator: `n`
+    /// sessions share the configured budgets equally.
+    pub fn partitioned(&self, n: usize) -> OffloadConfig {
+        let n = n.max(1);
+        OffloadConfig {
+            hot_budget_bytes: (self.hot_budget_bytes / n).max(1),
+            cold_budget_bytes: (self.cold_budget_bytes / n).max(1),
+            ..self.clone()
+        }
+    }
+}
+
 /// Entropy-guided recovery ladder (paper §3.6, implemented here).
 #[derive(Debug, Clone)]
 pub struct RecoveryConfig {
@@ -135,6 +233,7 @@ pub struct EngineConfig {
     pub freeze: FreezeConfig,
     pub sampling: SamplingConfig,
     pub recovery: RecoveryConfig,
+    pub offload: OffloadConfig,
     /// Stop generation at this many new tokens if no EOS-like signal.
     pub max_new_tokens: usize,
 }
@@ -146,6 +245,7 @@ impl Default for EngineConfig {
             freeze: FreezeConfig::default(),
             sampling: SamplingConfig::default(),
             recovery: RecoveryConfig::default(),
+            offload: OffloadConfig::default(),
             max_new_tokens: 500,
         }
     }
@@ -162,6 +262,7 @@ impl EngineConfig {
                 enabled: args.bool("recovery"),
                 ..RecoveryConfig::default()
             },
+            offload: OffloadConfig::from_args(args)?,
             max_new_tokens: args.usize_or("max-new-tokens", d.max_new_tokens)?,
         })
     }
@@ -225,5 +326,37 @@ mod tests {
     fn greedy_sampling() {
         let s = SamplingConfig::greedy();
         assert_eq!(s.temperature, 0.0);
+    }
+
+    #[test]
+    fn offload_defaults_and_overrides() {
+        let d = OffloadConfig::default();
+        assert!(d.quantize_cold);
+        assert!(d.spill_dir.is_none());
+        let a = args(&[
+            "gen",
+            "--hot-budget-mb",
+            "8",
+            "--cold-after",
+            "16",
+            "--no-cold-quant",
+            "--spill-dir",
+            "/tmp/spill",
+        ]);
+        let o = OffloadConfig::from_args(&a).unwrap();
+        assert_eq!(o.hot_budget_bytes, 8 << 20);
+        assert_eq!(o.cold_after_steps, 16);
+        assert!(!o.quantize_cold);
+        assert_eq!(o.spill_dir.as_deref(), Some("/tmp/spill"));
+    }
+
+    #[test]
+    fn offload_partition_divides_budgets() {
+        let o = OffloadConfig { hot_budget_bytes: 100, cold_budget_bytes: 40, ..Default::default() };
+        let p = o.partitioned(4);
+        assert_eq!(p.hot_budget_bytes, 25);
+        assert_eq!(p.cold_budget_bytes, 10);
+        // n=0 clamps to 1
+        assert_eq!(o.partitioned(0).hot_budget_bytes, 100);
     }
 }

@@ -22,7 +22,7 @@ use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::engine::layout::{insert_prefill, KvGeom};
 use crate::engine::session::Session;
 use crate::error::{Error, Result};
-use crate::metrics::{Histogram, ServingStats};
+use crate::metrics::{Histogram, RestoreLatency, ServingStats};
 use crate::model::tokenizer;
 use crate::runtime::{DecodeInputs, DecodeProgram, Runtime};
 
@@ -45,6 +45,8 @@ pub struct BatchEngine {
     pub ttft_hist: Histogram,
     pub e2e_hist: Histogram,
     pub step_hist: Histogram,
+    /// per-tier restore latencies merged from retired sessions
+    pub restore_hist: RestoreLatency,
 }
 
 impl BatchEngine {
@@ -89,6 +91,7 @@ impl BatchEngine {
             ttft_hist: Histogram::default(),
             e2e_hist: Histogram::default(),
             step_hist: Histogram::default(),
+            restore_hist: RestoreLatency::default(),
         })
     }
 
@@ -181,6 +184,9 @@ impl BatchEngine {
 
         let mut cfg = self.cfg.clone();
         cfg.sampling.seed = req.params.seed;
+        // per-slot budget partition: B sessions share the configured
+        // offload byte budgets equally
+        cfg.offload = cfg.offload.partitioned(self.slots.len());
         let policy = make_policy(&req.params.policy, &cfg.freeze)
             .map_err(Error::Coordinator)?;
         let mut session = Session::new(
@@ -216,18 +222,34 @@ impl BatchEngine {
         let mut mask = vec![0.0f32; b * s];
         let mut plans: Vec<Option<crate::kv::Plan>> = (0..b).map(|_| None).collect();
 
+        let mut failed: Vec<(usize, String)> = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if let Some(slot) = slot {
                 let sess = &mut slot.session;
                 tokens[i] = sess.next_token();
                 // per-slot freeze/restore data movement on the shared cache
-                let plan = sess.apply_plan(&mut self.kv, &self.geom, i, r);
-                pos[i] = sess.len as i32;
-                mask[i * s..(i + 1) * s].copy_from_slice(&sess.mask);
-                plans[i] = Some(plan);
+                match sess.apply_plan(&mut self.kv, &self.geom, i, r) {
+                    Ok(plan) => {
+                        pos[i] = sess.len as i32;
+                        mask[i * s..(i + 1) * s].copy_from_slice(&sess.mask);
+                        plans[i] = Some(plan);
+                    }
+                    // offload failure (storage invariant / spill I/O):
+                    // fail this session, keep the rest of the batch
+                    Err(e) => failed.push((i, format!("{e}"))),
+                }
             }
             // free slots decode a dummy token at pos 0; outputs ignored
             // and their KV rows are overwritten on the next prefill.
+        }
+        for (i, msg) in failed {
+            log::error!("slot {i}: retiring session after storage failure: {msg}");
+            if let Some(slot) = self.slots[i].take() {
+                let _ = slot.respond.send(GenResponse::error(slot.id, msg));
+            }
+        }
+        if plans.iter().all(Option::is_none) {
+            return Ok(()); // every occupied slot failed this step
         }
 
         let out = self.decode.run(&DecodeInputs {
@@ -248,13 +270,26 @@ impl BatchEngine {
             crate::engine::layout::write_new_row(
                 &mut self.kv, &self.geom, i, slot_pos, &out.k_new, &out.v_new,
             );
+            let absorb_err = {
+                let slot = self.slots[i].as_mut().unwrap();
+                let sess = &mut slot.session;
+                let logits = out.logits[i * model_vocab..(i + 1) * model_vocab].to_vec();
+                let scores = &out.scores[i * s..(i + 1) * s];
+                // recovery in batched mode: SR/WR/FR apply via policy; RR
+                // is disabled (rewalk would stall the whole batch —
+                // documented); the returned action is therefore unused
+                sess.absorb(tokens[i], logits, scores, &plan, out.timing, Duration::ZERO)
+                    .err()
+            };
+            if let Some(e) = absorb_err {
+                log::error!("slot {i}: retiring session after staging failure: {e}");
+                if let Some(slot) = self.slots[i].take() {
+                    let _ = slot.respond.send(GenResponse::error(slot.id, format!("{e}")));
+                }
+                continue;
+            }
             let slot = self.slots[i].as_mut().unwrap();
             let sess = &mut slot.session;
-            let logits = out.logits[i * model_vocab..(i + 1) * model_vocab].to_vec();
-            let scores = &out.scores[i * s..(i + 1) * s];
-            // recovery in batched mode: SR/WR/FR apply via policy; RR is
-            // disabled (rewalk would stall the whole batch — documented)
-            let _ = sess.absorb(tokens[i], logits, scores, &plan, out.timing, Duration::ZERO);
             if slot.first_token_at.is_none() {
                 slot.first_token_at = Some(now);
                 self.ttft_hist.record(now - slot.arrived);
@@ -264,6 +299,12 @@ impl BatchEngine {
             if sess.is_done() {
                 let e2e = now - slot.arrived;
                 self.e2e_hist.record(e2e);
+                // fold the retiring session's offload telemetry into
+                // the engine-wide aggregates
+                let offload = sess.store.summary();
+                self.stats.staged_hits += offload.staged_hits;
+                self.stats.staged_misses += offload.staged_misses;
+                self.restore_hist.merge(&sess.store.restore_latency);
                 let resp = GenResponse {
                     id: slot.id,
                     text: sess.generated_text(),
@@ -274,6 +315,7 @@ impl BatchEngine {
                     compression: 1.0 - sess.active_kv() as f64 / sess.len.max(1) as f64,
                     ttft: slot.first_token_at.unwrap() - slot.arrived,
                     e2e,
+                    offload,
                 };
                 let _ = slot.respond.send(resp);
                 self.stats.requests_completed += 1;

@@ -7,7 +7,19 @@
 //!   TCP conn threads ──(bounded mpsc)──> coordinator thread
 //!        ^                                 BatchEngine: slots + batched
 //!        └──(per-request channel)──────────  decode + KV policies
+//!                                               │ per-slot
+//!                                               ▼
+//!                                  offload::TieredStore (x B slots)
+//!                                   hot │ cold(u8) │ spill(file)
+//!                                   budgets partitioned 1/B per slot
 //! ```
+//!
+//! Each slot owns a tiered frozen-row store whose hot/cold byte
+//! budgets are the server-wide budgets divided by the batch size, so
+//! one long-context session cannot starve its neighbours' hot tiers.
+//! Retiring sessions fold their staged-hit counters and per-tier
+//! restore-latency histograms into `BatchEngine::stats` /
+//! `BatchEngine::restore_hist`.
 
 pub mod batcher;
 pub mod request;
@@ -104,6 +116,13 @@ pub fn spawn(
             log::info!("{}", engine.ttft_hist.summary("ttft"));
             log::info!("{}", engine.e2e_hist.summary("e2e"));
             log::info!("{}", engine.step_hist.summary("step"));
+            log::info!(
+                "offload: staged hits {} / misses {}",
+                engine.stats.staged_hits,
+                engine.stats.staged_misses
+            );
+            log::info!("{}", engine.restore_hist.hot.summary("restore(hot)"));
+            log::info!("{}", engine.restore_hist.cold.summary("restore(cold)"));
         })
         .map_err(Error::Io)?;
     match ready_rx.recv() {

@@ -33,6 +33,8 @@ pub struct GenResponse {
     pub ttft: Duration,
     /// total end-to-end latency
     pub e2e: Duration,
+    /// tiered frozen-KV storage snapshot at retirement
+    pub offload: crate::offload::OffloadSummary,
 }
 
 impl GenResponse {
@@ -47,6 +49,7 @@ impl GenResponse {
             compression: 0.0,
             ttft: Duration::ZERO,
             e2e: Duration::ZERO,
+            offload: crate::offload::OffloadSummary::default(),
         }
     }
 }

@@ -37,6 +37,9 @@ pub struct GenStats {
     pub execute: Duration,
     pub download: Duration,
     pub host: Duration,
+    /// Tiered-store snapshot at end of generation: per-tier occupancy,
+    /// staged-hit counters, restore latencies (see `crate::offload`).
+    pub offload: crate::offload::OffloadSummary,
 }
 
 /// Final disposition of one KV row (mechanism-level retrieval probe,
@@ -129,8 +132,9 @@ impl<'rt> Generator<'rt> {
         while !session.is_done() {
             let t_host = Instant::now();
             let token = session.next_token();
-            // freeze/restore data movement on the host-owned cache
-            let plan = session.apply_plan(&mut kv, &geom, 0, r);
+            // freeze/restore data movement on the host-owned cache;
+            // restores hit staged hot rows when prefetch ran ahead
+            let plan = session.apply_plan(&mut kv, &geom, 0, r)?;
             let host_pre = t_host.elapsed();
 
             let inputs = DecodeInputs {
@@ -147,7 +151,7 @@ impl<'rt> Generator<'rt> {
                 &mut kv, &geom, 0, session.len, &out.k_new, &out.v_new,
             );
             let action =
-                session.absorb(token, out.logits, &out.scores, &plan, out.timing, host_pre);
+                session.absorb(token, out.logits, &out.scores, &plan, out.timing, host_pre)?;
             let host_post = t_host2.elapsed();
 
             upload += out.timing.upload;
@@ -209,6 +213,7 @@ impl<'rt> Generator<'rt> {
             execute,
             download,
             host,
+            offload: session.store.summary(),
         };
         let row_states = (0..session.len)
             .map(|pos| {
@@ -247,7 +252,7 @@ impl<'rt> Generator<'rt> {
             session.step,
             session.len
         );
-        for (pos, row) in session.store.drain_all() {
+        for (pos, row) in session.store.drain_all()? {
             scatter_row(kv, geom, 0, pos, &row);
         }
         session.rewind(depth);

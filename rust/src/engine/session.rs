@@ -1,17 +1,22 @@
-//! Per-sequence generation state: tokens, activity mask, frozen-row
-//! store, policy, sampler, entropy monitor and step trace. Shared by
-//! the single-sequence generator and the batched coordinator — the KV
-//! *data* itself is owned by whichever engine drives the session.
+//! Per-sequence generation state: tokens, activity mask, tiered
+//! frozen-row store, policy, sampler, entropy monitor and step trace.
+//! Shared by the single-sequence generator and the batched coordinator
+//! — the KV *data* itself is owned by whichever engine drives the
+//! session.
 
 use std::time::Duration;
 
 use crate::config::EngineConfig;
+use crate::error::{Error, Result};
 use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
-use crate::kv::FrozenStore;
 use crate::model::logits::{logits_entropy, top1_prob};
 use crate::model::sampling::Sampler;
+use crate::offload::TieredStore;
 use crate::recovery::{Action, EntropyMonitor, RecoveryLadder};
 use crate::runtime::CallTiming;
+
+/// Cap on rows promoted per pressure-staging burst.
+const STAGE_BURST_ROWS: usize = 64;
 
 /// One decode step's trace record (drives Figure 1 and §Perf).
 #[derive(Debug, Clone, Copy)]
@@ -40,7 +45,7 @@ pub struct Session {
     pub prompt_len: usize,
     pub max_new: usize,
     pub policy: Box<dyn KvPolicy>,
-    pub store: FrozenStore,
+    pub store: TieredStore,
     /// activity mask [S] for this session's decode bucket
     pub mask: Vec<f32>,
     /// rows written to the cache so far (== next write position)
@@ -80,7 +85,7 @@ impl Session {
             tokens: prompt_tokens,
             max_new,
             policy,
-            store: FrozenStore::new(row_floats),
+            store: TieredStore::new(row_floats, cfg.offload.clone()),
             mask: vec![0.0; s_capacity],
             len: 0,
             sampler: Sampler::new(cfg.sampling.clone()),
@@ -126,38 +131,52 @@ impl Session {
     /// to the (engine-owned) KV cache: restores scatter stashed rows
     /// back, freezes gather+zero rows into the store. Mask is updated
     /// (restores -> 1, freezes -> 0). `slot` selects the batch lane.
+    ///
+    /// Restores land on staged hot rows whenever the prefetch path ran
+    /// ahead of the thaw (see [`Session::absorb`]); errors surface
+    /// storage invariant breaches (missing payload, double freeze) and
+    /// spill-tier I/O failures.
     pub fn apply_plan(
         &mut self,
         kv: &mut [f32],
         geom: &crate::engine::layout::KvGeom,
         slot: usize,
         r_budget: usize,
-    ) -> Plan {
+    ) -> Result<Plan> {
         use crate::engine::layout::{gather_row, scatter_row, zero_row};
         let plan = self.policy.plan(self.step, self.len, r_budget);
         for &pos in &plan.restore {
-            let payload = self
-                .store
-                .take(pos)
-                .unwrap_or_else(|| panic!("restore of pos {pos} with no stashed payload"));
+            let payload = self.store.take(pos)?.ok_or_else(|| {
+                Error::Offload(format!("restore of pos {pos} with no stashed payload"))
+            })?;
             scatter_row(kv, geom, slot, pos, &payload);
             self.mask[pos] = 1.0;
         }
-        for &pos in &plan.freeze {
+        for (i, &pos) in plan.freeze.iter().enumerate() {
             if plan.drop_payload {
                 self.store.drop_row(pos); // irreversible baselines: data is gone
             } else {
-                self.store.stash(pos, gather_row(kv, geom, slot, pos));
+                // tier admission is driven by the policy's predicted
+                // thaw step (freeze step + Eq.3 duration)
+                let eta = plan.freeze_thaw_eta.get(i).copied().unwrap_or(self.step + 1);
+                self.store.stash(pos, gather_row(kv, geom, slot, pos), self.step, eta)?;
             }
             zero_row(kv, geom, slot, pos);
             self.mask[pos] = 0.0;
         }
-        plan
+        Ok(plan)
     }
 
     /// Absorb one decode step's outputs (after the engine wrote the new
     /// KV row). Returns a recovery action for the engine to apply (RR
     /// needs KV access, so it propagates up).
+    ///
+    /// This is also where prefetch-ahead staging runs: the plan's
+    /// imminent-thaw hints — widened to the recovery horizon when the
+    /// entropy monitor trends toward a trigger — are promoted into the
+    /// store's hot tier *between* decode steps, so the next
+    /// `apply_plan` restores without inline dequantization. Errors are
+    /// spill-tier I/O failures.
     pub fn absorb(
         &mut self,
         token: i32,
@@ -166,7 +185,7 @@ impl Session {
         plan: &Plan,
         timing: CallTiming,
         host: Duration,
-    ) -> Action {
+    ) -> Result<Action> {
         self.mask[self.len] = 1.0;
         self.len += 1;
         self.tokens.push(token);
@@ -179,8 +198,10 @@ impl Session {
         self.last_logits = logits;
 
         let mut action = Action::None;
+        let mut pressure = 0.0f32;
         if let (Some(mon), Some(ladder)) = (self.monitor.as_mut(), self.ladder.as_mut()) {
             let signal = mon.observe(entropy, top1);
+            pressure = mon.pressure();
             action = ladder.step(self.step, signal);
             match action {
                 Action::SoftReset => {
@@ -200,6 +221,27 @@ impl Session {
             }
         }
 
+        // --- prefetch-ahead staging (host-side tier moves only).
+        // `prefetch_ahead` is the look-ahead in steps for both paths:
+        // the policy's hints (filtered to thaws due within it) and the
+        // store-driven sweep under entropy pressure.
+        let ocfg = self.store.config();
+        let (stage_pressure, prefetch_ahead) = (ocfg.stage_pressure, ocfg.prefetch_ahead);
+        let hints: Vec<(usize, u64)> = plan
+            .prefetch
+            .iter()
+            .copied()
+            .filter(|&(_, eta)| eta <= self.step.saturating_add(prefetch_ahead))
+            .collect();
+        self.store.stage(&hints)?;
+        if pressure >= stage_pressure || action != Action::None {
+            // the monitor trends toward (or hit) a recovery trigger:
+            // recovery unfreezes restore soonest-thaw-first, so stage a
+            // broader burst ahead of them
+            self.store.stage_upcoming(self.step, prefetch_ahead, STAGE_BURST_ROWS)?;
+        }
+        self.store.on_step(self.step)?;
+
         self.trace.push(StepRecord {
             step: self.step,
             total: self.len,
@@ -214,7 +256,7 @@ impl Session {
             host,
             recovery_level: self.ladder.as_ref().map(|l| l.level()).unwrap_or(0),
         });
-        action
+        Ok(action)
     }
 
     /// Rewind bookkeeping for RR: truncate `back` generated tokens,

@@ -1,35 +1,83 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`From` impls (no `thiserror`): the build
+//! container has no crates.io access and derive macros cannot be
+//! vendored as plainly as the facade crates under `rust/vendor/`.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("manifest: {0}")]
+    Xla(xla::Error),
+    Io(std::io::Error),
     Manifest(String),
-
-    #[error("config: {0}")]
     Config(String),
-
-    #[error("engine: {0}")]
     Engine(String),
-
-    #[error("server: {0}")]
     Server(String),
-
-    #[error("coordinator: {0}")]
     Coordinator(String),
+    /// Tiered frozen-KV storage (`crate::offload`) failures: double
+    /// stash, missing payload, spill-tier I/O.
+    Offload(String),
 }
 
-pub type Result<T> = std::result::Result<T, Error>;
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Engine(m) => write!(f, "engine: {m}"),
+            Error::Server(m) => write!(f, "server: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Offload(m) => write!(f, "offload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
 
 impl From<String> for Error {
     fn from(s: String) -> Self {
         Error::Engine(s)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(format!("{}", Error::Offload("x".into())), "offload: x");
+        assert_eq!(format!("{}", Error::Engine("y".into())), "engine: y");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
     }
 }

@@ -4,7 +4,17 @@
 //! * `freeze`    — sublinear freeze scheduling (Eq. 3) + detection windows
 //! * `relevance` — Eq. 2 thresholding and candidate selection
 //! * `policy`    — the `KvPolicy` trait and the ASR-KF-EGR policy
-//! * `store`     — host-side frozen-row storage (the paper's "CPU storage")
+//! * `store`     — minimal flat frozen-row store (reference/baseline)
+//!
+//! The engine's production storage lives in `crate::offload`: plans
+//! carry tier hints (`Plan::freeze_thaw_eta`, `Plan::prefetch`) that
+//! the tiered store turns into hot/cold/spill placement:
+//!
+//! ```text
+//!   policy.plan() ──freeze──► offload::TieredStore ──restore──► cache
+//!        │                      hot │ cold │ spill
+//!        └──prefetch hints──► stage() ahead of thaw
+//! ```
 
 pub mod freeze;
 pub mod policy;
@@ -12,6 +22,6 @@ pub mod relevance;
 pub mod state;
 pub mod store;
 
-pub use policy::{AsrKfPolicy, KvPolicy, Plan, UnfreezeScope};
+pub use policy::{AsrKfPolicy, KvPolicy, Plan, UnfreezeScope, PREFETCH_HORIZON};
 pub use state::{TokenMeta, TokenState, TokenTable};
 pub use store::FrozenStore;

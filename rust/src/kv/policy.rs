@@ -9,6 +9,12 @@ use crate::kv::freeze::freeze_duration;
 use crate::kv::relevance::detect_low_importance;
 use crate::kv::state::{TokenState, TokenTable};
 
+/// How many steps before a predicted thaw a frozen row becomes a
+/// prefetch hint (`Plan::prefetch`) for the tiered store's staging
+/// path. Small: hints are cheap (a host-side tier move at most) and
+/// the tiered store de-duplicates already-hot rows.
+pub const PREFETCH_HORIZON: u32 = 3;
+
 /// What the engine must do before the next decode step.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Plan {
@@ -20,6 +26,17 @@ pub struct Plan {
     /// If true, frozen payloads are DISCARDED (irreversible eviction —
     /// baselines only; ASR-KF-EGR always keeps payloads).
     pub drop_payload: bool,
+    /// Tier hint, parallel to `freeze`: the step at which each frozen
+    /// row is predicted to thaw (freeze step + Eq.3 duration). Drives
+    /// hot/cold admission in `offload::TieredStore`. Empty for
+    /// drop-payload baselines.
+    pub freeze_thaw_eta: Vec<u64>,
+    /// Tier hint: `(position, predicted thaw step)` for frozen rows
+    /// expected to restore within `PREFETCH_HORIZON` steps — the store
+    /// stages these back into its hot tier ahead of the actual restore
+    /// and refreshes its stored thaw prediction (recovery unfreezes
+    /// rewrite timers, so stash-time etas go stale).
+    pub prefetch: Vec<(usize, u64)>,
 }
 
 /// Scope of a recovery-triggered unfreeze (paper §3.6).
@@ -122,7 +139,7 @@ impl KvPolicy for AsrKfPolicy {
         self.detect(0, scores, len);
     }
 
-    fn plan(&mut self, _step: u64, len: usize, r_budget: usize) -> Plan {
+    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan {
         self.table.grow_to(len);
 
         // Rolling re-evaluation (§3.5): decrement timers, queue expired.
@@ -147,6 +164,7 @@ impl KvPolicy for AsrKfPolicy {
         // Budget-capped freezes (lowest score first).
         let window_start = len.saturating_sub(self.cfg.window_k);
         let mut freeze = Vec::new();
+        let mut freeze_thaw_eta = Vec::new();
         let mut rest = Vec::new();
         for (pos, d, score) in self.pending_freeze.drain(..) {
             let eligible = self.table.is_active(pos)
@@ -157,8 +175,11 @@ impl KvPolicy for AsrKfPolicy {
                 continue; // stale candidate — drop
             }
             if freeze.len() < r_budget {
-                self.table.freeze(pos, d, _step);
+                self.table.freeze(pos, d, step);
                 freeze.push(pos);
+                // tier hint: the timer ticks down once per plan, so the
+                // row is predicted back in `d` steps
+                freeze_thaw_eta.push(step + d as u64);
             } else {
                 rest.push((pos, d, score));
             }
@@ -166,7 +187,30 @@ impl KvPolicy for AsrKfPolicy {
         self.pending_freeze = rest;
         self.stat_freezes += freeze.len() as u64;
 
-        Plan { freeze, restore, drop_payload: false }
+        // Tier hint: rows about to thaw (the store stages them hot so
+        // the restore never dequantizes inside the decode step).
+        let mut prefetch: Vec<(u32, usize)> = self
+            .table
+            .meta
+            .iter()
+            .enumerate()
+            .filter_map(|(pos, m)| match m.state {
+                TokenState::Frozen { remaining }
+                    if (1..=PREFETCH_HORIZON).contains(&remaining) =>
+                {
+                    Some((remaining, pos))
+                }
+                _ => None,
+            })
+            .collect();
+        prefetch.sort_unstable();
+        let prefetch = prefetch
+            .into_iter()
+            .take(r_budget)
+            .map(|(rem, p)| (p, step + rem as u64))
+            .collect();
+
+        Plan { freeze, restore, drop_payload: false, freeze_thaw_eta, prefetch }
     }
 
     fn observe(&mut self, step: u64, scores: &[f32], len: usize) {
@@ -338,6 +382,35 @@ mod tests {
         p.observe(12, &vec![0.0f32; len], len);
         let plan = p.plan(13, len, 64);
         assert!(plan.freeze.is_empty());
+    }
+
+    #[test]
+    fn thaw_eta_hint_parallels_freeze_list() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 40;
+        for step in 1..=6 {
+            p.observe(step, &vec![0.0f32; len], len);
+        }
+        let plan = p.plan(7, len, 8);
+        assert!(!plan.freeze.is_empty());
+        assert_eq!(plan.freeze.len(), plan.freeze_thaw_eta.len());
+        for &eta in &plan.freeze_thaw_eta {
+            assert!(eta > 7, "thaw eta must be in the future, got {eta}");
+        }
+    }
+
+    #[test]
+    fn prefetch_hints_cover_imminent_thaws() {
+        let mut p = AsrKfPolicy::new(cfg());
+        freeze_pos_by_detections(&mut p, 2, 12);
+        assert!(p.is_frozen(2));
+        // c=4 -> d=1: pos 2 thaws on the next tick, so it must be a
+        // prefetch hint before the restoring plan
+        let plan = p.plan(40, 12, 4);
+        assert!(
+            plan.restore.contains(&2) || plan.prefetch.iter().any(|&(p, _)| p == 2),
+            "imminent thaw neither restored nor hinted: {plan:?}"
+        );
     }
 
     #[test]

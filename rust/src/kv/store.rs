@@ -1,11 +1,15 @@
-//! Frozen-row storage: the paper's off-GPU ("CPU") side of the soft
-//! freeze. Holds the KV row bundles gathered by the decode graph until
-//! their freeze timers expire; restoring scatters them back.
+//! Flat frozen-row storage: the minimal reference implementation of
+//! the paper's off-GPU ("CPU") side of the soft freeze. The serving
+//! engine uses the tiered `crate::offload::TieredStore` instead (byte
+//! budgets, cold-tier compression, prefetch-ahead staging); this store
+//! remains the single-level baseline for tests and ablations.
 //!
 //! Rows are keyed by sequence position. One row bundle = the token's
 //! K and V vectors across all layers = `kv_row_floats` f32s.
 
 use std::collections::HashMap;
+
+use crate::error::{Error, Result};
 
 #[derive(Debug, Default)]
 pub struct FrozenStore {
@@ -23,11 +27,25 @@ impl FrozenStore {
     }
 
     /// Stash a gathered row bundle for `pos` (moves active -> frozen).
-    pub fn stash(&mut self, pos: usize, row: Vec<f32>) {
-        debug_assert_eq!(row.len(), self.row_floats, "row bundle size");
-        debug_assert!(!self.rows.contains_key(&pos), "double-freeze of pos {pos}");
+    ///
+    /// Double-freezing or a mis-sized bundle is an engine invariant
+    /// breach and returns `Error::Offload` — this used to be a
+    /// `debug_assert!` that silently overwrote (and mis-counted) in
+    /// release builds.
+    pub fn stash(&mut self, pos: usize, row: Vec<f32>) -> Result<()> {
+        if row.len() != self.row_floats {
+            return Err(Error::Offload(format!(
+                "row bundle for pos {pos} has {} floats, store expects {}",
+                row.len(),
+                self.row_floats
+            )));
+        }
+        if self.rows.contains_key(&pos) {
+            return Err(Error::Offload(format!("double-freeze of pos {pos}")));
+        }
         self.rows.insert(pos, row);
         self.total_stashed += 1;
+        Ok(())
     }
 
     /// Take the payload for a restore (frozen -> active).
@@ -85,7 +103,7 @@ mod tests {
     #[test]
     fn stash_take_roundtrip() {
         let mut s = FrozenStore::new(4);
-        s.stash(7, vec![1.0, 2.0, 3.0, 4.0]);
+        s.stash(7, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert!(s.contains(7));
         assert_eq!(s.bytes(), 16);
         assert_eq!(s.take(7), Some(vec![1.0, 2.0, 3.0, 4.0]));
@@ -96,26 +114,36 @@ mod tests {
     #[test]
     fn drop_is_permanent() {
         let mut s = FrozenStore::new(2);
-        s.stash(1, vec![5.0, 6.0]);
+        s.stash(1, vec![5.0, 6.0]).unwrap();
         s.drop_row(1);
         assert_eq!(s.take(1), None);
         assert_eq!(s.total_dropped, 1);
     }
 
     #[test]
-    #[cfg(debug_assertions)] // debug_assert is compiled out in release
-    #[should_panic(expected = "double-freeze")]
-    fn double_stash_panics_in_debug() {
+    fn double_stash_is_an_error_and_preserves_payload() {
         let mut s = FrozenStore::new(1);
-        s.stash(3, vec![0.0]);
-        s.stash(3, vec![1.0]);
+        s.stash(3, vec![0.5]).unwrap();
+        let e = s.stash(3, vec![1.0]).unwrap_err();
+        assert!(format!("{e}").contains("double-freeze"));
+        // original payload and accounting untouched
+        assert_eq!(s.total_stashed, 1);
+        assert_eq!(s.take(3), Some(vec![0.5]));
+    }
+
+    #[test]
+    fn wrong_row_size_is_an_error() {
+        let mut s = FrozenStore::new(4);
+        assert!(s.stash(0, vec![1.0, 2.0]).is_err());
+        assert!(s.is_empty());
+        assert_eq!(s.total_stashed, 0);
     }
 
     #[test]
     fn drain_all_returns_everything() {
         let mut s = FrozenStore::new(1);
-        s.stash(1, vec![1.0]);
-        s.stash(9, vec![9.0]);
+        s.stash(1, vec![1.0]).unwrap();
+        s.stash(9, vec![9.0]).unwrap();
         let mut all = s.drain_all();
         all.sort_by_key(|(p, _)| *p);
         assert_eq!(all.len(), 2);

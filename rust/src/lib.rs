@@ -13,6 +13,7 @@ pub mod error;
 pub mod kv;
 pub mod metrics;
 pub mod model;
+pub mod offload;
 pub mod recovery;
 pub mod runtime;
 pub mod server;

@@ -1,5 +1,7 @@
 //! Serving metrics: latency histograms, counters, and CSV export used
-//! by the coordinator and the bench harness.
+//! by the coordinator and the bench harness, plus the per-tier
+//! occupancy gauges and restore-latency histograms fed by the tiered
+//! frozen-KV store (`crate::offload`).
 
 use std::fmt::Write as _;
 use std::time::Duration;
@@ -76,6 +78,83 @@ impl Histogram {
             Duration::from_micros(self.max_us),
         )
     }
+
+    /// Fold another histogram into this one (identical default bucket
+    /// layout assumed — all histograms in this crate use `default()`).
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.bounds, other.bounds, "histogram bucket layouts differ");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiered frozen-KV storage metrics (fed by `crate::offload::TieredStore`)
+
+/// Storage tier of a frozen row (see `crate::offload`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierKind {
+    Hot,
+    Cold,
+    Spill,
+}
+
+/// Point-in-time per-tier occupancy gauges, with high-water marks.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierOccupancy {
+    pub hot_rows: usize,
+    pub hot_bytes: usize,
+    pub cold_rows: usize,
+    pub cold_bytes: usize,
+    pub spill_rows: usize,
+    pub spill_bytes: usize,
+    pub peak_hot_bytes: usize,
+    pub peak_cold_bytes: usize,
+    pub peak_spill_bytes: usize,
+    /// What the resident frozen rows would occupy uncompressed (f32) —
+    /// the denominator for the cold-tier compression ratio.
+    pub uncompressed_bytes: usize,
+}
+
+impl TierOccupancy {
+    pub fn total_rows(&self) -> usize {
+        self.hot_rows + self.cold_rows + self.spill_rows
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.hot_bytes + self.cold_bytes + self.spill_bytes
+    }
+}
+
+/// Restore-latency histograms split by the tier a `take()` was served
+/// from. A hot-tier restore is a plain copy; cold/spill restores pay
+/// dequantization (and file I/O) — keeping them separate makes the
+/// prefetch-ahead win measurable.
+#[derive(Debug, Clone, Default)]
+pub struct RestoreLatency {
+    pub hot: Histogram,
+    pub cold: Histogram,
+    pub spill: Histogram,
+}
+
+impl RestoreLatency {
+    pub fn record(&mut self, tier: TierKind, d: Duration) {
+        match tier {
+            TierKind::Hot => self.hot.record(d),
+            TierKind::Cold => self.cold.record(d),
+            TierKind::Spill => self.spill.record(d),
+        }
+    }
+
+    pub fn merge(&mut self, other: &RestoreLatency) {
+        self.hot.merge(&other.hot);
+        self.cold.merge(&other.cold);
+        self.spill.merge(&other.spill);
+    }
 }
 
 /// Aggregated serving counters (exported as JSON by the server).
@@ -87,6 +166,11 @@ pub struct ServingStats {
     pub prefill_tokens: u64,
     pub batches_dispatched: u64,
     pub batch_occupancy_sum: u64,
+    /// Frozen-row restores served from a prefetch-staged hot row
+    /// (no decompression inside the decode step).
+    pub staged_hits: u64,
+    /// Restores that had to dequantize/read inline (cold or spill hit).
+    pub staged_misses: u64,
 }
 
 impl ServingStats {
@@ -150,5 +234,28 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(s.mean_batch_occupancy(), 2.5);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        a.record(Duration::from_micros(100));
+        b.record(Duration::from_micros(300));
+        b.record(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.mean(), Duration::from_micros(300));
+    }
+
+    #[test]
+    fn restore_latency_routes_by_tier() {
+        let mut r = RestoreLatency::default();
+        r.record(TierKind::Hot, Duration::from_micros(1));
+        r.record(TierKind::Cold, Duration::from_micros(2));
+        r.record(TierKind::Cold, Duration::from_micros(3));
+        assert_eq!(r.hot.count(), 1);
+        assert_eq!(r.cold.count(), 2);
+        assert_eq!(r.spill.count(), 0);
     }
 }

@@ -1,0 +1,86 @@
+//! Tiered off-GPU frozen-KV storage — the production-shaped successor
+//! to the flat `kv::FrozenStore`.
+//!
+//! The paper's core promise is that soft-frozen rows are *preserved*
+//! off-GPU and restored on demand. At serving scale that needs more
+//! than a `HashMap<usize, Vec<f32>>`: byte budgets, a layout that
+//! batches transfers, compression for rows that will stay frozen, and
+//! a restore path that does not stall the decode step. This module
+//! provides all four:
+//!
+//! ```text
+//!              stash (freeze)                 take (restore)
+//!   active KV ───────────────► TieredStore ───────────────► active KV
+//!                                   │
+//!               ┌───────────────────┼──────────────────────┐
+//!               ▼                   ▼                      ▼
+//!          HOT tier            COLD tier              SPILL tier
+//!      uncompressed f32     u8-quantized rows      file-backed cold
+//!      block-pooled rows    (~4x smaller, per-     records (very long
+//!      (byte budget)        row scale; budget)     contexts; optional)
+//!               ▲                   │                      │
+//!               └── stage() / stage_upcoming() ◄───────────┘
+//!                   prefetch-ahead: dequantize BETWEEN decode
+//!                   steps, so take() from a staged row is a copy
+//! ```
+//!
+//! * **Admission/demotion** is driven by the freeze ladder's predicted
+//!   thaw step (`Plan::freeze_thaw_eta`): rows predicted back within
+//!   `OffloadConfig::cold_after_steps` stay hot, the rest are
+//!   quantized at stash time. `on_step` re-applies the rule so stale
+//!   prefetches drain back to cold.
+//! * **Prefetch-ahead** (`stage`, `stage_upcoming`) is fed by two
+//!   signals: the policy's imminent-thaw hints (`Plan::prefetch`) and
+//!   the `recovery::EntropyMonitor` trending toward a trigger
+//!   (`pressure()` ≥ `OffloadConfig::stage_pressure`), so recovery
+//!   unfreezes land on already-staged rows.
+//! * **Accounting** feeds `metrics::TierOccupancy` gauges and
+//!   per-tier `metrics::RestoreLatency` histograms; the conservation
+//!   invariant `total_stashed == total_restored + total_dropped +
+//!   resident` is property-tested in `tests/prop_offload.rs`.
+//!
+//! References: FreeKV (arXiv 2505.13109) for speculative double-
+//! buffered retrieval; KVComp (arXiv 2509.00579) for lossy compression
+//! of frozen rows.
+
+pub mod quant;
+pub mod spill;
+pub mod store;
+
+pub use quant::{dequantize, dequantize_into, quantize, QuantRow};
+pub use spill::SpillFile;
+pub use store::TieredStore;
+
+use crate::metrics::TierOccupancy;
+
+/// Per-session offload snapshot: occupancy gauges + restore counters.
+/// Attached to `GenStats` / `GenResponse` so benches can trace the
+/// memory/latency trade of tiering per request.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OffloadSummary {
+    pub occupancy: TierOccupancy,
+    /// restores served from a prefetch-staged hot row (no inline work)
+    pub staged_hits: u64,
+    /// restores that paid inline dequantization / spill I/O
+    pub staged_misses: u64,
+    pub demotions_cold: u64,
+    pub demotions_spill: u64,
+    pub prefetch_promotions: u64,
+    pub restores_hot: u64,
+    pub restores_cold: u64,
+    pub restores_spill: u64,
+    pub restore_hot_mean_us: u64,
+    pub restore_cold_mean_us: u64,
+}
+
+impl OffloadSummary {
+    /// Fraction of restores that never touched a compressed row at
+    /// restore time (hot-tier hits, staged or resident).
+    pub fn hot_restore_frac(&self) -> f64 {
+        let total = self.restores_hot + self.restores_cold + self.restores_spill;
+        if total == 0 {
+            return 1.0;
+        }
+        self.restores_hot as f64 / total as f64
+    }
+}

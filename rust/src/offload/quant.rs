@@ -1,0 +1,128 @@
+//! Cold-tier row compression: affine u8-per-float quantization with a
+//! per-row (min, scale) header.
+//!
+//! Frozen rows tolerate lossy storage (KVComp, arXiv 2509.00579): a
+//! frozen row is excluded from attention until restored, and the
+//! restore error is bounded by half a quantization step of the row's
+//! own value range. With 255 levels that is `range / 510` — the bound
+//! documented in `OffloadConfig::cold_quant_rel_error` and verified by
+//! `tests/prop_offload.rs`.
+//!
+//! Encoding: `x ≈ min + q * scale`, `q ∈ [0, 255]`,
+//! `scale = (max - min) / 255` (0 for constant rows).
+
+/// One quantized row: `row_floats` u8 codes + per-row affine header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantRow {
+    pub q: Vec<u8>,
+    pub min: f32,
+    pub scale: f32,
+}
+
+/// Header bytes per stored row (min + scale as f32).
+pub const ROW_HEADER_BYTES: usize = 8;
+
+impl QuantRow {
+    /// Bytes this row occupies in the cold tier.
+    pub fn bytes(&self) -> usize {
+        self.q.len() + ROW_HEADER_BYTES
+    }
+
+    /// Worst-case absolute reconstruction error for this row.
+    pub fn error_bound(&self) -> f32 {
+        // half a quantization step, plus f32 headroom for the affine
+        // arithmetic on large-magnitude rows
+        0.5 * self.scale + (self.min.abs() + 255.0 * self.scale) * f32::EPSILON * 4.0
+    }
+}
+
+/// Quantize a full-precision row. Non-finite inputs are clamped into
+/// the finite range of the row (NaN encodes as the row minimum).
+pub fn quantize(row: &[f32]) -> QuantRow {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in row {
+        if x.is_finite() {
+            min = min.min(x);
+            max = max.max(x);
+        }
+    }
+    if !min.is_finite() {
+        // all-NaN/inf row: store zeros
+        (min, max) = (0.0, 0.0);
+    }
+    let scale = if max > min { (max - min) / 255.0 } else { 0.0 };
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    let q = row
+        .iter()
+        .map(|&x| {
+            let x = if x.is_finite() { x.clamp(min, max) } else { min };
+            ((x - min) * inv).round().clamp(0.0, 255.0) as u8
+        })
+        .collect();
+    QuantRow { q, min, scale }
+}
+
+/// Reconstruct into a caller-provided buffer (len must match).
+pub fn dequantize_into(qr: &QuantRow, dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), qr.q.len());
+    for (d, &code) in dst.iter_mut().zip(&qr.q) {
+        *d = qr.min + code as f32 * qr.scale;
+    }
+}
+
+/// Reconstruct as a fresh row.
+pub fn dequantize(qr: &QuantRow) -> Vec<f32> {
+    let mut out = vec![0.0f32; qr.q.len()];
+    dequantize_into(qr, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_bound() {
+        let row: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 3.0 - 1.0).collect();
+        let qr = quantize(&row);
+        let back = dequantize(&qr);
+        let bound = qr.error_bound();
+        for (a, b) in row.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn constant_row_is_exact() {
+        let row = vec![2.5f32; 16];
+        let qr = quantize(&row);
+        assert_eq!(qr.scale, 0.0);
+        assert_eq!(dequantize(&qr), row);
+    }
+
+    #[test]
+    fn extremes_are_exact() {
+        let row = vec![-1.0f32, 0.1, 0.2, 1.0];
+        let qr = quantize(&row);
+        let back = dequantize(&qr);
+        assert_eq!(back[0], -1.0);
+        assert!((back[3] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let qr = quantize(&[0.0; 32]);
+        assert_eq!(qr.bytes(), 32 + ROW_HEADER_BYTES);
+    }
+
+    #[test]
+    fn non_finite_inputs_do_not_poison_row() {
+        let row = vec![1.0f32, f32::NAN, 3.0, f32::INFINITY];
+        let qr = quantize(&row);
+        let back = dequantize(&qr);
+        assert!(back.iter().all(|v| v.is_finite()));
+        assert!((back[0] - 1.0).abs() <= qr.error_bound());
+        assert!((back[2] - 3.0).abs() <= qr.error_bound());
+    }
+}

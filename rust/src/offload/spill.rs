@@ -1,0 +1,193 @@
+//! File-backed spill tier: fixed-record storage for quantized rows that
+//! overflow the cold tier's byte budget on very long contexts.
+//!
+//! One spill file per `TieredStore`, created lazily on first demotion
+//! and deleted on drop. Records are fixed-size (`ROW_HEADER_BYTES` +
+//! `row_floats` code bytes) at `slot * record_bytes` offsets, with a
+//! free list so restored slots are reused. I/O errors surface as
+//! `Error::Offload` through `TieredStore`'s fallible API — the engine
+//! fails the affected session rather than corrupting it.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::offload::quant::{QuantRow, ROW_HEADER_BYTES};
+
+static NEXT_FILE_ID: AtomicU64 = AtomicU64::new(0);
+
+pub struct SpillFile {
+    file: File,
+    path: PathBuf,
+    record_bytes: usize,
+    row_floats: usize,
+    free: Vec<u32>,
+    next_slot: u32,
+}
+
+impl std::fmt::Debug for SpillFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpillFile")
+            .field("path", &self.path)
+            .field("slots", &self.next_slot)
+            .field("free", &self.free.len())
+            .finish()
+    }
+}
+
+impl SpillFile {
+    /// Create the spill file under `dir` (created if missing).
+    pub fn create(dir: &str, row_floats: usize) -> Result<SpillFile> {
+        std::fs::create_dir_all(dir)?;
+        let id = NEXT_FILE_ID.fetch_add(1, Ordering::Relaxed);
+        let path = PathBuf::from(dir)
+            .join(format!("asrkf-spill-{}-{id}.bin", std::process::id()));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)?;
+        Ok(SpillFile {
+            file,
+            path,
+            record_bytes: ROW_HEADER_BYTES + row_floats,
+            row_floats,
+            free: Vec::new(),
+            next_slot: 0,
+        })
+    }
+
+    /// Occupied bytes (allocated records minus the free list).
+    pub fn bytes(&self) -> usize {
+        (self.next_slot as usize - self.free.len()) * self.record_bytes
+    }
+
+    pub fn record_bytes(&self) -> usize {
+        self.record_bytes
+    }
+
+    /// Write a quantized row; returns the slot to read it back from.
+    pub fn write_row(&mut self, qr: &QuantRow) -> Result<u32> {
+        if qr.q.len() != self.row_floats {
+            return Err(Error::Offload(format!(
+                "spill row has {} codes, store expects {}",
+                qr.q.len(),
+                self.row_floats
+            )));
+        }
+        let slot = self.free.pop().unwrap_or_else(|| {
+            let s = self.next_slot;
+            self.next_slot += 1;
+            s
+        });
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
+        let mut rec = Vec::with_capacity(self.record_bytes);
+        rec.extend_from_slice(&qr.min.to_le_bytes());
+        rec.extend_from_slice(&qr.scale.to_le_bytes());
+        rec.extend_from_slice(&qr.q);
+        self.file.write_all(&rec)?;
+        Ok(slot)
+    }
+
+    /// Read a row back and release its slot.
+    pub fn take_row(&mut self, slot: u32) -> Result<QuantRow> {
+        let qr = self.read_row(slot)?;
+        self.free.push(slot);
+        Ok(qr)
+    }
+
+    /// Read a row without releasing the slot (staging keeps the record
+    /// until the hot copy is consumed or re-demoted).
+    pub fn read_row(&mut self, slot: u32) -> Result<QuantRow> {
+        debug_assert!(slot < self.next_slot && !self.free.contains(&slot));
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
+        let mut rec = vec![0u8; self.record_bytes];
+        self.file.read_exact(&mut rec)?;
+        let min = f32::from_le_bytes(rec[0..4].try_into().unwrap());
+        let scale = f32::from_le_bytes(rec[4..8].try_into().unwrap());
+        Ok(QuantRow { q: rec[ROW_HEADER_BYTES..].to_vec(), min, scale })
+    }
+
+    /// Release a slot without reading it (row dropped by a baseline).
+    pub fn free_slot(&mut self, slot: u32) {
+        debug_assert!(slot < self.next_slot && !self.free.contains(&slot));
+        self.free.push(slot);
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::quant::quantize;
+
+    fn tmpdir() -> String {
+        std::env::temp_dir()
+            .join("asrkf-spill-test")
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn write_take_roundtrip() {
+        let mut s = SpillFile::create(&tmpdir(), 8).unwrap();
+        let qr = quantize(&[0.5f32, -1.0, 2.0, 0.0, 1.0, 1.5, -0.25, 0.75]);
+        let slot = s.write_row(&qr).unwrap();
+        assert_eq!(s.bytes(), s.record_bytes());
+        let back = s.take_row(slot).unwrap();
+        assert_eq!(back, qr);
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn slots_are_reused_after_free() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        let a = s.write_row(&quantize(&[1.0; 4])).unwrap();
+        let b = s.write_row(&quantize(&[2.0; 4])).unwrap();
+        assert_ne!(a, b);
+        let _ = s.take_row(a).unwrap();
+        let c = s.write_row(&quantize(&[3.0; 4])).unwrap();
+        assert_eq!(c, a, "freed slot not reused");
+        // b untouched by the reuse
+        let back = s.take_row(b).unwrap();
+        assert_eq!(back.min, 2.0);
+    }
+
+    #[test]
+    fn file_removed_on_drop() {
+        let path;
+        {
+            let s = SpillFile::create(&tmpdir(), 2).unwrap();
+            path = s.path.clone();
+            assert!(path.exists());
+        }
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn rejects_wrong_row_width() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        assert!(s.write_row(&quantize(&[1.0; 3])).is_err());
+    }
+
+    #[test]
+    fn read_without_release_keeps_slot() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        let slot = s.write_row(&quantize(&[1.0, 2.0, 3.0, 4.0])).unwrap();
+        let a = s.read_row(slot).unwrap();
+        let b = s.read_row(slot).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(s.bytes(), s.record_bytes());
+        s.free_slot(slot);
+        assert_eq!(s.bytes(), 0);
+    }
+}

@@ -1,0 +1,749 @@
+//! The tiered frozen-row store.
+//!
+//! Replaces the flat `kv::FrozenStore` as the engine's off-GPU side of
+//! the soft freeze. Every stashed row is kept (the paper's "no
+//! permanent information loss") but residency is graded by the freeze
+//! ladder's *predicted thaw step*:
+//!
+//! * rows predicted back within `cold_after_steps` stay **hot**
+//!   (uncompressed, block-pooled for batched gather/scatter),
+//! * rows predicted to stay frozen are quantized into the **cold**
+//!   tier at stash time (u8 affine, ~4x smaller),
+//! * cold rows overflowing their byte budget demote to the
+//!   file-backed **spill** tier when one is configured.
+//!
+//! Restores (`take`) served from the hot tier are plain copies; the
+//! prefetch path (`stage` / `stage_upcoming`) promotes
+//! soon-to-thaw rows back to hot *between* decode steps so the decode
+//! step itself never pays dequantization — the double-buffered
+//! speculative-retrieval idea from FreeKV (arXiv 2505.13109).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::OffloadConfig;
+use crate::error::{Error, Result};
+use crate::metrics::{RestoreLatency, TierKind, TierOccupancy};
+use crate::offload::quant::{self, QuantRow};
+use crate::offload::spill::SpillFile;
+
+/// Uncompressed host rows in fixed-size slabs (`block_rows` rows per
+/// slab). Slots are stable u32 handles; freed slots are reused, so a
+/// long-running session's hot tier stays at its high-water footprint
+/// instead of fragmenting the allocator.
+#[derive(Debug)]
+struct HotPool {
+    row_floats: usize,
+    block_rows: usize,
+    slabs: Vec<Vec<f32>>,
+    free: Vec<u32>,
+}
+
+impl HotPool {
+    fn new(row_floats: usize, block_rows: usize) -> HotPool {
+        HotPool { row_floats, block_rows: block_rows.max(1), slabs: Vec::new(), free: Vec::new() }
+    }
+
+    fn alloc(&mut self, row: &[f32]) -> u32 {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            let slot = (self.slabs.len() * self.block_rows) as u32;
+            self.slabs.push(vec![0.0; self.block_rows * self.row_floats]);
+            for s in (1..self.block_rows as u32).rev() {
+                self.free.push(slot + s);
+            }
+            slot
+        });
+        self.row_mut(slot).copy_from_slice(row);
+        slot
+    }
+
+    fn row(&self, slot: u32) -> &[f32] {
+        let (b, i) = (slot as usize / self.block_rows, slot as usize % self.block_rows);
+        &self.slabs[b][i * self.row_floats..(i + 1) * self.row_floats]
+    }
+
+    fn row_mut(&mut self, slot: u32) -> &mut [f32] {
+        let (b, i) = (slot as usize / self.block_rows, slot as usize % self.block_rows);
+        &mut self.slabs[b][i * self.row_floats..(i + 1) * self.row_floats]
+    }
+
+    fn release(&mut self, slot: u32) {
+        debug_assert!(!self.free.contains(&slot), "double free of hot slot {slot}");
+        self.free.push(slot);
+    }
+}
+
+#[derive(Debug)]
+enum Loc {
+    Hot { slot: u32, staged: bool },
+    /// Quantized cold row. Only exists when `quantize_cold` is on —
+    /// the escape hatch disables demotion entirely (rows stay hot,
+    /// budgets become advisory) rather than storing lossless copies.
+    Cold(QuantRow),
+    Spilled { slot: u32 },
+}
+
+#[derive(Debug)]
+struct Entry {
+    loc: Loc,
+    thaw_eta: u64,
+}
+
+/// Tiered off-GPU storage for frozen KV rows. API superset of the old
+/// `FrozenStore` (fallible where tier movement can fail).
+pub struct TieredStore {
+    row_floats: usize,
+    cfg: OffloadConfig,
+    entries: HashMap<usize, Entry>,
+    pool: HotPool,
+    spill: Option<SpillFile>,
+    hot_bytes: usize,
+    cold_bytes: usize,
+    peak_hot_bytes: usize,
+    peak_cold_bytes: usize,
+    peak_spill_bytes: usize,
+    /// lifetime counters for memory-accounting traces
+    pub total_stashed: u64,
+    pub total_restored: u64,
+    pub total_dropped: u64,
+    /// restores served from a prefetch-staged hot row
+    pub staged_hits: u64,
+    /// restores that paid inline dequantization / spill I/O
+    pub staged_misses: u64,
+    pub demotions_cold: u64,
+    pub demotions_spill: u64,
+    pub prefetch_promotions: u64,
+    pub restore_latency: RestoreLatency,
+}
+
+impl std::fmt::Debug for TieredStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TieredStore")
+            .field("rows", &self.entries.len())
+            .field("occupancy", &self.occupancy())
+            .finish()
+    }
+}
+
+impl TieredStore {
+    pub fn new(row_floats: usize, cfg: OffloadConfig) -> Self {
+        let pool = HotPool::new(row_floats, cfg.block_rows);
+        TieredStore {
+            row_floats,
+            cfg,
+            entries: HashMap::new(),
+            pool,
+            spill: None,
+            hot_bytes: 0,
+            cold_bytes: 0,
+            peak_hot_bytes: 0,
+            peak_cold_bytes: 0,
+            peak_spill_bytes: 0,
+            total_stashed: 0,
+            total_restored: 0,
+            total_dropped: 0,
+            staged_hits: 0,
+            staged_misses: 0,
+            demotions_cold: 0,
+            demotions_spill: 0,
+            prefetch_promotions: 0,
+            restore_latency: RestoreLatency::default(),
+        }
+    }
+
+    pub fn config(&self) -> &OffloadConfig {
+        &self.cfg
+    }
+
+    fn row_bytes(&self) -> usize {
+        self.row_floats * std::mem::size_of::<f32>()
+    }
+
+    fn bump_peaks(&mut self) {
+        self.peak_hot_bytes = self.peak_hot_bytes.max(self.hot_bytes);
+        self.peak_cold_bytes = self.peak_cold_bytes.max(self.cold_bytes);
+        let sb = self.spill.as_ref().map(|s| s.bytes()).unwrap_or(0);
+        self.peak_spill_bytes = self.peak_spill_bytes.max(sb);
+    }
+
+    /// Stash a gathered row bundle for `pos` (active -> frozen).
+    /// `thaw_eta` is the policy's predicted restore step — it drives
+    /// tier admission. Double-stashing is an engine invariant breach
+    /// and returns `Error::Offload` (the old store corrupted silently
+    /// in release builds).
+    pub fn stash(&mut self, pos: usize, row: Vec<f32>, step: u64, thaw_eta: u64) -> Result<()> {
+        if row.len() != self.row_floats {
+            return Err(Error::Offload(format!(
+                "row bundle for pos {pos} has {} floats, store expects {}",
+                row.len(),
+                self.row_floats
+            )));
+        }
+        if self.entries.contains_key(&pos) {
+            return Err(Error::Offload(format!("double-freeze of pos {pos}")));
+        }
+        let goes_cold = self.cfg.quantize_cold
+            && thaw_eta.saturating_sub(step) >= self.cfg.cold_after_steps;
+        let loc = if goes_cold {
+            let qr = quant::quantize(&row);
+            self.cold_bytes += qr.bytes();
+            self.demotions_cold += 1;
+            Loc::Cold(qr)
+        } else {
+            let slot = self.pool.alloc(&row);
+            self.hot_bytes += self.row_bytes();
+            Loc::Hot { slot, staged: false }
+        };
+        self.entries.insert(pos, Entry { loc, thaw_eta });
+        self.total_stashed += 1;
+        self.enforce_budgets()?;
+        self.bump_peaks();
+        Ok(())
+    }
+
+    /// Demote over-budget rows: hot -> cold (farthest predicted thaw
+    /// first, staged rows exempt), then cold -> spill when configured.
+    fn enforce_budgets(&mut self) -> Result<()> {
+        if !self.cfg.quantize_cold {
+            return Ok(()); // escape hatch: demotion saves nothing
+        }
+        while self.hot_bytes > self.cfg.hot_budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| matches!(e.loc, Loc::Hot { staged: false, .. }))
+                .max_by_key(|(_, e)| e.thaw_eta)
+                .map(|(&p, _)| p);
+            let Some(pos) = victim else { break };
+            self.demote_to_cold(pos);
+        }
+        if self.cfg.spill_dir.is_some() {
+            while self.cold_bytes > self.cfg.cold_budget_bytes {
+                let victim = self
+                    .entries
+                    .iter()
+                    .filter(|(_, e)| matches!(e.loc, Loc::Cold(_)))
+                    .max_by_key(|(_, e)| e.thaw_eta)
+                    .map(|(&p, _)| p);
+                let Some(pos) = victim else { break };
+                self.demote_to_spill(pos)?;
+            }
+        }
+        self.bump_peaks();
+        Ok(())
+    }
+
+    fn demote_to_cold(&mut self, pos: usize) {
+        debug_assert!(self.cfg.quantize_cold, "demotion with quantization disabled");
+        let slot = match self.entries.get(&pos) {
+            Some(Entry { loc: Loc::Hot { slot, .. }, .. }) => *slot,
+            _ => panic!("demote of non-hot pos {pos}"),
+        };
+        let qr = quant::quantize(self.pool.row(slot));
+        self.pool.release(slot);
+        self.hot_bytes -= self.row_bytes();
+        self.cold_bytes += qr.bytes();
+        self.entries.get_mut(&pos).unwrap().loc = Loc::Cold(qr);
+        self.demotions_cold += 1;
+    }
+
+    fn demote_to_spill(&mut self, pos: usize) -> Result<()> {
+        if self.spill.is_none() {
+            let dir = self.cfg.spill_dir.clone().expect("spill demotion without spill_dir");
+            self.spill = Some(SpillFile::create(&dir, self.row_floats)?);
+        }
+        let qr = match self.entries.get(&pos) {
+            Some(Entry { loc: Loc::Cold(qr), .. }) => qr.clone(),
+            _ => return Err(Error::Offload(format!("spill of non-cold pos {pos}"))),
+        };
+        let bytes = qr.bytes();
+        let slot = self.spill.as_mut().unwrap().write_row(&qr)?;
+        self.entries.get_mut(&pos).unwrap().loc = Loc::Spilled { slot };
+        self.cold_bytes -= bytes;
+        self.demotions_spill += 1;
+        Ok(())
+    }
+
+    /// Promote one entry into the hot tier with the staged flag set.
+    /// Decompression happens HERE — ahead of the decode step that will
+    /// consume the row. Staging respects the hot-tier budget: when the
+    /// hot tier is full the row stays put and the eventual restore pays
+    /// the inline cost (visible as a staged miss) rather than blowing
+    /// the budget the coordinator partitioned per slot.
+    fn promote(&mut self, pos: usize) -> Result<bool> {
+        if self.hot_bytes + self.row_bytes() > self.cfg.hot_budget_bytes {
+            return Ok(false);
+        }
+        enum Src {
+            Quant(QuantRow),
+            Spill(u32),
+        }
+        let src = match self.entries.get(&pos) {
+            None => return Ok(false),
+            Some(e) => match &e.loc {
+                Loc::Hot { .. } => return Ok(false),
+                Loc::Cold(qr) => Src::Quant(qr.clone()),
+                Loc::Spilled { slot } => Src::Spill(*slot),
+            },
+        };
+        let row: Vec<f32> = match src {
+            Src::Quant(qr) => {
+                self.cold_bytes -= qr.bytes();
+                quant::dequantize(&qr)
+            }
+            Src::Spill(slot) => {
+                let qr = self
+                    .spill
+                    .as_mut()
+                    .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?
+                    .take_row(slot)?;
+                quant::dequantize(&qr)
+            }
+        };
+        let slot = self.pool.alloc(&row);
+        self.entries.get_mut(&pos).unwrap().loc = Loc::Hot { slot, staged: true };
+        self.hot_bytes += self.row_bytes();
+        self.prefetch_promotions += 1;
+        self.bump_peaks();
+        Ok(true)
+    }
+
+    /// Stage specific rows (the policy's prefetch hints) into the hot
+    /// tier. Each hint carries the policy's *live* predicted thaw step,
+    /// which also refreshes the store's stash-time prediction —
+    /// recovery unfreezes rewrite freeze timers, so stash-time etas go
+    /// stale. Returns how many rows were actually promoted.
+    pub fn stage(&mut self, hints: &[(usize, u64)]) -> Result<usize> {
+        let mut n = 0;
+        for &(pos, eta) in hints {
+            if let Some(e) = self.entries.get_mut(&pos) {
+                e.thaw_eta = eta;
+            }
+            if self.promote(pos)? {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Stage every row predicted to thaw within `horizon` steps of
+    /// `now`, soonest first, up to `max_rows`. Used when the entropy
+    /// monitor trends toward a recovery trigger: recovery unfreezes are
+    /// served from hot rows instead of paying dequantization inside the
+    /// decode step. The horizon is clamped to the admission horizon
+    /// (`cold_after_steps`) so speculative promotions are never undone
+    /// by the next residency sweep.
+    pub fn stage_upcoming(&mut self, now: u64, horizon: u64, max_rows: usize) -> Result<usize> {
+        let horizon = horizon.min(self.cfg.cold_after_steps);
+        let mut candidates: Vec<(u64, usize)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                !matches!(e.loc, Loc::Hot { .. }) && e.thaw_eta <= now.saturating_add(horizon)
+            })
+            .map(|(&p, e)| (e.thaw_eta, p))
+            .collect();
+        candidates.sort_unstable();
+        let mut n = 0;
+        for (_, pos) in candidates.into_iter().take(max_rows) {
+            if self.promote(pos)? {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Residency sweep, called once per decode step by the session
+    /// (O(resident rows)). Applies the admission rule continuously: a
+    /// hot row whose predicted thaw sits beyond the `cold_after_steps`
+    /// horizon does not belong in the hot tier — the main source is a
+    /// stale prefetch (a row staged for a recovery that never fired).
+    pub fn on_step(&mut self, now: u64) -> Result<()> {
+        if !self.cfg.quantize_cold {
+            return Ok(());
+        }
+        let aged: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                matches!(e.loc, Loc::Hot { .. })
+                    && e.thaw_eta > now.saturating_add(self.cfg.cold_after_steps)
+            })
+            .map(|(&p, _)| p)
+            .collect();
+        for pos in aged {
+            self.demote_to_cold(pos);
+        }
+        self.enforce_budgets()
+    }
+
+    /// Take the payload for a restore (frozen -> active). `Ok(None)`
+    /// means nothing was stashed for `pos`; spill I/O failures error.
+    pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
+        let Some(e) = self.entries.remove(&pos) else { return Ok(None) };
+        let t0 = Instant::now();
+        let (row, tier) = match e.loc {
+            Loc::Hot { slot, staged } => {
+                let row = self.pool.row(slot).to_vec();
+                self.pool.release(slot);
+                self.hot_bytes -= self.row_bytes();
+                if staged {
+                    self.staged_hits += 1;
+                }
+                (row, TierKind::Hot)
+            }
+            Loc::Cold(qr) => {
+                self.cold_bytes -= qr.bytes();
+                self.staged_misses += 1;
+                (quant::dequantize(&qr), TierKind::Cold)
+            }
+            Loc::Spilled { slot } => {
+                self.staged_misses += 1;
+                let qr = self
+                    .spill
+                    .as_mut()
+                    .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?
+                    .take_row(slot)?;
+                (quant::dequantize(&qr), TierKind::Spill)
+            }
+        };
+        self.restore_latency.record(tier, t0.elapsed());
+        self.total_restored += 1;
+        Ok(Some(row))
+    }
+
+    /// Drop a payload permanently (irreversible-eviction baselines).
+    pub fn drop_row(&mut self, pos: usize) {
+        let Some(e) = self.entries.remove(&pos) else { return };
+        match e.loc {
+            Loc::Hot { slot, .. } => {
+                self.pool.release(slot);
+                self.hot_bytes -= self.row_bytes();
+            }
+            Loc::Cold(qr) => self.cold_bytes -= qr.bytes(),
+            Loc::Spilled { slot } => {
+                if let Some(s) = self.spill.as_mut() {
+                    s.free_slot(slot);
+                }
+            }
+        }
+        self.total_dropped += 1;
+    }
+
+    pub fn contains(&self, pos: usize) -> bool {
+        self.entries.contains_key(&pos)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes currently held across all tiers.
+    pub fn bytes(&self) -> usize {
+        self.hot_bytes + self.cold_bytes + self.spill.as_ref().map(|s| s.bytes()).unwrap_or(0)
+    }
+
+    /// Drain everything (pos, payload) — the engine's emergency full
+    /// restore (RR recovery rewind). Crosses every tier.
+    pub fn drain_all(&mut self) -> Result<Vec<(usize, Vec<f32>)>> {
+        let positions: Vec<usize> = self.entries.keys().copied().collect();
+        let mut out = Vec::with_capacity(positions.len());
+        for pos in positions {
+            if let Some(row) = self.take(pos)? {
+                out.push((pos, row));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn positions(&self) -> Vec<usize> {
+        let mut p: Vec<usize> = self.entries.keys().copied().collect();
+        p.sort_unstable();
+        p
+    }
+
+    /// Point-in-time per-tier occupancy gauges.
+    pub fn occupancy(&self) -> TierOccupancy {
+        let mut o = TierOccupancy {
+            hot_bytes: self.hot_bytes,
+            cold_bytes: self.cold_bytes,
+            spill_bytes: self.spill.as_ref().map(|s| s.bytes()).unwrap_or(0),
+            peak_hot_bytes: self.peak_hot_bytes,
+            peak_cold_bytes: self.peak_cold_bytes,
+            peak_spill_bytes: self.peak_spill_bytes,
+            uncompressed_bytes: self.entries.len() * self.row_bytes(),
+            ..TierOccupancy::default()
+        };
+        for e in self.entries.values() {
+            match e.loc {
+                Loc::Hot { .. } => o.hot_rows += 1,
+                Loc::Cold(_) => o.cold_rows += 1,
+                Loc::Spilled { .. } => o.spill_rows += 1,
+            }
+        }
+        o
+    }
+
+    /// Counters + occupancy snapshot for responses and bench CSVs.
+    pub fn summary(&self) -> super::OffloadSummary {
+        let mean_us = |h: &crate::metrics::Histogram| h.mean().as_micros() as u64;
+        super::OffloadSummary {
+            occupancy: self.occupancy(),
+            staged_hits: self.staged_hits,
+            staged_misses: self.staged_misses,
+            demotions_cold: self.demotions_cold,
+            demotions_spill: self.demotions_spill,
+            prefetch_promotions: self.prefetch_promotions,
+            restores_hot: self.restore_latency.hot.count(),
+            restores_cold: self.restore_latency.cold.count(),
+            restores_spill: self.restore_latency.spill.count(),
+            restore_hot_mean_us: mean_us(&self.restore_latency.hot),
+            restore_cold_mean_us: mean_us(&self.restore_latency.cold),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> OffloadConfig {
+        OffloadConfig {
+            hot_budget_bytes: usize::MAX >> 1,
+            cold_budget_bytes: usize::MAX >> 1,
+            cold_after_steps: 8,
+            block_rows: 4,
+            ..OffloadConfig::default()
+        }
+    }
+
+    fn row(rf: usize, v: f32) -> Vec<f32> {
+        (0..rf).map(|i| v + i as f32 * 0.01).collect()
+    }
+
+    const RF: usize = 16;
+
+    #[test]
+    fn hot_stash_take_roundtrip_is_exact() {
+        let mut s = TieredStore::new(RF, cfg());
+        let r = row(RF, 1.0);
+        s.stash(7, r.clone(), 0, 2).unwrap(); // thaws in 2 < cold_after 8 -> hot
+        assert!(s.contains(7));
+        assert_eq!(s.occupancy().hot_rows, 1);
+        assert_eq!(s.take(7).unwrap(), Some(r));
+        assert_eq!(s.take(7).unwrap(), None);
+        assert_eq!(s.total_restored, 1);
+    }
+
+    #[test]
+    fn double_stash_is_an_error() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(3, row(RF, 0.0), 0, 1).unwrap();
+        let e = s.stash(3, row(RF, 1.0), 0, 1).unwrap_err();
+        assert!(format!("{e}").contains("double-freeze"));
+        assert_eq!(s.total_stashed, 1);
+    }
+
+    #[test]
+    fn far_thaw_eta_admits_straight_to_cold() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 100).unwrap(); // eta - step >= 8 -> cold
+        let o = s.occupancy();
+        assert_eq!(o.cold_rows, 1);
+        assert_eq!(o.hot_rows, 0);
+        assert!(o.cold_bytes < o.uncompressed_bytes, "cold tier not smaller");
+    }
+
+    #[test]
+    fn cold_take_roundtrips_within_quant_bound() {
+        let mut s = TieredStore::new(RF, cfg());
+        let orig = row(RF, -2.0);
+        s.stash(1, orig.clone(), 0, 100).unwrap();
+        let back = s.take(1).unwrap().unwrap();
+        let range = 0.01 * (RF - 1) as f32;
+        let bound = cfg().cold_quant_rel_error * range + 1e-6;
+        for (a, b) in orig.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}");
+        }
+        assert_eq!(s.staged_misses, 1, "inline dequantization must count as a miss");
+    }
+
+    #[test]
+    fn hot_budget_demotes_farthest_eta_first() {
+        let mut c = cfg();
+        c.hot_budget_bytes = 2 * RF * 4; // room for 2 hot rows
+        let mut s = TieredStore::new(RF, c);
+        s.stash(1, row(RF, 1.0), 0, 2).unwrap();
+        s.stash(2, row(RF, 2.0), 0, 3).unwrap();
+        s.stash(3, row(RF, 3.0), 0, 7).unwrap(); // over budget: pos 3 has farthest eta
+        let o = s.occupancy();
+        assert_eq!(o.hot_rows, 2);
+        assert_eq!(o.cold_rows, 1);
+        // 1 and 2 still hot (exact roundtrip)
+        assert_eq!(s.take(1).unwrap(), Some(row(RF, 1.0)));
+        assert_eq!(s.take(2).unwrap(), Some(row(RF, 2.0)));
+    }
+
+    #[test]
+    fn staged_restore_never_decompresses_in_take() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(5, row(RF, 1.5), 0, 100).unwrap();
+        assert_eq!(s.occupancy().cold_rows, 1);
+        // prefetch-ahead: decompression happens in stage(), between
+        // steps; the hint also refreshes the thaw prediction
+        assert_eq!(s.stage(&[(5, 2)]).unwrap(), 1);
+        assert_eq!(s.occupancy().hot_rows, 1);
+        let before_cold_restores = s.restore_latency.cold.count();
+        let got = s.take(5).unwrap().unwrap();
+        assert_eq!(got.len(), RF);
+        assert_eq!(s.staged_hits, 1);
+        assert_eq!(s.staged_misses, 0);
+        assert_eq!(s.restore_latency.cold.count(), before_cold_restores);
+        assert_eq!(s.restore_latency.hot.count(), 1);
+    }
+
+    #[test]
+    fn stage_upcoming_promotes_soonest_first() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 20).unwrap();
+        s.stash(2, row(RF, 2.0), 0, 12).unwrap();
+        s.stash(3, row(RF, 3.0), 0, 50).unwrap();
+        assert_eq!(s.occupancy().cold_rows, 3);
+        // horizon covers 12 and 20; cap 1 -> soonest (pos 2) promoted
+        assert_eq!(s.stage_upcoming(10, 10, 1).unwrap(), 1);
+        let o = s.occupancy();
+        assert_eq!(o.hot_rows, 1);
+        s.take(2).unwrap().unwrap();
+        assert_eq!(s.staged_hits, 1);
+    }
+
+    #[test]
+    fn stale_staged_rows_demote_on_step() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 100).unwrap(); // far eta -> cold
+        // a speculative hint whose prediction is still far away
+        assert_eq!(s.stage(&[(1, 100)]).unwrap(), 1);
+        assert_eq!(s.occupancy().hot_rows, 1);
+        // the predicted thaw (100) is still beyond now + cold_after (8):
+        // the speculation was a false alarm, the row goes back cold
+        s.on_step(10).unwrap();
+        assert_eq!(s.occupancy().hot_rows, 0);
+        assert_eq!(s.occupancy().cold_rows, 1);
+        // a row staged near its thaw stays hot
+        s.stash(2, row(RF, 2.0), 0, 12).unwrap();
+        s.stage_upcoming(10, 5, 8).unwrap();
+        s.on_step(10).unwrap();
+        assert_eq!(s.occupancy().hot_rows, 1);
+    }
+
+    #[test]
+    fn staging_respects_hot_budget() {
+        let mut c = cfg();
+        c.hot_budget_bytes = RF * 4; // room for exactly one hot row
+        let mut s = TieredStore::new(RF, c);
+        s.stash(1, row(RF, 1.0), 0, 2).unwrap(); // hot, fills the budget
+        s.stash(2, row(RF, 2.0), 0, 100).unwrap(); // cold
+        // no headroom: the speculative promotion must be refused ...
+        assert_eq!(s.stage(&[(2, 3)]).unwrap(), 0);
+        assert_eq!(s.occupancy().hot_rows, 1);
+        // ... and the restore falls back to the inline path (a miss)
+        s.take(2).unwrap().unwrap();
+        assert_eq!(s.staged_misses, 1);
+        // once the hot row leaves, staging works again
+        s.stash(3, row(RF, 3.0), 0, 100).unwrap();
+        s.take(1).unwrap().unwrap();
+        assert_eq!(s.stage(&[(3, 3)]).unwrap(), 1);
+    }
+
+    #[test]
+    fn spill_tier_engages_over_cold_budget() {
+        let dir = std::env::temp_dir().join("asrkf-store-test").to_string_lossy().into_owned();
+        let mut c = cfg();
+        c.cold_budget_bytes = 1; // everything cold must spill
+        c.spill_dir = Some(dir);
+        let mut s = TieredStore::new(RF, c);
+        s.stash(1, row(RF, 1.0), 0, 100).unwrap();
+        let o = s.occupancy();
+        assert_eq!(o.cold_rows, 0);
+        assert_eq!(o.spill_rows, 1);
+        assert!(o.spill_bytes > 0);
+        let back = s.take(1).unwrap().unwrap();
+        assert_eq!(back.len(), RF);
+        assert_eq!(s.restore_latency.spill.count(), 1);
+        assert_eq!(s.occupancy().spill_bytes, 0);
+    }
+
+    #[test]
+    fn quantize_escape_hatch_never_demotes() {
+        let mut c = cfg();
+        c.quantize_cold = false;
+        c.hot_budget_bytes = 1;
+        let mut s = TieredStore::new(RF, c);
+        s.stash(1, row(RF, 1.0), 0, 1000).unwrap();
+        s.on_step(500).unwrap();
+        let o = s.occupancy();
+        assert_eq!(o.hot_rows, 1, "escape hatch must keep rows uncompressed");
+        assert_eq!(s.take(1).unwrap(), Some(row(RF, 1.0)), "must stay lossless");
+    }
+
+    #[test]
+    fn drop_row_accounts_across_tiers() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 1).unwrap(); // hot
+        s.stash(2, row(RF, 2.0), 0, 100).unwrap(); // cold
+        s.drop_row(1);
+        s.drop_row(2);
+        s.drop_row(99); // absent: no count
+        assert_eq!(s.total_dropped, 2);
+        assert!(s.is_empty());
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn drain_all_crosses_tiers() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 1).unwrap(); // hot
+        s.stash(9, row(RF, 9.0), 0, 100).unwrap(); // cold
+        let mut all = s.drain_all().unwrap();
+        all.sort_by_key(|(p, _)| *p);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, 1);
+        assert_eq!(all[0].1, row(RF, 1.0));
+        assert_eq!(all[1].0, 9);
+        assert!(s.is_empty());
+        assert_eq!(s.total_restored, 2);
+    }
+
+    #[test]
+    fn conservation_counter_invariant() {
+        let mut s = TieredStore::new(RF, cfg());
+        for p in 0..10 {
+            s.stash(p, row(RF, p as f32), 0, if p % 2 == 0 { 1 } else { 100 }).unwrap();
+        }
+        s.take(0).unwrap();
+        s.take(1).unwrap();
+        s.drop_row(2);
+        assert_eq!(
+            s.total_stashed,
+            s.total_restored + s.total_dropped + s.len() as u64
+        );
+    }
+
+    #[test]
+    fn peak_gauges_are_high_water_marks() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 1).unwrap();
+        s.stash(2, row(RF, 2.0), 0, 1).unwrap();
+        let peak = s.occupancy().peak_hot_bytes;
+        assert_eq!(peak, 2 * RF * 4);
+        s.take(1).unwrap();
+        s.take(2).unwrap();
+        let o = s.occupancy();
+        assert_eq!(o.hot_bytes, 0);
+        assert_eq!(o.peak_hot_bytes, peak);
+    }
+}

@@ -17,6 +17,9 @@ pub struct EntropyMonitor {
     top1_ema: f32,
     steps: u64,
     warmup: u64,
+    /// how close the last observation came to a trigger (see
+    /// [`EntropyMonitor::pressure`])
+    last_pressure: f32,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,7 +31,15 @@ pub enum Signal {
 
 impl EntropyMonitor {
     pub fn new(cfg: RecoveryConfig) -> Self {
-        EntropyMonitor { cfg, ema: 0.0, var: 0.0, top1_ema: 0.0, steps: 0, warmup: 8 }
+        EntropyMonitor {
+            cfg,
+            ema: 0.0,
+            var: 0.0,
+            top1_ema: 0.0,
+            steps: 0,
+            warmup: 8,
+            last_pressure: 0.0,
+        }
     }
 
     /// Feed one step's entropy (nats) and top-1 probability.
@@ -42,10 +53,22 @@ impl EntropyMonitor {
             } else {
                 self.update(entropy, top1);
             }
+            self.last_pressure = 0.0;
             return Signal::Ok;
         }
 
         let std = self.var.sqrt().max(0.05); // floor avoids zero-variance hair triggers
+        // pressure: fraction of the trigger threshold reached this step
+        // (1.0 == a trigger fires). Consumed by the offload store's
+        // prefetch-ahead staging, so likely recovery restores are hot.
+        let spike_frac = (entropy - self.ema) / (self.cfg.lambda * std).max(1e-6);
+        let conf_frac = if self.top1_ema > 0.0 {
+            (1.0 - top1 / self.top1_ema) / 0.5
+        } else {
+            0.0
+        };
+        self.last_pressure = spike_frac.max(conf_frac).clamp(0.0, 2.0);
+
         let signal = if entropy > self.ema + self.cfg.lambda * std {
             Signal::Spike
         } else if top1 < 0.5 * self.top1_ema {
@@ -55,6 +78,13 @@ impl EntropyMonitor {
         };
         self.update(entropy, top1);
         signal
+    }
+
+    /// How close the last step trended toward a recovery trigger, as a
+    /// fraction of the trigger threshold: 0.0 = at/below baseline,
+    /// 1.0 = a trigger fired, clamped to 2.0. Stays 0 during warmup.
+    pub fn pressure(&self) -> f32 {
+        self.last_pressure
     }
 
     fn update(&mut self, entropy: f32, top1: f32) {
@@ -71,6 +101,7 @@ impl EntropyMonitor {
         self.ema = 0.0;
         self.var = 0.0;
         self.top1_ema = 0.0;
+        self.last_pressure = 0.0;
     }
 
     pub fn baseline(&self) -> (f32, f32) {
@@ -129,5 +160,25 @@ mod tests {
         }
         m.reset();
         assert_eq!(m.observe(9.0, 0.6), Signal::Ok); // warmup again
+        assert_eq!(m.pressure(), 0.0);
+    }
+
+    #[test]
+    fn pressure_tracks_proximity_to_trigger() {
+        let mut m = mon();
+        for _ in 0..50 {
+            m.observe(2.0, 0.6);
+        }
+        m.observe(2.0, 0.6);
+        let calm = m.pressure();
+        assert!(calm < 0.5, "calm pressure {calm}");
+        // halfway to the spike threshold (lambda=3, std floored at 0.05)
+        m.observe(2.0 + 1.5 * 0.05, 0.6);
+        let rising = m.pressure();
+        assert!(rising > calm, "pressure must rise near the threshold");
+        assert!(rising < 1.0, "not yet a trigger: {rising}");
+        // full spike
+        assert_eq!(m.observe(6.0, 0.6), Signal::Spike);
+        assert!(m.pressure() >= 1.0);
     }
 }

@@ -41,6 +41,8 @@ pub fn response_line(resp: &GenResponse) -> String {
             ("compression", Json::num((resp.compression * 1e4).round() / 1e4)),
             ("ttft_ms", Json::num((resp.ttft.as_secs_f64() * 1e4).round() / 10.0)),
             ("e2e_ms", Json::num((resp.e2e.as_secs_f64() * 1e4).round() / 10.0)),
+            ("offload_bytes", Json::num(resp.offload.occupancy.total_bytes() as f64)),
+            ("staged_hits", Json::num(resp.offload.staged_hits as f64)),
         ]),
     };
     let mut s = String::new();
@@ -97,6 +99,7 @@ mod tests {
             compression: 0.25,
             ttft: Duration::from_millis(12),
             e2e: Duration::from_millis(100),
+            offload: Default::default(),
         };
         let line = response_line(&r);
         assert!(line.ends_with('\n'));

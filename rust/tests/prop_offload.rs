@@ -1,0 +1,216 @@
+//! Property-based tests on the tiered frozen-KV storage invariants
+//! (`offload::TieredStore`), in the style of `prop_policy.rs`:
+//!
+//! * conservation — every stashed row is restored, dropped, or still
+//!   resident: `total_stashed == total_restored + total_dropped +
+//!   resident_rows`, across random stash/take/drop/demote/stage
+//!   sequences;
+//! * payload fidelity — hot restores are bit-exact, cold/spill
+//!   restores round-trip within the configured quantization bound;
+//! * occupancy — per-tier gauges stay consistent with the resident
+//!   set, and the cold tier is always smaller than the uncompressed
+//!   footprint of the rows it holds.
+
+use std::collections::HashMap;
+
+use asrkf::config::OffloadConfig;
+use asrkf::offload::{quantize, dequantize, TieredStore};
+use asrkf::prop_assert;
+use asrkf::util::prop::{prop_check, G};
+
+const RF: usize = 32;
+
+fn random_cfg(g: &mut G) -> OffloadConfig {
+    let row_bytes = RF * 4;
+    OffloadConfig {
+        // budgets from "tiny" (heavy demotion) to "ample"
+        hot_budget_bytes: g.usize(1, 64) * row_bytes,
+        cold_budget_bytes: g.usize(1, 64) * (RF + 8),
+        cold_after_steps: g.usize(0, 12) as u64,
+        quantize_cold: g.bool(0.85),
+        spill_dir: if g.bool(0.3) {
+            Some(
+                std::env::temp_dir()
+                    .join("asrkf-prop-offload")
+                    .to_string_lossy()
+                    .into_owned(),
+            )
+        } else {
+            None
+        },
+        prefetch_ahead: g.usize(0, 4) as u64,
+        block_rows: g.usize(1, 16),
+        ..OffloadConfig::default()
+    }
+}
+
+fn random_row(g: &mut G) -> Vec<f32> {
+    g.vec_f32(RF, -4.0, 4.0)
+}
+
+#[test]
+fn prop_conservation_across_random_op_sequences() {
+    prop_check(40, |g| {
+        let cfg = random_cfg(g);
+        let mut store = TieredStore::new(RF, cfg);
+        let mut resident: Vec<usize> = Vec::new();
+        let mut next_pos = 0usize;
+        for step in 0..120u64 {
+            match g.usize(0, 9) {
+                // stash a new row (weighted heaviest)
+                0..=4 => {
+                    let eta = step + g.usize(0, 30) as u64;
+                    store
+                        .stash(next_pos, random_row(g), step, eta)
+                        .map_err(|e| format!("stash failed: {e}"))?;
+                    resident.push(next_pos);
+                    next_pos += 1;
+                }
+                // restore a random resident row
+                5..=6 => {
+                    if !resident.is_empty() {
+                        let idx = g.usize(0, resident.len() - 1);
+                        let pos = resident.swap_remove(idx);
+                        let got = store.take(pos).map_err(|e| format!("take: {e}"))?;
+                        prop_assert!(got.is_some(), "resident pos {pos} had no payload");
+                    }
+                }
+                // drop a random resident row
+                7 => {
+                    if !resident.is_empty() {
+                        let idx = g.usize(0, resident.len() - 1);
+                        store.drop_row(resident.swap_remove(idx));
+                    }
+                }
+                // prefetch staging
+                8 => {
+                    let horizon = g.usize(0, 16) as u64;
+                    store
+                        .stage_upcoming(step, horizon, g.usize(0, 8))
+                        .map_err(|e| format!("stage: {e}"))?;
+                }
+                // residency sweep
+                _ => store.on_step(step).map_err(|e| format!("on_step: {e}"))?,
+            }
+            prop_assert!(
+                store.total_stashed == store.total_restored + store.total_dropped + store.len() as u64,
+                "conservation violated at step {step}: {} != {} + {} + {}",
+                store.total_stashed,
+                store.total_restored,
+                store.total_dropped,
+                store.len()
+            );
+            prop_assert!(
+                store.len() == resident.len(),
+                "resident mismatch: store {} vs model {}",
+                store.len(),
+                resident.len()
+            );
+            let o = store.occupancy();
+            prop_assert!(
+                o.total_rows() == store.len(),
+                "tier rows {} != resident {}",
+                o.total_rows(),
+                store.len()
+            );
+        }
+        // drain the rest: everything stashed must come back out
+        let drained = store.drain_all().map_err(|e| format!("drain: {e}"))?;
+        prop_assert!(drained.len() == resident.len(), "drain lost rows");
+        prop_assert!(
+            store.total_stashed == store.total_restored + store.total_dropped,
+            "conservation violated after drain"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_restored_payloads_within_quant_bound() {
+    prop_check(40, |g| {
+        let cfg = random_cfg(g);
+        let bound_rel = cfg.cold_quant_rel_error;
+        let lossless = !cfg.quantize_cold;
+        let mut store = TieredStore::new(RF, cfg);
+        let mut originals: HashMap<usize, Vec<f32>> = HashMap::new();
+        for pos in 0..40usize {
+            let row = random_row(g);
+            let eta = g.usize(0, 40) as u64;
+            store
+                .stash(pos, row.clone(), 0, eta)
+                .map_err(|e| format!("stash: {e}"))?;
+            originals.insert(pos, row);
+        }
+        // random staging churn moves rows across tiers
+        store.stage_upcoming(0, g.usize(0, 40) as u64, g.usize(0, 40)).map_err(|e| e.to_string())?;
+        store.on_step(g.usize(0, 20) as u64).map_err(|e| e.to_string())?;
+        for (pos, orig) in originals {
+            let got = store
+                .take(pos)
+                .map_err(|e| format!("take: {e}"))?
+                .ok_or_else(|| format!("pos {pos} lost"))?;
+            let lo = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let bound = if lossless { 1e-6 } else { bound_rel * (hi - lo) + 1e-5 };
+            for (a, b) in orig.iter().zip(&got) {
+                prop_assert!(
+                    (a - b).abs() <= bound,
+                    "pos {pos}: {a} -> {b} exceeds bound {bound}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_roundtrip_bound() {
+    prop_check(200, |g| {
+        let n = g.usize(1, 256);
+        let scale = g.f32(1e-3, 100.0);
+        let offset = g.f32(-50.0, 50.0);
+        let row: Vec<f32> = (0..n).map(|_| offset + g.f32(-1.0, 1.0) * scale).collect();
+        let qr = quantize(&row);
+        let back = dequantize(&qr);
+        let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        // the configured bound: error <= cold_quant_rel_error * range,
+        // plus f32 rounding at the row's magnitude (the affine decode
+        // `min + q*scale` rounds at ulp(|min| + range))
+        let mag = hi.abs().max(lo.abs());
+        let bound = OffloadConfig::default().cold_quant_rel_error * (hi - lo)
+            + mag * f32::EPSILON * 8.0
+            + 1e-7;
+        for (a, b) in row.iter().zip(&back) {
+            prop_assert!((a - b).abs() <= bound, "{a} -> {b} (bound {bound}, n {n})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cold_tier_smaller_than_uncompressed() {
+    prop_check(30, |g| {
+        let mut cfg = random_cfg(g);
+        cfg.quantize_cold = true;
+        cfg.spill_dir = None;
+        cfg.cold_after_steps = 0; // admit everything cold
+        let mut store = TieredStore::new(RF, cfg);
+        let n = g.usize(4, 64);
+        for pos in 0..n {
+            store
+                .stash(pos, random_row(g), 0, 1_000)
+                .map_err(|e| format!("stash: {e}"))?;
+        }
+        let o = store.occupancy();
+        prop_assert!(o.cold_rows > 0, "nothing went cold");
+        let cold_uncompressed = o.cold_rows * RF * 4;
+        prop_assert!(
+            o.cold_bytes < cold_uncompressed,
+            "cold tier not compressed: {} >= {}",
+            o.cold_bytes,
+            cold_uncompressed
+        );
+        Ok(())
+    });
+}

@@ -71,7 +71,7 @@ impl Harness {
     /// Simulate the engine side of one step with synthetic outputs.
     fn step(&mut self, low_score_positions: &[usize], logits: Vec<f32>) -> Action {
         let token = self.session.next_token();
-        let plan = self.session.apply_plan(&mut self.kv, &self.geom, 0, R);
+        let plan = self.session.apply_plan(&mut self.kv, &self.geom, 0, R).unwrap();
         // "graph output": new row with marker len+1
         let pos = self.session.len;
         for plane in 0..self.geom.planes() {
@@ -86,6 +86,7 @@ impl Harness {
         }
         self.session
             .absorb(token, logits, &scores, &plan, CallTiming::default(), Duration::ZERO)
+            .unwrap()
     }
 }
 
@@ -184,7 +185,7 @@ fn rewind_truncates_and_reactivates() {
     let len_before = h.session.len;
     let gen_before = h.session.generated();
     // emulate the generator's RR path: drain store into kv, then rewind
-    for (pos, row) in h.session.store.drain_all() {
+    for (pos, row) in h.session.store.drain_all().unwrap() {
         asrkf::engine::layout::scatter_row(&mut h.kv, &h.geom, 0, pos, &row);
     }
     h.session.rewind(4);
@@ -197,6 +198,33 @@ fn rewind_truncates_and_reactivates() {
         assert!(row.iter().all(|&v| v == pos as f32 + 1.0), "pos {pos} data lost");
     }
     let _ = h.session.next_token();
+}
+
+#[test]
+fn cold_rows_restore_via_staging_never_inline() {
+    // Aggressive cold admission: any freeze predicted to last >= 3
+    // steps is quantized into the cold tier. The policy's prefetch
+    // hints must stage those rows back to hot BEFORE the restoring
+    // plan, so no restore ever dequantizes inside the decode step.
+    let mut cfg = cfg();
+    cfg.offload.cold_after_steps = 3;
+    // 6 stale rows < r_budget 8: every imminent thaw fits in the hint list
+    let stale: Vec<usize> = (2..8).collect();
+    let mut h = Harness::new(&cfg, 24, 250, "asrkf");
+    for _ in 0..100 {
+        h.step(&stale, flat_logits());
+        if h.session.store.staged_hits > 0 || h.session.is_done() {
+            break;
+        }
+    }
+    let sum = h.session.store.summary();
+    assert!(sum.demotions_cold > 0, "cold tier never engaged — test ineffective");
+    assert!(sum.staged_hits > 0, "no staged restore ever happened");
+    assert_eq!(
+        sum.restores_cold, 0,
+        "a restore paid inline dequantization inside the decode step: {sum:?}"
+    );
+    assert_eq!(sum.staged_misses, 0);
 }
 
 #[test]

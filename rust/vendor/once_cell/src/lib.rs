@@ -1,0 +1,59 @@
+//! Offline stand-in for `once_cell`: just `sync::Lazy`, implemented on
+//! `std::sync::OnceLock`. The init closure is `Fn` (not `FnOnce`) which
+//! is sufficient for the `fn() -> T` statics this workspace declares.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    impl<T: std::fmt::Debug, F> std::fmt::Debug for Lazy<T, F> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Lazy").field("cell", &self.cell.get()).finish()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<u32> = Lazy::new(|| 41 + 1);
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(*N, 42);
+        assert_eq!(*N, 42);
+    }
+
+    #[test]
+    fn local_lazy() {
+        let l: Lazy<String, _> = Lazy::new(|| "hi".to_string());
+        assert_eq!(l.len(), 2);
+    }
+}

@@ -1,0 +1,67 @@
+//! Offline stand-in for `rand_core`: the `RngCore` trait and `Error`
+//! type, API-compatible with rand_core 0.6 for the subset this
+//! workspace implements (`util::rng::Pcg64`).
+
+use std::fmt;
+
+/// Error type for fallible RNG operations.
+#[derive(Debug)]
+pub struct Error {
+    msg: &'static str,
+}
+
+impl Error {
+    pub fn new(msg: &'static str) -> Error {
+        Error { msg }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rng error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Core random-number-generator interface (rand_core 0.6 shape).
+pub trait RngCore {
+    fn next_u32(&mut self) -> u32;
+    fn next_u64(&mut self) -> u64;
+    fn fill_bytes(&mut self, dest: &mut [u8]);
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter(u32);
+
+    impl RngCore for Counter {
+        fn next_u32(&mut self) -> u32 {
+            self.0 += 1;
+            self.0
+        }
+        fn next_u64(&mut self) -> u64 {
+            (self.next_u32() as u64) << 32 | self.next_u32() as u64
+        }
+        fn fill_bytes(&mut self, dest: &mut [u8]) {
+            for b in dest {
+                *b = self.next_u32() as u8;
+            }
+        }
+        fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+            self.fill_bytes(dest);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn trait_object_usable() {
+        let mut c = Counter(0);
+        let r: &mut dyn RngCore = &mut c;
+        assert_eq!(r.next_u32(), 1);
+        assert!(r.try_fill_bytes(&mut [0u8; 3]).is_ok());
+    }
+}

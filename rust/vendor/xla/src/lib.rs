@@ -1,0 +1,250 @@
+//! Offline stub for the `xla` (PJRT bindings) crate.
+//!
+//! The build container for this repo has no crates.io / XLA toolchain
+//! access, so the workspace vendors this shim with the exact API subset
+//! `asrkf::runtime` uses:
+//!
+//! * `Literal` is a REAL host-side container (create / `to_vec` /
+//!   `copy_raw_to` / `element_count` round-trip correctly), so every
+//!   literal-handling unit test passes against the stub.
+//! * The PJRT entry points (`PjRtClient::cpu`, compilation, execution)
+//!   return a descriptive error: artifact-driven integration tests and
+//!   benches require the real `xla` crate and are expected to skip/fail
+//!   cleanly in this environment.
+//!
+//! Swapping in the real crate is a one-line change in the root
+//! Cargo.toml; no `asrkf` source changes are required.
+
+use std::fmt;
+
+const STUB_MSG: &str = "PJRT backend unavailable: built against the vendored `xla` stub \
+     (offline container). Install the real xla crate to run artifact-driven programs";
+
+/// Error type mirroring `xla::Error`'s role (message-only here).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+/// Element dtypes the asrkf runtime uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(&self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Plain-old-data element types storable in a `Literal`.
+pub trait NativeType: Copy + Sized {
+    const ELEMENT_TYPE: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+}
+
+/// Host-side literal: dtype + shape + raw bytes. Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want = dims.iter().product::<usize>() * ty.byte_width();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data size mismatch: {} bytes for shape {dims:?} ({want} expected)",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn check_ty<T: NativeType>(&self) -> Result<()> {
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error(format!(
+                "literal dtype mismatch: stored {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        self.check_ty::<T>()?;
+        let n = self.element_count();
+        let mut out = Vec::with_capacity(n);
+        // SAFETY: data length is n * size_of::<T>() by construction and
+        // T is POD (f32/i32); unaligned reads are handled explicitly.
+        unsafe {
+            let src = self.data.as_ptr() as *const T;
+            for i in 0..n {
+                out.push(src.add(i).read_unaligned());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        self.check_ty::<T>()?;
+        let n = self.element_count();
+        if dst.len() != n {
+            return Err(Error(format!(
+                "copy_raw_to: destination holds {} elements, literal has {n}",
+                dst.len()
+            )));
+        }
+        // SAFETY: same POD invariants as `to_vec`.
+        unsafe {
+            let src = self.data.as_ptr() as *const T;
+            for (i, slot) in dst.iter_mut().enumerate() {
+                *slot = src.add(i).read_unaligned();
+            }
+        }
+        Ok(())
+    }
+
+    /// Stub literals are never tuples (tuples only come out of PJRT
+    /// execution, which the stub cannot perform).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_err()
+    }
+}
+
+/// Parsed HLO module handle (stub: file must at least exist).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error(format!("hlo file not found: {path}")));
+        }
+        Ok(HloModuleProto(()))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle. Unconstructible in the stub (execution always
+/// errors first), so `to_literal_sync` is unreachable in practice.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32 * 0.25).collect();
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        let mut dst = vec![0.0f32; 6];
+        lit.copy_raw_to(&mut dst).unwrap();
+        assert_eq!(dst, data);
+    }
+
+    #[test]
+    fn literal_rejects_size_mismatch() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[3], &[0u8; 8]).is_err()
+        );
+    }
+
+    #[test]
+    fn literal_rejects_dtype_mismatch() {
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[1, 0, 0, 0])
+                .unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn pjrt_entry_points_error_cleanly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
