@@ -27,12 +27,14 @@ use asrkf::workload::trace::poisson_trace;
 const N_REQ: usize = 12;
 const MAX_NEW: usize = 32;
 
-/// Aggregate per-request offload summaries into the five CSV columns:
+/// Aggregate per-request offload summaries into the seven CSV columns:
 /// per-request peak hot/cold KB (the max high-water mark any single
 /// session reached — summing peaks of sessions that never coexisted
-/// would overstate the footprint), staged-hit %, and mean hot / cold
-/// restore µs weighted by restore count.
-fn offload_columns(summaries: &[OffloadSummary]) -> [String; 5] {
+/// would overstate the footprint), staged-hit %, mean hot / cold
+/// restore µs weighted by restore count, and the restore-batching pair
+/// (rows restored / spans copied — spans << rows is the coalescing
+/// win of batched plan execution).
+fn offload_columns(summaries: &[OffloadSummary]) -> [String; 7] {
     let peak_hot: usize =
         summaries.iter().map(|s| s.occupancy.peak_hot_bytes).max().unwrap_or(0);
     let peak_cold: usize =
@@ -52,12 +54,16 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 5] {
         let sum: u64 = summaries.iter().map(|s| n(s) * us(s)).sum();
         format!("{}", sum / total)
     };
+    let batch_rows: u64 = summaries.iter().map(|s| s.restore_batch_rows).sum();
+    let batch_spans: u64 = summaries.iter().map(|s| s.restore_batch_spans).sum();
     [
         format!("{:.1}", peak_hot as f64 / 1024.0),
         format!("{:.1}", peak_cold as f64 / 1024.0),
         hit_pct,
         weighted_us(|s| s.restores_hot, |s| s.restore_hot_mean_us),
         weighted_us(|s| s.restores_cold, |s| s.restore_cold_mean_us),
+        batch_rows.to_string(),
+        batch_spans.to_string(),
     ]
 }
 
@@ -78,6 +84,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "staged hit",
             "restore hot (us)",
             "restore cold (us)",
+            "restored rows",
+            "restore spans",
         ],
     );
 

@@ -75,7 +75,9 @@ impl KvPolicy for H2oPolicy {
                 None => break,
             }
         }
-        Plan { freeze: evict, drop_payload: true, ..Plan::default() }
+        let mut plan = Plan { freeze: evict, drop_payload: true, ..Plan::default() };
+        plan.normalize(); // engine batches freezes over sorted runs
+        plan
     }
 
     fn observe(&mut self, _step: u64, scores: &[f32], len: usize) {

@@ -44,7 +44,11 @@ impl KvPolicy for StreamingLlmPolicy {
                 }
             }
         }
-        Plan { freeze: evict, drop_payload: true, ..Plan::default() }
+        // evict is built in ascending position order already; normalize
+        // keeps the sorted-plan contract explicit for the engine
+        let mut plan = Plan { freeze: evict, drop_payload: true, ..Plan::default() };
+        plan.normalize();
+        plan
     }
 
     fn observe(&mut self, _step: u64, _scores: &[f32], len: usize) {

@@ -6,8 +6,10 @@
 //!   1. admit queued requests into free slots (prefill via the B=1
 //!      prefill bucket, rows copied into the slot),
 //!   2. run ONE batched decode step for all occupied slots,
-//!   3. per-slot policy bookkeeping (freeze/restore transfers are
-//!      assembled into the shared `[B,R]` index tensors),
+//!   3. per-slot policy bookkeeping — each slot's freezes and restores
+//!      execute as one batch against the shared cache (contiguous
+//!      position runs coalesce into span copies, see
+//!      `engine::layout::scatter_rows`),
 //!   4. retire finished sessions and answer their channels.
 //!
 //! Sessions join and leave between steps — decode never waits for the
@@ -22,7 +24,7 @@ use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::engine::layout::{insert_prefill, KvGeom};
 use crate::engine::session::Session;
 use crate::error::{Error, Result};
-use crate::metrics::{Histogram, RestoreLatency, ServingStats};
+use crate::metrics::{BatchStats, Histogram, RestoreLatency, ServingStats};
 use crate::model::tokenizer;
 use crate::runtime::{DecodeInputs, DecodeProgram, Runtime};
 
@@ -47,6 +49,8 @@ pub struct BatchEngine {
     pub step_hist: Histogram,
     /// per-tier restore latencies merged from retired sessions
     pub restore_hist: RestoreLatency,
+    /// plan-batching telemetry merged from retired sessions
+    pub batch_stats: BatchStats,
 }
 
 impl BatchEngine {
@@ -92,6 +96,7 @@ impl BatchEngine {
             e2e_hist: Histogram::default(),
             step_hist: Histogram::default(),
             restore_hist: RestoreLatency::default(),
+            batch_stats: BatchStats::default(),
         })
     }
 
@@ -301,10 +306,13 @@ impl BatchEngine {
                 self.e2e_hist.record(e2e);
                 // fold the retiring session's offload telemetry into
                 // the engine-wide aggregates
-                let offload = sess.store.summary();
+                let offload = sess.offload_summary();
                 self.stats.staged_hits += offload.staged_hits;
                 self.stats.staged_misses += offload.staged_misses;
                 self.restore_hist.merge(&sess.store.restore_latency);
+                // batch_stats is the single aggregate of per-session
+                // batching counters (rows/spans live there)
+                self.batch_stats.merge(&sess.batch);
                 let resp = GenResponse {
                     id: slot.id,
                     text: sess.generated_text(),

@@ -121,6 +121,12 @@ pub fn spawn(
                 engine.stats.staged_hits,
                 engine.stats.staged_misses
             );
+            log::info!(
+                "restore batching: {} rows over {} spans",
+                engine.batch_stats.restore_rows,
+                engine.batch_stats.restore_spans
+            );
+            log::info!("{}", engine.batch_stats.restore_batch.summary("restore batch rows"));
             log::info!("{}", engine.restore_hist.hot.summary("restore(hot)"));
             log::info!("{}", engine.restore_hist.cold.summary("restore(cold)"));
         })

@@ -213,7 +213,7 @@ impl<'rt> Generator<'rt> {
             execute,
             download,
             host,
-            offload: session.store.summary(),
+            offload: session.offload_summary(),
         };
         let row_states = (0..session.len)
             .map(|pos| {
@@ -252,6 +252,9 @@ impl<'rt> Generator<'rt> {
             session.step,
             session.len
         );
+        // single-row scatter on purpose: this is the emergency path
+        // (drain order is arbitrary, batching buys nothing here); the
+        // per-step plan path goes through the batched `scatter_rows`.
         for (pos, row) in session.store.drain_all()? {
             scatter_row(kv, geom, 0, pos, &row);
         }

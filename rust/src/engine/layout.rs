@@ -63,12 +63,112 @@ pub fn insert_prefill(
 }
 
 /// Scatter a frozen row bundle ([nl,2,H,D]) back into the cache at
-/// `pos` (host-side emergency restore — the RR recovery path).
+/// `pos`. Single-row path: kept for the emergency RR recovery restore
+/// (and tests); plan execution goes through the batched
+/// [`scatter_rows`].
 pub fn scatter_row(dst: &mut [f32], geom: &KvGeom, slot: usize, pos: usize, row: &[f32]) {
     debug_assert_eq!(row.len(), geom.row_floats());
     for p in 0..geom.planes() {
         let d0 = geom.offset(p, slot, pos);
         dst[d0..d0 + geom.hd].copy_from_slice(&row[p * geom.hd..][..geom.hd]);
+    }
+}
+
+/// A run of consecutive cache positions in one batch lane: `len` rows
+/// starting at `start`. Produced by [`coalesce_runs`] from a plan's
+/// sorted position list; consumed by the batched transfer helpers
+/// below, which issue one span copy per (plane, run) instead of one
+/// per (plane, row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PosRun {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl PosRun {
+    pub fn positions(&self) -> std::ops::Range<usize> {
+        self.start..self.start + self.len
+    }
+}
+
+/// Coalesce a strictly-ascending position list into maximal contiguous
+/// runs. The number of runs is the number of span copies each plane
+/// pays — the batching win `metrics::BatchStats` records.
+pub fn coalesce_runs(sorted: &[usize]) -> Vec<PosRun> {
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] < w[1]),
+        "positions must be sorted strictly ascending"
+    );
+    let mut runs: Vec<PosRun> = Vec::new();
+    for &p in sorted {
+        match runs.last_mut() {
+            Some(r) if r.start + r.len == p => r.len += 1,
+            _ => runs.push(PosRun { start: p, len: 1 }),
+        }
+    }
+    runs
+}
+
+/// Batched scatter: write row bundles back into the cache for every
+/// position covered by `runs`, one destination `copy_from_slice` span
+/// per (plane, run). Bundles are first assembled into a contiguous
+/// per-run staging buffer — on real hardware that is the pinned host
+/// buffer a single H2D DMA reads from — so the cache sees
+/// `planes * runs` span writes instead of `planes * rows` row writes.
+/// `rows[i]` is the bundle for the i-th position in run order.
+pub fn scatter_rows(
+    dst: &mut [f32],
+    geom: &KvGeom,
+    slot: usize,
+    runs: &[PosRun],
+    rows: &[Vec<f32>],
+) {
+    debug_assert_eq!(rows.len(), runs.iter().map(|r| r.len).sum::<usize>());
+    let mut scratch: Vec<f32> = Vec::new();
+    let mut base = 0usize;
+    for run in runs {
+        for p in 0..geom.planes() {
+            scratch.clear();
+            for row in &rows[base..base + run.len] {
+                debug_assert_eq!(row.len(), geom.row_floats());
+                scratch.extend_from_slice(&row[p * geom.hd..][..geom.hd]);
+            }
+            let d0 = geom.offset(p, slot, run.start);
+            dst[d0..d0 + run.len * geom.hd].copy_from_slice(&scratch);
+        }
+        base += run.len;
+    }
+}
+
+/// Batched gather: read the row bundles for every position covered by
+/// `runs` out of the cache — one source span per (plane, run) — and
+/// split them into per-position bundles for stashing. Returns bundles
+/// in run order.
+pub fn gather_rows(src: &[f32], geom: &KvGeom, slot: usize, runs: &[PosRun]) -> Vec<Vec<f32>> {
+    let n: usize = runs.iter().map(|r| r.len).sum();
+    let mut out: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0f32; geom.row_floats()]).collect();
+    let mut base = 0usize;
+    for run in runs {
+        for p in 0..geom.planes() {
+            let s0 = geom.offset(p, slot, run.start);
+            let span = &src[s0..s0 + run.len * geom.hd];
+            for (j, chunk) in span.chunks_exact(geom.hd).enumerate() {
+                out[base + j][p * geom.hd..][..geom.hd].copy_from_slice(chunk);
+            }
+        }
+        base += run.len;
+    }
+    out
+}
+
+/// Batched zero: clear every row covered by `runs`, one `fill` span
+/// per (plane, run) — the "device" side of a batched freeze.
+pub fn zero_rows(dst: &mut [f32], geom: &KvGeom, slot: usize, runs: &[PosRun]) {
+    for run in runs {
+        for p in 0..geom.planes() {
+            let d0 = geom.offset(p, slot, run.start);
+            dst[d0..d0 + run.len * geom.hd].fill(0.0);
+        }
     }
 }
 
@@ -155,6 +255,75 @@ mod tests {
         assert!(gather_row(&kv, &g, 1, 4).iter().all(|&v| v == 0.0));
         zero_row(&mut kv, &g, 1, 5);
         assert!(kv.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn coalesce_runs_merges_contiguous_positions() {
+        assert_eq!(coalesce_runs(&[]), vec![]);
+        assert_eq!(coalesce_runs(&[5]), vec![PosRun { start: 5, len: 1 }]);
+        assert_eq!(
+            coalesce_runs(&[2, 3, 4, 7, 9, 10]),
+            vec![
+                PosRun { start: 2, len: 3 },
+                PosRun { start: 7, len: 1 },
+                PosRun { start: 9, len: 2 },
+            ]
+        );
+        let total: usize = coalesce_runs(&[0, 1, 2, 3]).iter().map(|r| r.len).sum();
+        assert_eq!(total, 4);
+        assert_eq!(PosRun { start: 9, len: 2 }.positions().collect::<Vec<_>>(), vec![9, 10]);
+    }
+
+    #[test]
+    fn batched_scatter_gather_match_single_row_path() {
+        let g = KvGeom::new(&spec(), 2, 16);
+        let positions = vec![1usize, 2, 3, 6, 11, 12];
+        let runs = coalesce_runs(&positions);
+        let rows: Vec<Vec<f32>> = positions
+            .iter()
+            .map(|&p| (0..g.row_floats()).map(|i| (p * 100 + i) as f32).collect())
+            .collect();
+
+        // batched scatter == per-row scatter
+        let mut batched = vec![0.0f32; g.floats()];
+        scatter_rows(&mut batched, &g, 1, &runs, &rows);
+        let mut single = vec![0.0f32; g.floats()];
+        for (i, &p) in positions.iter().enumerate() {
+            scatter_row(&mut single, &g, 1, p, &rows[i]);
+        }
+        assert_eq!(batched, single);
+
+        // batched gather == per-row gather, in run order
+        let gathered = gather_rows(&batched, &g, 1, &runs);
+        assert_eq!(gathered.len(), positions.len());
+        for (i, &p) in positions.iter().enumerate() {
+            assert_eq!(gathered[i], gather_row(&batched, &g, 1, p), "pos {p}");
+        }
+
+        // batched zero == per-row zero
+        zero_rows(&mut batched, &g, 1, &runs);
+        for &p in &positions {
+            single_zero_check(&batched, &g, 1, p);
+        }
+        // untouched lane stays zero throughout
+        assert!(gather_row(&batched, &g, 0, 3).iter().all(|&v| v == 0.0));
+    }
+
+    fn single_zero_check(kv: &[f32], g: &KvGeom, slot: usize, pos: usize) {
+        assert!(
+            gather_row(kv, g, slot, pos).iter().all(|&v| v == 0.0),
+            "pos {pos} not zeroed"
+        );
+    }
+
+    #[test]
+    fn batched_helpers_handle_empty_plans() {
+        let g = KvGeom::new(&spec(), 1, 8);
+        let mut kv = vec![7.0f32; g.floats()];
+        scatter_rows(&mut kv, &g, 0, &[], &[]);
+        zero_rows(&mut kv, &g, 0, &[]);
+        assert!(gather_rows(&kv, &g, 0, &[]).is_empty());
+        assert!(kv.iter().all(|&v| v == 7.0));
     }
 
     #[test]

@@ -9,9 +9,10 @@ use std::time::Duration;
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
+use crate::metrics::BatchStats;
 use crate::model::logits::{logits_entropy, top1_prob};
 use crate::model::sampling::Sampler;
-use crate::offload::TieredStore;
+use crate::offload::{OffloadSummary, TieredStore};
 use crate::recovery::{Action, EntropyMonitor, RecoveryLadder};
 use crate::runtime::CallTiming;
 
@@ -56,6 +57,8 @@ pub struct Session {
     pub trace: Vec<StepRecord>,
     pub monitor: Option<EntropyMonitor>,
     pub ladder: Option<RecoveryLadder>,
+    /// plan-batching telemetry: rows/spans per freeze & restore batch
+    pub batch: BatchStats,
     /// sampler stream positions indexed by generated-token count (RR rewind)
     draws_at: Vec<u64>,
     s_capacity: usize,
@@ -94,6 +97,7 @@ impl Session {
             trace: Vec::new(),
             monitor,
             ladder,
+            batch: BatchStats::default(),
             draws_at: Vec::new(),
             s_capacity,
         }
@@ -128,14 +132,16 @@ impl Session {
     }
 
     /// Ask the policy for this step's plan and apply the data movement
-    /// to the (engine-owned) KV cache: restores scatter stashed rows
-    /// back, freezes gather+zero rows into the store. Mask is updated
+    /// to the (engine-owned) KV cache as per-slot batches: all restores
+    /// scatter in one pass (one span copy per plane per contiguous
+    /// run), all freezes gather + zero the same way. Mask is updated
     /// (restores -> 1, freezes -> 0). `slot` selects the batch lane.
     ///
     /// Restores land on staged hot rows whenever the prefetch path ran
     /// ahead of the thaw (see [`Session::absorb`]); errors surface
     /// storage invariant breaches (missing payload, double freeze) and
-    /// spill-tier I/O failures.
+    /// spill-tier I/O failures. Batch sizes and span counts are
+    /// recorded in [`Session::batch`].
     pub fn apply_plan(
         &mut self,
         kv: &mut [f32],
@@ -143,28 +149,64 @@ impl Session {
         slot: usize,
         r_budget: usize,
     ) -> Result<Plan> {
-        use crate::engine::layout::{gather_row, scatter_row, zero_row};
+        use crate::engine::layout::{coalesce_runs, gather_rows, scatter_rows, zero_rows};
         let plan = self.policy.plan(self.step, self.len, r_budget);
-        for &pos in &plan.restore {
-            let payload = self.store.take(pos)?.ok_or_else(|| {
-                Error::Offload(format!("restore of pos {pos} with no stashed payload"))
-            })?;
-            scatter_row(kv, geom, slot, pos, &payload);
-            self.mask[pos] = 1.0;
-        }
-        for (i, &pos) in plan.freeze.iter().enumerate() {
-            if plan.drop_payload {
-                self.store.drop_row(pos); // irreversible baselines: data is gone
-            } else {
-                // tier admission is driven by the policy's predicted
-                // thaw step (freeze step + Eq.3 duration)
-                let eta = plan.freeze_thaw_eta.get(i).copied().unwrap_or(self.step + 1);
-                self.store.stash(pos, gather_row(kv, geom, slot, pos), self.step, eta)?;
+        debug_assert!(
+            plan.restore.windows(2).all(|w| w[0] < w[1]),
+            "policy returned an unsorted restore list"
+        );
+        debug_assert!(
+            plan.freeze.windows(2).all(|w| w[0] < w[1]),
+            "policy returned an unsorted freeze list"
+        );
+
+        if !plan.restore.is_empty() {
+            let mut payloads = Vec::with_capacity(plan.restore.len());
+            for &pos in &plan.restore {
+                payloads.push(self.store.take(pos)?.ok_or_else(|| {
+                    Error::Offload(format!("restore of pos {pos} with no stashed payload"))
+                })?);
             }
-            zero_row(kv, geom, slot, pos);
-            self.mask[pos] = 0.0;
+            let runs = coalesce_runs(&plan.restore);
+            scatter_rows(kv, geom, slot, &runs, &payloads);
+            for &pos in &plan.restore {
+                self.mask[pos] = 1.0;
+            }
+            self.batch.record_restore(plan.restore.len(), runs.len());
+        }
+
+        if !plan.freeze.is_empty() {
+            let runs = coalesce_runs(&plan.freeze);
+            if plan.drop_payload {
+                for &pos in &plan.freeze {
+                    self.store.drop_row(pos)?; // irreversible baselines: data is gone
+                }
+            } else {
+                let rows = gather_rows(kv, geom, slot, &runs);
+                for (i, (&pos, row)) in plan.freeze.iter().zip(rows).enumerate() {
+                    // tier admission is driven by the policy's predicted
+                    // thaw step (freeze step + Eq.3 duration)
+                    let eta = plan.freeze_thaw_eta.get(i).copied().unwrap_or(self.step + 1);
+                    self.store.stash(pos, row, self.step, eta)?;
+                }
+            }
+            zero_rows(kv, geom, slot, &runs);
+            for &pos in &plan.freeze {
+                self.mask[pos] = 0.0;
+            }
+            self.batch.record_freeze(plan.freeze.len(), runs.len());
         }
         Ok(plan)
+    }
+
+    /// Store summary overlaid with this session's plan-batching
+    /// counters (batching happens in the engine's plan execution, so
+    /// the store cannot report it itself).
+    pub fn offload_summary(&self) -> OffloadSummary {
+        let mut s = self.store.summary();
+        s.restore_batch_rows = self.batch.restore_rows;
+        s.restore_batch_spans = self.batch.restore_spans;
+        s
     }
 
     /// Absorb one decode step's outputs (after the engine wrote the new

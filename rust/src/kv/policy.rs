@@ -16,12 +16,18 @@ use crate::kv::state::{TokenState, TokenTable};
 pub const PREFETCH_HORIZON: u32 = 3;
 
 /// What the engine must do before the next decode step.
+///
+/// Position lists are sorted strictly ascending (policies call
+/// [`Plan::normalize`] before returning) so the engine can coalesce
+/// contiguous runs into batched span transfers
+/// (`engine::layout::coalesce_runs` + `gather_rows`/`scatter_rows`).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Plan {
     /// Rows to move active -> frozen storage (gathered + zeroed by the
-    /// graph; payload stashed by the engine).
+    /// graph; payload stashed by the engine). Sorted ascending.
     pub freeze: Vec<usize>,
     /// Rows to move frozen storage -> active (scattered by the graph).
+    /// Sorted ascending.
     pub restore: Vec<usize>,
     /// If true, frozen payloads are DISCARDED (irreversible eviction —
     /// baselines only; ASR-KF-EGR always keeps payloads).
@@ -37,6 +43,39 @@ pub struct Plan {
     /// and refreshes its stored thaw prediction (recovery unfreezes
     /// rewrite timers, so stash-time etas go stale).
     pub prefetch: Vec<(usize, u64)>,
+}
+
+impl Plan {
+    /// Sort the position lists ascending — `freeze_thaw_eta` follows
+    /// `freeze` through the permutation — so the engine can coalesce
+    /// contiguous runs into single span copies per plane. `prefetch`
+    /// keeps its soonest-thaw order (it feeds the staging queue, not a
+    /// batched transfer). Every policy calls this before returning a
+    /// plan; the engine debug-asserts the invariant.
+    pub fn normalize(&mut self) {
+        debug_assert!(
+            self.freeze_thaw_eta.is_empty() || self.freeze_thaw_eta.len() == self.freeze.len(),
+            "freeze_thaw_eta must be empty or parallel to freeze ({} vs {})",
+            self.freeze_thaw_eta.len(),
+            self.freeze.len()
+        );
+        self.restore.sort_unstable();
+        if self.freeze_thaw_eta.len() == self.freeze.len() {
+            let mut zipped: Vec<(usize, u64)> = self
+                .freeze
+                .iter()
+                .copied()
+                .zip(self.freeze_thaw_eta.iter().copied())
+                .collect();
+            zipped.sort_unstable_by_key(|&(pos, _)| pos);
+            for (i, (pos, eta)) in zipped.into_iter().enumerate() {
+                self.freeze[i] = pos;
+                self.freeze_thaw_eta[i] = eta;
+            }
+        } else {
+            self.freeze.sort_unstable();
+        }
+    }
 }
 
 /// Scope of a recovery-triggered unfreeze (paper §3.6).
@@ -210,7 +249,9 @@ impl KvPolicy for AsrKfPolicy {
             .map(|(rem, p)| (p, step + rem as u64))
             .collect();
 
-        Plan { freeze, restore, drop_payload: false, freeze_thaw_eta, prefetch }
+        let mut plan = Plan { freeze, restore, drop_payload: false, freeze_thaw_eta, prefetch };
+        plan.normalize();
+        plan
     }
 
     fn observe(&mut self, step: u64, scores: &[f32], len: usize) {
@@ -411,6 +452,36 @@ mod tests {
             plan.restore.contains(&2) || plan.prefetch.iter().any(|&(p, _)| p == 2),
             "imminent thaw neither restored nor hinted: {plan:?}"
         );
+    }
+
+    #[test]
+    fn normalize_keeps_eta_parallel_to_freeze() {
+        let mut p = Plan {
+            freeze: vec![9, 2, 5],
+            restore: vec![7, 1],
+            freeze_thaw_eta: vec![90, 20, 50],
+            ..Plan::default()
+        };
+        p.normalize();
+        assert_eq!(p.freeze, vec![2, 5, 9]);
+        assert_eq!(p.freeze_thaw_eta, vec![20, 50, 90]);
+        assert_eq!(p.restore, vec![1, 7]);
+        // drop-payload plans have no eta list: freeze still sorts
+        let mut q = Plan { freeze: vec![3, 1], drop_payload: true, ..Plan::default() };
+        q.normalize();
+        assert_eq!(q.freeze, vec![1, 3]);
+    }
+
+    #[test]
+    fn plans_are_sorted_for_run_coalescing() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 40;
+        for step in 1..=30 {
+            p.observe(step, &vec![0.0f32; len], len);
+            let plan = p.plan(step, len, 8);
+            assert!(plan.freeze.windows(2).all(|w| w[0] < w[1]), "freeze unsorted: {plan:?}");
+            assert!(plan.restore.windows(2).all(|w| w[0] < w[1]), "restore unsorted: {plan:?}");
+        }
     }
 
     #[test]

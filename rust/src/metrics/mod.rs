@@ -92,6 +92,142 @@ impl Histogram {
     }
 }
 
+/// Log-bucketed histogram over dimensionless counts (batch sizes,
+/// scheduler queue depths). Power-of-two buckets: a recorded value `v`
+/// lands in the bucket whose upper bound is the smallest `2^k > v`.
+#[derive(Debug, Clone)]
+pub struct CountHistogram {
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for CountHistogram {
+    fn default() -> Self {
+        let bounds: Vec<u64> = (0..31).map(|k| 1u64 << k).collect();
+        let n = bounds.len();
+        CountHistogram { bounds, counts: vec![0; n + 1], total: 0, sum: 0, max: 0 }
+    }
+}
+
+impl CountHistogram {
+    pub fn record(&mut self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b <= v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let v = if i < self.bounds.len() { self.bounds[i] } else { self.max };
+                return v.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one (identical default bucket
+    /// layout assumed).
+    pub fn merge(&mut self, other: &CountHistogram) {
+        debug_assert_eq!(self.bounds, other.bounds, "count-histogram layouts differ");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.1} p50={} p99={} max={}",
+            self.total,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            self.max,
+        )
+    }
+}
+
+/// Plan-execution batching telemetry: how many rows each decode step's
+/// freeze/restore batch moved, and how few contiguous spans those rows
+/// coalesced into (`engine::layout::coalesce_runs`). `spans == rows`
+/// means no coalescing happened; `spans << rows` is the batched-DMA
+/// win FreeKV (arXiv 2505.13109) identifies as the recall bottleneck.
+#[derive(Debug, Clone, Default)]
+pub struct BatchStats {
+    /// rows moved frozen -> active across all restore batches
+    pub restore_rows: u64,
+    /// contiguous spans those restore rows coalesced into
+    pub restore_spans: u64,
+    /// rows moved active -> frozen across all freeze batches
+    pub freeze_rows: u64,
+    /// contiguous spans those freeze rows coalesced into
+    pub freeze_spans: u64,
+    /// rows per non-empty restore batch
+    pub restore_batch: CountHistogram,
+    /// rows per non-empty freeze batch
+    pub freeze_batch: CountHistogram,
+}
+
+impl BatchStats {
+    pub fn record_restore(&mut self, rows: usize, spans: usize) {
+        if rows == 0 {
+            return;
+        }
+        self.restore_rows += rows as u64;
+        self.restore_spans += spans as u64;
+        self.restore_batch.record(rows as u64);
+    }
+
+    pub fn record_freeze(&mut self, rows: usize, spans: usize) {
+        if rows == 0 {
+            return;
+        }
+        self.freeze_rows += rows as u64;
+        self.freeze_spans += spans as u64;
+        self.freeze_batch.record(rows as u64);
+    }
+
+    pub fn merge(&mut self, other: &BatchStats) {
+        self.restore_rows += other.restore_rows;
+        self.restore_spans += other.restore_spans;
+        self.freeze_rows += other.freeze_rows;
+        self.freeze_spans += other.freeze_spans;
+        self.restore_batch.merge(&other.restore_batch);
+        self.freeze_batch.merge(&other.freeze_batch);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Tiered frozen-KV storage metrics (fed by `crate::offload::TieredStore`)
 
@@ -246,6 +382,40 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 3);
         assert_eq!(a.mean(), Duration::from_micros(300));
+    }
+
+    #[test]
+    fn count_histogram_tracks_mean_and_max() {
+        let mut h = CountHistogram::default();
+        for v in [1u64, 2, 3, 64, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean(), 16.0);
+        assert_eq!(h.max(), 64);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        let mut other = CountHistogram::default();
+        other.record(128);
+        h.merge(&other);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max(), 128);
+    }
+
+    #[test]
+    fn batch_stats_skip_empty_batches() {
+        let mut b = BatchStats::default();
+        b.record_restore(0, 0);
+        b.record_restore(8, 2);
+        b.record_freeze(4, 4);
+        assert_eq!(b.restore_rows, 8);
+        assert_eq!(b.restore_spans, 2);
+        assert_eq!(b.restore_batch.count(), 1, "empty batch must not count");
+        assert_eq!(b.freeze_batch.count(), 1);
+        let mut agg = BatchStats::default();
+        agg.merge(&b);
+        agg.merge(&b);
+        assert_eq!(agg.restore_rows, 16);
+        assert_eq!(agg.freeze_spans, 8);
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! Cold tier: u8-quantized rows (~4x smaller than f32) for rows the
+//! freeze ladder predicts will stay frozen past the admission horizon.
+//!
+//! Stashing a raw row quantizes it here (lossy within the documented
+//! `OffloadConfig::cold_quant_rel_error` bound); stashing an
+//! already-quantized payload (a spill promotion in transit) moves the
+//! record verbatim. Restores served from this tier pay inline
+//! dequantization — the prefetch path exists to avoid exactly that.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::metrics::{TierKind, TierOccupancy};
+use crate::offload::quant::QuantRow;
+use crate::offload::tier::{RowPayload, Tier};
+
+/// The in-memory quantized tier.
+#[derive(Debug, Default)]
+pub struct ColdTier {
+    rows: HashMap<usize, QuantRow>,
+    bytes: usize,
+    row_floats: usize,
+}
+
+impl ColdTier {
+    pub fn new(row_floats: usize) -> ColdTier {
+        ColdTier { rows: HashMap::new(), bytes: 0, row_floats }
+    }
+}
+
+impl Tier for ColdTier {
+    fn kind(&self) -> TierKind {
+        TierKind::Cold
+    }
+
+    fn stash(&mut self, pos: usize, payload: RowPayload) -> Result<()> {
+        if self.rows.contains_key(&pos) {
+            return Err(Error::Offload(format!("cold tier already holds pos {pos}")));
+        }
+        if payload.row_floats() != self.row_floats {
+            return Err(Error::Offload(format!(
+                "cold row for pos {pos} has {} floats, tier expects {}",
+                payload.row_floats(),
+                self.row_floats
+            )));
+        }
+        let qr = payload.into_quant();
+        self.bytes += qr.bytes();
+        self.rows.insert(pos, qr);
+        Ok(())
+    }
+
+    fn take(&mut self, pos: usize) -> Result<Option<RowPayload>> {
+        let Some(qr) = self.rows.remove(&pos) else { return Ok(None) };
+        self.bytes -= qr.bytes();
+        Ok(Some(RowPayload::Quant(qr)))
+    }
+
+    fn discard(&mut self, pos: usize) -> Result<bool> {
+        let Some(qr) = self.rows.remove(&pos) else { return Ok(false) };
+        self.bytes -= qr.bytes();
+        Ok(true)
+    }
+
+    fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn occupancy(&self, out: &mut TierOccupancy) {
+        out.cold_rows += self.rows.len();
+        out.cold_bytes += self.bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::quant;
+
+    #[test]
+    fn stash_quantizes_and_take_roundtrips() {
+        let mut t = ColdTier::new(16);
+        let row: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 - 2.0).collect();
+        t.stash(5, RowPayload::Raw(row.clone())).unwrap();
+        assert_eq!(t.rows(), 1);
+        assert_eq!(t.bytes(), 16 + quant::ROW_HEADER_BYTES);
+        assert!(t.bytes() < 16 * 4, "cold tier must be smaller than f32");
+        let back = t.take(5).unwrap().unwrap().into_raw();
+        assert_eq!(back.len(), 16);
+        assert_eq!(t.bytes(), 0);
+    }
+
+    #[test]
+    fn quant_payload_moves_verbatim() {
+        let mut t = ColdTier::new(4);
+        let qr = quant::quantize(&[1.0, 2.0, 3.0, 4.0]);
+        t.stash(0, RowPayload::Quant(qr.clone())).unwrap();
+        match t.take(0).unwrap().unwrap() {
+            RowPayload::Quant(back) => assert_eq!(back, qr),
+            RowPayload::Raw(_) => panic!("cold tier must keep the quantized record"),
+        }
+    }
+
+    #[test]
+    fn collision_and_width_errors() {
+        let mut t = ColdTier::new(4);
+        t.stash(1, RowPayload::Raw(vec![0.0; 4])).unwrap();
+        assert!(t.stash(1, RowPayload::Raw(vec![1.0; 4])).is_err());
+        assert!(t.stash(2, RowPayload::Raw(vec![1.0; 3])).is_err());
+        assert!(!t.discard(7).unwrap());
+        assert!(t.discard(1).unwrap());
+        assert_eq!(t.bytes(), 0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Hot tier: uncompressed f32 rows in fixed-size block-pooled slabs.
+//!
+//! Restores served from here are plain copies — this is where the
+//! prefetch path (`TieredStore::stage`/`stage_upcoming`) parks rows it
+//! promotes ahead of their predicted thaw. The block layout keeps the
+//! tier's footprint at its high-water mark (freed slots are reused)
+//! and keeps rows slab-contiguous for batched gather/scatter.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::metrics::{TierKind, TierOccupancy};
+use crate::offload::tier::{RowPayload, Tier};
+
+/// Uncompressed host rows in fixed-size slabs (`block_rows` rows per
+/// slab). Slots are stable u32 handles; freed slots are reused, so a
+/// long-running session's hot tier stays at its high-water footprint
+/// instead of fragmenting the allocator.
+#[derive(Debug)]
+struct HotPool {
+    row_floats: usize,
+    block_rows: usize,
+    slabs: Vec<Vec<f32>>,
+    free: Vec<u32>,
+}
+
+impl HotPool {
+    fn new(row_floats: usize, block_rows: usize) -> HotPool {
+        HotPool { row_floats, block_rows: block_rows.max(1), slabs: Vec::new(), free: Vec::new() }
+    }
+
+    fn alloc(&mut self, row: &[f32]) -> u32 {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            let slot = (self.slabs.len() * self.block_rows) as u32;
+            self.slabs.push(vec![0.0; self.block_rows * self.row_floats]);
+            for s in (1..self.block_rows as u32).rev() {
+                self.free.push(slot + s);
+            }
+            slot
+        });
+        self.row_mut(slot).copy_from_slice(row);
+        slot
+    }
+
+    fn row(&self, slot: u32) -> &[f32] {
+        let (b, i) = (slot as usize / self.block_rows, slot as usize % self.block_rows);
+        &self.slabs[b][i * self.row_floats..(i + 1) * self.row_floats]
+    }
+
+    fn row_mut(&mut self, slot: u32) -> &mut [f32] {
+        let (b, i) = (slot as usize / self.block_rows, slot as usize % self.block_rows);
+        &mut self.slabs[b][i * self.row_floats..(i + 1) * self.row_floats]
+    }
+
+    fn release(&mut self, slot: u32) {
+        debug_assert!(!self.free.contains(&slot), "double free of hot slot {slot}");
+        self.free.push(slot);
+    }
+}
+
+/// The in-memory uncompressed tier.
+#[derive(Debug)]
+pub struct HotTier {
+    pool: HotPool,
+    slots: HashMap<usize, u32>,
+    bytes: usize,
+    row_floats: usize,
+}
+
+impl HotTier {
+    pub fn new(row_floats: usize, block_rows: usize) -> HotTier {
+        HotTier {
+            pool: HotPool::new(row_floats, block_rows),
+            slots: HashMap::new(),
+            bytes: 0,
+            row_floats,
+        }
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.row_floats * std::mem::size_of::<f32>()
+    }
+
+    /// Whether one more row fits under `budget_bytes`.
+    pub fn has_headroom(&self, budget_bytes: usize) -> bool {
+        self.bytes + self.row_bytes() <= budget_bytes
+    }
+}
+
+impl Tier for HotTier {
+    fn kind(&self) -> TierKind {
+        TierKind::Hot
+    }
+
+    fn stash(&mut self, pos: usize, payload: RowPayload) -> Result<()> {
+        if self.slots.contains_key(&pos) {
+            return Err(Error::Offload(format!("hot tier already holds pos {pos}")));
+        }
+        let row = payload.into_raw();
+        if row.len() != self.row_floats {
+            return Err(Error::Offload(format!(
+                "hot row for pos {pos} has {} floats, tier expects {}",
+                row.len(),
+                self.row_floats
+            )));
+        }
+        let slot = self.pool.alloc(&row);
+        self.slots.insert(pos, slot);
+        self.bytes += self.row_bytes();
+        Ok(())
+    }
+
+    fn take(&mut self, pos: usize) -> Result<Option<RowPayload>> {
+        let Some(slot) = self.slots.remove(&pos) else { return Ok(None) };
+        let row = self.pool.row(slot).to_vec();
+        self.pool.release(slot);
+        self.bytes -= self.row_bytes();
+        Ok(Some(RowPayload::Raw(row)))
+    }
+
+    fn discard(&mut self, pos: usize) -> Result<bool> {
+        let Some(slot) = self.slots.remove(&pos) else { return Ok(false) };
+        self.pool.release(slot);
+        self.bytes -= self.row_bytes();
+        Ok(true)
+    }
+
+    fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn rows(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn occupancy(&self, out: &mut TierOccupancy) {
+        out.hot_rows += self.slots.len();
+        out.hot_bytes += self.bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(rf: usize, v: f32) -> Vec<f32> {
+        (0..rf).map(|i| v + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn stash_take_is_exact() {
+        let mut t = HotTier::new(8, 4);
+        let r = row(8, 1.0);
+        t.stash(3, RowPayload::Raw(r.clone())).unwrap();
+        assert_eq!(t.rows(), 1);
+        assert_eq!(t.bytes(), 32);
+        assert_eq!(t.take(3).unwrap().unwrap().into_raw(), r);
+        assert_eq!(t.rows(), 0);
+        assert_eq!(t.bytes(), 0);
+        assert!(t.take(3).unwrap().is_none());
+    }
+
+    #[test]
+    fn slots_reused_across_release() {
+        let mut t = HotTier::new(4, 2);
+        for pos in 0..6 {
+            t.stash(pos, RowPayload::Raw(row(4, pos as f32))).unwrap();
+        }
+        for pos in 0..6 {
+            assert!(t.discard(pos).unwrap());
+        }
+        // the pool keeps its slabs; re-stashing allocates no new blocks
+        for pos in 10..16 {
+            t.stash(pos, RowPayload::Raw(row(4, pos as f32))).unwrap();
+        }
+        assert_eq!(t.pool.slabs.len(), 3);
+        assert_eq!(t.take(12).unwrap().unwrap().into_raw(), row(4, 12.0));
+    }
+
+    #[test]
+    fn double_stash_and_headroom() {
+        let mut t = HotTier::new(4, 2);
+        t.stash(0, RowPayload::Raw(row(4, 0.0))).unwrap();
+        assert!(t.stash(0, RowPayload::Raw(row(4, 1.0))).is_err());
+        assert!(t.has_headroom(32));
+        assert!(!t.has_headroom(31));
+        assert!(!t.discard(9).unwrap());
+    }
+}

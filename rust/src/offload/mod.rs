@@ -39,17 +39,34 @@
 //!   invariant `total_stashed == total_restored + total_dropped +
 //!   resident` is property-tested in `tests/prop_offload.rs`.
 //!
+//! Architecture (see `README.md` in this directory): storage backends
+//! implement the [`Tier`] trait (`hot` / `cold` / `spill` modules) so
+//! pinned-host or remote backends can slot in; `TieredStore` owns only
+//! residency *policy*, and every per-step decision is answered by the
+//! [`ThawScheduler`]'s eta index instead of a full-map scan —
+//! equivalence with the brute-force scan is property-tested by the
+//! scheduler oracle in `tests/prop_offload.rs`.
+//!
 //! References: FreeKV (arXiv 2505.13109) for speculative double-
 //! buffered retrieval; KVComp (arXiv 2509.00579) for lossy compression
-//! of frozen rows.
+//! of frozen rows; ARKV (arXiv 2603.08727) for pluggable storage
+//! backends under a fixed budget.
 
+pub mod cold;
+pub mod hot;
 pub mod quant;
+pub mod sched;
 pub mod spill;
 pub mod store;
+pub mod tier;
 
+pub use cold::ColdTier;
+pub use hot::HotTier;
 pub use quant::{dequantize, dequantize_into, quantize, QuantRow};
-pub use spill::SpillFile;
+pub use sched::{SchedClass, ThawScheduler};
+pub use spill::{SpillFile, SpillTier};
 pub use store::TieredStore;
+pub use tier::{RowPayload, Tier};
 
 use crate::metrics::TierOccupancy;
 
@@ -71,6 +88,14 @@ pub struct OffloadSummary {
     pub restores_spill: u64,
     pub restore_hot_mean_us: u64,
     pub restore_cold_mean_us: u64,
+    /// high-water mark of the thaw scheduler's frozen queue
+    pub sched_depth_max: u64,
+    /// rows restored through batched plan execution (engine-side;
+    /// filled by `Session::offload_summary`)
+    pub restore_batch_rows: u64,
+    /// contiguous spans those restored rows coalesced into — spans <<
+    /// rows is the batching win
+    pub restore_batch_spans: u64,
 }
 
 impl OffloadSummary {

@@ -1,0 +1,190 @@
+//! Eta-indexed thaw scheduler: orders every resident frozen row by its
+//! predicted thaw step so demotion and staging are incremental.
+//!
+//! The store used to answer "which row thaws farthest out?" and "which
+//! rows thaw within the horizon?" by scanning its whole entry map —
+//! O(n) per decode step in `on_step`/`stage_upcoming` and O(victims·n)
+//! in the budget-eviction loops. This index keeps one ordered set of
+//! `(thaw_eta, pos)` keys per residency class, so those queries become
+//! O(log n) point lookups / O(k) range walks:
+//!
+//! * `farthest(class)` — the budget-eviction victim (max eta wins; pos
+//!   breaks ties deterministically, unlike the old hash-map scan);
+//! * `due_frozen(limit, max)` — staging candidates across the cold and
+//!   spill classes, soonest first;
+//! * `overdue_hot(limit)` — hot rows whose predicted thaw aged past
+//!   the residency horizon (the `on_step` sweep).
+//!
+//! `BTreeSet` rather than `BinaryHeap`: the store always knows a row's
+//! current `(eta, pos)` key, so entries are removed exactly on
+//! `take`/`drop_row`/tier moves instead of lazily skipping stale heap
+//! entries — the index never holds ghosts and its length is the true
+//! queue depth (recorded per step in `TieredStore::sched_depth`).
+
+use std::collections::BTreeSet;
+use std::ops::Bound;
+
+/// Residency class of an indexed row. Hot rows are split by the staged
+/// flag because budget eviction exempts staged rows while the
+/// `on_step` residency sweep covers both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedClass {
+    /// Hot tier, admitted at stash time (eviction victim pool).
+    HotResident,
+    /// Hot tier, promoted by the prefetch path (eviction-exempt).
+    HotStaged,
+    Cold,
+    Spill,
+}
+
+#[derive(Debug, Default)]
+pub struct ThawScheduler {
+    hot: BTreeSet<(u64, usize)>,
+    staged: BTreeSet<(u64, usize)>,
+    cold: BTreeSet<(u64, usize)>,
+    spill: BTreeSet<(u64, usize)>,
+}
+
+impl ThawScheduler {
+    fn set(&mut self, class: SchedClass) -> &mut BTreeSet<(u64, usize)> {
+        match class {
+            SchedClass::HotResident => &mut self.hot,
+            SchedClass::HotStaged => &mut self.staged,
+            SchedClass::Cold => &mut self.cold,
+            SchedClass::Spill => &mut self.spill,
+        }
+    }
+
+    pub fn insert(&mut self, class: SchedClass, eta: u64, pos: usize) {
+        let fresh = self.set(class).insert((eta, pos));
+        debug_assert!(fresh, "pos {pos} already indexed in {class:?}");
+    }
+
+    pub fn remove(&mut self, class: SchedClass, eta: u64, pos: usize) {
+        let present = self.set(class).remove(&(eta, pos));
+        debug_assert!(present, "pos {pos} (eta {eta}) missing from {class:?} index");
+    }
+
+    /// Re-key `pos` within its class after a thaw-prediction refresh.
+    pub fn retarget(&mut self, class: SchedClass, pos: usize, old_eta: u64, new_eta: u64) {
+        if old_eta == new_eta {
+            return;
+        }
+        self.remove(class, old_eta, pos);
+        self.insert(class, new_eta, pos);
+    }
+
+    /// The row with the farthest predicted thaw in `class` — the
+    /// demotion victim under budget pressure. Ties break toward the
+    /// highest position.
+    pub fn farthest(&self, class: SchedClass) -> Option<(u64, usize)> {
+        let set = match class {
+            SchedClass::HotResident => &self.hot,
+            SchedClass::HotStaged => &self.staged,
+            SchedClass::Cold => &self.cold,
+            SchedClass::Spill => &self.spill,
+        };
+        set.iter().next_back().copied()
+    }
+
+    /// Up to `max_rows` frozen rows (cold + spill classes) predicted to
+    /// thaw at or before `limit`, soonest first.
+    pub fn due_frozen(&self, limit: u64, max_rows: usize) -> Vec<(u64, usize)> {
+        let hi = Bound::Included((limit, usize::MAX));
+        let mut a = self.cold.range((Bound::Unbounded, hi)).peekable();
+        let mut b = self.spill.range((Bound::Unbounded, hi)).peekable();
+        let mut out = Vec::new();
+        while out.len() < max_rows {
+            let take_a = match (a.peek(), b.peek()) {
+                (Some(x), Some(y)) => x <= y,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            let next = if take_a { a.next() } else { b.next() };
+            out.push(*next.expect("peeked iterator yielded nothing"));
+        }
+        out
+    }
+
+    /// Hot rows (both classes) whose predicted thaw lies strictly
+    /// beyond `limit` — they no longer belong in the hot tier.
+    pub fn overdue_hot(&self, limit: u64) -> Vec<(u64, usize)> {
+        let lo = Bound::Excluded((limit, usize::MAX));
+        let mut out: Vec<(u64, usize)> =
+            self.hot.range((lo, Bound::Unbounded)).copied().collect();
+        out.extend(self.staged.range((lo, Bound::Unbounded)).copied());
+        out
+    }
+
+    /// Rows awaiting staging (cold + spill) — the scheduler's queue
+    /// depth gauge.
+    pub fn queued_frozen(&self) -> usize {
+        self.cold.len() + self.spill.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.hot.len() + self.staged.len() + self.cold.len() + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn farthest_breaks_ties_by_position() {
+        let mut s = ThawScheduler::default();
+        s.insert(SchedClass::HotResident, 10, 1);
+        s.insert(SchedClass::HotResident, 10, 5);
+        s.insert(SchedClass::HotResident, 3, 9);
+        assert_eq!(s.farthest(SchedClass::HotResident), Some((10, 5)));
+        s.remove(SchedClass::HotResident, 10, 5);
+        assert_eq!(s.farthest(SchedClass::HotResident), Some((10, 1)));
+        assert_eq!(s.farthest(SchedClass::Cold), None);
+    }
+
+    #[test]
+    fn due_frozen_merges_cold_and_spill_soonest_first() {
+        let mut s = ThawScheduler::default();
+        s.insert(SchedClass::Cold, 5, 0);
+        s.insert(SchedClass::Cold, 9, 1);
+        s.insert(SchedClass::Spill, 7, 2);
+        s.insert(SchedClass::Spill, 20, 3); // beyond limit
+        assert_eq!(s.due_frozen(10, 8), vec![(5, 0), (7, 2), (9, 1)]);
+        assert_eq!(s.due_frozen(10, 2), vec![(5, 0), (7, 2)]);
+        assert_eq!(s.due_frozen(4, 8), vec![]);
+        // eta exactly at the limit is due
+        assert_eq!(s.due_frozen(5, 1), vec![(5, 0)]);
+    }
+
+    #[test]
+    fn overdue_hot_spans_both_hot_classes() {
+        let mut s = ThawScheduler::default();
+        s.insert(SchedClass::HotResident, 4, 0);
+        s.insert(SchedClass::HotResident, 11, 1);
+        s.insert(SchedClass::HotStaged, 12, 2);
+        s.insert(SchedClass::HotStaged, 10, 3);
+        let mut over = s.overdue_hot(10);
+        over.sort_unstable();
+        // eta == limit is NOT overdue
+        assert_eq!(over, vec![(11, 1), (12, 2)]);
+    }
+
+    #[test]
+    fn retarget_rekeys_within_class() {
+        let mut s = ThawScheduler::default();
+        s.insert(SchedClass::Cold, 30, 4);
+        s.retarget(SchedClass::Cold, 4, 30, 6);
+        assert_eq!(s.due_frozen(10, 8), vec![(6, 4)]);
+        s.retarget(SchedClass::Cold, 4, 6, 6); // no-op
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.queued_frozen(), 1);
+        s.remove(SchedClass::Cold, 6, 4);
+        assert!(s.is_empty());
+    }
+}

@@ -8,13 +8,16 @@
 //! `Error::Offload` through `TieredStore`'s fallible API — the engine
 //! fails the affected session rather than corrupting it.
 
+use std::collections::{BTreeSet, HashMap};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
+use crate::metrics::{TierKind, TierOccupancy};
 use crate::offload::quant::{QuantRow, ROW_HEADER_BYTES};
+use crate::offload::tier::{RowPayload, Tier};
 
 static NEXT_FILE_ID: AtomicU64 = AtomicU64::new(0);
 
@@ -23,7 +26,10 @@ pub struct SpillFile {
     path: PathBuf,
     record_bytes: usize,
     row_floats: usize,
-    free: Vec<u32>,
+    /// released slots awaiting reuse; ordered so handle checks and
+    /// lowest-slot-first reuse are O(log n), not a linear scan on the
+    /// restore path
+    free: BTreeSet<u32>,
     next_slot: u32,
 }
 
@@ -54,7 +60,7 @@ impl SpillFile {
             path,
             record_bytes: ROW_HEADER_BYTES + row_floats,
             row_floats,
-            free: Vec::new(),
+            free: BTreeSet::new(),
             next_slot: 0,
         })
     }
@@ -77,7 +83,7 @@ impl SpillFile {
                 self.row_floats
             )));
         }
-        let slot = self.free.pop().unwrap_or_else(|| {
+        let slot = self.free.pop_first().unwrap_or_else(|| {
             let s = self.next_slot;
             self.next_slot += 1;
             s
@@ -92,17 +98,33 @@ impl SpillFile {
         Ok(slot)
     }
 
+    /// Reject handles that were never allocated or already released —
+    /// a stale handle means the caller's bookkeeping diverged from the
+    /// file's, and silently honouring it would corrupt the free list.
+    fn check_live(&self, slot: u32) -> Result<()> {
+        if slot >= self.next_slot {
+            return Err(Error::Offload(format!(
+                "stale spill handle {slot} (only {} slots allocated)",
+                self.next_slot
+            )));
+        }
+        if self.free.contains(&slot) {
+            return Err(Error::Offload(format!("stale spill handle {slot} (already freed)")));
+        }
+        Ok(())
+    }
+
     /// Read a row back and release its slot.
     pub fn take_row(&mut self, slot: u32) -> Result<QuantRow> {
         let qr = self.read_row(slot)?;
-        self.free.push(slot);
+        self.free.insert(slot);
         Ok(qr)
     }
 
     /// Read a row without releasing the slot (staging keeps the record
     /// until the hot copy is consumed or re-demoted).
     pub fn read_row(&mut self, slot: u32) -> Result<QuantRow> {
-        debug_assert!(slot < self.next_slot && !self.free.contains(&slot));
+        self.check_live(slot)?;
         self.file
             .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
         let mut rec = vec![0u8; self.record_bytes];
@@ -113,15 +135,98 @@ impl SpillFile {
     }
 
     /// Release a slot without reading it (row dropped by a baseline).
-    pub fn free_slot(&mut self, slot: u32) {
-        debug_assert!(slot < self.next_slot && !self.free.contains(&slot));
-        self.free.push(slot);
+    /// Stale handles error instead of silently corrupting the free
+    /// list (this used to be a `debug_assert!` that release builds
+    /// ignored).
+    pub fn free_slot(&mut self, slot: u32) -> Result<()> {
+        self.check_live(slot)?;
+        self.free.insert(slot);
+        Ok(())
     }
 }
 
 impl Drop for SpillFile {
     fn drop(&mut self) {
         let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// The file-backed tier: cold rows that overflowed their byte budget
+/// on very long contexts. The backing `SpillFile` is created lazily on
+/// first stash so configurations that never spill touch no disk.
+#[derive(Debug)]
+pub struct SpillTier {
+    dir: Option<String>,
+    row_floats: usize,
+    file: Option<SpillFile>,
+    slots: HashMap<usize, u32>,
+}
+
+impl SpillTier {
+    /// `dir: None` builds a disabled tier: stash errors, everything
+    /// else reports empty.
+    pub fn new(dir: Option<String>, row_floats: usize) -> SpillTier {
+        SpillTier { dir, row_floats, file: None, slots: HashMap::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+}
+
+impl Tier for SpillTier {
+    fn kind(&self) -> TierKind {
+        TierKind::Spill
+    }
+
+    fn stash(&mut self, pos: usize, payload: RowPayload) -> Result<()> {
+        let Some(dir) = self.dir.clone() else {
+            return Err(Error::Offload(format!(
+                "spill of pos {pos} but no spill dir configured"
+            )));
+        };
+        if self.slots.contains_key(&pos) {
+            return Err(Error::Offload(format!("spill tier already holds pos {pos}")));
+        }
+        if self.file.is_none() {
+            self.file = Some(SpillFile::create(&dir, self.row_floats)?);
+        }
+        let qr = payload.into_quant();
+        let slot = self.file.as_mut().unwrap().write_row(&qr)?;
+        self.slots.insert(pos, slot);
+        Ok(())
+    }
+
+    fn take(&mut self, pos: usize) -> Result<Option<RowPayload>> {
+        let Some(slot) = self.slots.remove(&pos) else { return Ok(None) };
+        let file = self
+            .file
+            .as_mut()
+            .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?;
+        Ok(Some(RowPayload::Quant(file.take_row(slot)?)))
+    }
+
+    fn discard(&mut self, pos: usize) -> Result<bool> {
+        let Some(slot) = self.slots.remove(&pos) else { return Ok(false) };
+        let file = self
+            .file
+            .as_mut()
+            .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?;
+        file.free_slot(slot)?;
+        Ok(true)
+    }
+
+    fn bytes(&self) -> usize {
+        self.file.as_ref().map(|f| f.bytes()).unwrap_or(0)
+    }
+
+    fn rows(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn occupancy(&self, out: &mut TierOccupancy) {
+        out.spill_rows += self.slots.len();
+        out.spill_bytes += self.bytes();
     }
 }
 
@@ -187,7 +292,39 @@ mod tests {
         let b = s.read_row(slot).unwrap();
         assert_eq!(a, b);
         assert_eq!(s.bytes(), s.record_bytes());
-        s.free_slot(slot);
+        s.free_slot(slot).unwrap();
         assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn stale_handles_error_instead_of_corrupting() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        let slot = s.write_row(&quantize(&[1.0; 4])).unwrap();
+        assert!(s.free_slot(99).is_err(), "unallocated slot must error");
+        s.free_slot(slot).unwrap();
+        assert!(s.free_slot(slot).is_err(), "double free must error");
+        assert!(s.read_row(slot).is_err(), "read of freed slot must error");
+        assert_eq!(s.free.len(), 1, "failed frees must not grow the free list");
+    }
+
+    #[test]
+    fn spill_tier_roundtrip_and_disabled_mode() {
+        let mut t = SpillTier::new(Some(tmpdir()), 4);
+        assert!(t.enabled());
+        assert_eq!(t.bytes(), 0, "no file until first stash");
+        let row = vec![1.0f32, 2.0, 3.0, 4.0];
+        t.stash(7, RowPayload::Raw(row)).unwrap();
+        assert_eq!(t.rows(), 1);
+        assert!(t.bytes() > 0);
+        assert!(t.stash(7, RowPayload::Raw(vec![0.0; 4])).is_err(), "collision");
+        let back = t.take(7).unwrap().unwrap().into_raw();
+        assert_eq!(back.len(), 4);
+        assert!(t.take(7).unwrap().is_none());
+        assert!(!t.discard(7).unwrap());
+
+        let mut off = SpillTier::new(None, 4);
+        assert!(!off.enabled());
+        assert!(off.stash(0, RowPayload::Raw(vec![0.0; 4])).is_err());
+        assert_eq!(off.bytes(), 0);
     }
 }

@@ -1,4 +1,4 @@
-//! The tiered frozen-row store.
+//! The tiered frozen-row store: residency policy over pluggable tiers.
 //!
 //! Replaces the flat `kv::FrozenStore` as the engine's off-GPU side of
 //! the soft freeze. Every stashed row is kept (the paper's "no
@@ -12,6 +12,13 @@
 //! * cold rows overflowing their byte budget demote to the
 //!   file-backed **spill** tier when one is configured.
 //!
+//! Storage itself lives behind the [`Tier`] trait (`hot` / `cold` /
+//! `spill` modules); this struct owns only the *policy*: which tier a
+//! row belongs in, driven by the [`ThawScheduler`]'s eta index. All
+//! per-step decisions — the `on_step` residency sweep, budget
+//! eviction victims, `stage_upcoming` candidates — are answered by the
+//! index in O(log n) / O(k), never by scanning the entry map.
+//!
 //! Restores (`take`) served from the hot tier are plain copies; the
 //! prefetch path (`stage` / `stage_upcoming`) promotes
 //! soon-to-thaw rows back to hot *between* decode steps so the decode
@@ -23,69 +30,16 @@ use std::time::Instant;
 
 use crate::config::OffloadConfig;
 use crate::error::{Error, Result};
-use crate::metrics::{RestoreLatency, TierKind, TierOccupancy};
-use crate::offload::quant::{self, QuantRow};
-use crate::offload::spill::SpillFile;
-
-/// Uncompressed host rows in fixed-size slabs (`block_rows` rows per
-/// slab). Slots are stable u32 handles; freed slots are reused, so a
-/// long-running session's hot tier stays at its high-water footprint
-/// instead of fragmenting the allocator.
-#[derive(Debug)]
-struct HotPool {
-    row_floats: usize,
-    block_rows: usize,
-    slabs: Vec<Vec<f32>>,
-    free: Vec<u32>,
-}
-
-impl HotPool {
-    fn new(row_floats: usize, block_rows: usize) -> HotPool {
-        HotPool { row_floats, block_rows: block_rows.max(1), slabs: Vec::new(), free: Vec::new() }
-    }
-
-    fn alloc(&mut self, row: &[f32]) -> u32 {
-        let slot = self.free.pop().unwrap_or_else(|| {
-            let slot = (self.slabs.len() * self.block_rows) as u32;
-            self.slabs.push(vec![0.0; self.block_rows * self.row_floats]);
-            for s in (1..self.block_rows as u32).rev() {
-                self.free.push(slot + s);
-            }
-            slot
-        });
-        self.row_mut(slot).copy_from_slice(row);
-        slot
-    }
-
-    fn row(&self, slot: u32) -> &[f32] {
-        let (b, i) = (slot as usize / self.block_rows, slot as usize % self.block_rows);
-        &self.slabs[b][i * self.row_floats..(i + 1) * self.row_floats]
-    }
-
-    fn row_mut(&mut self, slot: u32) -> &mut [f32] {
-        let (b, i) = (slot as usize / self.block_rows, slot as usize % self.block_rows);
-        &mut self.slabs[b][i * self.row_floats..(i + 1) * self.row_floats]
-    }
-
-    fn release(&mut self, slot: u32) {
-        debug_assert!(!self.free.contains(&slot), "double free of hot slot {slot}");
-        self.free.push(slot);
-    }
-}
-
-#[derive(Debug)]
-enum Loc {
-    Hot { slot: u32, staged: bool },
-    /// Quantized cold row. Only exists when `quantize_cold` is on —
-    /// the escape hatch disables demotion entirely (rows stay hot,
-    /// budgets become advisory) rather than storing lossless copies.
-    Cold(QuantRow),
-    Spilled { slot: u32 },
-}
+use crate::metrics::{CountHistogram, RestoreLatency, TierKind, TierOccupancy};
+use crate::offload::cold::ColdTier;
+use crate::offload::hot::HotTier;
+use crate::offload::sched::{SchedClass, ThawScheduler};
+use crate::offload::spill::SpillTier;
+use crate::offload::tier::{RowPayload, Tier};
 
 #[derive(Debug)]
 struct Entry {
-    loc: Loc,
+    class: SchedClass,
     thaw_eta: u64,
 }
 
@@ -95,10 +49,10 @@ pub struct TieredStore {
     row_floats: usize,
     cfg: OffloadConfig,
     entries: HashMap<usize, Entry>,
-    pool: HotPool,
-    spill: Option<SpillFile>,
-    hot_bytes: usize,
-    cold_bytes: usize,
+    hot: HotTier,
+    cold: ColdTier,
+    spill: SpillTier,
+    sched: ThawScheduler,
     peak_hot_bytes: usize,
     peak_cold_bytes: usize,
     peak_spill_bytes: usize,
@@ -114,6 +68,8 @@ pub struct TieredStore {
     pub demotions_spill: u64,
     pub prefetch_promotions: u64,
     pub restore_latency: RestoreLatency,
+    /// scheduler queue depth (rows awaiting staging), sampled per step
+    pub sched_depth: CountHistogram,
 }
 
 impl std::fmt::Debug for TieredStore {
@@ -125,17 +81,23 @@ impl std::fmt::Debug for TieredStore {
     }
 }
 
+fn missing(pos: usize, class: SchedClass) -> Error {
+    Error::Offload(format!("pos {pos} indexed as {class:?} but missing from its tier"))
+}
+
 impl TieredStore {
     pub fn new(row_floats: usize, cfg: OffloadConfig) -> Self {
-        let pool = HotPool::new(row_floats, cfg.block_rows);
+        let hot = HotTier::new(row_floats, cfg.block_rows);
+        let cold = ColdTier::new(row_floats);
+        let spill = SpillTier::new(cfg.spill_dir.clone(), row_floats);
         TieredStore {
             row_floats,
             cfg,
             entries: HashMap::new(),
-            pool,
-            spill: None,
-            hot_bytes: 0,
-            cold_bytes: 0,
+            hot,
+            cold,
+            spill,
+            sched: ThawScheduler::default(),
             peak_hot_bytes: 0,
             peak_cold_bytes: 0,
             peak_spill_bytes: 0,
@@ -148,6 +110,7 @@ impl TieredStore {
             demotions_spill: 0,
             prefetch_promotions: 0,
             restore_latency: RestoreLatency::default(),
+            sched_depth: CountHistogram::default(),
         }
     }
 
@@ -160,10 +123,18 @@ impl TieredStore {
     }
 
     fn bump_peaks(&mut self) {
-        self.peak_hot_bytes = self.peak_hot_bytes.max(self.hot_bytes);
-        self.peak_cold_bytes = self.peak_cold_bytes.max(self.cold_bytes);
-        let sb = self.spill.as_ref().map(|s| s.bytes()).unwrap_or(0);
-        self.peak_spill_bytes = self.peak_spill_bytes.max(sb);
+        self.peak_hot_bytes = self.peak_hot_bytes.max(self.hot.bytes());
+        self.peak_cold_bytes = self.peak_cold_bytes.max(self.cold.bytes());
+        self.peak_spill_bytes = self.peak_spill_bytes.max(self.spill.bytes());
+    }
+
+    /// The tier backend currently holding `class` rows.
+    fn tier_mut(&mut self, class: SchedClass) -> &mut dyn Tier {
+        match class {
+            SchedClass::HotResident | SchedClass::HotStaged => &mut self.hot,
+            SchedClass::Cold => &mut self.cold,
+            SchedClass::Spill => &mut self.spill,
+        }
     }
 
     /// Stash a gathered row bundle for `pos` (active -> frozen).
@@ -184,17 +155,16 @@ impl TieredStore {
         }
         let goes_cold = self.cfg.quantize_cold
             && thaw_eta.saturating_sub(step) >= self.cfg.cold_after_steps;
-        let loc = if goes_cold {
-            let qr = quant::quantize(&row);
-            self.cold_bytes += qr.bytes();
+        let class = if goes_cold {
+            self.cold.stash(pos, RowPayload::Raw(row))?;
             self.demotions_cold += 1;
-            Loc::Cold(qr)
+            SchedClass::Cold
         } else {
-            let slot = self.pool.alloc(&row);
-            self.hot_bytes += self.row_bytes();
-            Loc::Hot { slot, staged: false }
+            self.hot.stash(pos, RowPayload::Raw(row))?;
+            SchedClass::HotResident
         };
-        self.entries.insert(pos, Entry { loc, thaw_eta });
+        self.entries.insert(pos, Entry { class, thaw_eta });
+        self.sched.insert(class, thaw_eta, pos);
         self.total_stashed += 1;
         self.enforce_budgets()?;
         self.bump_peaks();
@@ -203,29 +173,19 @@ impl TieredStore {
 
     /// Demote over-budget rows: hot -> cold (farthest predicted thaw
     /// first, staged rows exempt), then cold -> spill when configured.
+    /// Victims come straight off the eta index — O(log n) each instead
+    /// of a full-map scan per eviction.
     fn enforce_budgets(&mut self) -> Result<()> {
         if !self.cfg.quantize_cold {
             return Ok(()); // escape hatch: demotion saves nothing
         }
-        while self.hot_bytes > self.cfg.hot_budget_bytes {
-            let victim = self
-                .entries
-                .iter()
-                .filter(|(_, e)| matches!(e.loc, Loc::Hot { staged: false, .. }))
-                .max_by_key(|(_, e)| e.thaw_eta)
-                .map(|(&p, _)| p);
-            let Some(pos) = victim else { break };
-            self.demote_to_cold(pos);
+        while self.hot.bytes() > self.cfg.hot_budget_bytes {
+            let Some((_, pos)) = self.sched.farthest(SchedClass::HotResident) else { break };
+            self.demote_to_cold(pos)?;
         }
-        if self.cfg.spill_dir.is_some() {
-            while self.cold_bytes > self.cfg.cold_budget_bytes {
-                let victim = self
-                    .entries
-                    .iter()
-                    .filter(|(_, e)| matches!(e.loc, Loc::Cold(_)))
-                    .max_by_key(|(_, e)| e.thaw_eta)
-                    .map(|(&p, _)| p);
-                let Some(pos) = victim else { break };
+        if self.spill.enabled() {
+            while self.cold.bytes() > self.cfg.cold_budget_bytes {
+                let Some((_, pos)) = self.sched.farthest(SchedClass::Cold) else { break };
                 self.demote_to_spill(pos)?;
             }
         }
@@ -233,33 +193,38 @@ impl TieredStore {
         Ok(())
     }
 
-    fn demote_to_cold(&mut self, pos: usize) {
+    fn demote_to_cold(&mut self, pos: usize) -> Result<()> {
         debug_assert!(self.cfg.quantize_cold, "demotion with quantization disabled");
-        let slot = match self.entries.get(&pos) {
-            Some(Entry { loc: Loc::Hot { slot, .. }, .. }) => *slot,
-            _ => panic!("demote of non-hot pos {pos}"),
+        let (class, eta) = match self.entries.get(&pos) {
+            Some(e) => (e.class, e.thaw_eta),
+            None => return Err(Error::Offload(format!("demote of unknown pos {pos}"))),
         };
-        let qr = quant::quantize(self.pool.row(slot));
-        self.pool.release(slot);
-        self.hot_bytes -= self.row_bytes();
-        self.cold_bytes += qr.bytes();
-        self.entries.get_mut(&pos).unwrap().loc = Loc::Cold(qr);
+        if !matches!(class, SchedClass::HotResident | SchedClass::HotStaged) {
+            return Err(Error::Offload(format!("demote of non-hot pos {pos}")));
+        }
+        let payload = self.hot.take(pos)?.ok_or_else(|| missing(pos, class))?;
+        self.cold.stash(pos, payload)?;
+        self.sched.remove(class, eta, pos);
+        self.sched.insert(SchedClass::Cold, eta, pos);
+        self.entries.get_mut(&pos).unwrap().class = SchedClass::Cold;
         self.demotions_cold += 1;
+        Ok(())
     }
 
     fn demote_to_spill(&mut self, pos: usize) -> Result<()> {
-        if self.spill.is_none() {
-            let dir = self.cfg.spill_dir.clone().expect("spill demotion without spill_dir");
-            self.spill = Some(SpillFile::create(&dir, self.row_floats)?);
-        }
-        let qr = match self.entries.get(&pos) {
-            Some(Entry { loc: Loc::Cold(qr), .. }) => qr.clone(),
-            _ => return Err(Error::Offload(format!("spill of non-cold pos {pos}"))),
+        let (class, eta) = match self.entries.get(&pos) {
+            Some(e) => (e.class, e.thaw_eta),
+            None => return Err(Error::Offload(format!("spill of unknown pos {pos}"))),
         };
-        let bytes = qr.bytes();
-        let slot = self.spill.as_mut().unwrap().write_row(&qr)?;
-        self.entries.get_mut(&pos).unwrap().loc = Loc::Spilled { slot };
-        self.cold_bytes -= bytes;
+        if class != SchedClass::Cold {
+            return Err(Error::Offload(format!("spill of non-cold pos {pos}")));
+        }
+        // the quantized record moves verbatim — no requantization
+        let payload = self.cold.take(pos)?.ok_or_else(|| missing(pos, class))?;
+        self.spill.stash(pos, payload)?;
+        self.sched.remove(SchedClass::Cold, eta, pos);
+        self.sched.insert(SchedClass::Spill, eta, pos);
+        self.entries.get_mut(&pos).unwrap().class = SchedClass::Spill;
         self.demotions_spill += 1;
         Ok(())
     }
@@ -271,38 +236,24 @@ impl TieredStore {
     /// the inline cost (visible as a staged miss) rather than blowing
     /// the budget the coordinator partitioned per slot.
     fn promote(&mut self, pos: usize) -> Result<bool> {
-        if self.hot_bytes + self.row_bytes() > self.cfg.hot_budget_bytes {
+        let (class, eta) = match self.entries.get(&pos) {
+            None => return Ok(false),
+            Some(e) => (e.class, e.thaw_eta),
+        };
+        if matches!(class, SchedClass::HotResident | SchedClass::HotStaged) {
             return Ok(false);
         }
-        enum Src {
-            Quant(QuantRow),
-            Spill(u32),
+        if !self.hot.has_headroom(self.cfg.hot_budget_bytes) {
+            return Ok(false);
         }
-        let src = match self.entries.get(&pos) {
-            None => return Ok(false),
-            Some(e) => match &e.loc {
-                Loc::Hot { .. } => return Ok(false),
-                Loc::Cold(qr) => Src::Quant(qr.clone()),
-                Loc::Spilled { slot } => Src::Spill(*slot),
-            },
-        };
-        let row: Vec<f32> = match src {
-            Src::Quant(qr) => {
-                self.cold_bytes -= qr.bytes();
-                quant::dequantize(&qr)
-            }
-            Src::Spill(slot) => {
-                let qr = self
-                    .spill
-                    .as_mut()
-                    .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?
-                    .take_row(slot)?;
-                quant::dequantize(&qr)
-            }
-        };
-        let slot = self.pool.alloc(&row);
-        self.entries.get_mut(&pos).unwrap().loc = Loc::Hot { slot, staged: true };
-        self.hot_bytes += self.row_bytes();
+        let payload = self
+            .tier_mut(class)
+            .stage(pos)?
+            .ok_or_else(|| missing(pos, class))?;
+        self.hot.stash(pos, RowPayload::Raw(payload.into_raw()))?;
+        self.sched.remove(class, eta, pos);
+        self.sched.insert(SchedClass::HotStaged, eta, pos);
+        self.entries.get_mut(&pos).unwrap().class = SchedClass::HotStaged;
         self.prefetch_promotions += 1;
         self.bump_peaks();
         Ok(true)
@@ -310,14 +261,16 @@ impl TieredStore {
 
     /// Stage specific rows (the policy's prefetch hints) into the hot
     /// tier. Each hint carries the policy's *live* predicted thaw step,
-    /// which also refreshes the store's stash-time prediction —
-    /// recovery unfreezes rewrite freeze timers, so stash-time etas go
-    /// stale. Returns how many rows were actually promoted.
+    /// which also re-keys the row in the eta index — recovery
+    /// unfreezes rewrite freeze timers, so stash-time etas go stale.
+    /// Returns how many rows were actually promoted.
     pub fn stage(&mut self, hints: &[(usize, u64)]) -> Result<usize> {
         let mut n = 0;
         for &(pos, eta) in hints {
             if let Some(e) = self.entries.get_mut(&pos) {
+                let (class, old_eta) = (e.class, e.thaw_eta);
                 e.thaw_eta = eta;
+                self.sched.retarget(class, pos, old_eta, eta);
             }
             if self.promote(pos)? {
                 n += 1;
@@ -332,20 +285,13 @@ impl TieredStore {
     /// served from hot rows instead of paying dequantization inside the
     /// decode step. The horizon is clamped to the admission horizon
     /// (`cold_after_steps`) so speculative promotions are never undone
-    /// by the next residency sweep.
+    /// by the next residency sweep. Candidates come off the eta index
+    /// (O(max_rows) range walk, not a full-map scan).
     pub fn stage_upcoming(&mut self, now: u64, horizon: u64, max_rows: usize) -> Result<usize> {
         let horizon = horizon.min(self.cfg.cold_after_steps);
-        let mut candidates: Vec<(u64, usize)> = self
-            .entries
-            .iter()
-            .filter(|(_, e)| {
-                !matches!(e.loc, Loc::Hot { .. }) && e.thaw_eta <= now.saturating_add(horizon)
-            })
-            .map(|(&p, e)| (e.thaw_eta, p))
-            .collect();
-        candidates.sort_unstable();
+        let limit = now.saturating_add(horizon);
         let mut n = 0;
-        for (_, pos) in candidates.into_iter().take(max_rows) {
+        for (_, pos) in self.sched.due_frozen(limit, max_rows) {
             if self.promote(pos)? {
                 n += 1;
             }
@@ -353,28 +299,24 @@ impl TieredStore {
         Ok(n)
     }
 
-    /// Residency sweep, called once per decode step by the session
-    /// (O(resident rows)). Applies the admission rule continuously: a
-    /// hot row whose predicted thaw sits beyond the `cold_after_steps`
-    /// horizon does not belong in the hot tier — the main source is a
-    /// stale prefetch (a row staged for a recovery that never fired).
+    /// Residency sweep, called once per decode step by the session.
+    /// Applies the admission rule continuously: a hot row whose
+    /// predicted thaw sits beyond the `cold_after_steps` horizon does
+    /// not belong in the hot tier — the main source is a stale
+    /// prefetch (a row staged for a recovery that never fired). The
+    /// eta index hands over exactly the overdue rows, so the sweep is
+    /// O(demoted) instead of O(resident).
     pub fn on_step(&mut self, now: u64) -> Result<()> {
         if !self.cfg.quantize_cold {
             return Ok(());
         }
-        let aged: Vec<usize> = self
-            .entries
-            .iter()
-            .filter(|(_, e)| {
-                matches!(e.loc, Loc::Hot { .. })
-                    && e.thaw_eta > now.saturating_add(self.cfg.cold_after_steps)
-            })
-            .map(|(&p, _)| p)
-            .collect();
-        for pos in aged {
-            self.demote_to_cold(pos);
+        let limit = now.saturating_add(self.cfg.cold_after_steps);
+        for (_, pos) in self.sched.overdue_hot(limit) {
+            self.demote_to_cold(pos)?;
         }
-        self.enforce_budgets()
+        self.enforce_budgets()?;
+        self.sched_depth.record(self.sched.queued_frozen() as u64);
+        Ok(())
     }
 
     /// Take the payload for a restore (frozen -> active). `Ok(None)`
@@ -382,56 +324,61 @@ impl TieredStore {
     pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
         let Some(e) = self.entries.remove(&pos) else { return Ok(None) };
         let t0 = Instant::now();
-        let (row, tier) = match e.loc {
-            Loc::Hot { slot, staged } => {
-                let row = self.pool.row(slot).to_vec();
-                self.pool.release(slot);
-                self.hot_bytes -= self.row_bytes();
-                if staged {
+        self.sched.remove(e.class, e.thaw_eta, pos);
+        let payload = self
+            .tier_mut(e.class)
+            .take(pos)?
+            .ok_or_else(|| missing(pos, e.class))?;
+        let tier = match e.class {
+            SchedClass::HotResident | SchedClass::HotStaged => {
+                if e.class == SchedClass::HotStaged {
                     self.staged_hits += 1;
                 }
-                (row, TierKind::Hot)
+                TierKind::Hot
             }
-            Loc::Cold(qr) => {
-                self.cold_bytes -= qr.bytes();
+            SchedClass::Cold => {
                 self.staged_misses += 1;
-                (quant::dequantize(&qr), TierKind::Cold)
+                TierKind::Cold
             }
-            Loc::Spilled { slot } => {
+            SchedClass::Spill => {
                 self.staged_misses += 1;
-                let qr = self
-                    .spill
-                    .as_mut()
-                    .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?
-                    .take_row(slot)?;
-                (quant::dequantize(&qr), TierKind::Spill)
+                TierKind::Spill
             }
         };
+        let row = payload.into_raw();
         self.restore_latency.record(tier, t0.elapsed());
         self.total_restored += 1;
         Ok(Some(row))
     }
 
     /// Drop a payload permanently (irreversible-eviction baselines).
-    pub fn drop_row(&mut self, pos: usize) {
-        let Some(e) = self.entries.remove(&pos) else { return };
-        match e.loc {
-            Loc::Hot { slot, .. } => {
-                self.pool.release(slot);
-                self.hot_bytes -= self.row_bytes();
-            }
-            Loc::Cold(qr) => self.cold_bytes -= qr.bytes(),
-            Loc::Spilled { slot } => {
-                if let Some(s) = self.spill.as_mut() {
-                    s.free_slot(slot);
-                }
-            }
+    /// Absent positions are a no-op; tier bookkeeping failures (a
+    /// stale spill handle) surface as `Error::Offload` instead of
+    /// being silently ignored.
+    pub fn drop_row(&mut self, pos: usize) -> Result<()> {
+        let Some(e) = self.entries.remove(&pos) else { return Ok(()) };
+        self.sched.remove(e.class, e.thaw_eta, pos);
+        if !self.tier_mut(e.class).discard(pos)? {
+            return Err(missing(pos, e.class));
         }
         self.total_dropped += 1;
+        Ok(())
     }
 
     pub fn contains(&self, pos: usize) -> bool {
         self.entries.contains_key(&pos)
+    }
+
+    /// The tier currently holding `pos`, plus whether it sits in the
+    /// hot tier via a prefetch promotion (staged). Diagnostics and the
+    /// scheduler-oracle property test.
+    pub fn tier_of(&self, pos: usize) -> Option<(TierKind, bool)> {
+        self.entries.get(&pos).map(|e| match e.class {
+            SchedClass::HotResident => (TierKind::Hot, false),
+            SchedClass::HotStaged => (TierKind::Hot, true),
+            SchedClass::Cold => (TierKind::Cold, false),
+            SchedClass::Spill => (TierKind::Spill, false),
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -444,7 +391,7 @@ impl TieredStore {
 
     /// Bytes currently held across all tiers.
     pub fn bytes(&self) -> usize {
-        self.hot_bytes + self.cold_bytes + self.spill.as_ref().map(|s| s.bytes()).unwrap_or(0)
+        self.hot.bytes() + self.cold.bytes() + self.spill.bytes()
     }
 
     /// Drain everything (pos, payload) — the engine's emergency full
@@ -460,35 +407,33 @@ impl TieredStore {
         Ok(out)
     }
 
-    pub fn positions(&self) -> Vec<usize> {
-        let mut p: Vec<usize> = self.entries.keys().copied().collect();
-        p.sort_unstable();
-        p
+    /// Resident positions, in arbitrary order. Borrows instead of
+    /// allocating — callers that need order sort their own collection.
+    pub fn positions(&self) -> impl Iterator<Item = usize> + '_ {
+        self.entries.keys().copied()
     }
 
-    /// Point-in-time per-tier occupancy gauges.
+    /// Point-in-time per-tier occupancy gauges. O(1): each tier owns
+    /// its own row/byte accounting (the old implementation classified
+    /// every entry on each call).
     pub fn occupancy(&self) -> TierOccupancy {
         let mut o = TierOccupancy {
-            hot_bytes: self.hot_bytes,
-            cold_bytes: self.cold_bytes,
-            spill_bytes: self.spill.as_ref().map(|s| s.bytes()).unwrap_or(0),
             peak_hot_bytes: self.peak_hot_bytes,
             peak_cold_bytes: self.peak_cold_bytes,
             peak_spill_bytes: self.peak_spill_bytes,
             uncompressed_bytes: self.entries.len() * self.row_bytes(),
             ..TierOccupancy::default()
         };
-        for e in self.entries.values() {
-            match e.loc {
-                Loc::Hot { .. } => o.hot_rows += 1,
-                Loc::Cold(_) => o.cold_rows += 1,
-                Loc::Spilled { .. } => o.spill_rows += 1,
-            }
-        }
+        self.hot.occupancy(&mut o);
+        self.cold.occupancy(&mut o);
+        self.spill.occupancy(&mut o);
         o
     }
 
     /// Counters + occupancy snapshot for responses and bench CSVs.
+    /// Plan-batching counters are zero here — the session overlays its
+    /// own (`Session::offload_summary`), since batching happens in the
+    /// engine's plan execution, not in storage.
     pub fn summary(&self) -> super::OffloadSummary {
         let mean_us = |h: &crate::metrics::Histogram| h.mean().as_micros() as u64;
         super::OffloadSummary {
@@ -503,6 +448,9 @@ impl TieredStore {
             restores_spill: self.restore_latency.spill.count(),
             restore_hot_mean_us: mean_us(&self.restore_latency.hot),
             restore_cold_mean_us: mean_us(&self.restore_latency.cold),
+            sched_depth_max: self.sched_depth.max(),
+            restore_batch_rows: 0,
+            restore_batch_spans: 0,
         }
     }
 }
@@ -534,6 +482,7 @@ mod tests {
         s.stash(7, r.clone(), 0, 2).unwrap(); // thaws in 2 < cold_after 8 -> hot
         assert!(s.contains(7));
         assert_eq!(s.occupancy().hot_rows, 1);
+        assert_eq!(s.tier_of(7), Some((TierKind::Hot, false)));
         assert_eq!(s.take(7).unwrap(), Some(r));
         assert_eq!(s.take(7).unwrap(), None);
         assert_eq!(s.total_restored, 1);
@@ -583,6 +532,7 @@ mod tests {
         let o = s.occupancy();
         assert_eq!(o.hot_rows, 2);
         assert_eq!(o.cold_rows, 1);
+        assert_eq!(s.tier_of(3), Some((TierKind::Cold, false)));
         // 1 and 2 still hot (exact roundtrip)
         assert_eq!(s.take(1).unwrap(), Some(row(RF, 1.0)));
         assert_eq!(s.take(2).unwrap(), Some(row(RF, 2.0)));
@@ -597,6 +547,7 @@ mod tests {
         // steps; the hint also refreshes the thaw prediction
         assert_eq!(s.stage(&[(5, 2)]).unwrap(), 1);
         assert_eq!(s.occupancy().hot_rows, 1);
+        assert_eq!(s.tier_of(5), Some((TierKind::Hot, true)));
         let before_cold_restores = s.restore_latency.cold.count();
         let got = s.take(5).unwrap().unwrap();
         assert_eq!(got.len(), RF);
@@ -671,6 +622,7 @@ mod tests {
         assert_eq!(o.cold_rows, 0);
         assert_eq!(o.spill_rows, 1);
         assert!(o.spill_bytes > 0);
+        assert_eq!(s.tier_of(1), Some((TierKind::Spill, false)));
         let back = s.take(1).unwrap().unwrap();
         assert_eq!(back.len(), RF);
         assert_eq!(s.restore_latency.spill.count(), 1);
@@ -695,9 +647,9 @@ mod tests {
         let mut s = TieredStore::new(RF, cfg());
         s.stash(1, row(RF, 1.0), 0, 1).unwrap(); // hot
         s.stash(2, row(RF, 2.0), 0, 100).unwrap(); // cold
-        s.drop_row(1);
-        s.drop_row(2);
-        s.drop_row(99); // absent: no count
+        s.drop_row(1).unwrap();
+        s.drop_row(2).unwrap();
+        s.drop_row(99).unwrap(); // absent: no-op, no count
         assert_eq!(s.total_dropped, 2);
         assert!(s.is_empty());
         assert_eq!(s.bytes(), 0);
@@ -726,7 +678,7 @@ mod tests {
         }
         s.take(0).unwrap();
         s.take(1).unwrap();
-        s.drop_row(2);
+        s.drop_row(2).unwrap();
         assert_eq!(
             s.total_stashed,
             s.total_restored + s.total_dropped + s.len() as u64
@@ -745,5 +697,27 @@ mod tests {
         let o = s.occupancy();
         assert_eq!(o.hot_bytes, 0);
         assert_eq!(o.peak_hot_bytes, peak);
+    }
+
+    #[test]
+    fn positions_iterates_residents() {
+        let mut s = TieredStore::new(RF, cfg());
+        for p in [4usize, 1, 9] {
+            s.stash(p, row(RF, p as f32), 0, 1).unwrap();
+        }
+        let mut ps: Vec<usize> = s.positions().collect();
+        ps.sort_unstable();
+        assert_eq!(ps, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn sched_depth_tracks_frozen_queue() {
+        let mut s = TieredStore::new(RF, cfg());
+        for p in 0..4 {
+            s.stash(p, row(RF, p as f32), 0, 100).unwrap(); // all cold
+        }
+        s.on_step(1).unwrap();
+        assert_eq!(s.sched_depth.count(), 1);
+        assert_eq!(s.sched_depth.max(), 4);
     }
 }

@@ -1,0 +1,157 @@
+//! The `Tier` trait — the pluggable storage-backend surface of the
+//! tiered frozen-KV store.
+//!
+//! `TieredStore` used to be one monolithic struct that knew how to
+//! pool hot rows, quantize cold rows, and talk to the spill file. The
+//! trait splits those responsibilities: each tier is a self-contained
+//! backend that stores row payloads keyed by sequence position and
+//! accounts for its own bytes, while residency *policy* (which row
+//! lives in which tier, driven by predicted thaw step) stays in
+//! `TieredStore` + `ThawScheduler`. New backends — pinned host memory,
+//! GPUDirect staging buffers, a remote KV service (ARKV,
+//! arXiv 2603.08727) — implement this trait and slot in without
+//! touching the scheduler or the engine.
+//!
+//! Payloads move between tiers as [`RowPayload`]: either raw f32 rows
+//! or quantized records. A tier stores whichever representation it
+//! wants (`into_raw` / `into_quant` convert on demand), so a
+//! cold -> spill demotion moves the quantized record verbatim instead
+//! of paying a dequantize/requantize round trip.
+
+use crate::error::Result;
+use crate::metrics::{TierKind, TierOccupancy};
+use crate::offload::quant::{self, QuantRow};
+
+/// A frozen-row payload in transit between tiers.
+#[derive(Debug, Clone)]
+pub enum RowPayload {
+    /// Full-precision row bundle (`row_floats` f32s).
+    Raw(Vec<f32>),
+    /// u8-quantized row with per-row affine header.
+    Quant(QuantRow),
+}
+
+impl RowPayload {
+    /// Bytes this payload occupies in its current representation.
+    pub fn bytes(&self) -> usize {
+        match self {
+            RowPayload::Raw(r) => r.len() * std::mem::size_of::<f32>(),
+            RowPayload::Quant(q) => q.bytes(),
+        }
+    }
+
+    /// Number of floats the reconstructed row carries.
+    pub fn row_floats(&self) -> usize {
+        match self {
+            RowPayload::Raw(r) => r.len(),
+            RowPayload::Quant(q) => q.q.len(),
+        }
+    }
+
+    /// Reconstruct the full-precision row (dequantizes if needed).
+    pub fn into_raw(self) -> Vec<f32> {
+        match self {
+            RowPayload::Raw(r) => r,
+            RowPayload::Quant(q) => quant::dequantize(&q),
+        }
+    }
+
+    /// Convert to the quantized representation (quantizes if needed).
+    ///
+    /// Re-quantizing a row that was itself dequantized from a u8
+    /// record is exact: quantization always assigns code 0 to the row
+    /// minimum and 255 to the maximum, so the reconstructed extremes
+    /// regenerate the identical lattice.
+    pub fn into_quant(self) -> QuantRow {
+        match self {
+            RowPayload::Raw(r) => quant::quantize(&r),
+            RowPayload::Quant(q) => q,
+        }
+    }
+}
+
+/// One storage backend for frozen KV rows.
+///
+/// Implementations store payloads keyed by sequence position and own
+/// their byte accounting. They do NOT decide *which* rows they hold —
+/// admission, demotion, and staging policy live in `TieredStore`,
+/// driven by the `ThawScheduler`'s predicted-thaw ordering.
+///
+/// Contract: `stash` on an occupied position is an error (the store
+/// guards residency, so a collision is an invariant breach); `take` /
+/// `stage` / `discard` on an absent position report absence rather
+/// than erroring (`Ok(None)` / `Ok(false)`) — the store converts
+/// absence into `Error::Offload` where it implies corruption.
+pub trait Tier {
+    /// Which occupancy gauge family this backend feeds.
+    fn kind(&self) -> TierKind;
+
+    /// Admit a payload for `pos`.
+    fn stash(&mut self, pos: usize, payload: RowPayload) -> Result<()>;
+
+    /// Remove and return the payload for `pos` (restore / demotion
+    /// source). `Ok(None)` when the tier does not hold `pos`.
+    fn take(&mut self, pos: usize) -> Result<Option<RowPayload>>;
+
+    /// Remove the payload for promotion into a warmer tier. Same data
+    /// movement as `take`, but kept separate on the trait so
+    /// asynchronous backends can overlap it with compute (read-ahead
+    /// into a pinned staging buffer) without conflating it with the
+    /// latency-critical restore path.
+    fn stage(&mut self, pos: usize) -> Result<Option<RowPayload>> {
+        self.take(pos)
+    }
+
+    /// Drop the payload without reconstructing it. Returns whether the
+    /// tier actually held `pos`; bookkeeping failures (e.g. a stale
+    /// spill handle) surface as `Error::Offload`.
+    fn discard(&mut self, pos: usize) -> Result<bool>;
+
+    /// Bytes currently held by this backend.
+    fn bytes(&self) -> usize;
+
+    /// Rows currently held by this backend.
+    fn rows(&self) -> usize;
+
+    /// Fold this backend's gauges into an occupancy snapshot.
+    fn occupancy(&self, out: &mut TierOccupancy);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_conversions_roundtrip() {
+        let row: Vec<f32> = (0..16).map(|i| i as f32 * 0.5 - 4.0).collect();
+        let raw = RowPayload::Raw(row.clone());
+        assert_eq!(raw.row_floats(), 16);
+        assert_eq!(raw.bytes(), 64);
+        let q = raw.into_quant();
+        let back = RowPayload::Quant(q.clone()).into_raw();
+        let bound = q.error_bound();
+        for (a, b) in row.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}");
+        }
+        // quant -> quant is a no-op move
+        let q2 = RowPayload::Quant(q.clone()).into_quant();
+        assert_eq!(q2, q);
+    }
+
+    #[test]
+    fn requantization_does_not_drift() {
+        // dequantize -> requantize regenerates the same code lattice
+        // (code 0 / 255 pin the row extremes), so stage + demote churn
+        // never accumulates error beyond the single-quantization bound.
+        let row: Vec<f32> = (0..32).map(|i| (i as f32 * 0.7).sin() * 3.0 + 1.0).collect();
+        let q1 = RowPayload::Raw(row.clone()).into_quant();
+        let dequant = RowPayload::Quant(q1.clone()).into_raw();
+        let q2 = RowPayload::Raw(dequant).into_quant();
+        assert_eq!(q1.q, q2.q, "codes must survive a requantization round trip");
+        let bound = q1.error_bound();
+        let back = RowPayload::Quant(q2).into_raw();
+        for (a, b) in row.iter().zip(&back) {
+            assert!((a - b).abs() <= 2.0 * bound, "{a} drifted to {b}");
+        }
+    }
+}

@@ -43,6 +43,8 @@ pub fn response_line(resp: &GenResponse) -> String {
             ("e2e_ms", Json::num((resp.e2e.as_secs_f64() * 1e4).round() / 10.0)),
             ("offload_bytes", Json::num(resp.offload.occupancy.total_bytes() as f64)),
             ("staged_hits", Json::num(resp.offload.staged_hits as f64)),
+            ("restore_rows", Json::num(resp.offload.restore_batch_rows as f64)),
+            ("restore_spans", Json::num(resp.offload.restore_batch_spans as f64)),
         ]),
     };
     let mut s = String::new();

@@ -9,12 +9,16 @@
 //!   restores round-trip within the configured quantization bound;
 //! * occupancy — per-tier gauges stay consistent with the resident
 //!   set, and the cold tier is always smaller than the uncompressed
-//!   footprint of the rows it holds.
+//!   footprint of the rows it holds;
+//! * scheduler equivalence — the eta-indexed thaw scheduler demotes
+//!   and stages the exact same row set as a brute-force full-scan
+//!   oracle across randomized stash/take/stage/step traces.
 
 use std::collections::HashMap;
 
 use asrkf::config::OffloadConfig;
-use asrkf::offload::{quantize, dequantize, TieredStore};
+use asrkf::metrics::TierKind;
+use asrkf::offload::{dequantize, quantize, TieredStore};
 use asrkf::prop_assert;
 use asrkf::util::prop::{prop_check, G};
 
@@ -79,7 +83,9 @@ fn prop_conservation_across_random_op_sequences() {
                 7 => {
                     if !resident.is_empty() {
                         let idx = g.usize(0, resident.len() - 1);
-                        store.drop_row(resident.swap_remove(idx));
+                        store
+                            .drop_row(resident.swap_remove(idx))
+                            .map_err(|e| format!("drop: {e}"))?;
                     }
                 }
                 // prefetch staging
@@ -114,6 +120,12 @@ fn prop_conservation_across_random_op_sequences() {
                 store.len()
             );
         }
+        // the store's resident set must be exactly the model's
+        let mut store_pos: Vec<usize> = store.positions().collect();
+        store_pos.sort_unstable();
+        let mut model_pos = resident.clone();
+        model_pos.sort_unstable();
+        prop_assert!(store_pos == model_pos, "position sets diverged");
         // drain the rest: everything stashed must come back out
         let drained = store.drain_all().map_err(|e| format!("drain: {e}"))?;
         prop_assert!(drained.len() == resident.len(), "drain lost rows");
@@ -183,6 +195,244 @@ fn prop_quantize_roundtrip_bound() {
             + 1e-7;
         for (a, b) in row.iter().zip(&back) {
             prop_assert!((a - b).abs() <= bound, "{a} -> {b} (bound {bound}, n {n})");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler oracle: a brute-force full-scan mirror of the store's
+// residency rules. `TieredStore` answers every per-step question (who
+// demotes, who stages) from its eta index; the oracle answers them by
+// scanning all rows, the way the store itself used to. Both must place
+// every row in the same tier with the same staged flag after every op.
+
+const HOT_ROW_BYTES: usize = RF * 4;
+const COLD_ROW_BYTES: usize = RF + 8; // u8 codes + (min, scale) header
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OTier {
+    Hot { staged: bool },
+    Cold,
+    Spill,
+}
+
+struct Oracle {
+    hot_budget: usize,
+    cold_budget: usize,
+    cold_after: u64,
+    quantize_cold: bool,
+    spill_enabled: bool,
+    rows: HashMap<usize, (u64, OTier)>, // pos -> (thaw_eta, tier)
+}
+
+impl Oracle {
+    fn new(cfg: &OffloadConfig) -> Oracle {
+        Oracle {
+            hot_budget: cfg.hot_budget_bytes,
+            cold_budget: cfg.cold_budget_bytes,
+            cold_after: cfg.cold_after_steps,
+            quantize_cold: cfg.quantize_cold,
+            spill_enabled: cfg.spill_dir.is_some(),
+            rows: HashMap::new(),
+        }
+    }
+
+    fn hot_bytes(&self) -> usize {
+        self.rows.values().filter(|(_, t)| matches!(t, OTier::Hot { .. })).count()
+            * HOT_ROW_BYTES
+    }
+
+    fn cold_bytes(&self) -> usize {
+        self.rows.values().filter(|(_, t)| matches!(t, OTier::Cold)).count() * COLD_ROW_BYTES
+    }
+
+    fn stash(&mut self, pos: usize, step: u64, eta: u64) {
+        let tier = if self.quantize_cold && eta.saturating_sub(step) >= self.cold_after {
+            OTier::Cold
+        } else {
+            OTier::Hot { staged: false }
+        };
+        self.rows.insert(pos, (eta, tier));
+        self.enforce();
+    }
+
+    /// Full-scan budget eviction: farthest (eta, pos) demotes first,
+    /// staged rows exempt from the hot sweep.
+    fn enforce(&mut self) {
+        if !self.quantize_cold {
+            return;
+        }
+        while self.hot_bytes() > self.hot_budget {
+            let victim = self
+                .rows
+                .iter()
+                .filter(|(_, (_, t))| matches!(t, OTier::Hot { staged: false }))
+                .map(|(&p, &(eta, _))| (eta, p))
+                .max();
+            let Some((_, p)) = victim else { break };
+            self.rows.get_mut(&p).unwrap().1 = OTier::Cold;
+        }
+        if self.spill_enabled {
+            while self.cold_bytes() > self.cold_budget {
+                let victim = self
+                    .rows
+                    .iter()
+                    .filter(|(_, (_, t))| matches!(t, OTier::Cold))
+                    .map(|(&p, &(eta, _))| (eta, p))
+                    .max();
+                let Some((_, p)) = victim else { break };
+                self.rows.get_mut(&p).unwrap().1 = OTier::Spill;
+            }
+        }
+    }
+
+    fn promote(&mut self, pos: usize) -> bool {
+        let Some(&(_, tier)) = self.rows.get(&pos) else { return false };
+        if matches!(tier, OTier::Hot { .. }) {
+            return false;
+        }
+        if self.hot_bytes() + HOT_ROW_BYTES > self.hot_budget {
+            return false;
+        }
+        self.rows.get_mut(&pos).unwrap().1 = OTier::Hot { staged: true };
+        true
+    }
+
+    fn stage(&mut self, hints: &[(usize, u64)]) {
+        for &(pos, eta) in hints {
+            if let Some(e) = self.rows.get_mut(&pos) {
+                e.0 = eta;
+            }
+            self.promote(pos);
+        }
+    }
+
+    fn stage_upcoming(&mut self, now: u64, horizon: u64, max_rows: usize) {
+        let horizon = horizon.min(self.cold_after);
+        let limit = now.saturating_add(horizon);
+        let mut due: Vec<(u64, usize)> = self
+            .rows
+            .iter()
+            .filter(|(_, (eta, t))| !matches!(t, OTier::Hot { .. }) && *eta <= limit)
+            .map(|(&p, &(eta, _))| (eta, p))
+            .collect();
+        due.sort_unstable();
+        for (_, p) in due.into_iter().take(max_rows) {
+            self.promote(p);
+        }
+    }
+
+    fn on_step(&mut self, now: u64) {
+        if !self.quantize_cold {
+            return;
+        }
+        let limit = now.saturating_add(self.cold_after);
+        let overdue: Vec<usize> = self
+            .rows
+            .iter()
+            .filter(|(_, (eta, t))| matches!(t, OTier::Hot { .. }) && *eta > limit)
+            .map(|(&p, _)| p)
+            .collect();
+        for p in overdue {
+            self.rows.get_mut(&p).unwrap().1 = OTier::Cold;
+        }
+        self.enforce();
+    }
+}
+
+fn sorted_residents(model: &Oracle) -> Vec<usize> {
+    let mut ps: Vec<usize> = model.rows.keys().copied().collect();
+    ps.sort_unstable();
+    ps
+}
+
+#[test]
+fn prop_eta_index_matches_full_scan_oracle() {
+    prop_check(40, |g| {
+        let cfg = random_cfg(g);
+        let mut store = TieredStore::new(RF, cfg.clone());
+        let mut model = Oracle::new(&cfg);
+        let mut next_pos = 0usize;
+        for step in 0..150u64 {
+            match g.usize(0, 9) {
+                // stash a new row (weighted heaviest)
+                0..=3 => {
+                    let eta = step + g.usize(0, 30) as u64;
+                    store
+                        .stash(next_pos, random_row(g), step, eta)
+                        .map_err(|e| format!("stash: {e}"))?;
+                    model.stash(next_pos, step, eta);
+                    next_pos += 1;
+                }
+                // restore a random resident row
+                4..=5 => {
+                    let ps = sorted_residents(&model);
+                    if !ps.is_empty() {
+                        let pos = ps[g.usize(0, ps.len() - 1)];
+                        let got = store.take(pos).map_err(|e| format!("take: {e}"))?;
+                        prop_assert!(got.is_some(), "resident pos {pos} had no payload");
+                        model.rows.remove(&pos);
+                    }
+                }
+                // drop a random resident row
+                6 => {
+                    let ps = sorted_residents(&model);
+                    if !ps.is_empty() {
+                        let pos = ps[g.usize(0, ps.len() - 1)];
+                        store.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                        model.rows.remove(&pos);
+                    }
+                }
+                // entropy-pressure staging sweep
+                7 => {
+                    let horizon = g.usize(0, 16) as u64;
+                    let max_rows = g.usize(0, 8);
+                    store
+                        .stage_upcoming(step, horizon, max_rows)
+                        .map_err(|e| format!("stage_upcoming: {e}"))?;
+                    model.stage_upcoming(step, horizon, max_rows);
+                }
+                // policy prefetch hints (also refresh thaw predictions)
+                8 => {
+                    let ps = sorted_residents(&model);
+                    let mut hints = Vec::new();
+                    for _ in 0..g.usize(0, 3) {
+                        if ps.is_empty() {
+                            break;
+                        }
+                        let pos = ps[g.usize(0, ps.len() - 1)];
+                        hints.push((pos, step + g.usize(0, 30) as u64));
+                    }
+                    store.stage(&hints).map_err(|e| format!("stage: {e}"))?;
+                    model.stage(&hints);
+                }
+                // residency sweep
+                _ => {
+                    store.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                    model.on_step(step);
+                }
+            }
+            // the index-driven store and the full-scan oracle must
+            // agree on every row's tier and staged flag
+            prop_assert!(
+                store.len() == model.rows.len(),
+                "resident mismatch at step {step}: store {} vs oracle {}",
+                store.len(),
+                model.rows.len()
+            );
+            for (&pos, &(_, tier)) in &model.rows {
+                let want = match tier {
+                    OTier::Hot { staged } => (TierKind::Hot, staged),
+                    OTier::Cold => (TierKind::Cold, false),
+                    OTier::Spill => (TierKind::Spill, false),
+                };
+                let got = store.tier_of(pos);
+                prop_assert!(
+                    got == Some(want),
+                    "step {step} pos {pos}: store placed {got:?}, oracle wants {want:?}"
+                );
+            }
         }
         Ok(())
     });
