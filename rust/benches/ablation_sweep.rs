@@ -9,20 +9,31 @@ use asrkf::baselines::make_policy;
 use asrkf::config::EngineConfig;
 use asrkf::engine::Generator;
 use asrkf::runtime::Runtime;
-use asrkf::util::bench::Table;
+use asrkf::util::bench::{self, Table};
 
 const PROMPT: &str = "the system routes every request. ";
-const NEW_TOKENS: usize = 250;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
+    let new_tokens = bench::smoke_size(250, 24);
     let base = EngineConfig::default();
-    let rt = Runtime::load(&base.artifacts_dir)?;
 
     let mut table = Table::new(
         "Ablation: tau / window K / softness k / sinks",
         &["Variant", "Active KV", "Mean Active", "Compression", "Mean Entropy", "Freezes"],
     );
+    let rt = match Runtime::load(&base.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) if bench::smoke() => {
+            bench::smoke_schema_only(
+                &table,
+                "artifacts/ablation_sweep.csv",
+                &format!("runtime unavailable ({e})"),
+            )?;
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
 
     type Mut = Box<dyn Fn(&mut EngineConfig)>;
     let variants: Vec<(String, Mut)> = vec![
@@ -41,7 +52,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let mut cfg = base.clone();
         mutate(&mut cfg);
         let gen = Generator::new(&rt, cfg.clone());
-        let out = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, NEW_TOKENS)?;
+        let out = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, new_tokens)?;
         let s = &out.stats;
         let ent =
             out.trace.iter().map(|t| t.entropy as f64).sum::<f64>() / out.trace.len() as f64;

@@ -10,29 +10,43 @@ use asrkf::baselines::make_policy;
 use asrkf::config::EngineConfig;
 use asrkf::engine::Generator;
 use asrkf::runtime::Runtime;
-use asrkf::util::bench::Table;
+use asrkf::util::bench::{self, Table};
 use asrkf::workload::passkey::run_passkey;
 
 const PROMPT: &str = "the system routes every request. ";
-const NEW_TOKENS: usize = 250;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
+    let new_tokens = bench::smoke_size(250, 16);
+    let seeds = bench::smoke_size(3, 1) as u64;
+    let haystack = bench::smoke_size(600, 200);
     let mut cfg = EngineConfig::default();
     cfg.freeze.softness_k = 1.0;
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
-    let gen = Generator::new(&rt, cfg.clone());
 
-    let _ = gen.generate(PROMPT, make_policy("full", &cfg.freeze)?, 4)?; // compile warmup
     let mut table = Table::new(
         "Baselines: memory + retrieval",
         &["Method", "Active KV", "Compression", "Reversible", "Needle recoverable", "Time"],
     );
+    let rt = match Runtime::load(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) if bench::smoke() => {
+            bench::smoke_schema_only(
+                &table,
+                "artifacts/baseline_compare.csv",
+                &format!("runtime unavailable ({e})"),
+            )?;
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let gen = Generator::new(&rt, cfg.clone());
+
+    let _ = gen.generate(PROMPT, make_policy("full", &cfg.freeze)?, 4)?; // compile warmup
     for policy in ["full", "asrkf", "h2o", "streaming"] {
-        let out = gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, NEW_TOKENS)?;
+        let out = gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, new_tokens)?;
         let mut recov = 0.0;
-        for seed in 1..=3u64 {
-            recov += run_passkey(&rt, &cfg, policy, 600, seed)?.needle_recoverable;
+        for seed in 1..=seeds {
+            recov += run_passkey(&rt, &cfg, policy, haystack, seed)?.needle_recoverable;
         }
         let s = &out.stats;
         table.row(&[
@@ -40,7 +54,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             format!("{}/{}", s.final_active_kv, s.total_tokens),
             format!("{:.1}%", s.compression * 100.0),
             (policy == "asrkf" || policy == "full").to_string(),
-            format!("{:.0}%", recov / 3.0 * 100.0),
+            format!("{:.0}%", recov / seeds as f64 * 100.0),
             format!("{:.2}s", s.wall.as_secs_f64()),
         ]);
     }

@@ -9,21 +9,32 @@ use asrkf::baselines::make_policy;
 use asrkf::config::EngineConfig;
 use asrkf::engine::Generator;
 use asrkf::runtime::Runtime;
-use asrkf::util::bench::Series;
+use asrkf::util::bench::{self, Series};
 
 const PROMPT: &str = "the system routes every request. ";
-const NEW_TOKENS: usize = 480;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
+    let new_tokens = bench::smoke_size(480, 24);
     let mut cfg = EngineConfig::default();
     cfg.freeze.softness_k = 1.0; // paper-compression operating point
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let rt = match Runtime::load(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) if bench::smoke() => {
+            // schema-only CSV: the named-but-empty series pin the header
+            let empty = [Series::new("full_kv"), Series::new("asr_kf_egr")];
+            let refs: Vec<&Series> = empty.iter().collect();
+            Series::write_csv(&refs, "artifacts/fig1_trajectory.csv")?;
+            println!("BENCH_SMOKE: runtime unavailable ({e}); wrote schema CSV");
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
     let gen = Generator::new(&rt, cfg.clone());
 
     let mut series = Vec::new();
     for policy in ["full", "asrkf"] {
-        let out = gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, NEW_TOKENS)?;
+        let out = gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, new_tokens)?;
         let mut s = Series::new(if policy == "full" { "full_kv" } else { "asr_kf_egr" });
         for t in &out.trace {
             s.push(t.step as f64, t.active as f64);

@@ -7,12 +7,24 @@
 use asrkf::config::FreezeConfig;
 use asrkf::kv::{AsrKfPolicy, KvPolicy};
 use asrkf::runtime::{literal, DecodeInputs, Runtime};
-use asrkf::util::bench::{Bencher, Table};
+use asrkf::util::bench::{self, Bencher, Table};
 use asrkf::util::rng::Pcg64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
-    let rt = Runtime::load("artifacts")?;
+    let mut table = Table::new("Micro: decode hot-path components", &["component", "mean_us", "p50_us"]);
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) if bench::smoke() => {
+            bench::smoke_schema_only(
+                &table,
+                "artifacts/micro_runtime.csv",
+                &format!("runtime unavailable ({e})"),
+            )?;
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
     let model = rt.manifest.model.clone();
     let decode = rt.decode_for(1, 1024)?;
     let s = decode.kv_len;
@@ -23,8 +35,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for m in mask.iter_mut().take(500) {
         *m = 1.0;
     }
-    let b = Bencher::new(3, 15);
-    let mut table = Table::new("Micro: decode hot-path components", &["component", "mean_us", "p50_us"]);
+    let b = Bencher::new(bench::smoke_size(3, 1), bench::smoke_size(15, 3));
 
     let st = b.run("literal: kv upload (16 MiB)", || {
         let _ = literal::lit_f32(&[model.n_layers, 2, 1, s, model.n_heads, model.d_head], &kv)

@@ -9,10 +9,9 @@ use asrkf::baselines::make_policy;
 use asrkf::config::EngineConfig;
 use asrkf::engine::Generator;
 use asrkf::runtime::Runtime;
-use asrkf::util::bench::Table;
+use asrkf::util::bench::{self, Table};
 
 const PROMPT: &str = "the system routes every request. ";
-const NEW_TOKENS: usize = 380;
 
 fn repetition_score(text: &str) -> f64 {
     let b = text.as_bytes();
@@ -32,7 +31,23 @@ fn repetition_score(text: &str) -> f64 {
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
-    let rt = Runtime::load("artifacts")?;
+    let new_tokens = bench::smoke_size(380, 24);
+    let mut table = Table::new(
+        "Recovery ladder ablation (aggressive freeze: k=1)",
+        &["Variant", "Compression", "Mean H", "p95 H", "Repetition", "SR/WR/FR/RR", "Time"],
+    );
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) if bench::smoke() => {
+            bench::smoke_schema_only(
+                &table,
+                "artifacts/recovery_ablation.csv",
+                &format!("runtime unavailable ({e})"),
+            )?;
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
 
     {
         // compile warmup so Time rows are compile-free
@@ -41,16 +56,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let gen = Generator::new(&rt, cfg.clone());
         let _ = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, 4)?;
     }
-    let mut table = Table::new(
-        "Recovery ladder ablation (aggressive freeze: k=1)",
-        &["Variant", "Compression", "Mean H", "p95 H", "Repetition", "SR/WR/FR/RR", "Time"],
-    );
     for recovery in [false, true] {
         let mut cfg = EngineConfig::default();
         cfg.freeze.softness_k = 1.0;
         cfg.recovery.enabled = recovery;
         let gen = Generator::new(&rt, cfg.clone());
-        let out = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, NEW_TOKENS)?;
+        let out = gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, new_tokens)?;
 
         let mut hs: Vec<f64> = out.trace.iter().map(|t| t.entropy as f64).collect();
         hs.sort_by(|a, b| a.partial_cmp(b).unwrap());

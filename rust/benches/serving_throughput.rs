@@ -1,40 +1,42 @@
 //! Serving throughput/latency: the continuous-batching coordinator
-//! under a Poisson trace, batched (B=4) vs sequential (B=1 equivalent:
-//! one request at a time through the single-sequence engine).
+//! under a Poisson trace — swept across offload shard counts — vs the
+//! sequential single-sequence engine, plus a host-only sharded-store
+//! restore-burst microbench that runs even without trained artifacts.
 //!
 //! Not a paper table — this validates that the paper's technique
 //! composes with a production-style serving loop (the "memory-
-//! constrained deployment" the paper motivates).
+//! constrained deployment" the paper motivates) and measures what
+//! position-sharding buys the restore path: the `Shards` column sweeps
+//! N ∈ {1, 2, 4} and `restore par` reports the most shards a single
+//! restore burst engaged (> 1 means bursts actually executed per-shard
+//! in parallel on the worker pool).
 //!
-//! The offload columns expose the tiered frozen-KV store's
-//! memory/latency trade: per-tier peak occupancy, the staged-hit rate
-//! (restores served without inline dequantization), and per-tier
-//! restore latencies.
+//! `BENCH_SMOKE=1` shrinks every knob to CI size and tolerates a
+//! missing runtime (schema CSV still emitted).
 //!
 //! Output: table + artifacts/serving_throughput.csv
 
 use std::time::Instant;
 
 use asrkf::baselines::make_policy;
-use asrkf::config::{EngineConfig, ServerConfig};
+use asrkf::config::{EngineConfig, ServerConfig, ShardPartition};
 use asrkf::coordinator::{spawn, GenParams};
 use asrkf::engine::Generator;
-use asrkf::offload::OffloadSummary;
+use asrkf::offload::{OffloadSummary, ShardedStore};
 use asrkf::runtime::Runtime;
-use asrkf::util::bench::Table;
+use asrkf::util::bench::{self, Table};
 use asrkf::workload::trace::poisson_trace;
 
-const N_REQ: usize = 12;
-const MAX_NEW: usize = 32;
+const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
 
-/// Aggregate per-request offload summaries into the seven CSV columns:
+/// Aggregate per-request offload summaries into the eight CSV columns:
 /// per-request peak hot/cold KB (the max high-water mark any single
 /// session reached — summing peaks of sessions that never coexisted
 /// would overstate the footprint), staged-hit %, mean hot / cold
-/// restore µs weighted by restore count, and the restore-batching pair
+/// restore µs weighted by restore count, the restore-batching pair
 /// (rows restored / spans copied — spans << rows is the coalescing
-/// win of batched plan execution).
-fn offload_columns(summaries: &[OffloadSummary]) -> [String; 7] {
+/// win), and the restore-parallelism high-water mark across sessions.
+fn offload_columns(summaries: &[OffloadSummary]) -> [String; 8] {
     let peak_hot: usize =
         summaries.iter().map(|s| s.occupancy.peak_hot_bytes).max().unwrap_or(0);
     let peak_cold: usize =
@@ -56,6 +58,7 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 7] {
     };
     let batch_rows: u64 = summaries.iter().map(|s| s.restore_batch_rows).sum();
     let batch_spans: u64 = summaries.iter().map(|s| s.restore_batch_spans).sum();
+    let par_max: u64 = summaries.iter().map(|s| s.restore_parallelism_max).max().unwrap_or(0);
     [
         format!("{:.1}", peak_hot as f64 / 1024.0),
         format!("{:.1}", peak_cold as f64 / 1024.0),
@@ -64,34 +67,75 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 7] {
         weighted_us(|s| s.restores_cold, |s| s.restore_cold_mean_us),
         batch_rows.to_string(),
         batch_spans.to_string(),
+        par_max.to_string(),
     ]
 }
 
-fn main() -> Result<(), Box<dyn std::error::Error>> {
-    asrkf::util::logging::init();
-    let trace = poisson_trace(42, N_REQ, 100.0, 40, 120, MAX_NEW); // all arrive ~immediately
-    let mut table = Table::new(
-        "Serving: batched coordinator vs sequential engine",
-        &[
-            "Mode",
-            "Requests",
-            "Tokens",
-            "Wall",
-            "tok/s",
-            "mean e2e (ms)",
-            "hot KB (peak/req)",
-            "cold KB (peak/req)",
-            "staged hit",
-            "restore hot (us)",
-            "restore cold (us)",
-            "restored rows",
-            "restore spans",
-        ],
-    );
+/// Host-only restore-burst microbench: stash cold rows into a
+/// `ShardedStore`, then restore them in sorted bursts — the exact
+/// shape of an entropy-triggered recovery. Runs without artifacts, so
+/// CI smoke exercises the worker pool and the parallel dequantization
+/// path every time.
+fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error>> {
+    const ROW_FLOATS: usize = 512; // 2 KB rows
+    let waves = bench::smoke_size(24, 4);
+    let burst = bench::smoke_size(256, 64);
+    for &n in &SHARD_SWEEP {
+        let cfg = asrkf::config::OffloadConfig {
+            cold_after_steps: 4,
+            shards: n,
+            shard_partition: ShardPartition::Hash,
+            ..Default::default()
+        };
+        let mut store = ShardedStore::new(ROW_FLOATS, cfg)?;
+        let row: Vec<f32> = (0..ROW_FLOATS).map(|i| (i as f32 * 0.37).sin()).collect();
+        let t0 = Instant::now();
+        let mut e2e_sum = 0.0f64;
+        let mut restored = 0usize;
+        for wave in 0..waves {
+            let base = wave * burst;
+            let positions: Vec<usize> = (base..base + burst).collect();
+            let items: Vec<(usize, Vec<f32>, u64)> = positions
+                .iter()
+                .map(|&p| (p, row.clone(), u64::MAX >> 1)) // far thaw: straight to cold
+                .collect();
+            store.stash_batch(items, wave as u64)?;
+            let t1 = Instant::now();
+            // the burst pays per-shard parallel dequantization
+            let got = store.take_batch(&positions)?;
+            e2e_sum += t1.elapsed().as_secs_f64() * 1000.0;
+            restored += got.iter().filter(|p| p.is_some()).count();
+        }
+        let wall = t0.elapsed();
+        let sum = store.summary();
+        let mut cells = vec![
+            "store burst (hash)".to_string(),
+            n.to_string(),
+            waves.to_string(),
+            restored.to_string(),
+            format!("{:.2}s", wall.as_secs_f64()),
+            format!("{:.1}", restored as f64 / wall.as_secs_f64()),
+            format!("{:.1}", e2e_sum / waves as f64),
+        ];
+        cells.extend(offload_columns(&[sum]));
+        table.row(&cells);
+    }
+    Ok(())
+}
 
-    // --- batched coordinator (B=4)
-    {
-        let cfg = EngineConfig::default();
+/// Runtime-backed rows: the batched coordinator across the shard sweep
+/// and the sequential single-sequence engine.
+fn runtime_rows(
+    table: &mut Table,
+    n_req: usize,
+    max_new: usize,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let trace = poisson_trace(42, n_req, 100.0, 40, 120, max_new); // all arrive ~immediately
+
+    // --- batched coordinator (B=4), shard sweep
+    for &n in &SHARD_SWEEP {
+        let mut cfg = EngineConfig::default();
+        cfg.offload.shards = n;
         let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
         let (handle, join) = spawn(cfg, server)?;
         let t0 = Instant::now();
@@ -120,11 +164,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let off = offload_columns(&summaries);
         let mut row = vec![
             "continuous batch (B=4)".to_string(),
-            N_REQ.to_string(),
+            n.to_string(),
+            n_req.to_string(),
             tokens.to_string(),
             format!("{:.2}s", wall.as_secs_f64()),
             format!("{:.1}", tokens as f64 / wall.as_secs_f64()),
-            format!("{:.0}", e2e_sum / N_REQ as f64),
+            format!("{:.0}", e2e_sum / n_req as f64),
         ];
         row.extend(off);
         table.row(&row);
@@ -152,17 +197,59 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let off = offload_columns(&summaries);
         let mut row = vec![
             "sequential (B=1)".to_string(),
-            N_REQ.to_string(),
+            "1".to_string(),
+            n_req.to_string(),
             tokens.to_string(),
             format!("{:.2}s", wall.as_secs_f64()),
             format!("{:.1}", tokens as f64 / wall.as_secs_f64()),
-            format!("{:.0}", e2e_sum / N_REQ as f64),
+            format!("{:.0}", e2e_sum / n_req as f64),
         ];
         row.extend(off);
         table.row(&row);
     }
+    Ok(())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let n_req = bench::smoke_size(12, 4);
+    let max_new = bench::smoke_size(32, 8);
+    let mut table = Table::new(
+        "Serving: sharded restore bursts + batched coordinator vs sequential engine",
+        &[
+            "Mode",
+            "Shards",
+            "Requests",
+            "Tokens",
+            "Wall",
+            "tok/s",
+            "mean e2e (ms)",
+            "hot KB (peak/req)",
+            "cold KB (peak/req)",
+            "staged hit",
+            "restore hot (us)",
+            "restore cold (us)",
+            "restored rows",
+            "restore spans",
+            "restore par",
+        ],
+    );
+
+    sharded_burst_rows(&mut table)?;
+
+    if let Err(e) = runtime_rows(&mut table, n_req, max_new) {
+        if bench::smoke() {
+            println!("BENCH_SMOKE: skipping runtime-driven rows ({e})");
+        } else {
+            return Err(e);
+        }
+    }
 
     table.print();
     table.write_csv("artifacts/serving_throughput.csv")?;
+    println!(
+        "\nsharding claim: `restore par` > 1 for Shards > 1 — restore bursts split at shard \
+         boundaries and execute on the worker pool in parallel"
+    );
     Ok(())
 }

@@ -12,11 +12,10 @@ use asrkf::baselines::make_policy;
 use asrkf::config::EngineConfig;
 use asrkf::engine::Generator;
 use asrkf::runtime::Runtime;
-use asrkf::util::bench::Table;
+use asrkf::util::bench::{self, Table};
 
 const PROMPT: &str = "the recovery ladder monitors the entropy trace. the scheduler freezes \
                       the key value pairs then the engine restores the frozen rows. ";
-const NEW_TOKENS: usize = 200;
 
 /// Fraction of 8-byte windows that repeat earlier in the text (lower =
 /// less degenerate repetition).
@@ -39,18 +38,30 @@ fn repetition_score(text: &str) -> f64 {
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
+    let new_tokens = bench::smoke_size(200, 24);
     let cfg = EngineConfig::default();
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
-    let gen = Generator::new(&rt, cfg.clone());
 
     let mut table = Table::new(
         "Table 3: explanation task (T=0.7, top-k=40, top-p=0.9)",
         &["Metric", "Baseline", "ASR-KF-EGR"],
     );
+    let rt = match Runtime::load(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) if bench::smoke() => {
+            bench::smoke_schema_only(
+                &table,
+                "artifacts/table3_quality.csv",
+                &format!("runtime unavailable ({e})"),
+            )?;
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let gen = Generator::new(&rt, cfg.clone());
     let _ = gen.generate(PROMPT, make_policy("full", &cfg.freeze)?, 4)?; // compile warmup
     let mut outs = Vec::new();
     for policy in ["full", "asrkf"] {
-        outs.push(gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, NEW_TOKENS)?);
+        outs.push(gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, new_tokens)?);
     }
     let ent = |o: &asrkf::engine::GenOutcome| {
         o.trace.iter().map(|t| t.entropy as f64).sum::<f64>() / o.trace.len() as f64

@@ -96,6 +96,30 @@ impl SamplingConfig {
     }
 }
 
+/// How `offload::ShardedStore` maps sequence positions to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPartition {
+    /// `shard = pos % n`: contiguous position runs fan out round-robin,
+    /// so even a short restore burst engages every shard (maximum
+    /// restore parallelism, span copies degrade to single rows).
+    Hash,
+    /// `shard = (pos / block_rows) % n`: block-cyclic ranges — span
+    /// copies stay contiguous within a shard (up to `block_rows` rows
+    /// per span), at the cost of small bursts landing on fewer shards.
+    Range,
+}
+
+impl ShardPartition {
+    /// Parse a `--shard-partition` flag value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "hash" => Ok(ShardPartition::Hash),
+            "range" => Ok(ShardPartition::Range),
+            other => Err(format!("--shard-partition: expected 'hash' or 'range', got '{other}'")),
+        }
+    }
+}
+
 /// Tiered off-GPU frozen-KV storage knobs (`crate::offload`).
 ///
 /// The store keeps every frozen row (the paper's "no permanent
@@ -141,8 +165,16 @@ pub struct OffloadConfig {
     /// which the session stages likely-recovery rows ahead of time.
     pub stage_pressure: f32,
     /// Hot-pool slab granularity in rows (block layout for batched
-    /// gather/scatter).
+    /// gather/scatter). Also the chunk width of the `Range` shard
+    /// partition, so shard-local spans line up with hot-pool slabs.
     pub block_rows: usize,
+    /// Number of `ShardedStore` shards a session's positions fan out
+    /// across (1 disables the worker pool: single-store behavior).
+    /// Each shard runs its own tiers, eta scheduler, and a
+    /// `partitioned` slice of the byte budgets.
+    pub shards: usize,
+    /// Position-to-shard mapping (`--shard-partition hash|range`).
+    pub shard_partition: ShardPartition,
 }
 
 impl Default for OffloadConfig {
@@ -159,6 +191,8 @@ impl Default for OffloadConfig {
             prefetch_ahead: 2,
             stage_pressure: 0.5,
             block_rows: 32,
+            shards: 1,
+            shard_partition: ShardPartition::Hash,
         }
     }
 }
@@ -179,16 +213,25 @@ impl OffloadConfig {
             prefetch_ahead: args.u64_or("prefetch-ahead", d.prefetch_ahead)?,
             stage_pressure: args.f32_or("stage-pressure", d.stage_pressure)?,
             block_rows: d.block_rows,
+            shards: args.usize_in("shards", d.shards, 1, crate::offload::MAX_SHARDS)?,
+            shard_partition: ShardPartition::parse(&args.str_or("shard-partition", "hash"))?,
         })
     }
 
-    /// Per-slot budget partition for the batched coordinator: `n`
-    /// sessions share the configured budgets equally.
-    pub fn partitioned(&self, n: usize) -> OffloadConfig {
+    /// Budget slice for partition member `slot` of `n` (coordinator
+    /// slots or store shards): `total / n`, with the remainder bytes
+    /// spread one-per-slot across the first `total % n` members so the
+    /// slices sum exactly to the configured total (the old equal split
+    /// silently dropped up to `n - 1` bytes per tier). Slices below one
+    /// hot row are rejected at store construction, where the row size
+    /// is known (`offload::ShardedStore::new`).
+    pub fn partitioned(&self, n: usize, slot: usize) -> OffloadConfig {
         let n = n.max(1);
+        let slot = slot.min(n - 1);
+        let split = |total: usize| total / n + usize::from(slot < total % n);
         OffloadConfig {
-            hot_budget_bytes: (self.hot_budget_bytes / n).max(1),
-            cold_budget_bytes: (self.cold_budget_bytes / n).max(1),
+            hot_budget_bytes: split(self.hot_budget_bytes),
+            cold_budget_bytes: split(self.cold_budget_bytes),
             ..self.clone()
         }
     }
@@ -353,10 +396,44 @@ mod tests {
     #[test]
     fn offload_partition_divides_budgets() {
         let o = OffloadConfig { hot_budget_bytes: 100, cold_budget_bytes: 40, ..Default::default() };
-        let p = o.partitioned(4);
-        assert_eq!(p.hot_budget_bytes, 25);
-        assert_eq!(p.cold_budget_bytes, 10);
+        for slot in 0..4 {
+            let p = o.partitioned(4, slot);
+            assert_eq!(p.hot_budget_bytes, 25);
+            assert_eq!(p.cold_budget_bytes, 10);
+        }
         // n=0 clamps to 1
-        assert_eq!(o.partitioned(0).hot_budget_bytes, 100);
+        assert_eq!(o.partitioned(0, 0).hot_budget_bytes, 100);
+    }
+
+    #[test]
+    fn offload_partition_distributes_remainder() {
+        let o = OffloadConfig { hot_budget_bytes: 101, cold_budget_bytes: 10, ..Default::default() };
+        // 101 / 3 = 33 rem 2: slots 0 and 1 get the extra bytes
+        let hot: Vec<usize> = (0..3).map(|i| o.partitioned(3, i).hot_budget_bytes).collect();
+        assert_eq!(hot, vec![34, 34, 33]);
+        assert_eq!(hot.iter().sum::<usize>(), 101, "no bytes dropped");
+        // 10 / 3 = 3 rem 1
+        let cold: Vec<usize> = (0..3).map(|i| o.partitioned(3, i).cold_budget_bytes).collect();
+        assert_eq!(cold, vec![4, 3, 3]);
+        assert_eq!(cold.iter().sum::<usize>(), 10);
+        // a budget smaller than n leaves the tail slots at zero (the
+        // store rejects unusable hot slices at construction)
+        let tiny = OffloadConfig { hot_budget_bytes: 2, ..Default::default() };
+        assert_eq!(tiny.partitioned(3, 2).hot_budget_bytes, 0);
+    }
+
+    #[test]
+    fn shard_flags_parse() {
+        let d = OffloadConfig::default();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.shard_partition, ShardPartition::Hash);
+        let a = args(&["serve", "--shards", "4", "--shard-partition", "range"]);
+        let o = OffloadConfig::from_args(&a).unwrap();
+        assert_eq!(o.shards, 4);
+        assert_eq!(o.shard_partition, ShardPartition::Range);
+        let bad = args(&["serve", "--shard-partition", "modulo"]);
+        assert!(OffloadConfig::from_args(&bad).is_err());
+        let out_of_range = args(&["serve", "--shards", "0"]);
+        assert!(OffloadConfig::from_args(&out_of_range).is_err());
     }
 }

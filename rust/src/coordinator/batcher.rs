@@ -190,8 +190,11 @@ impl BatchEngine {
         let mut cfg = self.cfg.clone();
         cfg.sampling.seed = req.params.seed;
         // per-slot budget partition: B sessions share the configured
-        // offload byte budgets equally
-        cfg.offload = cfg.offload.partitioned(self.slots.len());
+        // offload byte budgets (remainder bytes land on the leading
+        // slots). Each slot's session then shards its slice across
+        // `cfg.offload.shards` worker-backed stores, so a slot's
+        // restore bursts parallelize without touching its neighbours.
+        cfg.offload = cfg.offload.partitioned(self.slots.len(), slot_idx);
         let policy = make_policy(&req.params.policy, &cfg.freeze)
             .map_err(Error::Coordinator)?;
         let mut session = Session::new(
@@ -202,7 +205,7 @@ impl BatchEngine {
             &cfg,
             self.decode.kv_len,
             model.kv_row_floats,
-        );
+        )?;
         session.seed_prefill(pf.logits_last, &pf.scores_last, tokens.len());
 
         self.slots[slot_idx] = Some(Slot {
@@ -309,7 +312,7 @@ impl BatchEngine {
                 let offload = sess.offload_summary();
                 self.stats.staged_hits += offload.staged_hits;
                 self.stats.staged_misses += offload.staged_misses;
-                self.restore_hist.merge(&sess.store.restore_latency);
+                self.restore_hist.merge(&sess.store.restore_latency());
                 // batch_stats is the single aggregate of per-session
                 // batching counters (rows/spans live there)
                 self.batch_stats.merge(&sess.batch);

@@ -9,14 +9,18 @@
 //!        └──(per-request channel)──────────  decode + KV policies
 //!                                               │ per-slot
 //!                                               ▼
-//!                                  offload::TieredStore (x B slots)
-//!                                   hot │ cold(u8) │ spill(file)
+//!                                  offload::ShardedStore (x B slots)
+//!                                   N x { hot │ cold(u8) │ spill }
 //!                                   budgets partitioned 1/B per slot
+//!                                   (then 1/N per shard within it)
 //! ```
 //!
-//! Each slot owns a tiered frozen-row store whose hot/cold byte
-//! budgets are the server-wide budgets divided by the batch size, so
-//! one long-context session cannot starve its neighbours' hot tiers.
+//! Each slot owns a sharded tiered frozen-row store whose hot/cold
+//! byte budgets are the server-wide budgets divided by the batch size
+//! (remainder bytes on the leading slots), so one long-context session
+//! cannot starve its neighbours' hot tiers; within a slot, positions
+//! shard across `OffloadConfig::shards` worker-backed stores so the
+//! slot's restore bursts execute in parallel.
 //! Retiring sessions fold their staged-hit counters and per-tier
 //! restore-latency histograms into `BatchEngine::stats` /
 //! `BatchEngine::restore_hist`.

@@ -120,7 +120,7 @@ impl<'rt> Generator<'rt> {
             &self.cfg,
             s,
             model.kv_row_floats,
-        );
+        )?;
         session.seed_prefill(pf.logits_last, &pf.scores_last, prompt_tokens.len());
 
         let mut upload = pf.timing.upload;
@@ -184,8 +184,8 @@ impl<'rt> Generator<'rt> {
             },
             peak_active_kv: peak,
             compression: 1.0 - final_active as f64 / total.max(1) as f64,
-            freezes: session.store.total_stashed + session.store.total_dropped,
-            restores: session.store.total_restored,
+            freezes: session.store.total_stashed() + session.store.total_dropped(),
+            restores: session.store.total_restored(),
             recovery_interventions: session
                 .ladder
                 .as_ref()

@@ -109,6 +109,25 @@ pub fn coalesce_runs(sorted: &[usize]) -> Vec<PosRun> {
     runs
 }
 
+/// Split coalesced runs into per-shard position lists: `shard_of`
+/// maps each position to its shard in `0..n`. A shard split is a run
+/// split — a `Range`-partitioned run cuts at chunk boundaries into
+/// shard-contiguous spans, a `Hash`-partitioned run fans its positions
+/// round-robin. Runs are walked in order, so each shard's list stays
+/// strictly ascending (ready for that shard's own `coalesce_runs`).
+pub fn split_runs(runs: &[PosRun], n: usize, shard_of: impl Fn(usize) -> usize) -> Vec<Vec<usize>> {
+    let n = n.max(1);
+    let mut out: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
+    for run in runs {
+        for pos in run.positions() {
+            let s = shard_of(pos);
+            debug_assert!(s < n, "shard_of({pos}) = {s} out of range for {n} shards");
+            out[s.min(n - 1)].push(pos);
+        }
+    }
+    out
+}
+
 /// Batched scatter: write row bundles back into the cache for every
 /// position covered by `runs`, one destination `copy_from_slice` span
 /// per (plane, run). Bundles are first assembled into a contiguous
@@ -272,6 +291,32 @@ mod tests {
         let total: usize = coalesce_runs(&[0, 1, 2, 3]).iter().map(|r| r.len).sum();
         assert_eq!(total, 4);
         assert_eq!(PosRun { start: 9, len: 2 }.positions().collect::<Vec<_>>(), vec![9, 10]);
+    }
+
+    #[test]
+    fn split_runs_covers_each_position_once() {
+        let positions = vec![2usize, 3, 4, 5, 9, 12, 13];
+        let runs = coalesce_runs(&positions);
+        // hash partition: round-robin across 3 shards
+        let hash = split_runs(&runs, 3, |p| p % 3);
+        assert_eq!(hash[0], vec![3, 9, 12]);
+        assert_eq!(hash[1], vec![4, 13]);
+        assert_eq!(hash[2], vec![2, 5]);
+        // range partition (chunk 4): run [2..6) splits at the 4 boundary
+        let range = split_runs(&runs, 2, |p| (p / 4) % 2);
+        assert_eq!(range[0], vec![2, 3, 9]);
+        assert_eq!(range[1], vec![4, 5, 12, 13]);
+        for per in [&hash, &range] {
+            let mut all: Vec<usize> = per.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, positions, "positions lost or duplicated");
+            for shard in per.iter() {
+                assert!(shard.windows(2).all(|w| w[0] < w[1]), "per-shard order broken");
+            }
+        }
+        // n = 1 degenerates to the full position list
+        assert_eq!(split_runs(&runs, 1, |_| 0)[0], positions);
+        assert!(split_runs(&[], 4, |p| p % 4).iter().all(Vec::is_empty));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
 use crate::metrics::BatchStats;
 use crate::model::logits::{logits_entropy, top1_prob};
 use crate::model::sampling::Sampler;
-use crate::offload::{OffloadSummary, TieredStore};
+use crate::offload::{OffloadSummary, ShardedStore};
 use crate::recovery::{Action, EntropyMonitor, RecoveryLadder};
 use crate::runtime::CallTiming;
 
@@ -46,7 +46,9 @@ pub struct Session {
     pub prompt_len: usize,
     pub max_new: usize,
     pub policy: Box<dyn KvPolicy>,
-    pub store: TieredStore,
+    /// Sharded tiered frozen-row storage; `OffloadConfig::shards = 1`
+    /// degenerates to the single-store behavior.
+    pub store: ShardedStore,
     /// activity mask [S] for this session's decode bucket
     pub mask: Vec<f32>,
     /// rows written to the cache so far (== next write position)
@@ -65,6 +67,8 @@ pub struct Session {
 }
 
 impl Session {
+    /// Errors surface unusable offload configurations (a per-shard hot
+    /// budget below one row) before any token is generated.
     pub fn new(
         id: u64,
         prompt_tokens: Vec<i32>,
@@ -73,7 +77,7 @@ impl Session {
         cfg: &EngineConfig,
         s_capacity: usize,
         row_floats: usize,
-    ) -> Self {
+    ) -> Result<Self> {
         let (monitor, ladder) = if cfg.recovery.enabled {
             (
                 Some(EntropyMonitor::new(cfg.recovery.clone())),
@@ -82,13 +86,13 @@ impl Session {
         } else {
             (None, None)
         };
-        Session {
+        Ok(Session {
             id,
             prompt_len: prompt_tokens.len(),
             tokens: prompt_tokens,
             max_new,
             policy,
-            store: TieredStore::new(row_floats, cfg.offload.clone()),
+            store: ShardedStore::new(row_floats, cfg.offload.clone())?,
             mask: vec![0.0; s_capacity],
             len: 0,
             sampler: Sampler::new(cfg.sampling.clone()),
@@ -100,7 +104,7 @@ impl Session {
             batch: BatchStats::default(),
             draws_at: Vec::new(),
             s_capacity,
-        }
+        })
     }
 
     pub fn generated(&self) -> usize {
@@ -161,9 +165,12 @@ impl Session {
         );
 
         if !plan.restore.is_empty() {
+            // parallel burst: the store splits the coalesced runs at
+            // shard boundaries and takes each slice on its worker
+            let fetched = self.store.take_batch(&plan.restore)?;
             let mut payloads = Vec::with_capacity(plan.restore.len());
-            for &pos in &plan.restore {
-                payloads.push(self.store.take(pos)?.ok_or_else(|| {
+            for (&pos, payload) in plan.restore.iter().zip(fetched) {
+                payloads.push(payload.ok_or_else(|| {
                     Error::Offload(format!("restore of pos {pos} with no stashed payload"))
                 })?);
             }
@@ -183,12 +190,19 @@ impl Session {
                 }
             } else {
                 let rows = gather_rows(kv, geom, slot, &runs);
-                for (i, (&pos, row)) in plan.freeze.iter().zip(rows).enumerate() {
-                    // tier admission is driven by the policy's predicted
-                    // thaw step (freeze step + Eq.3 duration)
-                    let eta = plan.freeze_thaw_eta.get(i).copied().unwrap_or(self.step + 1);
-                    self.store.stash(pos, row, self.step, eta)?;
-                }
+                // tier admission is driven by the policy's predicted
+                // thaw step (freeze step + Eq.3 duration)
+                let items: Vec<(usize, Vec<f32>, u64)> = plan
+                    .freeze
+                    .iter()
+                    .zip(rows)
+                    .enumerate()
+                    .map(|(i, (&pos, row))| {
+                        let eta = plan.freeze_thaw_eta.get(i).copied().unwrap_or(self.step + 1);
+                        (pos, row, eta)
+                    })
+                    .collect();
+                self.store.stash_batch(items, self.step)?;
             }
             zero_rows(kv, geom, slot, &runs);
             for &pos in &plan.freeze {

@@ -45,7 +45,12 @@
 //! residency *policy*, and every per-step decision is answered by the
 //! [`ThawScheduler`]'s eta index instead of a full-map scan —
 //! equivalence with the brute-force scan is property-tested by the
-//! scheduler oracle in `tests/prop_offload.rs`.
+//! scheduler oracle in `tests/prop_offload.rs`. Above the store,
+//! [`ShardedStore`] (`sharded` module) partitions sequence positions
+//! across N independent stores on a persistent worker pool, so one
+//! session's restore burst executes per-shard in parallel; it is the
+//! handle `Session`/`BatchEngine` actually hold (`shards = 1`
+//! degenerates to the single-store behavior).
 //!
 //! References: FreeKV (arXiv 2505.13109) for speculative double-
 //! buffered retrieval; KVComp (arXiv 2509.00579) for lossy compression
@@ -56,6 +61,7 @@ pub mod cold;
 pub mod hot;
 pub mod quant;
 pub mod sched;
+pub mod sharded;
 pub mod spill;
 pub mod store;
 pub mod tier;
@@ -64,6 +70,7 @@ pub use cold::ColdTier;
 pub use hot::HotTier;
 pub use quant::{dequantize, dequantize_into, quantize, QuantRow};
 pub use sched::{SchedClass, ThawScheduler};
+pub use sharded::{ShardedStore, MAX_SHARDS};
 pub use spill::{SpillFile, SpillTier};
 pub use store::TieredStore;
 pub use tier::{RowPayload, Tier};
@@ -96,6 +103,18 @@ pub struct OffloadSummary {
     /// contiguous spans those restored rows coalesced into — spans <<
     /// rows is the batching win
     pub restore_batch_spans: u64,
+    /// shard count of the store behind this summary (1 = unsharded)
+    pub shards: u64,
+    /// most shards engaged by a single restore burst — > 1 means
+    /// restores actually executed per-shard in parallel
+    pub restore_parallelism_max: u64,
+    /// restore bursts where one shard carried at least twice the even
+    /// share (partition scheme fighting the access pattern)
+    pub shard_imbalance: u64,
+    /// resident rows on the emptiest shard (imbalance gauge floor)
+    pub shard_rows_min: u64,
+    /// resident rows on the fullest shard (imbalance gauge ceiling)
+    pub shard_rows_max: u64,
 }
 
 impl OffloadSummary {

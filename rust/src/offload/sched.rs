@@ -117,6 +117,16 @@ impl ThawScheduler {
         out
     }
 
+    /// Whether `overdue_hot(limit)` would return anything — an
+    /// allocation-free existence probe so per-step sweeps can skip the
+    /// full walk (and the sharded facade can skip worker dispatch)
+    /// when nothing is due.
+    pub fn has_overdue_hot(&self, limit: u64) -> bool {
+        let lo = Bound::Excluded((limit, usize::MAX));
+        self.hot.range((lo, Bound::Unbounded)).next().is_some()
+            || self.staged.range((lo, Bound::Unbounded)).next().is_some()
+    }
+
     /// Rows awaiting staging (cold + spill) — the scheduler's queue
     /// depth gauge.
     pub fn queued_frozen(&self) -> usize {
@@ -173,6 +183,9 @@ mod tests {
         over.sort_unstable();
         // eta == limit is NOT overdue
         assert_eq!(over, vec![(11, 1), (12, 2)]);
+        // the existence probe agrees with the full walk
+        assert!(s.has_overdue_hot(10));
+        assert!(!s.has_overdue_hot(12));
     }
 
     #[test]

@@ -1,0 +1,796 @@
+//! Position-sharded tiered storage: N independent [`TieredStore`]
+//! shards behind a facade that keeps the engine's single-store API.
+//!
+//! The paper's soft freeze keeps every frozen token recoverable, so an
+//! entropy-triggered recovery late in a long session can demand a
+//! large restore burst inside one decode step — the retrieval
+//! bottleneck FreeKV (arXiv 2505.13109) attacks with parallelized KV
+//! recall. Here the burst parallelizes across shards:
+//!
+//! ```text
+//!                    take_batch(sorted positions)
+//!                               │
+//!              coalesce_runs ──► split_runs (shard boundaries)
+//!                               │
+//!        ┌──────────────────────┼──────────────────────┐
+//!        ▼                      ▼                      ▼
+//!   worker 0               worker 1               worker N-1
+//!   TieredStore shard      TieredStore shard      TieredStore shard
+//!   (own eta scheduler,    (own tiers + budget    (own spill file)
+//!    1/N budget slice)      slice)
+//!        └──────────────────────┼──────────────────────┘
+//!                               ▼
+//!                join (input order restored) -> decode step
+//! ```
+//!
+//! * **Partitioning** is positional ([`ShardPartition`]): `Hash`
+//!   (`pos % n`) spreads any burst across all shards; `Range`
+//!   (block-cyclic over `block_rows` chunks) keeps span copies
+//!   shard-contiguous. Plans already carry sorted position runs, so
+//!   the shard split is a run split (`engine::layout::split_runs`).
+//! * **Budgets**: each shard gets a `OffloadConfig::partitioned`
+//!   slice of the per-tier byte budgets (remainder bytes spread across
+//!   the leading shards; a hot slice below one row is rejected here,
+//!   where the row size is known).
+//! * **Execution**: a small process-wide persistent worker pool (std
+//!   threads + channels, matching the coordinator architecture —
+//!   tokio is unavailable offline), shared by every store so request
+//!   churn never spawns threads. Shard stores are *moved* into job
+//!   messages and handed back on a per-burst reply channel, so between
+//!   bursts the facade answers every query without synchronization.
+//!   `on_step`, `stage_upcoming`, and budget eviction (inside each
+//!   shard's `stash`/`on_step`) fan out the same way.
+//! * **Telemetry**: shards engaged per restore burst
+//!   ([`ShardedStore::restore_parallelism`]), a burst-imbalance
+//!   counter, and per-shard occupancy gauges, all surfaced through
+//!   [`OffloadSummary`] and the server JSON.
+//!
+//! `shards = 1` degenerates to exactly the single-store behavior (no
+//! worker pool, every call inline) — property-tested against an
+//! unsharded `TieredStore` oracle in `tests/prop_offload.rs`.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::{OffloadConfig, ShardPartition};
+use crate::engine::layout::{coalesce_runs, split_runs};
+use crate::error::{Error, Result};
+use crate::metrics::{CountHistogram, RestoreLatency, TierKind, TierOccupancy};
+use crate::offload::store::TieredStore;
+use crate::offload::OffloadSummary;
+
+/// Upper bound on the shard count (each shard may pin a worker thread
+/// and a spill file; the CLI rejects larger `--shards` values).
+pub const MAX_SHARDS: usize = 64;
+
+/// One storage operation executed on a single shard, either inline or
+/// on a pool worker. Variants mirror the `TieredStore` calls the
+/// engine batches per step.
+enum ShardOp {
+    /// `(pos, row, thaw_eta)` triples stashed at `step`.
+    Stash { items: Vec<(usize, Vec<f32>, u64)>, step: u64 },
+    Take(Vec<usize>),
+    Stage(Vec<(usize, u64)>),
+    StageUpcoming { now: u64, horizon: u64, max_rows: usize },
+    OnStep(u64),
+    Drain,
+}
+
+enum ShardOut {
+    Unit,
+    Rows(Vec<(usize, Option<Vec<f32>>)>),
+    Staged(usize),
+    Drained(Vec<(usize, Vec<f32>)>),
+}
+
+/// The single execution path for both the inline (n = 1 / one engaged
+/// shard) and worker-pool branches, so they cannot drift.
+fn exec(store: &mut TieredStore, op: ShardOp) -> Result<ShardOut> {
+    match op {
+        ShardOp::Stash { items, step } => {
+            for (pos, row, eta) in items {
+                store.stash(pos, row, step, eta)?;
+            }
+            Ok(ShardOut::Unit)
+        }
+        ShardOp::Take(positions) => {
+            let mut rows = Vec::with_capacity(positions.len());
+            for pos in positions {
+                rows.push((pos, store.take(pos)?));
+            }
+            Ok(ShardOut::Rows(rows))
+        }
+        ShardOp::Stage(hints) => Ok(ShardOut::Staged(store.stage(&hints)?)),
+        ShardOp::StageUpcoming { now, horizon, max_rows } => {
+            Ok(ShardOut::Staged(store.stage_upcoming(now, horizon, max_rows)?))
+        }
+        ShardOp::OnStep(now) => {
+            store.on_step(now)?;
+            Ok(ShardOut::Unit)
+        }
+        ShardOp::Drain => Ok(ShardOut::Drained(store.drain_all()?)),
+    }
+}
+
+struct Job {
+    shard: usize,
+    store: TieredStore,
+    op: ShardOp,
+    /// Per-burst reply channel: each `fan_out` call joins only its own
+    /// responses, so concurrent sessions share one pool safely.
+    reply: Sender<Done>,
+}
+
+struct Done {
+    shard: usize,
+    /// `None` when the op panicked: the store's invariants can no
+    /// longer be trusted, so the shard is marked lost instead of being
+    /// reinstalled in a corrupt state.
+    store: Option<TieredStore>,
+    out: Result<ShardOut>,
+}
+
+/// Process-wide persistent worker pool, shared by every `ShardedStore`
+/// (spawning per session would churn N OS threads on each request
+/// admission/retirement). Workers own nothing between bursts — each
+/// job carries its shard's store by value and hands it back on the
+/// job's reply channel. `exec` runs under `catch_unwind`, so a buggy
+/// op can never strand a burst: the worker always replies (with the
+/// shard marked lost on panic) and survives to serve the next job.
+struct WorkerPool {
+    /// Mutex-wrapped for `Sync` on the crate's 1.70 MSRV (`Sender`
+    /// itself is only `Sync` from Rust 1.72); bursts lock once to
+    /// clone a handle, never across sends.
+    jobs: Mutex<Sender<Job>>,
+}
+
+fn worker_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, MAX_SHARDS);
+        let (jobs, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        for w in 0..workers {
+            let rx = Arc::clone(&job_rx);
+            // thread spawn failure here is unrecoverable setup, and the
+            // pool is created once per process: propagate the panic
+            std::thread::Builder::new()
+                .name(format!("asrkf-shard-{w}"))
+                .spawn(move || loop {
+                    // hold the queue lock only for the dequeue, never
+                    // across the storage work
+                    let job = match rx.lock() {
+                        Ok(guard) => match guard.recv() {
+                            Ok(j) => j,
+                            Err(_) => return, // process shutdown
+                        },
+                        Err(_) => return,
+                    };
+                    let Job { shard, mut store, op, reply } = job;
+                    let done = match catch_unwind(AssertUnwindSafe(|| exec(&mut store, op))) {
+                        Ok(out) => Done { shard, store: Some(store), out },
+                        Err(_) => Done {
+                            shard,
+                            store: None,
+                            out: Err(Error::Offload(format!(
+                                "shard {shard} op panicked on a pool worker"
+                            ))),
+                        },
+                    };
+                    // a receiver gone before the reply means the burst
+                    // already failed; drop the result and keep serving
+                    let _ = reply.send(done);
+                })
+                .expect("failed to spawn shard worker thread");
+        }
+        WorkerPool { jobs: Mutex::new(jobs) }
+    })
+}
+
+/// N independent `TieredStore` shards behind the single-store API the
+/// engine already speaks, plus batched entry points (`take_batch`,
+/// `stash_batch`) that execute per-shard slices in parallel.
+pub struct ShardedStore {
+    cfg: OffloadConfig,
+    n: usize,
+    partition: ShardPartition,
+    /// `Range` partition chunk width (== `cfg.block_rows`).
+    chunk: usize,
+    /// `None` only transiently while a shard is out with a worker, or
+    /// permanently if that shard's op panicked mid-burst (then every
+    /// touch of the shard reports `Error::Offload` instead of
+    /// panicking).
+    shards: Vec<Option<TieredStore>>,
+    /// Shards engaged per restore burst — `max() > 1` is restore
+    /// parallelism actually happening.
+    pub restore_parallelism: CountHistogram,
+    /// Restore bursts where one shard carried at least twice the even
+    /// share (`rows / n`) — sustained growth means the partition
+    /// scheme fights the access pattern.
+    pub shard_imbalance: u64,
+}
+
+impl std::fmt::Debug for ShardedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedStore")
+            .field("shards", &self.n)
+            .field("partition", &self.partition)
+            .field("rows", &self.len())
+            .finish()
+    }
+}
+
+impl ShardedStore {
+    /// Build `cfg.shards` shards, each with a `partitioned` slice of
+    /// the byte budgets. Rejects configurations whose per-shard hot
+    /// budget cannot hold a single row (the slice would demote every
+    /// stash instantly); the `quantize_cold = false` escape hatch is
+    /// exempt since budgets are advisory there.
+    pub fn new(row_floats: usize, cfg: OffloadConfig) -> Result<ShardedStore> {
+        let n = cfg.shards.clamp(1, MAX_SHARDS);
+        let row_bytes = row_floats * std::mem::size_of::<f32>();
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let scfg = cfg.partitioned(n, i);
+            if scfg.quantize_cold && scfg.hot_budget_bytes < row_bytes {
+                return Err(Error::Offload(format!(
+                    "hot budget {} B splits to {} B for shard {i}/{n} — below one {row_bytes}-B \
+                     row; raise the hot budget or lower the shard count",
+                    cfg.hot_budget_bytes, scfg.hot_budget_bytes
+                )));
+            }
+            shards.push(Some(TieredStore::new(row_floats, scfg)));
+        }
+        if n > 1 {
+            worker_pool(); // warm the process-wide pool off the hot path
+        }
+        Ok(ShardedStore {
+            n,
+            partition: cfg.shard_partition,
+            chunk: cfg.block_rows.max(1),
+            shards,
+            cfg,
+            restore_parallelism: CountHistogram::default(),
+            shard_imbalance: 0,
+        })
+    }
+
+    /// The combined (unsplit) configuration — per-step knobs like
+    /// `prefetch_ahead` and `stage_pressure` are shard-invariant.
+    pub fn config(&self) -> &OffloadConfig {
+        &self.cfg
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.n
+    }
+
+    /// The shard owning `pos` under the configured partition.
+    pub fn shard_of(&self, pos: usize) -> usize {
+        match self.partition {
+            ShardPartition::Hash => pos % self.n,
+            ShardPartition::Range => (pos / self.chunk) % self.n,
+        }
+    }
+
+    fn shard_mut(&mut self, idx: usize) -> Result<&mut TieredStore> {
+        self.shards[idx]
+            .as_mut()
+            .ok_or_else(|| Error::Offload(format!("shard {idx} lost to a worker failure")))
+    }
+
+    fn live_shards(&self) -> impl Iterator<Item = &TieredStore> {
+        self.shards.iter().flatten()
+    }
+
+    /// Execute one op per engaged shard — inline when unsharded or
+    /// only one shard has work, otherwise fanned out to the shared
+    /// worker pool and joined before returning. The first shard error
+    /// wins, but only after every returned store has been reinstalled.
+    fn fan_out(&mut self, ops: Vec<(usize, ShardOp)>) -> Result<Vec<(usize, ShardOut)>> {
+        if ops.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.n == 1 || ops.len() == 1 {
+            let mut outs = Vec::with_capacity(ops.len());
+            for (idx, op) in ops {
+                let out = exec(self.shard_mut(idx)?, op)?;
+                outs.push((idx, out));
+            }
+            return Ok(outs);
+        }
+        let jobs = match worker_pool().jobs.lock() {
+            Ok(guard) => guard.clone(),
+            Err(_) => return Err(Error::Offload("shard worker pool mutex poisoned".into())),
+        };
+        let (reply_tx, reply_rx) = channel::<Done>();
+        let mut in_flight = 0usize;
+        for (idx, op) in ops {
+            let store = self.shards[idx]
+                .take()
+                .ok_or_else(|| Error::Offload(format!("shard {idx} lost to a worker failure")))?;
+            let job = Job { shard: idx, store, op, reply: reply_tx.clone() };
+            if let Err(std::sync::mpsc::SendError(job)) = jobs.send(job) {
+                self.shards[job.shard] = Some(job.store);
+                return Err(Error::Offload("shard worker pool is down".into()));
+            }
+            in_flight += 1;
+        }
+        // drop the local sender so the join loop can only block on
+        // workers that actually hold one of this burst's jobs
+        drop(reply_tx);
+        let mut outs = Vec::with_capacity(in_flight);
+        let mut first_err = None;
+        for _ in 0..in_flight {
+            match reply_rx.recv() {
+                Ok(Done { shard, store, out }) => {
+                    // a panicked op hands back no store: the shard slot
+                    // stays None and reports on every subsequent touch
+                    self.shards[shard] = store;
+                    match out {
+                        Ok(o) => outs.push((shard, o)),
+                        Err(e) => first_err = first_err.or(Some(e)),
+                    }
+                }
+                Err(_) => return Err(Error::Offload("shard worker died mid-burst".into())),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(outs),
+        }
+    }
+
+    /// Group `(key_of(item) -> shard)` items into per-shard op inputs.
+    fn group_by_shard<T>(
+        &self,
+        items: impl IntoIterator<Item = T>,
+        pos_of: impl Fn(&T) -> usize,
+    ) -> Vec<Vec<T>> {
+        let mut per: Vec<Vec<T>> = (0..self.n).map(|_| Vec::new()).collect();
+        for it in items {
+            per[self.shard_of(pos_of(&it))].push(it);
+        }
+        per
+    }
+
+    // --- single-row API (unchanged semantics, routed to one shard) ---
+
+    pub fn stash(&mut self, pos: usize, row: Vec<f32>, step: u64, thaw_eta: u64) -> Result<()> {
+        let idx = self.shard_of(pos);
+        self.shard_mut(idx)?.stash(pos, row, step, thaw_eta)
+    }
+
+    pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
+        let idx = self.shard_of(pos);
+        self.shard_mut(idx)?.take(pos)
+    }
+
+    pub fn drop_row(&mut self, pos: usize) -> Result<()> {
+        let idx = self.shard_of(pos);
+        self.shard_mut(idx)?.drop_row(pos)
+    }
+
+    // --- batched API (the parallel data path) ---
+
+    /// Stash a freeze batch: items are grouped by shard and executed in
+    /// parallel (each shard applies its own budget eviction inside).
+    pub fn stash_batch(&mut self, items: Vec<(usize, Vec<f32>, u64)>, step: u64) -> Result<()> {
+        let per = self.group_by_shard(items, |it| it.0);
+        let ops: Vec<(usize, ShardOp)> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(i, v)| (i, ShardOp::Stash { items: v, step }))
+            .collect();
+        self.fan_out(ops)?;
+        Ok(())
+    }
+
+    /// Restore a batch: split the positions' coalesced runs at shard
+    /// boundaries, take each slice on its shard in parallel, and return
+    /// payloads in input order (`None` where nothing was stashed).
+    /// `positions` must be strictly ascending (a normalized plan list).
+    pub fn take_batch(&mut self, positions: &[usize]) -> Result<Vec<Option<Vec<f32>>>> {
+        if positions.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.n == 1 {
+            // unsharded fast path: no run split, no reassembly map
+            self.restore_parallelism.record(1);
+            let store = self.shard_mut(0)?;
+            let mut out = Vec::with_capacity(positions.len());
+            for &pos in positions {
+                out.push(store.take(pos)?);
+            }
+            return Ok(out);
+        }
+        let runs = coalesce_runs(positions);
+        let per = split_runs(&runs, self.n, |p| self.shard_of(p));
+        let engaged = per.iter().filter(|v| !v.is_empty()).count();
+        self.restore_parallelism.record(engaged as u64);
+        if self.n > 1 && positions.len() >= 2 {
+            let max_share = per.iter().map(Vec::len).max().unwrap_or(0);
+            // imbalanced: one shard carried at least twice the even
+            // share len/n (ratio form so n = 2 can fire: an all-on-one
+            // burst is exactly 2x the even share, never more). The
+            // max_share >= 2 guard keeps single-row shares of tiny
+            // bursts from counting.
+            if max_share >= 2 && max_share * self.n >= 2 * positions.len() {
+                self.shard_imbalance += 1;
+            }
+        }
+        let ops: Vec<(usize, ShardOp)> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(i, v)| (i, ShardOp::Take(v)))
+            .collect();
+        let outs = self.fan_out(ops)?;
+        let mut by_pos: HashMap<usize, Option<Vec<f32>>> = HashMap::with_capacity(positions.len());
+        for (_, out) in outs {
+            if let ShardOut::Rows(rows) = out {
+                for (pos, payload) in rows {
+                    by_pos.insert(pos, payload);
+                }
+            }
+        }
+        Ok(positions.iter().map(|p| by_pos.remove(p).flatten()).collect())
+    }
+
+    /// Stage specific prefetch hints; fans out when hints span shards.
+    pub fn stage(&mut self, hints: &[(usize, u64)]) -> Result<usize> {
+        let per = self.group_by_shard(hints.iter().copied(), |h| h.0);
+        let ops: Vec<(usize, ShardOp)> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(i, v)| (i, ShardOp::Stage(v)))
+            .collect();
+        let outs = self.fan_out(ops)?;
+        Ok(outs
+            .into_iter()
+            .map(|(_, o)| if let ShardOut::Staged(k) = o { k } else { 0 })
+            .sum())
+    }
+
+    /// Entropy-pressure staging sweep across all shards. The global row
+    /// cap is split as `ceil(max_rows / n)` per shard: each shard
+    /// promotes its own soonest-first slice, so up to `n - 1` extra
+    /// rows may stage versus an unsharded soonest-first pick — an
+    /// accepted approximation (staging is speculative work).
+    pub fn stage_upcoming(&mut self, now: u64, horizon: u64, max_rows: usize) -> Result<usize> {
+        if max_rows == 0 {
+            return Ok(0);
+        }
+        let per_cap = (max_rows + self.n - 1) / self.n;
+        let ops: Vec<(usize, ShardOp)> = (0..self.n)
+            .map(|i| (i, ShardOp::StageUpcoming { now, horizon, max_rows: per_cap }))
+            .collect();
+        let outs = self.fan_out(ops)?;
+        Ok(outs
+            .into_iter()
+            .map(|(_, o)| if let ShardOut::Staged(k) = o { k } else { 0 })
+            .sum())
+    }
+
+    /// Per-step residency sweep. Most steps demote nothing, so each
+    /// shard is probed first (`TieredStore::sweep_pending`, an O(log n)
+    /// index peek) and only shards with real demotion work — per-row
+    /// quantization — are dispatched to the pool; idle shards run the
+    /// no-op sweep inline, keeping pool round-trips off the common
+    /// per-step path.
+    pub fn on_step(&mut self, now: u64) -> Result<()> {
+        let mut ops: Vec<(usize, ShardOp)> = Vec::new();
+        for i in 0..self.n {
+            let pending = self.shards[i]
+                .as_ref()
+                .ok_or_else(|| Error::Offload(format!("shard {i} lost to a worker failure")))?
+                .sweep_pending(now);
+            if pending {
+                ops.push((i, ShardOp::OnStep(now)));
+            } else {
+                self.shard_mut(i)?.on_step(now)?;
+            }
+        }
+        self.fan_out(ops)?;
+        Ok(())
+    }
+
+    /// Drain every shard (RR emergency restore). Order across shards is
+    /// arbitrary, matching the unsharded store's hash-map drain.
+    pub fn drain_all(&mut self) -> Result<Vec<(usize, Vec<f32>)>> {
+        let ops: Vec<(usize, ShardOp)> = (0..self.n).map(|i| (i, ShardOp::Drain)).collect();
+        let outs = self.fan_out(ops)?;
+        let mut all = Vec::new();
+        for (_, out) in outs {
+            if let ShardOut::Drained(rows) = out {
+                all.extend(rows);
+            }
+        }
+        Ok(all)
+    }
+
+    // --- queries and aggregates ---
+
+    pub fn contains(&self, pos: usize) -> bool {
+        self.shards[self.shard_of(pos)]
+            .as_ref()
+            .map(|s| s.contains(pos))
+            .unwrap_or(false)
+    }
+
+    pub fn tier_of(&self, pos: usize) -> Option<(TierKind, bool)> {
+        self.shards[self.shard_of(pos)].as_ref().and_then(|s| s.tier_of(pos))
+    }
+
+    pub fn len(&self) -> usize {
+        self.live_shards().map(TieredStore::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.live_shards().map(TieredStore::bytes).sum()
+    }
+
+    pub fn positions(&self) -> impl Iterator<Item = usize> + '_ {
+        self.live_shards().flat_map(|s| s.positions())
+    }
+
+    pub fn total_stashed(&self) -> u64 {
+        self.live_shards().map(|s| s.total_stashed).sum()
+    }
+
+    pub fn total_restored(&self) -> u64 {
+        self.live_shards().map(|s| s.total_restored).sum()
+    }
+
+    pub fn total_dropped(&self) -> u64 {
+        self.live_shards().map(|s| s.total_dropped).sum()
+    }
+
+    pub fn staged_hits(&self) -> u64 {
+        self.live_shards().map(|s| s.staged_hits).sum()
+    }
+
+    pub fn staged_misses(&self) -> u64 {
+        self.live_shards().map(|s| s.staged_misses).sum()
+    }
+
+    /// Per-tier restore-latency histograms merged across shards.
+    pub fn restore_latency(&self) -> RestoreLatency {
+        let mut merged = RestoreLatency::default();
+        for s in self.live_shards() {
+            merged.merge(&s.restore_latency);
+        }
+        merged
+    }
+
+    /// Combined occupancy. Peak gauges sum the per-shard high-water
+    /// marks — an upper bound on the true concurrent peak (shards may
+    /// peak at different steps), which is the conservative direction
+    /// for a memory gauge.
+    pub fn occupancy(&self) -> TierOccupancy {
+        let mut o = TierOccupancy::default();
+        for s in self.live_shards() {
+            let so = s.occupancy();
+            o.hot_rows += so.hot_rows;
+            o.hot_bytes += so.hot_bytes;
+            o.cold_rows += so.cold_rows;
+            o.cold_bytes += so.cold_bytes;
+            o.spill_rows += so.spill_rows;
+            o.spill_bytes += so.spill_bytes;
+            o.peak_hot_bytes += so.peak_hot_bytes;
+            o.peak_cold_bytes += so.peak_cold_bytes;
+            o.peak_spill_bytes += so.peak_spill_bytes;
+            o.uncompressed_bytes += so.uncompressed_bytes;
+        }
+        o
+    }
+
+    /// Per-shard occupancy gauges, shard-indexed (lost shards report
+    /// empty) — the imbalance view behind `shard_rows_min/max`.
+    pub fn shard_occupancy(&self) -> Vec<TierOccupancy> {
+        self.shards
+            .iter()
+            .map(|s| s.as_ref().map(|s| s.occupancy()).unwrap_or_default())
+            .collect()
+    }
+
+    /// Merged counters + occupancy + sharding telemetry for responses
+    /// and bench CSVs.
+    pub fn summary(&self) -> OffloadSummary {
+        let mut s = OffloadSummary { occupancy: self.occupancy(), ..Default::default() };
+        for sh in self.live_shards() {
+            let t = sh.summary();
+            s.staged_hits += t.staged_hits;
+            s.staged_misses += t.staged_misses;
+            s.demotions_cold += t.demotions_cold;
+            s.demotions_spill += t.demotions_spill;
+            s.prefetch_promotions += t.prefetch_promotions;
+            s.restores_hot += t.restores_hot;
+            s.restores_cold += t.restores_cold;
+            s.restores_spill += t.restores_spill;
+            s.sched_depth_max = s.sched_depth_max.max(t.sched_depth_max);
+        }
+        let lat = self.restore_latency();
+        s.restore_hot_mean_us = lat.hot.mean().as_micros() as u64;
+        s.restore_cold_mean_us = lat.cold.mean().as_micros() as u64;
+        s.shards = self.n as u64;
+        s.restore_parallelism_max = self.restore_parallelism.max();
+        s.shard_imbalance = self.shard_imbalance;
+        let mut rows_min = usize::MAX;
+        let mut rows_max = 0usize;
+        for sh in &self.shards {
+            let rows = sh.as_ref().map(TieredStore::len).unwrap_or(0);
+            rows_min = rows_min.min(rows);
+            rows_max = rows_max.max(rows);
+        }
+        s.shard_rows_min = if rows_min == usize::MAX { 0 } else { rows_min as u64 };
+        s.shard_rows_max = rows_max as u64;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RF: usize = 16;
+
+    fn cfg(n: usize, partition: ShardPartition) -> OffloadConfig {
+        OffloadConfig {
+            hot_budget_bytes: 1 << 20,
+            cold_budget_bytes: 1 << 20,
+            cold_after_steps: 8,
+            block_rows: 4,
+            shards: n,
+            shard_partition: partition,
+            ..OffloadConfig::default()
+        }
+    }
+
+    fn row(v: f32) -> Vec<f32> {
+        (0..RF).map(|i| v + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn partitions_route_positions_to_expected_shards() {
+        let s = ShardedStore::new(RF, cfg(4, ShardPartition::Hash)).unwrap();
+        assert_eq!(s.shard_of(0), 0);
+        assert_eq!(s.shard_of(7), 3);
+        let r = ShardedStore::new(RF, cfg(4, ShardPartition::Range)).unwrap();
+        // block_rows = 4: positions 0..4 -> shard 0, 4..8 -> shard 1, ...
+        assert_eq!(r.shard_of(3), 0);
+        assert_eq!(r.shard_of(4), 1);
+        assert_eq!(r.shard_of(16), 0, "block-cyclic wraps");
+    }
+
+    #[test]
+    fn batched_roundtrip_crosses_shards_in_input_order() {
+        for partition in [ShardPartition::Hash, ShardPartition::Range] {
+            for n in [1usize, 2, 4] {
+                let mut s = ShardedStore::new(RF, cfg(n, partition)).unwrap();
+                let positions: Vec<usize> = (0..13).collect();
+                let items: Vec<(usize, Vec<f32>, u64)> =
+                    positions.iter().map(|&p| (p, row(p as f32), 2)).collect();
+                s.stash_batch(items, 0).unwrap();
+                assert_eq!(s.len(), 13);
+                assert_eq!(s.total_stashed(), 13);
+                let got = s.take_batch(&positions).unwrap();
+                for (i, payload) in got.iter().enumerate() {
+                    assert_eq!(payload.as_ref().unwrap(), &row(i as f32), "pos {i} (n={n})");
+                }
+                assert!(s.is_empty());
+                assert_eq!(s.total_restored(), 13);
+                if n > 1 {
+                    assert!(
+                        s.restore_parallelism.max() > 1,
+                        "13-row burst must engage multiple shards (n={n})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn take_batch_reports_absent_positions_as_none() {
+        let mut s = ShardedStore::new(RF, cfg(2, ShardPartition::Hash)).unwrap();
+        s.stash(1, row(1.0), 0, 2).unwrap();
+        let got = s.take_batch(&[0, 1, 2]).unwrap();
+        assert!(got[0].is_none());
+        assert!(got[1].is_some());
+        assert!(got[2].is_none());
+    }
+
+    #[test]
+    fn summary_aggregates_across_shards() {
+        let mut s = ShardedStore::new(RF, cfg(4, ShardPartition::Hash)).unwrap();
+        for p in 0..8 {
+            s.stash(p, row(p as f32), 0, 100).unwrap(); // all cold
+        }
+        let sum = s.summary();
+        assert_eq!(sum.shards, 4);
+        assert_eq!(sum.occupancy.cold_rows, 8);
+        assert_eq!(sum.shard_rows_min, 2);
+        assert_eq!(sum.shard_rows_max, 2);
+        // stage everything, then restore: hits counted across shards
+        assert_eq!(s.stage_upcoming(99, 8, 64).unwrap(), 8);
+        let positions: Vec<usize> = (0..8).collect();
+        let got = s.take_batch(&positions).unwrap();
+        assert!(got.iter().all(Option::is_some));
+        assert_eq!(s.summary().staged_hits, 8);
+        assert_eq!(s.summary().restore_parallelism_max, 4);
+    }
+
+    #[test]
+    fn range_partition_imbalance_is_counted() {
+        for n in [2usize, 4] {
+            let mut s = ShardedStore::new(RF, cfg(n, ShardPartition::Range)).unwrap();
+            // one chunk-local burst: positions 0..4 all live on shard 0
+            for p in 0..4 {
+                s.stash(p, row(p as f32), 0, 2).unwrap();
+            }
+            let got = s.take_batch(&[0, 1, 2, 3]).unwrap();
+            assert!(got.iter().all(Option::is_some));
+            assert_eq!(s.restore_parallelism.max(), 1);
+            assert_eq!(s.shard_imbalance, 1, "4 rows on 1 of {n} shards is imbalanced");
+        }
+        // an evenly-spread hash burst never counts
+        let mut s = ShardedStore::new(RF, cfg(2, ShardPartition::Hash)).unwrap();
+        for p in 0..4 {
+            s.stash(p, row(p as f32), 0, 2).unwrap();
+        }
+        s.take_batch(&[0, 1, 2, 3]).unwrap();
+        assert_eq!(s.shard_imbalance, 0, "2+2 across 2 shards is balanced");
+    }
+
+    #[test]
+    fn hot_budget_below_one_row_per_shard_is_rejected() {
+        let mut c = cfg(4, ShardPartition::Hash);
+        c.hot_budget_bytes = RF * 4; // one row total -> 1/4 row per shard
+        let err = ShardedStore::new(RF, c).unwrap_err();
+        assert!(format!("{err}").contains("below one"), "{err}");
+        // the escape hatch makes budgets advisory: accepted
+        let mut c2 = cfg(4, ShardPartition::Hash);
+        c2.hot_budget_bytes = RF * 4;
+        c2.quantize_cold = false;
+        assert!(ShardedStore::new(RF, c2).is_ok());
+    }
+
+    #[test]
+    fn drain_all_crosses_shards_and_conserves() {
+        let mut s = ShardedStore::new(RF, cfg(2, ShardPartition::Hash)).unwrap();
+        for p in 0..6 {
+            s.stash(p, row(p as f32), 0, if p % 2 == 0 { 2 } else { 100 }).unwrap();
+        }
+        s.drop_row(5).unwrap();
+        let mut drained = s.drain_all().unwrap();
+        drained.sort_by_key(|(p, _)| *p);
+        assert_eq!(drained.len(), 5);
+        assert_eq!(drained[0].1, row(0.0));
+        assert!(s.is_empty());
+        assert_eq!(s.total_stashed(), s.total_restored() + s.total_dropped());
+    }
+
+    #[test]
+    fn single_shard_runs_fully_inline() {
+        let mut s = ShardedStore::new(RF, cfg(1, ShardPartition::Hash)).unwrap();
+        assert_eq!(s.shard_count(), 1);
+        // the whole batched surface works without the worker pool
+        s.stash_batch(vec![(0, row(0.0), 2), (1, row(1.0), 2)], 0).unwrap();
+        s.on_step(1).unwrap();
+        let got = s.take_batch(&[0, 1]).unwrap();
+        assert!(got.iter().all(Option::is_some));
+        assert_eq!(s.restore_parallelism.max(), 1);
+        assert_eq!(s.shard_imbalance, 0, "n = 1 never counts imbalance");
+    }
+}

@@ -319,6 +319,16 @@ impl TieredStore {
         Ok(())
     }
 
+    /// Whether the next `on_step(now)` sweep would demote anything —
+    /// a cheap index probe (no allocation, no tier movement) used by
+    /// `ShardedStore` to keep idle sweeps off the worker pool.
+    pub fn sweep_pending(&self, now: u64) -> bool {
+        self.cfg.quantize_cold
+            && self
+                .sched
+                .has_overdue_hot(now.saturating_add(self.cfg.cold_after_steps))
+    }
+
     /// Take the payload for a restore (frozen -> active). `Ok(None)`
     /// means nothing was stashed for `pos`; spill I/O failures error.
     pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
@@ -449,8 +459,12 @@ impl TieredStore {
             restore_hot_mean_us: mean_us(&self.restore_latency.hot),
             restore_cold_mean_us: mean_us(&self.restore_latency.cold),
             sched_depth_max: self.sched_depth.max(),
-            restore_batch_rows: 0,
-            restore_batch_spans: 0,
+            // plan batching is engine-side; sharding telemetry is
+            // facade-side (`ShardedStore::summary` overlays both)
+            shards: 1,
+            shard_rows_min: self.entries.len() as u64,
+            shard_rows_max: self.entries.len() as u64,
+            ..super::OffloadSummary::default()
         }
     }
 }
@@ -581,7 +595,9 @@ mod tests {
         assert_eq!(s.occupancy().hot_rows, 1);
         // the predicted thaw (100) is still beyond now + cold_after (8):
         // the speculation was a false alarm, the row goes back cold
+        assert!(s.sweep_pending(10), "stale staged row must flag the sweep probe");
         s.on_step(10).unwrap();
+        assert!(!s.sweep_pending(10), "probe must clear once the sweep ran");
         assert_eq!(s.occupancy().hot_rows, 0);
         assert_eq!(s.occupancy().cold_rows, 1);
         // a row staged near its thaw stays hot

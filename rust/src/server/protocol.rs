@@ -45,6 +45,9 @@ pub fn response_line(resp: &GenResponse) -> String {
             ("staged_hits", Json::num(resp.offload.staged_hits as f64)),
             ("restore_rows", Json::num(resp.offload.restore_batch_rows as f64)),
             ("restore_spans", Json::num(resp.offload.restore_batch_spans as f64)),
+            ("shards", Json::num(resp.offload.shards as f64)),
+            ("restore_par_max", Json::num(resp.offload.restore_parallelism_max as f64)),
+            ("shard_imbalance", Json::num(resp.offload.shard_imbalance as f64)),
         ]),
     };
     let mut s = String::new();
@@ -109,6 +112,10 @@ mod tests {
         assert_eq!(v.get("id").as_usize(), Some(7));
         assert_eq!(v.get("text").as_str(), Some("hi"));
         assert_eq!(v.get("compression").as_f64(), Some(0.25));
+        // sharding telemetry rides along on every response
+        assert_eq!(v.get("shards").as_usize(), Some(0)); // default summary
+        assert_eq!(v.get("restore_par_max").as_usize(), Some(0));
+        assert_eq!(v.get("shard_imbalance").as_usize(), Some(0));
     }
 
     #[test]

@@ -66,6 +66,23 @@ impl Args {
         }
     }
 
+    /// Like `usize_or`, but rejects values outside `[lo, hi_incl]`
+    /// with a contextual message (bounded knobs like `--shards`, whose
+    /// value sizes a persistent worker pool).
+    pub fn usize_in(
+        &self,
+        key: &str,
+        default: usize,
+        lo: usize,
+        hi_incl: usize,
+    ) -> Result<usize, String> {
+        let v = self.usize_or(key, default)?;
+        if v < lo || v > hi_incl {
+            return Err(format!("--{key}: {v} outside the supported range [{lo}, {hi_incl}]"));
+        }
+        Ok(v)
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
         match self.str_opt(key) {
             None => Ok(default),
@@ -118,6 +135,17 @@ mod tests {
     fn invalid_number_is_error() {
         let a = parse(&["gen", "--steps", "abc"]);
         assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn bounded_getter_enforces_range() {
+        let a = parse(&["serve", "--shards", "4"]);
+        assert_eq!(a.usize_in("shards", 1, 1, 64).unwrap(), 4);
+        assert!(a.usize_in("shards", 1, 8, 64).is_err());
+        // default is returned unchecked-parse but still range-checked
+        assert_eq!(a.usize_in("absent", 2, 1, 64).unwrap(), 2);
+        let zero = parse(&["serve", "--shards", "0"]);
+        assert!(zero.usize_in("shards", 1, 1, 64).is_err());
     }
 
     #[test]

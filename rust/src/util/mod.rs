@@ -8,3 +8,6 @@ pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod tempdir;
+
+pub use tempdir::TempDir;

@@ -1,0 +1,60 @@
+//! Minimal RAII temporary directory (the `tempfile` crate is
+//! unavailable offline). Each instance owns a process- and
+//! instance-unique directory under the system temp root and removes it
+//! recursively on drop, so parallel tests (and parallel CI jobs on a
+//! shared runner) never collide on spill files.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `<tmp>/asrkf-<label>-<pid>-<seq>` (label keeps stray
+    /// leftovers attributable to the test that leaked them).
+    pub fn new(label: &str) -> std::io::Result<TempDir> {
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("asrkf-{label}-{}-{id}", std::process::id()));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The path as an owned `String` (`OffloadConfig::spill_dir` shape).
+    pub fn path_str(&self) -> String {
+        self.path.to_string_lossy().into_owned()
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_unique_dirs_and_cleans_up() {
+        let a = TempDir::new("utest").unwrap();
+        let b = TempDir::new("utest").unwrap();
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir());
+        std::fs::write(a.path().join("f.bin"), b"x").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists(), "drop must remove contents recursively");
+        assert!(b.path().is_dir(), "sibling dir untouched");
+    }
+}

@@ -438,6 +438,168 @@ fn prop_eta_index_matches_full_scan_oracle() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Sharding oracle: a ShardedStore must be an invisible storage-layout
+// decision. With ample byte budgets, residency is a per-row rule
+// (admission horizon, staging, the on_step sweep), so a randomized
+// stash/take/stage/step trace must leave every row in the same tier
+// with the same staged flag — and the same conservation totals — as a
+// single TieredStore holding the combined budget. Budget *eviction* is
+// shard-local by design (each shard defends its own slice), so the
+// equivalence domain is the eviction-free regime.
+
+#[test]
+fn prop_sharded_matches_unsharded_oracle() {
+    use asrkf::config::ShardPartition;
+    use asrkf::offload::ShardedStore;
+    prop_check(12, |g| {
+        for &n in &[1usize, 2, 4] {
+            for &partition in &[ShardPartition::Hash, ShardPartition::Range] {
+                let cfg = OffloadConfig {
+                    hot_budget_bytes: 1 << 24,
+                    cold_budget_bytes: 1 << 24,
+                    cold_after_steps: g.usize(0, 12) as u64,
+                    quantize_cold: g.bool(0.8),
+                    spill_dir: None,
+                    block_rows: g.usize(1, 8),
+                    shards: n,
+                    shard_partition: partition,
+                    ..OffloadConfig::default()
+                };
+                let mut single_cfg = cfg.clone();
+                single_cfg.shards = 1;
+                let mut sharded =
+                    ShardedStore::new(RF, cfg).map_err(|e| format!("sharded new: {e}"))?;
+                let mut single = TieredStore::new(RF, single_cfg);
+                let mut resident: Vec<usize> = Vec::new();
+                let mut next_pos = 0usize;
+
+                for step in 0..100u64 {
+                    match g.usize(0, 9) {
+                        // stash a batch of fresh rows (weighted heaviest)
+                        0..=3 => {
+                            let k = g.usize(1, 4);
+                            let mut items: Vec<(usize, Vec<f32>, u64)> = Vec::with_capacity(k);
+                            for _ in 0..k {
+                                let eta = step + g.usize(0, 30) as u64;
+                                items.push((next_pos, random_row(g), eta));
+                                resident.push(next_pos);
+                                next_pos += 1;
+                            }
+                            for (pos, row, eta) in &items {
+                                single
+                                    .stash(*pos, row.clone(), step, *eta)
+                                    .map_err(|e| format!("single stash: {e}"))?;
+                            }
+                            sharded
+                                .stash_batch(items, step)
+                                .map_err(|e| format!("sharded stash: {e}"))?;
+                        }
+                        // restore a sorted burst (parallel path on the
+                        // sharded side, one take() per row on the oracle)
+                        4..=5 => {
+                            let mut burst: Vec<usize> =
+                                resident.iter().copied().filter(|_| g.bool(0.4)).collect();
+                            burst.sort_unstable();
+                            if burst.is_empty() {
+                                continue;
+                            }
+                            resident.retain(|p| !burst.contains(p));
+                            let got = sharded
+                                .take_batch(&burst)
+                                .map_err(|e| format!("take_batch: {e}"))?;
+                            for (&pos, payload) in burst.iter().zip(got) {
+                                let want = single
+                                    .take(pos)
+                                    .map_err(|e| format!("single take: {e}"))?;
+                                prop_assert!(
+                                    payload == want,
+                                    "restored payload diverged at pos {pos} (n={n}, {partition:?})"
+                                );
+                            }
+                        }
+                        // drop a random resident row
+                        6 => {
+                            if !resident.is_empty() {
+                                let pos = resident.swap_remove(g.usize(0, resident.len() - 1));
+                                sharded.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                                single.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                            }
+                        }
+                        // prefetch hints (also refresh thaw predictions)
+                        7 => {
+                            let mut hints = Vec::new();
+                            for _ in 0..g.usize(0, 3) {
+                                if resident.is_empty() {
+                                    break;
+                                }
+                                let pos = resident[g.usize(0, resident.len() - 1)];
+                                hints.push((pos, step + g.usize(0, 30) as u64));
+                            }
+                            let a = sharded.stage(&hints).map_err(|e| format!("stage: {e}"))?;
+                            let b = single.stage(&hints).map_err(|e| format!("stage: {e}"))?;
+                            prop_assert!(a == b, "stage promoted {a} vs {b} rows");
+                        }
+                        // pressure sweep: an uncapped row budget keeps
+                        // the per-shard cap split out of the picture
+                        8 => {
+                            let horizon = g.usize(0, 16) as u64;
+                            let a = sharded
+                                .stage_upcoming(step, horizon, 10_000)
+                                .map_err(|e| format!("stage_upcoming: {e}"))?;
+                            let b = single
+                                .stage_upcoming(step, horizon, 10_000)
+                                .map_err(|e| format!("stage_upcoming: {e}"))?;
+                            prop_assert!(a == b, "stage_upcoming promoted {a} vs {b} rows");
+                        }
+                        // residency sweep
+                        _ => {
+                            sharded.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                            single.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                        }
+                    }
+
+                    prop_assert!(
+                        sharded.len() == single.len() && sharded.len() == resident.len(),
+                        "resident mismatch at step {step}: sharded {} vs single {} vs model {}",
+                        sharded.len(),
+                        single.len(),
+                        resident.len()
+                    );
+                    for &pos in &resident {
+                        let a = sharded.tier_of(pos);
+                        let b = single.tier_of(pos);
+                        prop_assert!(
+                            a == b,
+                            "step {step} pos {pos} (n={n}, {partition:?}): sharded {a:?} vs single {b:?}"
+                        );
+                    }
+                    prop_assert!(
+                        sharded.total_stashed() == single.total_stashed
+                            && sharded.total_restored() == single.total_restored
+                            && sharded.total_dropped() == single.total_dropped,
+                        "lifetime counters diverged at step {step}"
+                    );
+                }
+
+                // conservation on both sides, then drain to empty
+                prop_assert!(
+                    sharded.total_stashed()
+                        == sharded.total_restored() + sharded.total_dropped() + sharded.len() as u64,
+                    "sharded conservation violated"
+                );
+                let mut a = sharded.drain_all().map_err(|e| format!("drain: {e}"))?;
+                let mut b = single.drain_all().map_err(|e| format!("drain: {e}"))?;
+                a.sort_by_key(|(p, _)| *p);
+                b.sort_by_key(|(p, _)| *p);
+                prop_assert!(a == b, "drained contents diverged (n={n}, {partition:?})");
+                prop_assert!(sharded.is_empty() && single.is_empty(), "drain left residents");
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_cold_tier_smaller_than_uncompressed() {
     prop_check(30, |g| {

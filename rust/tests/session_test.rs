@@ -63,7 +63,8 @@ impl Harness {
         }
         let policy = asrkf::baselines::make_policy(policy, &cfg.freeze).unwrap();
         let tokens: Vec<i32> = (0..prompt_len as i32).map(|i| 65 + (i % 26)).collect();
-        let mut session = Session::new(1, tokens, max_new, policy, cfg, S, spec().kv_row_floats);
+        let mut session =
+            Session::new(1, tokens, max_new, policy, cfg, S, spec().kv_row_floats).unwrap();
         session.seed_prefill(vec![0.0f32; 256], &vec![1.0; prompt_len], prompt_len);
         Harness { session, kv, geom }
     }
@@ -213,7 +214,7 @@ fn cold_rows_restore_via_staging_never_inline() {
     let mut h = Harness::new(&cfg, 24, 250, "asrkf");
     for _ in 0..100 {
         h.step(&stale, flat_logits());
-        if h.session.store.staged_hits > 0 || h.session.is_done() {
+        if h.session.store.staged_hits() > 0 || h.session.is_done() {
             break;
         }
     }
@@ -262,6 +263,35 @@ fn full_kv_session_never_freezes_anything() {
 }
 
 #[test]
+fn sharded_session_matches_unsharded_flow() {
+    // identical trace through a 1-shard and a 4-shard session: sharding
+    // is a storage-layout decision and must not change tokens, masks,
+    // KV contents, or conservation totals
+    let mut sharded_cfg = cfg();
+    sharded_cfg.offload.shards = 4;
+    let stale: Vec<usize> = (2..16).collect();
+    let mut a = Harness::new(&cfg(), 24, 60, "asrkf");
+    let mut b = Harness::new(&sharded_cfg, 24, 60, "asrkf");
+    for _ in 0..60 {
+        a.step(&stale, flat_logits());
+        b.step(&stale, flat_logits());
+    }
+    assert_eq!(a.session.tokens, b.session.tokens, "sharding changed sampling");
+    assert_eq!(a.session.mask, b.session.mask, "sharding changed the activity mask");
+    assert_eq!(a.kv, b.kv, "sharding changed KV contents");
+    assert_eq!(a.session.store.len(), b.session.store.len());
+    assert_eq!(a.session.store.total_restored(), b.session.store.total_restored());
+    let sum = b.session.store.summary();
+    assert_eq!(sum.shards, 4);
+    if b.session.batch.restore_batch.max() >= 2 {
+        assert!(
+            sum.restore_parallelism_max > 1,
+            "a multi-row restore burst never engaged a second shard: {sum:?}"
+        );
+    }
+}
+
+#[test]
 fn h2o_drops_payloads_permanently() {
     let cfg = cfg();
     let mut h = Harness::new(&cfg, 60, 30, "h2o");
@@ -272,7 +302,7 @@ fn h2o_drops_payloads_permanently() {
     assert!(frozen > 0, "h2o should have evicted under budget pressure");
     // payloads were dropped, not stashed
     assert_eq!(h.session.store.len(), 0);
-    assert_eq!(h.session.store.total_dropped as usize, 0); // never stashed at all
+    assert_eq!(h.session.store.total_dropped(), 0); // never stashed at all
     for pos in h.session.policy.frozen_positions() {
         let row = gather_row(&h.kv, &h.geom, 0, pos);
         assert!(row.iter().all(|&v| v == 0.0), "evicted pos {pos} not zeroed");

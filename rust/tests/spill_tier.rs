@@ -1,0 +1,126 @@
+//! Spill-tier integration tests, CI-runnable without artifacts: the
+//! file-backed tier runs under a throwaway `util::TempDir` (the
+//! `--spill-dir` configuration path), so `SpillFile` I/O and the
+//! stale-handle `Error::Offload` paths are exercised on every CI run —
+//! not just the in-memory hot/cold tiers.
+
+use asrkf::config::{OffloadConfig, ShardPartition};
+use asrkf::error::Error;
+use asrkf::metrics::TierKind;
+use asrkf::offload::{quantize, RowPayload, ShardedStore, SpillFile, SpillTier, Tier, TieredStore};
+use asrkf::util::TempDir;
+
+const RF: usize = 16;
+
+fn row(v: f32) -> Vec<f32> {
+    (0..RF).map(|i| v + i as f32 * 0.01).collect()
+}
+
+/// Everything-cold-must-spill configuration pointing at `dir`.
+fn spill_cfg(dir: &TempDir) -> OffloadConfig {
+    OffloadConfig {
+        hot_budget_bytes: 1 << 20,
+        cold_budget_bytes: 1, // any cold row overflows straight to disk
+        cold_after_steps: 4,
+        spill_dir: Some(dir.path_str()),
+        block_rows: 4,
+        ..OffloadConfig::default()
+    }
+}
+
+#[test]
+fn tiered_store_spills_to_tempdir_and_restores() {
+    let dir = TempDir::new("spill-ci").unwrap();
+    let mut store = TieredStore::new(RF, spill_cfg(&dir));
+    for p in 0..6 {
+        // eta far beyond cold_after: straight to cold, then spilled
+        store.stash(p, row(p as f32), 0, 100).unwrap();
+    }
+    let o = store.occupancy();
+    assert_eq!(o.spill_rows, 6, "cold budget of 1 byte must spill everything");
+    assert!(o.spill_bytes > 0);
+    let spill_files = std::fs::read_dir(dir.path()).unwrap().count();
+    assert_eq!(spill_files, 1, "one lazily-created spill file expected");
+
+    // restores cross the disk boundary within the quantization bound
+    for p in 0..6 {
+        let back = store.take(p).unwrap().unwrap();
+        let orig = row(p as f32);
+        let range = 0.01 * (RF - 1) as f32;
+        let bound = store.config().cold_quant_rel_error * range + 1e-5;
+        for (a, b) in orig.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "pos {p}: {a} -> {b}");
+        }
+    }
+    assert_eq!(store.occupancy().spill_bytes, 0);
+    assert_eq!(store.summary().restores_spill, 6);
+}
+
+#[test]
+fn sharded_store_spill_io_runs_on_worker_threads() {
+    // every shard lazily creates its own spill file inside the TempDir,
+    // and the batched take crosses file I/O on the worker pool
+    let dir = TempDir::new("spill-sharded").unwrap();
+    let mut cfg = spill_cfg(&dir);
+    cfg.shards = 4;
+    cfg.shard_partition = ShardPartition::Hash;
+    let mut store = ShardedStore::new(RF, cfg).unwrap();
+    let positions: Vec<usize> = (0..12).collect();
+    let items: Vec<(usize, Vec<f32>, u64)> =
+        positions.iter().map(|&p| (p, row(p as f32), 100)).collect();
+    store.stash_batch(items, 0).unwrap();
+    assert_eq!(store.summary().occupancy.spill_rows, 12);
+    assert_eq!(
+        std::fs::read_dir(dir.path()).unwrap().count(),
+        4,
+        "one spill file per engaged shard"
+    );
+    for &p in &positions {
+        assert_eq!(store.tier_of(p), Some((TierKind::Spill, false)));
+    }
+    let got = store.take_batch(&positions).unwrap();
+    assert!(got.iter().all(Option::is_some));
+    assert!(store.restore_parallelism.max() > 1, "spill restores must fan out");
+    assert_eq!(store.summary().restores_spill, 12);
+    assert!(store.is_empty());
+}
+
+#[test]
+fn stale_spill_handles_surface_offload_errors() {
+    let dir = TempDir::new("spill-stale").unwrap();
+    let mut f = SpillFile::create(&dir.path_str(), RF).unwrap();
+    let qr = quantize(&row(1.0));
+    let slot = f.write_row(&qr).unwrap();
+    f.free_slot(slot).unwrap();
+    // double free and freed-slot reads are hard errors, not silent
+    // free-list corruption
+    assert!(f.free_slot(slot).is_err());
+    assert!(f.read_row(slot).is_err());
+    assert!(f.take_row(slot).is_err());
+    assert!(f.free_slot(99).is_err(), "never-allocated handle must error");
+}
+
+#[test]
+fn disabled_spill_tier_reports_offload_error_on_stash() {
+    let mut t = SpillTier::new(None, RF);
+    let err = t.stash(0, RowPayload::Raw(row(0.0))).unwrap_err();
+    assert!(
+        matches!(err, Error::Offload(_)),
+        "spill without a dir must be Error::Offload, got {err:?}"
+    );
+}
+
+#[test]
+fn tempdir_cleanup_removes_spill_files() {
+    let kept;
+    {
+        let dir = TempDir::new("spill-drop").unwrap();
+        kept = dir.path().to_path_buf();
+        let mut store = TieredStore::new(RF, spill_cfg(&dir));
+        store.stash(0, row(0.0), 0, 100).unwrap();
+        assert_eq!(std::fs::read_dir(&kept).unwrap().count(), 1);
+        drop(store); // store removes its spill file first
+        assert_eq!(std::fs::read_dir(&kept).unwrap().count(), 0);
+    }
+    assert!(!kept.exists(), "TempDir must clean up after the store");
+}
