@@ -1,25 +1,94 @@
 //! Micro-benchmarks for the §Perf iteration log: per-component costs of
 //! the decode hot path — literal construction (host->device analog),
-//! PJRT execute, output download, and the rust-side policy bookkeeping.
+//! PJRT execute, output download — plus the host-only components that
+//! run without trained artifacts: cold-tier quantize/dequantize (the
+//! restore-path cost the prefetch stages hide) and the rust-side
+//! policy bookkeeping (indexed vs retained full-scan implementation).
+//!
+//! Host-only rows are recorded before the runtime loads, so the
+//! BENCH_SMOKE schema CSV carries real numbers for them even on
+//! runners with no artifact set.
 //!
 //! Output: timing lines + artifacts/micro_runtime.csv
 
 use asrkf::config::FreezeConfig;
-use asrkf::kv::{AsrKfPolicy, KvPolicy};
+use asrkf::kv::{AsrKfPolicy, KvPolicy, ScanAsrKfPolicy};
+use asrkf::offload::{dequantize_into, quantize};
 use asrkf::runtime::{literal, DecodeInputs, Runtime};
 use asrkf::util::bench::{self, Bencher, Table};
 use asrkf::util::rng::Pcg64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
-    let mut table = Table::new("Micro: decode hot-path components", &["component", "mean_us", "p50_us"]);
+    let mut table =
+        Table::new("Micro: decode hot-path components", &["component", "mean_us", "p50_us"]);
+    let mut rng = Pcg64::new(7);
+    let b = Bencher::new(bench::smoke_size(3, 1), bench::smoke_size(15, 3));
+
+    // --- host-only components (no artifacts needed) ---------------------
+
+    // cold-tier row compression: 1024 floats = one 4 KB KV row
+    let row: Vec<f32> = (0..1024).map(|_| rng.f32() * 4.0 - 2.0).collect();
+    let st = b.run("quant: quantize 4KB row", || {
+        std::hint::black_box(quantize(std::hint::black_box(&row)));
+    });
+    table.row(&[
+        "quantize_row_4k".into(),
+        st.mean.as_micros().to_string(),
+        st.p50.as_micros().to_string(),
+    ]);
+
+    let qr = quantize(&row);
+    let mut dst = vec![0.0f32; row.len()];
+    let st = b.run("quant: dequantize_into 4KB row", || {
+        dequantize_into(std::hint::black_box(&qr), std::hint::black_box(&mut dst));
+    });
+    table.row(&[
+        "dequantize_row_4k".into(),
+        st.mean.as_micros().to_string(),
+        st.p50.as_micros().to_string(),
+    ]);
+
+    // policy bookkeeping alone (no graph): indexed vs full-scan
+    let cfg = FreezeConfig::default();
+    let scores: Vec<f32> = (0..1000).map(|_| rng.f32()).collect();
+    let st = b.run("policy: observe+plan x50 (indexed)", || {
+        let mut p = AsrKfPolicy::new(cfg.clone());
+        p.on_prefill(&scores[..500], 500);
+        for step in 1..50 {
+            p.observe(step, &scores, 1000);
+            let _ = p.plan(step, 1000, 64);
+        }
+    });
+    table.row(&[
+        "policy_50_steps".into(),
+        st.mean.as_micros().to_string(),
+        st.p50.as_micros().to_string(),
+    ]);
+
+    let st = b.run("policy: observe+plan x50 (full scan)", || {
+        let mut p = ScanAsrKfPolicy::new(cfg.clone());
+        p.on_prefill(&scores[..500], 500);
+        for step in 1..50 {
+            p.observe(step, &scores, 1000);
+            let _ = p.plan(step, 1000, 64);
+        }
+    });
+    table.row(&[
+        "policy_50_steps_scan".into(),
+        st.mean.as_micros().to_string(),
+        st.p50.as_micros().to_string(),
+    ]);
+
+    // --- runtime-backed components --------------------------------------
+
     let rt = match Runtime::load("artifacts") {
         Ok(rt) => rt,
         Err(e) if bench::smoke() => {
             bench::smoke_schema_only(
                 &table,
                 "artifacts/micro_runtime.csv",
-                &format!("runtime unavailable ({e})"),
+                &format!("runtime unavailable ({e}); host-only rows recorded"),
             )?;
             return Ok(());
         }
@@ -29,39 +98,32 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let decode = rt.decode_for(1, 1024)?;
     let s = decode.kv_len;
 
-    let mut rng = Pcg64::new(7);
     let kv: Vec<f32> = (0..decode.kv_floats()).map(|_| rng.f32() - 0.5).collect();
     let mut mask = vec![0.0f32; s];
     for m in mask.iter_mut().take(500) {
         *m = 1.0;
     }
-    let b = Bencher::new(bench::smoke_size(3, 1), bench::smoke_size(15, 3));
 
     let st = b.run("literal: kv upload (16 MiB)", || {
         let _ = literal::lit_f32(&[model.n_layers, 2, 1, s, model.n_heads, model.d_head], &kv)
             .unwrap();
     });
-    table.row(&["kv_literal_build".into(), st.mean.as_micros().to_string(), st.p50.as_micros().to_string()]);
+    table.row(&[
+        "kv_literal_build".into(),
+        st.mean.as_micros().to_string(),
+        st.p50.as_micros().to_string(),
+    ]);
 
     let st = b.run("decode step (end to end)", || {
         let _ = decode
             .run(&DecodeInputs { tokens: &[65], kv: &kv, mask: &mask, pos: &[500] })
             .unwrap();
     });
-    table.row(&["decode_step".into(), st.mean.as_micros().to_string(), st.p50.as_micros().to_string()]);
-
-    // policy bookkeeping alone (no graph)
-    let cfg = FreezeConfig::default();
-    let scores: Vec<f32> = (0..1000).map(|_| rng.f32()).collect();
-    let st = b.run("policy: observe+plan (1000 tokens)", || {
-        let mut p = AsrKfPolicy::new(cfg.clone());
-        p.on_prefill(&scores[..500], 500);
-        for step in 1..50 {
-            p.observe(step, &scores, 1000);
-            let _ = p.plan(step, 1000, 64);
-        }
-    });
-    table.row(&["policy_50_steps".into(), st.mean.as_micros().to_string(), st.p50.as_micros().to_string()]);
+    table.row(&[
+        "decode_step".into(),
+        st.mean.as_micros().to_string(),
+        st.p50.as_micros().to_string(),
+    ]);
 
     table.print();
     table.write_csv("artifacts/micro_runtime.csv")?;

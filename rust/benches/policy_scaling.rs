@@ -1,0 +1,141 @@
+//! Policy control-plane scaling: per-step `plan` + `observe` cost of
+//! the indexed ASR-KF-EGR policy vs the retained brute-force full-scan
+//! implementation, as context length grows 4k -> 1M positions.
+//!
+//! The scenario is the long-context steady state the ROADMAP targets:
+//! almost the whole context is frozen (softness k is tiny, so one
+//! detection earns a long Eq.3 duration and a setup plan with an
+//! unbounded transfer budget freezes every stale position at once),
+//! the sliding window advances one token per step, and each step does
+//! bounded work — one fresh detection + freeze, empty expiry pops,
+//! prefetch range probes. The indexed policy's cost tracks that work
+//! (`flat-to-logarithmic` in context length); the full-scan column
+//! pays `tick`/prefetch/detection sweeps over every position and grows
+//! linearly. Correctness equivalence of the two implementations is
+//! property-tested in `tests/prop_policy.rs`; this bench measures the
+//! cost gap the index buys.
+//!
+//! `BENCH_SMOKE=1` shrinks the sweep to tiny contexts/steps. The bench
+//! is host-only — it needs no trained artifacts, so CI smoke produces
+//! a real (tiny) CSV, not a schema-only one.
+//!
+//! Output: table + artifacts/policy_scaling.csv
+
+use std::time::Instant;
+
+use asrkf::config::FreezeConfig;
+use asrkf::kv::oracle::ScanAsrKfPolicy;
+use asrkf::kv::policy::{AsrKfPolicy, KvPolicy, Plan};
+use asrkf::util::bench::{self, Stats, Table};
+
+fn cfg() -> FreezeConfig {
+    FreezeConfig {
+        window_k: 64,
+        n_sink: 4,
+        // absolute tau: scores are synthetic (stale rows 0.01, fresh
+        // rows 1.0), so the detection set is exact by construction
+        tau: 0.5,
+        relative_tau: false,
+        // tiny softness: c=1 -> d = floor(1/0.002) = 500 steps, so the
+        // frozen archive outlives the measurement window
+        softness_k: 0.002,
+        history_w: 1 << 20,
+        r_budget: 64,
+    }
+}
+
+/// Drive one policy to the mostly-frozen steady state at context
+/// length `ctx`, then time `measure` decode steps of plan+observe.
+fn run_policy(policy: &mut dyn KvPolicy, ctx: usize, warm: usize, measure: usize) -> Stats {
+    let c = cfg();
+    let total = ctx + warm + measure + 1;
+    // stale everywhere: every position outside the sliding window is
+    // detected once and then frozen for ~500 steps
+    let scores = vec![0.01f32; total];
+
+    policy.on_prefill(&scores[..ctx], ctx);
+    // setup plan with an unbounded budget: freeze the entire backlog
+    let mut plan = Plan::default();
+    policy.plan_into(1, ctx, ctx, &mut plan);
+
+    let mut len = ctx;
+    let mut step = 1u64;
+    for _ in 0..warm {
+        step += 1;
+        len += 1;
+        policy.observe(step, &scores[..len], len);
+        policy.plan_into(step, len, c.r_budget, &mut plan);
+    }
+
+    let mut samples = Vec::with_capacity(measure);
+    for _ in 0..measure {
+        step += 1;
+        len += 1;
+        let t = Instant::now();
+        policy.observe(step, &scores[..len], len);
+        policy.plan_into(step, len, c.r_budget, &mut plan);
+        samples.push(t.elapsed());
+    }
+    Stats::from_samples(samples)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    asrkf::util::logging::init();
+    let contexts: &[usize] = if bench::smoke() {
+        &[1 << 10, 1 << 12]
+    } else {
+        &[1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]
+    };
+    let warm = bench::smoke_size(16, 4);
+    let measure = bench::smoke_size(64, 8);
+
+    let mut table = Table::new(
+        "Policy scaling: per-step plan+observe, indexed vs full scan",
+        &[
+            "context",
+            "steps",
+            "indexed mean (us)",
+            "indexed p99 (us)",
+            "scan mean (us)",
+            "scan p99 (us)",
+            "speedup (mean)",
+        ],
+    );
+
+    for &ctx in contexts {
+        let mut indexed = AsrKfPolicy::new(cfg());
+        let si = run_policy(&mut indexed, ctx, warm, measure);
+        let mut scan = ScanAsrKfPolicy::new(cfg());
+        let ss = run_policy(&mut scan, ctx, warm, measure);
+        println!(
+            "ctx {ctx:>8}: indexed {:>10.3?}  scan {:>10.3?}  (frozen {} / {})",
+            si.mean,
+            ss.mean,
+            indexed.frozen_count(),
+            ctx
+        );
+        let speedup = if si.mean.as_nanos() == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}x", ss.mean.as_secs_f64() / si.mean.as_secs_f64())
+        };
+        table.row(&[
+            ctx.to_string(),
+            measure.to_string(),
+            si.mean.as_micros().to_string(),
+            si.p99.as_micros().to_string(),
+            ss.mean.as_micros().to_string(),
+            ss.p99.as_micros().to_string(),
+            speedup,
+        ]);
+    }
+
+    table.print();
+    table.write_csv("artifacts/policy_scaling.csv")?;
+    println!(
+        "\nscaling claim: the indexed column stays flat-to-logarithmic in context length \
+         (per-step cost tracks window/budget/expiry work); the full-scan column grows \
+         linearly with context"
+    );
+    Ok(())
+}

@@ -22,6 +22,7 @@ use asrkf::baselines::make_policy;
 use asrkf::config::{EngineConfig, ServerConfig, ShardPartition};
 use asrkf::coordinator::{spawn, GenParams};
 use asrkf::engine::Generator;
+use asrkf::metrics::PlanLatency;
 use asrkf::offload::{OffloadSummary, ShardedStore};
 use asrkf::runtime::Runtime;
 use asrkf::util::bench::{self, Table};
@@ -71,6 +72,20 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 8] {
     ]
 }
 
+/// Aggregate per-request policy control-plane latencies into the
+/// `plan mean (us)` / `plan p99 (us)` column pair: the mean is
+/// weighted by each request's decode-step count, the p99 is the worst
+/// per-request p99. "-" when no steps ran (host-only rows).
+fn plan_columns(lats: &[PlanLatency]) -> [String; 2] {
+    let steps: u64 = lats.iter().map(|l| l.steps).sum();
+    if steps == 0 {
+        return ["-".into(), "-".into()];
+    }
+    let mean = lats.iter().map(|l| l.steps * l.mean_us).sum::<u64>() / steps;
+    let p99 = lats.iter().map(|l| l.p99_us).max().unwrap_or(0);
+    [mean.to_string(), p99.to_string()]
+}
+
 /// Host-only restore-burst microbench: stash cold rows into a
 /// `ShardedStore`, then restore them in sorted bursts — the exact
 /// shape of an entropy-triggered recovery. Runs without artifacts, so
@@ -118,6 +133,7 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
             format!("{:.1}", e2e_sum / waves as f64),
         ];
         cells.extend(offload_columns(&[sum]));
+        cells.extend(plan_columns(&[])); // no decode steps: policy never ran
         table.row(&cells);
     }
     Ok(())
@@ -153,12 +169,14 @@ fn runtime_rows(
         let mut tokens = 0usize;
         let mut e2e_sum = 0.0;
         let mut summaries = Vec::new();
+        let mut plan_lats = Vec::new();
         for rx in rxs {
             let resp = rx.recv()?;
             assert!(resp.error.is_none(), "{:?}", resp.error);
             tokens += resp.generated_tokens;
             e2e_sum += resp.e2e.as_secs_f64() * 1000.0;
             summaries.push(resp.offload);
+            plan_lats.push(resp.plan_latency);
         }
         let wall = t0.elapsed();
         let off = offload_columns(&summaries);
@@ -172,6 +190,7 @@ fn runtime_rows(
             format!("{:.0}", e2e_sum / n_req as f64),
         ];
         row.extend(off);
+        row.extend(plan_columns(&plan_lats));
         table.row(&row);
         drop(handle);
         let _ = join.join();
@@ -186,12 +205,14 @@ fn runtime_rows(
         let mut tokens = 0usize;
         let mut e2e_sum = 0.0;
         let mut summaries = Vec::new();
+        let mut plan_lats = Vec::new();
         for r in &trace {
             let t1 = Instant::now();
             let out = gen.generate(&r.prompt, make_policy("asrkf", &cfg.freeze)?, r.max_new)?;
             tokens += out.stats.generated_tokens;
             e2e_sum += t1.elapsed().as_secs_f64() * 1000.0;
             summaries.push(out.stats.offload);
+            plan_lats.push(out.stats.plan_latency);
         }
         let wall = t0.elapsed();
         let off = offload_columns(&summaries);
@@ -205,6 +226,7 @@ fn runtime_rows(
             format!("{:.0}", e2e_sum / n_req as f64),
         ];
         row.extend(off);
+        row.extend(plan_columns(&plan_lats));
         table.row(&row);
     }
     Ok(())
@@ -232,6 +254,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "restored rows",
             "restore spans",
             "restore par",
+            "plan mean (us)",
+            "plan p99 (us)",
         ],
     );
 

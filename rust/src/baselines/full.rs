@@ -17,9 +17,9 @@ impl KvPolicy for FullKvPolicy {
         self.len = len;
     }
 
-    fn plan(&mut self, _step: u64, len: usize, _r_budget: usize) -> Plan {
+    fn plan_into(&mut self, _step: u64, len: usize, _r_budget: usize, out: &mut Plan) {
+        out.clear();
         self.len = len;
-        Plan::default()
     }
 
     fn observe(&mut self, _step: u64, _scores: &[f32], len: usize) {

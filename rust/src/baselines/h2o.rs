@@ -52,7 +52,9 @@ impl KvPolicy for H2oPolicy {
         self.len = len;
     }
 
-    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan {
+    fn plan_into(&mut self, step: u64, len: usize, r_budget: usize, out: &mut Plan) {
+        out.clear();
+        out.drop_payload = true;
         self.table.grow_to(len);
         self.cum.resize(len, 0.0);
         self.len = len;
@@ -60,24 +62,25 @@ impl KvPolicy for H2oPolicy {
         let budget = self.budget(len);
         let window_start = len.saturating_sub(self.cfg.window_k);
         let mut active = self.table.active_count();
-        let mut evict = Vec::new();
-        while active > budget && evict.len() < r_budget {
-            // lowest cumulative attention among evictable positions
-            let victim = (self.cfg.n_sink..window_start)
-                .filter(|&p| self.table.is_active(p) && !evict.contains(&p))
+        while active > budget && out.freeze.len() < r_budget {
+            // lowest cumulative attention among evictable positions —
+            // the active-position index walks candidates directly, and
+            // already-evicted rows drop out of it (the old
+            // `!evict.contains(p)` O(evictions^2) probe is gone)
+            let victim = self
+                .table
+                .active_range(self.cfg.n_sink, window_start)
                 .min_by(|&a, &b| self.cum[a].partial_cmp(&self.cum[b]).unwrap());
             match victim {
                 Some(p) => {
-                    self.table.freeze(p, u32::MAX, step); // permanent
-                    evict.push(p);
+                    self.table.freeze(p, TokenTable::NEVER, step); // permanent
+                    out.freeze.push(p);
                     active -= 1;
                 }
                 None => break,
             }
         }
-        let mut plan = Plan { freeze: evict, drop_payload: true, ..Plan::default() };
-        plan.normalize(); // engine batches freezes over sorted runs
-        plan
+        out.normalize(); // engine batches freezes over sorted runs
     }
 
     fn observe(&mut self, _step: u64, scores: &[f32], len: usize) {
@@ -99,6 +102,10 @@ impl KvPolicy for H2oPolicy {
 
     fn active_count(&self) -> usize {
         self.table.active_count() + self.len.saturating_sub(self.table.len())
+    }
+
+    fn frozen_count(&self) -> usize {
+        self.table.frozen_count()
     }
 
     fn frozen_positions(&self) -> Vec<usize> {

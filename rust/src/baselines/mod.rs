@@ -20,11 +20,13 @@ use crate::kv::KvPolicy;
 pub fn make_policy(name: &str, cfg: &FreezeConfig) -> Result<Box<dyn KvPolicy>, String> {
     match name {
         "asrkf" | "asr-kf-egr" => Ok(Box::new(crate::kv::AsrKfPolicy::new(cfg.clone()))),
+        // retained full-scan reference implementation (A/B + oracle)
+        "asrkf-scan" => Ok(Box::new(crate::kv::ScanAsrKfPolicy::new(cfg.clone()))),
         "full" | "baseline" => Ok(Box::new(FullKvPolicy::default())),
         "h2o" => Ok(Box::new(H2oPolicy::new(cfg.clone()))),
         "streaming" | "streamingllm" => Ok(Box::new(StreamingLlmPolicy::new(cfg.clone()))),
         other => Err(format!(
-            "unknown policy '{other}' (expected asrkf|full|h2o|streaming)"
+            "unknown policy '{other}' (expected asrkf|asrkf-scan|full|h2o|streaming)"
         )),
     }
 }
@@ -36,7 +38,7 @@ mod tests {
     #[test]
     fn factory_knows_all_policies() {
         let cfg = FreezeConfig::default();
-        for name in ["asrkf", "full", "h2o", "streaming"] {
+        for name in ["asrkf", "asrkf-scan", "full", "h2o", "streaming"] {
             assert!(make_policy(name, &cfg).is_ok(), "{name}");
         }
         assert!(make_policy("nope", &cfg).is_err());

@@ -12,11 +12,17 @@ pub struct StreamingLlmPolicy {
     cfg: FreezeConfig,
     table: TokenTable,
     len: usize,
+    /// Every position below this is already evicted (evictions are
+    /// permanent and in ascending order, so the sweep never re-scans
+    /// frozen prefix positions — amortized O(1) per eviction instead of
+    /// an O(len) rescan per plan).
+    evict_cursor: usize,
 }
 
 impl StreamingLlmPolicy {
     pub fn new(cfg: FreezeConfig) -> Self {
-        StreamingLlmPolicy { cfg, table: TokenTable::default(), len: 0 }
+        let evict_cursor = cfg.n_sink;
+        StreamingLlmPolicy { cfg, table: TokenTable::default(), len: 0, evict_cursor }
     }
 }
 
@@ -30,25 +36,23 @@ impl KvPolicy for StreamingLlmPolicy {
         self.len = len;
     }
 
-    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan {
+    fn plan_into(&mut self, step: u64, len: usize, r_budget: usize, out: &mut Plan) {
+        out.clear();
+        out.drop_payload = true;
         self.table.grow_to(len);
         self.len = len;
         let window_start = len.saturating_sub(self.cfg.window_k);
-        let mut evict = Vec::new();
-        for p in self.cfg.n_sink..window_start {
+        while self.evict_cursor < window_start && out.freeze.len() < r_budget {
+            let p = self.evict_cursor;
+            self.evict_cursor += 1;
             if self.table.is_active(p) {
-                self.table.freeze(p, u32::MAX, step);
-                evict.push(p);
-                if evict.len() >= r_budget {
-                    break;
-                }
+                self.table.freeze(p, TokenTable::NEVER, step);
+                out.freeze.push(p);
             }
         }
-        // evict is built in ascending position order already; normalize
+        // freezes are built in ascending position order; normalize
         // keeps the sorted-plan contract explicit for the engine
-        let mut plan = Plan { freeze: evict, drop_payload: true, ..Plan::default() };
-        plan.normalize();
-        plan
+        out.normalize();
     }
 
     fn observe(&mut self, _step: u64, _scores: &[f32], len: usize) {
@@ -64,6 +68,10 @@ impl KvPolicy for StreamingLlmPolicy {
 
     fn active_count(&self) -> usize {
         self.table.active_count() + self.len.saturating_sub(self.table.len())
+    }
+
+    fn frozen_count(&self) -> usize {
+        self.table.frozen_count()
     }
 
     fn frozen_positions(&self) -> Vec<usize> {

@@ -43,10 +43,15 @@ pub struct BatchEngine {
     geom: KvGeom,
     kv: Vec<f32>,
     slots: Vec<Option<Slot>>,
+    /// per-slot plan buffers, refilled in place each step so plan
+    /// construction never allocates in steady state
+    plan_bufs: Vec<crate::kv::Plan>,
     pub stats: ServingStats,
     pub ttft_hist: Histogram,
     pub e2e_hist: Histogram,
     pub step_hist: Histogram,
+    /// per-step policy control-plane time merged from retired sessions
+    pub plan_hist: Histogram,
     /// per-tier restore latencies merged from retired sessions
     pub restore_hist: RestoreLatency,
     /// plan-batching telemetry merged from retired sessions
@@ -84,6 +89,7 @@ impl BatchEngine {
         let geom = KvGeom::new(&model, decode.batch, decode.kv_len);
         let kv = vec![0.0f32; geom.floats()];
         let slots = (0..decode.batch).map(|_| None).collect();
+        let plan_bufs = (0..decode.batch).map(|_| crate::kv::Plan::default()).collect();
         Ok(BatchEngine {
             rt,
             cfg,
@@ -91,10 +97,12 @@ impl BatchEngine {
             geom,
             kv,
             slots,
+            plan_bufs,
             stats: ServingStats::default(),
             ttft_hist: Histogram::default(),
             e2e_hist: Histogram::default(),
             step_hist: Histogram::default(),
+            plan_hist: Histogram::default(),
             restore_hist: RestoreLatency::default(),
             batch_stats: BatchStats::default(),
         })
@@ -228,19 +236,20 @@ impl BatchEngine {
         let mut tokens = vec![0i32; b];
         let mut pos = vec![0i32; b];
         let mut mask = vec![0.0f32; b * s];
-        let mut plans: Vec<Option<crate::kv::Plan>> = (0..b).map(|_| None).collect();
+        let mut planned = vec![false; b];
 
         let mut failed: Vec<(usize, String)> = Vec::new();
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if let Some(slot) = slot {
                 let sess = &mut slot.session;
                 tokens[i] = sess.next_token();
-                // per-slot freeze/restore data movement on the shared cache
-                match sess.apply_plan(&mut self.kv, &self.geom, i, r) {
-                    Ok(plan) => {
+                // per-slot freeze/restore data movement on the shared
+                // cache; the slot's plan buffer is refilled in place
+                match sess.apply_plan(&mut self.kv, &self.geom, i, r, &mut self.plan_bufs[i]) {
+                    Ok(()) => {
                         pos[i] = sess.len as i32;
                         mask[i * s..(i + 1) * s].copy_from_slice(&sess.mask);
-                        plans[i] = Some(plan);
+                        planned[i] = true;
                     }
                     // offload failure (storage invariant / spill I/O):
                     // fail this session, keep the rest of the batch
@@ -256,7 +265,7 @@ impl BatchEngine {
                 let _ = slot.respond.send(GenResponse::error(slot.id, msg));
             }
         }
-        if plans.iter().all(Option::is_none) {
+        if !planned.iter().any(|&p| p) {
             return Ok(()); // every occupied slot failed this step
         }
 
@@ -272,7 +281,10 @@ impl BatchEngine {
         let model_vocab = self.rt.manifest.model.vocab;
         let now = Instant::now();
         for i in 0..b {
-            let Some(plan) = plans[i].take() else { continue };
+            if !planned[i] {
+                continue;
+            }
+            let plan = &self.plan_bufs[i];
             let slot_pos = pos[i] as usize;
             // write the new KV row for this lane
             crate::engine::layout::write_new_row(
@@ -286,7 +298,7 @@ impl BatchEngine {
                 // recovery in batched mode: SR/WR/FR apply via policy; RR
                 // is disabled (rewalk would stall the whole batch —
                 // documented); the returned action is therefore unused
-                sess.absorb(tokens[i], logits, scores, &plan, out.timing, Duration::ZERO)
+                sess.absorb(tokens[i], logits, scores, plan, out.timing, Duration::ZERO)
                     .err()
             };
             if let Some(e) = absorb_err {
@@ -313,9 +325,11 @@ impl BatchEngine {
                 self.stats.staged_hits += offload.staged_hits;
                 self.stats.staged_misses += offload.staged_misses;
                 self.restore_hist.merge(&sess.store.restore_latency());
+                self.plan_hist.merge(&sess.plan_hist);
                 // batch_stats is the single aggregate of per-session
                 // batching counters (rows/spans live there)
                 self.batch_stats.merge(&sess.batch);
+                let plan_latency = sess.plan_latency();
                 let resp = GenResponse {
                     id: slot.id,
                     text: sess.generated_text(),
@@ -327,6 +341,7 @@ impl BatchEngine {
                     ttft: slot.first_token_at.unwrap() - slot.arrived,
                     e2e,
                     offload,
+                    plan_latency,
                 };
                 let _ = slot.respond.send(resp);
                 self.stats.requests_completed += 1;

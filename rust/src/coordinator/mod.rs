@@ -133,6 +133,7 @@ pub fn spawn(
             log::info!("{}", engine.batch_stats.restore_batch.summary("restore batch rows"));
             log::info!("{}", engine.restore_hist.hot.summary("restore(hot)"));
             log::info!("{}", engine.restore_hist.cold.summary("restore(cold)"));
+            log::info!("{}", engine.plan_hist.summary("plan+observe"));
         })
         .map_err(Error::Io)?;
     match ready_rx.recv() {

@@ -35,6 +35,8 @@ pub struct GenResponse {
     pub e2e: Duration,
     /// tiered frozen-KV storage snapshot at retirement
     pub offload: crate::offload::OffloadSummary,
+    /// per-step policy control-plane time (`plan` + `observe`)
+    pub plan_latency: crate::metrics::PlanLatency,
 }
 
 impl GenResponse {
@@ -50,6 +52,7 @@ impl GenResponse {
             ttft: Duration::ZERO,
             e2e: Duration::ZERO,
             offload: crate::offload::OffloadSummary::default(),
+            plan_latency: crate::metrics::PlanLatency::default(),
         }
     }
 }

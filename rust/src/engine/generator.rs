@@ -40,6 +40,9 @@ pub struct GenStats {
     /// Tiered-store snapshot at end of generation: per-tier occupancy,
     /// staged-hit counters, restore latencies (see `crate::offload`).
     pub offload: crate::offload::OffloadSummary,
+    /// Per-step policy control-plane time (`plan` + `observe`) — the
+    /// indexed policy's O(work)-per-step contract, measured.
+    pub plan_latency: crate::metrics::PlanLatency,
 }
 
 /// Final disposition of one KV row (mechanism-level retrieval probe,
@@ -129,12 +132,15 @@ impl<'rt> Generator<'rt> {
         let mut host = Duration::ZERO;
 
         // --- rolling decode loop (paper Algorithm 1)
+        // one plan buffer for the whole generation: plan_into refills
+        // it in place, so steady-state steps allocate nothing for plans
+        let mut plan = crate::kv::Plan::default();
         while !session.is_done() {
             let t_host = Instant::now();
             let token = session.next_token();
             // freeze/restore data movement on the host-owned cache;
             // restores hit staged hot rows when prefetch ran ahead
-            let plan = session.apply_plan(&mut kv, &geom, 0, r)?;
+            session.apply_plan(&mut kv, &geom, 0, r, &mut plan)?;
             let host_pre = t_host.elapsed();
 
             let inputs = DecodeInputs {
@@ -214,6 +220,7 @@ impl<'rt> Generator<'rt> {
             download,
             host,
             offload: session.offload_summary(),
+            plan_latency: session.plan_latency(),
         };
         let row_states = (0..session.len)
             .map(|pos| {

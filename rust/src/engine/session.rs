@@ -4,12 +4,12 @@
 //! — the KV *data* itself is owned by whichever engine drives the
 //! session.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
-use crate::metrics::BatchStats;
+use crate::metrics::{BatchStats, Histogram, PlanLatency};
 use crate::model::logits::{logits_entropy, top1_prob};
 use crate::model::sampling::Sampler;
 use crate::offload::{OffloadSummary, ShardedStore};
@@ -61,6 +61,12 @@ pub struct Session {
     pub ladder: Option<RecoveryLadder>,
     /// plan-batching telemetry: rows/spans per freeze & restore batch
     pub batch: BatchStats,
+    /// per-step policy control-plane time (`plan` + `observe`), the
+    /// measurable side of the indexed policy's O(work) contract
+    pub plan_hist: Histogram,
+    /// this step's `plan` time, folded into `plan_hist` with the
+    /// matching `observe` time in [`Session::absorb`]
+    plan_time_pending: Duration,
     /// sampler stream positions indexed by generated-token count (RR rewind)
     draws_at: Vec<u64>,
     s_capacity: usize,
@@ -102,6 +108,8 @@ impl Session {
             monitor,
             ladder,
             batch: BatchStats::default(),
+            plan_hist: Histogram::default(),
+            plan_time_pending: Duration::ZERO,
             draws_at: Vec::new(),
             s_capacity,
         })
@@ -141,6 +149,12 @@ impl Session {
     /// run), all freezes gather + zero the same way. Mask is updated
     /// (restores -> 1, freezes -> 0). `slot` selects the batch lane.
     ///
+    /// `plan` is a caller-owned buffer refilled in place
+    /// ([`KvPolicy::plan_into`]) — engines keep one alive across steps
+    /// so plan construction allocates nothing in steady state. The
+    /// policy's plan time is recorded into [`Session::plan_hist`]
+    /// (together with the following `observe` in [`Session::absorb`]).
+    ///
     /// Restores land on staged hot rows whenever the prefetch path ran
     /// ahead of the thaw (see [`Session::absorb`]); errors surface
     /// storage invariant breaches (missing payload, double freeze) and
@@ -152,9 +166,12 @@ impl Session {
         geom: &crate::engine::layout::KvGeom,
         slot: usize,
         r_budget: usize,
-    ) -> Result<Plan> {
+        plan: &mut Plan,
+    ) -> Result<()> {
         use crate::engine::layout::{coalesce_runs, gather_rows, scatter_rows, zero_rows};
-        let plan = self.policy.plan(self.step, self.len, r_budget);
+        let t_plan = Instant::now();
+        self.policy.plan_into(self.step, self.len, r_budget, plan);
+        self.plan_time_pending = t_plan.elapsed();
         debug_assert!(
             plan.restore.windows(2).all(|w| w[0] < w[1]),
             "policy returned an unsorted restore list"
@@ -210,7 +227,7 @@ impl Session {
             }
             self.batch.record_freeze(plan.freeze.len(), runs.len());
         }
-        Ok(plan)
+        Ok(())
     }
 
     /// Store summary overlaid with this session's plan-batching
@@ -221,6 +238,11 @@ impl Session {
         s.restore_batch_rows = self.batch.restore_rows;
         s.restore_batch_spans = self.batch.restore_spans;
         s
+    }
+
+    /// Snapshot of the per-step policy control-plane cost.
+    pub fn plan_latency(&self) -> PlanLatency {
+        PlanLatency::from_histogram(&self.plan_hist)
     }
 
     /// Absorb one decode step's outputs (after the engine wrote the new
@@ -247,7 +269,11 @@ impl Session {
         self.tokens.push(token);
         self.step += 1;
 
+        let t_observe = Instant::now();
         self.policy.observe(self.step, &scores[..self.len], self.len);
+        // one sample per decode step: this step's plan + observe time
+        self.plan_hist.record(self.plan_time_pending + t_observe.elapsed());
+        self.plan_time_pending = Duration::ZERO;
 
         let entropy = logits_entropy(&logits);
         let top1 = top1_prob(&logits);

@@ -1,9 +1,12 @@
 //! KV-cache management — the paper's core contribution.
 //!
-//! * `state`     — per-token Active/Frozen state machine
+//! * `state`     — per-token Active/Frozen state machine, indexed for
+//!   O(log n) control-plane queries (see `README.md` in this directory)
 //! * `freeze`    — sublinear freeze scheduling (Eq. 3) + detection windows
 //! * `relevance` — Eq. 2 thresholding and candidate selection
-//! * `policy`    — the `KvPolicy` trait and the ASR-KF-EGR policy
+//! * `policy`    — the `KvPolicy` trait and the indexed ASR-KF-EGR policy
+//! * `oracle`    — retained brute-force full-scan ASR-KF-EGR (equivalence
+//!   oracle for tests, old-implementation column for `policy_scaling`)
 //! * `store`     — minimal flat frozen-row store (reference/baseline)
 //!
 //! The engine's production storage lives in `crate::offload`: plans
@@ -17,11 +20,13 @@
 //! ```
 
 pub mod freeze;
+pub mod oracle;
 pub mod policy;
 pub mod relevance;
 pub mod state;
 pub mod store;
 
+pub use oracle::ScanAsrKfPolicy;
 pub use policy::{AsrKfPolicy, KvPolicy, Plan, UnfreezeScope, PREFETCH_HORIZON};
 pub use state::{TokenMeta, TokenState, TokenTable};
 pub use store::FrozenStore;

@@ -1,0 +1,331 @@
+//! Brute-force full-scan ASR-KF-EGR — the reference the indexed
+//! control plane is checked against, retained on purpose.
+//!
+//! [`ScanAsrKfPolicy`] implements the same freeze/restore semantics as
+//! [`crate::kv::policy::AsrKfPolicy`] but answers every per-step
+//! question the way the pre-index implementation did: timer expiry is
+//! a full sweep over all positions, the prefetch horizon is a
+//! full-table scan, `active_count`/`frozen_positions` are filters,
+//! recovery scopes walk every position, and the pending-freeze list is
+//! a flat `Vec` re-sorted each plan. Per-step cost is O(context_len)
+//! by construction.
+//!
+//! Two consumers:
+//! * `tests/prop_policy.rs::prop_indexed_policy_matches_scan_oracle`
+//!   drives both implementations through identical random score /
+//!   recovery traces and asserts plan-for-plan equality.
+//! * `benches/policy_scaling.rs` reports the old-vs-new per-step
+//!   `plan`+`observe` cost as context length grows (this column grows
+//!   linearly; the indexed column tracks the work done).
+//!
+//! The one deliberate upgrade over the historical code is O(1)
+//! pending-membership (a `Vec<bool>` instead of an O(pending) linear
+//! probe per detection): the probe was a correctness-neutral
+//! inefficiency (satellite fix of the same PR), and keeping it would
+//! make million-token oracle columns O(n^2) and unrunnable.
+
+use crate::config::FreezeConfig;
+use crate::kv::freeze::{freeze_duration, DetectionWindow};
+use crate::kv::policy::{score_order_key, KvPolicy, Plan, UnfreezeScope, PREFETCH_HORIZON};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ScanState {
+    Active,
+    Frozen { thaw_step: u64 },
+}
+
+struct ScanMeta {
+    state: ScanState,
+    window: DetectionWindow,
+    frozen_at: u64,
+    /// Freeze-episode counter (restore-queue staleness tag).
+    freezes: u32,
+    /// Expiry already reported; awaiting a budgeted restore.
+    queued: bool,
+}
+
+impl Default for ScanMeta {
+    fn default() -> Self {
+        ScanMeta {
+            state: ScanState::Active,
+            window: DetectionWindow::default(),
+            frozen_at: 0,
+            freezes: 0,
+            queued: false,
+        }
+    }
+}
+
+/// Full-scan reference implementation of the ASR-KF-EGR policy.
+pub struct ScanAsrKfPolicy {
+    cfg: FreezeConfig,
+    meta: Vec<ScanMeta>,
+    /// (pos, duration, score), unordered; re-sorted every plan.
+    pending: Vec<(usize, u32, f32)>,
+    pending_member: Vec<bool>,
+    /// (position, freeze-episode at expiry) — see the indexed policy's
+    /// `pending_restore` for the staleness-tag rationale.
+    pending_restore: std::collections::VecDeque<(usize, u32)>,
+    len: usize,
+    last_step: u64,
+}
+
+impl ScanAsrKfPolicy {
+    pub fn new(cfg: FreezeConfig) -> Self {
+        ScanAsrKfPolicy {
+            cfg,
+            meta: Vec::new(),
+            pending: Vec::new(),
+            pending_member: Vec::new(),
+            pending_restore: std::collections::VecDeque::new(),
+            len: 0,
+            last_step: 0,
+        }
+    }
+
+    fn grow_to(&mut self, len: usize) {
+        if self.meta.len() < len {
+            self.meta.resize_with(len, ScanMeta::default);
+            self.pending_member.resize(len, false);
+        }
+    }
+
+    fn is_active_pos(&self, pos: usize) -> bool {
+        self.meta.get(pos).map(|m| m.state == ScanState::Active).unwrap_or(true)
+    }
+
+    fn detect(&mut self, step: u64, scores: &[f32], len: usize) {
+        self.grow_to(len);
+        self.len = len;
+        self.last_step = step;
+        let meta = &self.meta;
+        let detections = crate::kv::relevance::detect_low_importance(
+            &self.cfg,
+            scores,
+            len,
+            |p| meta.get(p).map(|m| m.state == ScanState::Active).unwrap_or(true),
+        );
+        for (pos, score) in detections {
+            let c = self.meta[pos].window.record(step, self.cfg.history_w as u64);
+            let d = freeze_duration(c, self.cfg.softness_k);
+            if d > 0 && !self.pending_member[pos] {
+                self.pending_member[pos] = true;
+                self.pending.push((pos, d, score));
+            }
+        }
+    }
+}
+
+impl KvPolicy for ScanAsrKfPolicy {
+    fn name(&self) -> &'static str {
+        "asrkf-scan"
+    }
+
+    fn on_prefill(&mut self, scores: &[f32], len: usize) {
+        self.detect(0, scores, len);
+    }
+
+    fn plan_into(&mut self, step: u64, len: usize, r_budget: usize, out: &mut Plan) {
+        out.clear();
+        self.grow_to(len);
+        self.len = len;
+        self.last_step = step;
+
+        // Expiry: full sweep over every position (the old tick_timers),
+        // reported in (thaw_step, pos) order.
+        let mut expired: Vec<(u64, usize, u32)> = Vec::new();
+        for (pos, m) in self.meta.iter_mut().enumerate() {
+            if let ScanState::Frozen { thaw_step } = m.state {
+                if thaw_step != u64::MAX && !m.queued && thaw_step <= step {
+                    m.queued = true;
+                    expired.push((thaw_step, pos, m.freezes));
+                }
+            }
+        }
+        expired.sort_unstable();
+        self.pending_restore.extend(expired.into_iter().map(|(_, p, gen)| (p, gen)));
+
+        // Budget-capped restores (oldest first); entries restore only
+        // the freeze episode they were queued for.
+        while out.restore.len() < r_budget {
+            match self.pending_restore.pop_front() {
+                Some((pos, gen)) if !self.is_active_pos(pos) && self.meta[pos].freezes == gen => {
+                    let m = &mut self.meta[pos];
+                    m.state = ScanState::Active;
+                    m.queued = false;
+                    out.restore.push(pos);
+                }
+                Some(_) => continue,
+                None => break,
+            }
+        }
+
+        // Budget-capped freezes: full re-sort of the pending list by
+        // (score, pos), linear restore-membership probes.
+        let window_start = len.saturating_sub(self.cfg.window_k);
+        self.pending.sort_unstable_by_key(|&(pos, _, score)| (score_order_key(score), pos));
+        let mut kept: Vec<(usize, u32, f32)> = Vec::new();
+        let mut budget_full = out.freeze.len() >= r_budget;
+        let pending = std::mem::take(&mut self.pending);
+        for (pos, d, score) in pending {
+            if budget_full {
+                kept.push((pos, d, score)); // stays queued, untouched
+                continue;
+            }
+            let eligible = self.is_active_pos(pos)
+                && pos < window_start
+                && pos >= self.cfg.n_sink
+                && !out.restore.contains(&pos);
+            if !eligible {
+                self.pending_member[pos] = false; // stale candidate — drop
+                continue;
+            }
+            let m = &mut self.meta[pos];
+            m.state = ScanState::Frozen { thaw_step: step + d as u64 };
+            m.frozen_at = step;
+            m.freezes += 1;
+            m.queued = false;
+            self.pending_member[pos] = false;
+            out.freeze.push(pos);
+            out.freeze_thaw_eta.push(step + d as u64);
+            budget_full = out.freeze.len() >= r_budget;
+        }
+        self.pending = kept;
+
+        // Prefetch horizon: full-table scan for imminent thaws.
+        let mut imminent: Vec<(u64, usize)> = Vec::new();
+        for (pos, m) in self.meta.iter().enumerate() {
+            if let ScanState::Frozen { thaw_step } = m.state {
+                if !m.queued
+                    && thaw_step != u64::MAX
+                    && thaw_step > step
+                    && thaw_step <= step + PREFETCH_HORIZON as u64
+                {
+                    imminent.push((thaw_step, pos));
+                }
+            }
+        }
+        imminent.sort_unstable();
+        out.prefetch.extend(imminent.into_iter().take(r_budget).map(|(eta, pos)| (pos, eta)));
+
+        out.normalize();
+    }
+
+    fn observe(&mut self, step: u64, scores: &[f32], len: usize) {
+        self.detect(step, scores, len);
+    }
+
+    fn request_unfreeze(&mut self, scope: UnfreezeScope) -> usize {
+        let mut n = 0;
+        let last = self.last_step;
+        for m in self.meta.iter_mut() {
+            let hit = match (m.state, scope) {
+                (ScanState::Frozen { thaw_step }, UnfreezeScope::Soft) => {
+                    thaw_step != u64::MAX && !m.queued && thaw_step > last
+                }
+                (ScanState::Frozen { .. }, UnfreezeScope::Window { n: horizon, now }) => {
+                    m.frozen_at.saturating_add(horizon) >= now
+                }
+                (ScanState::Frozen { .. }, UnfreezeScope::Full) => true,
+                _ => false,
+            };
+            if hit {
+                let new_thaw = match scope {
+                    UnfreezeScope::Window { now, .. } => now,
+                    _ => last,
+                };
+                m.state = ScanState::Frozen { thaw_step: new_thaw };
+                m.queued = false;
+                n += 1;
+            }
+            if matches!(scope, UnfreezeScope::Full) {
+                m.window.clear();
+            }
+        }
+        if matches!(scope, UnfreezeScope::Full) {
+            self.pending.clear();
+            self.pending_member.fill(false);
+        }
+        n
+    }
+
+    fn force_all_active(&mut self) {
+        for m in &mut self.meta {
+            m.state = ScanState::Active;
+            m.queued = false;
+            m.window.clear();
+        }
+        self.pending.clear();
+        self.pending_member.fill(false);
+        self.pending_restore.clear();
+    }
+
+    fn active_count(&self) -> usize {
+        self.meta.iter().filter(|m| m.state == ScanState::Active).count()
+            + self.len.saturating_sub(self.meta.len())
+    }
+
+    fn frozen_positions(&self) -> Vec<usize> {
+        self.meta
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| matches!(m.state, ScanState::Frozen { .. }))
+            .map(|(p, _)| p)
+            .collect()
+    }
+
+    fn is_frozen(&self, pos: usize) -> bool {
+        matches!(self.meta.get(pos).map(|m| m.state), Some(ScanState::Frozen { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FreezeConfig {
+        FreezeConfig {
+            window_k: 4,
+            n_sink: 1,
+            tau: 0.5,
+            softness_k: 2.0,
+            history_w: 64,
+            r_budget: 4,
+            relative_tau: false,
+        }
+    }
+
+    #[test]
+    fn scan_policy_freezes_and_restores() {
+        let mut p = ScanAsrKfPolicy::new(cfg());
+        let len = 12;
+        for step in 1..=4 {
+            let mut scores = vec![1.0f32; len];
+            scores[2] = 0.0;
+            p.observe(step, &scores, len);
+        }
+        let plan = p.plan(5, len, 4);
+        assert_eq!(plan.freeze, vec![2]);
+        assert_eq!(plan.freeze_thaw_eta, vec![6]);
+        assert!(p.is_frozen(2));
+        assert_eq!(p.active_count(), len - 1);
+        let plan = p.plan(6, len, 4);
+        assert_eq!(plan.restore, vec![2]);
+        assert!(!p.is_frozen(2));
+    }
+
+    #[test]
+    fn full_reset_restores_everything() {
+        let mut p = ScanAsrKfPolicy::new(cfg());
+        let len = 20;
+        for step in 1..=10 {
+            p.observe(step, &vec![0.0f32; len], len);
+            p.plan(step, len, 16);
+        }
+        assert!(p.frozen_count() > 0);
+        let n = p.request_unfreeze(UnfreezeScope::Full);
+        assert_eq!(n, p.frozen_count());
+        p.plan(11, len, 64);
+        assert_eq!(p.frozen_count(), 0);
+    }
+}

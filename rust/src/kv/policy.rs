@@ -3,11 +3,23 @@
 //! ASR-KF-EGR policy. Baselines (Full KV, H2O, StreamingLLM) implement
 //! the same trait in `crate::baselines` so every bench drives each
 //! method through the identical engine.
+//!
+//! The ASR-KF-EGR implementation here is the *indexed* control plane
+//! (see `README.md` in this directory): every per-step decision is
+//! answered by the token table's thaw/active/frozen indexes and a
+//! score-ordered candidate heap, so `plan` + `observe` cost
+//! O(window_k + r_budget + expiries·log n) instead of O(context_len).
+//! The retained brute-force implementation lives in
+//! [`crate::kv::oracle`] and is property-tested plan-for-plan
+//! identical (`tests/prop_policy.rs`).
+
+use std::collections::BinaryHeap;
 
 use crate::config::FreezeConfig;
 use crate::kv::freeze::freeze_duration;
-use crate::kv::relevance::detect_low_importance;
-use crate::kv::state::{TokenState, TokenTable};
+use crate::kv::relevance::detect_low_importance_into;
+use crate::kv::state::TokenTable;
+use crate::util::bitset::BitSet;
 
 /// How many steps before a predicted thaw a frozen row becomes a
 /// prefetch hint (`Plan::prefetch`) for the tiered store's staging
@@ -17,10 +29,11 @@ pub const PREFETCH_HORIZON: u32 = 3;
 
 /// What the engine must do before the next decode step.
 ///
-/// Position lists are sorted strictly ascending (policies call
-/// [`Plan::normalize`] before returning) so the engine can coalesce
-/// contiguous runs into batched span transfers
-/// (`engine::layout::coalesce_runs` + `gather_rows`/`scatter_rows`).
+/// Position lists are sorted strictly ascending (policies establish
+/// the invariant before returning, via [`Plan::normalize`] or by
+/// construction) so the engine can coalesce contiguous runs into
+/// batched span transfers (`engine::layout::coalesce_runs` +
+/// `gather_rows`/`scatter_rows`).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Plan {
     /// Rows to move active -> frozen storage (gathered + zeroed by the
@@ -46,12 +59,25 @@ pub struct Plan {
 }
 
 impl Plan {
+    /// Reset to the empty plan, keeping list capacity — engines hold
+    /// one `Plan` buffer and refill it each step
+    /// ([`KvPolicy::plan_into`]), so the per-step lists never
+    /// reallocate in steady state.
+    pub fn clear(&mut self) {
+        self.freeze.clear();
+        self.restore.clear();
+        self.freeze_thaw_eta.clear();
+        self.prefetch.clear();
+        self.drop_payload = false;
+    }
+
     /// Sort the position lists ascending — `freeze_thaw_eta` follows
     /// `freeze` through the permutation — so the engine can coalesce
     /// contiguous runs into single span copies per plane. `prefetch`
     /// keeps its soonest-thaw order (it feeds the staging queue, not a
-    /// batched transfer). Every policy calls this before returning a
-    /// plan; the engine debug-asserts the invariant.
+    /// batched transfer). Policies that build their lists out of order
+    /// call this before returning; the engine debug-asserts the
+    /// invariant.
     pub fn normalize(&mut self) {
         debug_assert!(
             self.freeze_thaw_eta.is_empty() || self.freeze_thaw_eta.len() == self.freeze.len(),
@@ -81,7 +107,7 @@ impl Plan {
 /// Scope of a recovery-triggered unfreeze (paper §3.6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum UnfreezeScope {
-    /// SR: tokens with remaining duration > 1.
+    /// SR: tokens whose thaw lies more than one step out.
     Soft,
     /// WR: tokens frozen within the last `n` steps.
     Window { n: u64, now: u64 },
@@ -97,8 +123,19 @@ pub trait KvPolicy {
     fn on_prefill(&mut self, scores: &[f32], len: usize);
 
     /// Called before decode step `step`; `len` tokens exist so far.
-    /// Returned lists must each respect the engine's r_budget.
-    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan;
+    /// Clears `out` and fills it with this step's plan; the returned
+    /// lists must each respect the engine's r_budget. Engines keep one
+    /// `Plan` buffer alive across steps so plan construction is
+    /// allocation-free in steady state.
+    fn plan_into(&mut self, step: u64, len: usize, r_budget: usize, out: &mut Plan);
+
+    /// Allocating convenience wrapper over [`KvPolicy::plan_into`]
+    /// (tests and one-shot callers).
+    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan {
+        let mut out = Plan::default();
+        self.plan_into(step, len, r_budget, &mut out);
+        out
+    }
 
     /// Called after the decode step with fresh Eq.2 scores
     /// (`scores[pos]` valid for pos < len; frozen rows score 0).
@@ -120,20 +157,89 @@ pub trait KvPolicy {
     fn is_frozen(&self, pos: usize) -> bool;
 }
 
+/// Map an f32 score onto a total order that matches `partial_cmp` for
+/// non-NaN values (sign-magnitude to biased-unsigned). The candidate
+/// heap and the brute-force oracle both sort by `(score_key, pos)`, so
+/// freeze selection under a binding budget is deterministic and
+/// identical across implementations.
+pub(crate) fn score_order_key(s: f32) -> u32 {
+    let b = s.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+/// Score-ordered freeze-candidate queue: a min-heap on
+/// `(score_key, pos)` plus a membership bitset, replacing the old
+/// `Vec` that paid an O(pending) dedup probe per detection and a full
+/// re-sort per observe. Push/pop are O(log m); membership is O(1).
+#[derive(Default)]
+struct CandidateQueue {
+    /// `Reverse` makes `BinaryHeap` a min-heap: lowest (score, pos)
+    /// pops first — freeze the least-relevant row when the budget
+    /// binds, ties broken by position.
+    heap: BinaryHeap<std::cmp::Reverse<(u32, usize, u32)>>,
+    member: BitSet,
+}
+
+impl CandidateQueue {
+    fn grow(&mut self, len: usize) {
+        self.member.grow(len);
+    }
+
+    /// Queue `pos` with Eq.3 duration `d` unless already pending
+    /// (keep-first: the duration computed at first queueing sticks,
+    /// matching the original dedup semantics).
+    fn push(&mut self, pos: usize, d: u32, score: f32) {
+        if self.member.get(pos) {
+            return;
+        }
+        self.member.set(pos);
+        self.heap.push(std::cmp::Reverse((score_order_key(score), pos, d)));
+    }
+
+    /// Lowest-score candidate, or None.
+    fn pop(&mut self) -> Option<(usize, u32)> {
+        let std::cmp::Reverse((_, pos, d)) = self.heap.pop()?;
+        self.member.clear(pos);
+        Some((pos, d))
+    }
+
+    fn clear(&mut self) {
+        self.heap.clear();
+        self.member.clear_all();
+    }
+}
+
 // ---------------------------------------------------------------------------
-// ASR-KF-EGR (the paper's Algorithm 1)
+// ASR-KF-EGR (the paper's Algorithm 1), indexed control plane
 
 pub struct AsrKfPolicy {
     cfg: FreezeConfig,
     pub table: TokenTable,
-    /// Freeze candidates queued by `observe` (score-ascending), applied
-    /// by the next `plan` within the transfer budget.
-    pending_freeze: Vec<(usize, u32, f32)>, // (pos, duration, score)
-    /// Restores whose timers expired but exceeded the budget.
-    pending_restore: std::collections::VecDeque<usize>,
+    /// Freeze candidates queued by `observe`, popped score-ascending by
+    /// `plan` within the transfer budget.
+    pending: CandidateQueue,
+    /// Restores whose timers expired but exceeded the budget, tagged
+    /// with the freeze-episode counter at expiry time: recovery can
+    /// re-report a queued row (duplicate entries), and a row restored
+    /// through one entry may be re-frozen before a stale duplicate
+    /// reaches the queue front — the tag keeps that stale entry from
+    /// prematurely thawing the new freeze episode.
+    pending_restore: std::collections::VecDeque<(usize, u32)>,
     len: usize,
+    /// Most recent step seen by `plan`/`observe` — the "now" for
+    /// recovery scopes.
+    last_step: u64,
     pub stat_freezes: u64,
     pub stat_restores: u64,
+    // --- per-step scratch, reused across plans (no steady-state allocs)
+    expired: Vec<usize>,
+    freeze_buf: Vec<(usize, u64)>,
+    restore_marks: BitSet,
+    detections: Vec<(usize, f32)>,
 }
 
 impl AsrKfPolicy {
@@ -141,29 +247,44 @@ impl AsrKfPolicy {
         AsrKfPolicy {
             cfg,
             table: TokenTable::default(),
-            pending_freeze: Vec::new(),
+            pending: CandidateQueue::default(),
             pending_restore: std::collections::VecDeque::new(),
             len: 0,
+            last_step: 0,
             stat_freezes: 0,
             stat_restores: 0,
+            expired: Vec::new(),
+            freeze_buf: Vec::new(),
+            restore_marks: BitSet::new(),
+            detections: Vec::new(),
         }
     }
 
     fn detect(&mut self, step: u64, scores: &[f32], len: usize) {
         self.table.grow_to(len);
         self.len = len;
+        self.last_step = step;
+        let window_start = len.saturating_sub(self.cfg.window_k);
+        let lo = self.cfg.n_sink.min(window_start);
+        // Candidate walk over the active-position index: cost tracks
+        // the number of active candidates, not the full position range.
         let table = &self.table;
-        let detections = detect_low_importance(&self.cfg, scores, len, |p| table.is_active(p));
-        for (pos, score) in detections {
-            let c = self.table.meta[pos].window.record(step, self.cfg.history_w as u64);
+        let mut detections = std::mem::take(&mut self.detections);
+        detect_low_importance_into(
+            &self.cfg,
+            scores,
+            table.active_range(lo, window_start),
+            &mut detections,
+        );
+        self.pending.grow(len);
+        for &(pos, score) in &detections {
+            let c = self.table.record_detection(pos, step, self.cfg.history_w as u64);
             let d = freeze_duration(c, self.cfg.softness_k);
-            if d > 0 && !self.pending_freeze.iter().any(|&(p, _, _)| p == pos) {
-                self.pending_freeze.push((pos, d, score));
+            if d > 0 {
+                self.pending.push(pos, d, score);
             }
         }
-        // freeze least-relevant first when the budget binds
-        self.pending_freeze
-            .sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal));
+        self.detections = detections;
     }
 }
 
@@ -178,80 +299,83 @@ impl KvPolicy for AsrKfPolicy {
         self.detect(0, scores, len);
     }
 
-    fn plan(&mut self, step: u64, len: usize, r_budget: usize) -> Plan {
+    fn plan_into(&mut self, step: u64, len: usize, r_budget: usize, out: &mut Plan) {
+        out.clear();
         self.table.grow_to(len);
+        self.len = len;
+        self.last_step = step;
 
-        // Rolling re-evaluation (§3.5): decrement timers, queue expired.
-        for pos in self.table.tick_timers() {
-            self.pending_restore.push_back(pos);
-        }
+        // Rolling re-evaluation (§3.5): pop actually-expired timers
+        // from the thaw index — O(expiries·log n), not O(len).
+        self.expired.clear();
+        self.table.pop_expired(step, &mut self.expired);
+        let table = &self.table;
+        self.pending_restore.extend(self.expired.drain(..).map(|p| (p, table.freezes(p))));
 
-        // Budget-capped restores (oldest first).
-        let mut restore = Vec::new();
-        while restore.len() < r_budget {
+        // Budget-capped restores (oldest first). An entry restores only
+        // the freeze episode it was queued for: stale entries (row
+        // already restored, possibly re-frozen since) are dropped.
+        while out.restore.len() < r_budget {
             match self.pending_restore.pop_front() {
-                Some(pos) if self.table.is_frozen(pos) => {
+                Some((pos, gen))
+                    if self.table.is_frozen(pos) && self.table.freezes(pos) == gen =>
+                {
                     self.table.unfreeze(pos);
-                    restore.push(pos);
+                    out.restore.push(pos);
                 }
-                Some(_) => continue, // already active (e.g. recovery raced)
+                Some(_) => continue, // stale entry (recovery raced / re-frozen)
                 None => break,
             }
         }
-        self.stat_restores += restore.len() as u64;
+        out.restore.sort_unstable();
+        self.restore_marks.grow(len);
+        for &pos in &out.restore {
+            self.restore_marks.set(pos);
+        }
+        self.stat_restores += out.restore.len() as u64;
 
-        // Budget-capped freezes (lowest score first).
+        // Budget-capped freezes, lowest score first off the candidate
+        // heap; candidates beyond the budget stay queued. Eligibility
+        // is re-checked at pop (stale entries drop), and the restore
+        // probe is an O(1) bitset lookup instead of a list scan.
         let window_start = len.saturating_sub(self.cfg.window_k);
-        let mut freeze = Vec::new();
-        let mut freeze_thaw_eta = Vec::new();
-        let mut rest = Vec::new();
-        for (pos, d, score) in self.pending_freeze.drain(..) {
+        self.freeze_buf.clear();
+        while self.freeze_buf.len() < r_budget {
+            let Some((pos, d)) = self.pending.pop() else { break };
             let eligible = self.table.is_active(pos)
                 && pos < window_start
                 && pos >= self.cfg.n_sink
-                && !restore.contains(&pos);
+                && !self.restore_marks.get(pos);
             if !eligible {
                 continue; // stale candidate — drop
             }
-            if freeze.len() < r_budget {
-                self.table.freeze(pos, d, step);
-                freeze.push(pos);
-                // tier hint: the timer ticks down once per plan, so the
-                // row is predicted back in `d` steps
-                freeze_thaw_eta.push(step + d as u64);
-            } else {
-                rest.push((pos, d, score));
-            }
+            // tier hint: the row's timer expires at absolute step
+            // `step + d` (Eq.3 duration from the freeze step)
+            self.table.freeze(pos, step + d as u64, step);
+            self.freeze_buf.push((pos, step + d as u64));
         }
-        self.pending_freeze = rest;
-        self.stat_freezes += freeze.len() as u64;
+        self.freeze_buf.sort_unstable();
+        for &(pos, eta) in &self.freeze_buf {
+            out.freeze.push(pos);
+            out.freeze_thaw_eta.push(eta);
+        }
+        self.stat_freezes += out.freeze.len() as u64;
 
         // Tier hint: rows about to thaw (the store stages them hot so
-        // the restore never dequantizes inside the decode step).
-        let mut prefetch: Vec<(u32, usize)> = self
-            .table
-            .meta
-            .iter()
-            .enumerate()
-            .filter_map(|(pos, m)| match m.state {
-                TokenState::Frozen { remaining }
-                    if (1..=PREFETCH_HORIZON).contains(&remaining) =>
-                {
-                    Some((remaining, pos))
-                }
-                _ => None,
-            })
-            .collect();
-        prefetch.sort_unstable();
-        let prefetch = prefetch
-            .into_iter()
-            .take(r_budget)
-            .map(|(rem, p)| (p, step + rem as u64))
-            .collect();
+        // the restore never dequantizes inside the decode step) — a
+        // range query over the thaw index, soonest first.
+        for (eta, pos) in self.table.thaw_range(step + 1, step + PREFETCH_HORIZON as u64) {
+            if out.prefetch.len() >= r_budget {
+                break;
+            }
+            out.prefetch.push((pos, eta));
+        }
 
-        let mut plan = Plan { freeze, restore, drop_payload: false, freeze_thaw_eta, prefetch };
-        plan.normalize();
-        plan
+        for &pos in &out.restore {
+            self.restore_marks.clear(pos);
+        }
+        debug_assert!(out.freeze.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(out.restore.windows(2).all(|w| w[0] < w[1]));
     }
 
     fn observe(&mut self, step: u64, scores: &[f32], len: usize) {
@@ -259,45 +383,30 @@ impl KvPolicy for AsrKfPolicy {
     }
 
     fn request_unfreeze(&mut self, scope: UnfreezeScope) -> usize {
-        let mut n = 0;
-        for pos in 0..self.table.len() {
-            let m = &mut self.table.meta[pos];
-            let hit = match (m.state, scope) {
-                (TokenState::Frozen { remaining }, UnfreezeScope::Soft) => remaining > 1,
-                (TokenState::Frozen { .. }, UnfreezeScope::Window { n, now }) => {
-                    m.frozen_at + n >= now
-                }
-                (TokenState::Frozen { .. }, UnfreezeScope::Full) => true,
-                _ => false,
-            };
-            if hit {
-                // expire the timer; the normal tick/restore path (with
-                // its transfer budget) brings the row back
-                m.state = TokenState::Frozen { remaining: 1 };
-                n += 1;
-            }
-            if matches!(scope, UnfreezeScope::Full) {
-                m.window.clear();
+        match scope {
+            UnfreezeScope::Soft => self.table.soft_expire(self.last_step),
+            UnfreezeScope::Window { n, now } => self.table.window_expire(n, now),
+            UnfreezeScope::Full => {
+                let n = self.table.full_expire(self.last_step);
+                self.pending.clear();
+                n
             }
         }
-        if matches!(scope, UnfreezeScope::Full) {
-            self.pending_freeze.clear();
-        }
-        n
     }
 
     fn force_all_active(&mut self) {
-        for m in &mut self.table.meta {
-            m.state = TokenState::Active;
-            m.window.clear();
-        }
-        self.pending_freeze.clear();
+        self.table.force_all_active();
+        self.pending.clear();
         self.pending_restore.clear();
     }
 
     fn active_count(&self) -> usize {
         // tokens beyond the table (not yet observed) are active
         self.table.active_count() + self.len.saturating_sub(self.table.len())
+    }
+
+    fn frozen_count(&self) -> usize {
+        self.table.frozen_count()
     }
 
     fn frozen_positions(&self) -> Vec<usize> {
@@ -352,7 +461,7 @@ mod tests {
         let mut p = AsrKfPolicy::new(cfg());
         freeze_pos_by_detections(&mut p, 2, 12);
         assert!(p.is_frozen(2));
-        // c=4 -> d=1: one tick later the timer expires and it restores
+        // c=4 -> d=1: the absolute thaw step has long passed by 50
         let plan = p.plan(50, 12, 4);
         assert!(plan.restore.contains(&2));
         assert!(!p.is_frozen(2));
@@ -402,8 +511,9 @@ mod tests {
         let frozen_before = p.frozen_count();
         assert!(frozen_before > 0);
         let n = p.request_unfreeze(UnfreezeScope::Soft);
-        // Soft touches only remaining > 1 tokens; afterwards all frozen
-        // tokens have remaining <= 1, so one plan restores up to budget
+        // Soft touches only rows thawing more than one step out;
+        // afterwards every timer is due, so one plan restores up to
+        // budget
         let plan = p.plan(100, len, 64);
         assert!(plan.restore.len() >= n.min(1));
     }
@@ -473,6 +583,19 @@ mod tests {
     }
 
     #[test]
+    fn plan_clear_resets_lists_and_flag() {
+        let mut p = Plan {
+            freeze: vec![1],
+            restore: vec![2],
+            freeze_thaw_eta: vec![3],
+            prefetch: vec![(4, 5)],
+            drop_payload: true,
+        };
+        p.clear();
+        assert_eq!(p, Plan::default());
+    }
+
+    #[test]
     fn plans_are_sorted_for_run_coalescing() {
         let mut p = AsrKfPolicy::new(cfg());
         let len = 40;
@@ -506,5 +629,29 @@ mod tests {
             p.plan(step, len, 8);
             assert_eq!(p.active_count() + p.frozen_count(), len);
         }
+    }
+
+    #[test]
+    fn plan_into_reuses_buffers_across_steps() {
+        let mut p = AsrKfPolicy::new(cfg());
+        let len = 40;
+        let mut plan = Plan::default();
+        for step in 1..=20 {
+            p.observe(step, &vec![0.0f32; len], len);
+            p.plan_into(step, len, 8, &mut plan);
+            assert!(plan.freeze.len() <= 8 && plan.restore.len() <= 8);
+        }
+        // the buffer carries no state between steps beyond capacity
+        p.plan_into(100, len, 0, &mut plan);
+        assert!(plan.freeze.is_empty() && plan.restore.is_empty() && plan.prefetch.is_empty());
+    }
+
+    #[test]
+    fn score_order_key_is_total_and_monotone() {
+        let xs = [-3.5f32, -0.0, 0.0, 0.1, 0.5, 2.0, 100.0];
+        for w in xs.windows(2) {
+            assert!(score_order_key(w[0]) <= score_order_key(w[1]), "{} !<= {}", w[0], w[1]);
+        }
+        assert!(score_order_key(-1.0) < score_order_key(1.0));
     }
 }

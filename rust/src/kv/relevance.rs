@@ -32,25 +32,51 @@ pub fn effective_tau(cfg: &FreezeConfig, candidate_scores: &[f32]) -> f32 {
     cfg.tau * mean
 }
 
+/// Detect low-importance positions among an already-enumerated
+/// candidate walk, writing (position, score) pairs with
+/// `score < tau_eff` into `out` (cleared first). `out` doubles as the
+/// candidate scratch, so a caller that keeps it across steps pays no
+/// per-step allocation — the policy hot path feeds this from the token
+/// table's active-position index instead of filtering the full range.
+///
+/// The relative-tau mean is accumulated in candidate order, so callers
+/// that enumerate the same candidate set get bit-identical thresholds
+/// regardless of how the walk is implemented (the oracle-equivalence
+/// property tests rely on this).
+pub fn detect_low_importance_into(
+    cfg: &FreezeConfig,
+    scores: &[f32],
+    candidates: impl Iterator<Item = usize>,
+    out: &mut Vec<(usize, f32)>,
+) {
+    out.clear();
+    out.extend(candidates.map(|p| (p, scores[p])));
+    if out.is_empty() {
+        return;
+    }
+    let tau_eff = if cfg.relative_tau {
+        let mean = out.iter().map(|&(_, s)| s).sum::<f32>() / out.len() as f32;
+        cfg.tau * mean
+    } else {
+        cfg.tau
+    };
+    out.retain(|&(_, s)| s < tau_eff);
+}
+
 /// Detect low-importance positions: returns (position, score) pairs
-/// with score < tau_eff among scoreable positions.
+/// with score < tau_eff among scoreable positions. Allocating
+/// convenience wrapper over [`detect_low_importance_into`] (the
+/// brute-force oracle and tests use it; the indexed policy reuses a
+/// scratch buffer).
 pub fn detect_low_importance(
     cfg: &FreezeConfig,
     scores: &[f32],
     len: usize,
     is_active: impl Fn(usize) -> bool + Copy,
 ) -> Vec<(usize, f32)> {
-    let cands: Vec<usize> = scoreable_positions(cfg, len, is_active).collect();
-    if cands.is_empty() {
-        return Vec::new();
-    }
-    let cand_scores: Vec<f32> = cands.iter().map(|&p| scores[p]).collect();
-    let tau_eff = effective_tau(cfg, &cand_scores);
-    cands
-        .into_iter()
-        .zip(cand_scores)
-        .filter(|&(_, s)| s < tau_eff)
-        .collect()
+    let mut out = Vec::new();
+    detect_low_importance_into(cfg, scores, scoreable_positions(cfg, len, is_active), &mut out);
+    out
 }
 
 #[cfg(test)]

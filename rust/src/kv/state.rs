@@ -1,4 +1,39 @@
-//! Per-token state machine shared by all KV policies.
+//! Per-token state machine shared by all KV policies, indexed for
+//! O(log n) control-plane queries.
+//!
+//! The original table stored a countdown timer per frozen row and
+//! answered every policy question by scanning `meta` end to end:
+//! `tick_timers` decremented all n timers per decode step,
+//! `active_count`/`frozen_positions` were full filters, and the
+//! prefetch scan walked the whole table looking for imminent thaws.
+//! At million-token contexts that put an O(context_length) sweep on
+//! every decode step regardless of how little work the step did.
+//!
+//! This version keeps *absolute* thaw steps and three incremental
+//! indexes updated on each freeze/unfreeze (mirroring
+//! `offload::sched::ThawScheduler`):
+//!
+//! * `thaw: BTreeSet<(thaw_step, pos)>` — finite-thaw frozen rows.
+//!   [`TokenTable::pop_expired`] is a range pop of actually-expired
+//!   entries and [`TokenTable::thaw_range`] answers the prefetch
+//!   horizon query, each O(hits·log n) instead of O(n).
+//! * `frozen: BTreeSet<usize>` — every frozen position, sorted, so
+//!   recovery scopes walk frozen rows only.
+//! * `active: BTreeSet<usize>` — the complement, so low-importance
+//!   detection iterates active candidates in `[n_sink, window_start)`
+//!   without filtering the full position range.
+//!
+//! Detection-window clearing (Full reset / RR) is epoch-based: bumping
+//! [`TokenTable::clear_windows`] lazily invalidates every window in
+//! O(1); windows reset on their next recorded detection.
+//!
+//! All state changes go through methods so the indexes can never drift
+//! from `meta` — the brute-force equivalence oracle lives in
+//! `crate::kv::oracle` and is property-tested against this table
+//! through `AsrKfPolicy` in `tests/prop_policy.rs`.
+
+use std::collections::BTreeSet;
+use std::ops::Bound;
 
 use crate::kv::freeze::DetectionWindow;
 
@@ -7,21 +42,28 @@ use crate::kv::freeze::DetectionWindow;
 pub enum TokenState {
     /// Row is in the active cache and participates in attention.
     Active,
-    /// Row was moved to off-GPU storage; `remaining` steps until the
-    /// timer expires and it is restored. `u32::MAX` = permanent
-    /// eviction (baselines only — ASR-KF-EGR never does this).
-    Frozen { remaining: u32 },
+    /// Row was moved to off-GPU storage; `thaw_step` is the absolute
+    /// step at which its timer expires ([`TokenTable::NEVER`] =
+    /// permanent eviction — baselines only; ASR-KF-EGR never does
+    /// this).
+    Frozen { thaw_step: u64 },
 }
 
 #[derive(Debug, Clone)]
 pub struct TokenMeta {
-    pub state: TokenState,
+    state: TokenState,
     /// Low-importance detection history within window W.
-    pub window: DetectionWindow,
+    window: DetectionWindow,
+    /// Epoch of the last window write (see [`TokenTable::clear_windows`]).
+    window_epoch: u64,
     /// Total times this token has been frozen (stats/traces).
-    pub freezes: u32,
+    freezes: u32,
     /// Step at which the current freeze began (WR recovery scope).
-    pub frozen_at: u64,
+    frozen_at: u64,
+    /// Timer expired and was reported by [`TokenTable::pop_expired`];
+    /// the row stays frozen (awaiting a budgeted restore) but is no
+    /// longer in the thaw index.
+    queued: bool,
 }
 
 impl Default for TokenMeta {
@@ -29,23 +71,39 @@ impl Default for TokenMeta {
         TokenMeta {
             state: TokenState::Active,
             window: DetectionWindow::default(),
+            window_epoch: 0,
             freezes: 0,
             frozen_at: 0,
+            queued: false,
         }
     }
 }
 
-/// Token table: per-position metadata for one sequence.
+/// Token table: per-position metadata for one sequence, plus the
+/// incremental indexes described in the module docs.
 #[derive(Debug, Default)]
 pub struct TokenTable {
-    pub meta: Vec<TokenMeta>,
+    meta: Vec<TokenMeta>,
+    /// Sorted index of active positions (detection candidates).
+    active: BTreeSet<usize>,
+    /// Sorted index of every frozen position (recovery scopes).
+    frozen: BTreeSet<usize>,
+    /// `(thaw_step, pos)` for frozen rows with finite timers that have
+    /// not yet expired.
+    thaw: BTreeSet<(u64, usize)>,
+    /// Detection-window epoch (lazy O(1) clear-all).
+    epoch: u64,
 }
 
 impl TokenTable {
+    /// Sentinel thaw step for permanent eviction (never expires).
+    pub const NEVER: u64 = u64::MAX;
+
     /// Grow the table to cover `len` tokens (new tokens start Active).
     pub fn grow_to(&mut self, len: usize) {
-        if self.meta.len() < len {
-            self.meta.resize_with(len, TokenMeta::default);
+        while self.meta.len() < len {
+            self.active.insert(self.meta.len());
+            self.meta.push(TokenMeta { window_epoch: self.epoch, ..TokenMeta::default() });
         }
     }
 
@@ -57,58 +115,198 @@ impl TokenTable {
         self.meta.is_empty()
     }
 
+    /// Current state (positions beyond the table are Active).
+    pub fn state(&self, pos: usize) -> TokenState {
+        self.meta.get(pos).map(|m| m.state).unwrap_or(TokenState::Active)
+    }
+
     pub fn is_active(&self, pos: usize) -> bool {
-        matches!(self.meta.get(pos).map(|m| m.state), Some(TokenState::Active) | None)
+        matches!(self.state(pos), TokenState::Active)
     }
 
     pub fn is_frozen(&self, pos: usize) -> bool {
-        matches!(self.meta.get(pos).map(|m| m.state), Some(TokenState::Frozen { .. }))
+        matches!(self.state(pos), TokenState::Frozen { .. })
     }
 
+    /// O(1): active rows within the table.
     pub fn active_count(&self) -> usize {
-        self.meta.iter().filter(|m| m.state == TokenState::Active).count()
+        self.meta.len() - self.frozen.len()
     }
 
+    /// O(1): frozen rows within the table.
+    pub fn frozen_count(&self) -> usize {
+        self.frozen.len()
+    }
+
+    /// Sorted frozen positions (O(frozen), not O(len)).
     pub fn frozen_positions(&self) -> Vec<usize> {
-        self.meta
-            .iter()
-            .enumerate()
-            .filter(|(_, m)| matches!(m.state, TokenState::Frozen { .. }))
-            .map(|(p, _)| p)
-            .collect()
+        self.frozen.iter().copied().collect()
     }
 
-    pub fn freeze(&mut self, pos: usize, duration: u32, step: u64) {
+    /// Active positions in `[lo, hi)`, ascending — the detection
+    /// candidate walk. Cost tracks the matches, not the range width.
+    pub fn active_range(&self, lo: usize, hi: usize) -> impl Iterator<Item = usize> + '_ {
+        self.active.range(lo.min(hi)..hi).copied()
+    }
+
+    /// Finite-thaw frozen rows with `lo <= thaw_step <= hi`, soonest
+    /// first — the prefetch-horizon query. Rows already expired and
+    /// reported (queued for restore) are not in the index.
+    pub fn thaw_range(&self, lo: u64, hi: u64) -> impl Iterator<Item = (u64, usize)> + '_ {
+        let lo = Bound::Included((lo.min(hi), 0usize));
+        let hi = Bound::Included((hi, usize::MAX));
+        self.thaw.range((lo, hi)).copied()
+    }
+
+    /// Times `pos` has been frozen (stats/traces).
+    pub fn freezes(&self, pos: usize) -> u32 {
+        self.meta.get(pos).map(|m| m.freezes).unwrap_or(0)
+    }
+
+    /// Step at which the current freeze began.
+    pub fn frozen_at(&self, pos: usize) -> u64 {
+        self.meta.get(pos).map(|m| m.frozen_at).unwrap_or(0)
+    }
+
+    /// Freeze an active row until absolute step `thaw_step`
+    /// ([`TokenTable::NEVER`] = permanent), recording the freeze step.
+    pub fn freeze(&mut self, pos: usize, thaw_step: u64, step: u64) {
         let m = &mut self.meta[pos];
         debug_assert_eq!(m.state, TokenState::Active, "freezing non-active pos {pos}");
-        m.state = TokenState::Frozen { remaining: duration };
+        m.state = TokenState::Frozen { thaw_step };
         m.freezes += 1;
         m.frozen_at = step;
+        m.queued = false;
+        self.active.remove(&pos);
+        self.frozen.insert(pos);
+        if thaw_step != Self::NEVER {
+            self.thaw.insert((thaw_step, pos));
+        }
     }
 
     pub fn unfreeze(&mut self, pos: usize) {
         let m = &mut self.meta[pos];
-        debug_assert!(matches!(m.state, TokenState::Frozen { .. }));
+        let TokenState::Frozen { thaw_step } = m.state else {
+            debug_assert!(
+                matches!(m.state, TokenState::Frozen { .. }),
+                "unfreezing non-frozen pos {pos}"
+            );
+            return;
+        };
+        if !m.queued && thaw_step != Self::NEVER {
+            self.thaw.remove(&(thaw_step, pos));
+        }
         m.state = TokenState::Active;
+        m.queued = false;
+        self.frozen.remove(&pos);
+        self.active.insert(pos);
     }
 
-    /// Decrement all finite freeze timers; return positions whose timer
-    /// just expired (1 -> 0). Positions already at 0 (expired earlier,
-    /// awaiting a budget slot to restore) are not re-reported.
-    pub fn tick_timers(&mut self) -> Vec<usize> {
-        let mut expired = Vec::new();
-        for (pos, m) in self.meta.iter_mut().enumerate() {
-            if let TokenState::Frozen { remaining } = &mut m.state {
-                if *remaining == u32::MAX || *remaining == 0 {
-                    continue; // permanent eviction / already awaiting restore
-                }
-                *remaining -= 1;
-                if *remaining == 0 {
-                    expired.push(pos);
-                }
+    /// Pop every indexed row whose thaw step has arrived (`<= now`),
+    /// appending positions to `out` in `(thaw_step, pos)` order. Each
+    /// expiry is reported exactly once; the rows stay frozen (awaiting
+    /// a budgeted restore). O(expiries · log n).
+    pub fn pop_expired(&mut self, now: u64, out: &mut Vec<usize>) {
+        while let Some(&(eta, pos)) = self.thaw.iter().next() {
+            if eta > now {
+                break;
             }
+            self.thaw.remove(&(eta, pos));
+            self.meta[pos].queued = true;
+            out.push(pos);
         }
-        expired
+    }
+
+    /// Rewrite a frozen row's thaw step (recovery). Re-indexes the row;
+    /// a row already reported by [`TokenTable::pop_expired`] re-enters
+    /// the index (and will be reported again — the policy's restore
+    /// loop tolerates duplicate queue entries).
+    pub fn schedule_thaw(&mut self, pos: usize, new_thaw: u64) {
+        let m = &mut self.meta[pos];
+        let TokenState::Frozen { thaw_step } = m.state else {
+            debug_assert!(
+                matches!(m.state, TokenState::Frozen { .. }),
+                "scheduling thaw for non-frozen pos {pos}"
+            );
+            return;
+        };
+        if !m.queued && thaw_step != Self::NEVER {
+            self.thaw.remove(&(thaw_step, pos));
+        }
+        self.meta[pos].state = TokenState::Frozen { thaw_step: new_thaw };
+        self.meta[pos].queued = false;
+        self.thaw.insert((new_thaw, pos));
+    }
+
+    /// SR scope: expire every frozen row whose thaw lies strictly
+    /// beyond `now` (rows already due are left to the normal restore
+    /// path). Returns the number of rows touched. O(hits · log n) via
+    /// the thaw index — permanently evicted rows are not in the index
+    /// and are never touched.
+    pub fn soft_expire(&mut self, now: u64) -> usize {
+        let lo = Bound::Excluded((now, usize::MAX));
+        let hits: Vec<(u64, usize)> = self.thaw.range((lo, Bound::Unbounded)).copied().collect();
+        for &(_, pos) in &hits {
+            self.schedule_thaw(pos, now);
+        }
+        hits.len()
+    }
+
+    /// WR scope: expire every frozen row whose freeze began within the
+    /// last `n` steps (`frozen_at + n >= now`). Walks frozen rows only.
+    pub fn window_expire(&mut self, n: u64, now: u64) -> usize {
+        let hits: Vec<usize> = self
+            .frozen
+            .iter()
+            .copied()
+            .filter(|&p| self.meta[p].frozen_at.saturating_add(n) >= now)
+            .collect();
+        for &pos in &hits {
+            self.schedule_thaw(pos, now);
+        }
+        hits.len()
+    }
+
+    /// FR scope: expire every frozen row and clear all detection
+    /// counters. O(frozen · log n) + O(1) for the counter clear.
+    pub fn full_expire(&mut self, now: u64) -> usize {
+        let hits: Vec<usize> = self.frozen.iter().copied().collect();
+        for &pos in &hits {
+            self.schedule_thaw(pos, now);
+        }
+        self.clear_windows();
+        hits.len()
+    }
+
+    /// Lazily clear every position's detection window (O(1) epoch bump;
+    /// each window resets on its next write).
+    pub fn clear_windows(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Record a low-importance detection for `pos` at `step` within
+    /// history window `w`; returns the updated count c.
+    pub fn record_detection(&mut self, pos: usize, step: u64, w: u64) -> u32 {
+        let epoch = self.epoch;
+        let m = &mut self.meta[pos];
+        if m.window_epoch != epoch {
+            m.window.clear();
+            m.window_epoch = epoch;
+        }
+        m.window.record(step, w)
+    }
+
+    /// RR reset: every row active, all counters cleared.
+    pub fn force_all_active(&mut self) {
+        for &pos in &self.frozen {
+            let m = &mut self.meta[pos];
+            m.state = TokenState::Active;
+            m.queued = false;
+            self.active.insert(pos);
+        }
+        self.frozen.clear();
+        self.thaw.clear();
+        self.clear_windows();
     }
 }
 
@@ -124,41 +322,55 @@ mod tests {
         assert!(t.is_active(3));
         t.grow_to(3); // never shrinks
         assert_eq!(t.len(), 5);
+        assert_eq!(t.active_range(0, 5).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn freeze_unfreeze_cycle() {
         let mut t = TokenTable::default();
         t.grow_to(4);
-        t.freeze(2, 3, 10);
+        t.freeze(2, 13, 10);
         assert!(t.is_frozen(2));
         assert_eq!(t.active_count(), 3);
-        assert_eq!(t.meta[2].freezes, 1);
-        assert_eq!(t.meta[2].frozen_at, 10);
+        assert_eq!(t.frozen_count(), 1);
+        assert_eq!(t.freezes(2), 1);
+        assert_eq!(t.frozen_at(2), 10);
+        assert_eq!(t.frozen_positions(), vec![2]);
+        assert_eq!(t.active_range(0, 4).collect::<Vec<_>>(), vec![0, 1, 3]);
         t.unfreeze(2);
         assert!(t.is_active(2));
+        assert_eq!(t.thaw_range(0, u64::MAX - 1).count(), 0, "index entry must be gone");
     }
 
     #[test]
-    fn timers_expire_in_order() {
+    fn expiries_pop_in_thaw_then_position_order() {
         let mut t = TokenTable::default();
-        t.grow_to(3);
+        t.grow_to(4);
         t.freeze(0, 1, 0);
         t.freeze(1, 2, 0);
-        assert_eq!(t.tick_timers(), vec![0]);
-        assert_eq!(t.tick_timers(), vec![1]);
-        assert!(t.tick_timers().is_empty());
+        t.freeze(3, 2, 0);
+        let mut out = Vec::new();
+        t.pop_expired(1, &mut out);
+        assert_eq!(out, vec![0]);
+        out.clear();
+        t.pop_expired(2, &mut out);
+        assert_eq!(out, vec![1, 3]);
+        out.clear();
+        t.pop_expired(100, &mut out);
+        assert!(out.is_empty(), "expiries are reported exactly once");
+        assert!(t.is_frozen(0), "popped rows stay frozen until restored");
     }
 
     #[test]
     fn permanent_eviction_never_expires() {
         let mut t = TokenTable::default();
         t.grow_to(1);
-        t.freeze(0, u32::MAX, 0);
-        for _ in 0..1000 {
-            assert!(t.tick_timers().is_empty());
-        }
+        t.freeze(0, TokenTable::NEVER, 0);
+        let mut out = Vec::new();
+        t.pop_expired(u64::MAX, &mut out);
+        assert!(out.is_empty());
         assert!(t.is_frozen(0));
+        assert_eq!(t.soft_expire(10), 0, "SR must not touch permanent evictions");
     }
 
     #[test]
@@ -166,5 +378,83 @@ mod tests {
         let t = TokenTable::default();
         assert!(t.is_active(99));
         assert!(!t.is_frozen(99));
+    }
+
+    #[test]
+    fn thaw_range_covers_prefetch_horizon() {
+        let mut t = TokenTable::default();
+        t.grow_to(6);
+        t.freeze(1, 11, 10);
+        t.freeze(2, 13, 10);
+        t.freeze(3, 14, 10);
+        t.freeze(4, 11, 10);
+        let hits: Vec<(u64, usize)> = t.thaw_range(11, 13).collect();
+        assert_eq!(hits, vec![(11, 1), (11, 4), (13, 2)]);
+    }
+
+    #[test]
+    fn soft_expire_spares_already_due_rows() {
+        let mut t = TokenTable::default();
+        t.grow_to(4);
+        t.freeze(0, 11, 10); // due at now+1: untouched by SR
+        t.freeze(1, 20, 10);
+        t.freeze(2, 30, 10);
+        assert_eq!(t.soft_expire(11), 2);
+        let mut out = Vec::new();
+        t.pop_expired(11, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn window_expire_hits_recent_freezes_only() {
+        let mut t = TokenTable::default();
+        t.grow_to(4);
+        t.freeze(0, 100, 2); // old freeze
+        t.freeze(1, 100, 9); // recent
+        assert_eq!(t.window_expire(3, 10), 1);
+        let mut out = Vec::new();
+        t.pop_expired(10, &mut out);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn full_expire_reschedules_queued_rows() {
+        let mut t = TokenTable::default();
+        t.grow_to(3);
+        t.freeze(0, 5, 0);
+        t.freeze(1, 50, 0);
+        let mut out = Vec::new();
+        t.pop_expired(5, &mut out); // pos 0 now queued, out of the index
+        assert_eq!(out, vec![0]);
+        assert_eq!(t.full_expire(6), 2, "FR touches queued and indexed rows");
+        out.clear();
+        t.pop_expired(6, &mut out);
+        assert_eq!(out, vec![0, 1], "queued row re-reported after FR");
+    }
+
+    #[test]
+    fn window_epoch_lazily_clears_counters() {
+        let mut t = TokenTable::default();
+        t.grow_to(2);
+        assert_eq!(t.record_detection(0, 1, 100), 1);
+        assert_eq!(t.record_detection(0, 2, 100), 2);
+        t.clear_windows();
+        assert_eq!(t.record_detection(0, 3, 100), 1, "epoch bump resets the count");
+        // a position never touched after the bump also starts fresh
+        assert_eq!(t.record_detection(1, 3, 100), 1);
+    }
+
+    #[test]
+    fn force_all_active_resets_everything() {
+        let mut t = TokenTable::default();
+        t.grow_to(5);
+        t.record_detection(2, 1, 100);
+        t.freeze(1, 10, 1);
+        t.freeze(3, TokenTable::NEVER, 1);
+        t.force_all_active();
+        assert_eq!(t.active_count(), 5);
+        assert_eq!(t.frozen_count(), 0);
+        assert_eq!(t.thaw_range(0, u64::MAX - 1).count(), 0);
+        assert_eq!(t.record_detection(2, 2, 100), 1, "counters cleared");
     }
 }

@@ -50,6 +50,10 @@ impl Histogram {
         Duration::from_micros(self.sum_us / self.total)
     }
 
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
     /// Approximate quantile from bucket upper bounds.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.total == 0 {
@@ -225,6 +229,33 @@ impl BatchStats {
         self.freeze_spans += other.freeze_spans;
         self.restore_batch.merge(&other.restore_batch);
         self.freeze_batch.merge(&other.freeze_batch);
+    }
+}
+
+/// Per-step policy control-plane cost summary (`plan` + `observe` time
+/// per decode step), in `OffloadSummary` style: a small copyable
+/// snapshot attached to `GenStats`/`GenResponse` and exported in the
+/// server JSON, so the O(work)-not-O(context) contract of the indexed
+/// policy (see `kv/README.md`) is observable per request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanLatency {
+    /// decode steps measured
+    pub steps: u64,
+    pub mean_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl PlanLatency {
+    pub fn from_histogram(h: &Histogram) -> Self {
+        PlanLatency {
+            steps: h.count(),
+            mean_us: h.mean().as_micros() as u64,
+            p50_us: h.quantile(0.5).as_micros() as u64,
+            p99_us: h.quantile(0.99).as_micros() as u64,
+            max_us: h.max().as_micros() as u64,
+        }
     }
 }
 
@@ -416,6 +447,19 @@ mod tests {
         agg.merge(&b);
         assert_eq!(agg.restore_rows, 16);
         assert_eq!(agg.freeze_spans, 8);
+    }
+
+    #[test]
+    fn plan_latency_summarizes_histogram() {
+        let mut h = Histogram::default();
+        assert_eq!(PlanLatency::from_histogram(&h), PlanLatency::default());
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        let p = PlanLatency::from_histogram(&h);
+        assert_eq!(p.steps, 2);
+        assert_eq!(p.mean_us, 200);
+        assert_eq!(p.max_us, 300);
+        assert!(p.p50_us <= p.p99_us);
     }
 
     #[test]

@@ -36,12 +36,48 @@ impl QuantRow {
     }
 }
 
+/// Lane width for the chunked hot loops below: wide enough for the
+/// compiler to auto-vectorize (two 4-wide or one 8-wide SIMD op per
+/// chunk), small enough that the scalar remainder stays trivial.
+const LANES: usize = 8;
+
+#[inline(always)]
+fn encode(x: f32, min: f32, max: f32, inv: f32) -> u8 {
+    // non-finite inputs select into the finite range branchlessly
+    // (NaN encodes as the row minimum), keeping the loop body a
+    // straight-line select + fma + round the compiler can vectorize
+    let x = if x.is_finite() { x.clamp(min, max) } else { min };
+    ((x - min) * inv).round().clamp(0.0, 255.0) as u8
+}
+
 /// Quantize a full-precision row. Non-finite inputs are clamped into
 /// the finite range of the row (NaN encodes as the row minimum).
+///
+/// Both passes (min/max reduction, encode) run over fixed-width
+/// chunks with per-lane accumulators so the restore path's inverse —
+/// and this stash-path cost — show up as vector code; `micro_runtime`
+/// tracks the per-row cost of both.
+#[inline]
 pub fn quantize(row: &[f32]) -> QuantRow {
+    let mut lane_min = [f32::INFINITY; LANES];
+    let mut lane_max = [f32::NEG_INFINITY; LANES];
+    let mut chunks = row.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        for j in 0..LANES {
+            let x = ch[j];
+            // map non-finite values to the identity of each reduction
+            let finite = x.is_finite();
+            lane_min[j] = lane_min[j].min(if finite { x } else { f32::INFINITY });
+            lane_max[j] = lane_max[j].max(if finite { x } else { f32::NEG_INFINITY });
+        }
+    }
     let mut min = f32::INFINITY;
     let mut max = f32::NEG_INFINITY;
-    for &x in row {
+    for j in 0..LANES {
+        min = min.min(lane_min[j]);
+        max = max.max(lane_max[j]);
+    }
+    for &x in chunks.remainder() {
         if x.is_finite() {
             min = min.min(x);
             max = max.max(x);
@@ -53,25 +89,43 @@ pub fn quantize(row: &[f32]) -> QuantRow {
     }
     let scale = if max > min { (max - min) / 255.0 } else { 0.0 };
     let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
-    let q = row
-        .iter()
-        .map(|&x| {
-            let x = if x.is_finite() { x.clamp(min, max) } else { min };
-            ((x - min) * inv).round().clamp(0.0, 255.0) as u8
-        })
-        .collect();
+
+    let mut q = vec![0u8; row.len()];
+    let mut dst = q.chunks_exact_mut(LANES);
+    let mut src = row.chunks_exact(LANES);
+    for (qs, xs) in dst.by_ref().zip(src.by_ref()) {
+        for j in 0..LANES {
+            qs[j] = encode(xs[j], min, max, inv);
+        }
+    }
+    for (d, &x) in dst.into_remainder().iter_mut().zip(src.remainder()) {
+        *d = encode(x, min, max, inv);
+    }
     QuantRow { q, min, scale }
 }
 
-/// Reconstruct into a caller-provided buffer (len must match).
+/// Reconstruct into a caller-provided buffer (len must match). This is
+/// the restore-path inner loop (every cold/spill `take()` and every
+/// prefetch staging pass lands here), chunked so the affine decode
+/// vectorizes.
+#[inline]
 pub fn dequantize_into(qr: &QuantRow, dst: &mut [f32]) {
     debug_assert_eq!(dst.len(), qr.q.len());
-    for (d, &code) in dst.iter_mut().zip(&qr.q) {
-        *d = qr.min + code as f32 * qr.scale;
+    let (min, scale) = (qr.min, qr.scale);
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut qc = qr.q.chunks_exact(LANES);
+    for (ds, qs) in dc.by_ref().zip(qc.by_ref()) {
+        for j in 0..LANES {
+            ds[j] = min + qs[j] as f32 * scale;
+        }
+    }
+    for (d, &code) in dc.into_remainder().iter_mut().zip(qc.remainder()) {
+        *d = min + code as f32 * scale;
     }
 }
 
 /// Reconstruct as a fresh row.
+#[inline]
 pub fn dequantize(qr: &QuantRow) -> Vec<f32> {
     let mut out = vec![0.0f32; qr.q.len()];
     dequantize_into(qr, &mut out);

@@ -48,6 +48,8 @@ pub fn response_line(resp: &GenResponse) -> String {
             ("shards", Json::num(resp.offload.shards as f64)),
             ("restore_par_max", Json::num(resp.offload.restore_parallelism_max as f64)),
             ("shard_imbalance", Json::num(resp.offload.shard_imbalance as f64)),
+            ("plan_mean_us", Json::num(resp.plan_latency.mean_us as f64)),
+            ("plan_p99_us", Json::num(resp.plan_latency.p99_us as f64)),
         ]),
     };
     let mut s = String::new();
@@ -105,6 +107,7 @@ mod tests {
             ttft: Duration::from_millis(12),
             e2e: Duration::from_millis(100),
             offload: Default::default(),
+            plan_latency: Default::default(),
         };
         let line = response_line(&r);
         assert!(line.ends_with('\n'));
@@ -116,6 +119,9 @@ mod tests {
         assert_eq!(v.get("shards").as_usize(), Some(0)); // default summary
         assert_eq!(v.get("restore_par_max").as_usize(), Some(0));
         assert_eq!(v.get("shard_imbalance").as_usize(), Some(0));
+        // policy control-plane latency does too
+        assert_eq!(v.get("plan_mean_us").as_usize(), Some(0));
+        assert_eq!(v.get("plan_p99_us").as_usize(), Some(0));
     }
 
     #[test]

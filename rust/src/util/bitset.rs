@@ -1,0 +1,87 @@
+//! Dense position bitset for O(1) membership probes on the policy hot
+//! path (pending-freeze dedup, per-plan restore marks). `Vec<bool>`
+//! would work; packing 64 positions per word keeps the whole set in a
+//! few cache lines for realistic budgets and makes `clear_all` a
+//! memset.
+
+#[derive(Debug, Clone, Default)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    pub fn new() -> Self {
+        BitSet::default()
+    }
+
+    /// Ensure the set can index positions `0..bits` (new bits are 0).
+    pub fn grow(&mut self, bits: usize) {
+        let words = (bits + 63) / 64; // div_ceil needs rust >= 1.73, MSRV is 1.70
+        if self.words.len() < words {
+            self.words.resize(words, 0);
+        }
+    }
+
+    /// Set bit `i` (the set must have been grown past `i`).
+    pub fn set(&mut self, i: usize) {
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Clear bit `i` (no-op beyond the grown range).
+    pub fn clear(&mut self, i: usize) {
+        if let Some(w) = self.words.get_mut(i / 64) {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Bit `i`, false beyond the grown range.
+    pub fn get(&self, i: usize) -> bool {
+        self.words
+            .get(i / 64)
+            .map(|w| w & (1u64 << (i % 64)) != 0)
+            .unwrap_or(false)
+    }
+
+    /// Clear every bit, keeping capacity.
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new();
+        b.grow(130);
+        assert!(!b.get(0) && !b.get(129));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        b.clear(64);
+        assert!(!b.get(64) && b.get(129));
+        b.clear_all();
+        assert!(!b.get(0) && !b.get(129));
+    }
+
+    #[test]
+    fn out_of_range_reads_false() {
+        let b = BitSet::new();
+        assert!(!b.get(1000));
+        let mut b = BitSet::new();
+        b.clear(1000); // no-op, no panic
+        assert!(!b.get(1000));
+    }
+
+    #[test]
+    fn grow_is_monotone() {
+        let mut b = BitSet::new();
+        b.grow(64);
+        b.set(63);
+        b.grow(10); // never shrinks
+        assert!(b.get(63));
+    }
+}

@@ -3,6 +3,7 @@
 //! micro-benchmarking and logging.
 
 pub mod bench;
+pub mod bitset;
 pub mod cli;
 pub mod json;
 pub mod logging;

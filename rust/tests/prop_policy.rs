@@ -5,6 +5,7 @@
 use asrkf::baselines::{H2oPolicy, StreamingLlmPolicy};
 use asrkf::config::FreezeConfig;
 use asrkf::kv::freeze::freeze_duration;
+use asrkf::kv::oracle::ScanAsrKfPolicy;
 use asrkf::kv::policy::{AsrKfPolicy, KvPolicy, UnfreezeScope};
 use asrkf::prop_assert;
 use asrkf::util::prop::{prop_check, G};
@@ -119,6 +120,68 @@ fn prop_full_reset_eventually_restores_everything() {
             }
         }
         prop_assert!(p.frozen_count() == 0, "still {} frozen after FR drain", p.frozen_count());
+        Ok(())
+    });
+}
+
+/// The tentpole contract of the indexed control plane: the indexed
+/// `AsrKfPolicy` (thaw/active/frozen BTree indexes, candidate heap,
+/// scratch reuse) is plan-for-plan identical to the retained
+/// brute-force full-scan implementation over random score traces —
+/// including recovery unfreezes of every scope, RR force-resets, and
+/// both tau modes (`random_cfg` randomizes `relative_tau`; the trace
+/// exercises whichever mode the case drew, and 80 cases cover both
+/// many times over).
+#[test]
+fn prop_indexed_policy_matches_scan_oracle() {
+    prop_check(80, |g| {
+        let cfg = random_cfg(g);
+        let r = cfg.r_budget;
+        let mut indexed = AsrKfPolicy::new(cfg.clone());
+        let mut oracle = ScanAsrKfPolicy::new(cfg);
+        let start = g.usize(4, 48);
+        let prefill = g.vec_f32(start, 0.0, 1.0);
+        indexed.on_prefill(&prefill, start);
+        oracle.on_prefill(&prefill, start);
+        let mut len = start;
+        for step in 1..=70u64 {
+            // occasional recovery traffic between steps (the engine
+            // calls request_unfreeze from absorb)
+            if g.bool(0.12) {
+                let scope = match g.usize(0, 2) {
+                    0 => UnfreezeScope::Soft,
+                    1 => UnfreezeScope::Window { n: g.usize(0, 20) as u64, now: step },
+                    _ => UnfreezeScope::Full,
+                };
+                let a = indexed.request_unfreeze(scope);
+                let b = oracle.request_unfreeze(scope);
+                prop_assert!(a == b, "step {step}: unfreeze({scope:?}) {a} != {b}");
+            }
+            if g.bool(0.03) {
+                indexed.force_all_active();
+                oracle.force_all_active();
+            }
+            let pa = indexed.plan(step, len, r);
+            let pb = oracle.plan(step, len, r);
+            prop_assert!(
+                pa == pb,
+                "step {step} (len {len}, r {r}): plans diverge\n indexed: {pa:?}\n  oracle: {pb:?}"
+            );
+            prop_assert!(
+                indexed.active_count() == oracle.active_count(),
+                "step {step}: active_count {} != {}",
+                indexed.active_count(),
+                oracle.active_count()
+            );
+            prop_assert!(
+                indexed.frozen_positions() == oracle.frozen_positions(),
+                "step {step}: frozen sets diverge"
+            );
+            len += 1;
+            let scores = g.vec_f32(len, 0.0, 1.0);
+            indexed.observe(step, &scores, len);
+            oracle.observe(step, &scores, len);
+        }
         Ok(())
     });
 }

@@ -48,6 +48,8 @@ struct Harness {
     session: Session,
     kv: Vec<f32>,
     geom: KvGeom,
+    /// reusable plan buffer, as the engines hold it
+    plan: asrkf::kv::Plan,
 }
 
 impl Harness {
@@ -66,13 +68,13 @@ impl Harness {
         let mut session =
             Session::new(1, tokens, max_new, policy, cfg, S, spec().kv_row_floats).unwrap();
         session.seed_prefill(vec![0.0f32; 256], &vec![1.0; prompt_len], prompt_len);
-        Harness { session, kv, geom }
+        Harness { session, kv, geom, plan: asrkf::kv::Plan::default() }
     }
 
     /// Simulate the engine side of one step with synthetic outputs.
     fn step(&mut self, low_score_positions: &[usize], logits: Vec<f32>) -> Action {
         let token = self.session.next_token();
-        let plan = self.session.apply_plan(&mut self.kv, &self.geom, 0, R).unwrap();
+        self.session.apply_plan(&mut self.kv, &self.geom, 0, R, &mut self.plan).unwrap();
         // "graph output": new row with marker len+1
         let pos = self.session.len;
         for plane in 0..self.geom.planes() {
@@ -86,7 +88,7 @@ impl Harness {
             }
         }
         self.session
-            .absorb(token, logits, &scores, &plan, CallTiming::default(), Duration::ZERO)
+            .absorb(token, logits, &scores, &self.plan, CallTiming::default(), Duration::ZERO)
             .unwrap()
     }
 }
