@@ -1,7 +1,10 @@
 //! Serving throughput/latency: the continuous-batching coordinator
 //! under a Poisson trace — swept across offload shard counts — vs the
-//! sequential single-sequence engine, plus a host-only sharded-store
-//! restore-burst microbench that runs even without trained artifacts.
+//! sequential single-sequence engine, plus two host-only microbenches
+//! that run even without trained artifacts: a sharded-store restore
+//! burst and a persistent-spill crash-recovery burst (stash → drop →
+//! resume → restore), so BENCH CSVs track recovery-path restore
+//! latency alongside the in-process path.
 //!
 //! Not a paper table — this validates that the paper's technique
 //! composes with a production-style serving loop (the "memory-
@@ -26,18 +29,20 @@ use asrkf::metrics::PlanLatency;
 use asrkf::offload::{OffloadSummary, ShardedStore};
 use asrkf::runtime::Runtime;
 use asrkf::util::bench::{self, Table};
+use asrkf::util::TempDir;
 use asrkf::workload::trace::poisson_trace;
 
 const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
 
-/// Aggregate per-request offload summaries into the eight CSV columns:
+/// Aggregate per-request offload summaries into the nine CSV columns:
 /// per-request peak hot/cold KB (the max high-water mark any single
 /// session reached — summing peaks of sessions that never coexisted
 /// would overstate the footprint), staged-hit %, mean hot / cold
 /// restore µs weighted by restore count, the restore-batching pair
 /// (rows restored / spans copied — spans << rows is the coalescing
-/// win), and the restore-parallelism high-water mark across sessions.
-fn offload_columns(summaries: &[OffloadSummary]) -> [String; 8] {
+/// win), the restore-parallelism high-water mark across sessions, and
+/// rows re-attached from a persistent spill directory at resume.
+fn offload_columns(summaries: &[OffloadSummary]) -> [String; 9] {
     let peak_hot: usize =
         summaries.iter().map(|s| s.occupancy.peak_hot_bytes).max().unwrap_or(0);
     let peak_cold: usize =
@@ -60,6 +65,7 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 8] {
     let batch_rows: u64 = summaries.iter().map(|s| s.restore_batch_rows).sum();
     let batch_spans: u64 = summaries.iter().map(|s| s.restore_batch_spans).sum();
     let par_max: u64 = summaries.iter().map(|s| s.restore_parallelism_max).max().unwrap_or(0);
+    let recovered: u64 = summaries.iter().map(|s| s.recovered_rows).sum();
     [
         format!("{:.1}", peak_hot as f64 / 1024.0),
         format!("{:.1}", peak_cold as f64 / 1024.0),
@@ -69,6 +75,7 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 8] {
         batch_rows.to_string(),
         batch_spans.to_string(),
         par_max.to_string(),
+        recovered.to_string(),
     ]
 }
 
@@ -139,6 +146,64 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
     Ok(())
 }
 
+/// Host-only persistent-spill recovery microbench: spill a burst of
+/// cold rows to a `--spill-persist` directory, drop the store with no
+/// shutdown (the crash), then resume and restore everything — the
+/// recovery-path restore latency the crash-safe tier adds over the
+/// in-process burst above. Runs without artifacts, so CI smoke
+/// exercises manifest attach, the record scan, and checksummed
+/// recovered-row reads every time.
+fn persistent_recovery_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error>> {
+    const ROW_FLOATS: usize = 512; // 2 KB rows
+    let rows = bench::smoke_size(2048, 128);
+    for &n in &[1usize, 4] {
+        let dir = TempDir::new("bench-spill-persist")?;
+        let cfg = asrkf::config::OffloadConfig {
+            cold_budget_bytes: 1, // every stash spills straight to disk
+            cold_after_steps: 4,
+            shards: n,
+            shard_partition: ShardPartition::Hash,
+            spill_dir: Some(dir.path_str()),
+            spill_persist: true,
+            ..Default::default()
+        };
+        let row: Vec<f32> = (0..ROW_FLOATS).map(|i| (i as f32 * 0.37).sin()).collect();
+        let positions: Vec<usize> = (0..rows).collect();
+        {
+            let mut store = ShardedStore::new(ROW_FLOATS, cfg.clone())?;
+            let items: Vec<(usize, Vec<f32>, u64)> =
+                positions.iter().map(|&p| (p, row.clone(), u64::MAX >> 1)).collect();
+            store.stash_batch(items, 0)?;
+            // crash: ungraceful drop, records stay on disk
+        }
+        let t0 = Instant::now();
+        let mut store = ShardedStore::resume(ROW_FLOATS, cfg)?;
+        let t1 = Instant::now();
+        let got = store.take_batch(&positions)?;
+        let restore = t1.elapsed();
+        let restored = got.iter().filter(|p| p.is_some()).count();
+        assert_eq!(restored, rows, "recovery must hand back every spilled row");
+        let wall = t0.elapsed();
+        let sum = store.summary();
+        // Wall covers manifest attach + record scan + the restore
+        // burst; "mean e2e" is the restore burst alone, so the scan
+        // cost is the difference
+        let mut cells = vec![
+            "persist recover (hash)".to_string(),
+            n.to_string(),
+            "1".to_string(),
+            restored.to_string(),
+            format!("{:.2}s", wall.as_secs_f64()),
+            format!("{:.1}", restored as f64 / wall.as_secs_f64()),
+            format!("{:.1}", restore.as_secs_f64() * 1000.0),
+        ];
+        cells.extend(offload_columns(&[sum]));
+        cells.extend(plan_columns(&[])); // host-only: policy never ran
+        table.row(&cells);
+    }
+    Ok(())
+}
+
 /// Runtime-backed rows: the batched coordinator across the shard sweep
 /// and the sequential single-sequence engine.
 fn runtime_rows(
@@ -163,6 +228,7 @@ fn runtime_rows(
                     max_new: r.max_new,
                     policy: "asrkf".into(),
                     seed: r.arrival_ms,
+                    resume_spill: false,
                 })
             })
             .collect::<Result<_, _>>()?;
@@ -254,12 +320,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "restored rows",
             "restore spans",
             "restore par",
+            "recovered rows",
             "plan mean (us)",
             "plan p99 (us)",
         ],
     );
 
     sharded_burst_rows(&mut table)?;
+    persistent_recovery_rows(&mut table)?;
 
     if let Err(e) = runtime_rows(&mut table, n_req, max_new) {
         if bench::smoke() {

@@ -110,6 +110,14 @@ pub enum ShardPartition {
 }
 
 impl ShardPartition {
+    /// Flag-value spelling (also the spill manifest's identity field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardPartition::Hash => "hash",
+            ShardPartition::Range => "range",
+        }
+    }
+
     /// Parse a `--shard-partition` flag value.
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
@@ -153,6 +161,14 @@ pub struct OffloadConfig {
     /// Directory for the file-backed spill tier; `None` disables
     /// spilling (cold tier then overflows its budget rather than drop).
     pub spill_dir: Option<String>,
+    /// Persist the spill tier across process restarts
+    /// (`--spill-persist`): deterministic per-shard record files plus
+    /// a per-directory manifest (generation-fenced, checksummed
+    /// records), instead of per-PID files deleted on drop. A fresh
+    /// store reclaims a dead process's leftovers; a resumed store
+    /// (`ShardedStore::resume` / `Session::resume`) recovers them.
+    /// Off by default — the ephemeral behavior is unchanged.
+    pub spill_persist: bool,
     /// Staging look-ahead in steps: rows predicted to thaw within this
     /// many steps are promoted back into the hot tier ahead of their
     /// restore (prefetch-ahead). Applies to both the policy's hints
@@ -188,6 +204,7 @@ impl Default for OffloadConfig {
             // small headroom for f32 rounding.
             cold_quant_rel_error: 0.002,
             spill_dir: None,
+            spill_persist: false,
             prefetch_ahead: 2,
             stage_pressure: 0.5,
             block_rows: 32,
@@ -210,6 +227,7 @@ impl OffloadConfig {
                 let s = args.str_or("spill-dir", "");
                 if s.is_empty() { None } else { Some(s) }
             },
+            spill_persist: args.bool("spill-persist"),
             prefetch_ahead: args.u64_or("prefetch-ahead", d.prefetch_ahead)?,
             stage_pressure: args.f32_or("stage-pressure", d.stage_pressure)?,
             block_rows: d.block_rows,
@@ -376,6 +394,7 @@ mod tests {
         let d = OffloadConfig::default();
         assert!(d.quantize_cold);
         assert!(d.spill_dir.is_none());
+        assert!(!d.spill_persist, "persistence must be opt-in");
         let a = args(&[
             "gen",
             "--hot-budget-mb",
@@ -385,12 +404,21 @@ mod tests {
             "--no-cold-quant",
             "--spill-dir",
             "/tmp/spill",
+            "--spill-persist",
         ]);
         let o = OffloadConfig::from_args(&a).unwrap();
         assert_eq!(o.hot_budget_bytes, 8 << 20);
         assert_eq!(o.cold_after_steps, 16);
         assert!(!o.quantize_cold);
         assert_eq!(o.spill_dir.as_deref(), Some("/tmp/spill"));
+        assert!(o.spill_persist);
+    }
+
+    #[test]
+    fn shard_partition_flag_spelling_roundtrips() {
+        for p in [ShardPartition::Hash, ShardPartition::Range] {
+            assert_eq!(ShardPartition::parse(p.as_str()).unwrap(), p);
+        }
     }
 
     #[test]

@@ -203,17 +203,44 @@ impl BatchEngine {
         // `cfg.offload.shards` worker-backed stores, so a slot's
         // restore bursts parallelize without touching its neighbours.
         cfg.offload = cfg.offload.partitioned(self.slots.len(), slot_idx);
+        // persistent spill: each slot owns a subdirectory, so slot
+        // stores never share manifests or record files (the manifest's
+        // one-writer-per-directory contract). A restarted coordinator
+        // re-attaches to the same slot dirs — reclaiming dead
+        // sessions' records by default, recovering them when the
+        // request asks to resume. The slot dir carries no per-session
+        // identity: resume_spill asserts the request continues the
+        // sequence whose rows were left in this slot.
+        if cfg.offload.spill_persist {
+            if let Some(dir) = &cfg.offload.spill_dir {
+                let slot_dir = std::path::Path::new(dir).join(format!("slot-{slot_idx}"));
+                cfg.offload.spill_dir = Some(slot_dir.to_string_lossy().into_owned());
+            }
+        }
+        let resume = req.params.resume_spill && cfg.offload.spill_persist;
         let policy = make_policy(&req.params.policy, &cfg.freeze)
             .map_err(Error::Coordinator)?;
-        let mut session = Session::new(
-            req.id,
-            tokens.clone(),
-            req.params.max_new,
-            policy,
-            &cfg,
-            self.decode.kv_len,
-            model.kv_row_floats,
-        )?;
+        let mut session = if resume {
+            Session::resume(
+                req.id,
+                tokens.clone(),
+                req.params.max_new,
+                policy,
+                &cfg,
+                self.decode.kv_len,
+                model.kv_row_floats,
+            )?
+        } else {
+            Session::new(
+                req.id,
+                tokens.clone(),
+                req.params.max_new,
+                policy,
+                &cfg,
+                self.decode.kv_len,
+                model.kv_row_floats,
+            )?
+        };
         session.seed_prefill(pf.logits_last, &pf.scores_last, tokens.len());
 
         self.slots[slot_idx] = Some(Slot {

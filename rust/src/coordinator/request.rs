@@ -10,6 +10,12 @@ pub struct GenParams {
     pub max_new: usize,
     pub policy: String,
     pub seed: u64,
+    /// Re-attach to (and recover from) this request's slot-scoped
+    /// persistent spill directory instead of reclaiming a dead
+    /// process's records. Only meaningful when the server runs with
+    /// `--spill-persist`; recovery counters ride along on the response
+    /// (`recovered_rows` / `recovery_errors`).
+    pub resume_spill: bool,
 }
 
 #[derive(Debug)]

@@ -89,6 +89,21 @@ impl<'rt> Generator<'rt> {
         policy: Box<dyn KvPolicy>,
         max_new: usize,
     ) -> Result<GenOutcome> {
+        self.generate_with_resume(prompt, policy, max_new, false)
+    }
+
+    /// Like [`Generator::generate`], optionally resuming from a
+    /// persistent spill directory (`--spill-persist --resume-spill`):
+    /// the session re-attaches instead of reclaiming a crashed
+    /// process's records, and the recovered-row counters ride along on
+    /// `GenStats::offload`.
+    pub fn generate_with_resume(
+        &self,
+        prompt: &str,
+        policy: Box<dyn KvPolicy>,
+        max_new: usize,
+        resume_spill: bool,
+    ) -> Result<GenOutcome> {
         let t_start = Instant::now();
         let model = self.rt.manifest.model.clone();
         let prompt_tokens = tokenizer::encode(prompt);
@@ -115,15 +130,12 @@ impl<'rt> Generator<'rt> {
         let mut kv = vec![0.0f32; geom.floats()];
         insert_prefill(&mut kv, &geom, 0, &pf.kv, l, prompt_tokens.len());
 
-        let mut session = Session::new(
-            0,
-            prompt_tokens.clone(),
-            max_new,
-            policy,
-            &self.cfg,
-            s,
-            model.kv_row_floats,
-        )?;
+        let rf = model.kv_row_floats;
+        let mut session = if resume_spill {
+            Session::resume(0, prompt_tokens.clone(), max_new, policy, &self.cfg, s, rf)?
+        } else {
+            Session::new(0, prompt_tokens.clone(), max_new, policy, &self.cfg, s, rf)?
+        };
         session.seed_prefill(pf.logits_last, &pf.scores_last, prompt_tokens.len());
 
         let mut upload = pf.timing.upload;

@@ -84,6 +84,43 @@ impl Session {
         s_capacity: usize,
         row_floats: usize,
     ) -> Result<Self> {
+        Session::build(id, prompt_tokens, max_new, policy, cfg, s_capacity, row_floats, false)
+    }
+
+    /// Like [`Session::new`], but re-attaches to a persistent spill
+    /// directory (`OffloadConfig::spill_persist`) and **recovers** the
+    /// previous life's spilled rows instead of reclaiming them: they
+    /// re-enter the store as restorable frozen rows, counted in the
+    /// offload summary (`recovered_rows` / `recovery_errors`). A
+    /// recovered position the new session re-freezes is superseded by
+    /// the fresh row; recovered positions beyond this session's KV
+    /// capacity can never be restored into the cache and are reclaimed
+    /// with accounting at construction. Without `spill_persist` this
+    /// is identical to `new`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn resume(
+        id: u64,
+        prompt_tokens: Vec<i32>,
+        max_new: usize,
+        policy: Box<dyn KvPolicy>,
+        cfg: &EngineConfig,
+        s_capacity: usize,
+        row_floats: usize,
+    ) -> Result<Self> {
+        Session::build(id, prompt_tokens, max_new, policy, cfg, s_capacity, row_floats, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        id: u64,
+        prompt_tokens: Vec<i32>,
+        max_new: usize,
+        policy: Box<dyn KvPolicy>,
+        cfg: &EngineConfig,
+        s_capacity: usize,
+        row_floats: usize,
+        resume_spill: bool,
+    ) -> Result<Self> {
         let (monitor, ladder) = if cfg.recovery.enabled {
             (
                 Some(EntropyMonitor::new(cfg.recovery.clone())),
@@ -92,13 +129,33 @@ impl Session {
         } else {
             (None, None)
         };
+        let mut store = if resume_spill {
+            ShardedStore::resume(row_floats, cfg.offload.clone())?
+        } else {
+            ShardedStore::new(row_floats, cfg.offload.clone())?
+        };
+        if resume_spill {
+            // rows recovered beyond this session's KV capacity can
+            // never scatter back into the cache: reclaim them with
+            // accounting instead of leaving unrestorable residents
+            let oob: Vec<usize> = store.positions().filter(|&p| p >= s_capacity).collect();
+            if !oob.is_empty() {
+                log::warn!(
+                    "session {id}: reclaiming {} recovered rows beyond KV capacity {s_capacity}",
+                    oob.len()
+                );
+                for p in oob {
+                    store.drop_row(p)?;
+                }
+            }
+        }
         Ok(Session {
             id,
             prompt_len: prompt_tokens.len(),
             tokens: prompt_tokens,
             max_new,
             policy,
-            store: ShardedStore::new(row_floats, cfg.offload.clone())?,
+            store,
             mask: vec![0.0; s_capacity],
             len: 0,
             sampler: Sampler::new(cfg.sampling.clone()),

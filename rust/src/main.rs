@@ -74,10 +74,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
     );
     let max_new = args.usize_or("max-new-tokens", 200)?;
 
+    // with --spill-persist, re-attach to the spill dir and recover a
+    // crashed run's records instead of reclaiming them
+    let resume_spill = args.bool("resume-spill");
+
     let rt = Runtime::load(&cfg.artifacts_dir)?;
     let gen = Generator::new(&rt, cfg.clone());
     let policy = make_policy(&policy_name, &cfg.freeze)?;
-    let out = gen.generate(&prompt, policy, max_new)?;
+    let out = gen.generate_with_resume(&prompt, policy, max_new, resume_spill)?;
 
     println!("--- generated ({} tokens, policy={policy_name}) ---", out.stats.generated_tokens);
     println!("{}", out.text);
@@ -89,6 +93,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
     println!("compression       : {:.2}%", s.compression * 100.0);
     println!("freezes/restores  : {}/{}", s.freezes, s.restores);
     println!("recovery events   : {}", s.recovery_interventions);
+    if s.offload.recovered_rows > 0 || s.offload.recovery_errors > 0 {
+        println!(
+            "spill recovery    : {} rows re-attached, {} records rejected",
+            s.offload.recovered_rows, s.offload.recovery_errors
+        );
+    }
     println!(
         "wall {:.2?}  (upload {:.2?}, execute {:.2?}, download {:.2?}, host {:.2?})",
         s.wall, s.upload, s.execute, s.download, s.host

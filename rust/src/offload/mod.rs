@@ -71,7 +71,7 @@ pub use hot::HotTier;
 pub use quant::{dequantize, dequantize_into, quantize, QuantRow};
 pub use sched::{SchedClass, ThawScheduler};
 pub use sharded::{ShardedStore, MAX_SHARDS};
-pub use spill::{SpillFile, SpillTier};
+pub use spill::{record_bytes_for, record_path, SpillFile, SpillManifest, SpillTier};
 pub use store::TieredStore;
 pub use tier::{RowPayload, Tier};
 
@@ -97,6 +97,12 @@ pub struct OffloadSummary {
     pub restore_cold_mean_us: u64,
     /// high-water mark of the thaw scheduler's frozen queue
     pub sched_depth_max: u64,
+    /// rows re-attached from a persistent spill directory at resume
+    /// (`--spill-persist`; see `spill::SpillManifest`)
+    pub recovered_rows: u64,
+    /// records the recovery scan rejected (corrupt, fenced-generation,
+    /// duplicate, or torn) — reclaimed, never re-served
+    pub recovery_errors: u64,
     /// rows restored through batched plan execution (engine-side;
     /// filled by `Session::offload_summary`)
     pub restore_batch_rows: u64,

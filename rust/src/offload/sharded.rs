@@ -231,9 +231,41 @@ impl ShardedStore {
     /// budget cannot hold a single row (the slice would demote every
     /// stash instantly); the `quantize_cold = false` escape hatch is
     /// exempt since budgets are advisory there.
+    ///
+    /// With `cfg.spill_persist` set (and a spill dir configured), this
+    /// is a **fresh attach**: the directory's manifest is validated
+    /// and its generation bumped, and leftover records from a previous
+    /// life are reclaimed — never resurrected into a store that does
+    /// not resume that life. Use [`ShardedStore::resume`] to recover
+    /// them instead.
     pub fn new(row_floats: usize, cfg: OffloadConfig) -> Result<ShardedStore> {
+        ShardedStore::build(row_floats, cfg, false)
+    }
+
+    /// Re-attach to a persistent spill directory and **recover** every
+    /// surviving record: each shard scans its record file, adopts the
+    /// rows that verify (magic, unfenced generation, checksum), and
+    /// re-registers them with its eta scheduler under a conservative
+    /// thaw eta. Without `spill_persist` this is identical to
+    /// [`ShardedStore::new`]. Recovery telemetry lands in
+    /// `OffloadSummary::{recovered_rows, recovery_errors}`.
+    pub fn resume(row_floats: usize, cfg: OffloadConfig) -> Result<ShardedStore> {
+        ShardedStore::build(row_floats, cfg, true)
+    }
+
+    fn build(row_floats: usize, cfg: OffloadConfig, resume: bool) -> Result<ShardedStore> {
+        use crate::offload::spill::{SpillManifest, SpillTier};
         let n = cfg.shards.clamp(1, MAX_SHARDS);
         let row_bytes = row_floats * std::mem::size_of::<f32>();
+        let persist_dir = if cfg.spill_persist { cfg.spill_dir.as_deref() } else { None };
+        // the manifest claims the directory (generation bump) before
+        // any shard opens its record file
+        let manifest = match persist_dir {
+            Some(dir) => {
+                Some(SpillManifest::attach(dir, row_floats, n, cfg.shard_partition)?)
+            }
+            None => None,
+        };
         let mut shards = Vec::with_capacity(n);
         for i in 0..n {
             let scfg = cfg.partitioned(n, i);
@@ -244,7 +276,22 @@ impl ShardedStore {
                     cfg.hot_budget_bytes, scfg.hot_budget_bytes
                 )));
             }
-            shards.push(Some(TieredStore::new(row_floats, scfg)));
+            let store = match (&manifest, persist_dir) {
+                (Some(m), Some(dir)) => {
+                    let mut spill =
+                        SpillTier::open_persistent(dir, row_floats, i, m.generation)?;
+                    if resume {
+                        let mut st = TieredStore::with_spill(row_floats, scfg, spill);
+                        st.recover(0)?;
+                        st
+                    } else {
+                        spill.reclaim_recovered()?;
+                        TieredStore::with_spill(row_floats, scfg, spill)
+                    }
+                }
+                _ => TieredStore::new(row_floats, scfg),
+            };
+            shards.push(Some(store));
         }
         if n > 1 {
             worker_pool(); // warm the process-wide pool off the hot path
@@ -619,6 +666,8 @@ impl ShardedStore {
             s.restores_hot += t.restores_hot;
             s.restores_cold += t.restores_cold;
             s.restores_spill += t.restores_spill;
+            s.recovered_rows += t.recovered_rows;
+            s.recovery_errors += t.recovery_errors;
             s.sched_depth_max = s.sched_depth_max.max(t.sched_depth_max);
         }
         let lat = self.restore_latency();

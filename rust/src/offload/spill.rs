@@ -1,36 +1,242 @@
 //! File-backed spill tier: fixed-record storage for quantized rows that
 //! overflow the cold tier's byte budget on very long contexts.
 //!
-//! One spill file per `TieredStore`, created lazily on first demotion
-//! and deleted on drop. Records are fixed-size (`ROW_HEADER_BYTES` +
+//! Two lifetimes, one record format:
+//!
+//! * **Ephemeral** ([`SpillFile::create`]) — the historical behavior:
+//!   one per-process file (PID + counter in the name), created lazily
+//!   on first demotion and deleted on drop.
+//! * **Persistent** ([`SpillFile::open_or_create`], `--spill-persist`)
+//!   — deterministic per-shard file names plus a per-directory
+//!   [`SpillManifest`], so a restarted process re-attaches to its spill
+//!   directory and recovers every surviving record instead of
+//!   `create_new`-failing or orphaning the old files. Released slots
+//!   are tombstoned on disk so a crash never resurrects a row that was
+//!   already restored or dropped.
+//!
+//! Records are fixed-size ([`REC_HEADER_BYTES`] + quant header +
 //! `row_floats` code bytes) at `slot * record_bytes` offsets, with a
-//! free list so restored slots are reused. I/O errors surface as
-//! `Error::Offload` through `TieredStore`'s fallible API — the engine
-//! fails the affected session rather than corrupting it.
+//! free list so released slots are reused and a contiguous free tail
+//! truncates the file (disk usage is not a permanent high-water mark).
+//! Every record carries a magic marker, the writer's generation, its
+//! sequence position, and an FNV-1a checksum covering both the header
+//! identity and the payload — reads verify all four, so a poisoned
+//! record (including a corrupted position field) surfaces
+//! `Error::Offload` instead of bad floats. I/O errors leave the in-memory bookkeeping
+//! untouched (the failed record stays reachable for a retry) and
+//! surface through `TieredStore`'s fallible API — the engine fails the
+//! affected session rather than corrupting it.
+//!
+//! On-disk format and recovery semantics are documented in this
+//! module's `README.md` (section "Persistent spill").
 
 use std::collections::{BTreeSet, HashMap};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::config::ShardPartition;
 use crate::error::{Error, Result};
 use crate::metrics::{TierKind, TierOccupancy};
 use crate::offload::quant::{QuantRow, ROW_HEADER_BYTES};
 use crate::offload::tier::{RowPayload, Tier};
+use crate::util::json::{parse, write_json, Json};
 
 static NEXT_FILE_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Per-record header: magic (u32) + writer generation (u64) + sequence
+/// position (u64) + FNV-1a checksum (u64) over the rest of the record
+/// (header identity + payload, checksum field excluded).
+pub const REC_HEADER_BYTES: usize = 28;
+
+/// Marker of a live record ("KVR1").
+const REC_MAGIC_LIVE: u32 = 0x3152_564B;
+/// Tombstone marker of a released slot ("KVFR").
+const REC_MAGIC_FREE: u32 = 0x5246_564B;
+
+/// Manifest file name inside a persistent spill directory.
+pub const MANIFEST_FILE: &str = "spill-manifest.json";
+const MANIFEST_MAGIC: &str = "asrkf-spill";
+const MANIFEST_VERSION: f64 = 1.0;
+
+/// Total on-disk bytes of one record for `row_floats`-wide rows.
+pub fn record_bytes_for(row_floats: usize) -> usize {
+    REC_HEADER_BYTES + ROW_HEADER_BYTES + row_floats
+}
+
+/// Deterministic record file path for `shard` in persistent mode.
+/// (`.rec`, distinct from the ephemeral per-PID `.bin` pattern so
+/// manifest attachment can reclaim dead processes' ephemeral files
+/// without touching persistent state.)
+pub fn record_path(dir: &str, shard: usize) -> PathBuf {
+    Path::new(dir).join(format!("asrkf-spill-shard-{shard}.rec"))
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a 64 over the whole record with the checksum field excluded:
+/// the header identity (magic, generation, position) is covered along
+/// with the payload, so a bit flip in the position field fails the
+/// checksum instead of silently serving another position's data.
+fn record_checksum(rec: &[u8]) -> u64 {
+    fnv1a64_update(fnv1a64_update(FNV_OFFSET, &rec[..20]), &rec[REC_HEADER_BYTES..])
+}
+
+/// The per-directory manifest of a persistent spill store: identity
+/// (row width, record size, shard count, partition) plus the current
+/// writer generation. Attaching validates the identity, bumps the
+/// generation, and rewrites the manifest atomically (temp file +
+/// rename) — records written by earlier generations are recoverable,
+/// records claiming the new generation or beyond are fenced off as
+/// stale (a concurrent writer) and reclaimed, never re-served.
+#[derive(Debug)]
+pub struct SpillManifest {
+    /// Generation claimed by this attach (previous + 1, or 1 for a
+    /// fresh directory).
+    pub generation: u64,
+    /// Ephemeral per-PID spill files from dead processes that were
+    /// deleted during the attach.
+    pub stale_files_reclaimed: u64,
+}
+
+impl SpillManifest {
+    /// Attach to (or initialize) `dir` for a store of this shape.
+    /// Identity mismatches (different row width, shard count, or
+    /// partition than the directory was written with) are hard errors:
+    /// the records would be unreadable or mis-routed.
+    ///
+    /// Concurrency contract: **one live writer per directory at a
+    /// time**. The generation fence protects against a *dead*
+    /// predecessor's leftovers (and detects its stragglers'
+    /// higher-generation records at the next scan); it is not a lock —
+    /// two processes attaching the same directory concurrently would
+    /// both claim the same bumped generation and corrupt each other's
+    /// record files. The coordinator upholds the contract by giving
+    /// every batch slot its own subdirectory.
+    pub fn attach(
+        dir: &str,
+        row_floats: usize,
+        shards: usize,
+        partition: ShardPartition,
+    ) -> Result<SpillManifest> {
+        std::fs::create_dir_all(dir)?;
+        let path = Path::new(dir).join(MANIFEST_FILE);
+        let mut generation = 1u64;
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)?;
+            let v = parse(&text)
+                .map_err(|e| Error::Offload(format!("spill manifest {}: {e}", path.display())))?;
+            if v.get("magic").as_str() != Some(MANIFEST_MAGIC) {
+                return Err(Error::Offload(format!(
+                    "{} is not an asrkf spill manifest",
+                    path.display()
+                )));
+            }
+            let check = |key: &str, want: usize| -> Result<()> {
+                match v.get(key).as_usize() {
+                    Some(got) if got == want => Ok(()),
+                    got => Err(Error::Offload(format!(
+                        "spill dir {dir}: manifest {key} {got:?} does not match this store's {want}"
+                    ))),
+                }
+            };
+            check("row_floats", row_floats)?;
+            check("record_bytes", record_bytes_for(row_floats))?;
+            check("shards", shards)?;
+            match v.get("partition").as_str() {
+                Some(p) if p == partition.as_str() => {}
+                p => {
+                    return Err(Error::Offload(format!(
+                        "spill dir {dir}: manifest partition {p:?} does not match this store's \
+                         '{}'",
+                        partition.as_str()
+                    )))
+                }
+            }
+            generation = v.get("generation").as_f64().unwrap_or(0.0) as u64 + 1;
+        }
+        // claim the directory before any record I/O: once the bumped
+        // generation is durable, records written by a straggler of the
+        // previous generation are fenced off at the next scan
+        let m = Json::obj(vec![
+            ("magic", Json::str(MANIFEST_MAGIC)),
+            ("version", Json::num(MANIFEST_VERSION)),
+            ("row_floats", Json::num(row_floats as f64)),
+            ("record_bytes", Json::num(record_bytes_for(row_floats) as f64)),
+            ("shards", Json::num(shards as f64)),
+            ("partition", Json::str(partition.as_str())),
+            ("generation", Json::num(generation as f64)),
+        ]);
+        let mut text = String::new();
+        write_json(&m, &mut text);
+        let tmp = path.with_extension("json.tmp");
+        {
+            // sync before the rename: without it a power loss can
+            // surface the rename with an empty temp file behind it,
+            // leaving the directory unattachable
+            let mut f = File::create(&tmp)?;
+            f.write_all(text.as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        // make the rename itself durable (best effort: directory
+        // handles are not syncable on every platform)
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+        // reclaim ephemeral spill files orphaned by dead processes
+        // (never re-served: they carry no recoverable identity)
+        let mut stale = 0u64;
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("asrkf-spill-") && name.ends_with(".bin") {
+                let _ = std::fs::remove_file(entry.path());
+                stale += 1;
+            }
+        }
+        if stale > 0 {
+            log::warn!("spill dir {dir}: reclaimed {stale} ephemeral file(s) from dead processes");
+        }
+        Ok(SpillManifest { generation, stale_files_reclaimed: stale })
+    }
+}
 
 pub struct SpillFile {
     file: File,
     path: PathBuf,
     record_bytes: usize,
     row_floats: usize,
-    /// released slots awaiting reuse; ordered so handle checks and
-    /// lowest-slot-first reuse are O(log n), not a linear scan on the
-    /// restore path
+    /// released slots awaiting reuse; ordered so handle checks,
+    /// lowest-slot-first reuse, and the free-tail truncation probe are
+    /// O(log n), not a linear scan on the restore path
     free: BTreeSet<u32>,
     next_slot: u32,
+    /// generation stamped into written records (0 in ephemeral mode)
+    generation: u64,
+    /// persistent files survive drop, tombstone released slots on
+    /// disk, and were scanned for recoverable records at open
+    persist: bool,
+    /// live records found by the open-time scan, awaiting
+    /// `take_recovered` (resume) or `reclaim_recovered` (fresh attach)
+    recovered: Vec<(usize, u32)>,
+    /// records the scan rejected (bad magic/checksum, fenced
+    /// generation, duplicate position, torn tail)
+    pub recovery_errors: u64,
+    /// fault injection for the error-path bookkeeping tests (private;
+    /// only in-module tests set these)
+    fault_next_read: bool,
+    fault_next_free: bool,
 }
 
 impl std::fmt::Debug for SpillFile {
@@ -39,12 +245,32 @@ impl std::fmt::Debug for SpillFile {
             .field("path", &self.path)
             .field("slots", &self.next_slot)
             .field("free", &self.free.len())
+            .field("generation", &self.generation)
+            .field("persist", &self.persist)
             .finish()
     }
 }
 
 impl SpillFile {
-    /// Create the spill file under `dir` (created if missing).
+    fn empty(file: File, path: PathBuf, row_floats: usize) -> SpillFile {
+        SpillFile {
+            file,
+            path,
+            record_bytes: record_bytes_for(row_floats),
+            row_floats,
+            free: BTreeSet::new(),
+            next_slot: 0,
+            generation: 0,
+            persist: false,
+            recovered: Vec::new(),
+            recovery_errors: 0,
+            fault_next_read: false,
+            fault_next_free: false,
+        }
+    }
+
+    /// Create an ephemeral spill file under `dir` (created if
+    /// missing): per-process name, deleted on drop.
     pub fn create(dir: &str, row_floats: usize) -> Result<SpillFile> {
         std::fs::create_dir_all(dir)?;
         let id = NEXT_FILE_ID.fetch_add(1, Ordering::Relaxed);
@@ -55,14 +281,97 @@ impl SpillFile {
             .write(true)
             .create_new(true)
             .open(&path)?;
-        Ok(SpillFile {
-            file,
-            path,
-            record_bytes: ROW_HEADER_BYTES + row_floats,
-            row_floats,
-            free: BTreeSet::new(),
-            next_slot: 0,
-        })
+        Ok(SpillFile::empty(file, path, row_floats))
+    }
+
+    /// Open (or initialize) the persistent record file for `shard`,
+    /// scanning existing records to rebuild the slot allocation, the
+    /// free list, and the recoverable `(pos, slot)` set. `generation`
+    /// is the manifest's freshly-claimed generation: records from
+    /// generations `1..generation` are recoverable; anything claiming
+    /// `generation` or beyond was written by a fenced-off concurrent
+    /// writer and is reclaimed, not re-served.
+    pub fn open_or_create(
+        dir: &str,
+        row_floats: usize,
+        shard: usize,
+        generation: u64,
+    ) -> Result<SpillFile> {
+        std::fs::create_dir_all(dir)?;
+        let path = record_path(dir, shard);
+        let file = OpenOptions::new().read(true).write(true).create(true).open(&path)?;
+        let mut s = SpillFile::empty(file, path, row_floats);
+        s.generation = generation;
+        s.persist = true;
+        s.scan()?;
+        s.compact_tail()?;
+        Ok(s)
+    }
+
+    /// Rebuild in-memory state from the on-disk records (persistent
+    /// open). Each slot is classified exactly once: tombstone -> free,
+    /// valid live record -> recoverable, anything else (bad magic,
+    /// fenced generation, checksum mismatch, duplicate position) ->
+    /// reclaimed (tombstoned + freed) and counted as a recovery error.
+    fn scan(&mut self) -> Result<()> {
+        let len = self.file.metadata()?.len();
+        let rb = self.record_bytes as u64;
+        let nrec = (len / rb) as u32;
+        if len % rb != 0 {
+            // torn tail write from a crash mid-record: drop it
+            self.recovery_errors += 1;
+            self.file.set_len(nrec as u64 * rb)?;
+        }
+        self.next_slot = nrec;
+        let mut by_pos: HashMap<usize, (u32, u64)> = HashMap::new();
+        let mut reclaim: Vec<u32> = Vec::new();
+        let mut rec = vec![0u8; self.record_bytes];
+        self.file.seek(SeekFrom::Start(0))?;
+        for slot in 0..nrec {
+            self.file.read_exact(&mut rec)?;
+            let magic = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+            if magic == REC_MAGIC_FREE {
+                self.free.insert(slot);
+                continue;
+            }
+            let gen = u64::from_le_bytes(rec[4..12].try_into().unwrap());
+            let pos = u64::from_le_bytes(rec[12..20].try_into().unwrap()) as usize;
+            let sum = u64::from_le_bytes(rec[20..28].try_into().unwrap());
+            let valid = magic == REC_MAGIC_LIVE
+                && gen >= 1
+                && gen < self.generation
+                && sum == record_checksum(&rec);
+            if !valid {
+                self.recovery_errors += 1;
+                reclaim.push(slot);
+                continue;
+            }
+            match by_pos.entry(pos) {
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert((slot, gen));
+                }
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    // two generations claim the same position (a
+                    // tombstone write lost in the crash): serve the
+                    // newer copy, reclaim the other
+                    self.recovery_errors += 1;
+                    let (old_slot, old_gen) = *o.get();
+                    if gen > old_gen {
+                        o.insert((slot, gen));
+                        reclaim.push(old_slot);
+                    } else {
+                        reclaim.push(slot);
+                    }
+                }
+            }
+        }
+        for slot in reclaim {
+            self.tombstone(slot)?;
+            self.free.insert(slot);
+        }
+        self.recovered = by_pos.into_iter().map(|(pos, (slot, _))| (pos, slot)).collect();
+        self.recovered.sort_unstable();
+        Ok(())
     }
 
     /// Occupied bytes (allocated records minus the free list).
@@ -74,8 +383,46 @@ impl SpillFile {
         self.record_bytes
     }
 
-    /// Write a quantized row; returns the slot to read it back from.
-    pub fn write_row(&mut self, qr: &QuantRow) -> Result<u32> {
+    /// Drain the open-time scan's recovered `(pos, slot)` pairs
+    /// (resume path; sorted by position).
+    pub fn take_recovered(&mut self) -> Vec<(usize, u32)> {
+        std::mem::take(&mut self.recovered)
+    }
+
+    /// Fresh-attach path: discard every record the scan recovered —
+    /// leftovers of a previous life this store does not resume.
+    /// Returns how many records were reclaimed.
+    pub fn reclaim_recovered(&mut self) -> Result<u64> {
+        let recovered = std::mem::take(&mut self.recovered);
+        let n = recovered.len() as u64;
+        if n == 0 {
+            return Ok(0);
+        }
+        // the scan classified every slot as either free or recovered,
+        // so discarding all recovered records empties the file: one
+        // truncate instead of a per-slot tombstone write (a long dead
+        // session can leave tens of thousands of records, and this
+        // runs on the coordinator's admission path)
+        if recovered.len() + self.free.len() == self.next_slot as usize {
+            self.free.clear();
+            self.next_slot = 0;
+            self.file.set_len(0)?;
+            return Ok(n);
+        }
+        // defensive fallback only: with today's single call site
+        // (directly after open_or_create, before any write) the scan
+        // invariant above always holds and this loop is unreachable
+        debug_assert!(false, "reclaim_recovered called on a file with post-scan writes");
+        for (_pos, slot) in recovered {
+            self.release_slot(slot)?;
+        }
+        Ok(n)
+    }
+
+    /// Write a quantized row for `pos`; returns the slot to read it
+    /// back from. On a write error the allocated slot returns to the
+    /// free list (no slot is leaked by a failed write).
+    pub fn write_row(&mut self, pos: usize, qr: &QuantRow) -> Result<u32> {
         if qr.q.len() != self.row_floats {
             return Err(Error::Offload(format!(
                 "spill row has {} codes, store expects {}",
@@ -88,14 +435,38 @@ impl SpillFile {
             self.next_slot += 1;
             s
         });
-        self.file
-            .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
+        match self.write_record(slot, pos, qr) {
+            Ok(()) => Ok(slot),
+            Err(e) => {
+                // the slot holds no live record: stamp a tombstone over
+                // whatever torn bytes landed (best effort — otherwise a
+                // clean later scan counts this slot as a corruption
+                // event), then hand it back to the free list
+                if self.persist {
+                    let _ = self.tombstone(slot);
+                }
+                self.free.insert(slot);
+                let _ = self.compact_tail();
+                Err(e)
+            }
+        }
+    }
+
+    fn write_record(&mut self, slot: u32, pos: usize, qr: &QuantRow) -> Result<()> {
         let mut rec = Vec::with_capacity(self.record_bytes);
+        rec.extend_from_slice(&REC_MAGIC_LIVE.to_le_bytes());
+        rec.extend_from_slice(&self.generation.to_le_bytes());
+        rec.extend_from_slice(&(pos as u64).to_le_bytes());
+        rec.extend_from_slice(&[0u8; 8]); // checksum patched below
         rec.extend_from_slice(&qr.min.to_le_bytes());
         rec.extend_from_slice(&qr.scale.to_le_bytes());
         rec.extend_from_slice(&qr.q);
+        let sum = record_checksum(&rec);
+        rec[20..28].copy_from_slice(&sum.to_le_bytes());
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
         self.file.write_all(&rec)?;
-        Ok(slot)
+        Ok(())
     }
 
     /// Reject handles that were never allocated or already released —
@@ -114,46 +485,147 @@ impl SpillFile {
         Ok(())
     }
 
-    /// Read a row back and release its slot.
-    pub fn take_row(&mut self, slot: u32) -> Result<QuantRow> {
-        let qr = self.read_row(slot)?;
-        self.free.insert(slot);
+    /// Validate a record header against the caller's expectation. A
+    /// mismatch means the slot map diverged from the file (or the
+    /// record was corrupted on disk) — served as `Error::Offload`
+    /// rather than bad data.
+    fn verify_header(&self, rec: &[u8], slot: u32, pos: usize) -> Result<()> {
+        let magic = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+        if magic != REC_MAGIC_LIVE {
+            return Err(Error::Offload(format!(
+                "spill slot {slot} (pos {pos}) does not hold a live record (magic {magic:#x})"
+            )));
+        }
+        let gen = u64::from_le_bytes(rec[4..12].try_into().unwrap());
+        let gen_ok = if self.persist {
+            gen >= 1 && gen <= self.generation
+        } else {
+            gen == self.generation
+        };
+        if !gen_ok {
+            return Err(Error::Offload(format!(
+                "spill slot {slot} (pos {pos}) carries fenced generation {gen} (current {})",
+                self.generation
+            )));
+        }
+        let rpos = u64::from_le_bytes(rec[12..20].try_into().unwrap());
+        if rpos != pos as u64 {
+            return Err(Error::Offload(format!(
+                "spill slot {slot} holds pos {rpos}, expected {pos}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read a row back and release its slot. The slot is released only
+    /// after a verified read (and, in persistent mode, a durable
+    /// tombstone), so an I/O error keeps the record reachable.
+    pub fn take_row(&mut self, slot: u32, pos: usize) -> Result<QuantRow> {
+        let qr = self.read_row(slot, pos)?;
+        self.release_slot(slot)?;
         Ok(qr)
     }
 
     /// Read a row without releasing the slot (staging keeps the record
-    /// until the hot copy is consumed or re-demoted).
-    pub fn read_row(&mut self, slot: u32) -> Result<QuantRow> {
+    /// until the hot copy is consumed or re-demoted). Verifies the
+    /// header and the payload checksum: a poisoned record surfaces
+    /// `Error::Offload`, never bad floats.
+    pub fn read_row(&mut self, slot: u32, pos: usize) -> Result<QuantRow> {
         self.check_live(slot)?;
+        if self.fault_next_read {
+            self.fault_next_read = false;
+            return Err(Error::Offload(format!("injected read fault for spill slot {slot}")));
+        }
         self.file
             .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
         let mut rec = vec![0u8; self.record_bytes];
         self.file.read_exact(&mut rec)?;
-        let min = f32::from_le_bytes(rec[0..4].try_into().unwrap());
-        let scale = f32::from_le_bytes(rec[4..8].try_into().unwrap());
-        Ok(QuantRow { q: rec[ROW_HEADER_BYTES..].to_vec(), min, scale })
+        self.verify_header(&rec, slot, pos)?;
+        let sum = u64::from_le_bytes(rec[20..28].try_into().unwrap());
+        if sum != record_checksum(&rec) {
+            return Err(Error::Offload(format!(
+                "spill record for pos {pos} (slot {slot}) failed its checksum"
+            )));
+        }
+        let body = &rec[REC_HEADER_BYTES..];
+        let min = f32::from_le_bytes(body[0..4].try_into().unwrap());
+        let scale = f32::from_le_bytes(body[4..8].try_into().unwrap());
+        Ok(QuantRow { q: body[ROW_HEADER_BYTES..].to_vec(), min, scale })
     }
 
-    /// Release a slot without reading it (row dropped by a baseline).
-    /// Stale handles error instead of silently corrupting the free
-    /// list (this used to be a `debug_assert!` that release builds
-    /// ignored).
-    pub fn free_slot(&mut self, slot: u32) -> Result<()> {
+    /// Release a slot without reading its payload (row dropped by a
+    /// baseline). Stale handles error instead of silently corrupting
+    /// the free list; in persistent mode the record header is verified
+    /// first and the slot is tombstoned on disk so a crash cannot
+    /// resurrect the dropped row.
+    pub fn free_slot(&mut self, slot: u32, pos: usize) -> Result<()> {
         self.check_live(slot)?;
+        if self.fault_next_free {
+            self.fault_next_free = false;
+            return Err(Error::Offload(format!("injected free fault for spill slot {slot}")));
+        }
+        if self.persist {
+            self.file
+                .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
+            let mut hdr = [0u8; REC_HEADER_BYTES];
+            self.file.read_exact(&mut hdr)?;
+            self.verify_header(&hdr, slot, pos)?;
+        }
+        self.release_slot(slot)
+    }
+
+    /// Free a slot the caller has finished with: durable tombstone in
+    /// persistent mode, then the free list, then tail truncation.
+    fn release_slot(&mut self, slot: u32) -> Result<()> {
+        if self.persist {
+            self.tombstone(slot)?;
+        }
         self.free.insert(slot);
+        self.compact_tail()
+    }
+
+    fn tombstone(&mut self, slot: u32) -> Result<()> {
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
+        self.file.write_all(&REC_MAGIC_FREE.to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Truncate the file when a contiguous tail of slots is free — the
+    /// `BTreeSet` free list makes the tail probe O(log n) per released
+    /// slot, so disk usage tracks the live record span instead of the
+    /// all-time high-water mark. Also run once at recovery time.
+    fn compact_tail(&mut self) -> Result<()> {
+        let mut shrunk = false;
+        while self.next_slot > 0 && self.free.last() == Some(&(self.next_slot - 1)) {
+            self.free.pop_last();
+            self.next_slot -= 1;
+            shrunk = true;
+        }
+        if shrunk {
+            self.file
+                .set_len(self.next_slot as u64 * self.record_bytes as u64)?;
+        }
         Ok(())
     }
 }
 
 impl Drop for SpillFile {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        // persistent files ARE the crash-recovery state: only the
+        // ephemeral per-process file is deleted with its owner
+        if !self.persist {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
 /// The file-backed tier: cold rows that overflowed their byte budget
-/// on very long contexts. The backing `SpillFile` is created lazily on
-/// first stash so configurations that never spill touch no disk.
+/// on very long contexts. The ephemeral backing file is created lazily
+/// on first stash so configurations that never spill touch no disk;
+/// the persistent variant ([`SpillTier::open_persistent`]) opens and
+/// scans its record file eagerly so recovery happens before any
+/// traffic.
 #[derive(Debug)]
 pub struct SpillTier {
     dir: Option<String>,
@@ -169,8 +641,55 @@ impl SpillTier {
         SpillTier { dir, row_floats, file: None, slots: HashMap::new() }
     }
 
+    /// Persistent tier for `shard`: opens the deterministic record
+    /// file under `dir` and scans it for recoverable records. The
+    /// caller decides their fate: [`SpillTier::adopt_recovered`]
+    /// (resume) or [`SpillTier::reclaim_recovered`] (fresh attach).
+    pub fn open_persistent(
+        dir: &str,
+        row_floats: usize,
+        shard: usize,
+        generation: u64,
+    ) -> Result<SpillTier> {
+        let file = SpillFile::open_or_create(dir, row_floats, shard, generation)?;
+        Ok(SpillTier {
+            dir: Some(dir.to_string()),
+            row_floats,
+            file: Some(file),
+            slots: HashMap::new(),
+        })
+    }
+
     pub fn enabled(&self) -> bool {
         self.dir.is_some()
+    }
+
+    /// Records the open-time scan rejected (checksum/magic/generation
+    /// failures, duplicates, torn tails). 0 for ephemeral tiers.
+    pub fn recovery_errors(&self) -> u64 {
+        self.file.as_ref().map(|f| f.recovery_errors).unwrap_or(0)
+    }
+
+    /// Adopt the open-time scan's recovered records into the live slot
+    /// map and return their positions (resume path; ascending order).
+    pub fn adopt_recovered(&mut self) -> Vec<usize> {
+        let Some(file) = self.file.as_mut() else { return Vec::new() };
+        let recovered = file.take_recovered();
+        let mut out = Vec::with_capacity(recovered.len());
+        for (pos, slot) in recovered {
+            self.slots.insert(pos, slot);
+            out.push(pos);
+        }
+        out
+    }
+
+    /// Discard the open-time scan's recovered records (fresh attach:
+    /// the previous life's leftovers are reclaimed, not resurrected).
+    pub fn reclaim_recovered(&mut self) -> Result<u64> {
+        match self.file.as_mut() {
+            Some(f) => f.reclaim_recovered(),
+            None => Ok(0),
+        }
     }
 }
 
@@ -192,27 +711,35 @@ impl Tier for SpillTier {
             self.file = Some(SpillFile::create(&dir, self.row_floats)?);
         }
         let qr = payload.into_quant();
-        let slot = self.file.as_mut().unwrap().write_row(&qr)?;
+        let slot = self.file.as_mut().unwrap().write_row(pos, &qr)?;
         self.slots.insert(pos, slot);
         Ok(())
     }
 
     fn take(&mut self, pos: usize) -> Result<Option<RowPayload>> {
-        let Some(slot) = self.slots.remove(&pos) else { return Ok(None) };
+        let Some(&slot) = self.slots.get(&pos) else { return Ok(None) };
         let file = self
             .file
             .as_mut()
             .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?;
-        Ok(Some(RowPayload::Quant(file.take_row(slot)?)))
+        // file op first: an I/O error must leave the pos -> slot
+        // mapping intact so the record stays reachable for a retry
+        // (removing it first stranded the slot forever: never freed,
+        // counted by bytes(), unreachable by position)
+        let qr = file.take_row(slot, pos)?;
+        self.slots.remove(&pos);
+        Ok(Some(RowPayload::Quant(qr)))
     }
 
     fn discard(&mut self, pos: usize) -> Result<bool> {
-        let Some(slot) = self.slots.remove(&pos) else { return Ok(false) };
+        let Some(&slot) = self.slots.get(&pos) else { return Ok(false) };
         let file = self
             .file
             .as_mut()
             .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?;
-        file.free_slot(slot)?;
+        // same ordering as take: only unmap after the slot is freed
+        file.free_slot(slot, pos)?;
+        self.slots.remove(&pos);
         Ok(true)
     }
 
@@ -234,6 +761,7 @@ impl Tier for SpillTier {
 mod tests {
     use super::*;
     use crate::offload::quant::quantize;
+    use crate::util::TempDir;
 
     fn tmpdir() -> String {
         std::env::temp_dir()
@@ -242,13 +770,17 @@ mod tests {
             .into_owned()
     }
 
+    fn file_len(f: &SpillFile) -> u64 {
+        std::fs::metadata(&f.path).unwrap().len()
+    }
+
     #[test]
     fn write_take_roundtrip() {
         let mut s = SpillFile::create(&tmpdir(), 8).unwrap();
         let qr = quantize(&[0.5f32, -1.0, 2.0, 0.0, 1.0, 1.5, -0.25, 0.75]);
-        let slot = s.write_row(&qr).unwrap();
+        let slot = s.write_row(3, &qr).unwrap();
         assert_eq!(s.bytes(), s.record_bytes());
-        let back = s.take_row(slot).unwrap();
+        let back = s.take_row(slot, 3).unwrap();
         assert_eq!(back, qr);
         assert_eq!(s.bytes(), 0);
     }
@@ -256,19 +788,19 @@ mod tests {
     #[test]
     fn slots_are_reused_after_free() {
         let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
-        let a = s.write_row(&quantize(&[1.0; 4])).unwrap();
-        let b = s.write_row(&quantize(&[2.0; 4])).unwrap();
+        let a = s.write_row(0, &quantize(&[1.0; 4])).unwrap();
+        let b = s.write_row(1, &quantize(&[2.0; 4])).unwrap();
         assert_ne!(a, b);
-        let _ = s.take_row(a).unwrap();
-        let c = s.write_row(&quantize(&[3.0; 4])).unwrap();
+        let _ = s.take_row(a, 0).unwrap();
+        let c = s.write_row(2, &quantize(&[3.0; 4])).unwrap();
         assert_eq!(c, a, "freed slot not reused");
         // b untouched by the reuse
-        let back = s.take_row(b).unwrap();
+        let back = s.take_row(b, 1).unwrap();
         assert_eq!(back.min, 2.0);
     }
 
     #[test]
-    fn file_removed_on_drop() {
+    fn ephemeral_file_removed_on_drop() {
         let path;
         {
             let s = SpillFile::create(&tmpdir(), 2).unwrap();
@@ -281,30 +813,108 @@ mod tests {
     #[test]
     fn rejects_wrong_row_width() {
         let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
-        assert!(s.write_row(&quantize(&[1.0; 3])).is_err());
+        assert!(s.write_row(0, &quantize(&[1.0; 3])).is_err());
     }
 
     #[test]
     fn read_without_release_keeps_slot() {
         let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
-        let slot = s.write_row(&quantize(&[1.0, 2.0, 3.0, 4.0])).unwrap();
-        let a = s.read_row(slot).unwrap();
-        let b = s.read_row(slot).unwrap();
+        let slot = s.write_row(9, &quantize(&[1.0, 2.0, 3.0, 4.0])).unwrap();
+        let a = s.read_row(slot, 9).unwrap();
+        let b = s.read_row(slot, 9).unwrap();
         assert_eq!(a, b);
         assert_eq!(s.bytes(), s.record_bytes());
-        s.free_slot(slot).unwrap();
+        s.free_slot(slot, 9).unwrap();
         assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn read_of_wrong_position_is_an_error() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        let slot = s.write_row(7, &quantize(&[1.0; 4])).unwrap();
+        let err = s.read_row(slot, 8).unwrap_err();
+        assert!(format!("{err}").contains("expected 8"), "{err}");
     }
 
     #[test]
     fn stale_handles_error_instead_of_corrupting() {
         let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
-        let slot = s.write_row(&quantize(&[1.0; 4])).unwrap();
-        assert!(s.free_slot(99).is_err(), "unallocated slot must error");
-        s.free_slot(slot).unwrap();
-        assert!(s.free_slot(slot).is_err(), "double free must error");
-        assert!(s.read_row(slot).is_err(), "read of freed slot must error");
-        assert_eq!(s.free.len(), 1, "failed frees must not grow the free list");
+        let keep = s.write_row(0, &quantize(&[0.5; 4])).unwrap();
+        let slot = s.write_row(1, &quantize(&[1.0; 4])).unwrap();
+        assert!(s.free_slot(99, 1).is_err(), "unallocated slot must error");
+        s.free_slot(slot, 1).unwrap();
+        // the freed tail slot was truncated away: both stale paths err
+        assert!(s.free_slot(slot, 1).is_err(), "double free must error");
+        assert!(s.read_row(slot, 1).is_err(), "read of freed slot must error");
+        assert_eq!(s.bytes(), s.record_bytes(), "slot 0 still live");
+        let _ = keep;
+    }
+
+    #[test]
+    fn contiguous_free_tail_truncates_the_file() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        let rb = s.record_bytes() as u64;
+        let s0 = s.write_row(0, &quantize(&[0.0; 4])).unwrap();
+        let s1 = s.write_row(1, &quantize(&[1.0; 4])).unwrap();
+        let s2 = s.write_row(2, &quantize(&[2.0; 4])).unwrap();
+        assert_eq!(file_len(&s), 3 * rb);
+        // freeing the tail slot shrinks immediately
+        s.free_slot(s2, 2).unwrap();
+        assert_eq!(file_len(&s), 2 * rb);
+        // freeing a middle slot leaves a reusable hole, no shrink
+        s.free_slot(s0, 0).unwrap();
+        assert_eq!(file_len(&s), 2 * rb);
+        // once the hole connects to the tail, the whole span truncates
+        s.free_slot(s1, 1).unwrap();
+        assert_eq!(file_len(&s), 0);
+        assert_eq!(s.bytes(), 0);
+        // the file keeps working after a full truncation
+        let s3 = s.write_row(9, &quantize(&[9.0; 4])).unwrap();
+        assert_eq!(s3, 0, "allocation restarts at slot 0");
+        assert_eq!(file_len(&s), rb);
+    }
+
+    #[test]
+    fn take_io_error_keeps_tier_bookkeeping_intact() {
+        let mut t = SpillTier::new(Some(tmpdir()), 4);
+        t.stash(5, RowPayload::Raw(vec![1.0, 2.0, 3.0, 4.0])).unwrap();
+        t.file.as_mut().unwrap().fault_next_read = true;
+        let err = t.take(5).unwrap_err();
+        assert!(format!("{err}").contains("injected"), "{err}");
+        // the old code removed the pos -> slot mapping before the file
+        // op: the record was stranded (never freed, still counted,
+        // unreachable). The mapping must survive the error:
+        assert_eq!(t.rows(), 1, "failed take must not unmap the row");
+        assert!(t.bytes() > 0);
+        let back = t.take(5).unwrap().expect("retry must reach the record");
+        assert_eq!(back.into_raw().len(), 4);
+        assert_eq!(t.rows(), 0);
+        assert_eq!(t.bytes(), 0);
+    }
+
+    #[test]
+    fn discard_io_error_keeps_tier_bookkeeping_intact() {
+        let mut t = SpillTier::new(Some(tmpdir()), 4);
+        t.stash(6, RowPayload::Raw(vec![1.0; 4])).unwrap();
+        t.file.as_mut().unwrap().fault_next_free = true;
+        let err = t.discard(6).unwrap_err();
+        assert!(format!("{err}").contains("injected"), "{err}");
+        assert_eq!(t.rows(), 1, "failed discard must not unmap the row");
+        assert!(t.bytes() > 0);
+        assert!(t.discard(6).unwrap(), "retry must free the record");
+        assert_eq!(t.rows(), 0);
+        assert_eq!(t.bytes(), 0);
+    }
+
+    #[test]
+    fn failed_write_returns_slot_to_free_list() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        let a = s.write_row(0, &quantize(&[1.0; 4])).unwrap();
+        // wrong width fails before any allocation side effect
+        assert!(s.write_row(1, &quantize(&[1.0; 3])).is_err());
+        assert_eq!(s.bytes(), s.record_bytes());
+        let b = s.write_row(1, &quantize(&[2.0; 4])).unwrap();
+        assert_eq!(b, a + 1, "no slot leaked by the failed write");
     }
 
     #[test]
@@ -326,5 +936,131 @@ mod tests {
         assert!(!off.enabled());
         assert!(off.stash(0, RowPayload::Raw(vec![0.0; 4])).is_err());
         assert_eq!(off.bytes(), 0);
+    }
+
+    // --- persistent mode ---
+
+    #[test]
+    fn manifest_attach_bumps_generation_and_validates_identity() {
+        let dir = TempDir::new("spill-manifest").unwrap();
+        let d = dir.path_str();
+        let m1 = SpillManifest::attach(&d, 16, 2, ShardPartition::Hash).unwrap();
+        assert_eq!(m1.generation, 1);
+        let m2 = SpillManifest::attach(&d, 16, 2, ShardPartition::Hash).unwrap();
+        assert_eq!(m2.generation, 2);
+        // identity mismatches are hard errors
+        assert!(SpillManifest::attach(&d, 32, 2, ShardPartition::Hash).is_err());
+        assert!(SpillManifest::attach(&d, 16, 4, ShardPartition::Hash).is_err());
+        assert!(SpillManifest::attach(&d, 16, 2, ShardPartition::Range).is_err());
+    }
+
+    #[test]
+    fn manifest_attach_reclaims_ephemeral_leftovers() {
+        let dir = TempDir::new("spill-reclaim").unwrap();
+        let d = dir.path_str();
+        // a dead process's ephemeral spill file
+        let stale = dir.path().join("asrkf-spill-99999-0.bin");
+        std::fs::write(&stale, b"junk").unwrap();
+        let m = SpillManifest::attach(&d, 8, 1, ShardPartition::Hash).unwrap();
+        assert_eq!(m.stale_files_reclaimed, 1);
+        assert!(!stale.exists(), "dead-process file must be reclaimed");
+    }
+
+    #[test]
+    fn persistent_file_survives_drop_and_recovers_records() {
+        let dir = TempDir::new("spill-persist").unwrap();
+        let d = dir.path_str();
+        let qr = quantize(&[1.0, -2.0, 0.5, 3.0]);
+        let path;
+        {
+            let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+            let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+            f.write_row(11, &qr).unwrap();
+            f.write_row(12, &quantize(&[4.0; 4])).unwrap();
+            let freed = f.write_row(13, &quantize(&[5.0; 4])).unwrap();
+            f.free_slot(freed, 13).unwrap();
+            path = f.path.clone();
+            // ungraceful: drop without any shutdown protocol
+        }
+        assert!(path.exists(), "persistent file must survive drop");
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 0);
+        let rec = f.take_recovered();
+        let positions: Vec<usize> = rec.iter().map(|&(p, _)| p).collect();
+        assert_eq!(positions, vec![11, 12], "freed slot 13 must not resurrect");
+        let (_, slot) = rec[0];
+        assert_eq!(f.read_row(slot, 11).unwrap(), qr, "recovered payload bit-exact");
+    }
+
+    #[test]
+    fn corrupted_position_field_fails_the_checksum() {
+        let dir = TempDir::new("spill-posflip").unwrap();
+        let d = dir.path_str();
+        {
+            let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+            let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+            f.write_row(3, &quantize(&[1.0; 4])).unwrap();
+        }
+        let path = record_path(&d, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12] ^= 0x01; // pos 3 -> pos 2: header-only corruption
+        std::fs::write(&path, &bytes).unwrap();
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 1, "a flipped pos byte must fail the checksum");
+        assert!(
+            f.take_recovered().is_empty(),
+            "a record with corrupt identity must never be served under the wrong position"
+        );
+    }
+
+    #[test]
+    fn fresh_attach_reclaim_truncates_leftovers() {
+        let dir = TempDir::new("spill-fresh").unwrap();
+        let d = dir.path_str();
+        {
+            let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+            let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+            f.write_row(0, &quantize(&[1.0; 4])).unwrap();
+            f.write_row(1, &quantize(&[2.0; 4])).unwrap();
+        }
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.reclaim_recovered().unwrap(), 2);
+        assert_eq!(f.bytes(), 0);
+        assert_eq!(file_len(&f), 0, "reclaimed leftovers must truncate away");
+    }
+
+    #[test]
+    fn scan_rejects_corrupt_and_fenced_records() {
+        let dir = TempDir::new("spill-scan").unwrap();
+        let d = dir.path_str();
+        let rb = record_bytes_for(4);
+        {
+            let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+            let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+            f.write_row(0, &quantize(&[1.0; 4])).unwrap();
+            f.write_row(1, &quantize(&[2.0; 4])).unwrap();
+            f.write_row(2, &quantize(&[3.0; 4])).unwrap();
+        }
+        let path = record_path(&d, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // poison slot 1's payload (checksum mismatch)
+        bytes[rb + REC_HEADER_BYTES + 2] ^= 0xFF;
+        // fence slot 2's generation far into the future
+        bytes[2 * rb + 4..2 * rb + 12].copy_from_slice(&u64::MAX.to_le_bytes());
+        // torn tail: a partial fourth record
+        bytes.extend_from_slice(&[0xAB; 10]);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 3, "poisoned + fenced + torn tail");
+        let rec = f.take_recovered();
+        assert_eq!(rec.len(), 1, "only the intact record survives");
+        assert_eq!(rec[0].0, 0);
+        let back = f.read_row(rec[0].1, 0).unwrap();
+        assert_eq!(back, quantize(&[1.0; 4]));
     }
 }

@@ -41,6 +41,11 @@ use crate::offload::tier::{RowPayload, Tier};
 struct Entry {
     class: SchedClass,
     thaw_eta: u64,
+    /// Re-attached by crash recovery ([`TieredStore::recover`]) rather
+    /// than stashed by this process. The engine's policy knows nothing
+    /// about recovered positions, so a re-freeze of one is not a
+    /// double-freeze bug — the fresh row supersedes the stale copy.
+    recovered: bool,
 }
 
 /// Tiered off-GPU storage for frozen KV rows. API superset of the old
@@ -67,6 +72,8 @@ pub struct TieredStore {
     pub demotions_cold: u64,
     pub demotions_spill: u64,
     pub prefetch_promotions: u64,
+    /// rows re-attached from a persistent spill file by `recover()`
+    pub recovered_rows: u64,
     pub restore_latency: RestoreLatency,
     /// scheduler queue depth (rows awaiting staging), sampled per step
     pub sched_depth: CountHistogram,
@@ -86,10 +93,21 @@ fn missing(pos: usize, class: SchedClass) -> Error {
 }
 
 impl TieredStore {
+    /// Build with the default (ephemeral, lazily-created) spill tier.
+    /// Persistent spill is orchestrated one level up — see
+    /// [`TieredStore::with_spill`] and `ShardedStore::resume`.
     pub fn new(row_floats: usize, cfg: OffloadConfig) -> Self {
+        let spill = SpillTier::new(cfg.spill_dir.clone(), row_floats);
+        TieredStore::with_spill(row_floats, cfg, spill)
+    }
+
+    /// Build around a caller-prepared spill tier (the persistent,
+    /// already-scanned variant). Call [`TieredStore::recover`] next to
+    /// adopt its recovered records, or leave them for the spill tier's
+    /// `reclaim_recovered` (done by the fresh-attach path).
+    pub fn with_spill(row_floats: usize, cfg: OffloadConfig, spill: SpillTier) -> Self {
         let hot = HotTier::new(row_floats, cfg.block_rows);
         let cold = ColdTier::new(row_floats);
-        let spill = SpillTier::new(cfg.spill_dir.clone(), row_floats);
         TieredStore {
             row_floats,
             cfg,
@@ -109,6 +127,7 @@ impl TieredStore {
             demotions_cold: 0,
             demotions_spill: 0,
             prefetch_promotions: 0,
+            recovered_rows: 0,
             restore_latency: RestoreLatency::default(),
             sched_depth: CountHistogram::default(),
         }
@@ -116,6 +135,42 @@ impl TieredStore {
 
     pub fn config(&self) -> &OffloadConfig {
         &self.cfg
+    }
+
+    /// Adopt the records a persistent spill tier recovered at open:
+    /// each position is re-registered with the eta scheduler as a
+    /// spill-resident row under a conservative `thaw_eta` of
+    /// `now + cold_after_steps` (the crashed process's prediction is
+    /// gone). Recovered rows stay on disk — the pressure-staging sweep
+    /// skips them (see `stage_upcoming`), so their durable copy
+    /// survives until an explicit take or a supersession re-freeze.
+    /// Counted into `total_stashed` so the conservation invariant
+    /// (`stashed == restored + dropped + resident`) spans restarts.
+    pub fn recover(&mut self, now: u64) -> Result<u64> {
+        let eta = now.saturating_add(self.cfg.cold_after_steps);
+        let positions = self.spill.adopt_recovered();
+        for &pos in &positions {
+            if self.entries.contains_key(&pos) {
+                return Err(Error::Offload(format!(
+                    "recovered pos {pos} collides with a resident row"
+                )));
+            }
+            self.entries
+                .insert(pos, Entry { class: SchedClass::Spill, thaw_eta: eta, recovered: true });
+            self.sched.insert(SchedClass::Spill, eta, pos);
+        }
+        let n = positions.len() as u64;
+        self.total_stashed += n;
+        self.recovered_rows += n;
+        self.bump_peaks();
+        Ok(n)
+    }
+
+    /// Records the spill tier's open-time scan rejected (corrupt,
+    /// fenced-generation, duplicate, or torn records). 0 when the
+    /// spill tier is ephemeral or disabled.
+    pub fn recovery_errors(&self) -> u64 {
+        self.spill.recovery_errors()
     }
 
     fn row_bytes(&self) -> usize {
@@ -150,8 +205,15 @@ impl TieredStore {
                 self.row_floats
             )));
         }
-        if self.entries.contains_key(&pos) {
-            return Err(Error::Offload(format!("double-freeze of pos {pos}")));
+        if let Some(e) = self.entries.get(&pos) {
+            if e.recovered {
+                // a resumed session re-froze a recovered position: the
+                // fresh row supersedes the stale pre-crash copy (which
+                // the policy never knew about)
+                self.drop_row(pos)?;
+            } else {
+                return Err(Error::Offload(format!("double-freeze of pos {pos}")));
+            }
         }
         let goes_cold = self.cfg.quantize_cold
             && thaw_eta.saturating_sub(step) >= self.cfg.cold_after_steps;
@@ -163,7 +225,7 @@ impl TieredStore {
             self.hot.stash(pos, RowPayload::Raw(row))?;
             SchedClass::HotResident
         };
-        self.entries.insert(pos, Entry { class, thaw_eta });
+        self.entries.insert(pos, Entry { class, thaw_eta, recovered: false });
         self.sched.insert(class, thaw_eta, pos);
         self.total_stashed += 1;
         self.enforce_budgets()?;
@@ -292,6 +354,16 @@ impl TieredStore {
         let limit = now.saturating_add(horizon);
         let mut n = 0;
         for (_, pos) in self.sched.due_frozen(limit, max_rows) {
+            // crash-recovered rows have no imminent consumer (the
+            // resumed policy never froze them, so it will never plan
+            // their restore): promoting one would evict its only
+            // durable copy from disk and park it in the hot tier
+            // indefinitely. They leave the store via an explicit take
+            // (drain / store-level resume) or supersession, never via
+            // speculation.
+            if self.entries.get(&pos).is_some_and(|e| e.recovered) {
+                continue;
+            }
             if self.promote(pos)? {
                 n += 1;
             }
@@ -331,17 +403,26 @@ impl TieredStore {
 
     /// Take the payload for a restore (frozen -> active). `Ok(None)`
     /// means nothing was stashed for `pos`; spill I/O failures error.
+    ///
+    /// The entry map and the eta index are popped only after the
+    /// payload is in hand: a spill I/O error must leave the store's
+    /// bookkeeping aligned with the tier's contents, so a retry still
+    /// reaches the row. (The old order popped the indexes first — a
+    /// failed take then reported `Ok(None)` forever for a row the
+    /// tier still held.)
     pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
-        let Some(e) = self.entries.remove(&pos) else { return Ok(None) };
+        let Some(e) = self.entries.get(&pos) else { return Ok(None) };
+        let (class, eta) = (e.class, e.thaw_eta);
         let t0 = Instant::now();
-        self.sched.remove(e.class, e.thaw_eta, pos);
         let payload = self
-            .tier_mut(e.class)
+            .tier_mut(class)
             .take(pos)?
-            .ok_or_else(|| missing(pos, e.class))?;
-        let tier = match e.class {
+            .ok_or_else(|| missing(pos, class))?;
+        self.entries.remove(&pos);
+        self.sched.remove(class, eta, pos);
+        let tier = match class {
             SchedClass::HotResident | SchedClass::HotStaged => {
-                if e.class == SchedClass::HotStaged {
+                if class == SchedClass::HotStaged {
                     self.staged_hits += 1;
                 }
                 TierKind::Hot
@@ -364,12 +445,19 @@ impl TieredStore {
     /// Drop a payload permanently (irreversible-eviction baselines).
     /// Absent positions are a no-op; tier bookkeeping failures (a
     /// stale spill handle) surface as `Error::Offload` instead of
-    /// being silently ignored.
+    /// being silently ignored. Same mutation order as [`take`]: the
+    /// indexes are only popped after the tier op succeeds, so a spill
+    /// I/O error leaves the row reachable for a retry.
+    ///
+    /// [`take`]: TieredStore::take
     pub fn drop_row(&mut self, pos: usize) -> Result<()> {
-        let Some(e) = self.entries.remove(&pos) else { return Ok(()) };
-        self.sched.remove(e.class, e.thaw_eta, pos);
-        if !self.tier_mut(e.class).discard(pos)? {
-            return Err(missing(pos, e.class));
+        let Some(e) = self.entries.get(&pos) else { return Ok(()) };
+        let (class, eta) = (e.class, e.thaw_eta);
+        let held = self.tier_mut(class).discard(pos)?;
+        self.entries.remove(&pos);
+        self.sched.remove(class, eta, pos);
+        if !held {
+            return Err(missing(pos, class));
         }
         self.total_dropped += 1;
         Ok(())
@@ -459,6 +547,8 @@ impl TieredStore {
             restore_hot_mean_us: mean_us(&self.restore_latency.hot),
             restore_cold_mean_us: mean_us(&self.restore_latency.cold),
             sched_depth_max: self.sched_depth.max(),
+            recovered_rows: self.recovered_rows,
+            recovery_errors: self.spill.recovery_errors(),
             // plan batching is engine-side; sharding telemetry is
             // facade-side (`ShardedStore::summary` overlays both)
             shards: 1,
@@ -724,6 +814,98 @@ mod tests {
         let mut ps: Vec<usize> = s.positions().collect();
         ps.sort_unstable();
         assert_eq!(ps, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn recover_readopts_spilled_rows_and_restash_supersedes() {
+        use crate::config::ShardPartition;
+        use crate::offload::spill::{SpillManifest, SpillTier};
+        use crate::util::TempDir;
+
+        let dir = TempDir::new("store-recover").unwrap();
+        let d = dir.path_str();
+        let mut c = cfg();
+        c.cold_budget_bytes = 1; // everything cold spills to disk
+        c.spill_dir = Some(d.clone());
+        c.spill_persist = true;
+
+        // first life: two rows spilled, then an ungraceful drop
+        {
+            let m = SpillManifest::attach(&d, RF, 1, ShardPartition::Hash).unwrap();
+            let spill = SpillTier::open_persistent(&d, RF, 0, m.generation).unwrap();
+            let mut s = TieredStore::with_spill(RF, c.clone(), spill);
+            s.stash(3, row(RF, 3.0), 0, 100).unwrap();
+            s.stash(5, row(RF, 5.0), 0, 100).unwrap();
+            assert_eq!(s.occupancy().spill_rows, 2);
+        }
+
+        // second life: re-attach and recover
+        let m = SpillManifest::attach(&d, RF, 1, ShardPartition::Hash).unwrap();
+        let spill = SpillTier::open_persistent(&d, RF, 0, m.generation).unwrap();
+        let mut s = TieredStore::with_spill(RF, c, spill);
+        assert_eq!(s.recover(0).unwrap(), 2);
+        assert_eq!(s.recovered_rows, 2);
+        assert_eq!(s.recovery_errors(), 0);
+        assert_eq!(s.tier_of(3), Some((TierKind::Spill, false)));
+
+        // a recovered row restores within the quantization bound
+        let back = s.take(5).unwrap().unwrap();
+        let orig = row(RF, 5.0);
+        let bound = cfg().cold_quant_rel_error * (0.01 * (RF - 1) as f32) + 1e-5;
+        for (a, b) in orig.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}");
+        }
+
+        // re-freezing a recovered position supersedes the stale copy
+        // instead of erroring as a double-freeze
+        s.stash(3, row(RF, 30.0), 0, 1).unwrap();
+        assert_eq!(s.take(3).unwrap(), Some(row(RF, 30.0)), "fresh copy wins");
+        assert!(s.is_empty());
+        // conservation spans the restart: 2 recovered + 1 stashed ==
+        // 2 restored + 1 superseded-drop + 0 resident
+        assert_eq!(
+            s.total_stashed,
+            s.total_restored + s.total_dropped + s.len() as u64
+        );
+    }
+
+    #[test]
+    fn pressure_staging_skips_recovered_orphans() {
+        use crate::config::ShardPartition;
+        use crate::offload::spill::{SpillManifest, SpillTier};
+        use crate::util::TempDir;
+
+        let dir = TempDir::new("store-recover-stage").unwrap();
+        let d = dir.path_str();
+        let mut c = cfg();
+        c.cold_budget_bytes = 1; // everything cold spills to disk
+        c.spill_dir = Some(d.clone());
+        c.spill_persist = true;
+        {
+            let m = SpillManifest::attach(&d, RF, 1, ShardPartition::Hash).unwrap();
+            let spill = SpillTier::open_persistent(&d, RF, 0, m.generation).unwrap();
+            let mut s = TieredStore::with_spill(RF, c.clone(), spill);
+            s.stash(3, row(RF, 3.0), 0, 100).unwrap();
+        }
+        let m = SpillManifest::attach(&d, RF, 1, ShardPartition::Hash).unwrap();
+        let spill = SpillTier::open_persistent(&d, RF, 0, m.generation).unwrap();
+        let mut s = TieredStore::with_spill(RF, c, spill);
+        s.recover(0).unwrap();
+        // a live spilled row the policy predicts back at step 100
+        s.stash(10, row(RF, 10.0), 0, 100).unwrap();
+        // pressure sweep near the live row's thaw: both rows are "due"
+        // (recovered eta = 8, live eta = 100, limit = 103), but only
+        // the live row may promote — speculation must not evict a
+        // recovered orphan's only durable copy
+        assert_eq!(s.stage_upcoming(95, 8, 8).unwrap(), 1);
+        assert_eq!(s.tier_of(10), Some((TierKind::Hot, true)));
+        assert_eq!(
+            s.tier_of(3),
+            Some((TierKind::Spill, false)),
+            "recovered orphan must stay on disk through pressure staging"
+        );
+        // the orphan is still restorable the ordinary way
+        assert!(s.take(3).unwrap().is_some());
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub fn parse_request(line: &str) -> Result<GenParams, String> {
         max_new: v.get("max_new").as_usize().unwrap_or(64),
         policy: v.get("policy").as_str().unwrap_or("asrkf").to_string(),
         seed: v.get("seed").as_f64().unwrap_or(0.0) as u64,
+        resume_spill: v.get("resume_spill").as_bool().unwrap_or(false),
     })
 }
 
@@ -48,6 +49,8 @@ pub fn response_line(resp: &GenResponse) -> String {
             ("shards", Json::num(resp.offload.shards as f64)),
             ("restore_par_max", Json::num(resp.offload.restore_parallelism_max as f64)),
             ("shard_imbalance", Json::num(resp.offload.shard_imbalance as f64)),
+            ("recovered_rows", Json::num(resp.offload.recovered_rows as f64)),
+            ("recovery_errors", Json::num(resp.offload.recovery_errors as f64)),
             ("plan_mean_us", Json::num(resp.plan_latency.mean_us as f64)),
             ("plan_p99_us", Json::num(resp.plan_latency.p99_us as f64)),
         ]),
@@ -73,11 +76,15 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        let p = parse_request(r#"{"prompt": "hello", "max_new": 10, "policy": "full"}"#).unwrap();
+        let p = parse_request(
+            r#"{"prompt": "hello", "max_new": 10, "policy": "full", "resume_spill": true}"#,
+        )
+        .unwrap();
         assert_eq!(p.prompt, "hello");
         assert_eq!(p.max_new, 10);
         assert_eq!(p.policy, "full");
         assert_eq!(p.seed, 0);
+        assert!(p.resume_spill);
     }
 
     #[test]
@@ -85,6 +92,7 @@ mod tests {
         let p = parse_request(r#"{"prompt": "x"}"#).unwrap();
         assert_eq!(p.max_new, 64);
         assert_eq!(p.policy, "asrkf");
+        assert!(!p.resume_spill, "resume is opt-in per request");
     }
 
     #[test]
@@ -119,6 +127,9 @@ mod tests {
         assert_eq!(v.get("shards").as_usize(), Some(0)); // default summary
         assert_eq!(v.get("restore_par_max").as_usize(), Some(0));
         assert_eq!(v.get("shard_imbalance").as_usize(), Some(0));
+        // spill-recovery telemetry does too
+        assert_eq!(v.get("recovered_rows").as_usize(), Some(0));
+        assert_eq!(v.get("recovery_errors").as_usize(), Some(0));
         // policy control-plane latency does too
         assert_eq!(v.get("plan_mean_us").as_usize(), Some(0));
         assert_eq!(v.get("plan_p99_us").as_usize(), Some(0));

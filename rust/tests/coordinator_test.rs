@@ -7,7 +7,7 @@ use asrkf::config::{EngineConfig, ServerConfig};
 use asrkf::coordinator::{spawn, GenParams};
 
 fn params(prompt: &str, max_new: usize, policy: &str, seed: u64) -> GenParams {
-    GenParams { prompt: prompt.into(), max_new, policy: policy.into(), seed }
+    GenParams { prompt: prompt.into(), max_new, policy: policy.into(), seed, resume_spill: false }
 }
 
 #[test]

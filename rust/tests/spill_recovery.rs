@@ -1,0 +1,338 @@
+//! Crash-recovery tests for the persistent spill tier
+//! (`--spill-persist`): a store is driven through a random trace,
+//! dropped WITHOUT graceful shutdown at a random prefix, and reopened
+//! on the same directory — every surviving row must restore bit-exact
+//! to a shadow model, stale/poisoned records must be reclaimed (never
+//! served as bad floats), and the spill/store error paths must leave
+//! bookkeeping aligned with tier contents so a retry still reaches the
+//! row. CI runs this file in release too: the pre-fix stale-handle
+//! bugs hid behind `debug_assert!`s that release builds compiled out.
+
+use std::collections::HashMap;
+
+use asrkf::config::{OffloadConfig, ShardPartition};
+use asrkf::error::Error;
+use asrkf::metrics::TierKind;
+use asrkf::offload::spill::REC_HEADER_BYTES;
+use asrkf::offload::{dequantize, quantize, record_bytes_for, record_path, ShardedStore};
+use asrkf::prop_assert;
+use asrkf::util::prop::{prop_check, G};
+use asrkf::util::TempDir;
+
+const RF: usize = 16;
+
+fn row(v: f32) -> Vec<f32> {
+    (0..RF).map(|i| v + i as f32 * 0.01).collect()
+}
+
+/// What a spilled row restores to: rows admitted past the cold horizon
+/// are quantized once at stash time and the record then moves verbatim
+/// (cold -> spill -> disk -> recovery), so the restored floats are
+/// exactly the dequantized lattice points.
+fn expected_roundtrip(r: &[f32]) -> Vec<f32> {
+    dequantize(&quantize(r))
+}
+
+/// Everything-cold-must-spill persistent configuration rooted at `dir`.
+fn persist_cfg(dir: &TempDir, shards: usize, partition: ShardPartition) -> OffloadConfig {
+    OffloadConfig {
+        hot_budget_bytes: 1 << 20,
+        cold_budget_bytes: 1, // any cold row overflows straight to disk
+        cold_after_steps: 4,
+        spill_dir: Some(dir.path_str()),
+        spill_persist: true,
+        shards,
+        shard_partition: partition,
+        block_rows: 4,
+        ..OffloadConfig::default()
+    }
+}
+
+const COMBOS: [(usize, ShardPartition); 4] = [
+    (1, ShardPartition::Hash),
+    (4, ShardPartition::Hash),
+    (1, ShardPartition::Range),
+    (4, ShardPartition::Range),
+];
+
+#[test]
+fn prop_crash_recovery_restores_surviving_rows_bit_exact() {
+    prop_check(8, |g| {
+        for (shards, partition) in COMBOS {
+            let dir = TempDir::new("spill-recovery-prop")
+                .map_err(|e| format!("tempdir: {e}"))?;
+            let cfg = persist_cfg(&dir, shards, partition);
+            let mut store = ShardedStore::new(RF, cfg.clone())
+                .map_err(|e| format!("new: {e}"))?;
+            // shadow model: pos -> expected restored floats
+            let mut shadow: HashMap<usize, Vec<f32>> = HashMap::new();
+            let mut next_pos = 0usize;
+            let ops = g.usize(5, 50);
+            for step in 0..ops as u64 {
+                match g.usize(0, 5) {
+                    // stash a fresh row (weighted heaviest); far thaw
+                    // eta -> quantized at admission -> spilled by the
+                    // 1-byte cold budget
+                    0..=3 => {
+                        let r = g.vec_f32(RF, -4.0, 4.0);
+                        store
+                            .stash(next_pos, r.clone(), step, step + 100)
+                            .map_err(|e| format!("stash {next_pos}: {e}"))?;
+                        shadow.insert(next_pos, expected_roundtrip(&r));
+                        next_pos += 1;
+                    }
+                    // restore a random resident row (verified live too)
+                    4 => {
+                        let mut keys: Vec<usize> = shadow.keys().copied().collect();
+                        keys.sort_unstable();
+                        if !keys.is_empty() {
+                            let pos = keys[g.usize(0, keys.len() - 1)];
+                            let got = store
+                                .take(pos)
+                                .map_err(|e| format!("take {pos}: {e}"))?;
+                            let want = shadow.remove(&pos).unwrap();
+                            prop_assert!(
+                                got.as_deref() == Some(want.as_slice()),
+                                "mid-trace restore of pos {pos} diverged"
+                            );
+                        }
+                    }
+                    // drop a random resident row
+                    _ => {
+                        let mut keys: Vec<usize> = shadow.keys().copied().collect();
+                        keys.sort_unstable();
+                        if !keys.is_empty() {
+                            let pos = keys[g.usize(0, keys.len() - 1)];
+                            store.drop_row(pos).map_err(|e| format!("drop {pos}: {e}"))?;
+                            shadow.remove(&pos);
+                        }
+                    }
+                }
+            }
+
+            // crash: drop the store with no graceful shutdown at all
+            drop(store);
+
+            // reopen the same directory and recover
+            let mut re = ShardedStore::resume(RF, cfg)
+                .map_err(|e| format!("resume ({shards} shards, {partition:?}): {e}"))?;
+            let sum = re.summary();
+            prop_assert!(
+                sum.recovery_errors == 0,
+                "clean crash must scan clean, got {} errors ({shards} shards, {partition:?})",
+                sum.recovery_errors
+            );
+            prop_assert!(
+                sum.recovered_rows == shadow.len() as u64,
+                "recovered {} rows, shadow holds {} ({shards} shards, {partition:?})",
+                sum.recovered_rows,
+                shadow.len()
+            );
+            prop_assert!(
+                sum.occupancy.spill_rows == shadow.len(),
+                "recovered rows must be spill-resident"
+            );
+            let mut survivors: Vec<usize> = shadow.keys().copied().collect();
+            survivors.sort_unstable();
+            for pos in survivors {
+                prop_assert!(
+                    re.tier_of(pos) == Some((TierKind::Spill, false)),
+                    "pos {pos} not spill-resident after recovery"
+                );
+                let got = re
+                    .take(pos)
+                    .map_err(|e| format!("recovered take {pos}: {e}"))?
+                    .ok_or(format!("surviving pos {pos} lost by recovery"))?;
+                let want = &shadow[&pos];
+                prop_assert!(
+                    &got == want,
+                    "pos {pos} not bit-exact after crash recovery ({shards} shards, \
+                     {partition:?})"
+                );
+            }
+            prop_assert!(re.is_empty(), "every surviving row accounted for");
+        }
+        Ok(())
+    });
+}
+
+/// Poisoned payload detected at restore time: `Error::Offload`, never
+/// bad floats — and (the error-path bookkeeping fix) the store's
+/// indexes stay aligned with the tier, so repairing the record and
+/// retrying reaches the row. The pre-fix code popped the entry before
+/// the tier read: the first failure made every retry report
+/// `Ok(None)` for a row the tier still held.
+#[test]
+fn checksum_corruption_surfaces_offload_error_and_retry_survives() {
+    let dir = TempDir::new("spill-poison").unwrap();
+    let cfg = persist_cfg(&dir, 1, ShardPartition::Hash);
+    let mut store = ShardedStore::new(RF, cfg).unwrap();
+    let r = row(1.0);
+    store.stash(0, r.clone(), 0, 100).unwrap();
+    assert_eq!(store.tier_of(0), Some((TierKind::Spill, false)));
+
+    let path = record_path(&dir.path_str(), 0);
+    let pristine = std::fs::read(&path).unwrap();
+    let mut poisoned = pristine.clone();
+    poisoned[REC_HEADER_BYTES + 10] ^= 0xFF; // flip one payload byte
+    std::fs::write(&path, &poisoned).unwrap();
+
+    let err = store.take(0).unwrap_err();
+    assert!(matches!(err, Error::Offload(_)), "got {err:?}");
+    assert!(format!("{err}").contains("checksum"), "{err}");
+    // bookkeeping must still see the row (retryable), not Ok(None)
+    assert!(store.contains(0), "failed take must not pop the entry");
+    assert_eq!(store.len(), 1);
+    assert_eq!(store.summary().occupancy.spill_rows, 1);
+
+    std::fs::write(&path, &pristine).unwrap();
+    let got = store.take(0).unwrap().expect("repaired record must restore");
+    assert_eq!(got, expected_roundtrip(&r), "restored bit-exact after repair");
+    assert!(store.is_empty());
+}
+
+/// Same alignment contract on the discard path: a header that fails
+/// verification surfaces `Error::Offload` and leaves the row mapped,
+/// so the drop can be retried once the record is repaired.
+#[test]
+fn discard_error_keeps_store_and_tier_aligned() {
+    let dir = TempDir::new("spill-discard-err").unwrap();
+    let cfg = persist_cfg(&dir, 1, ShardPartition::Hash);
+    let mut store = ShardedStore::new(RF, cfg).unwrap();
+    store.stash(0, row(2.0), 0, 100).unwrap();
+
+    let path = record_path(&dir.path_str(), 0);
+    let pristine = std::fs::read(&path).unwrap();
+    let mut broken = pristine.clone();
+    broken[0] ^= 0xFF; // break the record magic
+    std::fs::write(&path, &broken).unwrap();
+
+    let err = store.drop_row(0).unwrap_err();
+    assert!(matches!(err, Error::Offload(_)), "got {err:?}");
+    assert!(store.contains(0), "failed discard must not pop the entry");
+    assert_eq!(store.summary().occupancy.spill_rows, 1);
+
+    std::fs::write(&path, &pristine).unwrap();
+    store.drop_row(0).unwrap();
+    assert!(store.is_empty());
+    assert_eq!(store.total_dropped(), 1);
+}
+
+/// A record poisoned while the process was down is reclaimed by the
+/// recovery scan (counted as a recovery error), not re-served.
+#[test]
+fn poisoned_record_is_reclaimed_at_recovery_not_served() {
+    let dir = TempDir::new("spill-poison-recover").unwrap();
+    let cfg = persist_cfg(&dir, 1, ShardPartition::Hash);
+    let r0 = row(0.0);
+    {
+        let mut store = ShardedStore::new(RF, cfg.clone()).unwrap();
+        store.stash(0, r0.clone(), 0, 100).unwrap();
+        store.stash(1, row(1.0), 0, 100).unwrap();
+    }
+    // poison the second record's payload on disk
+    let path = record_path(&dir.path_str(), 0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let rb = record_bytes_for(RF);
+    bytes[rb + REC_HEADER_BYTES] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut re = ShardedStore::resume(RF, cfg).unwrap();
+    let sum = re.summary();
+    assert_eq!(sum.recovered_rows, 1, "only the intact record recovers");
+    assert_eq!(sum.recovery_errors, 1, "the poisoned record is counted");
+    assert_eq!(re.take(0).unwrap().unwrap(), expected_roundtrip(&r0));
+    assert!(re.take(1).unwrap().is_none(), "poisoned row reclaimed, not served");
+}
+
+/// A record claiming a generation at or beyond the manifest's is a
+/// fenced-off concurrent writer: reclaimed, never re-served. The test
+/// forges the generation AND recomputes a valid checksum (the on-disk
+/// format contract: FNV-1a over the record minus the checksum field),
+/// so it is the generation fence itself that rejects the record, not
+/// the integrity check.
+#[test]
+fn stale_generation_records_are_fenced_and_reclaimed() {
+    let dir = TempDir::new("spill-stale-gen").unwrap();
+    let cfg = persist_cfg(&dir, 1, ShardPartition::Hash);
+    {
+        let mut store = ShardedStore::new(RF, cfg.clone()).unwrap();
+        store.stash(0, row(0.0), 0, 100).unwrap();
+    }
+    // forge the record's generation far past any real attach, with a
+    // checksum a real (fenced) writer would have produced
+    let path = record_path(&dir.path_str(), 0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
+    fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+    let sum = fnv(fnv(0xcbf2_9ce4_8422_2325, &bytes[..20]), &bytes[REC_HEADER_BYTES..]);
+    bytes[20..28].copy_from_slice(&sum.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+
+    let re = ShardedStore::resume(RF, cfg).unwrap();
+    let sum = re.summary();
+    assert_eq!(sum.recovered_rows, 0);
+    assert_eq!(sum.recovery_errors, 1);
+    assert!(re.is_empty());
+}
+
+/// A directory written under one store shape cannot be reopened under
+/// another: the manifest rejects width/shard/partition mismatches
+/// instead of mis-decoding records.
+#[test]
+fn manifest_rejects_mismatched_store_shapes() {
+    let dir = TempDir::new("spill-mismatch").unwrap();
+    let cfg = persist_cfg(&dir, 4, ShardPartition::Hash);
+    {
+        let mut store = ShardedStore::new(RF, cfg.clone()).unwrap();
+        store.stash(0, row(0.0), 0, 100).unwrap();
+    }
+    // different shard count
+    let err = ShardedStore::resume(RF, persist_cfg(&dir, 1, ShardPartition::Hash)).unwrap_err();
+    assert!(matches!(err, Error::Offload(_)), "{err:?}");
+    // different partition
+    assert!(ShardedStore::resume(RF, persist_cfg(&dir, 4, ShardPartition::Range)).is_err());
+    // different row width
+    assert!(ShardedStore::resume(RF * 2, persist_cfg(&dir, 4, ShardPartition::Hash)).is_err());
+    // the matching shape still resumes
+    let re = ShardedStore::resume(RF, cfg).unwrap();
+    assert_eq!(re.summary().recovered_rows, 1);
+}
+
+/// Recovery compacts as it scans: a trace that freed its tail leaves a
+/// shrunken file, and a resume that drains everything truncates to 0.
+#[test]
+fn recovery_and_drain_compact_the_record_file() {
+    let dir = TempDir::new("spill-compact").unwrap();
+    let cfg = persist_cfg(&dir, 1, ShardPartition::Hash);
+    let rb = record_bytes_for(RF) as u64;
+    {
+        let mut store = ShardedStore::new(RF, cfg.clone()).unwrap();
+        for p in 0..6 {
+            store.stash(p, row(p as f32), 0, 100).unwrap();
+        }
+        // free the tail three: the file must shrink, not high-water
+        for p in (3..6).rev() {
+            store.take(p).unwrap().unwrap();
+        }
+        let path = record_path(&dir.path_str(), 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 3 * rb);
+    }
+    let mut re = ShardedStore::resume(RF, cfg).unwrap();
+    assert_eq!(re.summary().recovered_rows, 3);
+    for p in 0..3 {
+        re.take(p).unwrap().unwrap();
+    }
+    let path = record_path(&dir.path_str(), 0);
+    assert_eq!(
+        std::fs::metadata(&path).unwrap().len(),
+        0,
+        "a drained persistent file must truncate to zero"
+    );
+}

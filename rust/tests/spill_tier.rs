@@ -90,14 +90,37 @@ fn stale_spill_handles_surface_offload_errors() {
     let dir = TempDir::new("spill-stale").unwrap();
     let mut f = SpillFile::create(&dir.path_str(), RF).unwrap();
     let qr = quantize(&row(1.0));
-    let slot = f.write_row(&qr).unwrap();
-    f.free_slot(slot).unwrap();
+    let slot = f.write_row(7, &qr).unwrap();
+    f.free_slot(slot, 7).unwrap();
     // double free and freed-slot reads are hard errors, not silent
     // free-list corruption
-    assert!(f.free_slot(slot).is_err());
-    assert!(f.read_row(slot).is_err());
-    assert!(f.take_row(slot).is_err());
-    assert!(f.free_slot(99).is_err(), "never-allocated handle must error");
+    assert!(f.free_slot(slot, 7).is_err());
+    assert!(f.read_row(slot, 7).is_err());
+    assert!(f.take_row(slot, 7).is_err());
+    assert!(f.free_slot(99, 7).is_err(), "never-allocated handle must error");
+}
+
+#[test]
+fn persistent_spill_fresh_attach_reclaims_instead_of_failing() {
+    // a restarted process re-attaches to the same directory: no
+    // create_new collision, and the dead life's records are reclaimed
+    // (this store does not resume them — see tests/spill_recovery.rs
+    // for the resume path)
+    let dir = TempDir::new("spill-fresh-attach").unwrap();
+    let mut cfg = spill_cfg(&dir);
+    cfg.spill_persist = true;
+    {
+        let mut store = ShardedStore::new(RF, cfg.clone()).unwrap();
+        store.stash(0, row(0.0), 0, 100).unwrap();
+        store.stash(1, row(1.0), 0, 100).unwrap();
+        assert_eq!(store.summary().occupancy.spill_rows, 2);
+        // ungraceful drop: the record file survives
+    }
+    let store = ShardedStore::new(RF, cfg).unwrap();
+    assert!(store.is_empty(), "fresh attach must not resurrect leftovers");
+    let sum = store.summary();
+    assert_eq!(sum.recovered_rows, 0);
+    assert_eq!(sum.recovery_errors, 0, "intact leftovers reclaim cleanly");
 }
 
 #[test]
