@@ -103,6 +103,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     for &ctx in contexts {
+        let _section = bench::section(&format!("policy scaling ctx={ctx}"));
         let mut indexed = AsrKfPolicy::new(cfg());
         let si = run_policy(&mut indexed, ctx, warm, measure);
         let mut scan = ScanAsrKfPolicy::new(cfg());
@@ -132,6 +133,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     table.print();
     table.write_csv("artifacts/policy_scaling.csv")?;
+    bench::section_summary().print();
     println!(
         "\nscaling claim: the indexed column stays flat-to-logarithmic in context length \
          (per-step cost tracks window/budget/expiry work); the full-scan column grows \

@@ -103,6 +103,7 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
     let waves = bench::smoke_size(24, 4);
     let burst = bench::smoke_size(256, 64);
     for &n in &SHARD_SWEEP {
+        let _section = bench::section(&format!("store burst n={n}"));
         let cfg = asrkf::config::OffloadConfig {
             cold_after_steps: 4,
             shards: n,
@@ -157,6 +158,7 @@ fn persistent_recovery_rows(table: &mut Table) -> Result<(), Box<dyn std::error:
     const ROW_FLOATS: usize = 512; // 2 KB rows
     let rows = bench::smoke_size(2048, 128);
     for &n in &[1usize, 4] {
+        let _section = bench::section(&format!("persist recover n={n}"));
         let dir = TempDir::new("bench-spill-persist")?;
         let cfg = asrkf::config::OffloadConfig {
             cold_budget_bytes: 1, // every stash spills straight to disk
@@ -302,28 +304,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
     let n_req = bench::smoke_size(12, 4);
     let max_new = bench::smoke_size(32, 8);
+    // headers come from the registry's declared CSV schema, so the
+    // bench cannot drift from the metric catalog (checked in CI)
+    let headers = asrkf::metrics::serving_csv_headers();
     let mut table = Table::new(
         "Serving: sharded restore bursts + batched coordinator vs sequential engine",
-        &[
-            "Mode",
-            "Shards",
-            "Requests",
-            "Tokens",
-            "Wall",
-            "tok/s",
-            "mean e2e (ms)",
-            "hot KB (peak/req)",
-            "cold KB (peak/req)",
-            "staged hit",
-            "restore hot (us)",
-            "restore cold (us)",
-            "restored rows",
-            "restore spans",
-            "restore par",
-            "recovered rows",
-            "plan mean (us)",
-            "plan p99 (us)",
-        ],
+        &headers,
     );
 
     sharded_burst_rows(&mut table)?;
@@ -339,6 +325,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     table.print();
     table.write_csv("artifacts/serving_throughput.csv")?;
+    // one end-of-run wall-clock table from the registry's section
+    // gauges (recorded by the RAII timers around the host-only rows)
+    bench::section_summary().print();
     println!(
         "\nsharding claim: `restore par` > 1 for Shards > 1 — restore bursts split at shard \
          boundaries and execute on the worker pool in parallel"

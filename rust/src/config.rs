@@ -191,6 +191,10 @@ pub struct OffloadConfig {
     pub shards: usize,
     /// Position-to-shard mapping (`--shard-partition hash|range`).
     pub shard_partition: ShardPartition,
+    /// Capacity of each store's flight recorder (structured
+    /// tier-transition events kept for `--trace-out`; per shard).
+    /// 0 disables recording.
+    pub flight_recorder_cap: usize,
 }
 
 impl Default for OffloadConfig {
@@ -210,6 +214,7 @@ impl Default for OffloadConfig {
             block_rows: 32,
             shards: 1,
             shard_partition: ShardPartition::Hash,
+            flight_recorder_cap: 4096,
         }
     }
 }
@@ -233,6 +238,7 @@ impl OffloadConfig {
             block_rows: d.block_rows,
             shards: args.usize_in("shards", d.shards, 1, crate::offload::MAX_SHARDS)?,
             shard_partition: ShardPartition::parse(&args.str_or("shard-partition", "hash"))?,
+            flight_recorder_cap: args.usize_or("flight-recorder-cap", d.flight_recorder_cap)?,
         })
     }
 
@@ -412,6 +418,11 @@ mod tests {
         assert!(!o.quantize_cold);
         assert_eq!(o.spill_dir.as_deref(), Some("/tmp/spill"));
         assert!(o.spill_persist);
+        assert_eq!(o.flight_recorder_cap, 4096, "flight recorder on by default");
+        let a = args(&["gen", "--flight-recorder-cap", "0"]);
+        let o = OffloadConfig::from_args(&a).unwrap();
+        assert_eq!(o.flight_recorder_cap, 0);
+        assert_eq!(o.partitioned(2, 1).flight_recorder_cap, 0, "partition carries the cap");
     }
 
     #[test]

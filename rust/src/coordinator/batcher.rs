@@ -24,7 +24,9 @@ use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::engine::layout::{insert_prefill, KvGeom};
 use crate::engine::session::Session;
 use crate::error::{Error, Result};
-use crate::metrics::{BatchStats, Histogram, RestoreLatency, ServingStats};
+use crate::metrics::{
+    BatchStats, Histogram, Registry, RestoreLatency, ServingStats, TierOccupancy,
+};
 use crate::model::tokenizer;
 use crate::runtime::{DecodeInputs, DecodeProgram, Runtime};
 
@@ -168,6 +170,7 @@ impl BatchEngine {
             Ok(()) => {}
             Err(e) => {
                 self.stats.requests_rejected += 1;
+                Registry::global().counter_add("asrkf_requests_rejected_total", &[], 1);
                 let _ = req.respond.send(GenResponse::error(req.id, format!("{e}")));
             }
         }
@@ -192,6 +195,7 @@ impl BatchEngine {
         padded.resize(l, b' ' as i32);
         let pf = prefill.run(&padded, &[tokens.len() as i32])?;
         self.stats.prefill_tokens += tokens.len() as u64;
+        Registry::global().counter_add("asrkf_prefill_tokens_total", &[], tokens.len() as u64);
 
         insert_prefill(&mut self.kv, &self.geom, slot_idx, &pf.kv, l, tokens.len());
 
@@ -304,6 +308,10 @@ impl BatchEngine {
         })?;
         self.stats.batches_dispatched += 1;
         self.stats.batch_occupancy_sum += self.occupied() as u64;
+        Registry::global().publish(|reg| {
+            reg.counter_add("asrkf_batches_dispatched_total", &[], 1);
+            reg.count_record("asrkf_batch_occupancy", &[], self.occupied() as u64);
+        });
 
         let model_vocab = self.rt.manifest.model.vocab;
         let now = Instant::now();
@@ -340,14 +348,23 @@ impl BatchEngine {
             if slot.first_token_at.is_none() {
                 slot.first_token_at = Some(now);
                 self.ttft_hist.record(now - slot.arrived);
+                Registry::global().time_record("asrkf_ttft_us", &[], now - slot.arrived);
             }
             self.stats.tokens_generated += 1;
+            Registry::global().counter_add("asrkf_tokens_generated_total", &[], 1);
 
             if sess.is_done() {
                 let e2e = now - slot.arrived;
                 self.e2e_hist.record(e2e);
                 // fold the retiring session's offload telemetry into
-                // the engine-wide aggregates
+                // the engine-wide aggregates and the process registry
+                // (flows only: the retiring store's gauges are stale by
+                // definition — live occupancy is published per step)
+                sess.publish_to_registry(Registry::global());
+                Registry::global().publish(|reg| {
+                    reg.counter_add("asrkf_requests_completed_total", &[], 1);
+                    reg.time_record("asrkf_e2e_us", &[], e2e);
+                });
                 let offload = sess.offload_summary();
                 self.stats.staged_hits += offload.staged_hits;
                 self.stats.staged_misses += offload.staged_misses;
@@ -375,6 +392,29 @@ impl BatchEngine {
                 self.slots[i] = None;
             }
         }
+        // live occupancy across every occupied slot, summed per tier.
+        // Published without a shard label: slot stores partition one
+        // budget, so per-shard gauge series would collide across slots.
+        let mut occ = TierOccupancy::default();
+        for slot in self.slots.iter().flatten() {
+            let o = slot.session.store.occupancy();
+            occ.hot_rows += o.hot_rows;
+            occ.hot_bytes += o.hot_bytes;
+            occ.cold_rows += o.cold_rows;
+            occ.cold_bytes += o.cold_bytes;
+            occ.spill_rows += o.spill_rows;
+            occ.spill_bytes += o.spill_bytes;
+        }
+        Registry::global().publish(|reg| {
+            for (tier, rows, bytes) in [
+                ("hot", occ.hot_rows, occ.hot_bytes),
+                ("cold", occ.cold_rows, occ.cold_bytes),
+                ("spill", occ.spill_rows, occ.spill_bytes),
+            ] {
+                reg.gauge_set("asrkf_tier_rows", &[("tier", tier)], rows as f64);
+                reg.gauge_set("asrkf_tier_bytes", &[("tier", tier)], bytes as f64);
+            }
+        });
         self.step_hist.record(t0.elapsed());
         Ok(())
     }

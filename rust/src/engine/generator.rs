@@ -43,6 +43,10 @@ pub struct GenStats {
     /// Per-step policy control-plane time (`plan` + `observe`) — the
     /// indexed policy's O(work)-per-step contract, measured.
     pub plan_latency: crate::metrics::PlanLatency,
+    /// Cumulative decode-step wall-clock split into
+    /// plan/restore/compute/freeze segments (sums to the measured step
+    /// wall-clock by construction).
+    pub segments: crate::metrics::StepSegments,
 }
 
 /// Final disposition of one KV row (mechanism-level retrieval probe,
@@ -66,6 +70,11 @@ pub struct GenOutcome {
     pub stats: GenStats,
     /// per-position row disposition at end of generation (len entries)
     pub row_states: Vec<RowState>,
+    /// merged flight-recorder timeline (`(shard, event)` pairs, capture
+    /// order) — feeds the `--trace-out` Chrome trace
+    pub flight: Vec<(usize, crate::metrics::FlightEvent)>,
+    /// per-step segment spans for the trace's decode-step track
+    pub step_spans: Vec<crate::metrics::StepSpan>,
 }
 
 pub struct Generator<'rt> {
@@ -233,7 +242,20 @@ impl<'rt> Generator<'rt> {
             host,
             offload: session.offload_summary(),
             plan_latency: session.plan_latency(),
+            segments: session.segments,
         };
+        // fold this run into the process-wide registry: monotone flows
+        // via the session, plus the final occupancy gauges (the single-
+        // session path owns the only live store, so gauges can't
+        // collide with another publisher)
+        let reg = crate::metrics::Registry::global();
+        session.publish_to_registry(reg);
+        reg.publish(|b| {
+            session.store.publish_gauges(b);
+            b.counter_add("asrkf_tokens_generated_total", &[], session.generated() as u64);
+            b.counter_add("asrkf_prefill_tokens_total", &[], session.prompt_len as u64);
+            b.counter_add("asrkf_requests_completed_total", &[], 1);
+        });
         let row_states = (0..session.len)
             .map(|pos| {
                 if !session.policy.is_frozen(pos) {
@@ -251,6 +273,8 @@ impl<'rt> Generator<'rt> {
             trace,
             stats,
             row_states,
+            flight: session.store.flight_events(),
+            step_spans: session.step_spans(),
         })
     }
 

@@ -9,7 +9,8 @@ use std::time::{Duration, Instant};
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kv::policy::{KvPolicy, Plan, UnfreezeScope};
-use crate::metrics::{BatchStats, Histogram, PlanLatency};
+use crate::metrics::flight::now_us;
+use crate::metrics::{BatchStats, Histogram, PlanLatency, Registry, StepSegments, StepSpan};
 use crate::model::logits::{logits_entropy, top1_prob};
 use crate::model::sampling::Sampler;
 use crate::offload::{OffloadSummary, ShardedStore};
@@ -37,6 +38,10 @@ pub struct StepRecord {
     /// rust-side bookkeeping (plan + stash + mask updates)
     pub host: Duration,
     pub recovery_level: u8,
+    /// wall-clock attribution of this step (plan/restore/freeze/compute
+    /// on the shared flight-recorder timebase); segments sum exactly to
+    /// the step's measured wall-clock by construction
+    pub span: StepSpan,
 }
 
 
@@ -67,6 +72,22 @@ pub struct Session {
     /// this step's `plan` time, folded into `plan_hist` with the
     /// matching `observe` time in [`Session::absorb`]
     plan_time_pending: Duration,
+    /// cumulative step-segment attribution; `coverage()` is exactly 1
+    /// because the four segments partition the measured wall-clock
+    pub segments: StepSegments,
+    /// per-step wall-clock distribution (feeds `asrkf_step_us`)
+    step_hist: Histogram,
+    seg_plan_hist: Histogram,
+    seg_restore_hist: Histogram,
+    seg_compute_hist: Histogram,
+    seg_freeze_hist: Histogram,
+    /// timestamps staged by `apply_plan` on the flight-recorder
+    /// timebase, consumed by the matching `absorb`
+    seg_start_us: u64,
+    seg_mid_us: u64,
+    seg_plan_us: u64,
+    seg_restore_us: u64,
+    seg_freeze_us: u64,
     /// sampler stream positions indexed by generated-token count (RR rewind)
     draws_at: Vec<u64>,
     s_capacity: usize,
@@ -167,6 +188,17 @@ impl Session {
             batch: BatchStats::default(),
             plan_hist: Histogram::default(),
             plan_time_pending: Duration::ZERO,
+            segments: StepSegments::default(),
+            step_hist: Histogram::default(),
+            seg_plan_hist: Histogram::default(),
+            seg_restore_hist: Histogram::default(),
+            seg_compute_hist: Histogram::default(),
+            seg_freeze_hist: Histogram::default(),
+            seg_start_us: 0,
+            seg_mid_us: 0,
+            seg_plan_us: 0,
+            seg_restore_us: 0,
+            seg_freeze_us: 0,
             draws_at: Vec::new(),
             s_capacity,
         })
@@ -226,9 +258,11 @@ impl Session {
         plan: &mut Plan,
     ) -> Result<()> {
         use crate::engine::layout::{coalesce_runs, gather_rows, scatter_rows, zero_rows};
+        let s0 = now_us();
         let t_plan = Instant::now();
         self.policy.plan_into(self.step, self.len, r_budget, plan);
         self.plan_time_pending = t_plan.elapsed();
+        let s1 = now_us();
         debug_assert!(
             plan.restore.windows(2).all(|w| w[0] < w[1]),
             "policy returned an unsorted restore list"
@@ -255,6 +289,7 @@ impl Session {
             }
             self.batch.record_restore(plan.restore.len(), runs.len());
         }
+        let s2 = now_us();
 
         if !plan.freeze.is_empty() {
             let runs = coalesce_runs(&plan.freeze);
@@ -284,6 +319,15 @@ impl Session {
             }
             self.batch.record_freeze(plan.freeze.len(), runs.len());
         }
+        let s3 = now_us();
+        // stage this step's attribution for the matching `absorb`:
+        // everything between s3 and absorb's entry is the engine's
+        // compute (upload + execute + download + sampling glue)
+        self.seg_start_us = s0;
+        self.seg_plan_us = s1 - s0;
+        self.seg_restore_us = s2 - s1;
+        self.seg_freeze_us = s3 - s2;
+        self.seg_mid_us = s3;
         Ok(())
     }
 
@@ -300,6 +344,44 @@ impl Session {
     /// Snapshot of the per-step policy control-plane cost.
     pub fn plan_latency(&self) -> PlanLatency {
         PlanLatency::from_histogram(&self.plan_hist)
+    }
+
+    /// Publish this session's monotone telemetry — store flows, plan
+    /// latency, step timing split into segments, and plan-batching
+    /// counters — into a long-lived registry. Called once per session
+    /// (at retirement in batched serving, at end of generation on the
+    /// single-session path); repeated accumulation is safe because
+    /// every series here only grows. Point-in-time occupancy gauges
+    /// are published separately by whoever owns the live view.
+    pub fn publish_to_registry(&self, reg: &Registry) {
+        reg.publish(|b| {
+            self.store.publish_flows(b);
+            b.counter_add("asrkf_restore_batch_rows_total", &[], self.batch.restore_rows);
+            b.counter_add("asrkf_restore_batch_spans_total", &[], self.batch.restore_spans);
+            b.counter_add("asrkf_freeze_batch_rows_total", &[], self.batch.freeze_rows);
+            b.counter_add("asrkf_freeze_batch_spans_total", &[], self.batch.freeze_spans);
+            b.count_merge("asrkf_restore_batch", &[], &self.batch.restore_batch);
+            b.count_merge("asrkf_freeze_batch", &[], &self.batch.freeze_batch);
+            b.time_merge("asrkf_plan_us", &[], &self.plan_hist);
+            b.time_merge("asrkf_step_us", &[], &self.step_hist);
+            b.time_merge("asrkf_step_segment_us", &[("segment", "plan")], &self.seg_plan_hist);
+            b.time_merge(
+                "asrkf_step_segment_us",
+                &[("segment", "restore")],
+                &self.seg_restore_hist,
+            );
+            b.time_merge(
+                "asrkf_step_segment_us",
+                &[("segment", "compute")],
+                &self.seg_compute_hist,
+            );
+            b.time_merge("asrkf_step_segment_us", &[("segment", "freeze")], &self.seg_freeze_hist);
+        });
+    }
+
+    /// Per-step segment spans for the Chrome-trace decode-step track.
+    pub fn step_spans(&self) -> Vec<StepSpan> {
+        self.trace.iter().map(|r| r.span).collect()
     }
 
     /// Absorb one decode step's outputs (after the engine wrote the new
@@ -321,6 +403,7 @@ impl Session {
         timing: CallTiming,
         host: Duration,
     ) -> Result<Action> {
+        let a0 = now_us();
         self.mask[self.len] = 1.0;
         self.len += 1;
         self.tokens.push(token);
@@ -372,6 +455,7 @@ impl Session {
             .copied()
             .filter(|&(_, eta)| eta <= self.step.saturating_add(prefetch_ahead))
             .collect();
+        let b0 = now_us();
         self.store.stage(&hints)?;
         if pressure >= stage_pressure || action != Action::None {
             // the monitor trends toward (or hit) a recovery trigger:
@@ -379,7 +463,41 @@ impl Session {
             // broader burst ahead of them
             self.store.stage_upcoming(self.step, prefetch_ahead, STAGE_BURST_ROWS)?;
         }
+        let b1 = now_us();
         self.store.on_step(self.step)?;
+        let c1 = now_us();
+
+        // segment attribution: staging counts as restore work, the
+        // per-step sweep as freeze work, and the absorb remainder
+        // (observe + monitor + bookkeeping) as plan/control-plane time.
+        // The four segments partition [seg_start_us, end] exactly.
+        let end = now_us();
+        let (start, mid) =
+            if self.seg_mid_us == 0 { (a0, a0) } else { (self.seg_start_us, self.seg_mid_us) };
+        let span = StepSpan {
+            step: self.step,
+            start_us: start,
+            plan_us: self.seg_plan_us + (end - a0) - (b1 - b0) - (c1 - b1),
+            restore_us: self.seg_restore_us + (b1 - b0),
+            freeze_us: self.seg_freeze_us + (c1 - b1),
+            compute_us: a0 - mid,
+        };
+        self.segments.steps += 1;
+        self.segments.plan_us += span.plan_us;
+        self.segments.restore_us += span.restore_us;
+        self.segments.compute_us += span.compute_us;
+        self.segments.freeze_us += span.freeze_us;
+        self.segments.wall_us += end - start;
+        self.step_hist.record(Duration::from_micros(end - start));
+        self.seg_plan_hist.record(Duration::from_micros(span.plan_us));
+        self.seg_restore_hist.record(Duration::from_micros(span.restore_us));
+        self.seg_compute_hist.record(Duration::from_micros(span.compute_us));
+        self.seg_freeze_hist.record(Duration::from_micros(span.freeze_us));
+        self.seg_start_us = 0;
+        self.seg_mid_us = 0;
+        self.seg_plan_us = 0;
+        self.seg_restore_us = 0;
+        self.seg_freeze_us = 0;
 
         self.trace.push(StepRecord {
             step: self.step,
@@ -394,6 +512,7 @@ impl Session {
             download: timing.download,
             host,
             recovery_level: self.ladder.as_ref().map(|l| l.level()).unwrap_or(0),
+            span,
         });
         Ok(action)
     }

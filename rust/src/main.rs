@@ -78,6 +78,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
     // crashed run's records instead of reclaiming them
     let resume_spill = args.bool("resume-spill");
 
+    // periodic one-line registry summary on the log facade
+    asrkf::metrics::start_interval_logger(args.u64_or("metrics-interval", 0)?);
+
     let rt = Runtime::load(&cfg.artifacts_dir)?;
     let gen = Generator::new(&rt, cfg.clone());
     let policy = make_policy(&policy_name, &cfg.freeze)?;
@@ -126,6 +129,18 @@ fn cmd_generate(args: &Args) -> Result<()> {
         )?;
         println!("trace written to {path}");
     }
+    if let Some(path) = args.str_opt("trace-out") {
+        // flight-recorder timeline + per-step segment spans as Chrome
+        // trace-event JSON (open in chrome://tracing or Perfetto)
+        asrkf::metrics::write_chrome_trace(path, &out.flight, &out.step_spans)?;
+        let seg = &out.stats.segments;
+        println!(
+            "flight trace written to {path} ({} events, {} steps; segment coverage {:.1}%)",
+            out.flight.len(),
+            seg.steps,
+            seg.coverage() * 100.0
+        );
+    }
     Ok(())
 }
 
@@ -149,6 +164,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.usize_or("max-batch", 8)?,
         batch_wait_us: args.u64_or("batch-wait-us", 2000)?,
     };
+    asrkf::metrics::start_interval_logger(args.u64_or("metrics-interval", 0)?);
     asrkf::server::serve_blocking(cfg, server_cfg)
 }
 

@@ -1,0 +1,326 @@
+//! Flight recorder: a bounded per-store ring buffer of structured
+//! tier-transition events, exportable as Chrome trace-event JSON
+//! (`chrome://tracing` / Perfetto) via `--trace-out`.
+//!
+//! Every mutation of a frozen row's residency is recorded with the
+//! step it happened on, the tiers it moved between, and *why*
+//! (freeze/expire/pressure/prefetch/restore/recover/emergency/drop),
+//! so a single decode trace shows exactly why a row moved and what
+//! each step waited on. The cause taxonomy is count-reconcilable
+//! against the store's conservation counters (see
+//! `tests/telemetry.rs`):
+//!
+//! * `Freeze` + `Recover` events  == `total_stashed`
+//! * `Restore` + `Emergency` events == `total_restored`
+//! * `Drop` + `Supersede` events  == `total_dropped`
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::TierKind;
+use crate::util::json::Json;
+
+/// Process-global monotonic microsecond clock shared by the flight
+/// recorder and the engine's step-segment timing, so trace tracks and
+/// decode-step spans land on one timebase.
+pub fn now_us() -> u64 {
+    static EPOCH: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+    EPOCH.elapsed().as_micros() as u64
+}
+
+/// Why a row moved (or left) a tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cause {
+    /// plan-driven freeze of an active row into the store
+    Freeze,
+    /// plan-driven restore back into the active window
+    Restore,
+    /// thaw-eta expiry swept the row hot -> cold
+    Expire,
+    /// byte-budget pressure demoted the row
+    Pressure,
+    /// prefetch staged the row into the hot tier ahead of its eta
+    Prefetch,
+    /// adopted from a persistent spill file at resume
+    Recover,
+    /// emergency drain (recovery rewalk) pulled the row out
+    Emergency,
+    /// row discarded without restore
+    Drop,
+    /// stale recovered copy superseded by a fresh freeze
+    Supersede,
+}
+
+impl Cause {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Cause::Freeze => "freeze",
+            Cause::Restore => "restore",
+            Cause::Expire => "expire",
+            Cause::Pressure => "pressure",
+            Cause::Prefetch => "prefetch",
+            Cause::Recover => "recover",
+            Cause::Emergency => "emergency",
+            Cause::Drop => "drop",
+            Cause::Supersede => "supersede",
+        }
+    }
+}
+
+/// One recorded tier transition. `from`/`to` of `None` mean the active
+/// window (freeze enters the store, restore/drop leave it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlightEvent {
+    /// monotonic per-recorder sequence number (never reset, so a
+    /// wrapped ring still exposes how much history was lost)
+    pub seq: u64,
+    /// microseconds on the shared [`now_us`] timebase
+    pub ts_us: u64,
+    /// decode step the store last observed
+    pub step: u64,
+    /// sequence position of the row
+    pub pos: usize,
+    pub from: Option<TierKind>,
+    pub to: Option<TierKind>,
+    pub cause: Cause,
+    /// predicted thaw step of the row at event time
+    pub eta: u64,
+}
+
+/// Bounded ring buffer of [`FlightEvent`]s. Capacity 0 disables
+/// recording entirely (every event counts as dropped).
+#[derive(Debug, Clone, Default)]
+pub struct FlightRecorder {
+    cap: usize,
+    buf: VecDeque<FlightEvent>,
+    next_seq: u64,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        FlightRecorder { cap, buf: VecDeque::with_capacity(cap.min(1024)), ..Default::default() }
+    }
+
+    /// Record one transition; evicts the oldest event when full.
+    pub fn record(
+        &mut self,
+        step: u64,
+        pos: usize,
+        from: Option<TierKind>,
+        to: Option<TierKind>,
+        cause: Cause,
+        eta: u64,
+    ) {
+        let ev = FlightEvent { seq: self.next_seq, ts_us: now_us(), step, pos, from, to, cause, eta };
+        self.next_seq += 1;
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events evicted (or suppressed by a zero capacity).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Events recorded over the recorder's lifetime, including evicted ones.
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &FlightEvent> {
+        self.buf.iter()
+    }
+}
+
+/// Per-step segment attribution used for the trace's decode-step
+/// track: four sequential `ph:"X"` spans (plan -> restore -> freeze ->
+/// compute) anchored at the step's start time. Built by the engine
+/// from its per-step trace records.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepSpan {
+    pub step: u64,
+    pub start_us: u64,
+    pub plan_us: u64,
+    pub restore_us: u64,
+    pub freeze_us: u64,
+    pub compute_us: u64,
+}
+
+fn tier_tid(t: TierKind) -> u64 {
+    match t {
+        TierKind::Hot => 1,
+        TierKind::Cold => 2,
+        TierKind::Spill => 3,
+    }
+}
+
+const STEP_TID: u64 = 50;
+const SHARD_TID_BASE: u64 = 100;
+
+fn meta_event(tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str("thread_name")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn instant_event(tid: u64, ev: &FlightEvent, shard: usize) -> Json {
+    let from = ev.from.map(|t| t.as_str()).unwrap_or("active");
+    let to = ev.to.map(|t| t.as_str()).unwrap_or("active");
+    Json::obj(vec![
+        ("ph", Json::str("i")),
+        ("s", Json::str("t")),
+        ("name", Json::str(format!("{} pos {} {}->{}", ev.cause.as_str(), ev.pos, from, to))),
+        ("cat", Json::str(ev.cause.as_str())),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(ev.ts_us as f64)),
+        (
+            "args",
+            Json::obj(vec![
+                ("pos", Json::num(ev.pos as f64)),
+                ("step", Json::num(ev.step as f64)),
+                ("shard", Json::num(shard as f64)),
+                ("from", Json::str(from)),
+                ("to", Json::str(to)),
+                ("eta", Json::num(ev.eta as f64)),
+                ("seq", Json::num(ev.seq as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn duration_event(name: &str, ts: u64, dur: u64, step: u64) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("X")),
+        ("name", Json::str(name)),
+        ("cat", Json::str("step")),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(STEP_TID as f64)),
+        ("ts", Json::num(ts as f64)),
+        ("dur", Json::num(dur as f64)),
+        ("args", Json::obj(vec![("step", Json::num(step as f64))])),
+    ])
+}
+
+/// Write a Chrome trace-event JSON file: one instant-event track per
+/// tier (the destination tier of each transition; the source tier for
+/// events leaving the store), one track per shard, and one
+/// duration-event track with the per-step plan/restore/freeze/compute
+/// segments. Events are `(shard, event)` pairs as returned by
+/// `ShardedStore::flight_events`.
+pub fn write_chrome_trace(
+    path: &str,
+    events: &[(usize, FlightEvent)],
+    steps: &[StepSpan],
+) -> std::io::Result<()> {
+    let mut trace = Vec::new();
+    trace.push(meta_event(tier_tid(TierKind::Hot), "tier hot"));
+    trace.push(meta_event(tier_tid(TierKind::Cold), "tier cold"));
+    trace.push(meta_event(tier_tid(TierKind::Spill), "tier spill"));
+    trace.push(meta_event(STEP_TID, "decode steps"));
+    let mut shards: Vec<usize> = events.iter().map(|(s, _)| *s).collect();
+    shards.sort_unstable();
+    shards.dedup();
+    for &s in &shards {
+        trace.push(meta_event(SHARD_TID_BASE + s as u64, &format!("shard {s}")));
+    }
+    for (shard, ev) in events {
+        if let Some(tier) = ev.to.or(ev.from) {
+            trace.push(instant_event(tier_tid(tier), ev, *shard));
+        }
+        trace.push(instant_event(SHARD_TID_BASE + *shard as u64, ev, *shard));
+    }
+    for sp in steps {
+        let mut ts = sp.start_us;
+        for (name, dur) in [
+            ("plan", sp.plan_us),
+            ("restore", sp.restore_us),
+            ("freeze", sp.freeze_us),
+            ("compute", sp.compute_us),
+        ] {
+            if dur > 0 {
+                trace.push(duration_event(name, ts, dur, sp.step));
+            }
+            ts += dur;
+        }
+    }
+    let doc = Json::obj(vec![("traceEvents", Json::Arr(trace))]);
+    let mut out = String::new();
+    crate::util::json::write_json(&doc, &mut out);
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = FlightRecorder::new(4);
+        for pos in 0..10usize {
+            r.record(pos as u64, pos, None, Some(TierKind::Hot), Cause::Freeze, 8);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.recorded(), 10);
+        let kept: Vec<usize> = r.events().map(|e| e.pos).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "oldest events must be evicted first");
+    }
+
+    #[test]
+    fn zero_capacity_disables_recording() {
+        let mut r = FlightRecorder::new(0);
+        r.record(0, 1, None, Some(TierKind::Hot), Cause::Freeze, 2);
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.recorded(), 1);
+    }
+
+    #[test]
+    fn events_are_seq_and_time_ordered() {
+        let mut r = FlightRecorder::new(16);
+        r.record(0, 3, None, Some(TierKind::Hot), Cause::Freeze, 5);
+        r.record(1, 3, Some(TierKind::Hot), Some(TierKind::Cold), Cause::Pressure, 5);
+        r.record(2, 3, Some(TierKind::Cold), None, Cause::Restore, 5);
+        let evs: Vec<&FlightEvent> = r.events().collect();
+        for w in evs.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+            assert!(w[0].ts_us <= w[1].ts_us);
+        }
+        assert_eq!(evs[1].from, Some(TierKind::Hot));
+        assert_eq!(evs[1].to, Some(TierKind::Cold));
+        assert_eq!(evs[2].to, None);
+    }
+}

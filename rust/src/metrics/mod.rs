@@ -3,6 +3,15 @@
 //! occupancy gauges and restore-latency histograms fed by the tiered
 //! frozen-KV store (`crate::offload`).
 
+pub mod flight;
+pub mod registry;
+
+pub use flight::{write_chrome_trace, Cause, FlightEvent, FlightRecorder, StepSpan};
+pub use registry::{
+    parse_exposition, serving_csv_headers, start_interval_logger, MetricKind, MetricSpec,
+    Registry, Snapshot, SnapshotBuilder, CATALOG, SERVING_CSV_COLUMNS,
+};
+
 use std::fmt::Write as _;
 use std::time::Duration;
 
@@ -83,16 +92,39 @@ impl Histogram {
         )
     }
 
-    /// Fold another histogram into this one (identical default bucket
-    /// layout assumed — all histograms in this crate use `default()`).
+    /// Total recorded time in microseconds (exact, not bucket-derived).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Fold another histogram into this one. Histograms with different
+    /// bucket layouts cannot be merged meaningfully — in that case the
+    /// merge is refused with a logged error instead of silently adding
+    /// misaligned buckets (all histograms in this crate use
+    /// `default()`, so a mismatch indicates a bug, not a data path).
     pub fn merge(&mut self, other: &Histogram) {
-        debug_assert_eq!(self.bounds, other.bounds, "histogram bucket layouts differ");
+        if self.bounds != other.bounds {
+            log::error!(
+                "refusing to merge histograms with mismatched bucket layouts ({} vs {} buckets)",
+                self.bounds.len(),
+                other.bounds.len()
+            );
+            return;
+        }
         for (c, o) in self.counts.iter_mut().zip(&other.counts) {
             *c += o;
         }
         self.total += other.total;
         self.sum_us += other.sum_us;
         self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Test-only constructor with a custom bucket layout, used to
+    /// exercise the mismatched-merge guard.
+    #[cfg(test)]
+    fn with_bounds(bounds: Vec<u64>) -> Self {
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], total: 0, sum_us: 0, max_us: 0 }
     }
 }
 
@@ -158,16 +190,35 @@ impl CountHistogram {
         self.max
     }
 
-    /// Fold another histogram into this one (identical default bucket
-    /// layout assumed).
+    /// Total of all recorded values (exact, not bucket-derived).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Fold another histogram into this one. Refuses (with a logged
+    /// error) when the bucket layouts differ — see `Histogram::merge`.
     pub fn merge(&mut self, other: &CountHistogram) {
-        debug_assert_eq!(self.bounds, other.bounds, "count-histogram layouts differ");
+        if self.bounds != other.bounds {
+            log::error!(
+                "refusing to merge count-histograms with mismatched bucket layouts ({} vs {} buckets)",
+                self.bounds.len(),
+                other.bounds.len()
+            );
+            return;
+        }
         for (c, o) in self.counts.iter_mut().zip(&other.counts) {
             *c += o;
         }
         self.total += other.total;
         self.sum += other.sum;
         self.max = self.max.max(other.max);
+    }
+
+    /// Test-only constructor with a custom bucket layout.
+    #[cfg(test)]
+    fn with_bounds(bounds: Vec<u64>) -> Self {
+        let n = bounds.len();
+        CountHistogram { bounds, counts: vec![0; n + 1], total: 0, sum: 0, max: 0 }
     }
 
     pub fn summary(&self, name: &str) -> String {
@@ -268,6 +319,67 @@ pub enum TierKind {
     Hot,
     Cold,
     Spill,
+}
+
+impl TierKind {
+    /// Stable label value used in metric series and trace exports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TierKind::Hot => "hot",
+            TierKind::Cold => "cold",
+            TierKind::Spill => "spill",
+        }
+    }
+}
+
+/// Per-step decode wall-clock attribution, accumulated by
+/// `engine::Session`. The four segments tile the span from the start
+/// of `apply_plan` to the end of `absorb` contiguously, so
+/// `accounted_us()` equals `wall_us` up to the (sub-microsecond)
+/// instants between adjacent clock reads:
+///
+/// * `plan` — policy `plan_into` + `observe` + entropy/recovery
+///   bookkeeping (everything in `absorb` that is not staging/sweep),
+/// * `restore` — frozen-row restore batches plus prefetch staging,
+/// * `compute` — the device call window (upload/execute/download and
+///   the host glue around it),
+/// * `freeze` — freeze batches plus the store's per-step sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepSegments {
+    /// decode steps measured
+    pub steps: u64,
+    pub plan_us: u64,
+    pub restore_us: u64,
+    pub compute_us: u64,
+    pub freeze_us: u64,
+    /// measured step wall-clock (apply_plan start -> absorb end)
+    pub wall_us: u64,
+}
+
+impl StepSegments {
+    /// Sum of the four attributed segments.
+    pub fn accounted_us(&self) -> u64 {
+        self.plan_us + self.restore_us + self.compute_us + self.freeze_us
+    }
+
+    /// Fraction of measured wall-clock the segments account for
+    /// (1.0 when nothing was measured).
+    pub fn coverage(&self) -> f64 {
+        if self.wall_us == 0 {
+            1.0
+        } else {
+            self.accounted_us() as f64 / self.wall_us as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &StepSegments) {
+        self.steps += other.steps;
+        self.plan_us += other.plan_us;
+        self.restore_us += other.restore_us;
+        self.compute_us += other.compute_us;
+        self.freeze_us += other.freeze_us;
+        self.wall_us += other.wall_us;
+    }
 }
 
 /// Point-in-time per-tier occupancy gauges, with high-water marks.
@@ -460,6 +572,43 @@ mod tests {
         assert_eq!(p.mean_us, 200);
         assert_eq!(p.max_us, 300);
         assert!(p.p50_us <= p.p99_us);
+    }
+
+    #[test]
+    fn histogram_merge_refuses_mismatched_layouts() {
+        let mut a = Histogram::default();
+        a.record(Duration::from_micros(100));
+        let mut odd = Histogram::with_bounds(vec![10, 100, 1000]);
+        odd.record(Duration::from_micros(50));
+        a.merge(&odd);
+        assert_eq!(a.count(), 1, "mismatched merge must be a logged no-op");
+        assert_eq!(a.mean(), Duration::from_micros(100));
+
+        let mut c = CountHistogram::default();
+        c.record(4);
+        let mut codd = CountHistogram::with_bounds(vec![2, 8]);
+        codd.record(3);
+        c.merge(&codd);
+        assert_eq!(c.count(), 1);
+        assert_eq!(c.max(), 4);
+    }
+
+    #[test]
+    fn step_segments_accounting() {
+        let mut s = StepSegments {
+            steps: 1,
+            plan_us: 10,
+            restore_us: 20,
+            compute_us: 60,
+            freeze_us: 10,
+            wall_us: 100,
+        };
+        assert_eq!(s.accounted_us(), 100);
+        assert!((s.coverage() - 1.0).abs() < 1e-9);
+        s.merge(&StepSegments { steps: 1, wall_us: 50, compute_us: 50, ..Default::default() });
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.wall_us, 150);
+        assert_eq!(StepSegments::default().coverage(), 1.0);
     }
 
     #[test]

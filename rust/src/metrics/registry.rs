@@ -1,0 +1,1129 @@
+//! Process-wide metrics registry: a declared catalog of named series
+//! (counters / gauges / histograms with label sets), a cheap
+//! `SnapshotBuilder` that producers publish into, and an immutable
+//! `Snapshot` with JSON / Prometheus-text exposition.
+//!
+//! Design: producers (tier stores, sessions, the batch engine, bench
+//! sections) keep their own local counters/histograms exactly as
+//! before — publication is a *pull*: `TieredStore::publish`,
+//! `Session::publish_to_registry`, … emit their current totals into a
+//! builder. A per-store `snapshot()` is a fresh builder filled by one
+//! store (so `OffloadSummary` is now a view over it), while
+//! `Registry::global()` accumulates across sessions for the server's
+//! `stats` request and the `--metrics-interval` summary line. The
+//! full metric catalog is documented in `rust/src/metrics/README.md`.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use super::{CountHistogram, Histogram};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Catalog
+
+/// Kind of a registered metric series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone accumulating count (`_total` suffix).
+    Counter,
+    /// Point-in-time value (set/overwritten on publish).
+    Gauge,
+    /// Log-bucketed latency histogram, microseconds.
+    TimeHistogram,
+    /// Power-of-two bucketed histogram over dimensionless counts.
+    CountHistogram,
+}
+
+impl MetricKind {
+    /// Prometheus `# TYPE` keyword.
+    pub fn prometheus_type(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::TimeHistogram | MetricKind::CountHistogram => "summary",
+        }
+    }
+}
+
+/// Declared shape of one metric: the single source of truth the
+/// exposition formats, the bench CSV schema, and the docs test against.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricSpec {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    /// unit of the recorded value ("rows", "bytes", "us", "events", …)
+    pub unit: &'static str,
+    /// label keys this series may carry (subset-per-publisher allowed:
+    /// e.g. per-shard stores attach `shard`, the serving-wide gauges
+    /// published by the batch engine omit it)
+    pub labels: &'static [&'static str],
+    pub help: &'static str,
+}
+
+/// Every metric name this crate emits. `tests/telemetry.rs` checks the
+/// bench CSV schema and the exposition output against this list.
+pub const CATALOG: &[MetricSpec] = &[
+    // -- tiered-store flow counters -------------------------------------
+    MetricSpec {
+        name: "asrkf_stash_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["shard"],
+        help: "rows frozen into the tiered store (incl. spill-recovery adoptions)",
+    },
+    MetricSpec {
+        name: "asrkf_restore_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["shard"],
+        help: "frozen rows restored to the active window",
+    },
+    MetricSpec {
+        name: "asrkf_drop_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["shard"],
+        help: "frozen rows discarded without restore",
+    },
+    MetricSpec {
+        name: "asrkf_staged_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["result", "shard"],
+        help: "restores by staging outcome: hit = served from a prefetch-staged hot row, miss = inline dequantize/read",
+    },
+    MetricSpec {
+        name: "asrkf_demotion_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["to", "shard"],
+        help: "tier demotions by destination (hot->cold, cold->spill)",
+    },
+    MetricSpec {
+        name: "asrkf_promotion_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["shard"],
+        help: "prefetch promotions into the staged hot tier",
+    },
+    MetricSpec {
+        name: "asrkf_recovered_rows_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["shard"],
+        help: "rows adopted from a persistent spill file at resume",
+    },
+    MetricSpec {
+        name: "asrkf_recovery_errors_total",
+        kind: MetricKind::Counter,
+        unit: "records",
+        labels: &["shard"],
+        help: "corrupt/torn/fenced spill records reclaimed (never served)",
+    },
+    MetricSpec {
+        name: "asrkf_shard_imbalance_total",
+        kind: MetricKind::Counter,
+        unit: "bursts",
+        labels: &[],
+        help: "restore bursts where one shard carried >= 2x its fair share",
+    },
+    MetricSpec {
+        name: "asrkf_flight_events_dropped_total",
+        kind: MetricKind::Counter,
+        unit: "events",
+        labels: &["shard"],
+        help: "flight-recorder events evicted by the bounded ring buffer",
+    },
+    // -- tiered-store gauges --------------------------------------------
+    MetricSpec {
+        name: "asrkf_tier_rows",
+        kind: MetricKind::Gauge,
+        unit: "rows",
+        labels: &["tier", "shard"],
+        help: "resident frozen rows per tier (serving-wide series omit shard)",
+    },
+    MetricSpec {
+        name: "asrkf_tier_bytes",
+        kind: MetricKind::Gauge,
+        unit: "bytes",
+        labels: &["tier", "shard"],
+        help: "resident bytes per tier",
+    },
+    MetricSpec {
+        name: "asrkf_tier_peak_bytes",
+        kind: MetricKind::Gauge,
+        unit: "bytes",
+        labels: &["tier", "shard"],
+        help: "high-water-mark bytes per tier",
+    },
+    MetricSpec {
+        name: "asrkf_uncompressed_bytes",
+        kind: MetricKind::Gauge,
+        unit: "bytes",
+        labels: &["shard"],
+        help: "f32 bytes the resident frozen rows would occupy uncompressed",
+    },
+    MetricSpec {
+        name: "asrkf_shard_rows",
+        kind: MetricKind::Gauge,
+        unit: "rows",
+        labels: &["shard"],
+        help: "frozen rows resident per shard (0 for a lost shard)",
+    },
+    MetricSpec {
+        name: "asrkf_shards",
+        kind: MetricKind::Gauge,
+        unit: "shards",
+        labels: &[],
+        help: "configured shard count of the publishing store",
+    },
+    // -- latency histograms (microseconds) ------------------------------
+    MetricSpec {
+        name: "asrkf_restore_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &["tier"],
+        help: "restore (take) latency by serving tier, merged across shards",
+    },
+    MetricSpec {
+        name: "asrkf_spill_read_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "spill-file record read+verify latency",
+    },
+    MetricSpec {
+        name: "asrkf_spill_write_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "spill-file record write latency",
+    },
+    MetricSpec {
+        name: "asrkf_plan_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "policy plan+observe control-plane cost per decode step",
+    },
+    MetricSpec {
+        name: "asrkf_step_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "decode step wall-clock (apply_plan start -> absorb end)",
+    },
+    MetricSpec {
+        name: "asrkf_step_segment_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &["segment"],
+        help: "per-step wall-clock attributed to plan|restore|compute|freeze",
+    },
+    MetricSpec {
+        name: "asrkf_ttft_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "time to first token per served request",
+    },
+    MetricSpec {
+        name: "asrkf_e2e_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "end-to-end latency per served request",
+    },
+    // -- count histograms ------------------------------------------------
+    MetricSpec {
+        name: "asrkf_sched_depth",
+        kind: MetricKind::CountHistogram,
+        unit: "rows",
+        labels: &[],
+        help: "thaw-scheduler frozen-queue depth sampled per step, merged across shards",
+    },
+    MetricSpec {
+        name: "asrkf_restore_parallelism",
+        kind: MetricKind::CountHistogram,
+        unit: "shards",
+        labels: &[],
+        help: "shards engaged per restore burst",
+    },
+    MetricSpec {
+        name: "asrkf_restore_batch",
+        kind: MetricKind::CountHistogram,
+        unit: "rows",
+        labels: &[],
+        help: "rows per non-empty restore batch",
+    },
+    MetricSpec {
+        name: "asrkf_freeze_batch",
+        kind: MetricKind::CountHistogram,
+        unit: "rows",
+        labels: &[],
+        help: "rows per non-empty freeze batch",
+    },
+    MetricSpec {
+        name: "asrkf_batch_occupancy",
+        kind: MetricKind::CountHistogram,
+        unit: "slots",
+        labels: &[],
+        help: "live slots per dispatched serving batch",
+    },
+    // -- engine batch counters -------------------------------------------
+    MetricSpec {
+        name: "asrkf_restore_batch_rows_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "rows moved frozen->active across all restore batches",
+    },
+    MetricSpec {
+        name: "asrkf_restore_batch_spans_total",
+        kind: MetricKind::Counter,
+        unit: "spans",
+        labels: &[],
+        help: "contiguous spans the restore rows coalesced into",
+    },
+    MetricSpec {
+        name: "asrkf_freeze_batch_rows_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "rows moved active->frozen across all freeze batches",
+    },
+    MetricSpec {
+        name: "asrkf_freeze_batch_spans_total",
+        kind: MetricKind::Counter,
+        unit: "spans",
+        labels: &[],
+        help: "contiguous spans the freeze rows coalesced into",
+    },
+    // -- serving counters -------------------------------------------------
+    MetricSpec {
+        name: "asrkf_requests_completed_total",
+        kind: MetricKind::Counter,
+        unit: "requests",
+        labels: &[],
+        help: "requests completed by the batch engine",
+    },
+    MetricSpec {
+        name: "asrkf_requests_rejected_total",
+        kind: MetricKind::Counter,
+        unit: "requests",
+        labels: &[],
+        help: "requests rejected at admission",
+    },
+    MetricSpec {
+        name: "asrkf_tokens_generated_total",
+        kind: MetricKind::Counter,
+        unit: "tokens",
+        labels: &[],
+        help: "decode tokens generated",
+    },
+    MetricSpec {
+        name: "asrkf_prefill_tokens_total",
+        kind: MetricKind::Counter,
+        unit: "tokens",
+        labels: &[],
+        help: "prompt tokens prefetched into the KV cache",
+    },
+    MetricSpec {
+        name: "asrkf_batches_dispatched_total",
+        kind: MetricKind::Counter,
+        unit: "batches",
+        labels: &[],
+        help: "device decode batches dispatched",
+    },
+    // -- bench harness -----------------------------------------------------
+    MetricSpec {
+        name: "asrkf_bench_section_us",
+        kind: MetricKind::Gauge,
+        unit: "us",
+        labels: &["section"],
+        help: "wall-clock of one bench section (host-only sweeps, CSV export, ...)",
+    },
+];
+
+/// Look up the declared spec for a metric name.
+pub fn spec_for(name: &str) -> Option<&'static MetricSpec> {
+    CATALOG.iter().find(|s| s.name == name)
+}
+
+// ---------------------------------------------------------------------------
+// Bench CSV schema (headers declared against the catalog so bench
+// schemas cannot drift from the metric set — checked in CI)
+
+/// One bench CSV column: the header string and the catalog metric the
+/// column's value is derived from ("" for pure sweep dimensions like
+/// the mode name or request count).
+#[derive(Debug, Clone, Copy)]
+pub struct CsvColumn {
+    pub header: &'static str,
+    pub metric: &'static str,
+}
+
+/// Column schema of `artifacts/serving_throughput.csv`. The bench
+/// builds its table headers from this list; `tests/telemetry.rs`
+/// asserts every referenced metric exists in [`CATALOG`].
+pub const SERVING_CSV_COLUMNS: &[CsvColumn] = &[
+    CsvColumn { header: "Mode", metric: "" },
+    CsvColumn { header: "Shards", metric: "asrkf_shards" },
+    CsvColumn { header: "Requests", metric: "asrkf_requests_completed_total" },
+    CsvColumn { header: "Tokens", metric: "asrkf_tokens_generated_total" },
+    CsvColumn { header: "Wall (s)", metric: "" },
+    CsvColumn { header: "tok/s", metric: "" },
+    CsvColumn { header: "mean e2e (ms)", metric: "asrkf_e2e_us" },
+    CsvColumn { header: "hot KB (peak/req)", metric: "asrkf_tier_peak_bytes" },
+    CsvColumn { header: "cold KB (peak/req)", metric: "asrkf_tier_peak_bytes" },
+    CsvColumn { header: "staged hit", metric: "asrkf_staged_total" },
+    CsvColumn { header: "restore hot (us)", metric: "asrkf_restore_us" },
+    CsvColumn { header: "restore cold (us)", metric: "asrkf_restore_us" },
+    CsvColumn { header: "restored rows", metric: "asrkf_restore_batch_rows_total" },
+    CsvColumn { header: "restore spans", metric: "asrkf_restore_batch_spans_total" },
+    CsvColumn { header: "restore par", metric: "asrkf_restore_parallelism" },
+    CsvColumn { header: "recovered rows", metric: "asrkf_recovered_rows_total" },
+    CsvColumn { header: "plan mean (us)", metric: "asrkf_plan_us" },
+    CsvColumn { header: "plan p99 (us)", metric: "asrkf_plan_us" },
+];
+
+/// Header strings of [`SERVING_CSV_COLUMNS`], in order.
+pub fn serving_csv_headers() -> Vec<&'static str> {
+    SERVING_CSV_COLUMNS.iter().map(|c| c.header).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+
+type LabelKey = Vec<(String, String)>;
+
+fn label_key(labels: &[(&str, &str)]) -> LabelKey {
+    let mut v: LabelKey =
+        labels.iter().map(|(k, val)| (k.to_string(), val.to_string())).collect();
+    v.sort();
+    v
+}
+
+#[derive(Debug, Clone)]
+enum Agg {
+    Counter(u64),
+    Gauge(f64),
+    Time(Histogram),
+    Count(CountHistogram),
+}
+
+/// Accumulates published series; `finish()` freezes it into a
+/// [`Snapshot`]. Producers with pre-existing local histograms merge
+/// them in wholesale (`time_merge`/`count_merge`), so per-shard and
+/// per-session state aggregates only at snapshot time.
+#[derive(Debug, Clone, Default)]
+pub struct SnapshotBuilder {
+    series: BTreeMap<&'static str, BTreeMap<LabelKey, Agg>>,
+}
+
+impl SnapshotBuilder {
+    fn slot(
+        &mut self,
+        name: &'static str,
+        labels: &[(&str, &str)],
+        make: fn() -> Agg,
+    ) -> &mut Agg {
+        self.series
+            .entry(name)
+            .or_default()
+            .entry(label_key(labels))
+            .or_insert_with(make)
+    }
+
+    pub fn counter_add(&mut self, name: &'static str, labels: &[(&str, &str)], v: u64) {
+        match self.slot(name, labels, || Agg::Counter(0)) {
+            Agg::Counter(c) => *c += v,
+            _ => log::error!("metric {name} published as counter but registered otherwise"),
+        }
+    }
+
+    /// Overwrite a gauge (point-in-time value).
+    pub fn gauge_set(&mut self, name: &'static str, labels: &[(&str, &str)], v: f64) {
+        match self.slot(name, labels, || Agg::Gauge(0.0)) {
+            Agg::Gauge(g) => *g = v,
+            _ => log::error!("metric {name} published as gauge but registered otherwise"),
+        }
+    }
+
+    /// Add onto a gauge (summing one logical gauge over publishers).
+    pub fn gauge_add(&mut self, name: &'static str, labels: &[(&str, &str)], v: f64) {
+        match self.slot(name, labels, || Agg::Gauge(0.0)) {
+            Agg::Gauge(g) => *g += v,
+            _ => log::error!("metric {name} published as gauge but registered otherwise"),
+        }
+    }
+
+    pub fn time_record(&mut self, name: &'static str, labels: &[(&str, &str)], d: Duration) {
+        match self.slot(name, labels, || Agg::Time(Histogram::default())) {
+            Agg::Time(h) => h.record(d),
+            _ => log::error!("metric {name} published as time-histogram but registered otherwise"),
+        }
+    }
+
+    pub fn time_merge(&mut self, name: &'static str, labels: &[(&str, &str)], other: &Histogram) {
+        if other.count() == 0 {
+            return;
+        }
+        match self.slot(name, labels, || Agg::Time(Histogram::default())) {
+            Agg::Time(h) => h.merge(other),
+            _ => log::error!("metric {name} published as time-histogram but registered otherwise"),
+        }
+    }
+
+    pub fn count_record(&mut self, name: &'static str, labels: &[(&str, &str)], v: u64) {
+        match self.slot(name, labels, || Agg::Count(CountHistogram::default())) {
+            Agg::Count(h) => h.record(v),
+            _ => log::error!("metric {name} published as count-histogram but registered otherwise"),
+        }
+    }
+
+    pub fn count_merge(
+        &mut self,
+        name: &'static str,
+        labels: &[(&str, &str)],
+        other: &CountHistogram,
+    ) {
+        if other.count() == 0 {
+            return;
+        }
+        match self.slot(name, labels, || Agg::Count(CountHistogram::default())) {
+            Agg::Count(h) => h.merge(other),
+            _ => log::error!("metric {name} published as count-histogram but registered otherwise"),
+        }
+    }
+
+    /// Freeze into an immutable snapshot (histograms summarized).
+    pub fn finish(self) -> Snapshot {
+        let series = self
+            .series
+            .into_iter()
+            .map(|(name, by_label)| {
+                let by_label = by_label
+                    .into_iter()
+                    .map(|(k, agg)| {
+                        let sample = match agg {
+                            Agg::Counter(v) => Sample::Counter(v),
+                            Agg::Gauge(v) => Sample::Gauge(v),
+                            Agg::Time(h) => Sample::Hist(HistStats::from_time(&h)),
+                            Agg::Count(h) => Sample::Hist(HistStats::from_count(&h)),
+                        };
+                        (k, sample)
+                    })
+                    .collect();
+                (name, by_label)
+            })
+            .collect();
+        Snapshot { series }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot
+
+/// Frozen histogram summary (values in the metric's declared unit:
+/// microseconds for time histograms, raw counts otherwise).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistStats {
+    pub count: u64,
+    pub sum: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl HistStats {
+    fn from_time(h: &Histogram) -> Self {
+        let count = h.count();
+        let sum = h.sum_us() as f64;
+        HistStats {
+            count,
+            sum,
+            mean: if count == 0 { 0.0 } else { sum / count as f64 },
+            p50: h.quantile(0.5).as_micros() as f64,
+            p90: h.quantile(0.9).as_micros() as f64,
+            p99: h.quantile(0.99).as_micros() as f64,
+            max: h.max().as_micros() as f64,
+        }
+    }
+
+    fn from_count(h: &CountHistogram) -> Self {
+        let count = h.count();
+        let sum = h.sum() as f64;
+        HistStats {
+            count,
+            sum,
+            mean: h.mean(),
+            p50: h.quantile(0.5) as f64,
+            p90: h.quantile(0.9) as f64,
+            p99: h.quantile(0.99) as f64,
+            max: h.max() as f64,
+        }
+    }
+}
+
+/// One frozen sample of a series.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Sample {
+    Counter(u64),
+    Gauge(f64),
+    Hist(HistStats),
+}
+
+/// Immutable point-in-time view of every published series, with the
+/// query helpers `OffloadSummary::from_snapshot` and the tests use.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    series: BTreeMap<&'static str, BTreeMap<LabelKey, Sample>>,
+}
+
+fn labels_match(labels: &[(String, String)], filter: &[(&str, &str)]) -> bool {
+    filter
+        .iter()
+        .all(|(fk, fv)| labels.iter().any(|(k, v)| k == fk && v == fv))
+}
+
+impl Snapshot {
+    /// Exact-label counter lookup (0 when absent).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        match self.series.get(name).and_then(|s| s.get(&label_key(labels))) {
+            Some(Sample::Counter(v)) => *v,
+            _ => 0,
+        }
+    }
+
+    /// Sum of every counter series whose labels contain all `filter`
+    /// pairs (use `&[]` to sum over all label sets, e.g. all shards).
+    pub fn counter_sum(&self, name: &str, filter: &[(&str, &str)]) -> u64 {
+        self.filtered(name, filter)
+            .filter_map(|s| match s {
+                Sample::Counter(v) => Some(*v),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Exact-label gauge lookup (0.0 when absent).
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        match self.series.get(name).and_then(|s| s.get(&label_key(labels))) {
+            Some(Sample::Gauge(v)) => *v,
+            _ => 0.0,
+        }
+    }
+
+    pub fn gauge_sum(&self, name: &str, filter: &[(&str, &str)]) -> f64 {
+        self.filtered(name, filter)
+            .filter_map(|s| match s {
+                Sample::Gauge(v) => Some(*v),
+                _ => None,
+            })
+            .sum()
+    }
+
+    pub fn gauge_min(&self, name: &str, filter: &[(&str, &str)]) -> Option<f64> {
+        self.filtered(name, filter)
+            .filter_map(|s| match s {
+                Sample::Gauge(v) => Some(*v),
+                _ => None,
+            })
+            .reduce(f64::min)
+    }
+
+    pub fn gauge_max(&self, name: &str, filter: &[(&str, &str)]) -> Option<f64> {
+        self.filtered(name, filter)
+            .filter_map(|s| match s {
+                Sample::Gauge(v) => Some(*v),
+                _ => None,
+            })
+            .reduce(f64::max)
+    }
+
+    /// Exact-label histogram lookup.
+    pub fn hist(&self, name: &str, labels: &[(&str, &str)]) -> Option<&HistStats> {
+        match self.series.get(name).and_then(|s| s.get(&label_key(labels))) {
+            Some(Sample::Hist(h)) => Some(h),
+            _ => None,
+        }
+    }
+
+    fn filtered<'a>(
+        &'a self,
+        name: &str,
+        filter: &'a [(&'a str, &'a str)],
+    ) -> impl Iterator<Item = &'a Sample> + 'a {
+        self.series
+            .get(name)
+            .into_iter()
+            .flat_map(|s| s.iter())
+            .filter(move |(labels, _)| labels_match(labels, filter))
+            .map(|(_, s)| s)
+    }
+
+    /// Every gauge series under `name` as `(label set, value)` pairs —
+    /// lets callers enumerate dynamic label values (e.g. bench section
+    /// names) without knowing them in advance.
+    pub fn gauge_series(&self, name: &str) -> Vec<(Vec<(String, String)>, f64)> {
+        self.series
+            .get(name)
+            .into_iter()
+            .flat_map(|s| s.iter())
+            .filter_map(|(labels, s)| match s {
+                Sample::Gauge(v) => Some((labels.clone(), *v)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All metric names present in the snapshot.
+    pub fn names(&self) -> impl Iterator<Item = &'static str> + '_ {
+        self.series.keys().copied()
+    }
+
+    /// Total number of (name, label-set) series.
+    pub fn series_count(&self) -> usize {
+        self.series.values().map(|s| s.len()).sum()
+    }
+
+    /// JSON shape: `{name: [{"labels": {...}, ...sample fields}]}`.
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        for (name, by_label) in &self.series {
+            let mut arr = Vec::new();
+            for (labels, sample) in by_label {
+                let label_obj = Json::Obj(
+                    labels
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                );
+                let mut fields = vec![("labels", label_obj)];
+                match sample {
+                    Sample::Counter(v) => fields.push(("value", Json::num(*v as f64))),
+                    Sample::Gauge(v) => fields.push(("value", Json::num(*v))),
+                    Sample::Hist(h) => {
+                        fields.push(("count", Json::num(h.count as f64)));
+                        fields.push(("sum", Json::num(h.sum)));
+                        fields.push(("mean", Json::num(h.mean)));
+                        fields.push(("p50", Json::num(h.p50)));
+                        fields.push(("p90", Json::num(h.p90)));
+                        fields.push(("p99", Json::num(h.p99)));
+                        fields.push(("max", Json::num(h.max)));
+                    }
+                }
+                arr.push(Json::obj(fields));
+            }
+            top.insert(name.to_string(), Json::Arr(arr));
+        }
+        Json::Obj(top)
+    }
+
+    /// Prometheus text exposition (histograms as summary-type samples
+    /// with `quantile` labels plus `_sum`/`_count`).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, by_label) in &self.series {
+            match spec_for(name) {
+                Some(spec) => {
+                    let _ = writeln!(out, "# HELP {} {}", name, spec.help);
+                    let _ = writeln!(out, "# TYPE {} {}", name, spec.kind.prometheus_type());
+                }
+                None => {
+                    let _ = writeln!(out, "# TYPE {name} untyped");
+                }
+            }
+            for (labels, sample) in by_label {
+                match sample {
+                    Sample::Counter(v) => prom_line(&mut out, name, labels, None, *v as f64),
+                    Sample::Gauge(v) => prom_line(&mut out, name, labels, None, *v),
+                    Sample::Hist(h) => {
+                        for (q, v) in
+                            [("0.5", h.p50), ("0.9", h.p90), ("0.99", h.p99)]
+                        {
+                            prom_line(&mut out, name, labels, Some(("quantile", q)), v);
+                        }
+                        prom_line(&mut out, &format!("{name}_sum"), labels, None, h.sum);
+                        prom_line(&mut out, &format!("{name}_count"), labels, None, h.count as f64);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// One-line operator summary for `--metrics-interval` logging.
+    pub fn summary_line(&self) -> String {
+        let hot = self.gauge_sum("asrkf_tier_bytes", &[("tier", "hot")]);
+        let cold = self.gauge_sum("asrkf_tier_bytes", &[("tier", "cold")]);
+        let spill = self.gauge_sum("asrkf_tier_bytes", &[("tier", "spill")]);
+        let step = self.hist("asrkf_step_us", &[]);
+        format!(
+            "stashed={} restored={} dropped={} staged hit/miss={}/{} tiers KB hot/cold/spill={:.0}/{:.0}/{:.0} requests ok/rej={}/{} tokens={} step p50/p99 us={:.0}/{:.0}",
+            self.counter_sum("asrkf_stash_total", &[]),
+            self.counter_sum("asrkf_restore_total", &[]),
+            self.counter_sum("asrkf_drop_total", &[]),
+            self.counter_sum("asrkf_staged_total", &[("result", "hit")]),
+            self.counter_sum("asrkf_staged_total", &[("result", "miss")]),
+            hot / 1024.0,
+            cold / 1024.0,
+            spill / 1024.0,
+            self.counter_sum("asrkf_requests_completed_total", &[]),
+            self.counter_sum("asrkf_requests_rejected_total", &[]),
+            self.counter_sum("asrkf_tokens_generated_total", &[]),
+            step.map(|h| h.p50).unwrap_or(0.0),
+            step.map(|h| h.p99).unwrap_or(0.0),
+        )
+    }
+}
+
+fn prom_line(
+    out: &mut String,
+    name: &str,
+    labels: &[(String, String)],
+    extra: Option<(&str, &str)>,
+    value: f64,
+) {
+    use std::fmt::Write as _;
+    out.push_str(name);
+    let n_labels = labels.len() + usize::from(extra.is_some());
+    if n_labels > 0 {
+        out.push('{');
+        let mut first = true;
+        for (k, v) in labels
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .chain(extra)
+        {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(out, "{k}=\"");
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    if value.fract() == 0.0 && value.abs() < 1e15 {
+        let _ = writeln!(out, " {}", value as i64);
+    } else {
+        let _ = writeln!(out, " {value}");
+    }
+}
+
+/// Validate a Prometheus text exposition: every non-comment line must
+/// be `name[{k="v",...}] value`. Returns the number of samples parsed.
+/// Used by the CI round-trip smoke test; intentionally strict about
+/// name charset, brace/quote structure, and the value being a float.
+pub fn parse_exposition(text: &str) -> Result<usize, String> {
+    fn valid_name(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars().next().map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':').unwrap_or(false)
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    let mut samples = 0usize;
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let lineno = i + 1;
+        let (name_part, rest) = match line.find(|c: char| c == '{' || c == ' ') {
+            Some(idx) => (&line[..idx], &line[idx..]),
+            None => return Err(format!("line {lineno}: no value separator")),
+        };
+        if !valid_name(name_part) {
+            return Err(format!("line {lineno}: bad metric name '{name_part}'"));
+        }
+        let value_part = if let Some(body) = rest.strip_prefix('{') {
+            // scan for the closing brace outside quotes
+            let mut in_quotes = false;
+            let mut escaped = false;
+            let mut close = None;
+            for (j, c) in body.char_indices() {
+                if escaped {
+                    escaped = false;
+                    continue;
+                }
+                match c {
+                    '\\' if in_quotes => escaped = true,
+                    '"' => in_quotes = !in_quotes,
+                    '}' if !in_quotes => {
+                        close = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let close = close.ok_or_else(|| format!("line {lineno}: unterminated label set"))?;
+            let labels = &body[..close];
+            if !labels.is_empty() {
+                for pair in split_label_pairs(labels) {
+                    let (k, v) = pair
+                        .split_once('=')
+                        .ok_or_else(|| format!("line {lineno}: label pair '{pair}' missing '='"))?;
+                    if !valid_name(k) {
+                        return Err(format!("line {lineno}: bad label name '{k}'"));
+                    }
+                    if !(v.len() >= 2 && v.starts_with('"') && v.ends_with('"')) {
+                        return Err(format!("line {lineno}: label value {v} not quoted"));
+                    }
+                }
+            }
+            &body[close + 1..]
+        } else {
+            rest
+        };
+        let value = value_part.trim();
+        let ok = matches!(value, "NaN" | "+Inf" | "-Inf") || value.parse::<f64>().is_ok();
+        if !ok {
+            return Err(format!("line {lineno}: bad sample value '{value}'"));
+        }
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+/// Split `k="v",k2="v2"` on commas outside quotes.
+fn split_label_pairs(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_quotes => escaped = true,
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(s[start..].trim());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+
+/// Thread-safe accumulating registry. `Registry::global()` is the
+/// process-wide instance the server's `stats` request and the
+/// `--metrics-interval` logger snapshot; sessions publish into it when
+/// they retire. Per-store snapshots (`TieredStore::snapshot`) use a
+/// private builder instead, so a store's view is never polluted by
+/// other sessions.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<SnapshotBuilder>,
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn global() -> &'static Registry {
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Publish a batch of series under one lock acquisition.
+    pub fn publish<F: FnOnce(&mut SnapshotBuilder)>(&self, f: F) {
+        let mut b = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        f(&mut b);
+    }
+
+    pub fn counter_add(&self, name: &'static str, labels: &[(&str, &str)], v: u64) {
+        self.publish(|b| b.counter_add(name, labels, v));
+    }
+
+    pub fn gauge_set(&self, name: &'static str, labels: &[(&str, &str)], v: f64) {
+        self.publish(|b| b.gauge_set(name, labels, v));
+    }
+
+    pub fn time_record(&self, name: &'static str, labels: &[(&str, &str)], d: Duration) {
+        self.publish(|b| b.time_record(name, labels, d));
+    }
+
+    pub fn count_record(&self, name: &'static str, labels: &[(&str, &str)], v: u64) {
+        self.publish(|b| b.count_record(name, labels, v));
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).clone().finish()
+    }
+}
+
+/// Spawn a detached thread that logs the global registry's summary
+/// line every `secs` seconds (no-op for `secs == 0`). Driven by the
+/// `--metrics-interval` flag on `generate` and `serve`.
+pub fn start_interval_logger(secs: u64) {
+    if secs == 0 {
+        return;
+    }
+    std::thread::Builder::new()
+        .name("asrkf-metrics".into())
+        .spawn(move || loop {
+            std::thread::sleep(Duration::from_secs(secs));
+            log::info!("{}", Registry::global().snapshot().summary_line());
+        })
+        .expect("spawn metrics interval logger");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> Snapshot {
+        let mut b = SnapshotBuilder::default();
+        b.counter_add("asrkf_stash_total", &[("shard", "0")], 5);
+        b.counter_add("asrkf_stash_total", &[("shard", "1")], 7);
+        b.counter_add("asrkf_staged_total", &[("result", "hit"), ("shard", "0")], 3);
+        b.counter_add("asrkf_staged_total", &[("result", "miss"), ("shard", "0")], 2);
+        b.gauge_set("asrkf_tier_bytes", &[("tier", "hot"), ("shard", "0")], 1024.0);
+        b.gauge_set("asrkf_tier_bytes", &[("tier", "hot"), ("shard", "1")], 2048.0);
+        b.time_record("asrkf_restore_us", &[("tier", "hot")], Duration::from_micros(100));
+        b.time_record("asrkf_restore_us", &[("tier", "hot")], Duration::from_micros(300));
+        b.count_record("asrkf_sched_depth", &[], 4);
+        b.finish()
+    }
+
+    #[test]
+    fn counters_accumulate_and_filter() {
+        let s = sample_snapshot();
+        assert_eq!(s.counter("asrkf_stash_total", &[("shard", "0")]), 5);
+        assert_eq!(s.counter_sum("asrkf_stash_total", &[]), 12);
+        assert_eq!(s.counter_sum("asrkf_staged_total", &[("result", "hit")]), 3);
+        assert_eq!(s.counter("asrkf_stash_total", &[("shard", "9")]), 0);
+    }
+
+    #[test]
+    fn label_order_is_normalized() {
+        let mut b = SnapshotBuilder::default();
+        b.counter_add("asrkf_staged_total", &[("shard", "0"), ("result", "hit")], 1);
+        b.counter_add("asrkf_staged_total", &[("result", "hit"), ("shard", "0")], 1);
+        let s = b.finish();
+        assert_eq!(s.counter("asrkf_staged_total", &[("result", "hit"), ("shard", "0")]), 2);
+        assert_eq!(s.series_count(), 1);
+    }
+
+    #[test]
+    fn gauges_sum_min_max() {
+        let s = sample_snapshot();
+        assert_eq!(s.gauge_sum("asrkf_tier_bytes", &[("tier", "hot")]), 3072.0);
+        assert_eq!(s.gauge_min("asrkf_tier_bytes", &[]), Some(1024.0));
+        assert_eq!(s.gauge_max("asrkf_tier_bytes", &[]), Some(2048.0));
+        assert_eq!(s.gauge_min("asrkf_absent", &[]), None);
+    }
+
+    #[test]
+    fn hist_summary_fields() {
+        let s = sample_snapshot();
+        let h = s.hist("asrkf_restore_us", &[("tier", "hot")]).unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 400.0);
+        assert_eq!(h.mean, 200.0);
+        assert!(h.p50 <= h.p99 && h.p99 <= h.max);
+        let d = s.hist("asrkf_sched_depth", &[]).unwrap();
+        assert_eq!(d.count, 1);
+        assert_eq!(d.max, 4.0);
+    }
+
+    #[test]
+    fn kind_mismatch_is_logged_not_merged() {
+        let mut b = SnapshotBuilder::default();
+        b.counter_add("asrkf_stash_total", &[], 1);
+        b.gauge_set("asrkf_stash_total", &[], 99.0);
+        let s = b.finish();
+        assert_eq!(s.counter("asrkf_stash_total", &[]), 1, "gauge write must not clobber");
+    }
+
+    #[test]
+    fn json_shape() {
+        let s = sample_snapshot();
+        let j = s.to_json();
+        let arr = j.get("asrkf_stash_total").as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("labels").get("shard").as_str(), Some("0"));
+        assert_eq!(arr[0].get("value").as_usize(), Some(5));
+        let h = &j.get("asrkf_restore_us").as_arr().unwrap()[0];
+        assert_eq!(h.get("count").as_usize(), Some(2));
+        // round-trips through the crate JSON writer/parser
+        let text = j.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("asrkf_sched_depth").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_parses() {
+        let s = sample_snapshot();
+        let text = s.to_prometheus();
+        assert!(text.contains("# TYPE asrkf_stash_total counter"));
+        assert!(text.contains("asrkf_stash_total{shard=\"0\"} 5"));
+        assert!(text.contains("asrkf_restore_us{tier=\"hot\",quantile=\"0.5\"}"));
+        assert!(text.contains("asrkf_restore_us_count{tier=\"hot\"} 2"));
+        let n = parse_exposition(&text).unwrap();
+        assert!(n >= 10, "expected at least 10 samples, got {n}");
+    }
+
+    #[test]
+    fn exposition_validator_rejects_garbage() {
+        assert!(parse_exposition("1bad_name 3\n").is_err());
+        assert!(parse_exposition("name{unterminated=\"x\" 3\n").is_err());
+        assert!(parse_exposition("name{k=unquoted} 3\n").is_err());
+        assert!(parse_exposition("name notanumber\n").is_err());
+        assert_eq!(parse_exposition("# just a comment\n\n").unwrap(), 0);
+        assert_eq!(parse_exposition("ok{k=\"a,b\",j=\"c\\\"d\"} 1.5\nplain 2\n").unwrap(), 2);
+    }
+
+    #[test]
+    fn catalog_names_unique_and_csv_schema_resolves() {
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in CATALOG {
+            assert!(seen.insert(spec.name), "duplicate metric {}", spec.name);
+            assert!(!spec.help.is_empty());
+        }
+        for col in SERVING_CSV_COLUMNS {
+            if !col.metric.is_empty() {
+                assert!(
+                    spec_for(col.metric).is_some(),
+                    "CSV column '{}' references unregistered metric '{}'",
+                    col.header,
+                    col.metric
+                );
+            }
+        }
+        assert_eq!(serving_csv_headers().len(), SERVING_CSV_COLUMNS.len());
+    }
+
+    #[test]
+    fn summary_line_mentions_totals() {
+        let line = sample_snapshot().summary_line();
+        assert!(line.contains("stashed=12"), "{line}");
+        assert!(line.contains("staged hit/miss=3/2"), "{line}");
+    }
+}

@@ -75,7 +75,7 @@ pub use spill::{record_bytes_for, record_path, SpillFile, SpillManifest, SpillTi
 pub use store::TieredStore;
 pub use tier::{RowPayload, Tier};
 
-use crate::metrics::TierOccupancy;
+use crate::metrics::{Snapshot, TierOccupancy};
 
 /// Per-session offload snapshot: occupancy gauges + restore counters.
 /// Attached to `GenStats` / `GenResponse` so benches can trace the
@@ -124,6 +124,55 @@ pub struct OffloadSummary {
 }
 
 impl OffloadSummary {
+    /// Build the flat summary view from a registry snapshot (the
+    /// output of `TieredStore::snapshot` / `ShardedStore::snapshot`).
+    /// The snapshot is the source of truth — this struct only flattens
+    /// it for responses and bench CSVs. Engine-side batching counters
+    /// (`restore_batch_*`) stay zero here; `Session::offload_summary`
+    /// overlays them.
+    pub fn from_snapshot(s: &Snapshot) -> OffloadSummary {
+        let tier_gauge = |name: &str, tier: &str| s.gauge_sum(name, &[("tier", tier)]) as usize;
+        let restore = |tier: &str| s.hist("asrkf_restore_us", &[("tier", tier)]);
+        let occupancy = TierOccupancy {
+            hot_rows: tier_gauge("asrkf_tier_rows", "hot"),
+            hot_bytes: tier_gauge("asrkf_tier_bytes", "hot"),
+            cold_rows: tier_gauge("asrkf_tier_rows", "cold"),
+            cold_bytes: tier_gauge("asrkf_tier_bytes", "cold"),
+            spill_rows: tier_gauge("asrkf_tier_rows", "spill"),
+            spill_bytes: tier_gauge("asrkf_tier_bytes", "spill"),
+            peak_hot_bytes: tier_gauge("asrkf_tier_peak_bytes", "hot"),
+            peak_cold_bytes: tier_gauge("asrkf_tier_peak_bytes", "cold"),
+            peak_spill_bytes: tier_gauge("asrkf_tier_peak_bytes", "spill"),
+            uncompressed_bytes: s.gauge_sum("asrkf_uncompressed_bytes", &[]) as usize,
+        };
+        OffloadSummary {
+            occupancy,
+            staged_hits: s.counter_sum("asrkf_staged_total", &[("result", "hit")]),
+            staged_misses: s.counter_sum("asrkf_staged_total", &[("result", "miss")]),
+            demotions_cold: s.counter_sum("asrkf_demotion_total", &[("to", "cold")]),
+            demotions_spill: s.counter_sum("asrkf_demotion_total", &[("to", "spill")]),
+            prefetch_promotions: s.counter_sum("asrkf_promotion_total", &[]),
+            restores_hot: restore("hot").map(|h| h.count).unwrap_or(0),
+            restores_cold: restore("cold").map(|h| h.count).unwrap_or(0),
+            restores_spill: restore("spill").map(|h| h.count).unwrap_or(0),
+            restore_hot_mean_us: restore("hot").map(|h| h.mean as u64).unwrap_or(0),
+            restore_cold_mean_us: restore("cold").map(|h| h.mean as u64).unwrap_or(0),
+            sched_depth_max: s.hist("asrkf_sched_depth", &[]).map(|h| h.max as u64).unwrap_or(0),
+            recovered_rows: s.counter_sum("asrkf_recovered_rows_total", &[]),
+            recovery_errors: s.counter_sum("asrkf_recovery_errors_total", &[]),
+            restore_batch_rows: s.counter_sum("asrkf_restore_batch_rows_total", &[]),
+            restore_batch_spans: s.counter_sum("asrkf_restore_batch_spans_total", &[]),
+            shards: s.gauge("asrkf_shards", &[]) as u64,
+            restore_parallelism_max: s
+                .hist("asrkf_restore_parallelism", &[])
+                .map(|h| h.max as u64)
+                .unwrap_or(0),
+            shard_imbalance: s.counter_sum("asrkf_shard_imbalance_total", &[]),
+            shard_rows_min: s.gauge_min("asrkf_shard_rows", &[]).unwrap_or(0.0) as u64,
+            shard_rows_max: s.gauge_max("asrkf_shard_rows", &[]).unwrap_or(0.0) as u64,
+        }
+    }
+
     /// Fraction of restores that never touched a compressed row at
     /// restore time (hot-tier hits, staged or resident).
     pub fn hot_restore_frac(&self) -> f64 {

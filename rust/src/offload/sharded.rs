@@ -57,7 +57,10 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::config::{OffloadConfig, ShardPartition};
 use crate::engine::layout::{coalesce_runs, split_runs};
 use crate::error::{Error, Result};
-use crate::metrics::{CountHistogram, RestoreLatency, TierKind, TierOccupancy};
+use crate::metrics::{
+    CountHistogram, FlightEvent, RestoreLatency, Snapshot, SnapshotBuilder, TierKind,
+    TierOccupancy,
+};
 use crate::offload::store::TieredStore;
 use crate::offload::OffloadSummary;
 
@@ -652,40 +655,74 @@ impl ShardedStore {
             .collect()
     }
 
+    /// Publish monotone flow metrics (counters + latency histograms)
+    /// from every live shard into `b` under its real shard index, plus
+    /// the facade's own burst telemetry. Safe to accumulate repeatedly
+    /// into a long-lived registry (e.g. at session retirement) because
+    /// every series here only ever grows.
+    pub fn publish_flows(&self, b: &mut SnapshotBuilder) {
+        for (i, sh) in self.shards.iter().enumerate() {
+            if let Some(s) = sh {
+                s.publish_flows(b, i);
+            }
+        }
+        b.counter_add("asrkf_shard_imbalance_total", &[], self.shard_imbalance);
+        b.count_merge("asrkf_restore_parallelism", &[], &self.restore_parallelism);
+    }
+
+    /// Publish point-in-time occupancy gauges per shard. Lost shards
+    /// still publish a zero `asrkf_shard_rows` gauge so the min/max
+    /// imbalance view keeps the same denominator.
+    pub fn publish_gauges(&self, b: &mut SnapshotBuilder) {
+        for (i, sh) in self.shards.iter().enumerate() {
+            let idx = i.to_string();
+            match sh {
+                Some(s) => s.publish_gauges(b, i),
+                None => b.gauge_set("asrkf_shard_rows", &[("shard", idx.as_str())], 0.0),
+            }
+        }
+        b.gauge_set("asrkf_shards", &[], self.n as f64);
+    }
+
+    /// Flows + gauges in one pass (a full per-store snapshot).
+    pub fn publish(&self, b: &mut SnapshotBuilder) {
+        self.publish_flows(b);
+        self.publish_gauges(b);
+    }
+
+    /// A registry snapshot covering only this store — the source of
+    /// truth behind [`ShardedStore::summary`] and the server stats
+    /// plane's per-request view.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut b = SnapshotBuilder::default();
+        self.publish(&mut b);
+        b.finish()
+    }
+
     /// Merged counters + occupancy + sharding telemetry for responses
-    /// and bench CSVs.
+    /// and bench CSVs — a flat view over [`ShardedStore::snapshot`].
     pub fn summary(&self) -> OffloadSummary {
-        let mut s = OffloadSummary { occupancy: self.occupancy(), ..Default::default() };
-        for sh in self.live_shards() {
-            let t = sh.summary();
-            s.staged_hits += t.staged_hits;
-            s.staged_misses += t.staged_misses;
-            s.demotions_cold += t.demotions_cold;
-            s.demotions_spill += t.demotions_spill;
-            s.prefetch_promotions += t.prefetch_promotions;
-            s.restores_hot += t.restores_hot;
-            s.restores_cold += t.restores_cold;
-            s.restores_spill += t.restores_spill;
-            s.recovered_rows += t.recovered_rows;
-            s.recovery_errors += t.recovery_errors;
-            s.sched_depth_max = s.sched_depth_max.max(t.sched_depth_max);
+        OffloadSummary::from_snapshot(&self.snapshot())
+    }
+
+    /// Every shard's flight-recorder events tagged with the shard
+    /// index, merged into one global timeline ordered by capture time
+    /// (ties broken by per-shard sequence number).
+    pub fn flight_events(&self) -> Vec<(usize, FlightEvent)> {
+        let mut all: Vec<(usize, FlightEvent)> = Vec::new();
+        for (i, sh) in self.shards.iter().enumerate() {
+            if let Some(s) = sh {
+                all.extend(s.flight().events().map(|ev| (i, *ev)));
+            }
         }
-        let lat = self.restore_latency();
-        s.restore_hot_mean_us = lat.hot.mean().as_micros() as u64;
-        s.restore_cold_mean_us = lat.cold.mean().as_micros() as u64;
-        s.shards = self.n as u64;
-        s.restore_parallelism_max = self.restore_parallelism.max();
-        s.shard_imbalance = self.shard_imbalance;
-        let mut rows_min = usize::MAX;
-        let mut rows_max = 0usize;
-        for sh in &self.shards {
-            let rows = sh.as_ref().map(TieredStore::len).unwrap_or(0);
-            rows_min = rows_min.min(rows);
-            rows_max = rows_max.max(rows);
-        }
-        s.shard_rows_min = if rows_min == usize::MAX { 0 } else { rows_min as u64 };
-        s.shard_rows_max = rows_max as u64;
-        s
+        all.sort_by_key(|(_, ev)| (ev.ts_us, ev.seq));
+        all
+    }
+
+    /// Total flight events evicted or rejected across shards (ring
+    /// wraparound plus `flight_recorder_cap = 0` suppression).
+    pub fn flight_dropped(&self) -> u64 {
+        self.live_shards().map(|s| s.flight().dropped()).sum()
     }
 }
 

@@ -35,10 +35,11 @@ use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use crate::config::ShardPartition;
 use crate::error::{Error, Result};
-use crate::metrics::{TierKind, TierOccupancy};
+use crate::metrics::{Histogram, TierKind, TierOccupancy};
 use crate::offload::quant::{QuantRow, ROW_HEADER_BYTES};
 use crate::offload::tier::{RowPayload, Tier};
 use crate::util::json::{parse, write_json, Json};
@@ -632,13 +633,24 @@ pub struct SpillTier {
     row_floats: usize,
     file: Option<SpillFile>,
     slots: HashMap<usize, u32>,
+    /// record read+verify latency (restore and staging paths)
+    pub read_us: Histogram,
+    /// record write latency (demotion path)
+    pub write_us: Histogram,
 }
 
 impl SpillTier {
     /// `dir: None` builds a disabled tier: stash errors, everything
     /// else reports empty.
     pub fn new(dir: Option<String>, row_floats: usize) -> SpillTier {
-        SpillTier { dir, row_floats, file: None, slots: HashMap::new() }
+        SpillTier {
+            dir,
+            row_floats,
+            file: None,
+            slots: HashMap::new(),
+            read_us: Histogram::default(),
+            write_us: Histogram::default(),
+        }
     }
 
     /// Persistent tier for `shard`: opens the deterministic record
@@ -657,6 +669,8 @@ impl SpillTier {
             row_floats,
             file: Some(file),
             slots: HashMap::new(),
+            read_us: Histogram::default(),
+            write_us: Histogram::default(),
         })
     }
 
@@ -711,7 +725,9 @@ impl Tier for SpillTier {
             self.file = Some(SpillFile::create(&dir, self.row_floats)?);
         }
         let qr = payload.into_quant();
+        let t0 = Instant::now();
         let slot = self.file.as_mut().unwrap().write_row(pos, &qr)?;
+        self.write_us.record(t0.elapsed());
         self.slots.insert(pos, slot);
         Ok(())
     }
@@ -726,7 +742,9 @@ impl Tier for SpillTier {
         // mapping intact so the record stays reachable for a retry
         // (removing it first stranded the slot forever: never freed,
         // counted by bytes(), unreachable by position)
+        let t0 = Instant::now();
         let qr = file.take_row(slot, pos)?;
+        self.read_us.record(t0.elapsed());
         self.slots.remove(&pos);
         Ok(Some(RowPayload::Quant(qr)))
     }

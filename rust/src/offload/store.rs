@@ -30,7 +30,10 @@ use std::time::Instant;
 
 use crate::config::OffloadConfig;
 use crate::error::{Error, Result};
-use crate::metrics::{CountHistogram, RestoreLatency, TierKind, TierOccupancy};
+use crate::metrics::{
+    Cause, CountHistogram, FlightRecorder, RestoreLatency, Snapshot, SnapshotBuilder, TierKind,
+    TierOccupancy,
+};
 use crate::offload::cold::ColdTier;
 use crate::offload::hot::HotTier;
 use crate::offload::sched::{SchedClass, ThawScheduler};
@@ -77,6 +80,11 @@ pub struct TieredStore {
     pub restore_latency: RestoreLatency,
     /// scheduler queue depth (rows awaiting staging), sampled per step
     pub sched_depth: CountHistogram,
+    /// bounded ring of structured tier-transition events (`--trace-out`)
+    flight: FlightRecorder,
+    /// last decode step the store observed (stamps flight events whose
+    /// trigger carries no step of its own, e.g. budget demotions)
+    last_step: u64,
 }
 
 impl std::fmt::Debug for TieredStore {
@@ -90,6 +98,14 @@ impl std::fmt::Debug for TieredStore {
 
 fn missing(pos: usize, class: SchedClass) -> Error {
     Error::Offload(format!("pos {pos} indexed as {class:?} but missing from its tier"))
+}
+
+fn class_tier(class: SchedClass) -> TierKind {
+    match class {
+        SchedClass::HotResident | SchedClass::HotStaged => TierKind::Hot,
+        SchedClass::Cold => TierKind::Cold,
+        SchedClass::Spill => TierKind::Spill,
+    }
 }
 
 impl TieredStore {
@@ -108,6 +124,7 @@ impl TieredStore {
     pub fn with_spill(row_floats: usize, cfg: OffloadConfig, spill: SpillTier) -> Self {
         let hot = HotTier::new(row_floats, cfg.block_rows);
         let cold = ColdTier::new(row_floats);
+        let flight_cap = cfg.flight_recorder_cap;
         TieredStore {
             row_floats,
             cfg,
@@ -130,6 +147,8 @@ impl TieredStore {
             recovered_rows: 0,
             restore_latency: RestoreLatency::default(),
             sched_depth: CountHistogram::default(),
+            flight: FlightRecorder::new(flight_cap),
+            last_step: 0,
         }
     }
 
@@ -158,6 +177,8 @@ impl TieredStore {
             self.entries
                 .insert(pos, Entry { class: SchedClass::Spill, thaw_eta: eta, recovered: true });
             self.sched.insert(SchedClass::Spill, eta, pos);
+            self.flight
+                .record(now, pos, None, Some(TierKind::Spill), Cause::Recover, eta);
         }
         let n = positions.len() as u64;
         self.total_stashed += n;
@@ -205,12 +226,13 @@ impl TieredStore {
                 self.row_floats
             )));
         }
+        self.last_step = step;
         if let Some(e) = self.entries.get(&pos) {
             if e.recovered {
                 // a resumed session re-froze a recovered position: the
                 // fresh row supersedes the stale pre-crash copy (which
                 // the policy never knew about)
-                self.drop_row(pos)?;
+                self.drop_inner(pos, Cause::Supersede)?;
             } else {
                 return Err(Error::Offload(format!("double-freeze of pos {pos}")));
             }
@@ -227,6 +249,8 @@ impl TieredStore {
         };
         self.entries.insert(pos, Entry { class, thaw_eta, recovered: false });
         self.sched.insert(class, thaw_eta, pos);
+        self.flight
+            .record(step, pos, None, Some(class_tier(class)), Cause::Freeze, thaw_eta);
         self.total_stashed += 1;
         self.enforce_budgets()?;
         self.bump_peaks();
@@ -243,7 +267,7 @@ impl TieredStore {
         }
         while self.hot.bytes() > self.cfg.hot_budget_bytes {
             let Some((_, pos)) = self.sched.farthest(SchedClass::HotResident) else { break };
-            self.demote_to_cold(pos)?;
+            self.demote_to_cold(pos, Cause::Pressure)?;
         }
         if self.spill.enabled() {
             while self.cold.bytes() > self.cfg.cold_budget_bytes {
@@ -255,7 +279,7 @@ impl TieredStore {
         Ok(())
     }
 
-    fn demote_to_cold(&mut self, pos: usize) -> Result<()> {
+    fn demote_to_cold(&mut self, pos: usize, cause: Cause) -> Result<()> {
         debug_assert!(self.cfg.quantize_cold, "demotion with quantization disabled");
         let (class, eta) = match self.entries.get(&pos) {
             Some(e) => (e.class, e.thaw_eta),
@@ -270,6 +294,8 @@ impl TieredStore {
         self.sched.insert(SchedClass::Cold, eta, pos);
         self.entries.get_mut(&pos).unwrap().class = SchedClass::Cold;
         self.demotions_cold += 1;
+        self.flight
+            .record(self.last_step, pos, Some(TierKind::Hot), Some(TierKind::Cold), cause, eta);
         Ok(())
     }
 
@@ -288,6 +314,14 @@ impl TieredStore {
         self.sched.insert(SchedClass::Spill, eta, pos);
         self.entries.get_mut(&pos).unwrap().class = SchedClass::Spill;
         self.demotions_spill += 1;
+        self.flight.record(
+            self.last_step,
+            pos,
+            Some(TierKind::Cold),
+            Some(TierKind::Spill),
+            Cause::Pressure,
+            eta,
+        );
         Ok(())
     }
 
@@ -297,7 +331,7 @@ impl TieredStore {
     /// hot tier is full the row stays put and the eventual restore pays
     /// the inline cost (visible as a staged miss) rather than blowing
     /// the budget the coordinator partitioned per slot.
-    fn promote(&mut self, pos: usize) -> Result<bool> {
+    fn promote(&mut self, pos: usize, cause: Cause) -> Result<bool> {
         let (class, eta) = match self.entries.get(&pos) {
             None => return Ok(false),
             Some(e) => (e.class, e.thaw_eta),
@@ -317,6 +351,8 @@ impl TieredStore {
         self.sched.insert(SchedClass::HotStaged, eta, pos);
         self.entries.get_mut(&pos).unwrap().class = SchedClass::HotStaged;
         self.prefetch_promotions += 1;
+        self.flight
+            .record(self.last_step, pos, Some(class_tier(class)), Some(TierKind::Hot), cause, eta);
         self.bump_peaks();
         Ok(true)
     }
@@ -334,7 +370,7 @@ impl TieredStore {
                 e.thaw_eta = eta;
                 self.sched.retarget(class, pos, old_eta, eta);
             }
-            if self.promote(pos)? {
+            if self.promote(pos, Cause::Prefetch)? {
                 n += 1;
             }
         }
@@ -364,7 +400,7 @@ impl TieredStore {
             if self.entries.get(&pos).is_some_and(|e| e.recovered) {
                 continue;
             }
-            if self.promote(pos)? {
+            if self.promote(pos, Cause::Pressure)? {
                 n += 1;
             }
         }
@@ -379,12 +415,13 @@ impl TieredStore {
     /// eta index hands over exactly the overdue rows, so the sweep is
     /// O(demoted) instead of O(resident).
     pub fn on_step(&mut self, now: u64) -> Result<()> {
+        self.last_step = now;
         if !self.cfg.quantize_cold {
             return Ok(());
         }
         let limit = now.saturating_add(self.cfg.cold_after_steps);
         for (_, pos) in self.sched.overdue_hot(limit) {
-            self.demote_to_cold(pos)?;
+            self.demote_to_cold(pos, Cause::Expire)?;
         }
         self.enforce_budgets()?;
         self.sched_depth.record(self.sched.queued_frozen() as u64);
@@ -411,6 +448,10 @@ impl TieredStore {
     /// failed take then reported `Ok(None)` forever for a row the
     /// tier still held.)
     pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
+        self.take_inner(pos, Cause::Restore)
+    }
+
+    fn take_inner(&mut self, pos: usize, cause: Cause) -> Result<Option<Vec<f32>>> {
         let Some(e) = self.entries.get(&pos) else { return Ok(None) };
         let (class, eta) = (e.class, e.thaw_eta);
         let t0 = Instant::now();
@@ -439,6 +480,7 @@ impl TieredStore {
         let row = payload.into_raw();
         self.restore_latency.record(tier, t0.elapsed());
         self.total_restored += 1;
+        self.flight.record(self.last_step, pos, Some(tier), None, cause, eta);
         Ok(Some(row))
     }
 
@@ -451,6 +493,10 @@ impl TieredStore {
     ///
     /// [`take`]: TieredStore::take
     pub fn drop_row(&mut self, pos: usize) -> Result<()> {
+        self.drop_inner(pos, Cause::Drop)
+    }
+
+    fn drop_inner(&mut self, pos: usize, cause: Cause) -> Result<()> {
         let Some(e) = self.entries.get(&pos) else { return Ok(()) };
         let (class, eta) = (e.class, e.thaw_eta);
         let held = self.tier_mut(class).discard(pos)?;
@@ -460,6 +506,8 @@ impl TieredStore {
             return Err(missing(pos, class));
         }
         self.total_dropped += 1;
+        self.flight
+            .record(self.last_step, pos, Some(class_tier(class)), None, cause, eta);
         Ok(())
     }
 
@@ -498,7 +546,7 @@ impl TieredStore {
         let positions: Vec<usize> = self.entries.keys().copied().collect();
         let mut out = Vec::with_capacity(positions.len());
         for pos in positions {
-            if let Some(row) = self.take(pos)? {
+            if let Some(row) = self.take_inner(pos, Cause::Emergency)? {
                 out.push((pos, row));
             }
         }
@@ -528,34 +576,95 @@ impl TieredStore {
         o
     }
 
-    /// Counters + occupancy snapshot for responses and bench CSVs.
+    /// The store's bounded ring of tier-transition events.
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.flight
+    }
+
+    /// Publish the store's *flow* series — counters and latency
+    /// histograms, all monotone over the store's lifetime — into a
+    /// snapshot builder under the given `shard` label. Safe to add
+    /// cumulatively into `Registry::global()` when a session retires
+    /// (counters sum; gauges would collide, so they live in
+    /// [`TieredStore::publish_gauges`]).
+    pub fn publish_flows(&self, b: &mut SnapshotBuilder, shard: usize) {
+        let sh = shard.to_string();
+        let sh = sh.as_str();
+        let l = [("shard", sh)];
+        b.counter_add("asrkf_stash_total", &l, self.total_stashed);
+        b.counter_add("asrkf_restore_total", &l, self.total_restored);
+        b.counter_add("asrkf_drop_total", &l, self.total_dropped);
+        b.counter_add("asrkf_staged_total", &[("result", "hit"), ("shard", sh)], self.staged_hits);
+        b.counter_add(
+            "asrkf_staged_total",
+            &[("result", "miss"), ("shard", sh)],
+            self.staged_misses,
+        );
+        b.counter_add("asrkf_demotion_total", &[("to", "cold"), ("shard", sh)], self.demotions_cold);
+        b.counter_add(
+            "asrkf_demotion_total",
+            &[("to", "spill"), ("shard", sh)],
+            self.demotions_spill,
+        );
+        b.counter_add("asrkf_promotion_total", &l, self.prefetch_promotions);
+        b.counter_add("asrkf_recovered_rows_total", &l, self.recovered_rows);
+        b.counter_add("asrkf_recovery_errors_total", &l, self.spill.recovery_errors());
+        b.counter_add("asrkf_flight_events_dropped_total", &l, self.flight.dropped());
+        b.time_merge("asrkf_restore_us", &[("tier", "hot")], &self.restore_latency.hot);
+        b.time_merge("asrkf_restore_us", &[("tier", "cold")], &self.restore_latency.cold);
+        b.time_merge("asrkf_restore_us", &[("tier", "spill")], &self.restore_latency.spill);
+        b.time_merge("asrkf_spill_read_us", &[], &self.spill.read_us);
+        b.time_merge("asrkf_spill_write_us", &[], &self.spill.write_us);
+        b.count_merge("asrkf_sched_depth", &[], &self.sched_depth);
+    }
+
+    /// Publish the store's point-in-time occupancy gauges under the
+    /// given `shard` label. Kept separate from the flows: per-shard
+    /// gauges belong in per-store snapshots (and the single-session
+    /// generate path) — publishing them from many concurrent sessions
+    /// into one registry would overwrite each other.
+    pub fn publish_gauges(&self, b: &mut SnapshotBuilder, shard: usize) {
+        let sh = shard.to_string();
+        let sh = sh.as_str();
+        let o = self.occupancy();
+        for (tier, rows, bytes, peak) in [
+            ("hot", o.hot_rows, o.hot_bytes, o.peak_hot_bytes),
+            ("cold", o.cold_rows, o.cold_bytes, o.peak_cold_bytes),
+            ("spill", o.spill_rows, o.spill_bytes, o.peak_spill_bytes),
+        ] {
+            let l = [("tier", tier), ("shard", sh)];
+            b.gauge_set("asrkf_tier_rows", &l, rows as f64);
+            b.gauge_set("asrkf_tier_bytes", &l, bytes as f64);
+            b.gauge_set("asrkf_tier_peak_bytes", &l, peak as f64);
+        }
+        b.gauge_set("asrkf_uncompressed_bytes", &[("shard", sh)], o.uncompressed_bytes as f64);
+        b.gauge_set("asrkf_shard_rows", &[("shard", sh)], self.entries.len() as f64);
+    }
+
+    /// Publish flows and gauges together (per-store snapshots).
+    pub fn publish(&self, b: &mut SnapshotBuilder, shard: usize) {
+        self.publish_flows(b, shard);
+        self.publish_gauges(b, shard);
+    }
+
+    /// Freeze this store's series into a private snapshot (shard 0).
+    /// `OffloadSummary` is a view over this — see
+    /// `OffloadSummary::from_snapshot`.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut b = SnapshotBuilder::default();
+        self.publish(&mut b, 0);
+        b.gauge_set("asrkf_shards", &[], 1.0);
+        b.finish()
+    }
+
+    /// Counters + occupancy view for responses and bench CSVs, derived
+    /// from the registry snapshot (the snapshot is the source of
+    /// truth; this struct is the flat view legacy callers keep).
     /// Plan-batching counters are zero here — the session overlays its
     /// own (`Session::offload_summary`), since batching happens in the
     /// engine's plan execution, not in storage.
     pub fn summary(&self) -> super::OffloadSummary {
-        let mean_us = |h: &crate::metrics::Histogram| h.mean().as_micros() as u64;
-        super::OffloadSummary {
-            occupancy: self.occupancy(),
-            staged_hits: self.staged_hits,
-            staged_misses: self.staged_misses,
-            demotions_cold: self.demotions_cold,
-            demotions_spill: self.demotions_spill,
-            prefetch_promotions: self.prefetch_promotions,
-            restores_hot: self.restore_latency.hot.count(),
-            restores_cold: self.restore_latency.cold.count(),
-            restores_spill: self.restore_latency.spill.count(),
-            restore_hot_mean_us: mean_us(&self.restore_latency.hot),
-            restore_cold_mean_us: mean_us(&self.restore_latency.cold),
-            sched_depth_max: self.sched_depth.max(),
-            recovered_rows: self.recovered_rows,
-            recovery_errors: self.spill.recovery_errors(),
-            // plan batching is engine-side; sharding telemetry is
-            // facade-side (`ShardedStore::summary` overlays both)
-            shards: 1,
-            shard_rows_min: self.entries.len() as u64,
-            shard_rows_max: self.entries.len() as u64,
-            ..super::OffloadSummary::default()
-        }
+        super::OffloadSummary::from_snapshot(&self.snapshot())
     }
 }
 

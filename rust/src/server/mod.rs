@@ -35,6 +35,22 @@ pub fn serve_blocking(cfg: EngineConfig, server: ServerConfig) -> Result<()> {
     Ok(())
 }
 
+/// Compute the one-line reply for one protocol line. Stats queries are
+/// answered inline from the process-wide metrics registry (they never
+/// queue behind generation); generations block on the coordinator.
+fn reply_for_line(line: &str, handle: &CoordinatorHandle) -> String {
+    match protocol::parse_line(line) {
+        Err(e) => protocol::error_line(&e),
+        Ok(protocol::Request::Stats) => {
+            protocol::stats_line(&crate::metrics::Registry::global().snapshot())
+        }
+        Ok(protocol::Request::Generate(params)) => match handle.generate_blocking(params) {
+            Ok(resp) => protocol::response_line(&resp),
+            Err(e) => protocol::error_line(&format!("{e}")),
+        },
+    }
+}
+
 fn handle_conn(stream: TcpStream, handle: CoordinatorHandle) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
     log::debug!("connection from {peer}");
@@ -45,13 +61,7 @@ fn handle_conn(stream: TcpStream, handle: CoordinatorHandle) -> std::io::Result<
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match protocol::parse_request(&line) {
-            Err(e) => protocol::error_line(&e),
-            Ok(params) => match handle.generate_blocking(params) {
-                Ok(resp) => protocol::response_line(&resp),
-                Err(e) => protocol::error_line(&format!("{e}")),
-            },
-        };
+        let reply = reply_for_line(&line, &handle);
         writer.write_all(reply.as_bytes())?;
         writer.flush()?;
     }

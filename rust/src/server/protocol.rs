@@ -7,9 +7,35 @@
 //!    "final_active_kv": 40, "compression": 0.47, "ttft_ms": 12.1,
 //!    "e2e_ms": 480.9}
 //! or {"error": "..."}.
+//!
+//! A stats request (one line):
+//!   {"stats": true}
+//! answers with the live metrics-registry snapshot instead of queueing
+//! a generation:
+//!   {"stats": {<metric name>: {<label set>: value, ...}, ...},
+//!    "prometheus": "<text exposition>"}
 
 use crate::coordinator::{GenParams, GenResponse};
+use crate::metrics::Snapshot;
 use crate::util::json::{parse, Json};
+
+/// One parsed protocol line: either a generation to enqueue or a stats
+/// query answered inline from the registry.
+#[derive(Debug)]
+pub enum Request {
+    Generate(GenParams),
+    Stats,
+}
+
+/// Parse any protocol line. `{"stats": true}` is recognized before
+/// generation parsing, so a prompt named "stats" is unaffected.
+pub fn parse_line(line: &str) -> Result<Request, String> {
+    let v = parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if v.get("stats").as_bool() == Some(true) {
+        return Ok(Request::Stats);
+    }
+    parse_request(line).map(Request::Generate)
+}
 
 pub fn parse_request(line: &str) -> Result<GenParams, String> {
     let v = parse(line).map_err(|e| format!("bad json: {e}"))?;
@@ -55,6 +81,19 @@ pub fn response_line(resp: &GenResponse) -> String {
             ("plan_p99_us", Json::num(resp.plan_latency.p99_us as f64)),
         ]),
     };
+    let mut s = String::new();
+    crate::util::json::write_json(&v, &mut s);
+    s.push('\n');
+    s
+}
+
+/// One-line stats reply: the snapshot as structured JSON plus the same
+/// snapshot rendered as Prometheus text exposition (embedded string).
+pub fn stats_line(snap: &Snapshot) -> String {
+    let v = Json::obj(vec![
+        ("stats", snap.to_json()),
+        ("prometheus", Json::str(snap.to_prometheus())),
+    ]);
     let mut s = String::new();
     crate::util::json::write_json(&v, &mut s);
     s.push('\n');
@@ -140,5 +179,35 @@ mod tests {
         let r = GenResponse::error(1, "boom");
         let v = parse(response_line(&r).trim()).unwrap();
         assert_eq!(v.get("error").as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn parse_line_routes_stats_and_generate() {
+        assert!(matches!(parse_line(r#"{"stats": true}"#), Ok(Request::Stats)));
+        // a prompt that merely mentions stats still generates
+        match parse_line(r#"{"prompt": "stats", "max_new": 1}"#) {
+            Ok(Request::Generate(p)) => assert_eq!(p.prompt, "stats"),
+            other => panic!("expected Generate, got {other:?}"),
+        }
+        // stats must be literally true; anything else is a generation
+        // parse (and fails on the missing prompt)
+        assert!(parse_line(r#"{"stats": 1}"#).is_err());
+        assert!(parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn stats_line_embeds_json_and_parseable_prometheus() {
+        use crate::metrics::{parse_exposition, SnapshotBuilder};
+        let mut b = SnapshotBuilder::default();
+        b.counter_add("asrkf_stash_total", &[("shard", "0")], 5);
+        b.gauge_set("asrkf_tier_rows", &[("tier", "hot"), ("shard", "0")], 3.0);
+        let snap = b.finish();
+        let line = stats_line(&snap);
+        assert!(line.ends_with('\n'));
+        let v = parse(line.trim()).unwrap();
+        let stats = v.get("stats");
+        assert!(stats.get("asrkf_stash_total").as_arr().is_some());
+        let prom = v.get("prometheus").as_str().unwrap().to_string();
+        assert!(parse_exposition(&prom).unwrap() >= 2);
     }
 }

@@ -37,6 +37,54 @@ pub fn smoke_schema_only(table: &Table, path: &str, why: &str) -> std::io::Resul
     Ok(())
 }
 
+/// RAII wall-clock timer for a named host-only bench section. Dropping
+/// it accumulates the elapsed wall-clock into the global metrics
+/// registry (`asrkf_bench_section_us{section=...}`); re-entering the
+/// same section adds up. Render the end-of-run view with
+/// [`section_summary`].
+pub struct SectionTimer {
+    name: String,
+    start: Instant,
+}
+
+/// Start timing a named bench section (ends when the guard drops).
+pub fn section(name: &str) -> SectionTimer {
+    SectionTimer { name: name.to_string(), start: Instant::now() }
+}
+
+impl Drop for SectionTimer {
+    fn drop(&mut self) {
+        let us = self.start.elapsed().as_micros() as f64;
+        crate::metrics::Registry::global()
+            .publish(|b| b.gauge_add("asrkf_bench_section_us", &[("section", &self.name)], us));
+    }
+}
+
+/// One end-of-run table of every section recorded in this process,
+/// built from the registry (not from scattered locals), sorted by
+/// accumulated wall-clock descending.
+pub fn section_summary() -> Table {
+    let snap = crate::metrics::Registry::global().snapshot();
+    let mut sections: Vec<(String, f64)> = snap
+        .gauge_series("asrkf_bench_section_us")
+        .into_iter()
+        .map(|(labels, us)| {
+            let name = labels
+                .iter()
+                .find(|(k, _)| k == "section")
+                .map(|(_, v)| v.clone())
+                .unwrap_or_default();
+            (name, us)
+        })
+        .collect();
+    sections.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    let mut t = Table::new("Host-only sections (wall-clock)", &["Section", "Wall (ms)"]);
+    for (name, us) in sections {
+        t.row(&[name, format!("{:.2}", us / 1000.0)]);
+    }
+    t
+}
+
 /// Timing statistics over a set of iterations.
 #[derive(Debug, Clone)]
 pub struct Stats {

@@ -1,7 +1,9 @@
 //! Minimal `log` facade backend: env-filtered stderr logger.
 //!
-//! Level comes from `ASRKF_LOG` (error|warn|info|debug|trace), default
-//! `info`. Installed once by binaries via `logging::init()`.
+//! Level comes from `ASRKF_LOG` (error|warn|info|debug|trace,
+//! case-insensitive), default `info`; unrecognized values fall back to
+//! `info` with a one-time warning instead of being silently ignored.
+//! Installed once by binaries via `logging::init()`.
 
 use log::{Level, LevelFilter, Log, Metadata, Record};
 use std::time::Instant;
@@ -41,15 +43,67 @@ impl Log for StderrLogger {
 
 static LOGGER: StderrLogger = StderrLogger;
 
+/// Map an `ASRKF_LOG` value to a level filter. The second field is
+/// false when the value was present but unrecognized (caller warns).
+fn parse_level(value: Option<&str>) -> (LevelFilter, bool) {
+    let raw = match value {
+        None => return (LevelFilter::Info, true),
+        Some(r) => r.trim(),
+    };
+    if raw.is_empty() {
+        return (LevelFilter::Info, true);
+    }
+    match raw.to_ascii_lowercase().as_str() {
+        "error" => (LevelFilter::Error, true),
+        "warn" => (LevelFilter::Warn, true),
+        "info" => (LevelFilter::Info, true),
+        "debug" => (LevelFilter::Debug, true),
+        "trace" => (LevelFilter::Trace, true),
+        _ => (LevelFilter::Info, false),
+    }
+}
+
 /// Install the logger (idempotent).
 pub fn init() {
-    let level = match std::env::var("ASRKF_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
-    };
+    let var = std::env::var("ASRKF_LOG").ok();
+    let (level, recognized) = parse_level(var.as_deref());
     let _ = log::set_logger(&LOGGER);
     log::set_max_level(level);
+    if !recognized {
+        static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+        WARN_ONCE.call_once(|| {
+            log::warn!(
+                "unrecognized ASRKF_LOG value {:?} (expected error|warn|info|debug|trace); defaulting to info",
+                var.as_deref().unwrap_or("")
+            );
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_levels_parse_case_insensitively() {
+        assert_eq!(parse_level(Some("error")), (LevelFilter::Error, true));
+        assert_eq!(parse_level(Some("ERROR")), (LevelFilter::Error, true));
+        assert_eq!(parse_level(Some("Warn")), (LevelFilter::Warn, true));
+        assert_eq!(parse_level(Some("DEBUG")), (LevelFilter::Debug, true));
+        assert_eq!(parse_level(Some(" trace ")), (LevelFilter::Trace, true));
+        assert_eq!(parse_level(Some("info")), (LevelFilter::Info, true));
+    }
+
+    #[test]
+    fn absent_or_empty_defaults_quietly() {
+        assert_eq!(parse_level(None), (LevelFilter::Info, true));
+        assert_eq!(parse_level(Some("")), (LevelFilter::Info, true));
+        assert_eq!(parse_level(Some("  ")), (LevelFilter::Info, true));
+    }
+
+    #[test]
+    fn unrecognized_defaults_with_flag() {
+        assert_eq!(parse_level(Some("verbose")), (LevelFilter::Info, false));
+        assert_eq!(parse_level(Some("3")), (LevelFilter::Info, false));
+    }
 }

@@ -1,0 +1,565 @@
+//! Telemetry-subsystem integration tests (artifact-free):
+//!
+//! * sharded snapshot sum — a registry snapshot published across N
+//!   shards carries the same counter totals as an unsharded oracle
+//!   store driven through the same trace;
+//! * flight-recorder reconciliation — the cause taxonomy of the
+//!   flight events count-reconciles against the store's conservation
+//!   counters (`Freeze`+`Recover` == stashed, `Restore`+`Emergency` ==
+//!   restored, `Drop`+`Supersede` == dropped);
+//! * Chrome-trace export — `--trace-out` JSON parses back, every
+//!   flight event lands on a shard track, and the decode-step segment
+//!   spans sum to the segments' accounted time;
+//! * stats plane — a `{"stats": true}` request over a real TCP socket
+//!   returns the global registry as JSON plus Prometheus text that
+//!   `parse_exposition` accepts, and the connection survives errors;
+//! * bench CSV schema — every serving-CSV column's metric exists in
+//!   the catalog (CI bench-smoke runs this against the emitted CSV).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use asrkf::config::{OffloadConfig, ShardPartition};
+use asrkf::metrics::registry::spec_for;
+use asrkf::metrics::{
+    parse_exposition, serving_csv_headers, Registry, StepSegments, StepSpan,
+    SERVING_CSV_COLUMNS,
+};
+use asrkf::offload::{ShardedStore, TieredStore};
+use asrkf::prop_assert;
+use asrkf::util::json::Json;
+use asrkf::util::prop::{prop_check, G};
+use asrkf::util::TempDir;
+
+const RF: usize = 32;
+
+fn random_row(g: &mut G) -> Vec<f32> {
+    g.vec_f32(RF, -4.0, 4.0)
+}
+
+/// Eviction-free config: residency is then a per-row rule, so sharded
+/// and unsharded stores walk identical tier states and the snapshot
+/// totals must agree exactly.
+fn ample_cfg(g: &mut G, shards: usize, partition: ShardPartition) -> OffloadConfig {
+    OffloadConfig {
+        hot_budget_bytes: 1 << 24,
+        cold_budget_bytes: 1 << 24,
+        cold_after_steps: g.usize(0, 12) as u64,
+        quantize_cold: g.bool(0.8),
+        spill_dir: None,
+        block_rows: g.usize(1, 8),
+        shards,
+        shard_partition: partition,
+        ..OffloadConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole: snapshot aggregation across shards
+
+#[test]
+fn prop_sharded_snapshot_counters_match_unsharded_sum() {
+    prop_check(10, |g| {
+        for &n in &[1usize, 2, 4] {
+            let partition =
+                if g.bool(0.5) { ShardPartition::Hash } else { ShardPartition::Range };
+            let cfg = ample_cfg(g, n, partition);
+            let mut single_cfg = cfg.clone();
+            single_cfg.shards = 1;
+            let mut sharded =
+                ShardedStore::new(RF, cfg).map_err(|e| format!("sharded new: {e}"))?;
+            let mut single = TieredStore::new(RF, single_cfg);
+            let mut resident: Vec<usize> = Vec::new();
+            let mut next_pos = 0usize;
+
+            for step in 0..80u64 {
+                match g.usize(0, 9) {
+                    // stash a batch of fresh rows (weighted heaviest)
+                    0..=3 => {
+                        let k = g.usize(1, 4);
+                        let mut items: Vec<(usize, Vec<f32>, u64)> = Vec::with_capacity(k);
+                        for _ in 0..k {
+                            let eta = step + g.usize(0, 30) as u64;
+                            items.push((next_pos, random_row(g), eta));
+                            resident.push(next_pos);
+                            next_pos += 1;
+                        }
+                        for (pos, row, eta) in &items {
+                            single
+                                .stash(*pos, row.clone(), step, *eta)
+                                .map_err(|e| format!("single stash: {e}"))?;
+                        }
+                        sharded
+                            .stash_batch(items, step)
+                            .map_err(|e| format!("sharded stash: {e}"))?;
+                    }
+                    // restore a sorted burst
+                    4..=5 => {
+                        let mut burst: Vec<usize> =
+                            resident.iter().copied().filter(|_| g.bool(0.4)).collect();
+                        burst.sort_unstable();
+                        if burst.is_empty() {
+                            continue;
+                        }
+                        resident.retain(|p| !burst.contains(p));
+                        sharded.take_batch(&burst).map_err(|e| format!("take_batch: {e}"))?;
+                        for pos in burst {
+                            single.take(pos).map_err(|e| format!("single take: {e}"))?;
+                        }
+                    }
+                    // drop a random resident row
+                    6 => {
+                        if !resident.is_empty() {
+                            let pos = resident.swap_remove(g.usize(0, resident.len() - 1));
+                            sharded.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                            single.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                        }
+                    }
+                    // prefetch staging sweep (uncapped row budget: the
+                    // per-shard cap split stays out of the picture)
+                    7..=8 => {
+                        let horizon = g.usize(0, 16) as u64;
+                        sharded
+                            .stage_upcoming(step, horizon, 10_000)
+                            .map_err(|e| format!("stage_upcoming: {e}"))?;
+                        single
+                            .stage_upcoming(step, horizon, 10_000)
+                            .map_err(|e| format!("stage_upcoming: {e}"))?;
+                    }
+                    // residency sweep
+                    _ => {
+                        sharded.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                        single.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                    }
+                }
+            }
+
+            // the N-shard snapshot's counter totals must equal the
+            // unsharded oracle's lifetime counters, summed over the
+            // per-shard label sets
+            let snap = sharded.snapshot();
+            let checks: &[(&str, &[(&str, &str)], u64)] = &[
+                ("asrkf_stash_total", &[], single.total_stashed),
+                ("asrkf_restore_total", &[], single.total_restored),
+                ("asrkf_drop_total", &[], single.total_dropped),
+                ("asrkf_staged_total", &[("result", "hit")], single.staged_hits),
+                ("asrkf_staged_total", &[("result", "miss")], single.staged_misses),
+                ("asrkf_demotion_total", &[("to", "cold")], single.demotions_cold),
+                ("asrkf_promotion_total", &[], single.prefetch_promotions),
+            ];
+            for (name, filter, want) in checks {
+                let got = snap.counter_sum(name, filter);
+                prop_assert!(
+                    got == *want,
+                    "{name}{filter:?} diverged (n={n}, {partition:?}): sharded {got} vs single {want}"
+                );
+            }
+            prop_assert!(
+                snap.gauge_sum("asrkf_shard_rows", &[]) as usize == single.len(),
+                "shard_rows gauges sum {} != resident {}",
+                snap.gauge_sum("asrkf_shard_rows", &[]),
+                single.len()
+            );
+            // the flat summary view is derived from the same snapshot
+            let summary = sharded.summary();
+            prop_assert!(
+                summary.staged_hits == single.staged_hits
+                    && summary.staged_misses == single.staged_misses
+                    && summary.shards == n as u64,
+                "OffloadSummary view diverged from snapshot (n={n})"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder: cause taxonomy reconciles with conservation
+
+fn cause_counts(store: &TieredStore) -> std::collections::HashMap<&'static str, u64> {
+    let mut counts = std::collections::HashMap::new();
+    for ev in store.flight().events() {
+        *counts.entry(ev.cause.as_str()).or_insert(0) += 1;
+    }
+    counts
+}
+
+#[test]
+fn prop_flight_causes_reconcile_with_conservation_counters() {
+    prop_check(25, |g| {
+        let cfg = OffloadConfig {
+            hot_budget_bytes: g.usize(1, 64) * RF * 4,
+            cold_budget_bytes: g.usize(1, 64) * (RF + 8),
+            cold_after_steps: g.usize(0, 12) as u64,
+            quantize_cold: g.bool(0.85),
+            spill_dir: if g.bool(0.3) {
+                Some(
+                    std::env::temp_dir()
+                        .join("asrkf-telemetry-flight")
+                        .to_string_lossy()
+                        .into_owned(),
+                )
+            } else {
+                None
+            },
+            block_rows: g.usize(1, 16),
+            ..OffloadConfig::default()
+        };
+        let mut store = TieredStore::new(RF, cfg);
+        let mut resident: Vec<usize> = Vec::new();
+        let mut next_pos = 0usize;
+        for step in 0..100u64 {
+            match g.usize(0, 9) {
+                0..=4 => {
+                    let eta = step + g.usize(0, 30) as u64;
+                    store
+                        .stash(next_pos, random_row(g), step, eta)
+                        .map_err(|e| format!("stash: {e}"))?;
+                    resident.push(next_pos);
+                    next_pos += 1;
+                }
+                5..=6 => {
+                    if !resident.is_empty() {
+                        let pos = resident.swap_remove(g.usize(0, resident.len() - 1));
+                        store.take(pos).map_err(|e| format!("take: {e}"))?;
+                    }
+                }
+                7 => {
+                    if !resident.is_empty() {
+                        store
+                            .drop_row(resident.swap_remove(g.usize(0, resident.len() - 1)))
+                            .map_err(|e| format!("drop: {e}"))?;
+                    }
+                }
+                8 => {
+                    store
+                        .stage_upcoming(step, g.usize(0, 16) as u64, g.usize(0, 8))
+                        .map_err(|e| format!("stage: {e}"))?;
+                }
+                _ => store.on_step(step).map_err(|e| format!("on_step: {e}"))?,
+            }
+        }
+        // emergency drain exercises the fourth restore cause
+        store.drain_all().map_err(|e| format!("drain: {e}"))?;
+
+        // nothing wrapped (default cap far above this trace), so the
+        // retained ring is the complete history
+        prop_assert!(
+            store.flight().dropped() == 0,
+            "{} events evicted below the default cap",
+            store.flight().dropped()
+        );
+        let counts = cause_counts(&store);
+        let c = |k: &str| counts.get(k).copied().unwrap_or(0);
+        prop_assert!(
+            c("freeze") + c("recover") == store.total_stashed,
+            "freeze {} + recover {} != stashed {}",
+            c("freeze"),
+            c("recover"),
+            store.total_stashed
+        );
+        prop_assert!(
+            c("restore") + c("emergency") == store.total_restored,
+            "restore {} + emergency {} != restored {}",
+            c("restore"),
+            c("emergency"),
+            store.total_restored
+        );
+        prop_assert!(
+            c("drop") + c("supersede") == store.total_dropped,
+            "drop {} + supersede {} != dropped {}",
+            c("drop"),
+            c("supersede"),
+            store.total_dropped
+        );
+        // ordering: seq strictly increasing, timestamps monotone
+        let evs: Vec<_> = store.flight().events().collect();
+        for w in evs.windows(2) {
+            prop_assert!(w[0].seq < w[1].seq, "seq order broken");
+            prop_assert!(w[0].ts_us <= w[1].ts_us, "timestamp order broken");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn flight_ring_wraps_through_store_config() {
+    let cfg = OffloadConfig {
+        hot_budget_bytes: 1 << 24,
+        cold_budget_bytes: 1 << 24,
+        quantize_cold: false,
+        spill_dir: None,
+        flight_recorder_cap: 4,
+        ..OffloadConfig::default()
+    };
+    let mut store = TieredStore::new(RF, cfg);
+    for pos in 0..10usize {
+        store.stash(pos, vec![0.5; RF], 0, 100).unwrap();
+    }
+    let f = store.flight();
+    assert_eq!(f.len(), 4, "ring must retain exactly the configured cap");
+    assert_eq!(f.recorded(), 10);
+    assert_eq!(f.dropped(), 6, "evictions must be visible, not silent");
+    let kept: Vec<usize> = f.events().map(|e| e.pos).collect();
+    assert_eq!(kept, vec![6, 7, 8, 9], "oldest events evicted first");
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace export reconciles against the store totals
+
+#[test]
+fn chrome_trace_reconciles_against_conservation_totals() {
+    let cfg = OffloadConfig {
+        hot_budget_bytes: 1 << 24,
+        cold_budget_bytes: 1 << 24,
+        cold_after_steps: 2,
+        quantize_cold: true,
+        spill_dir: None,
+        shards: 2,
+        shard_partition: ShardPartition::Hash,
+        ..OffloadConfig::default()
+    };
+    let mut store = ShardedStore::new(RF, cfg).unwrap();
+    let items: Vec<(usize, Vec<f32>, u64)> =
+        (0..24).map(|pos| (pos, vec![pos as f32; RF], 3 + (pos as u64 % 7))).collect();
+    store.stash_batch(items, 0).unwrap();
+    store.take_batch(&[0, 1, 2, 3, 8, 9]).unwrap();
+    store.drop_row(4).unwrap();
+    store.drop_row(5).unwrap();
+    store.stage_upcoming(1, 4, 8).unwrap();
+    store.on_step(2).unwrap();
+
+    let events = store.flight_events();
+    assert!(!events.is_empty());
+    assert_eq!(store.flight_dropped(), 0);
+
+    // fabricated decode-step spans (the engine builds these from its
+    // per-step trace; the writer must preserve their durations)
+    let steps: Vec<StepSpan> = (0..3)
+        .map(|i| StepSpan {
+            step: i,
+            start_us: 1_000 * i,
+            plan_us: 100,
+            restore_us: 50,
+            freeze_us: 30,
+            compute_us: 200,
+        })
+        .collect();
+
+    let dir = TempDir::new("telemetry-trace").unwrap();
+    let path = dir.path().join("trace.json").to_string_lossy().into_owned();
+    asrkf::metrics::write_chrome_trace(&path, &events, &steps).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = asrkf::util::json::parse(&text).unwrap();
+    let trace = doc.get("traceEvents").as_arr().expect("traceEvents array").clone();
+
+    // every flight event appears exactly once on a shard track
+    let shard_instants: Vec<&Json> = trace
+        .iter()
+        .filter(|e| {
+            e.get("ph").as_str() == Some("i")
+                && e.get("tid").as_f64().map(|t| t >= 100.0).unwrap_or(false)
+        })
+        .collect();
+    assert_eq!(shard_instants.len(), events.len(), "one shard-track instant per event");
+
+    // cause categories on the shard tracks reconcile with the store's
+    // conservation counters (no recover/supersede in this trace)
+    let cat = |name: &str| -> u64 {
+        shard_instants.iter().filter(|e| e.get("cat").as_str() == Some(name)).count() as u64
+    };
+    assert_eq!(cat("freeze") + cat("recover"), store.total_stashed());
+    assert_eq!(cat("restore") + cat("emergency"), store.total_restored());
+    assert_eq!(cat("drop") + cat("supersede"), store.total_dropped());
+
+    // tier tracks carry the same events, keyed by destination tier
+    let tier_instants = trace
+        .iter()
+        .filter(|e| {
+            e.get("ph").as_str() == Some("i")
+                && e.get("tid").as_f64().map(|t| t < 100.0).unwrap_or(false)
+        })
+        .count();
+    assert_eq!(tier_instants, events.len(), "one tier-track instant per event");
+
+    // the decode-step track preserves every nonzero segment duration
+    let spans: Vec<&Json> =
+        trace.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
+    assert_eq!(spans.len(), 4 * steps.len(), "plan/restore/freeze/compute per step");
+    let dur_sum: f64 = spans.iter().filter_map(|e| e.get("dur").as_f64()).sum();
+    assert_eq!(dur_sum as u64, 3 * (100 + 50 + 30 + 200));
+    for name in ["plan", "restore", "freeze", "compute"] {
+        assert!(
+            spans.iter().any(|e| e.get("name").as_str() == Some(name)),
+            "missing {name} segment track"
+        );
+    }
+
+    // the summary view over the same store agrees with the trace
+    let summary = store.summary();
+    assert_eq!(
+        summary.restores_hot + summary.restores_cold + summary.restores_spill,
+        store.total_restored(),
+        "restore latency histograms must cover every restore"
+    );
+
+    // flight events reconcile with Freeze cause == stash total even
+    // after re-sorting (merged stream is (ts, seq)-ordered)
+    for w in events.windows(2) {
+        assert!(
+            (w[0].1.ts_us, w[0].1.seq) <= (w[1].1.ts_us, w[1].1.seq),
+            "merged flight stream out of order"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats plane: TCP round-trip against the global registry
+
+#[test]
+fn stats_request_round_trips_over_tcp() {
+    use asrkf::server::protocol::{self, Request};
+
+    // seed the process-global registry under a label value no other
+    // test uses, so parallel tests in this binary cannot interfere
+    let mut store = TieredStore::new(
+        RF,
+        OffloadConfig {
+            hot_budget_bytes: 1 << 24,
+            cold_budget_bytes: 1 << 24,
+            quantize_cold: false,
+            spill_dir: None,
+            ..OffloadConfig::default()
+        },
+    );
+    for pos in 0..9usize {
+        store.stash(pos, vec![1.0; RF], 0, 50).unwrap();
+    }
+    store.take(0).unwrap();
+    store.take(1).unwrap();
+    store.drop_row(2).unwrap();
+    Registry::global().publish(|b| store.publish_flows(b, 7777));
+
+    // a stats-only accept loop wired from the same protocol pieces the
+    // real server uses (serve_blocking never returns; generation needs
+    // artifacts, so the generate arm answers with an error line)
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let stream = conn.unwrap();
+            std::thread::spawn(move || {
+                let mut writer = stream.try_clone().unwrap();
+                let reader = BufReader::new(stream);
+                for line in reader.lines() {
+                    let line = line.unwrap();
+                    let reply = match protocol::parse_line(&line) {
+                        Err(e) => protocol::error_line(&e),
+                        Ok(Request::Stats) => {
+                            protocol::stats_line(&Registry::global().snapshot())
+                        }
+                        Ok(Request::Generate(_)) => {
+                            protocol::error_line("generation disabled in telemetry test")
+                        }
+                    };
+                    writer.write_all(reply.as_bytes()).unwrap();
+                }
+            });
+        }
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    writer.write_all(b"{\"stats\": true}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let v = asrkf::util::json::parse(resp.trim()).unwrap();
+
+    // JSON plane: the per-shard counter series carries the exact store totals
+    let find = |name: &str| -> Option<f64> {
+        v.get("stats").get(name).as_arr().and_then(|arr| {
+            arr.iter()
+                .find(|e| e.get("labels").get("shard").as_str() == Some("7777"))
+                .and_then(|e| e.get("value").as_f64())
+        })
+    };
+    assert_eq!(find("asrkf_stash_total"), Some(store.total_stashed as f64), "{resp}");
+    assert_eq!(find("asrkf_restore_total"), Some(store.total_restored as f64));
+    assert_eq!(find("asrkf_drop_total"), Some(store.total_dropped as f64));
+
+    // Prometheus plane: embedded text parses and carries the series
+    let prom = v.get("prometheus").as_str().expect("prometheus text").to_string();
+    let samples = parse_exposition(&prom).expect("prometheus text must parse");
+    assert!(samples >= 3, "only {samples} prometheus samples");
+    assert!(prom.contains("asrkf_stash_total{shard=\"7777\"}"), "{prom}");
+
+    // a malformed line answers with an error and keeps the connection
+    writer.write_all(b"not json\n").unwrap();
+    let mut resp2 = String::new();
+    reader.read_line(&mut resp2).unwrap();
+    assert!(resp2.contains("error"));
+
+    writer.write_all(b"{\"stats\": true}\n").unwrap();
+    let mut resp3 = String::new();
+    reader.read_line(&mut resp3).unwrap();
+    let v3 = asrkf::util::json::parse(resp3.trim()).unwrap();
+    assert!(v3.get("stats").get("asrkf_stash_total").as_arr().is_some());
+}
+
+// ---------------------------------------------------------------------------
+// Bench CSV schema stays anchored to the catalog (run in CI bench-smoke)
+
+#[test]
+fn serving_csv_schema_is_catalog_consistent() {
+    for col in SERVING_CSV_COLUMNS {
+        if !col.metric.is_empty() {
+            assert!(
+                spec_for(col.metric).is_some(),
+                "CSV column {:?} references unknown metric {:?}",
+                col.header,
+                col.metric
+            );
+        }
+    }
+    let headers = serving_csv_headers();
+    assert_eq!(headers.len(), SERVING_CSV_COLUMNS.len());
+    assert_eq!(headers[0], "Mode");
+
+    // when the bench has produced its CSV (CI bench-smoke runs the
+    // bench first), the emitted header row must match the schema
+    if let Ok(text) = std::fs::read_to_string("artifacts/serving_throughput.csv") {
+        let first = text.lines().next().unwrap_or("");
+        assert_eq!(first, headers.join(","), "serving_throughput.csv header drifted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Step-segment accounting
+
+#[test]
+fn step_segments_account_for_wall_clock() {
+    // segments built by the engine partition the measured wall-clock
+    // exactly; the acceptance bound is 5%, exactness is by construction
+    let seg = StepSegments {
+        steps: 3,
+        plan_us: 100,
+        restore_us: 50,
+        compute_us: 800,
+        freeze_us: 50,
+        wall_us: 1000,
+    };
+    assert_eq!(seg.accounted_us(), 1000);
+    assert!((seg.coverage() - 1.0).abs() < f64::EPSILON);
+
+    // a lossy attribution still clears the acceptance threshold check
+    let lossy = StepSegments { wall_us: 1040, ..seg };
+    assert!(lossy.coverage() >= 0.95, "coverage {}", lossy.coverage());
+
+    // zero measured wall-clock counts as fully covered (no div-by-zero)
+    let empty = StepSegments::default();
+    assert_eq!(empty.accounted_us(), 0);
+    assert!((empty.coverage() - 1.0).abs() < f64::EPSILON);
+}
