@@ -34,15 +34,19 @@ use asrkf::workload::trace::poisson_trace;
 
 const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
 
-/// Aggregate per-request offload summaries into the nine CSV columns:
-/// per-request peak hot/cold KB (the max high-water mark any single
-/// session reached — summing peaks of sessions that never coexisted
-/// would overstate the footprint), staged-hit %, mean hot / cold
-/// restore µs weighted by restore count, the restore-batching pair
-/// (rows restored / spans copied — spans << rows is the coalescing
-/// win), the restore-parallelism high-water mark across sessions, and
-/// rows re-attached from a persistent spill directory at resume.
-fn offload_columns(summaries: &[OffloadSummary]) -> [String; 9] {
+/// Aggregate per-request offload summaries into the eleven CSV
+/// columns: per-request peak hot/cold KB (the max high-water mark any
+/// single session reached — summing peaks of sessions that never
+/// coexisted would overstate the footprint), staged-hit %, mean hot /
+/// cold restore µs weighted by restore count, the restore-batching
+/// pair (rows restored / spans copied — spans << rows is the
+/// coalescing win), the restore-parallelism high-water mark across
+/// sessions, rows re-attached from a persistent spill directory at
+/// resume, and the pipelined-restore pair: total µs the decode path
+/// blocked on in-flight speculative reads plus the takes that arrived
+/// before their read finished (both 0 with the pipeline off or fully
+/// hidden I/O).
+fn offload_columns(summaries: &[OffloadSummary]) -> [String; 11] {
     let peak_hot: usize =
         summaries.iter().map(|s| s.occupancy.peak_hot_bytes).max().unwrap_or(0);
     let peak_cold: usize =
@@ -66,6 +70,8 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 9] {
     let batch_spans: u64 = summaries.iter().map(|s| s.restore_batch_spans).sum();
     let par_max: u64 = summaries.iter().map(|s| s.restore_parallelism_max).max().unwrap_or(0);
     let recovered: u64 = summaries.iter().map(|s| s.recovered_rows).sum();
+    let restore_wait: u64 = summaries.iter().map(|s| s.restore_wait_us).sum();
+    let late: u64 = summaries.iter().map(|s| s.late_arrivals).sum();
     [
         format!("{:.1}", peak_hot as f64 / 1024.0),
         format!("{:.1}", peak_cold as f64 / 1024.0),
@@ -76,6 +82,8 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 9] {
         batch_spans.to_string(),
         par_max.to_string(),
         recovered.to_string(),
+        restore_wait.to_string(),
+        late.to_string(),
     ]
 }
 
@@ -142,6 +150,80 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
         ];
         cells.extend(offload_columns(&[sum]));
         cells.extend(plan_columns(&[])); // no decode steps: policy never ran
+        table.row(&cells);
+    }
+    Ok(())
+}
+
+/// Host-only pipelined-restore microbench: the same cold-burst shape
+/// as `sharded_burst_rows`, but with rows stashed at the edge of the
+/// speculation horizon and a `pipeline_advance` step boundary plus
+/// host "decode" work between stash and restore — so with the
+/// pipeline ON the speculative reads run overlapped with the host
+/// work and `take_batch` drains landed copies, while the OFF row pays
+/// the same dequantization inline. The two rows differ only in the
+/// `--no-restore-pipeline` switch; `restore wait (us)` / `late
+/// arrivals` quantify how much tier I/O the overlap failed to hide.
+fn pipelined_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error>> {
+    const ROW_FLOATS: usize = 512; // 2 KB rows
+    let waves = bench::smoke_size(24, 4);
+    let burst = bench::smoke_size(256, 64);
+    for &pipeline in &[true, false] {
+        let label = if pipeline { "pipelined burst (on)" } else { "pipelined burst (off)" };
+        let _section = bench::section(&format!("pipelined burst on={pipeline}"));
+        let cfg = asrkf::config::OffloadConfig {
+            cold_after_steps: 4,
+            prefetch_ahead: 4,
+            shards: 4,
+            shard_partition: ShardPartition::Hash,
+            pipeline,
+            stage_burst_rows: burst,
+            ..Default::default()
+        };
+        let mut store = ShardedStore::new(ROW_FLOATS, cfg)?;
+        let row: Vec<f32> = (0..ROW_FLOATS).map(|i| (i as f32 * 0.37).sin()).collect();
+        let t0 = Instant::now();
+        let mut e2e_sum = 0.0f64;
+        let mut restored = 0usize;
+        let mut sink = 0.0f32;
+        for wave in 0..waves {
+            let step = wave as u64;
+            let base = wave * burst;
+            let positions: Vec<usize> = (base..base + burst).collect();
+            let items: Vec<(usize, Vec<f32>, u64)> = positions
+                .iter()
+                // thaw eta exactly cold_after_steps out: admitted
+                // straight to cold, yet due within prefetch_ahead
+                .map(|&p| (p, row.clone(), step + 4))
+                .collect();
+            store.stash_batch(items, step)?;
+            // step boundary: speculative reads launch here (no-op off)
+            store.pipeline_advance(step)?;
+            // the "decode step" the tier I/O should hide behind
+            for i in 0..200_000u32 {
+                sink = std::hint::black_box(sink * 0.999_9 + i as f32 * 1e-9);
+            }
+            let t1 = Instant::now();
+            let got = store.take_batch(&positions)?;
+            e2e_sum += t1.elapsed().as_secs_f64() * 1000.0;
+            restored += got.iter().filter(|p| p.is_some()).count();
+        }
+        // flush the final wave's wait sample into the histogram
+        store.pipeline_advance(waves as u64)?;
+        let wall = t0.elapsed();
+        let sum = store.summary();
+        std::hint::black_box(sink);
+        let mut cells = vec![
+            label.to_string(),
+            "4".to_string(),
+            waves.to_string(),
+            restored.to_string(),
+            format!("{:.2}s", wall.as_secs_f64()),
+            format!("{:.1}", restored as f64 / wall.as_secs_f64()),
+            format!("{:.1}", e2e_sum / waves as f64),
+        ];
+        cells.extend(offload_columns(&[sum]));
+        cells.extend(plan_columns(&[])); // host-only: policy never ran
         table.row(&cells);
     }
     Ok(())
@@ -313,6 +395,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     sharded_burst_rows(&mut table)?;
+    pipelined_burst_rows(&mut table)?;
     persistent_recovery_rows(&mut table)?;
 
     if let Err(e) = runtime_rows(&mut table, n_req, max_new) {
@@ -330,7 +413,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     bench::section_summary().print();
     println!(
         "\nsharding claim: `restore par` > 1 for Shards > 1 — restore bursts split at shard \
-         boundaries and execute on the worker pool in parallel"
+         boundaries and execute on the worker pool in parallel\n\
+         pipeline claim: compare the `pipelined burst (on)` vs `(off)` rows — `mean e2e` drops \
+         when speculative reads overlap the host work, and `restore wait (us)` / `late arrivals` \
+         bound the tier I/O the overlap failed to hide"
     );
     Ok(())
 }

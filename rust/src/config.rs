@@ -195,6 +195,29 @@ pub struct OffloadConfig {
     /// tier-transition events kept for `--trace-out`; per shard).
     /// 0 disables recording.
     pub flight_recorder_cap: usize,
+    /// Overlapped restore pipeline (`--no-restore-pipeline` disables):
+    /// at each step boundary the store speculatively submits the next
+    /// `prefetch_ahead` steps' likely restores (eta-index query) to the
+    /// worker pool, so spill reads and dequantization execute while the
+    /// decode step computes; `take_batch` then consumes the landed rows
+    /// instead of paying the tier I/O inline.
+    pub pipeline: bool,
+    /// Stall cap for the pipeline's late-arrival path, in steps: a
+    /// speculative job still in flight this many steps after issue is
+    /// reclaimed (blocking), and a landed row not consumed within this
+    /// many steps is cancelled (its next restore runs synchronously).
+    /// Bounded to >= 1 at config parse.
+    pub restore_deadline_steps: u64,
+    /// Cap on rows promoted per pressure-staging burst, and the global
+    /// row budget of each speculative pipeline issue (split
+    /// `ceil(rows / shards)` per shard). Bounded to [1, 65536] at
+    /// config parse.
+    pub stage_burst_rows: usize,
+    /// Test-only fault injection: per-row artificial delay (µs) inside
+    /// speculative pipeline reads, to force late arrivals and
+    /// cancellations in equivalence tests. 0 (the default) disables it;
+    /// intentionally not exposed as a CLI flag.
+    pub pipeline_test_delay_us: u64,
 }
 
 impl Default for OffloadConfig {
@@ -215,6 +238,10 @@ impl Default for OffloadConfig {
             shards: 1,
             shard_partition: ShardPartition::Hash,
             flight_recorder_cap: 4096,
+            pipeline: true,
+            restore_deadline_steps: 4,
+            stage_burst_rows: 64,
+            pipeline_test_delay_us: 0,
         }
     }
 }
@@ -239,6 +266,20 @@ impl OffloadConfig {
             shards: args.usize_in("shards", d.shards, 1, crate::offload::MAX_SHARDS)?,
             shard_partition: ShardPartition::parse(&args.str_or("shard-partition", "hash"))?,
             flight_recorder_cap: args.usize_or("flight-recorder-cap", d.flight_recorder_cap)?,
+            pipeline: !args.bool("no-restore-pipeline"),
+            restore_deadline_steps: {
+                let v = args.u64_or("restore-deadline-steps", d.restore_deadline_steps)?;
+                if v == 0 {
+                    return Err(
+                        "--restore-deadline-steps: 0 would reclaim every speculative job \
+                         at the very next step (minimum is 1)"
+                            .to_string(),
+                    );
+                }
+                v
+            },
+            stage_burst_rows: args.usize_in("stage-burst-rows", d.stage_burst_rows, 1, 65536)?,
+            pipeline_test_delay_us: d.pipeline_test_delay_us,
         })
     }
 
@@ -423,6 +464,38 @@ mod tests {
         let o = OffloadConfig::from_args(&a).unwrap();
         assert_eq!(o.flight_recorder_cap, 0);
         assert_eq!(o.partitioned(2, 1).flight_recorder_cap, 0, "partition carries the cap");
+    }
+
+    #[test]
+    fn pipeline_flags_parse_and_bound() {
+        let d = OffloadConfig::default();
+        assert!(d.pipeline, "restore pipeline is on by default");
+        assert_eq!(d.restore_deadline_steps, 4);
+        assert_eq!(d.stage_burst_rows, 64);
+        assert_eq!(d.pipeline_test_delay_us, 0, "fault injection is test-only");
+
+        let a = args(&[
+            "gen",
+            "--no-restore-pipeline",
+            "--restore-deadline-steps",
+            "9",
+            "--stage-burst-rows",
+            "128",
+        ]);
+        let o = OffloadConfig::from_args(&a).unwrap();
+        assert!(!o.pipeline);
+        assert_eq!(o.restore_deadline_steps, 9);
+        assert_eq!(o.stage_burst_rows, 128);
+        assert_eq!(o.partitioned(2, 0).stage_burst_rows, 128, "partition carries the burst");
+        assert!(!o.partitioned(2, 1).pipeline, "partition carries the pipeline switch");
+
+        // parse-time sanity bounds
+        let zero_deadline = args(&["gen", "--restore-deadline-steps", "0"]);
+        assert!(OffloadConfig::from_args(&zero_deadline).is_err());
+        let zero_burst = args(&["gen", "--stage-burst-rows", "0"]);
+        assert!(OffloadConfig::from_args(&zero_burst).is_err());
+        let huge_burst = args(&["gen", "--stage-burst-rows", "65537"]);
+        assert!(OffloadConfig::from_args(&huge_burst).is_err());
     }
 
     #[test]

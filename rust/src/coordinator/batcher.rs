@@ -356,6 +356,12 @@ impl BatchEngine {
             if sess.is_done() {
                 let e2e = now - slot.arrived;
                 self.e2e_hist.record(e2e);
+                // land in-flight speculative restores before reading
+                // the retiring store's counters — a shard out with a
+                // worker is invisible to the aggregates below
+                if let Err(e) = sess.store.settle() {
+                    log::error!("slot {i}: settling restore pipeline at retirement: {e}");
+                }
                 // fold the retiring session's offload telemetry into
                 // the engine-wide aggregates and the process registry
                 // (flows only: the retiring store's gauges are stale by

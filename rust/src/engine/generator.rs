@@ -191,6 +191,10 @@ impl<'rt> Generator<'rt> {
             }
         }
 
+        // land any speculative restores still in flight so the final
+        // counters, gauges, and flight timeline below are complete
+        session.store.settle()?;
+
         let trace = session.trace.clone();
         let (mut sum_active, mut peak) = (0u64, 0usize);
         for t in &trace {

@@ -17,9 +17,6 @@ use crate::offload::{OffloadSummary, ShardedStore};
 use crate::recovery::{Action, EntropyMonitor, RecoveryLadder};
 use crate::runtime::CallTiming;
 
-/// Cap on rows promoted per pressure-staging burst.
-const STAGE_BURST_ROWS: usize = 64;
-
 /// One decode step's trace record (drives Figure 1 and §Perf).
 #[derive(Debug, Clone, Copy)]
 pub struct StepRecord {
@@ -73,12 +70,13 @@ pub struct Session {
     /// matching `observe` time in [`Session::absorb`]
     plan_time_pending: Duration,
     /// cumulative step-segment attribution; `coverage()` is exactly 1
-    /// because the four segments partition the measured wall-clock
+    /// because the five segments partition the measured wall-clock
     pub segments: StepSegments,
     /// per-step wall-clock distribution (feeds `asrkf_step_us`)
     step_hist: Histogram,
     seg_plan_hist: Histogram,
     seg_restore_hist: Histogram,
+    seg_wait_hist: Histogram,
     seg_compute_hist: Histogram,
     seg_freeze_hist: Histogram,
     /// timestamps staged by `apply_plan` on the flight-recorder
@@ -88,6 +86,9 @@ pub struct Session {
     seg_plan_us: u64,
     seg_restore_us: u64,
     seg_freeze_us: u64,
+    /// wall time `apply_plan` spent blocked on in-flight speculative
+    /// restores, carved out of the restore/freeze segments above
+    seg_wait_us: u64,
     /// sampler stream positions indexed by generated-token count (RR rewind)
     draws_at: Vec<u64>,
     s_capacity: usize,
@@ -192,6 +193,7 @@ impl Session {
             step_hist: Histogram::default(),
             seg_plan_hist: Histogram::default(),
             seg_restore_hist: Histogram::default(),
+            seg_wait_hist: Histogram::default(),
             seg_compute_hist: Histogram::default(),
             seg_freeze_hist: Histogram::default(),
             seg_start_us: 0,
@@ -199,6 +201,7 @@ impl Session {
             seg_plan_us: 0,
             seg_restore_us: 0,
             seg_freeze_us: 0,
+            seg_wait_us: 0,
             draws_at: Vec::new(),
             s_capacity,
         })
@@ -289,6 +292,10 @@ impl Session {
             }
             self.batch.record_restore(plan.restore.len(), runs.len());
         }
+        // time blocked on in-flight speculative reads is reported as
+        // restore *wait*, not restore work (clamped so the segments
+        // still partition the wall clock exactly)
+        let w_restore = self.store.take_wait_us();
         let s2 = now_us();
 
         if !plan.freeze.is_empty() {
@@ -319,14 +326,18 @@ impl Session {
             }
             self.batch.record_freeze(plan.freeze.len(), runs.len());
         }
+        let w_freeze = self.store.take_wait_us();
         let s3 = now_us();
         // stage this step's attribution for the matching `absorb`:
         // everything between s3 and absorb's entry is the engine's
         // compute (upload + execute + download + sampling glue)
+        let w_restore = w_restore.min(s2 - s1);
+        let w_freeze = w_freeze.min(s3 - s2);
         self.seg_start_us = s0;
         self.seg_plan_us = s1 - s0;
-        self.seg_restore_us = s2 - s1;
-        self.seg_freeze_us = s3 - s2;
+        self.seg_restore_us = (s2 - s1) - w_restore;
+        self.seg_freeze_us = (s3 - s2) - w_freeze;
+        self.seg_wait_us = w_restore + w_freeze;
         self.seg_mid_us = s3;
         Ok(())
     }
@@ -369,6 +380,11 @@ impl Session {
                 "asrkf_step_segment_us",
                 &[("segment", "restore")],
                 &self.seg_restore_hist,
+            );
+            b.time_merge(
+                "asrkf_step_segment_us",
+                &[("segment", "restore_wait")],
+                &self.seg_wait_hist,
             );
             b.time_merge(
                 "asrkf_step_segment_us",
@@ -448,12 +464,20 @@ impl Session {
         // the policy's hints (filtered to thaws due within it) and the
         // store-driven sweep under entropy pressure.
         let ocfg = self.store.config();
-        let (stage_pressure, prefetch_ahead) = (ocfg.stage_pressure, ocfg.prefetch_ahead);
+        let (stage_pressure, prefetch_ahead, stage_burst) =
+            (ocfg.stage_pressure, ocfg.prefetch_ahead, ocfg.stage_burst_rows);
+        // dedupe hints against work already done or in progress: a row
+        // staged hot, landed, or out on a speculative read gains
+        // nothing from another promotion attempt
         let hints: Vec<(usize, u64)> = plan
             .prefetch
             .iter()
             .copied()
-            .filter(|&(_, eta)| eta <= self.step.saturating_add(prefetch_ahead))
+            .filter(|&(pos, eta)| {
+                eta <= self.step.saturating_add(prefetch_ahead)
+                    && !self.store.spec_busy(pos)
+                    && !self.store.is_staged(pos)
+            })
             .collect();
         let b0 = now_us();
         self.store.stage(&hints)?;
@@ -461,36 +485,54 @@ impl Session {
             // the monitor trends toward (or hit) a recovery trigger:
             // recovery unfreezes restore soonest-thaw-first, so stage a
             // broader burst ahead of them
-            self.store.stage_upcoming(self.step, prefetch_ahead, STAGE_BURST_ROWS)?;
+            self.store.stage_upcoming(self.step, prefetch_ahead, stage_burst)?;
         }
+        let w_stage = self.store.take_wait_us();
         let b1 = now_us();
         self.store.on_step(self.step)?;
+        let w_sweep = self.store.take_wait_us();
         let c1 = now_us();
+        // drive the restore pipeline at the step boundary: land
+        // completed speculative reads, expire stale copies, and issue
+        // the next horizon's reads to overlap with the coming step
+        self.store.pipeline_advance(self.step)?;
+        let w_advance = self.store.take_wait_us();
 
         // segment attribution: staging counts as restore work, the
-        // per-step sweep as freeze work, and the absorb remainder
-        // (observe + monitor + bookkeeping) as plan/control-plane time.
-        // The four segments partition [seg_start_us, end] exactly.
+        // per-step sweep as freeze work, blocked-on-landing time as
+        // restore wait, and the absorb remainder (observe + monitor +
+        // bookkeeping) as plan/control-plane time. The five segments
+        // partition [seg_start_us, end] exactly.
         let end = now_us();
         let (start, mid) =
             if self.seg_mid_us == 0 { (a0, a0) } else { (self.seg_start_us, self.seg_mid_us) };
+        // carve blocked-on-landing time out of its enclosing segment
+        // (clamped to it, so the five segments still partition the
+        // wall clock exactly)
+        let w_stage = w_stage.min(b1 - b0);
+        let w_sweep = w_sweep.min(c1 - b1);
+        let plan_remainder = (end - a0) - (b1 - b0) - (c1 - b1);
+        let w_advance = w_advance.min(plan_remainder);
         let span = StepSpan {
             step: self.step,
             start_us: start,
-            plan_us: self.seg_plan_us + (end - a0) - (b1 - b0) - (c1 - b1),
-            restore_us: self.seg_restore_us + (b1 - b0),
-            freeze_us: self.seg_freeze_us + (c1 - b1),
+            plan_us: self.seg_plan_us + plan_remainder - w_advance,
+            restore_us: self.seg_restore_us + (b1 - b0) - w_stage,
+            restore_wait_us: self.seg_wait_us + w_stage + w_sweep + w_advance,
+            freeze_us: self.seg_freeze_us + (c1 - b1) - w_sweep,
             compute_us: a0 - mid,
         };
         self.segments.steps += 1;
         self.segments.plan_us += span.plan_us;
         self.segments.restore_us += span.restore_us;
+        self.segments.restore_wait_us += span.restore_wait_us;
         self.segments.compute_us += span.compute_us;
         self.segments.freeze_us += span.freeze_us;
         self.segments.wall_us += end - start;
         self.step_hist.record(Duration::from_micros(end - start));
         self.seg_plan_hist.record(Duration::from_micros(span.plan_us));
         self.seg_restore_hist.record(Duration::from_micros(span.restore_us));
+        self.seg_wait_hist.record(Duration::from_micros(span.restore_wait_us));
         self.seg_compute_hist.record(Duration::from_micros(span.compute_us));
         self.seg_freeze_hist.record(Duration::from_micros(span.freeze_us));
         self.seg_start_us = 0;
@@ -498,6 +540,7 @@ impl Session {
         self.seg_plan_us = 0;
         self.seg_restore_us = 0;
         self.seg_freeze_us = 0;
+        self.seg_wait_us = 0;
 
         self.trace.push(StepRecord {
             step: self.step,

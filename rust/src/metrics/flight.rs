@@ -13,6 +13,12 @@
 //! * `Freeze` + `Recover` events  == `total_stashed`
 //! * `Restore` + `Emergency` events == `total_restored`
 //! * `Drop` + `Supersede` events  == `total_dropped`
+//!
+//! The speculative restore pipeline's lifecycle causes (`SpecIssue` /
+//! `SpecLand` / `SpecCancel`) sit deliberately outside those groups:
+//! speculation is a cache fill, not a tier transition, so it must not
+//! perturb the conservation reconciliation. They render on their own
+//! trace track so overlap with the decode-step track is visible.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -49,6 +55,13 @@ pub enum Cause {
     Drop,
     /// stale recovered copy superseded by a fresh freeze
     Supersede,
+    /// speculative restore submitted to the worker pool
+    SpecIssue,
+    /// speculative restore landed in the staging buffer
+    SpecLand,
+    /// speculative restore cancelled (superseded row, stale
+    /// generation, or deadline expiry before consumption)
+    SpecCancel,
 }
 
 impl Cause {
@@ -63,7 +76,17 @@ impl Cause {
             Cause::Emergency => "emergency",
             Cause::Drop => "drop",
             Cause::Supersede => "supersede",
+            Cause::SpecIssue => "spec-issue",
+            Cause::SpecLand => "spec-land",
+            Cause::SpecCancel => "spec-cancel",
         }
+    }
+
+    /// Whether this is a speculative-pipeline lifecycle event (rendered
+    /// on the dedicated speculative trace track, excluded from the
+    /// conservation reconciliation).
+    pub fn is_spec(&self) -> bool {
+        matches!(self, Cause::SpecIssue | Cause::SpecLand | Cause::SpecCancel)
     }
 }
 
@@ -154,15 +177,19 @@ impl FlightRecorder {
 }
 
 /// Per-step segment attribution used for the trace's decode-step
-/// track: four sequential `ph:"X"` spans (plan -> restore -> freeze ->
-/// compute) anchored at the step's start time. Built by the engine
-/// from its per-step trace records.
+/// track: five sequential `ph:"X"` spans (plan -> restore -> restore
+/// wait -> freeze -> compute) anchored at the step's start time. Built
+/// by the engine from its per-step trace records. `restore_wait_us` is
+/// the time the step spent *blocked* reclaiming speculative pipeline
+/// jobs — with the pipeline doing its job it stays near zero while the
+/// speculative track shows the same I/O overlapping compute.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepSpan {
     pub step: u64,
     pub start_us: u64,
     pub plan_us: u64,
     pub restore_us: u64,
+    pub restore_wait_us: u64,
     pub freeze_us: u64,
     pub compute_us: u64,
 }
@@ -176,6 +203,10 @@ fn tier_tid(t: TierKind) -> u64 {
 }
 
 const STEP_TID: u64 = 50;
+/// Track for speculative-pipeline lifecycle events, adjacent to the
+/// decode-step track so issue/land/cancel visually bracket the steps
+/// whose I/O they overlap.
+const SPEC_TID: u64 = 60;
 const SHARD_TID_BASE: u64 = 100;
 
 fn meta_event(tid: u64, name: &str) -> Json {
@@ -229,9 +260,11 @@ fn duration_event(name: &str, ts: u64, dur: u64, step: u64) -> Json {
 
 /// Write a Chrome trace-event JSON file: one instant-event track per
 /// tier (the destination tier of each transition; the source tier for
-/// events leaving the store), one track per shard, and one
-/// duration-event track with the per-step plan/restore/freeze/compute
-/// segments. Events are `(shard, event)` pairs as returned by
+/// events leaving the store), one track per shard, a speculative
+/// pipeline track (issue/land/cancel instants, so the overlap with the
+/// decode-step track is visible), and one duration-event track with
+/// the per-step plan/restore/restore-wait/freeze/compute segments.
+/// Events are `(shard, event)` pairs as returned by
 /// `ShardedStore::flight_events`.
 pub fn write_chrome_trace(
     path: &str,
@@ -243,6 +276,9 @@ pub fn write_chrome_trace(
     trace.push(meta_event(tier_tid(TierKind::Cold), "tier cold"));
     trace.push(meta_event(tier_tid(TierKind::Spill), "tier spill"));
     trace.push(meta_event(STEP_TID, "decode steps"));
+    if events.iter().any(|(_, ev)| ev.cause.is_spec()) {
+        trace.push(meta_event(SPEC_TID, "speculative restores"));
+    }
     let mut shards: Vec<usize> = events.iter().map(|(s, _)| *s).collect();
     shards.sort_unstable();
     shards.dedup();
@@ -250,6 +286,13 @@ pub fn write_chrome_trace(
         trace.push(meta_event(SHARD_TID_BASE + s as u64, &format!("shard {s}")));
     }
     for (shard, ev) in events {
+        if ev.cause.is_spec() {
+            // pipeline lifecycle: one instant on the speculative track
+            // (a spec event is not a tier transition, so it does not
+            // duplicate onto the tier/shard reconciliation tracks)
+            trace.push(instant_event(SPEC_TID, ev, *shard));
+            continue;
+        }
         if let Some(tier) = ev.to.or(ev.from) {
             trace.push(instant_event(tier_tid(tier), ev, *shard));
         }
@@ -260,6 +303,7 @@ pub fn write_chrome_trace(
         for (name, dur) in [
             ("plan", sp.plan_us),
             ("restore", sp.restore_us),
+            ("restore wait", sp.restore_wait_us),
             ("freeze", sp.freeze_us),
             ("compute", sp.compute_us),
         ] {

@@ -333,7 +333,7 @@ impl TierKind {
 }
 
 /// Per-step decode wall-clock attribution, accumulated by
-/// `engine::Session`. The four segments tile the span from the start
+/// `engine::Session`. The five segments tile the span from the start
 /// of `apply_plan` to the end of `absorb` contiguously, so
 /// `accounted_us()` equals `wall_us` up to the (sub-microsecond)
 /// instants between adjacent clock reads:
@@ -341,6 +341,11 @@ impl TierKind {
 /// * `plan` — policy `plan_into` + `observe` + entropy/recovery
 ///   bookkeeping (everything in `absorb` that is not staging/sweep),
 /// * `restore` — frozen-row restore batches plus prefetch staging,
+/// * `restore_wait` — time blocked on the speculative restore
+///   pipeline (waiting for in-flight tier reads to land). Carved out
+///   of whichever segment the wait occurred inside, so an effective
+///   pipeline shows up as this segment shrinking toward zero while
+///   the others keep their pure-CPU cost,
 /// * `compute` — the device call window (upload/execute/download and
 ///   the host glue around it),
 /// * `freeze` — freeze batches plus the store's per-step sweep.
@@ -350,6 +355,8 @@ pub struct StepSegments {
     pub steps: u64,
     pub plan_us: u64,
     pub restore_us: u64,
+    /// time blocked waiting on in-flight speculative restores
+    pub restore_wait_us: u64,
     pub compute_us: u64,
     pub freeze_us: u64,
     /// measured step wall-clock (apply_plan start -> absorb end)
@@ -357,9 +364,9 @@ pub struct StepSegments {
 }
 
 impl StepSegments {
-    /// Sum of the four attributed segments.
+    /// Sum of the five attributed segments.
     pub fn accounted_us(&self) -> u64 {
-        self.plan_us + self.restore_us + self.compute_us + self.freeze_us
+        self.plan_us + self.restore_us + self.restore_wait_us + self.compute_us + self.freeze_us
     }
 
     /// Fraction of measured wall-clock the segments account for
@@ -376,6 +383,7 @@ impl StepSegments {
         self.steps += other.steps;
         self.plan_us += other.plan_us;
         self.restore_us += other.restore_us;
+        self.restore_wait_us += other.restore_wait_us;
         self.compute_us += other.compute_us;
         self.freeze_us += other.freeze_us;
         self.wall_us += other.wall_us;
@@ -598,7 +606,8 @@ mod tests {
         let mut s = StepSegments {
             steps: 1,
             plan_us: 10,
-            restore_us: 20,
+            restore_us: 15,
+            restore_wait_us: 5,
             compute_us: 60,
             freeze_us: 10,
             wall_us: 100,

@@ -108,6 +108,42 @@ pub const CATALOG: &[MetricSpec] = &[
         labels: &["shard"],
         help: "prefetch promotions into the staged hot tier",
     },
+    // -- speculative restore pipeline ------------------------------------
+    MetricSpec {
+        name: "asrkf_spec_issued_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "rows submitted as speculative restore reads to the worker pool",
+    },
+    MetricSpec {
+        name: "asrkf_spec_landed_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "speculative reads that landed with a current generation",
+    },
+    MetricSpec {
+        name: "asrkf_spec_cancelled_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "speculative reads discarded (superseded generation or past deadline)",
+    },
+    MetricSpec {
+        name: "asrkf_spec_consumed_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "takes served from a landed speculative copy (no inline tier I/O)",
+    },
+    MetricSpec {
+        name: "asrkf_late_arrivals_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "takes that blocked on a speculative read still in flight",
+    },
     MetricSpec {
         name: "asrkf_recovered_rows_total",
         kind: MetricKind::Counter,
@@ -188,6 +224,20 @@ pub const CATALOG: &[MetricSpec] = &[
         help: "restore (take) latency by serving tier, merged across shards",
     },
     MetricSpec {
+        name: "asrkf_restore_overlap_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "in-worker service time of speculative restore reads (I/O hidden behind decode)",
+    },
+    MetricSpec {
+        name: "asrkf_restore_wait_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &[],
+        help: "per-step time blocked waiting for in-flight speculative reads to land",
+    },
+    MetricSpec {
         name: "asrkf_spill_read_us",
         kind: MetricKind::TimeHistogram,
         unit: "us",
@@ -220,7 +270,7 @@ pub const CATALOG: &[MetricSpec] = &[
         kind: MetricKind::TimeHistogram,
         unit: "us",
         labels: &["segment"],
-        help: "per-step wall-clock attributed to plan|restore|compute|freeze",
+        help: "per-step wall-clock attributed to plan|restore|restore_wait|compute|freeze",
     },
     MetricSpec {
         name: "asrkf_ttft_us",
@@ -264,6 +314,13 @@ pub const CATALOG: &[MetricSpec] = &[
         unit: "rows",
         labels: &[],
         help: "rows per non-empty freeze batch",
+    },
+    MetricSpec {
+        name: "asrkf_spec_inflight_depth",
+        kind: MetricKind::CountHistogram,
+        unit: "jobs",
+        labels: &[],
+        help: "shards with a speculative read in flight, sampled per pipeline advance",
     },
     MetricSpec {
         name: "asrkf_batch_occupancy",
@@ -385,6 +442,8 @@ pub const SERVING_CSV_COLUMNS: &[CsvColumn] = &[
     CsvColumn { header: "restore spans", metric: "asrkf_restore_batch_spans_total" },
     CsvColumn { header: "restore par", metric: "asrkf_restore_parallelism" },
     CsvColumn { header: "recovered rows", metric: "asrkf_recovered_rows_total" },
+    CsvColumn { header: "restore wait (us)", metric: "asrkf_restore_wait_us" },
+    CsvColumn { header: "late arrivals", metric: "asrkf_late_arrivals_total" },
     CsvColumn { header: "plan mean (us)", metric: "asrkf_plan_us" },
     CsvColumn { header: "plan p99 (us)", metric: "asrkf_plan_us" },
 ];

@@ -34,6 +34,14 @@
 //!   the `recovery::EntropyMonitor` trending toward a trigger
 //!   (`pressure()` ≥ `OffloadConfig::stage_pressure`), so recovery
 //!   unfreezes land on already-staged rows.
+//! * **Pipelined restore** (`ShardedStore::pipeline_advance`): at each
+//!   step boundary the facade asks every idle shard's eta index for
+//!   rows due to thaw within the prefetch horizon and ships them to
+//!   the worker pool as non-destructive speculative reads (promote +
+//!   decode, nothing consumed). The reads execute while the next step
+//!   computes; `take_batch` serves landed copies with a map lookup
+//!   and mutations fence stale copies by position (see
+//!   `README.md` for the in-flight state machine).
 //! * **Accounting** feeds `metrics::TierOccupancy` gauges and
 //!   per-tier `metrics::RestoreLatency` histograms; the conservation
 //!   invariant `total_stashed == total_restored + total_dropped +
@@ -121,6 +129,23 @@ pub struct OffloadSummary {
     pub shard_rows_min: u64,
     /// resident rows on the fullest shard (imbalance gauge ceiling)
     pub shard_rows_max: u64,
+    /// speculative restore reads issued by the pipeline driver
+    pub spec_issued: u64,
+    /// speculative reads that landed a valid (current-generation) copy
+    pub spec_landed: u64,
+    /// speculative work discarded: stale generation, fence on
+    /// mutation, deadline expiry, or drain
+    pub spec_cancelled: u64,
+    /// takes served straight from the landing buffer (tier I/O fully
+    /// hidden behind decode)
+    pub spec_consumed: u64,
+    /// takes that had to block on a still-in-flight speculative read
+    pub late_arrivals: u64,
+    /// total per-step wall time blocked waiting for in-flight reads
+    pub restore_wait_us: u64,
+    /// mean in-worker service time of speculative reads — the tier
+    /// latency that ran overlapped with decode
+    pub restore_overlap_mean_us: u64,
 }
 
 impl OffloadSummary {
@@ -170,6 +195,19 @@ impl OffloadSummary {
             shard_imbalance: s.counter_sum("asrkf_shard_imbalance_total", &[]),
             shard_rows_min: s.gauge_min("asrkf_shard_rows", &[]).unwrap_or(0.0) as u64,
             shard_rows_max: s.gauge_max("asrkf_shard_rows", &[]).unwrap_or(0.0) as u64,
+            spec_issued: s.counter_sum("asrkf_spec_issued_total", &[]),
+            spec_landed: s.counter_sum("asrkf_spec_landed_total", &[]),
+            spec_cancelled: s.counter_sum("asrkf_spec_cancelled_total", &[]),
+            spec_consumed: s.counter_sum("asrkf_spec_consumed_total", &[]),
+            late_arrivals: s.counter_sum("asrkf_late_arrivals_total", &[]),
+            restore_wait_us: s
+                .hist("asrkf_restore_wait_us", &[])
+                .map(|h| h.sum as u64)
+                .unwrap_or(0),
+            restore_overlap_mean_us: s
+                .hist("asrkf_restore_overlap_us", &[])
+                .map(|h| h.mean as u64)
+                .unwrap_or(0),
         }
     }
 

@@ -51,15 +51,16 @@
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::config::{OffloadConfig, ShardPartition};
 use crate::engine::layout::{coalesce_runs, split_runs};
 use crate::error::{Error, Result};
 use crate::metrics::{
-    CountHistogram, FlightEvent, RestoreLatency, Snapshot, SnapshotBuilder, TierKind,
-    TierOccupancy,
+    Cause, CountHistogram, FlightEvent, FlightRecorder, Histogram, RestoreLatency, Snapshot,
+    SnapshotBuilder, TierKind, TierOccupancy,
 };
 use crate::offload::store::TieredStore;
 use crate::offload::OffloadSummary;
@@ -79,6 +80,10 @@ enum ShardOp {
     StageUpcoming { now: u64, horizon: u64, max_rows: usize },
     OnStep(u64),
     Drain,
+    /// Speculative restore reads: promote + decode each `(pos, gen)`
+    /// without consuming anything, returning generation-tagged copies.
+    /// `delay_us` is test-only fault injection (slow-tier simulation).
+    SpecRead { items: Vec<(usize, u64)>, delay_us: u64 },
 }
 
 enum ShardOut {
@@ -86,6 +91,10 @@ enum ShardOut {
     Rows(Vec<(usize, Option<Vec<f32>>)>),
     Staged(usize),
     Drained(Vec<(usize, Vec<f32>)>),
+    /// `(pos, generation, decoded row)` per speculative read, plus the
+    /// in-worker service time — the tier latency the pipeline hid
+    /// behind decode.
+    Spec { rows: Vec<(usize, u64, Option<Vec<f32>>)>, service_us: u64 },
 }
 
 /// The single execution path for both the inline (n = 1 / one engaged
@@ -114,6 +123,21 @@ fn exec(store: &mut TieredStore, op: ShardOp) -> Result<ShardOut> {
             Ok(ShardOut::Unit)
         }
         ShardOp::Drain => Ok(ShardOut::Drained(store.drain_all()?)),
+        ShardOp::SpecRead { items, delay_us } => {
+            let t0 = Instant::now();
+            let mut rows = Vec::with_capacity(items.len());
+            for (pos, gen) in items {
+                if delay_us > 0 {
+                    std::thread::sleep(Duration::from_micros(delay_us));
+                }
+                // same promotion as the synchronous prefetch path, so
+                // tier residency converges with what staged reads
+                // would have produced
+                let _ = store.promote_speculative(pos)?;
+                rows.push((pos, gen, store.peek_decode(pos)?));
+            }
+            Ok(ShardOut::Spec { rows, service_us: t0.elapsed().as_micros() as u64 })
+        }
     }
 }
 
@@ -195,6 +219,26 @@ fn worker_pool() -> &'static WorkerPool {
     })
 }
 
+/// A speculative read job outstanding on one shard. The shard's store
+/// is out with the worker; `items` holds the `(pos, gen, eta)` triples
+/// shipped with it, kept facade-side for in-flight bookkeeping and
+/// flight-event stamping at landing time.
+struct PendingSpec {
+    reply: Receiver<Done>,
+    items: Vec<(usize, u64, u64)>,
+}
+
+/// A decoded speculative copy waiting in the landing buffer for its
+/// consuming take. Valid by construction: every mutation of the
+/// position fences (discards) it first, so presence implies
+/// bit-exactness with what a synchronous take would return.
+struct LandedSpec {
+    row: Vec<f32>,
+    /// Step (`pipeline_advance` clock) the copy landed; the deadline
+    /// bounds how long an unconsumed copy may linger.
+    landed_step: u64,
+}
+
 /// N independent `TieredStore` shards behind the single-store API the
 /// engine already speaks, plus batched entry points (`take_batch`,
 /// `stash_batch`) that execute per-shard slices in parallel.
@@ -216,6 +260,44 @@ pub struct ShardedStore {
     /// share (`rows / n`) — sustained growth means the partition
     /// scheme fights the access pattern.
     pub shard_imbalance: u64,
+    /// One outstanding speculative job per shard (`None` = shard home).
+    /// A shard with a pending entry has its `shards` slot checked out;
+    /// `ensure_home` is the only way back.
+    pending: Vec<Option<PendingSpec>>,
+    /// Generation fence per position, present only while the position
+    /// is in flight or landed (bounded by the speculation window, not
+    /// by context length). A mutation bumps the generation so a stale
+    /// landing is discarded instead of resurrecting old payload.
+    spec_gen: HashMap<usize, u64>,
+    /// Positions currently out on a speculative read (pos -> gen).
+    inflight: HashMap<usize, u64>,
+    /// Landing buffer: decoded copies waiting for their consuming take.
+    landed: HashMap<usize, LandedSpec>,
+    /// Blocked-on-`recv` wall time since the session last drained it
+    /// (`take_wait_us`), charged to the `restore_wait` step segment.
+    wait_us_acc: u64,
+    /// Same wall time, but reset every `pipeline_advance` — flushed as
+    /// one per-step sample into `wait_hist` (zeros included, so the
+    /// distribution honestly covers wait-free steps).
+    step_wait_us: u64,
+    wait_hist: Histogram,
+    /// In-worker service time of speculative jobs — the latency that
+    /// ran overlapped with decode instead of blocking it.
+    overlap_hist: Histogram,
+    /// Shards with a speculative read in flight, sampled per advance.
+    inflight_depth: CountHistogram,
+    pub spec_issued: u64,
+    pub spec_landed: u64,
+    pub spec_cancelled: u64,
+    pub spec_consumed: u64,
+    /// Takes that had to block on a still-in-flight speculative read.
+    pub late_arrivals: u64,
+    /// Facade-level flight recorder for speculation lifecycle events
+    /// (issue/land/cancel) — per-shard recorders keep tier moves.
+    spec_flight: FlightRecorder,
+    /// Last step handed to `pipeline_advance`, used to stamp facade
+    /// flight events between advances.
+    last_step: u64,
 }
 
 impl std::fmt::Debug for ShardedStore {
@@ -296,9 +378,10 @@ impl ShardedStore {
             };
             shards.push(Some(store));
         }
-        if n > 1 {
+        if n > 1 || cfg.pipeline {
             worker_pool(); // warm the process-wide pool off the hot path
         }
+        let spec_flight = FlightRecorder::new(cfg.flight_recorder_cap);
         Ok(ShardedStore {
             n,
             partition: cfg.shard_partition,
@@ -307,6 +390,22 @@ impl ShardedStore {
             cfg,
             restore_parallelism: CountHistogram::default(),
             shard_imbalance: 0,
+            pending: (0..n).map(|_| None).collect(),
+            spec_gen: HashMap::new(),
+            inflight: HashMap::new(),
+            landed: HashMap::new(),
+            wait_us_acc: 0,
+            step_wait_us: 0,
+            wait_hist: Histogram::default(),
+            overlap_hist: Histogram::default(),
+            inflight_depth: CountHistogram::default(),
+            spec_issued: 0,
+            spec_landed: 0,
+            spec_cancelled: 0,
+            spec_consumed: 0,
+            late_arrivals: 0,
+            spec_flight,
+            last_step: 0,
         })
     }
 
@@ -345,6 +444,12 @@ impl ShardedStore {
     fn fan_out(&mut self, ops: Vec<(usize, ShardOp)>) -> Result<Vec<(usize, ShardOut)>> {
         if ops.is_empty() {
             return Ok(Vec::new());
+        }
+        // safety net: a shard out on a speculative read must land
+        // before new work ships (idempotent; entry points settle the
+        // shards they touch explicitly first, for fence ordering)
+        for i in 0..ops.len() {
+            self.ensure_home(ops[i].0)?;
         }
         if self.n == 1 || ops.len() == 1 {
             let mut outs = Vec::with_capacity(ops.len());
@@ -409,20 +514,311 @@ impl ShardedStore {
         per
     }
 
+    // --- speculative restore pipeline ---
+    //
+    // In-flight state machine (per position):
+    //
+    //   idle ──issue──► in-flight ──land──► landed ──take──► consumed
+    //                      │                   │
+    //                 (job error /        (fence on mutation,
+    //                  stale gen)          deadline expiry, drain)
+    //                      ▼                   ▼
+    //                  cancelled           cancelled
+    //
+    // A shard with a job out has its store checked out (`shards[idx] =
+    // None`), exactly like a `fan_out` burst — so a speculative read
+    // can never race the facade's own tier mutations. Every entry
+    // point settles the shards it touches (`ensure_home`) before
+    // mutating, and `on_step` settles all shards so residency sweeps
+    // (which include the *lossy* hot -> cold demotion) are never
+    // deferred: a job therefore lives at most one step.
+
+    /// Block until shard `idx`'s outstanding speculative job (if any)
+    /// replies, reinstall its store, and process the landings. Blocked
+    /// time is charged to the wait accumulators the session surfaces
+    /// as the `restore_wait` step segment.
+    fn ensure_home(&mut self, idx: usize) -> Result<()> {
+        let Some(p) = self.pending[idx].take() else { return Ok(()) };
+        let t0 = Instant::now();
+        match p.reply.recv() {
+            Ok(done) => {
+                let waited = t0.elapsed().as_micros() as u64;
+                self.wait_us_acc += waited;
+                self.step_wait_us += waited;
+                self.land(idx, p, done);
+                Ok(())
+            }
+            Err(_) => {
+                for &(pos, _, _) in &p.items {
+                    self.inflight.remove(&pos);
+                    self.spec_gen.remove(&pos);
+                }
+                Err(Error::Offload(format!("shard {idx} speculative worker died mid-flight")))
+            }
+        }
+    }
+
+    /// Process one returned speculative job: reinstall the store,
+    /// clear the in-flight set, and move current-generation rows into
+    /// the landing buffer. Worker-side op errors are logged and
+    /// swallowed — the speculative copy is a pure cache, so the
+    /// eventual real take surfaces any real tier failure.
+    fn land(&mut self, idx: usize, p: PendingSpec, done: Done) {
+        self.shards[idx] = done.store; // None on panic: shard lost
+        for &(pos, _, _) in &p.items {
+            self.inflight.remove(&pos);
+        }
+        match done.out {
+            Ok(ShardOut::Spec { rows, service_us }) => {
+                self.overlap_hist.record(Duration::from_micros(service_us));
+                for (pos, gen, row) in rows {
+                    let eta = p
+                        .items
+                        .iter()
+                        .find(|&&(q, _, _)| q == pos)
+                        .map(|&(_, _, e)| e)
+                        .unwrap_or(0);
+                    let valid = self.spec_gen.get(&pos).copied() == Some(gen);
+                    match row {
+                        Some(row) if valid => {
+                            self.spec_landed += 1;
+                            self.spec_flight
+                                .record(self.last_step, pos, None, None, Cause::SpecLand, eta);
+                            self.landed
+                                .insert(pos, LandedSpec { row, landed_step: self.last_step });
+                        }
+                        _ => {
+                            // superseded generation, or a row dropped
+                            // before the worker could read it
+                            self.spec_cancelled += 1;
+                            self.spec_flight
+                                .record(self.last_step, pos, None, None, Cause::SpecCancel, eta);
+                            if !self.landed.contains_key(&pos) {
+                                self.spec_gen.remove(&pos);
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(_) => {
+                log::error!("shard {idx} speculative job returned a non-speculative result")
+            }
+            Err(e) => {
+                log::warn!(
+                    "shard {idx} speculative read failed (the real take will retry inline): {e}"
+                );
+                for &(pos, _, _) in &p.items {
+                    if !self.landed.contains_key(&pos) {
+                        self.spec_gen.remove(&pos);
+                    }
+                }
+                self.spec_cancelled += p.items.len() as u64;
+            }
+        }
+    }
+
+    /// Generation fence, called before any mutation of `pos` (stash /
+    /// take / drop / drain). Discards a landed copy — it is never
+    /// served across a mutation — and clears the recorded generation
+    /// so a later speculation starts fresh. The owning shard must be
+    /// home (`ensure_home`) before fencing, which makes an in-flight
+    /// fence structurally impossible; the generation bump below is
+    /// insurance, not a load-bearing path.
+    fn fence(&mut self, pos: usize) {
+        if !self.cfg.pipeline {
+            return;
+        }
+        debug_assert!(
+            !self.inflight.contains_key(&pos),
+            "fence of in-flight pos {pos}: owning shard was not settled first"
+        );
+        if self.landed.remove(&pos).is_some() {
+            self.spec_cancelled += 1;
+            self.spec_flight.record(self.last_step, pos, None, None, Cause::SpecCancel, 0);
+        }
+        if self.inflight.contains_key(&pos) {
+            if let Some(g) = self.spec_gen.get_mut(&pos) {
+                *g += 1;
+            }
+        } else {
+            self.spec_gen.remove(&pos);
+        }
+    }
+
+    /// Ship one speculative read job to the worker pool. The shard's
+    /// store travels with the job (same checkout discipline as
+    /// `fan_out`); until it lands, `ensure_home` is the only way back.
+    fn issue(&mut self, idx: usize, items: Vec<(usize, u64, u64)>, now: u64) -> Result<()> {
+        let jobs = match worker_pool().jobs.lock() {
+            Ok(guard) => guard.clone(),
+            Err(_) => return Err(Error::Offload("shard worker pool mutex poisoned".into())),
+        };
+        let store = self.shards[idx]
+            .take()
+            .ok_or_else(|| Error::Offload(format!("shard {idx} lost to a worker failure")))?;
+        let (reply_tx, reply_rx) = channel::<Done>();
+        let op_items: Vec<(usize, u64)> = items.iter().map(|&(pos, gen, _)| (pos, gen)).collect();
+        let job = Job {
+            shard: idx,
+            store,
+            op: ShardOp::SpecRead { items: op_items, delay_us: self.cfg.pipeline_test_delay_us },
+            reply: reply_tx,
+        };
+        if let Err(std::sync::mpsc::SendError(job)) = jobs.send(job) {
+            self.shards[job.shard] = Some(job.store);
+            return Err(Error::Offload("shard worker pool is down".into()));
+        }
+        for &(pos, gen, eta) in &items {
+            self.inflight.insert(pos, gen);
+            self.spec_issued += 1;
+            self.spec_flight.record(now, pos, None, None, Cause::SpecIssue, eta);
+        }
+        self.pending[idx] = Some(PendingSpec { reply: reply_rx, items });
+        Ok(())
+    }
+
+    /// The per-step pipeline driver, called once per decode step after
+    /// the residency sweep: land completed jobs without blocking,
+    /// expire unconsumed landed copies past the deadline, and issue
+    /// fresh speculative reads for rows the eta index says are due to
+    /// thaw within the prefetch horizon. The reads execute on pool
+    /// workers while the next step computes; `take_batch` then serves
+    /// the landed copies with a map lookup instead of a tier decode.
+    pub fn pipeline_advance(&mut self, now: u64) -> Result<()> {
+        if !self.cfg.pipeline {
+            return Ok(());
+        }
+        self.last_step = now;
+        // 1) land whatever completed, without blocking on stragglers
+        for idx in 0..self.n {
+            if let Some(p) = self.pending[idx].take() {
+                match p.reply.try_recv() {
+                    Ok(done) => self.land(idx, p, done),
+                    Err(TryRecvError::Empty) => self.pending[idx] = Some(p),
+                    Err(TryRecvError::Disconnected) => {
+                        for &(pos, _, _) in &p.items {
+                            self.inflight.remove(&pos);
+                            self.spec_gen.remove(&pos);
+                        }
+                        return Err(Error::Offload(format!(
+                            "shard {idx} speculative worker died mid-flight"
+                        )));
+                    }
+                }
+            }
+        }
+        // 2) expire landed copies nobody consumed within the deadline
+        // (0 = keep forever; the CLI bounds the flag to >= 1)
+        let deadline = self.cfg.restore_deadline_steps;
+        if deadline > 0 {
+            let expired: Vec<usize> = self
+                .landed
+                .iter()
+                .filter(|(_, l)| l.landed_step.saturating_add(deadline) <= now)
+                .map(|(&pos, _)| pos)
+                .collect();
+            for pos in expired {
+                self.landed.remove(&pos);
+                self.spec_gen.remove(&pos);
+                self.spec_cancelled += 1;
+                self.spec_flight.record(now, pos, None, None, Cause::SpecCancel, 0);
+            }
+        }
+        // 3) issue fresh speculative reads on idle shards
+        let per_cap = (self.cfg.stage_burst_rows + self.n - 1) / self.n;
+        let horizon = self.cfg.prefetch_ahead;
+        for idx in 0..self.n {
+            if self.pending[idx].is_some() {
+                continue;
+            }
+            let cands = match self.shards[idx].as_ref() {
+                Some(s) => s.spec_candidates(now, horizon, per_cap),
+                None => continue, // lost shard: every touch errors elsewhere
+            };
+            let mut items: Vec<(usize, u64, u64)> = Vec::with_capacity(cands.len());
+            for (pos, eta) in cands {
+                if self.landed.contains_key(&pos) || self.inflight.contains_key(&pos) {
+                    continue;
+                }
+                let gen = *self.spec_gen.entry(pos).or_insert(0);
+                items.push((pos, gen, eta));
+            }
+            if !items.is_empty() {
+                self.issue(idx, items, now)?;
+            }
+        }
+        let depth = self.pending.iter().filter(|p| p.is_some()).count() as u64;
+        self.inflight_depth.record(depth);
+        // 4) flush this step's blocked-wait total as one sample (zeros
+        // included, so the distribution covers wait-free steps)
+        self.wait_hist.record(Duration::from_micros(self.step_wait_us));
+        self.step_wait_us = 0;
+        Ok(())
+    }
+
+    /// Land every outstanding speculative job, blocking as needed.
+    /// Required before aggregate `&self` queries (`len`, `occupancy`,
+    /// counters, flight events) can see a complete picture — a shard
+    /// out with a worker is invisible to them.
+    pub fn settle(&mut self) -> Result<()> {
+        for idx in 0..self.n {
+            self.ensure_home(idx)?;
+        }
+        Ok(())
+    }
+
+    /// Drain the accumulated blocked-on-landing wall time (µs) since
+    /// the last call. The session carves this out of whichever step
+    /// segment the wait occurred inside.
+    pub fn take_wait_us(&mut self) -> u64 {
+        std::mem::take(&mut self.wait_us_acc)
+    }
+
+    /// Whether `pos` has speculation state (in flight or landed) — a
+    /// prefetch hint for it would be redundant.
+    pub fn spec_busy(&self, pos: usize) -> bool {
+        self.inflight.contains_key(&pos) || self.landed.contains_key(&pos)
+    }
+
+    /// Whether `pos` is already staged hot (or conservatively assumed
+    /// so while its owning shard is out on a speculative job).
+    pub fn is_staged(&self, pos: usize) -> bool {
+        if self.pending[self.shard_of(pos)].is_some() {
+            return true;
+        }
+        self.tier_of(pos) == Some((TierKind::Hot, true))
+    }
+
     // --- single-row API (unchanged semantics, routed to one shard) ---
 
     pub fn stash(&mut self, pos: usize, row: Vec<f32>, step: u64, thaw_eta: u64) -> Result<()> {
         let idx = self.shard_of(pos);
+        self.ensure_home(idx)?;
+        self.fence(pos);
         self.shard_mut(idx)?.stash(pos, row, step, thaw_eta)
     }
 
     pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
         let idx = self.shard_of(pos);
+        if self.inflight.contains_key(&pos) {
+            self.late_arrivals += 1;
+        }
+        self.ensure_home(idx)?;
+        if let Some(l) = self.landed.remove(&pos) {
+            // take-equivalent bookkeeping, but the payload comes from
+            // the landing buffer instead of a tier decode
+            self.shard_mut(idx)?.confirm_restore(pos)?;
+            self.spec_gen.remove(&pos);
+            self.spec_consumed += 1;
+            return Ok(Some(l.row));
+        }
         self.shard_mut(idx)?.take(pos)
     }
 
     pub fn drop_row(&mut self, pos: usize) -> Result<()> {
         let idx = self.shard_of(pos);
+        self.ensure_home(idx)?;
+        self.fence(pos);
         self.shard_mut(idx)?.drop_row(pos)
     }
 
@@ -431,6 +827,12 @@ impl ShardedStore {
     /// Stash a freeze batch: items are grouped by shard and executed in
     /// parallel (each shard applies its own budget eviction inside).
     pub fn stash_batch(&mut self, items: Vec<(usize, Vec<f32>, u64)>, step: u64) -> Result<()> {
+        if self.cfg.pipeline {
+            for it in &items {
+                self.ensure_home(self.shard_of(it.0))?;
+                self.fence(it.0);
+            }
+        }
         let per = self.group_by_shard(items, |it| it.0);
         let ops: Vec<(usize, ShardOp)> = per
             .into_iter()
@@ -450,51 +852,89 @@ impl ShardedStore {
         if positions.is_empty() {
             return Ok(Vec::new());
         }
-        if self.n == 1 {
-            // unsharded fast path: no run split, no reassembly map
-            self.restore_parallelism.record(1);
-            let store = self.shard_mut(0)?;
-            let mut out = Vec::with_capacity(positions.len());
+        // pipeline consume path: count takes that beat their
+        // speculative read (before settling hides the evidence), land
+        // the owning shards, then serve whatever the landing buffer
+        // holds — take-equivalent bookkeeping, no tier decode
+        let mut served: HashMap<usize, Vec<f32>> = HashMap::new();
+        if self.cfg.pipeline {
             for &pos in positions {
-                out.push(store.take(pos)?);
+                if self.inflight.contains_key(&pos) {
+                    self.late_arrivals += 1;
+                }
             }
-            return Ok(out);
-        }
-        let runs = coalesce_runs(positions);
-        let per = split_runs(&runs, self.n, |p| self.shard_of(p));
-        let engaged = per.iter().filter(|v| !v.is_empty()).count();
-        self.restore_parallelism.record(engaged as u64);
-        if self.n > 1 && positions.len() >= 2 {
-            let max_share = per.iter().map(Vec::len).max().unwrap_or(0);
-            // imbalanced: one shard carried at least twice the even
-            // share len/n (ratio form so n = 2 can fire: an all-on-one
-            // burst is exactly 2x the even share, never more). The
-            // max_share >= 2 guard keeps single-row shares of tiny
-            // bursts from counting.
-            if max_share >= 2 && max_share * self.n >= 2 * positions.len() {
-                self.shard_imbalance += 1;
-            }
-        }
-        let ops: Vec<(usize, ShardOp)> = per
-            .into_iter()
-            .enumerate()
-            .filter(|(_, v)| !v.is_empty())
-            .map(|(i, v)| (i, ShardOp::Take(v)))
-            .collect();
-        let outs = self.fan_out(ops)?;
-        let mut by_pos: HashMap<usize, Option<Vec<f32>>> = HashMap::with_capacity(positions.len());
-        for (_, out) in outs {
-            if let ShardOut::Rows(rows) = out {
-                for (pos, payload) in rows {
-                    by_pos.insert(pos, payload);
+            for &pos in positions {
+                let idx = self.shard_of(pos);
+                self.ensure_home(idx)?;
+                if let Some(l) = self.landed.remove(&pos) {
+                    self.shard_mut(idx)?.confirm_restore(pos)?;
+                    self.spec_gen.remove(&pos);
+                    self.spec_consumed += 1;
+                    served.insert(pos, l.row);
                 }
             }
         }
-        Ok(positions.iter().map(|p| by_pos.remove(p).flatten()).collect())
+        let rest: Vec<usize> =
+            positions.iter().copied().filter(|p| !served.contains_key(p)).collect();
+        let mut by_pos: HashMap<usize, Option<Vec<f32>>> = HashMap::with_capacity(rest.len());
+        if self.n == 1 {
+            // unsharded fast path: no run split, no reassembly map
+            if !rest.is_empty() {
+                self.restore_parallelism.record(1);
+                let store = self.shard_mut(0)?;
+                for &pos in &rest {
+                    by_pos.insert(pos, store.take(pos)?);
+                }
+            }
+        } else if !rest.is_empty() {
+            let runs = coalesce_runs(&rest);
+            let per = split_runs(&runs, self.n, |p| self.shard_of(p));
+            let engaged = per.iter().filter(|v| !v.is_empty()).count();
+            self.restore_parallelism.record(engaged as u64);
+            if rest.len() >= 2 {
+                let max_share = per.iter().map(Vec::len).max().unwrap_or(0);
+                // imbalanced: one shard carried at least twice the even
+                // share len/n (ratio form so n = 2 can fire: an
+                // all-on-one burst is exactly 2x the even share, never
+                // more). The max_share >= 2 guard keeps single-row
+                // shares of tiny bursts from counting.
+                if max_share >= 2 && max_share * self.n >= 2 * rest.len() {
+                    self.shard_imbalance += 1;
+                }
+            }
+            let ops: Vec<(usize, ShardOp)> = per
+                .into_iter()
+                .enumerate()
+                .filter(|(_, v)| !v.is_empty())
+                .map(|(i, v)| (i, ShardOp::Take(v)))
+                .collect();
+            let outs = self.fan_out(ops)?;
+            for (_, out) in outs {
+                if let ShardOut::Rows(rows) = out {
+                    for (pos, payload) in rows {
+                        by_pos.insert(pos, payload);
+                    }
+                }
+            }
+        }
+        Ok(positions
+            .iter()
+            .map(|p| match served.remove(p) {
+                Some(row) => Some(row),
+                None => by_pos.remove(p).flatten(),
+            })
+            .collect())
     }
 
     /// Stage specific prefetch hints; fans out when hints span shards.
+    /// No fence: staging is payload-preserving (promotion only ever
+    /// sources quantized rows), so a landed copy stays bit-exact.
     pub fn stage(&mut self, hints: &[(usize, u64)]) -> Result<usize> {
+        if self.cfg.pipeline {
+            for &(pos, _) in hints {
+                self.ensure_home(self.shard_of(pos))?;
+            }
+        }
         let per = self.group_by_shard(hints.iter().copied(), |h| h.0);
         let ops: Vec<(usize, ShardOp)> = per
             .into_iter()
@@ -518,6 +958,7 @@ impl ShardedStore {
         if max_rows == 0 {
             return Ok(0);
         }
+        self.settle()?;
         let per_cap = (max_rows + self.n - 1) / self.n;
         let ops: Vec<(usize, ShardOp)> = (0..self.n)
             .map(|i| (i, ShardOp::StageUpcoming { now, horizon, max_rows: per_cap }))
@@ -536,6 +977,12 @@ impl ShardedStore {
     /// no-op sweep inline, keeping pool round-trips off the common
     /// per-step path.
     pub fn on_step(&mut self, now: u64) -> Result<()> {
+        // settle first: residency sweeps include the *lossy*
+        // hot -> cold demotion, which must never be deferred behind a
+        // speculative job (a delayed demotion would let a pipelined
+        // take return raw payload where a synchronous store would
+        // already serve the quantized form)
+        self.settle()?;
         let mut ops: Vec<(usize, ShardOp)> = Vec::new();
         for i in 0..self.n {
             let pending = self.shards[i]
@@ -555,6 +1002,13 @@ impl ShardedStore {
     /// Drain every shard (RR emergency restore). Order across shards is
     /// arbitrary, matching the unsharded store's hash-map drain.
     pub fn drain_all(&mut self) -> Result<Vec<(usize, Vec<f32>)>> {
+        self.settle()?;
+        // the landing buffer only caches rows the tiers still hold —
+        // discard it so the drain is the single source of payloads
+        let cached: Vec<usize> = self.landed.keys().copied().collect();
+        for pos in cached {
+            self.fence(pos);
+        }
         let ops: Vec<(usize, ShardOp)> = (0..self.n).map(|i| (i, ShardOp::Drain)).collect();
         let outs = self.fan_out(ops)?;
         let mut all = Vec::new();
@@ -668,6 +1122,14 @@ impl ShardedStore {
         }
         b.counter_add("asrkf_shard_imbalance_total", &[], self.shard_imbalance);
         b.count_merge("asrkf_restore_parallelism", &[], &self.restore_parallelism);
+        b.counter_add("asrkf_spec_issued_total", &[], self.spec_issued);
+        b.counter_add("asrkf_spec_landed_total", &[], self.spec_landed);
+        b.counter_add("asrkf_spec_cancelled_total", &[], self.spec_cancelled);
+        b.counter_add("asrkf_spec_consumed_total", &[], self.spec_consumed);
+        b.counter_add("asrkf_late_arrivals_total", &[], self.late_arrivals);
+        b.time_merge("asrkf_restore_overlap_us", &[], &self.overlap_hist);
+        b.time_merge("asrkf_restore_wait_us", &[], &self.wait_hist);
+        b.count_merge("asrkf_spec_inflight_depth", &[], &self.inflight_depth);
     }
 
     /// Publish point-in-time occupancy gauges per shard. Lost shards
@@ -715,6 +1177,9 @@ impl ShardedStore {
                 all.extend(s.flight().events().map(|ev| (i, *ev)));
             }
         }
+        // facade-level speculation lifecycle events, tagged with the
+        // owning shard so the timeline stays shard-addressable
+        all.extend(self.spec_flight.events().map(|ev| (self.shard_of(ev.pos), *ev)));
         all.sort_by_key(|(_, ev)| (ev.ts_us, ev.seq));
         all
     }
@@ -722,7 +1187,24 @@ impl ShardedStore {
     /// Total flight events evicted or rejected across shards (ring
     /// wraparound plus `flight_recorder_cap = 0` suppression).
     pub fn flight_dropped(&self) -> u64 {
-        self.live_shards().map(|s| s.flight().dropped()).sum()
+        self.live_shards().map(|s| s.flight().dropped()).sum::<u64>() + self.spec_flight.dropped()
+    }
+}
+
+impl Drop for ShardedStore {
+    /// Reclaim shards still out on speculative jobs so their stores
+    /// (and any `TempDir`-backed spill files) drop on this thread, not
+    /// on a detached pool worker after the directory is gone.
+    fn drop(&mut self) {
+        for p in self.pending.iter_mut() {
+            if let Some(p) = p.take() {
+                if let Ok(done) = p.reply.recv() {
+                    if let Some(store) = done.store {
+                        drop(store);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -865,6 +1347,131 @@ mod tests {
         assert_eq!(drained[0].1, row(0.0));
         assert!(s.is_empty());
         assert_eq!(s.total_stashed(), s.total_restored() + s.total_dropped());
+    }
+
+    /// Pipeline-friendly config: rows stashed with `eta - step >= 4`
+    /// go cold immediately and sit within the speculation horizon.
+    fn pcfg(n: usize, partition: ShardPartition) -> OffloadConfig {
+        let mut c = cfg(n, partition);
+        c.cold_after_steps = 4;
+        c.prefetch_ahead = 4;
+        c
+    }
+
+    #[test]
+    fn speculative_pipeline_lands_and_serves_takes() {
+        let mut s = ShardedStore::new(RF, pcfg(2, ShardPartition::Hash)).unwrap();
+        for p in 0..6 {
+            s.stash(p, row(p as f32), 0, 4).unwrap();
+        }
+        assert_eq!(s.occupancy().cold_rows, 6);
+        s.pipeline_advance(0).unwrap();
+        assert_eq!(s.spec_issued, 6, "cold rows due within the horizon must be speculated");
+        s.settle().unwrap();
+        assert_eq!(s.spec_landed, 6);
+        let positions: Vec<usize> = (0..6).collect();
+        let got = s.take_batch(&positions).unwrap();
+        assert!(got.iter().all(Option::is_some));
+        assert_eq!(s.spec_consumed, 6);
+        assert_eq!(s.total_restored(), 6);
+        assert!(s.is_empty());
+        assert_eq!(s.total_stashed(), s.total_restored() + s.total_dropped());
+        // the worker promoted each row hot-staged before decoding, so
+        // the confirming restores count as staged hits
+        assert_eq!(s.staged_hits(), 6);
+    }
+
+    #[test]
+    fn refreeze_fences_landed_speculation() {
+        let mut s = ShardedStore::new(RF, pcfg(1, ShardPartition::Hash)).unwrap();
+        s.stash(3, row(3.0), 0, 4).unwrap();
+        s.pipeline_advance(0).unwrap();
+        s.settle().unwrap();
+        assert_eq!(s.spec_landed, 1);
+        let first = s.take(3).unwrap().unwrap();
+        assert_eq!(s.spec_consumed, 1);
+        // re-freeze with fresh data: the next speculation must serve
+        // the new payload, never a stale copy
+        s.stash(3, row(30.0), 5, 9).unwrap();
+        s.pipeline_advance(5).unwrap();
+        s.settle().unwrap();
+        assert_eq!(s.spec_landed, 2);
+        let second = s.take(3).unwrap().unwrap();
+        assert_ne!(first, second, "fresh row must supersede the speculative copy");
+        assert_eq!(s.total_stashed(), s.total_restored() + s.total_dropped());
+    }
+
+    #[test]
+    fn unconsumed_landed_copies_expire_at_the_deadline() {
+        let mut c = pcfg(1, ShardPartition::Hash);
+        c.restore_deadline_steps = 2;
+        let mut s = ShardedStore::new(RF, c).unwrap();
+        s.stash(1, row(1.0), 0, 4).unwrap();
+        s.pipeline_advance(0).unwrap();
+        s.settle().unwrap();
+        assert_eq!(s.spec_landed, 1);
+        assert!(s.spec_busy(1));
+        s.pipeline_advance(1).unwrap();
+        assert_eq!(s.spec_cancelled, 0, "within the deadline the copy stays");
+        // landed at step 0, deadline 2: expires at the advance for
+        // step 2. The row itself is untouched — the worker promoted it
+        // hot-staged, so it is not re-speculated (speculation only
+        // targets cold/spill) and the take below is a plain staged hit
+        s.pipeline_advance(2).unwrap();
+        assert_eq!(s.spec_cancelled, 1);
+        s.settle().unwrap();
+        let got = s.take(1).unwrap().unwrap();
+        assert_eq!(got.len(), RF);
+        assert_eq!(s.total_restored(), 1);
+        assert_eq!(s.total_stashed(), s.total_restored() + s.total_dropped());
+    }
+
+    #[test]
+    fn late_arrivals_block_and_count() {
+        let mut c = pcfg(1, ShardPartition::Hash);
+        c.pipeline_test_delay_us = 20_000;
+        let mut s = ShardedStore::new(RF, c).unwrap();
+        s.stash(1, row(1.0), 0, 4).unwrap();
+        s.pipeline_advance(0).unwrap();
+        assert!(s.spec_busy(1), "the read is in flight behind the injected delay");
+        let got = s.take(1).unwrap().unwrap();
+        assert_eq!(got.len(), RF);
+        assert_eq!(s.late_arrivals, 1);
+        assert_eq!(s.total_restored(), 1);
+        assert!(s.take_wait_us() > 0, "blocking on the in-flight read is charged as wait");
+    }
+
+    #[test]
+    fn drain_discards_landed_copies_and_conserves() {
+        let mut s = ShardedStore::new(RF, pcfg(2, ShardPartition::Range)).unwrap();
+        for p in 0..8 {
+            s.stash(p, row(p as f32), 0, 4).unwrap();
+        }
+        s.pipeline_advance(0).unwrap();
+        s.settle().unwrap();
+        assert_eq!(s.spec_landed, 8);
+        let drained = s.drain_all().unwrap();
+        assert_eq!(drained.len(), 8);
+        assert_eq!(s.spec_consumed, 0);
+        assert_eq!(s.spec_cancelled, 8, "unconsumed landed copies cancel at drain");
+        assert_eq!(s.total_stashed(), s.total_restored() + s.total_dropped());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn pipeline_off_never_speculates() {
+        let mut c = pcfg(2, ShardPartition::Hash);
+        c.pipeline = false;
+        let mut s = ShardedStore::new(RF, c).unwrap();
+        for p in 0..4 {
+            s.stash(p, row(p as f32), 0, 4).unwrap();
+        }
+        s.pipeline_advance(0).unwrap();
+        s.settle().unwrap();
+        assert_eq!(s.spec_issued, 0);
+        let got = s.take_batch(&[0, 1, 2, 3]).unwrap();
+        assert!(got.iter().all(Option::is_some));
+        assert_eq!(s.take_wait_us(), 0);
     }
 
     #[test]

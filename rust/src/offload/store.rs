@@ -407,6 +407,102 @@ impl TieredStore {
         Ok(n)
     }
 
+    /// Rows the restore pipeline should read speculatively: frozen
+    /// (cold/spill) rows predicted to thaw within `horizon` steps of
+    /// `now`, soonest first, up to `max_rows`. Same candidate set as
+    /// [`stage_upcoming`] (horizon clamped to `cold_after_steps`,
+    /// recovered orphans excluded) but read-only — the caller ships
+    /// the positions to a worker and the actual promotion happens
+    /// there via [`promote_speculative`] + [`peek_decode`].
+    ///
+    /// [`stage_upcoming`]: TieredStore::stage_upcoming
+    /// [`promote_speculative`]: TieredStore::promote_speculative
+    /// [`peek_decode`]: TieredStore::peek_decode
+    pub fn spec_candidates(&self, now: u64, horizon: u64, max_rows: usize) -> Vec<(usize, u64)> {
+        let horizon = horizon.min(self.cfg.cold_after_steps);
+        let limit = now.saturating_add(horizon);
+        self.sched
+            .due_frozen(limit, max_rows)
+            .into_iter()
+            .filter(|&(_, pos)| !self.entries.get(&pos).is_some_and(|e| e.recovered))
+            .map(|(eta, pos)| (pos, eta))
+            .collect()
+    }
+
+    /// Worker-side half of a speculative restore: promote `pos` into
+    /// the staged hot tier if headroom allows (identical to the
+    /// prefetch path, so tier state converges with the synchronous
+    /// oracle). Returns whether a promotion happened; `Ok(false)` for
+    /// absent/already-hot rows is not an error.
+    pub fn promote_speculative(&mut self, pos: usize) -> Result<bool> {
+        self.promote(pos, Cause::Prefetch)
+    }
+
+    /// Decode `pos`'s payload without consuming it: the tier contents,
+    /// entry map, eta index, and every counter are exactly as before
+    /// the call. This is the read half of a speculative restore — the
+    /// landed copy is a pure cache, so a cancelled speculation needs no
+    /// bookkeeping rollback. Implemented as take + stash-back on the
+    /// same tier (the [`Tier`] trait has no non-destructive read); for
+    /// the spill tier that costs one extra record write, paid inside
+    /// the worker where it overlaps decode.
+    pub fn peek_decode(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
+        let Some(e) = self.entries.get(&pos) else { return Ok(None) };
+        let class = e.class;
+        let payload = self
+            .tier_mut(class)
+            .take(pos)?
+            .ok_or_else(|| missing(pos, class))?;
+        let row = payload.clone().into_raw();
+        self.tier_mut(class).stash(pos, payload)?;
+        Ok(Some(row))
+    }
+
+    /// Consume `pos` exactly like [`take`] but serve the payload from a
+    /// pre-decoded speculative copy: performs all of take's bookkeeping
+    /// (tier discard, index pop, staged hit/miss attribution, restore
+    /// latency, conservation counters, flight event) without decoding
+    /// the row again. Errors if `pos` is absent — the caller's
+    /// generation fence guarantees presence, so absence is a fencing
+    /// bug, not a race to tolerate silently.
+    ///
+    /// [`take`]: TieredStore::take
+    pub fn confirm_restore(&mut self, pos: usize) -> Result<()> {
+        let Some(e) = self.entries.get(&pos) else {
+            return Err(Error::Offload(format!(
+                "confirm_restore of absent pos {pos} (stale speculative copy served?)"
+            )));
+        };
+        let (class, eta) = (e.class, e.thaw_eta);
+        let t0 = Instant::now();
+        let held = self.tier_mut(class).discard(pos)?;
+        if !held {
+            return Err(missing(pos, class));
+        }
+        self.entries.remove(&pos);
+        self.sched.remove(class, eta, pos);
+        let tier = match class {
+            SchedClass::HotResident | SchedClass::HotStaged => {
+                if class == SchedClass::HotStaged {
+                    self.staged_hits += 1;
+                }
+                TierKind::Hot
+            }
+            SchedClass::Cold => {
+                self.staged_misses += 1;
+                TierKind::Cold
+            }
+            SchedClass::Spill => {
+                self.staged_misses += 1;
+                TierKind::Spill
+            }
+        };
+        self.restore_latency.record(tier, t0.elapsed());
+        self.total_restored += 1;
+        self.flight.record(self.last_step, pos, Some(tier), None, Cause::Restore, eta);
+        Ok(())
+    }
+
     /// Residency sweep, called once per decode step by the session.
     /// Applies the admission rule continuously: a hot row whose
     /// predicted thaw sits beyond the `cold_after_steps` horizon does
@@ -1015,6 +1111,61 @@ mod tests {
         );
         // the orphan is still restorable the ordinary way
         assert!(s.take(3).unwrap().is_some());
+    }
+
+    #[test]
+    fn peek_decode_is_non_destructive_and_matches_take() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 100).unwrap(); // cold
+        s.stash(2, row(RF, 2.0), 0, 2).unwrap(); // hot
+        let before = s.occupancy();
+        let peek1 = s.peek_decode(1).unwrap().unwrap();
+        let peek2 = s.peek_decode(2).unwrap().unwrap();
+        assert_eq!(s.occupancy(), before, "peek must not move bytes or rows");
+        assert_eq!(s.total_restored, 0);
+        assert_eq!(s.staged_misses, 0);
+        assert_eq!(s.peek_decode(99).unwrap(), None);
+        // a later real take returns exactly the peeked bits (the
+        // payload-stability invariant the speculative pipeline needs)
+        assert_eq!(s.take(1).unwrap(), Some(peek1));
+        assert_eq!(s.take(2).unwrap(), Some(peek2));
+    }
+
+    #[test]
+    fn confirm_restore_bookkeeps_like_take() {
+        let mut a = TieredStore::new(RF, cfg());
+        let mut b = TieredStore::new(RF, cfg());
+        for s in [&mut a, &mut b] {
+            s.stash(1, row(RF, 1.0), 0, 100).unwrap(); // cold
+            s.stash(2, row(RF, 2.0), 0, 2).unwrap(); // hot
+            s.stage(&[(1, 2)]).unwrap(); // promote 1 -> staged hot
+        }
+        a.take(1).unwrap().unwrap();
+        a.take(2).unwrap().unwrap();
+        b.confirm_restore(1).unwrap();
+        b.confirm_restore(2).unwrap();
+        assert_eq!(a.total_restored, b.total_restored);
+        assert_eq!(a.staged_hits, b.staged_hits);
+        assert_eq!(a.staged_misses, b.staged_misses);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.bytes(), b.bytes());
+        assert!(b.confirm_restore(1).is_err(), "double confirm must error");
+    }
+
+    #[test]
+    fn spec_candidates_mirror_stage_upcoming() {
+        let mut s = TieredStore::new(RF, cfg());
+        s.stash(1, row(RF, 1.0), 0, 20).unwrap();
+        s.stash(2, row(RF, 2.0), 0, 12).unwrap();
+        s.stash(3, row(RF, 3.0), 0, 50).unwrap();
+        // horizon clamps to cold_after (8): limit 18 covers only pos 2
+        let c = s.spec_candidates(10, 100, 8);
+        assert_eq!(c, vec![(2, 12)]);
+        // read-only: asking again returns the same set
+        assert_eq!(s.spec_candidates(10, 100, 8), c);
+        assert!(s.promote_speculative(2).unwrap());
+        assert_eq!(s.tier_of(2), Some((TierKind::Hot, true)));
+        assert!(s.spec_candidates(10, 100, 8).is_empty(), "promoted row leaves the frozen queue");
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Property-based equivalence for the pipelined restore path
+//! (`ShardedStore::pipeline_advance`), in the style of
+//! `prop_offload.rs`'s sharding oracle:
+//!
+//! A pipelined `ShardedStore` — speculative reads issued at every step
+//! boundary, executing on the worker pool with a randomized artificial
+//! completion delay (`pipeline_test_delay_us`) so landings race the
+//! foreground trace — must be *observably identical* to a synchronous
+//! single `TieredStore` over random stash/take/drop/stage/sweep
+//! traces:
+//!
+//! * every restored payload is bit-exact against the oracle's
+//!   synchronous `take` (the payload-stability argument: speculation
+//!   only touches cold/spill rows, whose quantized payload is the
+//!   restore source either way);
+//! * conservation holds on the pipelined side at every step —
+//!   `total_stashed == total_restored + total_dropped + resident` —
+//!   including through cancellations (re-freeze fences, deadline
+//!   expiry, drain), which must never leak or double-count a row;
+//! * lifetime stash/restore/drop counters match the oracle exactly
+//!   (staged hit/miss and promotion counters are intentionally NOT
+//!   compared: speculative promotion shifts rows hot ahead of time,
+//!   which is the point of the pipeline).
+//!
+//! Swept across shard counts {1, 4} × both partition schemes, with a
+//! mix of ample-budget (eviction-free) and spill-everything configs.
+
+use asrkf::config::{OffloadConfig, ShardPartition};
+use asrkf::offload::{ShardedStore, TieredStore};
+use asrkf::prop_assert;
+use asrkf::util::prop::{prop_check, G};
+
+const RF: usize = 32;
+
+fn random_row(g: &mut G) -> Vec<f32> {
+    g.vec_f32(RF, -4.0, 4.0)
+}
+
+fn pipeline_cfg(g: &mut G, shards: usize, partition: ShardPartition) -> OffloadConfig {
+    // spill-everything with probability ~0.3: cold budget of one byte
+    // forces every cold admission straight to disk on both sides, so
+    // speculative reads exercise the spill tier too
+    let spill_everything = g.bool(0.3);
+    OffloadConfig {
+        hot_budget_bytes: 1 << 24,
+        cold_budget_bytes: if spill_everything { 1 } else { 1 << 24 },
+        cold_after_steps: g.usize(2, 6) as u64,
+        quantize_cold: g.bool(0.85),
+        spill_dir: if spill_everything {
+            Some(
+                std::env::temp_dir()
+                    .join("asrkf-prop-pipeline")
+                    .to_string_lossy()
+                    .into_owned(),
+            )
+        } else {
+            None
+        },
+        prefetch_ahead: g.usize(1, 6) as u64,
+        block_rows: g.usize(1, 8),
+        shards,
+        shard_partition: partition,
+        pipeline: true,
+        // small per-advance burst keeps worker sleep time bounded
+        stage_burst_rows: 8,
+        restore_deadline_steps: g.usize(1, 3) as u64,
+        // half the traces race in-flight landings against the
+        // foreground ops; the other half land near-instantly
+        pipeline_test_delay_us: if g.bool(0.5) { g.usize(1, 200) as u64 } else { 0 },
+        ..OffloadConfig::default()
+    }
+}
+
+#[test]
+fn prop_pipelined_store_matches_synchronous_oracle() {
+    prop_check(8, |g| {
+        for &n in &[1usize, 4] {
+            for &partition in &[ShardPartition::Hash, ShardPartition::Range] {
+                let cfg = pipeline_cfg(g, n, partition);
+                let mut single_cfg = cfg.clone();
+                single_cfg.shards = 1;
+                single_cfg.pipeline = false;
+                let mut piped =
+                    ShardedStore::new(RF, cfg).map_err(|e| format!("sharded new: {e}"))?;
+                let mut oracle = TieredStore::new(RF, single_cfg);
+                let mut resident: Vec<usize> = Vec::new();
+                let mut next_pos = 0usize;
+
+                for step in 0..60u64 {
+                    // step boundary: launch speculative reads for rows
+                    // due to thaw within the horizon (oracle: no-op)
+                    piped.pipeline_advance(step).map_err(|e| format!("pipeline_advance: {e}"))?;
+
+                    match g.usize(0, 9) {
+                        // stash fresh rows (weighted heaviest); etas
+                        // straddle the cold-admission horizon
+                        0..=3 => {
+                            let k = g.usize(1, 4);
+                            let mut items: Vec<(usize, Vec<f32>, u64)> = Vec::with_capacity(k);
+                            for _ in 0..k {
+                                let eta = step + g.usize(0, 12) as u64;
+                                items.push((next_pos, random_row(g), eta));
+                                resident.push(next_pos);
+                                next_pos += 1;
+                            }
+                            for (pos, row, eta) in &items {
+                                oracle
+                                    .stash(*pos, row.clone(), step, *eta)
+                                    .map_err(|e| format!("oracle stash: {e}"))?;
+                            }
+                            piped.stash_batch(items, step).map_err(|e| format!("stash: {e}"))?;
+                        }
+                        // restore a sorted burst: landed speculative
+                        // copies drain from the staging buffer, the
+                        // rest pays the tier path — either way the
+                        // bytes must match a synchronous take
+                        4..=5 => {
+                            let mut burst: Vec<usize> =
+                                resident.iter().copied().filter(|_| g.bool(0.4)).collect();
+                            burst.sort_unstable();
+                            if burst.is_empty() {
+                                continue;
+                            }
+                            resident.retain(|p| !burst.contains(p));
+                            let got = piped
+                                .take_batch(&burst)
+                                .map_err(|e| format!("take_batch: {e}"))?;
+                            for (&pos, payload) in burst.iter().zip(got) {
+                                let want = oracle
+                                    .take(pos)
+                                    .map_err(|e| format!("oracle take: {e}"))?;
+                                prop_assert!(
+                                    payload == want,
+                                    "restored payload diverged at pos {pos} \
+                                     (n={n}, {partition:?}, step {step})"
+                                );
+                            }
+                        }
+                        // drop a resident row: fences any landed copy
+                        6 => {
+                            if !resident.is_empty() {
+                                let pos = resident.swap_remove(g.usize(0, resident.len() - 1));
+                                piped.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                                oracle.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                            }
+                        }
+                        // thaw-and-refreeze: restore one row, compare,
+                        // then re-stash the SAME position with a new
+                        // payload — a landed or in-flight speculative
+                        // copy of the old bytes must be fenced, never
+                        // served for a later take
+                        7 => {
+                            if !resident.is_empty() {
+                                let pos = resident[g.usize(0, resident.len() - 1)];
+                                let a = piped.take(pos).map_err(|e| format!("take: {e}"))?;
+                                let b = oracle.take(pos).map_err(|e| format!("take: {e}"))?;
+                                prop_assert!(
+                                    a == b,
+                                    "refreeze take diverged at pos {pos} (n={n}, {partition:?})"
+                                );
+                                let row = random_row(g);
+                                let eta = step + g.usize(0, 12) as u64;
+                                piped
+                                    .stash(pos, row.clone(), step, eta)
+                                    .map_err(|e| format!("restash: {e}"))?;
+                                oracle
+                                    .stash(pos, row, step, eta)
+                                    .map_err(|e| format!("restash: {e}"))?;
+                            }
+                        }
+                        // prefetch staging on both sides (promoted-row
+                        // counts are NOT compared: the pipeline may
+                        // have promoted some of these already)
+                        8 => {
+                            let horizon = g.usize(0, 8) as u64;
+                            piped
+                                .stage_upcoming(step, horizon, 16)
+                                .map_err(|e| format!("stage_upcoming: {e}"))?;
+                            oracle
+                                .stage_upcoming(step, horizon, 16)
+                                .map_err(|e| format!("stage_upcoming: {e}"))?;
+                        }
+                        // residency sweep
+                        _ => {
+                            piped.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                            oracle.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                        }
+                    }
+
+                    // land everything in flight, then check the
+                    // aggregate invariants (in-flight shards are
+                    // checked out, so aggregates need a settled store)
+                    piped.settle().map_err(|e| format!("settle: {e}"))?;
+                    prop_assert!(
+                        piped.len() == oracle.len() && piped.len() == resident.len(),
+                        "resident mismatch at step {step}: piped {} vs oracle {} vs model {}",
+                        piped.len(),
+                        oracle.len(),
+                        resident.len()
+                    );
+                    prop_assert!(
+                        piped.total_stashed()
+                            == piped.total_restored() + piped.total_dropped() + piped.len() as u64,
+                        "pipelined conservation violated at step {step}: {} != {} + {} + {}",
+                        piped.total_stashed(),
+                        piped.total_restored(),
+                        piped.total_dropped(),
+                        piped.len()
+                    );
+                    prop_assert!(
+                        piped.total_stashed() == oracle.total_stashed
+                            && piped.total_restored() == oracle.total_restored
+                            && piped.total_dropped() == oracle.total_dropped,
+                        "lifetime counters diverged at step {step} (n={n}, {partition:?})"
+                    );
+                }
+
+                // speculative bookkeeping sanity: everything issued
+                // either landed or was cancelled at landing, and only
+                // landed copies can be consumed
+                prop_assert!(
+                    piped.spec_landed <= piped.spec_issued,
+                    "landed {} > issued {}",
+                    piped.spec_landed,
+                    piped.spec_issued
+                );
+                prop_assert!(
+                    piped.spec_consumed <= piped.spec_landed,
+                    "consumed {} > landed {}",
+                    piped.spec_consumed,
+                    piped.spec_landed
+                );
+
+                // drain discards unconsumed landed copies (counted as
+                // cancels) and must still hand back identical contents
+                let mut a = piped.drain_all().map_err(|e| format!("drain: {e}"))?;
+                let mut b = oracle.drain_all().map_err(|e| format!("drain: {e}"))?;
+                a.sort_by_key(|(p, _)| *p);
+                b.sort_by_key(|(p, _)| *p);
+                prop_assert!(a == b, "drained contents diverged (n={n}, {partition:?})");
+                prop_assert!(piped.is_empty() && oracle.is_empty(), "drain left residents");
+                prop_assert!(
+                    piped.total_stashed() == piped.total_restored() + piped.total_dropped(),
+                    "post-drain conservation violated"
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -87,9 +87,15 @@ impl Harness {
                 scores[p] = 0.001;
             }
         }
-        self.session
+        let action = self
+            .session
             .absorb(token, logits, &scores, &self.plan, CallTiming::default(), Duration::ZERO)
-            .unwrap()
+            .unwrap();
+        // land in-flight speculative restores before the tests below
+        // inspect store aggregates (the engines settle the same way
+        // before reading counters; see ShardedStore::settle)
+        self.session.store.settle().unwrap();
+        action
     }
 }
 

@@ -341,6 +341,7 @@ fn chrome_trace_reconciles_against_conservation_totals() {
             start_us: 1_000 * i,
             plan_us: 100,
             restore_us: 50,
+            restore_wait_us: 20,
             freeze_us: 30,
             compute_us: 200,
         })
@@ -386,10 +387,14 @@ fn chrome_trace_reconciles_against_conservation_totals() {
     // the decode-step track preserves every nonzero segment duration
     let spans: Vec<&Json> =
         trace.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
-    assert_eq!(spans.len(), 4 * steps.len(), "plan/restore/freeze/compute per step");
+    assert_eq!(
+        spans.len(),
+        5 * steps.len(),
+        "plan/restore/restore wait/freeze/compute per step"
+    );
     let dur_sum: f64 = spans.iter().filter_map(|e| e.get("dur").as_f64()).sum();
-    assert_eq!(dur_sum as u64, 3 * (100 + 50 + 30 + 200));
-    for name in ["plan", "restore", "freeze", "compute"] {
+    assert_eq!(dur_sum as u64, 3 * (100 + 50 + 20 + 30 + 200));
+    for name in ["plan", "restore", "restore wait", "freeze", "compute"] {
         assert!(
             spans.iter().any(|e| e.get("name").as_str() == Some(name)),
             "missing {name} segment track"
@@ -547,7 +552,8 @@ fn step_segments_account_for_wall_clock() {
         steps: 3,
         plan_us: 100,
         restore_us: 50,
-        compute_us: 800,
+        restore_wait_us: 20,
+        compute_us: 780,
         freeze_us: 50,
         wall_us: 1000,
     };
