@@ -27,13 +27,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         if let Some(sleep) = target.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
-        let rx = handle.submit(GenParams {
-            prompt: req.prompt.clone(),
-            max_new: req.max_new,
-            policy: "asrkf".into(),
-            seed: req.arrival_ms,
-        })?;
-        waits.push((req.arrival_ms, rx));
+        let ticket = handle.submit(
+            GenParams::builder(req.prompt.clone())
+                .max_new(req.max_new)
+                .seed(req.arrival_ms)
+                .build(),
+        )?;
+        waits.push((req.arrival_ms, ticket));
     }
 
     let mut table = Table::new(
@@ -43,8 +43,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut total_tokens = 0usize;
     let (mut ttft_sum, mut e2e_sum) = (0.0f64, 0.0f64);
     let n = waits.len();
-    for (i, (_, rx)) in waits.into_iter().enumerate() {
-        let resp = rx.recv()?;
+    for (i, (_, ticket)) in waits.into_iter().enumerate() {
+        let resp = ticket.wait()?;
         if let Some(e) = &resp.error {
             println!("request {i} failed: {e}");
             continue;

@@ -304,24 +304,23 @@ fn runtime_rows(
         let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
         let (handle, join) = spawn(cfg, server)?;
         let t0 = Instant::now();
-        let rxs: Vec<_> = trace
+        let tickets: Vec<_> = trace
             .iter()
             .map(|r| {
-                handle.submit(GenParams {
-                    prompt: r.prompt.clone(),
-                    max_new: r.max_new,
-                    policy: "asrkf".into(),
-                    seed: r.arrival_ms,
-                    resume_spill: false,
-                })
+                handle.submit(
+                    GenParams::builder(r.prompt.clone())
+                        .max_new(r.max_new)
+                        .seed(r.arrival_ms)
+                        .build(),
+                )
             })
             .collect::<Result<_, _>>()?;
         let mut tokens = 0usize;
         let mut e2e_sum = 0.0;
         let mut summaries = Vec::new();
         let mut plan_lats = Vec::new();
-        for rx in rxs {
-            let resp = rx.recv()?;
+        for ticket in tickets {
+            let resp = ticket.wait()?;
             assert!(resp.error.is_none(), "{:?}", resp.error);
             tokens += resp.generated_tokens;
             e2e_sum += resp.e2e.as_secs_f64() * 1000.0;

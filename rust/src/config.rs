@@ -300,6 +300,187 @@ impl OffloadConfig {
             ..self.clone()
         }
     }
+
+    /// Class-weighted budget slice for `member` of a weighted partition
+    /// (continuous batching: one weight per occupied coordinator slot,
+    /// taken from the slot's [`QosClass`]). Built on [`weighted_shares`],
+    /// so equal weights reproduce [`OffloadConfig::partitioned`] exactly
+    /// — the oracle tested in this module and in
+    /// `tests/coordinator_test.rs`.
+    pub fn weighted(&self, weights: &[u64], member: usize) -> OffloadConfig {
+        if weights.is_empty() {
+            return self.partitioned(1, 0);
+        }
+        let member = member.min(weights.len() - 1);
+        OffloadConfig {
+            hot_budget_bytes: weighted_shares(self.hot_budget_bytes, weights)[member],
+            cold_budget_bytes: weighted_shares(self.cold_budget_bytes, weights)[member],
+            ..self.clone()
+        }
+    }
+}
+
+/// Largest-remainder split of `total` into one share per weight:
+/// member `i` gets `floor(total * w_i / sum(w))` plus at most one of
+/// the leftover units, handed out by descending fractional remainder
+/// (ties broken toward the lower index). Shares always sum exactly to
+/// `total`. With equal weights the quotients and remainders are
+/// identical for every member, so the leftover lands on the lowest
+/// indices — byte-for-byte the [`OffloadConfig::partitioned`] split.
+/// All-zero weights degrade to an equal split rather than divide by
+/// zero.
+pub fn weighted_shares(total: usize, weights: &[u64]) -> Vec<usize> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let w_sum: u128 = weights.iter().map(|&w| w as u128).sum();
+    if w_sum == 0 {
+        return (0..n).map(|i| total / n + usize::from(i < total % n)).collect();
+    }
+    let mut shares = Vec::with_capacity(n);
+    let mut remainders = Vec::with_capacity(n);
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let scaled = total as u128 * w as u128;
+        let base = (scaled / w_sum) as usize;
+        shares.push(base);
+        assigned += base;
+        remainders.push((scaled % w_sum, i));
+    }
+    remainders.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, i) in remainders.iter().take(total - assigned) {
+        shares[i] += 1;
+    }
+    shares
+}
+
+/// Quality-of-service class attached to every coordinator request.
+/// Declaration order is priority order: the scheduler always pops the
+/// lowest-index non-empty class queue, and admission sheds toward
+/// higher indices (lower classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QosClass {
+    /// Latency-sensitive traffic: popped first, largest default budget
+    /// weight.
+    Interactive,
+    /// The default for requests that don't state a class (and the class
+    /// assigned to every legacy wire request).
+    Standard,
+    /// Throughput traffic: popped last, smallest weight, and the final
+    /// shed target before an outright reject.
+    Batch,
+}
+
+impl QosClass {
+    pub const COUNT: usize = 3;
+    /// All classes in priority order (highest first).
+    pub const ALL: [QosClass; QosClass::COUNT] =
+        [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+
+    /// Wire/flag spelling (also the metrics `class` label value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Standard => "standard",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire `class` field or `--class` flag value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "interactive" => Ok(QosClass::Interactive),
+            "standard" => Ok(QosClass::Standard),
+            "batch" => Ok(QosClass::Batch),
+            other => Err(format!(
+                "qos class: expected 'interactive', 'standard' or 'batch', got '{other}'"
+            )),
+        }
+    }
+
+    /// Stable index into per-class arrays (priority order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// The next lower class (shed target), or `None` from `Batch`.
+    pub fn lower(self) -> Option<QosClass> {
+        match self {
+            QosClass::Interactive => Some(QosClass::Standard),
+            QosClass::Standard => Some(QosClass::Batch),
+            QosClass::Batch => None,
+        }
+    }
+}
+
+/// QoS scheduling knobs for the continuous-batching coordinator.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Budget-slice weight per class, indexed by [`QosClass::index`]
+    /// (`--qos-weights I,S,B`). Occupied slots split the tier budgets
+    /// in proportion to their class weight (`weighted_shares`); equal
+    /// weights reproduce the old static `1/B` split.
+    pub weights: [u64; QosClass::COUNT],
+    /// Per-class queue depth (`--qos-queue-depth`): arrivals beyond
+    /// this on a class queue get a typed `queue_full` reject.
+    pub queue_depth: usize,
+    /// Admission headroom (`--admission-headroom`): the projected
+    /// per-slot hot slice must clear `(1 + headroom)` times the hard
+    /// floor (one row per shard) before a request is admitted at its
+    /// class; below that it sheds toward `Batch`, then rejects.
+    pub admission_headroom: f32,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig { weights: [4, 2, 1], queue_depth: 64, admission_headroom: 0.25 }
+    }
+}
+
+impl QosConfig {
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let d = QosConfig::default();
+        let weights = {
+            let spec = args.str_or(
+                "qos-weights",
+                &format!("{},{},{}", d.weights[0], d.weights[1], d.weights[2]),
+            );
+            let parts: Vec<&str> = spec.split(',').collect();
+            if parts.len() != QosClass::COUNT {
+                return Err(format!(
+                    "--qos-weights: expected {} comma-separated weights \
+                     (interactive,standard,batch), got '{spec}'",
+                    QosClass::COUNT
+                ));
+            }
+            let mut w = [0u64; QosClass::COUNT];
+            for (i, p) in parts.iter().enumerate() {
+                w[i] = p
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("--qos-weights: '{p}' is not a non-negative integer"))?;
+            }
+            if w.iter().all(|&x| x == 0) {
+                return Err("--qos-weights: at least one class weight must be non-zero".to_string());
+            }
+            w
+        };
+        let headroom = args.f32_or("admission-headroom", d.admission_headroom)?;
+        if !(0.0..=4.0).contains(&headroom) {
+            return Err(format!("--admission-headroom: {headroom} outside [0, 4]"));
+        }
+        Ok(QosConfig {
+            weights,
+            queue_depth: args.usize_in("qos-queue-depth", d.queue_depth, 1, 1 << 20)?,
+            admission_headroom: headroom,
+        })
+    }
+
+    /// Weight for one class.
+    pub fn weight(&self, class: QosClass) -> u64 {
+        self.weights[class.index()]
+    }
 }
 
 /// Entropy-guided recovery ladder (paper §3.6, implemented here).
@@ -380,13 +561,18 @@ impl EngineConfig {
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub addr: String,
-    /// Max queued requests before admission control rejects.
+    /// Capacity of the socket → scheduler handoff channel; a full
+    /// channel back-pressures `CoordinatorHandle::submit` (the
+    /// per-class scheduling queues behind it are bounded separately by
+    /// `qos.queue_depth`).
     pub queue_cap: usize,
     /// Max sessions batched together (bounded by decode bucket sizes).
     pub max_batch: usize,
     /// Batcher wait for fill (microseconds) before dispatching a
     /// partially-full batch.
     pub batch_wait_us: u64,
+    /// QoS scheduling + admission knobs.
+    pub qos: QosConfig,
 }
 
 impl Default for ServerConfig {
@@ -396,7 +582,21 @@ impl Default for ServerConfig {
             queue_cap: 256,
             max_batch: 8,
             batch_wait_us: 2000,
+            qos: QosConfig::default(),
         }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let d = ServerConfig::default();
+        Ok(ServerConfig {
+            addr: args.str_or("addr", &d.addr),
+            queue_cap: args.usize_or("queue-cap", d.queue_cap)?,
+            max_batch: args.usize_or("max-batch", d.max_batch)?,
+            batch_wait_us: args.u64_or("batch-wait-us", d.batch_wait_us)?,
+            qos: QosConfig::from_args(args)?,
+        })
     }
 }
 
@@ -532,6 +732,99 @@ mod tests {
         // store rejects unusable hot slices at construction)
         let tiny = OffloadConfig { hot_budget_bytes: 2, ..Default::default() };
         assert_eq!(tiny.partitioned(3, 2).hot_budget_bytes, 0);
+    }
+
+    #[test]
+    fn weighted_shares_sum_exactly_and_order_by_weight() {
+        let s = weighted_shares(1000, &[4, 2, 1]);
+        assert_eq!(s.iter().sum::<usize>(), 1000, "no bytes dropped");
+        assert!(s[0] > s[1] && s[1] > s[2], "heavier class gets the bigger slice: {s:?}");
+        // degenerate inputs
+        assert!(weighted_shares(10, &[]).is_empty());
+        assert_eq!(weighted_shares(7, &[0, 0, 0]), vec![3, 2, 2], "all-zero falls back to equal");
+        assert_eq!(weighted_shares(5, &[0, 3]), vec![0, 5], "zero-weight member gets nothing");
+    }
+
+    #[test]
+    fn equal_weights_reproduce_partitioned_oracle() {
+        // The acceptance oracle: a uniform weight vector must reproduce
+        // OffloadConfig::partitioned byte-for-byte, for every member,
+        // totals with and without remainders, and any uniform weight.
+        for total in [0usize, 1, 2, 10, 101, 4096, 64 << 20] {
+            let o = OffloadConfig {
+                hot_budget_bytes: total,
+                cold_budget_bytes: total / 3,
+                ..Default::default()
+            };
+            for n in 1..=8usize {
+                for w in [1u64, 2, 7] {
+                    let weights = vec![w; n];
+                    for member in 0..n {
+                        let ws = o.weighted(&weights, member);
+                        let ps = o.partitioned(n, member);
+                        let tag = format!("{total}/{n}@{member} w={w}");
+                        assert_eq!(ws.hot_budget_bytes, ps.hot_budget_bytes, "hot {tag}");
+                        assert_eq!(ws.cold_budget_bytes, ps.cold_budget_bytes, "cold {tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qos_class_spelling_roundtrips_and_orders() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.as_str()).unwrap(), c);
+        }
+        assert!(QosClass::parse("premium").is_err());
+        assert!(QosClass::Interactive < QosClass::Standard);
+        assert_eq!(QosClass::Interactive.lower(), Some(QosClass::Standard));
+        assert_eq!(QosClass::Batch.lower(), None, "Batch is the last shed target");
+        assert_eq!(QosClass::Batch.index(), 2);
+    }
+
+    #[test]
+    fn qos_flags_parse_and_bound() {
+        let d = QosConfig::default();
+        assert_eq!(d.weights, [4, 2, 1]);
+        assert_eq!(d.queue_depth, 64);
+        assert!((d.admission_headroom - 0.25).abs() < 1e-6);
+
+        let a = args(&[
+            "serve",
+            "--qos-weights",
+            "8,2,1",
+            "--qos-queue-depth",
+            "16",
+            "--admission-headroom",
+            "0.5",
+        ]);
+        let q = QosConfig::from_args(&a).unwrap();
+        assert_eq!(q.weights, [8, 2, 1]);
+        assert_eq!(q.weight(QosClass::Interactive), 8);
+        assert_eq!(q.queue_depth, 16);
+        assert!((q.admission_headroom - 0.5).abs() < 1e-6);
+
+        for bad in [
+            vec!["serve", "--qos-weights", "1,2"],
+            vec!["serve", "--qos-weights", "a,b,c"],
+            vec!["serve", "--qos-weights", "0,0,0"],
+            vec!["serve", "--qos-queue-depth", "0"],
+            vec!["serve", "--admission-headroom", "9"],
+        ] {
+            assert!(QosConfig::from_args(&args(&bad)).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn server_config_from_args_carries_qos() {
+        let s = ServerConfig::from_args(&args(&["serve"])).unwrap();
+        assert_eq!(s.addr, "127.0.0.1:7341");
+        assert_eq!(s.qos.weights, [4, 2, 1]);
+        let a = args(&["serve", "--max-batch", "4", "--qos-weights", "1,1,1"]);
+        let s = ServerConfig::from_args(&a).unwrap();
+        assert_eq!(s.max_batch, 4);
+        assert_eq!(s.qos.weights, [1, 1, 1]);
     }
 
     #[test]

@@ -1,26 +1,35 @@
-//! Continuous batching engine: the vLLM-style serving core.
+//! Continuous batching engine: the vLLM-style serving core, QoS-aware.
 //!
 //! One coordinator thread owns the PJRT runtime, a persistent batched
 //! KV buffer with `B` session slots, and the request loop:
 //!
-//!   1. admit queued requests into free slots (prefill via the B=1
-//!      prefill bucket, rows copied into the slot),
-//!   2. run ONE batched decode step for all occupied slots,
-//!   3. per-slot policy bookkeeping — each slot's freezes and restores
+//!   1. drain arrivals into per-class priority queues
+//!      ([`ClassQueues`]); overflow is a typed `queue_full` reject,
+//!   2. admit from the highest-priority queue into free slots while the
+//!      admission projection holds ([`AdmissionController`]: every
+//!      occupied slot's class-weighted hot slice must clear the
+//!      envelope, with shed-to-lower-class before reject), prefill via
+//!      the B=1 prefill bucket,
+//!   3. reflow tier budgets at the step boundary when the slot
+//!      population changed (`Session::reslice_budgets` — freed budget
+//!      from retired sessions flows to the occupied slots),
+//!   4. run ONE batched decode step for all occupied slots,
+//!   5. per-slot policy bookkeeping — each slot's freezes and restores
 //!      execute as one batch against the shared cache (contiguous
 //!      position runs coalesce into span copies, see
 //!      `engine::layout::scatter_rows`),
-//!   4. retire finished sessions and answer their channels.
+//!   6. retire finished sessions and answer their channels.
 //!
 //! Sessions join and leave between steps — decode never waits for the
 //! batch to fill (continuous batching, not static batching).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 use crate::baselines::make_policy;
-use crate::config::{EngineConfig, ServerConfig};
-use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::config::{EngineConfig, QosClass, ServerConfig};
+use crate::coordinator::qos::{Admission, AdmissionController, ClassQueues};
+use crate::coordinator::request::{GenRequest, GenResponse, Reject, RejectReason};
 use crate::engine::layout::{insert_prefill, KvGeom};
 use crate::engine::session::Session;
 use crate::error::{Error, Result};
@@ -36,6 +45,10 @@ struct Slot {
     first_token_at: Option<Instant>,
     respond: std::sync::mpsc::Sender<GenResponse>,
     id: u64,
+    /// Effective QoS class (after any admission shed): scheduling
+    /// weight for budget reflow and the `class` label on this slot's
+    /// latency series.
+    class: QosClass,
 }
 
 pub struct BatchEngine {
@@ -45,12 +58,24 @@ pub struct BatchEngine {
     geom: KvGeom,
     kv: Vec<f32>,
     slots: Vec<Option<Slot>>,
+    /// Occupied-slot count maintained on admit/retire so the hot loop
+    /// never rescans `slots` (it used to, several times per step).
+    occupied_count: usize,
+    /// Slot population changed since the last step boundary — budgets
+    /// need a reflow before the next decode.
+    rebalance_pending: bool,
+    /// Per-class arrival queues, popped in priority order.
+    queues: ClassQueues<GenRequest>,
+    admission: AdmissionController,
     /// per-slot plan buffers, refilled in place each step so plan
     /// construction never allocates in steady state
     plan_bufs: Vec<crate::kv::Plan>,
     pub stats: ServingStats,
     pub ttft_hist: Histogram,
     pub e2e_hist: Histogram,
+    /// time from submit to slot admission (queue wait, all classes;
+    /// per-class distributions go to the registry)
+    pub queue_wait_hist: Histogram,
     pub step_hist: Histogram,
     /// per-step policy control-plane time merged from retired sessions
     pub plan_hist: Histogram,
@@ -92,6 +117,9 @@ impl BatchEngine {
         let kv = vec![0.0f32; geom.floats()];
         let slots = (0..decode.batch).map(|_| None).collect();
         let plan_bufs = (0..decode.batch).map(|_| crate::kv::Plan::default()).collect();
+        let admission =
+            AdmissionController::new(server.qos.clone(), &cfg.offload, model.kv_row_floats);
+        let queues = ClassQueues::new(server.qos.queue_depth);
         Ok(BatchEngine {
             rt,
             cfg,
@@ -99,10 +127,15 @@ impl BatchEngine {
             geom,
             kv,
             slots,
+            occupied_count: 0,
+            rebalance_pending: false,
+            queues,
+            admission,
             plan_bufs,
             stats: ServingStats::default(),
             ttft_hist: Histogram::default(),
             e2e_hist: Histogram::default(),
+            queue_wait_hist: Histogram::default(),
             step_hist: Histogram::default(),
             plan_hist: Histogram::default(),
             restore_hist: RestoreLatency::default(),
@@ -119,34 +152,75 @@ impl BatchEngine {
     }
 
     fn occupied(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        debug_assert_eq!(
+            self.occupied_count,
+            self.slots.iter().filter(|s| s.is_some()).count(),
+            "occupancy counter out of sync with the slot array"
+        );
+        self.occupied_count
     }
 
-    /// Serve until `rx` disconnects and all in-flight sessions finish.
+    /// Vacate slot `i` (retire/fail): keeps the occupancy counter in
+    /// sync and marks the budgets for reflow at the next step boundary.
+    fn clear_slot(&mut self, i: usize) -> Option<Slot> {
+        let slot = self.slots[i].take();
+        if slot.is_some() {
+            self.occupied_count -= 1;
+            self.rebalance_pending = true;
+        }
+        slot
+    }
+
+    /// Classes of the occupied slots in slot order, with slot indices —
+    /// the member list every budget split is computed over.
+    fn occupied_members(&self) -> Vec<(usize, QosClass)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|s| (i, s.class)))
+            .collect()
+    }
+
+    /// Serve until `rx` disconnects, the class queues drain, and all
+    /// in-flight sessions finish.
     pub fn run(&mut self, rx: Receiver<GenRequest>) {
         let mut disconnected = false;
         loop {
-            // admit as many requests as there are free slots
-            while self.occupied() < self.slots.len() && !disconnected {
+            // drain arrivals into the class queues (overflow rejects
+            // immediately, so the producer side never wedges)
+            while !disconnected {
                 match rx.try_recv() {
-                    Ok(req) => self.admit(req),
-                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                        disconnected = true;
-                    }
+                    Ok(req) => self.enqueue(req),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => disconnected = true,
                 }
             }
+            // admit in priority order while slots are free; rejects and
+            // sheds resolve inside admit()
+            while self.occupied() < self.slots.len() {
+                match self.queues.pop() {
+                    Some((_, req)) => self.admit(req),
+                    None => break,
+                }
+            }
+            self.publish_queue_depths();
             if self.occupied() == 0 {
+                // the admit loop only stops on empty queues while slots
+                // are free, so idle here means nothing is waiting
                 if disconnected {
                     return;
                 }
-                // idle: block for the next request
                 match rx.recv_timeout(Duration::from_millis(100)) {
-                    Ok(req) => self.admit(req),
+                    Ok(req) => {
+                        self.enqueue(req);
+                        continue;
+                    }
                     Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => return,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        disconnected = true;
+                        continue;
+                    }
                 }
-                continue;
             }
             if let Err(e) = self.step() {
                 log::error!("batched decode step failed: {e}");
@@ -155,8 +229,99 @@ impl BatchEngine {
         }
     }
 
-    /// Admit one request: prefill and bind to a free slot.
+    /// Queue one arrival at its requested class; a full class queue is
+    /// a typed `queue_full` reject.
+    fn enqueue(&mut self, req: GenRequest) {
+        let class = req.params.qos;
+        if let Err(req) = self.queues.push(class, req) {
+            let depth = self.queues.depths()[class.index()];
+            let detail = format!("{} queue full at depth {depth}", class.as_str());
+            self.reject(req, RejectReason::QueueFull, detail);
+        }
+    }
+
+    /// Answer a request with a typed admission reject.
+    fn reject(&mut self, req: GenRequest, reason: RejectReason, detail: String) {
+        let requested = req.params.qos;
+        self.stats.requests_rejected += 1;
+        Registry::global().publish(|reg| {
+            reg.counter_add("asrkf_requests_rejected_total", &[], 1);
+            reg.counter_add(
+                "asrkf_admission_total",
+                &[("class", requested.as_str()), ("decision", "reject")],
+                1,
+            );
+        });
+        let reject = Reject { reason, requested, detail };
+        let _ = req.respond.send(GenResponse::rejected(req.id, reject));
+    }
+
+    fn publish_queue_depths(&self) {
+        let depths = self.queues.depths();
+        Registry::global().publish(|reg| {
+            for c in QosClass::ALL {
+                reg.gauge_set(
+                    "asrkf_queue_depth",
+                    &[("class", c.as_str())],
+                    depths[c.index()] as f64,
+                );
+            }
+        });
+    }
+
+    /// Admit one request: capacity check, admission projection (with
+    /// shed-to-lower-class), then prefill into a free slot.
     fn admit(&mut self, req: GenRequest) {
+        let requested = req.params.qos;
+        let waited = Instant::now().saturating_duration_since(req.arrived);
+        self.queue_wait_hist.record(waited);
+        Registry::global().time_record(
+            "asrkf_queue_wait_us",
+            &[("class", requested.as_str())],
+            waited,
+        );
+
+        let tokens = tokenizer::encode(&req.params.prompt);
+        if tokens.is_empty() {
+            self.stats.requests_rejected += 1;
+            Registry::global().counter_add("asrkf_requests_rejected_total", &[], 1);
+            let _ = req.respond.send(GenResponse::error(req.id, "empty prompt"));
+            return;
+        }
+        let need = tokens.len() + req.params.max_new;
+        if need > self.decode.kv_len {
+            let detail = format!(
+                "request needs {need} KV rows, bucket capacity is {}",
+                self.decode.kv_len
+            );
+            self.reject(req, RejectReason::KvCapacity, detail);
+            return;
+        }
+
+        let occupied: Vec<QosClass> =
+            self.occupied_members().into_iter().map(|(_, c)| c).collect();
+        let class = match self.admission.admit(&occupied, requested) {
+            Admission::Admit => requested,
+            Admission::Shed(lower) => {
+                self.stats.requests_shed += 1;
+                Registry::global().counter_add(
+                    "asrkf_admission_total",
+                    &[("class", requested.as_str()), ("decision", "shed")],
+                    1,
+                );
+                log::info!("request {} shed {} -> {}", req.id, requested.as_str(), lower.as_str());
+                lower
+            }
+            Admission::Reject(reason) => {
+                let detail = format!(
+                    "projected hot-tier slice below the {}-B admission envelope",
+                    self.admission.floor_bytes()
+                );
+                self.reject(req, reason, detail);
+                return;
+            }
+        };
+
         let slot_idx = match self.slots.iter().position(|s| s.is_none()) {
             Some(i) => i,
             None => {
@@ -166,29 +331,38 @@ impl BatchEngine {
                 return;
             }
         };
-        match self.prefill_into_slot(&req, slot_idx) {
-            Ok(()) => {}
+        match self.prefill_into_slot(&req, &tokens, slot_idx, class) {
+            Ok(()) => {
+                Registry::global().counter_add(
+                    "asrkf_admission_total",
+                    &[("class", class.as_str()), ("decision", "accept")],
+                    1,
+                );
+            }
             Err(e) => {
                 self.stats.requests_rejected += 1;
-                Registry::global().counter_add("asrkf_requests_rejected_total", &[], 1);
+                Registry::global().publish(|reg| {
+                    reg.counter_add("asrkf_requests_rejected_total", &[], 1);
+                    reg.counter_add(
+                        "asrkf_admission_total",
+                        &[("class", requested.as_str()), ("decision", "reject")],
+                        1,
+                    );
+                });
                 let _ = req.respond.send(GenResponse::error(req.id, format!("{e}")));
             }
         }
     }
 
-    fn prefill_into_slot(&mut self, req: &GenRequest, slot_idx: usize) -> Result<()> {
+    fn prefill_into_slot(
+        &mut self,
+        req: &GenRequest,
+        tokens: &[i32],
+        slot_idx: usize,
+        class: QosClass,
+    ) -> Result<()> {
         let model = self.rt.manifest.model.clone();
-        let tokens = tokenizer::encode(&req.params.prompt);
-        if tokens.is_empty() {
-            return Err(Error::Coordinator("empty prompt".into()));
-        }
-        let need = tokens.len() + req.params.max_new;
-        if need > self.decode.kv_len {
-            return Err(Error::Coordinator(format!(
-                "request needs {need} KV rows, bucket capacity is {} (admission control)",
-                self.decode.kv_len
-            )));
-        }
+        let tokens = tokens.to_vec();
         let prefill = self.rt.prefill_for(tokens.len())?;
         let l = prefill.len;
         let mut padded = tokens.clone();
@@ -201,12 +375,21 @@ impl BatchEngine {
 
         let mut cfg = self.cfg.clone();
         cfg.sampling.seed = req.params.seed;
-        // per-slot budget partition: B sessions share the configured
-        // offload byte budgets (remainder bytes land on the leading
-        // slots). Each slot's session then shards its slice across
-        // `cfg.offload.shards` worker-backed stores, so a slot's
-        // restore bursts parallelize without touching its neighbours.
-        cfg.offload = cfg.offload.partitioned(self.slots.len(), slot_idx);
+        // class-weighted budget slice over the would-be slot population
+        // (occupied slots + this one, in slot order): the same split
+        // the reflow installs for the incumbents at the next step
+        // boundary, so the population's slices are consistent from the
+        // first decode. Equal class weights with a full batch reproduce
+        // the old static `partitioned(B, slot)` split. Each slot's
+        // session then shards its slice across `cfg.offload.shards`
+        // worker-backed stores, so a slot's restore bursts parallelize
+        // without touching its neighbours.
+        let mut members = self.occupied_members();
+        let rank = members.iter().filter(|&&(i, _)| i < slot_idx).count();
+        members.insert(rank, (slot_idx, class));
+        let classes: Vec<QosClass> = members.iter().map(|&(_, c)| c).collect();
+        let shares = self.admission.shares(&classes, cfg.offload.cold_budget_bytes);
+        (cfg.offload.hot_budget_bytes, cfg.offload.cold_budget_bytes) = shares[rank];
         // persistent spill: each slot owns a subdirectory, so slot
         // stores never share manifests or record files (the manifest's
         // one-writer-per-directory contract). A restarted coordinator
@@ -253,13 +436,55 @@ impl BatchEngine {
             first_token_at: None,
             respond: req.respond.clone(),
             id: req.id,
+            class,
         });
+        self.occupied_count += 1;
+        // incumbents shrink to their share of the new split at the
+        // next step boundary
+        self.rebalance_pending = true;
         Ok(())
+    }
+
+    /// Install the class-weighted budget split for the current slot
+    /// population (skipped when unchanged since the last boundary):
+    /// freed budget from retired sessions reflows to the occupied
+    /// slots, shrunken slices demote immediately inside the store. A
+    /// session that cannot adopt its new slice retires with an error,
+    /// like any other storage failure.
+    fn rebalance_budgets(&mut self) {
+        if !self.rebalance_pending {
+            return;
+        }
+        self.rebalance_pending = false;
+        let members = self.occupied_members();
+        if members.is_empty() {
+            return;
+        }
+        let classes: Vec<QosClass> = members.iter().map(|&(_, c)| c).collect();
+        let shares = self.admission.shares(&classes, self.cfg.offload.cold_budget_bytes);
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        for (rank, &(idx, _)) in members.iter().enumerate() {
+            let (hot, cold) = shares[rank];
+            if let Some(slot) = self.slots[idx].as_mut() {
+                if let Err(e) = slot.session.reslice_budgets(hot, cold) {
+                    failed.push((idx, format!("{e}")));
+                }
+            }
+        }
+        for (i, msg) in failed {
+            log::error!("slot {i}: retiring session after budget reflow failure: {msg}");
+            if let Some(slot) = self.clear_slot(i) {
+                let _ = slot.respond.send(GenResponse::error(slot.id, msg));
+            }
+        }
     }
 
     /// One batched decode step over all occupied slots.
     pub fn step(&mut self) -> Result<()> {
         let t0 = Instant::now();
+        // step boundary: adopt the weighted budget split if the slot
+        // population changed since the last step
+        self.rebalance_budgets();
         let b = self.slots.len();
         let s = self.decode.kv_len;
         let r = self.cfg.freeze.r_budget.min(self.decode.r_budget.max(1));
@@ -292,7 +517,7 @@ impl BatchEngine {
         }
         for (i, msg) in failed {
             log::error!("slot {i}: retiring session after storage failure: {msg}");
-            if let Some(slot) = self.slots[i].take() {
+            if let Some(slot) = self.clear_slot(i) {
                 let _ = slot.respond.send(GenResponse::error(slot.id, msg));
             }
         }
@@ -338,7 +563,7 @@ impl BatchEngine {
             };
             if let Some(e) = absorb_err {
                 log::error!("slot {i}: retiring session after staging failure: {e}");
-                if let Some(slot) = self.slots[i].take() {
+                if let Some(slot) = self.clear_slot(i) {
                     let _ = slot.respond.send(GenResponse::error(slot.id, format!("{e}")));
                 }
                 continue;
@@ -348,7 +573,15 @@ impl BatchEngine {
             if slot.first_token_at.is_none() {
                 slot.first_token_at = Some(now);
                 self.ttft_hist.record(now - slot.arrived);
-                Registry::global().time_record("asrkf_ttft_us", &[], now - slot.arrived);
+                // aggregate series (back-compat) + per-class breakdown
+                Registry::global().publish(|reg| {
+                    reg.time_record("asrkf_ttft_us", &[], now - slot.arrived);
+                    reg.time_record(
+                        "asrkf_ttft_us",
+                        &[("class", slot.class.as_str())],
+                        now - slot.arrived,
+                    );
+                });
             }
             self.stats.tokens_generated += 1;
             Registry::global().counter_add("asrkf_tokens_generated_total", &[], 1);
@@ -367,9 +600,11 @@ impl BatchEngine {
                 // (flows only: the retiring store's gauges are stale by
                 // definition — live occupancy is published per step)
                 sess.publish_to_registry(Registry::global());
+                let class = slot.class;
                 Registry::global().publish(|reg| {
                     reg.counter_add("asrkf_requests_completed_total", &[], 1);
                     reg.time_record("asrkf_e2e_us", &[], e2e);
+                    reg.time_record("asrkf_e2e_us", &[("class", class.as_str())], e2e);
                 });
                 let offload = sess.offload_summary();
                 self.stats.staged_hits += offload.staged_hits;
@@ -384,6 +619,8 @@ impl BatchEngine {
                     id: slot.id,
                     text: sess.generated_text(),
                     error: None,
+                    class,
+                    reject: None,
                     prompt_tokens: sess.prompt_len,
                     generated_tokens: sess.generated(),
                     final_active_kv: sess.active_kv(),
@@ -395,7 +632,7 @@ impl BatchEngine {
                 };
                 let _ = slot.respond.send(resp);
                 self.stats.requests_completed += 1;
-                self.slots[i] = None;
+                self.clear_slot(i);
             }
         }
         // live occupancy across every occupied slot, summed per tier.
@@ -411,6 +648,10 @@ impl BatchEngine {
             occ.spill_rows += o.spill_rows;
             occ.spill_bytes += o.spill_bytes;
         }
+        let mut per_class = [0usize; QosClass::COUNT];
+        for slot in self.slots.iter().flatten() {
+            per_class[slot.class.index()] += 1;
+        }
         Registry::global().publish(|reg| {
             for (tier, rows, bytes) in [
                 ("hot", occ.hot_rows, occ.hot_bytes),
@@ -420,14 +661,21 @@ impl BatchEngine {
                 reg.gauge_set("asrkf_tier_rows", &[("tier", tier)], rows as f64);
                 reg.gauge_set("asrkf_tier_bytes", &[("tier", tier)], bytes as f64);
             }
+            for c in QosClass::ALL {
+                reg.gauge_set(
+                    "asrkf_class_occupancy",
+                    &[("class", c.as_str())],
+                    per_class[c.index()] as f64,
+                );
+            }
         });
         self.step_hist.record(t0.elapsed());
         Ok(())
     }
 
     fn fail_all(&mut self, msg: &str) {
-        for slot in self.slots.iter_mut() {
-            if let Some(s) = slot.take() {
+        for i in 0..self.slots.len() {
+            if let Some(s) = self.clear_slot(i) {
                 let _ = s.respond.send(GenResponse::error(s.id, msg));
             }
         }

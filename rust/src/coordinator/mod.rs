@@ -1,35 +1,51 @@
-//! Serving coordinator: request admission, continuous batching, and
-//! the coordinator thread that owns the PJRT runtime.
+//! Serving coordinator: QoS-aware continuous batching — per-class
+//! priority queues, projection-based admission control, and the
+//! coordinator thread that owns the PJRT runtime.
 //!
 //! Architecture (one box per thread):
 //!
 //! ```text
 //!   TCP conn threads ──(bounded mpsc)──> coordinator thread
-//!        ^                                 BatchEngine: slots + batched
-//!        └──(per-request channel)──────────  decode + KV policies
-//!                                               │ per-slot
+//!        ^                                 ClassQueues: Interactive |
+//!        │                                   Standard | Batch
+//!        │                                 AdmissionController:
+//!        │                                   project hot slices, shed
+//!        │                                   or typed-reject
+//!        └──(per-request channel,          BatchEngine: slots + batched
+//!            handed out as a Ticket)────────  decode + KV policies
+//!                                               │ per occupied slot
 //!                                               ▼
-//!                                  offload::ShardedStore (x B slots)
+//!                                  offload::ShardedStore (x occupied)
 //!                                   N x { hot │ cold(u8) │ spill }
-//!                                   budgets partitioned 1/B per slot
-//!                                   (then 1/N per shard within it)
+//!                                   budgets split by class weight over
+//!                                   occupied slots, reflowed at step
+//!                                   boundaries (then 1/N per shard)
 //! ```
 //!
-//! Each slot owns a sharded tiered frozen-row store whose hot/cold
-//! byte budgets are the server-wide budgets divided by the batch size
-//! (remainder bytes on the leading slots), so one long-context session
-//! cannot starve its neighbours' hot tiers; within a slot, positions
-//! shard across `OffloadConfig::shards` worker-backed stores so the
-//! slot's restore bursts execute in parallel.
+//! Requests carry a [`crate::config::QosClass`] and wait in per-class
+//! FIFO queues; the scheduler always admits from the highest-priority
+//! non-empty queue. Before a request takes a slot the admission
+//! controller projects the class-weighted hot-tier split over the
+//! would-be slot population and rejects (or sheds to a lower class)
+//! when any slice falls below the envelope — surfaced to the caller as
+//! a typed reject on the response. Occupied slots split the server-wide
+//! tier budgets by class weight ([`crate::config::weighted_shares`]);
+//! when a session retires, its budget reflows to the remaining slots at
+//! the next step boundary (`Session::reslice_budgets`). Equal weights
+//! reproduce the old static `1/B` split exactly. See `README.md` in
+//! this directory for the projection math and reflow rules.
+//!
 //! Retiring sessions fold their staged-hit counters and per-tier
 //! restore-latency histograms into `BatchEngine::stats` /
 //! `BatchEngine::restore_hist`.
 
 pub mod batcher;
+pub mod qos;
 pub mod request;
 
 pub use batcher::BatchEngine;
-pub use request::{GenParams, GenRequest, GenResponse};
+pub use qos::{Admission, AdmissionController, ClassQueues};
+pub use request::{GenParams, GenParamsBuilder, GenRequest, GenResponse, Reject, RejectReason};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -40,6 +56,25 @@ use crate::error::{Error, Result};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
+/// A submitted request: its assigned id plus the channel its response
+/// will arrive on. The id is the cancellation / correlation seam —
+/// it is already stamped on the eventual [`GenResponse`] and every
+/// log line about the request.
+#[derive(Debug)]
+pub struct Ticket {
+    pub id: u64,
+    pub rx: std::sync::mpsc::Receiver<GenResponse>,
+}
+
+impl Ticket {
+    /// Block until the response lands.
+    pub fn wait(self) -> Result<GenResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))
+    }
+}
+
 /// Client-side handle: submit requests, receive responses.
 #[derive(Clone)]
 pub struct CoordinatorHandle {
@@ -47,16 +82,14 @@ pub struct CoordinatorHandle {
 }
 
 impl CoordinatorHandle {
-    /// Submit a request; returns the receiver for its response.
-    /// Errors immediately when the queue is full (admission control).
-    pub fn submit(&self, params: GenParams) -> Result<std::sync::mpsc::Receiver<GenResponse>> {
+    /// Submit a request; returns its [`Ticket`]. Errors immediately
+    /// when the handoff channel is full (back-pressure); per-class
+    /// queue overflow and envelope rejects arrive asynchronously as
+    /// typed rejects on the ticket instead.
+    pub fn submit(&self, params: GenParams) -> Result<Ticket> {
         let (tx, rx) = std::sync::mpsc::channel();
-        let req = GenRequest {
-            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
-            params,
-            arrived: Instant::now(),
-            respond: tx,
-        };
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let req = GenRequest { id, params, arrived: Instant::now(), respond: tx };
         self.tx
             .try_send(req)
             .map_err(|e| match e {
@@ -67,21 +100,20 @@ impl CoordinatorHandle {
                     Error::Coordinator("coordinator stopped".into())
                 }
             })?;
-        Ok(rx)
+        Ok(Ticket { id, rx })
     }
 
     /// Submit and block for the result.
     pub fn generate_blocking(&self, params: GenParams) -> Result<GenResponse> {
-        let rx = self.submit(params)?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))
+        self.submit(params)?.wait()
     }
 }
 
 /// Spawn the coordinator thread; returns (handle, join handle).
 ///
 /// Dropping every `CoordinatorHandle` clone disconnects the queue and
-/// the thread exits after finishing in-flight sessions.
+/// the thread exits after draining the class queues and finishing
+/// in-flight sessions.
 pub fn spawn(
     cfg: EngineConfig,
     server: ServerConfig,
@@ -111,14 +143,17 @@ pub fn spawn(
             );
             engine.run(rx);
             log::info!(
-                "coordinator down: {} completed, {} rejected, {} tokens, mean batch occupancy {:.2}",
+                "coordinator down: {} completed, {} rejected, {} shed, {} tokens, \
+                 mean batch occupancy {:.2}",
                 engine.stats.requests_completed,
                 engine.stats.requests_rejected,
+                engine.stats.requests_shed,
                 engine.stats.tokens_generated,
                 engine.stats.mean_batch_occupancy()
             );
             log::info!("{}", engine.ttft_hist.summary("ttft"));
             log::info!("{}", engine.e2e_hist.summary("e2e"));
+            log::info!("{}", engine.queue_wait_hist.summary("queue wait"));
             log::info!("{}", engine.step_hist.summary("step"));
             log::info!(
                 "offload: staged hits {} / misses {}",

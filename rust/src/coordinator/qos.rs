@@ -1,0 +1,286 @@
+//! QoS scheduling primitives for the continuous-batching coordinator:
+//! per-class priority queues and the admission controller that projects
+//! hot-tier usage before a request may take a slot.
+//!
+//! Both types are pure (no engine, no I/O): the batcher drives them
+//! against real sessions, `benches/load_gen.rs` drives the same types
+//! against a virtual-clock queueing model, and the unit tests below pin
+//! their contracts without artifacts.
+
+use std::collections::VecDeque;
+
+use crate::config::{weighted_shares, OffloadConfig, QosClass, QosConfig};
+use crate::coordinator::request::RejectReason;
+
+/// One bounded FIFO per [`QosClass`], popped in priority order:
+/// `Interactive` drains before `Standard` before `Batch`, FIFO within a
+/// class. Generic over the queued item so the serving batcher
+/// (`GenRequest`) and the load-generator simulation share the exact
+/// scheduling structure.
+#[derive(Debug)]
+pub struct ClassQueues<T> {
+    queues: [VecDeque<(QosClass, T)>; QosClass::COUNT],
+    depth_cap: usize,
+}
+
+impl<T> ClassQueues<T> {
+    /// `depth_cap` bounds each class queue (`QosConfig::queue_depth`).
+    pub fn new(depth_cap: usize) -> Self {
+        ClassQueues {
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            depth_cap: depth_cap.max(1),
+        }
+    }
+
+    /// Enqueue at `class`; hands the item back when that class queue is
+    /// at its depth cap (the caller turns it into a `queue_full`
+    /// reject).
+    pub fn push(&mut self, class: QosClass, item: T) -> Result<(), T> {
+        let q = &mut self.queues[class.index()];
+        if q.len() >= self.depth_cap {
+            return Err(item);
+        }
+        q.push_back((class, item));
+        Ok(())
+    }
+
+    /// Pop the head of the highest-priority non-empty class queue.
+    pub fn pop(&mut self) -> Option<(QosClass, T)> {
+        self.queues.iter_mut().find_map(VecDeque::pop_front)
+    }
+
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(VecDeque::is_empty)
+    }
+
+    /// Queue depth per class, indexed by [`QosClass::index`] (feeds the
+    /// `asrkf_queue_depth` gauge).
+    pub fn depths(&self) -> [usize; QosClass::COUNT] {
+        [self.queues[0].len(), self.queues[1].len(), self.queues[2].len()]
+    }
+}
+
+/// What the admission projection decided for a candidate request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Admit at the requested class.
+    Admit,
+    /// Admit, but served at this lower class (smaller budget weight).
+    Shed(QosClass),
+    /// No class assignment fits the envelope.
+    Reject(RejectReason),
+}
+
+/// Projects hot-tier usage for a hypothetical slot population before a
+/// request is admitted. The projection is exact, not a heuristic: it
+/// runs the same [`weighted_shares`] split the batcher will apply at
+/// the next step boundary and checks every member's hot slice against
+/// the floor the stores enforce at construction — one row per shard —
+/// scaled by the configured headroom. A request that fails at its own
+/// class is retried at each lower class (shedding: a lighter weight
+/// takes a smaller slice and leaves more for the incumbents) before an
+/// outright reject.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    qos: QosConfig,
+    hot_budget_bytes: usize,
+    shards: usize,
+    row_bytes: usize,
+    /// `quantize_cold = false` makes budgets advisory (nothing ever
+    /// demotes), so projection always admits.
+    enforcing: bool,
+}
+
+impl AdmissionController {
+    pub fn new(qos: QosConfig, offload: &OffloadConfig, row_floats: usize) -> Self {
+        AdmissionController {
+            qos,
+            hot_budget_bytes: offload.hot_budget_bytes,
+            shards: offload.shards.max(1),
+            row_bytes: row_floats * std::mem::size_of::<f32>(),
+            enforcing: offload.quantize_cold,
+        }
+    }
+
+    pub fn weight(&self, class: QosClass) -> u64 {
+        self.qos.weight(class)
+    }
+
+    /// The minimum acceptable per-slot hot slice: one row per shard
+    /// (the floor `ShardedStore` construction and `set_budgets` reject
+    /// below — a slice of `h` bytes over `n` shards gives its smallest
+    /// shard `floor(h/n)`, so `h >= n * row_bytes` keeps every shard at
+    /// one row or more), scaled by `1 + admission_headroom`.
+    pub fn floor_bytes(&self) -> usize {
+        let hard = self.shards * self.row_bytes;
+        (hard as f64 * (1.0 + self.qos.admission_headroom as f64)).ceil() as usize
+    }
+
+    /// Per-member (hot, cold) budget slices for a slot population, in
+    /// member order — the same split the batcher installs at step
+    /// boundaries. `cold_budget_bytes` is passed by the caller since
+    /// only hot participates in the admission floor.
+    pub fn shares(&self, members: &[QosClass], cold_budget_bytes: usize) -> Vec<(usize, usize)> {
+        let weights: Vec<u64> = members.iter().map(|&c| self.qos.weight(c)).collect();
+        let hot = weighted_shares(self.hot_budget_bytes, &weights);
+        let cold = weighted_shares(cold_budget_bytes, &weights);
+        hot.into_iter().zip(cold).collect()
+    }
+
+    /// Would this slot population's hot slices all clear the floor?
+    pub fn fits(&self, members: &[QosClass]) -> bool {
+        if !self.enforcing || members.is_empty() {
+            return true;
+        }
+        let weights: Vec<u64> = members.iter().map(|&c| self.qos.weight(c)).collect();
+        let floor = self.floor_bytes();
+        weighted_shares(self.hot_budget_bytes, &weights).into_iter().all(|h| h >= floor)
+    }
+
+    /// Project admitting `requested` next to `occupied` (the classes of
+    /// the currently occupied slots). Sheds downward until the
+    /// projection fits; rejects when even `Batch` does not.
+    pub fn admit(&self, occupied: &[QosClass], requested: QosClass) -> Admission {
+        let mut class = requested;
+        loop {
+            let mut members = occupied.to_vec();
+            members.push(class);
+            if self.fits(&members) {
+                return if class == requested { Admission::Admit } else { Admission::Shed(class) };
+            }
+            match class.lower() {
+                Some(lower) => class = lower,
+                None => return Admission::Reject(RejectReason::HotEnvelope),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queues_pop_priority_order_fifo_within_class() {
+        let mut q: ClassQueues<u32> = ClassQueues::new(8);
+        q.push(QosClass::Batch, 1).unwrap();
+        q.push(QosClass::Interactive, 2).unwrap();
+        q.push(QosClass::Standard, 3).unwrap();
+        q.push(QosClass::Interactive, 4).unwrap();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.depths(), [2, 1, 1]);
+        let order: Vec<(QosClass, u32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            order,
+            vec![
+                (QosClass::Interactive, 2),
+                (QosClass::Interactive, 4),
+                (QosClass::Standard, 3),
+                (QosClass::Batch, 1),
+            ]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_depth_cap_hands_the_item_back() {
+        let mut q: ClassQueues<u32> = ClassQueues::new(2);
+        q.push(QosClass::Standard, 1).unwrap();
+        q.push(QosClass::Standard, 2).unwrap();
+        assert_eq!(q.push(QosClass::Standard, 3), Err(3), "per-class cap");
+        // other classes are unaffected by a full neighbour
+        q.push(QosClass::Batch, 4).unwrap();
+        assert_eq!(q.depths(), [0, 2, 1]);
+    }
+
+    fn ctl(hot: usize, shards: usize, headroom: f32) -> AdmissionController {
+        let offload = OffloadConfig {
+            hot_budget_bytes: hot,
+            shards,
+            ..OffloadConfig::default()
+        };
+        let qos = QosConfig { admission_headroom: headroom, ..QosConfig::default() };
+        // 256 floats -> 1024-B rows
+        AdmissionController::new(qos, &offload, 256)
+    }
+
+    #[test]
+    fn floor_scales_with_shards_and_headroom() {
+        assert_eq!(ctl(1 << 20, 1, 0.0).floor_bytes(), 1024);
+        assert_eq!(ctl(1 << 20, 4, 0.0).floor_bytes(), 4096);
+        assert_eq!(ctl(1 << 20, 4, 0.25).floor_bytes(), 5120);
+    }
+
+    #[test]
+    fn admits_when_every_projected_slice_clears_the_floor() {
+        // floor 1280; four interactive members split 16 KiB into 4 KiB
+        // slices — everything fits
+        let c = ctl(16 << 10, 1, 0.25);
+        let occupied = vec![QosClass::Interactive; 3];
+        assert_eq!(c.admit(&occupied, QosClass::Interactive), Admission::Admit);
+    }
+
+    #[test]
+    fn sheds_to_a_lighter_class_before_rejecting() {
+        // weights [4,2,1], hot 4096 B, floor 1024 B, one Batch
+        // incumbent. An Interactive candidate (weight 4) squeezes the
+        // incumbent to 4096/5 = 819 B — under the floor; retried as
+        // Standard (weight 2) the incumbent keeps 4096/3 = 1365 B and
+        // the candidate's own 2731 B clears too -> shed to Standard.
+        let c = ctl(4096, 1, 0.0);
+        let occupied = vec![QosClass::Batch];
+        assert_eq!(c.admit(&occupied, QosClass::Interactive), Admission::Shed(QosClass::Standard));
+        // and a Standard request in the same state admits directly
+        assert_eq!(c.admit(&occupied, QosClass::Standard), Admission::Admit);
+    }
+
+    #[test]
+    fn rejects_when_even_batch_cannot_fit() {
+        // 2 KiB hot over two interactive incumbents: any third member
+        // pushes someone below the 1024-B floor
+        let c = ctl(2 << 10, 1, 0.0);
+        let occupied = vec![QosClass::Interactive, QosClass::Interactive];
+        assert_eq!(
+            c.admit(&occupied, QosClass::Interactive),
+            Admission::Reject(RejectReason::HotEnvelope)
+        );
+        // an empty machine still rejects when one slice can't fit a row
+        let tiny = ctl(512, 1, 0.0);
+        assert_eq!(
+            tiny.admit(&[], QosClass::Batch),
+            Admission::Reject(RejectReason::HotEnvelope)
+        );
+    }
+
+    #[test]
+    fn advisory_budgets_always_admit() {
+        let offload = OffloadConfig {
+            hot_budget_bytes: 64,
+            quantize_cold: false,
+            ..OffloadConfig::default()
+        };
+        let c = AdmissionController::new(QosConfig::default(), &offload, 256);
+        assert_eq!(c.admit(&[QosClass::Interactive], QosClass::Interactive), Admission::Admit);
+    }
+
+    #[test]
+    fn shares_with_equal_weights_match_partitioned_oracle() {
+        let offload =
+            OffloadConfig { hot_budget_bytes: 101, cold_budget_bytes: 31, ..Default::default() };
+        let qos = QosConfig { weights: [3, 3, 3], ..QosConfig::default() };
+        let c = AdmissionController::new(qos, &offload, 1);
+        for n in 1..=5usize {
+            let members = vec![QosClass::Interactive; n];
+            let shares = c.shares(&members, offload.cold_budget_bytes);
+            for (i, &(hot, cold)) in shares.iter().enumerate() {
+                let p = offload.partitioned(n, i);
+                assert_eq!(hot, p.hot_budget_bytes, "hot {n}@{i}");
+                assert_eq!(cold, p.cold_budget_bytes, "cold {n}@{i}");
+            }
+        }
+    }
+}

@@ -1,8 +1,15 @@
 //! Request/response types flowing between the server frontend and the
 //! coordinator thread.
+//!
+//! Construction goes through [`GenParams::builder`] — the builder
+//! carries the defaults (`policy = "asrkf"`, `seed = 0`,
+//! `resume_spill = false`, `qos = Standard`) so call sites only state
+//! what they mean, and adding a field stops being a repo-wide edit.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+use crate::config::QosClass;
 
 #[derive(Debug, Clone)]
 pub struct GenParams {
@@ -16,6 +23,65 @@ pub struct GenParams {
     /// `--spill-persist`; recovery counters ride along on the response
     /// (`recovered_rows` / `recovery_errors`).
     pub resume_spill: bool,
+    /// Requested QoS class: scheduling priority and budget weight.
+    /// Admission may serve the request at a lower class (shed) — the
+    /// response reports the class it actually ran under.
+    pub qos: QosClass,
+}
+
+impl GenParams {
+    /// Start building a request around its one mandatory field.
+    pub fn builder(prompt: impl Into<String>) -> GenParamsBuilder {
+        GenParamsBuilder { params: GenParams::with_defaults(prompt.into()) }
+    }
+
+    fn with_defaults(prompt: String) -> GenParams {
+        GenParams {
+            prompt,
+            max_new: 64,
+            policy: "asrkf".to_string(),
+            seed: 0,
+            resume_spill: false,
+            qos: QosClass::Standard,
+        }
+    }
+}
+
+/// Builder for [`GenParams`]; see [`GenParams::builder`].
+#[derive(Debug, Clone)]
+pub struct GenParamsBuilder {
+    params: GenParams,
+}
+
+impl GenParamsBuilder {
+    pub fn max_new(mut self, max_new: usize) -> Self {
+        self.params.max_new = max_new;
+        self
+    }
+
+    pub fn policy(mut self, policy: impl Into<String>) -> Self {
+        self.params.policy = policy.into();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.params.seed = seed;
+        self
+    }
+
+    pub fn resume_spill(mut self, resume_spill: bool) -> Self {
+        self.params.resume_spill = resume_spill;
+        self
+    }
+
+    pub fn qos(mut self, qos: QosClass) -> Self {
+        self.params.qos = qos;
+        self
+    }
+
+    pub fn build(self) -> GenParams {
+        self.params
+    }
 }
 
 #[derive(Debug)]
@@ -26,11 +92,52 @@ pub struct GenRequest {
     pub respond: mpsc::Sender<GenResponse>,
 }
 
+/// Why admission control turned a request away. Serialized on the wire
+/// as the `reject.reason` field (`server/protocol.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The request's class queue was at `QosConfig::queue_depth`.
+    QueueFull,
+    /// `prompt + max_new` exceeds the decode KV capacity — no class
+    /// change can make it fit.
+    KvCapacity,
+    /// Admitting the request would push some occupied slot's projected
+    /// hot-tier slice below the admission envelope, even after shedding
+    /// all the way down to `Batch`.
+    HotEnvelope,
+}
+
+impl RejectReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::KvCapacity => "kv_capacity",
+            RejectReason::HotEnvelope => "hot_envelope",
+        }
+    }
+}
+
+/// Typed admission reject riding on an error [`GenResponse`]: machine-
+/// readable alongside the human-readable `error` string.
+#[derive(Debug, Clone)]
+pub struct Reject {
+    pub reason: RejectReason,
+    /// The class the request asked for (rejects are attributed to the
+    /// requested class, not any shed target that was probed).
+    pub requested: QosClass,
+    pub detail: String,
+}
+
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
     pub text: String,
     pub error: Option<String>,
+    /// QoS class the request actually ran (or was rejected) under;
+    /// lower than `GenParams::qos` when admission shed it.
+    pub class: QosClass,
+    /// Present iff admission control refused the request.
+    pub reject: Option<Reject>,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     pub final_active_kv: usize,
@@ -51,6 +158,8 @@ impl GenResponse {
             id,
             text: String::new(),
             error: Some(msg.into()),
+            class: QosClass::Standard,
+            reject: None,
             prompt_tokens: 0,
             generated_tokens: 0,
             final_active_kv: 0,
@@ -60,5 +169,15 @@ impl GenResponse {
             offload: crate::offload::OffloadSummary::default(),
             plan_latency: crate::metrics::PlanLatency::default(),
         }
+    }
+
+    /// An admission reject: an error response carrying the typed
+    /// reject detail. The `error` string always mentions "admission
+    /// control" so legacy clients matching on the message keep working.
+    pub fn rejected(id: u64, reject: Reject) -> Self {
+        let mut resp = GenResponse::error(id, format!("{} (admission control)", reject.detail));
+        resp.class = reject.requested;
+        resp.reject = Some(reject);
+        resp
     }
 }

@@ -342,6 +342,22 @@ impl Session {
         Ok(())
     }
 
+    /// Adopt a re-sliced tier budget between decode steps (continuous
+    /// batching: the coordinator reflows freed budget to occupied slots
+    /// at step boundaries). Forwards to the store, which settles any
+    /// outstanding speculative work first and demotes immediately on a
+    /// shrink; must only be called between `apply_plan`/`absorb` pairs,
+    /// the same boundary the batcher already schedules on. Errors mean
+    /// the slice was unusable (below one hot row per shard) and the
+    /// session's budgets are unchanged.
+    pub fn reslice_budgets(
+        &mut self,
+        hot_budget_bytes: usize,
+        cold_budget_bytes: usize,
+    ) -> Result<()> {
+        self.store.set_budgets(hot_budget_bytes, cold_budget_bytes)
+    }
+
     /// Store summary overlaid with this session's plan-batching
     /// counters (batching happens in the engine's plan execution, so
     /// the store cannot report it itself).

@@ -158,12 +158,7 @@ fn cmd_passkey(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = EngineConfig::from_args(args)?;
-    let server_cfg = asrkf::config::ServerConfig {
-        addr: args.str_or("addr", "127.0.0.1:7341"),
-        queue_cap: args.usize_or("queue-cap", 256)?,
-        max_batch: args.usize_or("max-batch", 8)?,
-        batch_wait_us: args.u64_or("batch-wait-us", 2000)?,
-    };
+    let server_cfg = asrkf::config::ServerConfig::from_args(args)?;
     asrkf::metrics::start_interval_logger(args.u64_or("metrics-interval", 0)?);
     asrkf::server::serve_blocking(cfg, server_cfg)
 }
@@ -173,5 +168,6 @@ fn cmd_bench_client(args: &Args) -> Result<()> {
     let n = args.usize_or("requests", 16)?;
     let concurrency = args.usize_or("concurrency", 4)?;
     let max_new = args.usize_or("max-new-tokens", 48)?;
-    asrkf::server::client::run_bench_client(&addr, n, concurrency, max_new)
+    let class = asrkf::config::QosClass::parse(&args.str_or("class", "standard"))?;
+    asrkf::server::client::run_bench_client(&addr, n, concurrency, max_new, class)
 }

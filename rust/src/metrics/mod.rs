@@ -8,8 +8,9 @@ pub mod registry;
 
 pub use flight::{write_chrome_trace, Cause, FlightEvent, FlightRecorder, StepSpan};
 pub use registry::{
-    parse_exposition, serving_csv_headers, start_interval_logger, MetricKind, MetricSpec,
-    Registry, Snapshot, SnapshotBuilder, CATALOG, SERVING_CSV_COLUMNS,
+    load_gen_csv_headers, parse_exposition, serving_csv_headers, start_interval_logger,
+    MetricKind, MetricSpec, Registry, Snapshot, SnapshotBuilder, CATALOG, LOAD_GEN_CSV_COLUMNS,
+    SERVING_CSV_COLUMNS,
 };
 
 use std::fmt::Write as _;
@@ -449,6 +450,8 @@ impl RestoreLatency {
 pub struct ServingStats {
     pub requests_completed: u64,
     pub requests_rejected: u64,
+    /// Requests admitted at a lower QoS class than they asked for.
+    pub requests_shed: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub batches_dispatched: u64,

@@ -276,15 +276,22 @@ pub const CATALOG: &[MetricSpec] = &[
         name: "asrkf_ttft_us",
         kind: MetricKind::TimeHistogram,
         unit: "us",
-        labels: &[],
-        help: "time to first token per served request",
+        labels: &["class"],
+        help: "time to first token per served request (aggregate series omits class)",
     },
     MetricSpec {
         name: "asrkf_e2e_us",
         kind: MetricKind::TimeHistogram,
         unit: "us",
-        labels: &[],
-        help: "end-to-end latency per served request",
+        labels: &["class"],
+        help: "end-to-end latency per served request (aggregate series omits class)",
+    },
+    MetricSpec {
+        name: "asrkf_queue_wait_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &["class"],
+        help: "time from submission to slot admission, per QoS class",
     },
     // -- count histograms ------------------------------------------------
     MetricSpec {
@@ -374,6 +381,27 @@ pub const CATALOG: &[MetricSpec] = &[
         help: "requests rejected at admission",
     },
     MetricSpec {
+        name: "asrkf_admission_total",
+        kind: MetricKind::Counter,
+        unit: "requests",
+        labels: &["class", "decision"],
+        help: "admission decisions: accept (effective class) | shed | reject (requested class)",
+    },
+    MetricSpec {
+        name: "asrkf_queue_depth",
+        kind: MetricKind::Gauge,
+        unit: "requests",
+        labels: &["class"],
+        help: "waiting requests per QoS class queue",
+    },
+    MetricSpec {
+        name: "asrkf_class_occupancy",
+        kind: MetricKind::Gauge,
+        unit: "slots",
+        labels: &["class"],
+        help: "occupied serving slots per effective QoS class",
+    },
+    MetricSpec {
         name: "asrkf_tokens_generated_total",
         kind: MetricKind::Counter,
         unit: "tokens",
@@ -451,6 +479,30 @@ pub const SERVING_CSV_COLUMNS: &[CsvColumn] = &[
 /// Header strings of [`SERVING_CSV_COLUMNS`], in order.
 pub fn serving_csv_headers() -> Vec<&'static str> {
     SERVING_CSV_COLUMNS.iter().map(|c| c.header).collect()
+}
+
+/// Column schema of `artifacts/load_gen.csv` (the closed-loop QoS
+/// load-generator bench, `benches/load_gen.rs`). Same contract as
+/// [`SERVING_CSV_COLUMNS`]: headers built from this list, referenced
+/// metrics checked against [`CATALOG`] in `tests/telemetry.rs`.
+pub const LOAD_GEN_CSV_COLUMNS: &[CsvColumn] = &[
+    CsvColumn { header: "Mode", metric: "" },
+    CsvColumn { header: "Arrivals", metric: "" },
+    CsvColumn { header: "Completed", metric: "asrkf_requests_completed_total" },
+    CsvColumn { header: "goodput (tok/s)", metric: "asrkf_tokens_generated_total" },
+    CsvColumn { header: "reject rate", metric: "asrkf_admission_total" },
+    CsvColumn { header: "shed rate", metric: "asrkf_admission_total" },
+    CsvColumn { header: "p99 interactive (ms)", metric: "asrkf_e2e_us" },
+    CsvColumn { header: "p99 standard (ms)", metric: "asrkf_e2e_us" },
+    CsvColumn { header: "p99 batch (ms)", metric: "asrkf_e2e_us" },
+    CsvColumn { header: "queue p99 interactive (ms)", metric: "asrkf_queue_wait_us" },
+    CsvColumn { header: "queue p99 batch (ms)", metric: "asrkf_queue_wait_us" },
+    CsvColumn { header: "mean occupancy", metric: "asrkf_batch_occupancy" },
+];
+
+/// Header strings of [`LOAD_GEN_CSV_COLUMNS`], in order.
+pub fn load_gen_csv_headers() -> Vec<&'static str> {
+    LOAD_GEN_CSV_COLUMNS.iter().map(|c| c.header).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -1166,7 +1218,7 @@ mod tests {
             assert!(seen.insert(spec.name), "duplicate metric {}", spec.name);
             assert!(!spec.help.is_empty());
         }
-        for col in SERVING_CSV_COLUMNS {
+        for col in SERVING_CSV_COLUMNS.iter().chain(LOAD_GEN_CSV_COLUMNS) {
             if !col.metric.is_empty() {
                 assert!(
                     spec_for(col.metric).is_some(),
@@ -1177,6 +1229,7 @@ mod tests {
             }
         }
         assert_eq!(serving_csv_headers().len(), SERVING_CSV_COLUMNS.len());
+        assert_eq!(load_gen_csv_headers().len(), LOAD_GEN_CSV_COLUMNS.len());
     }
 
     #[test]

@@ -248,6 +248,9 @@ pub struct ShardedStore {
     partition: ShardPartition,
     /// `Range` partition chunk width (== `cfg.block_rows`).
     chunk: usize,
+    /// Row size in floats (identical across shards); kept so budget
+    /// re-slices can validate the per-shard one-row floor up front.
+    row_floats: usize,
     /// `None` only transiently while a shard is out with a worker, or
     /// permanently if that shard's op panicked mid-burst (then every
     /// touch of the shard reports `Error::Offload` instead of
@@ -386,6 +389,7 @@ impl ShardedStore {
             n,
             partition: cfg.shard_partition,
             chunk: cfg.block_rows.max(1),
+            row_floats,
             shards,
             cfg,
             restore_parallelism: CountHistogram::default(),
@@ -417,6 +421,35 @@ impl ShardedStore {
 
     pub fn shard_count(&self) -> usize {
         self.n
+    }
+
+    /// Adopt a re-sliced total budget between steps (continuous-batching
+    /// budget reflow): settle outstanding speculative work, re-split the
+    /// new totals across shards with the same `partitioned` math as
+    /// construction, and forward each slice to its shard (a shrink
+    /// demotes immediately, a grow leaves headroom). Every per-shard
+    /// slice is validated against the one-row floor *before* any shard
+    /// is mutated, so a rejected reflow leaves all budgets unchanged.
+    pub fn set_budgets(&mut self, hot_budget_bytes: usize, cold_budget_bytes: usize) -> Result<()> {
+        self.settle()?;
+        let row_bytes = self.row_floats * std::mem::size_of::<f32>();
+        let next = OffloadConfig { hot_budget_bytes, cold_budget_bytes, ..self.cfg.clone() };
+        for i in 0..self.n {
+            let scfg = next.partitioned(self.n, i);
+            if scfg.quantize_cold && scfg.hot_budget_bytes < row_bytes {
+                return Err(Error::Offload(format!(
+                    "hot budget re-slice {hot_budget_bytes} B splits to {} B for shard {i}/{} — \
+                     below one {row_bytes}-B row",
+                    scfg.hot_budget_bytes, self.n
+                )));
+            }
+        }
+        for i in 0..self.n {
+            let scfg = next.partitioned(self.n, i);
+            self.shard_mut(i)?.set_budgets(scfg.hot_budget_bytes, scfg.cold_budget_bytes)?;
+        }
+        self.cfg = next;
+        Ok(())
     }
 
     /// The shard owning `pos` under the configured partition.
@@ -1240,6 +1273,32 @@ mod tests {
         assert_eq!(r.shard_of(3), 0);
         assert_eq!(r.shard_of(4), 1);
         assert_eq!(r.shard_of(16), 0, "block-cyclic wraps");
+    }
+
+    #[test]
+    fn set_budgets_resplits_across_shards_and_validates_floor() {
+        let mut s = ShardedStore::new(RF, cfg(2, ShardPartition::Hash)).unwrap();
+        for pos in 0..6 {
+            s.stash(pos, row(pos as f32), 0, 2).unwrap(); // near eta -> hot
+        }
+        assert_eq!(s.occupancy().hot_rows, 6);
+        // shrink to one hot row per shard: each shard demotes down to
+        // its slice of the new total
+        let row_bytes = RF * std::mem::size_of::<f32>();
+        s.set_budgets(2 * row_bytes, 1 << 20).unwrap();
+        let o = s.occupancy();
+        assert_eq!(o.hot_rows, 2, "one row per shard survives the shrink");
+        assert_eq!(o.hot_rows + o.cold_rows, 6, "no rows dropped");
+        assert_eq!(s.config().hot_budget_bytes, 2 * row_bytes);
+        // a total whose per-shard slice is below one row is rejected
+        // before any shard is touched
+        let err = s.set_budgets(2 * row_bytes - 1, 1 << 20).unwrap_err();
+        assert!(format!("{err}").contains("below one"));
+        assert_eq!(s.config().hot_budget_bytes, 2 * row_bytes, "budgets unchanged on reject");
+        // growing back restores hot admission
+        s.set_budgets(1 << 20, 1 << 20).unwrap();
+        s.stash(100, row(1.0), 1, 3).unwrap();
+        assert_eq!(s.occupancy().hot_rows, 3);
     }
 
     #[test]

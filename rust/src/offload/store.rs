@@ -156,6 +156,27 @@ impl TieredStore {
         &self.cfg
     }
 
+    /// Adopt a re-sliced tier budget between steps (continuous-batching
+    /// budget reflow). A shrink demotes immediately — the same
+    /// farthest-thaw-first pressure path as `stash` — so the store is
+    /// back inside the new envelope before the next decode step; a grow
+    /// simply leaves headroom for future freezes. Rejects a hot slice
+    /// below one row (same invariant as construction) so a reflow can
+    /// never wedge the store in a state where no row fits.
+    pub fn set_budgets(&mut self, hot_budget_bytes: usize, cold_budget_bytes: usize) -> Result<()> {
+        if self.cfg.quantize_cold && hot_budget_bytes < self.row_bytes() {
+            return Err(Error::Offload(format!(
+                "hot budget re-slice to {hot_budget_bytes} B is below one {}-B row",
+                self.row_bytes()
+            )));
+        }
+        self.cfg.hot_budget_bytes = hot_budget_bytes;
+        self.cfg.cold_budget_bytes = cold_budget_bytes;
+        self.enforce_budgets()?;
+        self.bump_peaks();
+        Ok(())
+    }
+
     /// Adopt the records a persistent spill tier recovered at open:
     /// each position is re-registered with the eta scheduler as a
     /// spill-resident row under a conservative `thaw_eta` of
@@ -845,6 +866,32 @@ mod tests {
         // 1 and 2 still hot (exact roundtrip)
         assert_eq!(s.take(1).unwrap(), Some(row(RF, 1.0)));
         assert_eq!(s.take(2).unwrap(), Some(row(RF, 2.0)));
+    }
+
+    #[test]
+    fn set_budgets_shrink_demotes_and_grow_leaves_headroom() {
+        let mut c = cfg();
+        c.hot_budget_bytes = 4 * RF * 4; // room for 4 hot rows
+        let mut s = TieredStore::new(RF, c);
+        for pos in 0..4 {
+            s.stash(pos, row(RF, pos as f32), 0, 2 + pos as u64).unwrap();
+        }
+        assert_eq!(s.occupancy().hot_rows, 4);
+        // shrink to 2 rows: the two farthest-eta rows demote immediately
+        s.set_budgets(2 * RF * 4, usize::MAX >> 1).unwrap();
+        let o = s.occupancy();
+        assert_eq!(o.hot_rows, 2);
+        assert_eq!(o.cold_rows, 2);
+        assert_eq!(s.tier_of(3), Some((TierKind::Cold, false)), "farthest eta demoted first");
+        assert_eq!(s.tier_of(0), Some((TierKind::Hot, false)));
+        // grow back: nothing promotes eagerly, but new freezes fit hot
+        s.set_budgets(8 * RF * 4, usize::MAX >> 1).unwrap();
+        assert_eq!(s.occupancy().hot_rows, 2);
+        s.stash(9, row(RF, 9.0), 1, 3).unwrap();
+        assert_eq!(s.occupancy().hot_rows, 3);
+        // a slice below one row is rejected and leaves budgets unchanged
+        assert!(s.set_budgets(RF * 4 - 1, 0).is_err());
+        assert_eq!(s.config().hot_budget_bytes, 8 * RF * 4);
     }
 
     #[test]

@@ -1,10 +1,15 @@
 //! Blocking client for the JSON-lines protocol + a synthetic-workload
 //! bench client (used by `asrkf bench-client` and the serving bench).
+//!
+//! Emits the v1 tagged request format (`{"op": "generate", ...}`,
+//! see `protocol.rs` / `README.md`); servers still accept the legacy
+//! flat format from older clients.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
+use crate::config::QosClass;
 use crate::error::{Error, Result};
 use crate::util::json::{parse, Json};
 use crate::util::rng::Pcg64;
@@ -22,6 +27,8 @@ pub struct ClientResult {
     pub generated_tokens: usize,
     pub ttft_ms: f64,
     pub e2e_ms: f64,
+    /// Effective QoS class the server ran the request under.
+    pub class: Option<QosClass>,
 }
 
 impl Client {
@@ -31,6 +38,7 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
+    /// Generate at the default (`standard`) QoS class.
     pub fn generate(
         &mut self,
         prompt: &str,
@@ -38,11 +46,26 @@ impl Client {
         policy: &str,
         seed: u64,
     ) -> Result<ClientResult> {
+        self.generate_as(prompt, max_new, policy, seed, QosClass::Standard)
+    }
+
+    /// Generate at an explicit QoS class.
+    pub fn generate_as(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        policy: &str,
+        seed: u64,
+        class: QosClass,
+    ) -> Result<ClientResult> {
         let req = Json::obj(vec![
+            ("v", Json::num(1.0)),
+            ("op", Json::str("generate")),
             ("prompt", Json::str(prompt)),
             ("max_new", Json::num(max_new as f64)),
             ("policy", Json::str(policy)),
             ("seed", Json::num(seed as f64)),
+            ("class", Json::str(class.as_str())),
         ]);
         let mut line = String::new();
         crate::util::json::write_json(&req, &mut line);
@@ -62,13 +85,20 @@ impl Client {
             generated_tokens: v.get("generated_tokens").as_usize().unwrap_or(0),
             ttft_ms: v.get("ttft_ms").as_f64().unwrap_or(0.0),
             e2e_ms: v.get("e2e_ms").as_f64().unwrap_or(0.0),
+            class: v.get("class").as_str().and_then(|s| QosClass::parse(s).ok()),
         })
     }
 }
 
 /// Drive a running server with `n` requests over `concurrency`
-/// connections; prints latency/throughput and returns mean e2e ms.
-pub fn run_bench_client(addr: &str, n: usize, concurrency: usize, max_new: usize) -> Result<()> {
+/// connections at `class`; prints latency/throughput.
+pub fn run_bench_client(
+    addr: &str,
+    n: usize,
+    concurrency: usize,
+    max_new: usize,
+    class: QosClass,
+) -> Result<()> {
     let t0 = Instant::now();
     let per = n.div_ceil(concurrency);
     let addr = addr.to_string();
@@ -81,7 +111,8 @@ pub fn run_bench_client(addr: &str, n: usize, concurrency: usize, max_new: usize
             let mut out = Vec::new();
             for i in 0..per {
                 let prompt = prose(&mut rng, 48 + (i * 13) % 64);
-                let r = client.generate(&prompt, max_new, "asrkf", c as u64 * 100 + i as u64)?;
+                let seed = c as u64 * 100 + i as u64;
+                let r = client.generate_as(&prompt, max_new, "asrkf", seed, class)?;
                 out.push((r.ttft_ms, r.e2e_ms, r.generated_tokens));
             }
             Ok(out)
@@ -96,8 +127,9 @@ pub fn run_bench_client(addr: &str, n: usize, concurrency: usize, max_new: usize
     let mean_ttft = all.iter().map(|a| a.0).sum::<f64>() / all.len() as f64;
     let mean_e2e = all.iter().map(|a| a.1).sum::<f64>() / all.len() as f64;
     println!(
-        "bench-client: {} requests, {} tokens in {:.2?}  ({:.1} tok/s)",
+        "bench-client: {} requests ({}), {} tokens in {:.2?}  ({:.1} tok/s)",
         all.len(),
+        class.as_str(),
         total_tokens,
         wall,
         total_tokens as f64 / wall.as_secs_f64()
@@ -105,5 +137,3 @@ pub fn run_bench_client(addr: &str, n: usize, concurrency: usize, max_new: usize
     println!("  mean ttft {mean_ttft:.1} ms, mean e2e {mean_e2e:.1} ms");
     Ok(())
 }
-
-

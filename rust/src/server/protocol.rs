@@ -1,20 +1,30 @@
-//! JSON-lines wire protocol.
+//! JSON-lines wire protocol, versioned.
 //!
-//! Request (one line):
-//!   {"prompt": "...", "max_new": 64, "policy": "asrkf", "seed": 0}
-//! Response (one line):
-//!   {"id": 3, "text": "...", "prompt_tokens": 12, "generated_tokens": 64,
-//!    "final_active_kv": 40, "compression": 0.47, "ttft_ms": 12.1,
-//!    "e2e_ms": 480.9}
-//! or {"error": "..."}.
+//! v1 requests are tagged with an `op` field (`v` is optional and
+//! defaults to 1 — the only version so far):
+//!   {"v": 1, "op": "generate", "prompt": "...", "max_new": 64,
+//!    "policy": "asrkf", "seed": 0, "class": "interactive"}
+//!   {"v": 1, "op": "stats"}
 //!
-//! A stats request (one line):
-//!   {"stats": true}
-//! answers with the live metrics-registry snapshot instead of queueing
-//! a generation:
+//! The pre-versioning (v0) formats still parse — a flat generate
+//! object `{"prompt": "...", ...}` and the stats probe
+//! `{"stats": true}` — so old clients keep working unchanged.
+//!
+//! A generate response is one line:
+//!   {"id": 3, "text": "...", "class": "standard", "prompt_tokens": 12,
+//!    "generated_tokens": 64, "final_active_kv": 40,
+//!    "compression": 0.47, "ttft_ms": 12.1, "e2e_ms": 480.9, ...}
+//! or, on failure, {"id": 3, "error": "...", "class": "..."} — plus a
+//! typed `"reject": {"reason": "queue_full" | "kv_capacity" |
+//! "hot_envelope", "class": "..."}` object when admission control
+//! turned the request away. A stats request answers with the live
+//! metrics-registry snapshot:
 //!   {"stats": {<metric name>: {<label set>: value, ...}, ...},
 //!    "prometheus": "<text exposition>"}
+//!
+//! The full schema is documented in `rust/src/server/README.md`.
 
+use crate::config::QosClass;
 use crate::coordinator::{GenParams, GenResponse};
 use crate::metrics::Snapshot;
 use crate::util::json::{parse, Json};
@@ -27,41 +37,85 @@ pub enum Request {
     Stats,
 }
 
-/// Parse any protocol line. `{"stats": true}` is recognized before
-/// generation parsing, so a prompt named "stats" is unaffected.
+/// Parse any protocol line. A line carrying an `op` field is a v1
+/// request and routes by its tag; otherwise the legacy v0 forms apply
+/// (`{"stats": true}` is recognized before generation parsing, so a
+/// prompt named "stats" is unaffected).
 pub fn parse_line(line: &str) -> Result<Request, String> {
     let v = parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if let Some(op) = v.get("op").as_str() {
+        let ver = v.get("v");
+        if !matches!(ver, Json::Null) && ver.as_usize() != Some(1) {
+            return Err(format!("unsupported protocol version {ver:?} (expected 1)"));
+        }
+        return match op {
+            "generate" => parse_generate(&v).map(Request::Generate),
+            "stats" => Ok(Request::Stats),
+            other => Err(format!("unknown op '{other}'")),
+        };
+    }
     if v.get("stats").as_bool() == Some(true) {
         return Ok(Request::Stats);
     }
-    parse_request(line).map(Request::Generate)
+    parse_generate(&v).map(Request::Generate)
 }
 
-pub fn parse_request(line: &str) -> Result<GenParams, String> {
-    let v = parse(line).map_err(|e| format!("bad json: {e}"))?;
-    let prompt = v
-        .get("prompt")
-        .as_str()
-        .ok_or("missing 'prompt'")?
-        .to_string();
+/// Shared generate-body parser (v1 and legacy lines carry the same
+/// fields; v1 adds the optional `class`).
+fn parse_generate(v: &Json) -> Result<GenParams, String> {
+    let prompt = v.get("prompt").as_str().ok_or("missing 'prompt'")?;
     if prompt.is_empty() {
         return Err("empty prompt".into());
     }
-    Ok(GenParams {
-        prompt,
-        max_new: v.get("max_new").as_usize().unwrap_or(64),
-        policy: v.get("policy").as_str().unwrap_or("asrkf").to_string(),
-        seed: v.get("seed").as_f64().unwrap_or(0.0) as u64,
-        resume_spill: v.get("resume_spill").as_bool().unwrap_or(false),
-    })
+    let mut b = GenParams::builder(prompt);
+    if let Some(n) = v.get("max_new").as_usize() {
+        b = b.max_new(n);
+    }
+    if let Some(p) = v.get("policy").as_str() {
+        b = b.policy(p);
+    }
+    if let Some(s) = v.get("seed").as_f64() {
+        b = b.seed(s as u64);
+    }
+    if let Some(r) = v.get("resume_spill").as_bool() {
+        b = b.resume_spill(r);
+    }
+    if let Some(c) = v.get("class").as_str() {
+        b = b.qos(QosClass::parse(c)?);
+    }
+    Ok(b.build())
+}
+
+/// Parse one generate line (legacy entry point, kept for callers that
+/// bypass [`parse_line`]'s routing).
+pub fn parse_request(line: &str) -> Result<GenParams, String> {
+    let v = parse(line).map_err(|e| format!("bad json: {e}"))?;
+    parse_generate(&v)
 }
 
 pub fn response_line(resp: &GenResponse) -> String {
     let v = match &resp.error {
-        Some(e) => Json::obj(vec![("id", Json::num(resp.id as f64)), ("error", Json::str(e))]),
+        Some(e) => {
+            let mut fields = vec![
+                ("id", Json::num(resp.id as f64)),
+                ("error", Json::str(e)),
+                ("class", Json::str(resp.class.as_str())),
+            ];
+            if let Some(rej) = &resp.reject {
+                fields.push((
+                    "reject",
+                    Json::obj(vec![
+                        ("reason", Json::str(rej.reason.as_str())),
+                        ("class", Json::str(rej.requested.as_str())),
+                    ]),
+                ));
+            }
+            Json::obj(fields)
+        }
         None => Json::obj(vec![
             ("id", Json::num(resp.id as f64)),
             ("text", Json::str(&resp.text)),
+            ("class", Json::str(resp.class.as_str())),
             ("prompt_tokens", Json::num(resp.prompt_tokens as f64)),
             ("generated_tokens", Json::num(resp.generated_tokens as f64)),
             ("final_active_kv", Json::num(resp.final_active_kv as f64)),
@@ -111,6 +165,7 @@ pub fn error_line(msg: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{Reject, RejectReason};
     use std::time::Duration;
 
     #[test]
@@ -132,6 +187,7 @@ mod tests {
         assert_eq!(p.max_new, 64);
         assert_eq!(p.policy, "asrkf");
         assert!(!p.resume_spill, "resume is opt-in per request");
+        assert_eq!(p.qos, QosClass::Standard, "class defaults to standard");
     }
 
     #[test]
@@ -142,11 +198,39 @@ mod tests {
     }
 
     #[test]
-    fn response_line_shape() {
-        let r = GenResponse {
+    fn versioned_generate_roundtrips() {
+        let line = r#"{"v": 1, "op": "generate", "prompt": "hi", "class": "interactive"}"#;
+        match parse_line(line) {
+            Ok(Request::Generate(p)) => {
+                assert_eq!(p.prompt, "hi");
+                assert_eq!(p.qos, QosClass::Interactive);
+            }
+            other => panic!("expected Generate, got {other:?}"),
+        }
+        // v is optional; op alone selects the v1 path
+        match parse_line(r#"{"op": "stats"}"#) {
+            Ok(Request::Stats) => {}
+            other => panic!("expected Stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn versioned_rejects_unknown_op_and_bad_version() {
+        let err = parse_line(r#"{"op": "frobnicate"}"#).unwrap_err();
+        assert!(err.contains("unknown op"), "{err}");
+        let err = parse_line(r#"{"v": 2, "op": "generate", "prompt": "x"}"#).unwrap_err();
+        assert!(err.contains("unsupported protocol version"), "{err}");
+        let err = parse_line(r#"{"op": "generate", "prompt": "x", "class": "vip"}"#).unwrap_err();
+        assert!(err.contains("qos class"), "{err}");
+    }
+
+    fn ok_response() -> GenResponse {
+        GenResponse {
             id: 7,
             text: "hi".into(),
             error: None,
+            class: QosClass::Standard,
+            reject: None,
             prompt_tokens: 3,
             generated_tokens: 2,
             final_active_kv: 4,
@@ -155,13 +239,20 @@ mod tests {
             e2e: Duration::from_millis(100),
             offload: Default::default(),
             plan_latency: Default::default(),
-        };
-        let line = response_line(&r);
+        }
+    }
+
+    #[test]
+    fn response_line_shape() {
+        let line = response_line(&ok_response());
         assert!(line.ends_with('\n'));
         let v = parse(line.trim()).unwrap();
         assert_eq!(v.get("id").as_usize(), Some(7));
         assert_eq!(v.get("text").as_str(), Some("hi"));
         assert_eq!(v.get("compression").as_f64(), Some(0.25));
+        // the effective QoS class rides along on every response
+        assert_eq!(v.get("class").as_str(), Some("standard"));
+        assert!(matches!(v.get("reject"), Json::Null), "no reject on success");
         // sharding telemetry rides along on every response
         assert_eq!(v.get("shards").as_usize(), Some(0)); // default summary
         assert_eq!(v.get("restore_par_max").as_usize(), Some(0));
@@ -179,6 +270,23 @@ mod tests {
         let r = GenResponse::error(1, "boom");
         let v = parse(response_line(&r).trim()).unwrap();
         assert_eq!(v.get("error").as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn reject_response_carries_typed_reason() {
+        let r = GenResponse::rejected(
+            9,
+            Reject {
+                reason: RejectReason::HotEnvelope,
+                requested: QosClass::Interactive,
+                detail: "projected hot-tier slice below the envelope".into(),
+            },
+        );
+        let v = parse(response_line(&r).trim()).unwrap();
+        assert!(v.get("error").as_str().unwrap().contains("admission control"));
+        assert_eq!(v.get("class").as_str(), Some("interactive"));
+        assert_eq!(v.get("reject").get("reason").as_str(), Some("hot_envelope"));
+        assert_eq!(v.get("reject").get("class").as_str(), Some("interactive"));
     }
 
     #[test]

@@ -41,6 +41,61 @@ pub fn poisson_trace(
         .collect()
 }
 
+/// Periodic burst overlay for [`bursty_trace`]: every `every_s`
+/// seconds the arrival rate multiplies by `factor` for `len_s`
+/// seconds (the first burst starts at `every_s`, not at t=0).
+#[derive(Debug, Clone, Copy)]
+pub struct BurstProfile {
+    pub every_s: f64,
+    pub len_s: f64,
+    pub factor: f64,
+}
+
+impl BurstProfile {
+    fn rate_at(&self, t_s: f64, base_rate: f64) -> f64 {
+        if self.every_s <= 0.0 || self.factor <= 1.0 {
+            return base_rate;
+        }
+        let phase = t_s % self.every_s;
+        // bursts sit at the end of each period: [every_s - len_s, every_s)
+        if phase >= (self.every_s - self.len_s).max(0.0) {
+            base_rate * self.factor
+        } else {
+            base_rate
+        }
+    }
+}
+
+/// Poisson arrivals with periodic bursts: piecewise-constant rate
+/// (base between bursts, `base * factor` inside them), sampled by
+/// drawing each inter-arrival gap at the rate in effect at the
+/// current instant. Same prompt/length model as [`poisson_trace`];
+/// `profile.factor <= 1` degenerates to a plain Poisson trace.
+pub fn bursty_trace(
+    seed: u64,
+    n: usize,
+    base_rate_per_s: f64,
+    profile: BurstProfile,
+    prompt_range: (usize, usize),
+    max_new: usize,
+) -> Vec<TraceRequest> {
+    let (min_prompt, max_prompt) = prompt_range;
+    let mut rng = Pcg64::new(seed);
+    let mut t_s = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let rate = profile.rate_at(t_s, base_rate_per_s);
+            t_s += rng.exponential(rate);
+            let plen = rng.gen_range(min_prompt as u64, max_prompt as u64 + 1) as usize;
+            TraceRequest {
+                arrival_ms: (t_s * 1000.0) as u64,
+                prompt: prose(&mut rng, plen),
+                max_new,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,6 +108,41 @@ mod tests {
         // 200 arrivals at 10/s ~ 20s span; tolerate 2x spread
         let span_s = tr.last().unwrap().arrival_ms as f64 / 1000.0;
         assert!((10.0..40.0).contains(&span_s), "span {span_s}");
+    }
+
+    #[test]
+    fn bursty_trace_compresses_arrivals_inside_bursts() {
+        let profile = BurstProfile { every_s: 8.0, len_s: 2.0, factor: 6.0 };
+        let tr = bursty_trace(11, 400, 10.0, profile, (32, 64), 16);
+        assert_eq!(tr.len(), 400);
+        assert!(tr.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        // mean arrival rate inside burst windows must exceed the rate
+        // outside them (the 6x overlay is unmistakable at n=400)
+        let in_burst = |ms: u64| {
+            let phase = (ms as f64 / 1000.0) % profile.every_s;
+            phase >= profile.every_s - profile.len_s
+        };
+        let (mut burst, mut calm) = (0usize, 0usize);
+        for r in &tr {
+            if in_burst(r.arrival_ms) {
+                burst += 1;
+            } else {
+                calm += 1;
+            }
+        }
+        // bursts cover 1/4 of the timeline at 6x the rate: expect
+        // roughly 2/3 of arrivals inside them; require a strict skew
+        assert!(burst > calm, "burst={burst} calm={calm}");
+        // degenerate profile reproduces the plain Poisson trace shape
+        let flat = BurstProfile { every_s: 0.0, len_s: 0.0, factor: 1.0 };
+        let a = bursty_trace(5, 50, 10.0, flat, (32, 64), 16);
+        let b = poisson_trace(5, 50, 10.0, 32, 64, 16);
+        for (x, y) in a.iter().zip(&b) {
+            // same rng draw sequence; accumulation order differs by a
+            // float rounding, so allow 1ms of slack on the timestamps
+            assert!(x.arrival_ms.abs_diff(y.arrival_ms) <= 1);
+            assert_eq!(x.prompt, y.prompt);
+        }
     }
 
     #[test]

@@ -3,11 +3,11 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
-use asrkf::config::{EngineConfig, ServerConfig};
-use asrkf::coordinator::{spawn, GenParams};
+use asrkf::config::{EngineConfig, QosClass, ServerConfig};
+use asrkf::coordinator::{spawn, GenParams, RejectReason, Ticket};
 
 fn params(prompt: &str, max_new: usize, policy: &str, seed: u64) -> GenParams {
-    GenParams { prompt: prompt.into(), max_new, policy: policy.into(), seed, resume_spill: false }
+    GenParams::builder(prompt).max_new(max_new).policy(policy).seed(seed).build()
 }
 
 #[test]
@@ -24,13 +24,15 @@ fn batched_coordinator_serves_concurrent_requests() {
         "the queue evicts the next token. ",
         "memory tracks the attention scores. ",
     ];
-    let rxs: Vec<_> = prompts
+    let tickets: Vec<Ticket> = prompts
         .iter()
         .enumerate()
         .map(|(i, p)| handle.submit(params(p, 24, "asrkf", i as u64)).unwrap())
         .collect();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap();
+    // ids are assigned at submission, in order
+    assert!(tickets.windows(2).all(|w| w[0].id < w[1].id));
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let resp = ticket.wait().unwrap();
         assert!(resp.error.is_none(), "req {i}: {:?}", resp.error);
         assert_eq!(resp.generated_tokens, 24, "req {i}");
         assert!(!resp.text.is_empty());
@@ -51,6 +53,9 @@ fn admission_control_rejects_oversized_requests() {
     let resp = handle.generate_blocking(params(&huge, 2000, "asrkf", 0)).unwrap();
     assert!(resp.error.is_some(), "oversized request must be rejected");
     assert!(resp.error.unwrap().contains("admission"));
+    // the reject is typed, not just a string
+    let reject = resp.reject.expect("KV-capacity reject must carry the typed reason");
+    assert_eq!(reject.reason, RejectReason::KvCapacity);
 
     // but a normal request still succeeds afterwards
     let ok = handle.generate_blocking(params("the engine decodes. ", 8, "full", 0)).unwrap();
@@ -66,10 +71,10 @@ fn per_request_policies_coexist_in_one_batch() {
     let (handle, join) = spawn(cfg, server).unwrap();
 
     let prompt = format!("{} ", asrkf::workload::synthetic::prose(&mut asrkf::util::rng::Pcg64::new(5), 300));
-    let rx_full = handle.submit(params(&prompt, 80, "full", 1)).unwrap();
-    let rx_asrkf = handle.submit(params(&prompt, 80, "asrkf", 1)).unwrap();
-    let full = rx_full.recv().unwrap();
-    let asrkf_resp = rx_asrkf.recv().unwrap();
+    let t_full = handle.submit(params(&prompt, 80, "full", 1)).unwrap();
+    let t_asrkf = handle.submit(params(&prompt, 80, "asrkf", 1)).unwrap();
+    let full = t_full.wait().unwrap();
+    let asrkf_resp = t_asrkf.wait().unwrap();
     assert!(full.error.is_none() && asrkf_resp.error.is_none());
     assert_eq!(full.compression, 0.0);
     assert!(
@@ -79,6 +84,171 @@ fn per_request_policies_coexist_in_one_batch() {
     );
     drop(handle);
     join.join().unwrap();
+}
+
+#[test]
+fn mixed_qos_sessions_join_and_leave_mid_flight() {
+    let cfg = EngineConfig::default();
+    let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
+    let (handle, join) = spawn(cfg, server).unwrap();
+
+    // different classes AND different lengths: sessions retire at
+    // different steps, so the slot population (and therefore the
+    // class-weighted budget split) changes mid-flight many times
+    let mix = [
+        (QosClass::Interactive, 8usize),
+        (QosClass::Batch, 40),
+        (QosClass::Standard, 16),
+        (QosClass::Interactive, 12),
+        (QosClass::Batch, 32),
+        (QosClass::Standard, 24),
+    ];
+    let tickets: Vec<(QosClass, Ticket)> = mix
+        .iter()
+        .enumerate()
+        .map(|(i, &(class, max_new))| {
+            let p = GenParams::builder("the engine schedules a mixed batch. ")
+                .max_new(max_new)
+                .seed(i as u64)
+                .qos(class)
+                .build();
+            (class, handle.submit(p).unwrap())
+        })
+        .collect();
+    for (i, (class, ticket)) in tickets.into_iter().enumerate() {
+        let resp = ticket.wait().unwrap();
+        assert!(resp.error.is_none(), "req {i}: {:?}", resp.error);
+        assert_eq!(resp.generated_tokens, mix[i].1, "req {i}");
+        // budgets are roomy: nothing sheds, every request runs at the
+        // class it asked for
+        assert_eq!(resp.class, class, "req {i}");
+        assert!(resp.reject.is_none());
+    }
+    drop(handle);
+    join.join().unwrap();
+}
+
+#[test]
+fn interactive_requests_overtake_batch_under_contention() {
+    let cfg = EngineConfig::default();
+    let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
+    let (handle, join) = spawn(cfg, server).unwrap();
+
+    // fill all four slots with long batch-class sessions...
+    let occupiers: Vec<Ticket> = (0..4)
+        .map(|i| {
+            let p = GenParams::builder("a long batch job holds a slot. ")
+                .max_new(48)
+                .seed(i)
+                .qos(QosClass::Batch)
+                .build();
+            handle.submit(p).unwrap()
+        })
+        .collect();
+    // ...then queue batch-class work FIRST and interactive work after
+    // it. Priority scheduling must admit the interactive requests into
+    // freed slots ahead of the earlier-queued batch requests.
+    let queued_batch: Vec<Ticket> = (0..2)
+        .map(|i| {
+            let p = GenParams::builder("queued batch work waits. ")
+                .max_new(8)
+                .seed(10 + i)
+                .qos(QosClass::Batch)
+                .build();
+            handle.submit(p).unwrap()
+        })
+        .collect();
+    let queued_interactive: Vec<Ticket> = (0..2)
+        .map(|i| {
+            let p = GenParams::builder("an interactive user is waiting. ")
+                .max_new(8)
+                .seed(20 + i)
+                .qos(QosClass::Interactive)
+                .build();
+            handle.submit(p).unwrap()
+        })
+        .collect();
+
+    let e2e = |tickets: Vec<Ticket>| -> f64 {
+        let mut sum = 0.0;
+        let n = tickets.len();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            sum += r.e2e.as_secs_f64();
+        }
+        sum / n as f64
+    };
+    let batch_e2e = e2e(queued_batch);
+    let interactive_e2e = e2e(queued_interactive);
+    assert!(
+        interactive_e2e < batch_e2e,
+        "interactive requests queued after batch must still finish first \
+         (interactive {interactive_e2e:.3}s vs batch {batch_e2e:.3}s)"
+    );
+    for t in occupiers {
+        assert!(t.wait().unwrap().error.is_none());
+    }
+    drop(handle);
+    join.join().unwrap();
+}
+
+#[test]
+fn tiny_hot_budget_turns_into_typed_envelope_rejects() {
+    // size the hot tier so exactly one session's slice clears the
+    // admission envelope: one KV row is kv_row_floats * 4 bytes, the
+    // floor is 1.25x that (default headroom), and two members at any
+    // class mix push someone below it (see AdmissionController docs)
+    let mut cfg = EngineConfig::default();
+    let manifest = asrkf::runtime::Manifest::load(&cfg.artifacts_dir)
+        .expect("run `make artifacts` first");
+    let row_bytes = manifest.model.kv_row_floats * std::mem::size_of::<f32>();
+    cfg.offload.hot_budget_bytes = 2 * row_bytes;
+    let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
+    let (handle, join) = spawn(cfg, server).unwrap();
+
+    let first = handle
+        .submit(params("the first session occupies the envelope. ", 48, "asrkf", 1))
+        .unwrap();
+    let second = handle
+        .submit(params("the second session must not fit the envelope. ", 8, "asrkf", 2))
+        .unwrap();
+    let rejected = second.wait().unwrap();
+    assert!(rejected.error.as_deref().unwrap_or("").contains("admission"), "{rejected:?}");
+    let reject = rejected.reject.expect("envelope reject must be typed");
+    assert_eq!(reject.reason, RejectReason::HotEnvelope);
+    assert_eq!(reject.requested, QosClass::Standard);
+
+    let ok = first.wait().unwrap();
+    assert!(ok.error.is_none(), "the admitted session must still finish: {:?}", ok.error);
+    drop(handle);
+    join.join().unwrap();
+}
+
+#[test]
+fn equal_weights_reproduce_the_static_partition() {
+    // the pre-QoS coordinator gave every slot a static 1/B slice
+    // (OffloadConfig::partitioned); equal class weights must reproduce
+    // it byte-for-byte through the admission controller's projection,
+    // whatever the class mix of the population. Artifact-free: pure
+    // budget arithmetic.
+    use asrkf::config::{OffloadConfig, QosConfig};
+    use asrkf::coordinator::AdmissionController;
+
+    let offload =
+        OffloadConfig { hot_budget_bytes: 101, cold_budget_bytes: 31, ..Default::default() };
+    let qos = QosConfig { weights: [5, 5, 5], ..QosConfig::default() };
+    let ctl = AdmissionController::new(qos, &offload, 64);
+    for b in 1..=4usize {
+        let members: Vec<QosClass> =
+            (0..b).map(|i| QosClass::ALL[i % QosClass::COUNT]).collect();
+        let shares = ctl.shares(&members, offload.cold_budget_bytes);
+        for (i, &(hot, cold)) in shares.iter().enumerate() {
+            let p = offload.partitioned(b, i);
+            assert_eq!(hot, p.hot_budget_bytes, "hot {b}@{i}");
+            assert_eq!(cold, p.cold_budget_bytes, "cold {b}@{i}");
+        }
+    }
 }
 
 #[test]
@@ -132,11 +302,17 @@ fn tcp_roundtrip_json_lines() {
     reader.read_line(&mut resp2).unwrap();
     assert!(resp2.contains("error"));
 
+    // the versioned v1 format with a class rides the same connection;
+    // the effective class comes back on the response
     writer
-        .write_all(b"{\"prompt\": \"the queue routes a request. \", \"max_new\": 4, \"policy\": \"full\"}\n")
+        .write_all(
+            b"{\"v\": 1, \"op\": \"generate\", \"prompt\": \"the queue routes a request. \", \
+              \"max_new\": 4, \"policy\": \"full\", \"class\": \"interactive\"}\n",
+        )
         .unwrap();
     let mut resp3 = String::new();
     reader.read_line(&mut resp3).unwrap();
     let v3 = asrkf::util::json::parse(resp3.trim()).unwrap();
     assert_eq!(v3.get("generated_tokens").as_usize(), Some(4));
+    assert_eq!(v3.get("class").as_str(), Some("interactive"));
 }

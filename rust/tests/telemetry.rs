@@ -13,8 +13,9 @@
 //! * stats plane — a `{"stats": true}` request over a real TCP socket
 //!   returns the global registry as JSON plus Prometheus text that
 //!   `parse_exposition` accepts, and the connection survives errors;
-//! * bench CSV schema — every serving-CSV column's metric exists in
-//!   the catalog (CI bench-smoke runs this against the emitted CSV).
+//! * bench CSV schemas — every serving-CSV and load-gen-CSV column's
+//!   metric exists in the catalog (CI bench-smoke runs this against
+//!   the emitted CSVs).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -22,8 +23,8 @@ use std::net::{TcpListener, TcpStream};
 use asrkf::config::{OffloadConfig, ShardPartition};
 use asrkf::metrics::registry::spec_for;
 use asrkf::metrics::{
-    parse_exposition, serving_csv_headers, Registry, StepSegments, StepSpan,
-    SERVING_CSV_COLUMNS,
+    load_gen_csv_headers, parse_exposition, serving_csv_headers, Registry, StepSegments,
+    StepSpan, LOAD_GEN_CSV_COLUMNS, SERVING_CSV_COLUMNS,
 };
 use asrkf::offload::{ShardedStore, TieredStore};
 use asrkf::prop_assert;
@@ -538,6 +539,30 @@ fn serving_csv_schema_is_catalog_consistent() {
     if let Ok(text) = std::fs::read_to_string("artifacts/serving_throughput.csv") {
         let first = text.lines().next().unwrap_or("");
         assert_eq!(first, headers.join(","), "serving_throughput.csv header drifted");
+    }
+}
+
+#[test]
+fn load_gen_csv_schema_is_catalog_consistent() {
+    for col in LOAD_GEN_CSV_COLUMNS {
+        if !col.metric.is_empty() {
+            assert!(
+                spec_for(col.metric).is_some(),
+                "CSV column {:?} references unknown metric {:?}",
+                col.header,
+                col.metric
+            );
+        }
+    }
+    let headers = load_gen_csv_headers();
+    assert_eq!(headers.len(), LOAD_GEN_CSV_COLUMNS.len());
+    assert_eq!(headers[0], "Mode");
+
+    // CI bench-smoke runs benches/load_gen.rs before this test; when
+    // its CSV is present the emitted header row must match the schema
+    if let Ok(text) = std::fs::read_to_string("artifacts/load_gen.csv") {
+        let first = text.lines().next().unwrap_or("");
+        assert_eq!(first, headers.join(","), "load_gen.csv header drifted");
     }
 }
 
