@@ -19,6 +19,7 @@
 //!
 //! Output: table + artifacts/serving_throughput.csv
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use asrkf::baselines::make_policy;
@@ -101,6 +102,48 @@ fn plan_columns(lats: &[PlanLatency]) -> [String; 2] {
     [mean.to_string(), p99.to_string()]
 }
 
+/// The `rows lost` / `shard rebuilds` column pair: rows declared lost
+/// to shard failures and supervisor rebuilds, summed across sessions.
+/// Both stay 0 unless fault injection (or a real worker panic) fired.
+fn fault_columns(summaries: &[OffloadSummary]) -> [String; 2] {
+    let lost: u64 = summaries.iter().map(|s| s.rows_lost).sum();
+    let rebuilds: u64 = summaries.iter().map(|s| s.shard_rebuilds).sum();
+    let faults: u64 = summaries.iter().map(|s| s.faults_injected).sum();
+    let retries: u64 = summaries.iter().map(|s| s.io_retries).sum();
+    SMOKE_FAULTS.fetch_add(faults, Ordering::Relaxed);
+    SMOKE_RETRIES.fetch_add(retries, Ordering::Relaxed);
+    [lost.to_string(), rebuilds.to_string()]
+}
+
+/// Run-wide fault-smoke tallies, folded in by `fault_columns` as each
+/// row lands (so the end-of-run smoke line covers every store built).
+static SMOKE_FAULTS: AtomicU64 = AtomicU64::new(0);
+static SMOKE_RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// CI fault-smoke arming: with `ASRKF_FAULT_SEED` in the environment
+/// the host-only rows run under deterministic fault injection —
+/// transient spill I/O errors, torn record writes, and delayed worker
+/// replies — with the retry budget raised so every op recovers and
+/// the rows' own restored-count asserts still hold. Worker panics
+/// stay off here: a panic fails the whole bench process, and the
+/// chaos suite (`tests/chaos.rs`) owns that regime. Without the env
+/// var the config passes through untouched and the injector stays a
+/// `None` check.
+fn fault_smoke(mut cfg: asrkf::config::OffloadConfig) -> asrkf::config::OffloadConfig {
+    if let Some(seed) = std::env::var("ASRKF_FAULT_SEED").ok().and_then(|s| s.parse().ok()) {
+        cfg.fault_seed = Some(seed);
+        cfg.fault_io_rate = 0.05;
+        cfg.fault_torn_rate = 0.02;
+        cfg.fault_panic_rate = 0.0;
+        cfg.fault_delay_rate = 0.05;
+        cfg.fault_delay_us = 50;
+        cfg.io_retry_attempts = 6;
+        cfg.io_retry_backoff_us = 10;
+        cfg.io_retry_deadline_ms = 1000;
+    }
+    cfg
+}
+
 /// Host-only restore-burst microbench: stash cold rows into a
 /// `ShardedStore`, then restore them in sorted bursts — the exact
 /// shape of an entropy-triggered recovery. Runs without artifacts, so
@@ -112,12 +155,12 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
     let burst = bench::smoke_size(256, 64);
     for &n in &SHARD_SWEEP {
         let _section = bench::section(&format!("store burst n={n}"));
-        let cfg = asrkf::config::OffloadConfig {
+        let cfg = fault_smoke(asrkf::config::OffloadConfig {
             cold_after_steps: 4,
             shards: n,
             shard_partition: ShardPartition::Hash,
             ..Default::default()
-        };
+        });
         let mut store = ShardedStore::new(ROW_FLOATS, cfg)?;
         let row: Vec<f32> = (0..ROW_FLOATS).map(|i| (i as f32 * 0.37).sin()).collect();
         let t0 = Instant::now();
@@ -148,8 +191,10 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
             format!("{:.1}", restored as f64 / wall.as_secs_f64()),
             format!("{:.1}", e2e_sum / waves as f64),
         ];
-        cells.extend(offload_columns(&[sum]));
+        let sums = [sum];
+        cells.extend(offload_columns(&sums));
         cells.extend(plan_columns(&[])); // no decode steps: policy never ran
+        cells.extend(fault_columns(&sums));
         table.row(&cells);
     }
     Ok(())
@@ -171,7 +216,7 @@ fn pipelined_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Err
     for &pipeline in &[true, false] {
         let label = if pipeline { "pipelined burst (on)" } else { "pipelined burst (off)" };
         let _section = bench::section(&format!("pipelined burst on={pipeline}"));
-        let cfg = asrkf::config::OffloadConfig {
+        let cfg = fault_smoke(asrkf::config::OffloadConfig {
             cold_after_steps: 4,
             prefetch_ahead: 4,
             shards: 4,
@@ -179,7 +224,7 @@ fn pipelined_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Err
             pipeline,
             stage_burst_rows: burst,
             ..Default::default()
-        };
+        });
         let mut store = ShardedStore::new(ROW_FLOATS, cfg)?;
         let row: Vec<f32> = (0..ROW_FLOATS).map(|i| (i as f32 * 0.37).sin()).collect();
         let t0 = Instant::now();
@@ -222,8 +267,10 @@ fn pipelined_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Err
             format!("{:.1}", restored as f64 / wall.as_secs_f64()),
             format!("{:.1}", e2e_sum / waves as f64),
         ];
-        cells.extend(offload_columns(&[sum]));
+        let sums = [sum];
+        cells.extend(offload_columns(&sums));
         cells.extend(plan_columns(&[])); // host-only: policy never ran
+        cells.extend(fault_columns(&sums));
         table.row(&cells);
     }
     Ok(())
@@ -242,7 +289,7 @@ fn persistent_recovery_rows(table: &mut Table) -> Result<(), Box<dyn std::error:
     for &n in &[1usize, 4] {
         let _section = bench::section(&format!("persist recover n={n}"));
         let dir = TempDir::new("bench-spill-persist")?;
-        let cfg = asrkf::config::OffloadConfig {
+        let cfg = fault_smoke(asrkf::config::OffloadConfig {
             cold_budget_bytes: 1, // every stash spills straight to disk
             cold_after_steps: 4,
             shards: n,
@@ -250,7 +297,7 @@ fn persistent_recovery_rows(table: &mut Table) -> Result<(), Box<dyn std::error:
             spill_dir: Some(dir.path_str()),
             spill_persist: true,
             ..Default::default()
-        };
+        });
         let row: Vec<f32> = (0..ROW_FLOATS).map(|i| (i as f32 * 0.37).sin()).collect();
         let positions: Vec<usize> = (0..rows).collect();
         {
@@ -281,8 +328,10 @@ fn persistent_recovery_rows(table: &mut Table) -> Result<(), Box<dyn std::error:
             format!("{:.1}", restored as f64 / wall.as_secs_f64()),
             format!("{:.1}", restore.as_secs_f64() * 1000.0),
         ];
-        cells.extend(offload_columns(&[sum]));
+        let sums = [sum];
+        cells.extend(offload_columns(&sums));
         cells.extend(plan_columns(&[])); // host-only: policy never ran
+        cells.extend(fault_columns(&sums));
         table.row(&cells);
     }
     Ok(())
@@ -340,6 +389,7 @@ fn runtime_rows(
         ];
         row.extend(off);
         row.extend(plan_columns(&plan_lats));
+        row.extend(fault_columns(&summaries));
         table.row(&row);
         drop(handle);
         let _ = join.join();
@@ -376,6 +426,7 @@ fn runtime_rows(
         ];
         row.extend(off);
         row.extend(plan_columns(&plan_lats));
+        row.extend(fault_columns(&summaries));
         table.row(&row);
     }
     Ok(())
@@ -407,6 +458,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     table.print();
     table.write_csv("artifacts/serving_throughput.csv")?;
+    if std::env::var("ASRKF_FAULT_SEED").is_ok() {
+        let faults = SMOKE_FAULTS.load(Ordering::Relaxed);
+        let retries = SMOKE_RETRIES.load(Ordering::Relaxed);
+        // every row above already asserted its restored counts, so
+        // reaching here means the injected faults were all absorbed
+        println!("fault smoke: {faults} faults injected, {retries} io retries, all rows completed");
+        assert!(
+            faults > 0,
+            "ASRKF_FAULT_SEED set but no faults fired — injector wiring is broken"
+        );
+    }
     // one end-of-run wall-clock table from the registry's section
     // gauges (recorded by the RAII timers around the host-only rows)
     bench::section_summary().print();

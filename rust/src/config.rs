@@ -218,6 +218,42 @@ pub struct OffloadConfig {
     /// cancellations in equivalence tests. 0 (the default) disables it;
     /// intentionally not exposed as a CLI flag.
     pub pipeline_test_delay_us: u64,
+    /// Bound on the pipeline's blocking late-arrival wait, in
+    /// milliseconds: a `take` that beats its speculative read gives up
+    /// after this long with a typed `Error::Offload` (and a
+    /// `restore_timeout` flight cause) instead of blocking forever on
+    /// a dead shard's reply. 0 (the default) keeps the pre-existing
+    /// unbounded wait.
+    pub restore_wait_timeout_ms: u64,
+    /// Deterministic fault injection (`offload::fault`): the master
+    /// seed. `None` (the default) leaves the injector entirely inert;
+    /// `Some` arms the per-site rates below. Settable via
+    /// `--fault-seed` or the `ASRKF_FAULT_SEED` env var.
+    pub fault_seed: Option<u64>,
+    /// Probability an individual spill read/write/free returns an
+    /// injected I/O error (only with `fault_seed`).
+    pub fault_io_rate: f64,
+    /// Probability a spill record write is torn: truncated bytes are
+    /// written, then the op errors (only with `fault_seed`).
+    pub fault_torn_rate: f64,
+    /// Probability a worker-pool op panics at entry, before touching
+    /// its shard (only with `fault_seed`).
+    pub fault_panic_rate: f64,
+    /// Probability a worker-pool op sleeps `fault_delay_us` before
+    /// executing — a delayed reply (only with `fault_seed`).
+    pub fault_delay_rate: f64,
+    /// Sleep applied when a reply-delay fault fires, in microseconds.
+    pub fault_delay_us: u64,
+    /// Total attempts for each spill I/O op (`offload::fault::
+    /// RetryPolicy`): 1 disables retries (the pre-retry fail-fast
+    /// behavior); the default 3 absorbs transient errors.
+    pub io_retry_attempts: u32,
+    /// First retry backoff in microseconds; doubles per retry, plus up
+    /// to 50% seeded jitter.
+    pub io_retry_backoff_us: u64,
+    /// Wall-clock budget for one logical spill op including all its
+    /// retries, in milliseconds. 0 disables the deadline.
+    pub io_retry_deadline_ms: u64,
 }
 
 impl Default for OffloadConfig {
@@ -242,6 +278,19 @@ impl Default for OffloadConfig {
             restore_deadline_steps: 4,
             stage_burst_rows: 64,
             pipeline_test_delay_us: 0,
+            restore_wait_timeout_ms: 0,
+            fault_seed: None,
+            // Per-site rates only matter once fault_seed arms the
+            // injector; the defaults make a bare `--fault-seed N` run
+            // inject meaningfully (CI's fault smoke relies on this).
+            fault_io_rate: 0.02,
+            fault_torn_rate: 0.01,
+            fault_panic_rate: 0.005,
+            fault_delay_rate: 0.02,
+            fault_delay_us: 200,
+            io_retry_attempts: 3,
+            io_retry_backoff_us: 100,
+            io_retry_deadline_ms: 250,
         }
     }
 }
@@ -249,6 +298,13 @@ impl Default for OffloadConfig {
 impl OffloadConfig {
     pub fn from_args(args: &Args) -> Result<Self, String> {
         let d = OffloadConfig::default();
+        let rate = |key: &str, dv: f64| -> Result<f64, String> {
+            let v = args.f64_or(key, dv)?;
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("--{key}: expected a probability in [0, 1], got {v}"));
+            }
+            Ok(v)
+        };
         Ok(OffloadConfig {
             hot_budget_bytes: args.usize_or("hot-budget-mb", d.hot_budget_bytes >> 20)? << 20,
             cold_budget_bytes: args.usize_or("cold-budget-mb", d.cold_budget_bytes >> 20)? << 20,
@@ -280,6 +336,35 @@ impl OffloadConfig {
             },
             stage_burst_rows: args.usize_in("stage-burst-rows", d.stage_burst_rows, 1, 65536)?,
             pipeline_test_delay_us: d.pipeline_test_delay_us,
+            restore_wait_timeout_ms: args
+                .u64_or("restore-wait-timeout-ms", d.restore_wait_timeout_ms)?,
+            fault_seed: {
+                // CLI flag wins; the env var lets CI arm a smoke run
+                // without threading a flag through every harness.
+                let flag = args.str_or("fault-seed", "");
+                let s = if flag.is_empty() {
+                    std::env::var("ASRKF_FAULT_SEED").unwrap_or_default()
+                } else {
+                    flag
+                };
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(s.parse::<u64>().map_err(|_| {
+                        format!("--fault-seed / ASRKF_FAULT_SEED: expected a u64 seed, got '{s}'")
+                    })?)
+                }
+            },
+            fault_io_rate: rate("fault-io-rate", d.fault_io_rate)?,
+            fault_torn_rate: rate("fault-torn-rate", d.fault_torn_rate)?,
+            fault_panic_rate: rate("fault-panic-rate", d.fault_panic_rate)?,
+            fault_delay_rate: rate("fault-delay-rate", d.fault_delay_rate)?,
+            fault_delay_us: args.u64_or("fault-delay-us", d.fault_delay_us)?,
+            io_retry_attempts: args
+                .usize_in("io-retry-attempts", d.io_retry_attempts as usize, 1, 64)?
+                as u32,
+            io_retry_backoff_us: args.u64_or("io-retry-backoff-us", d.io_retry_backoff_us)?,
+            io_retry_deadline_ms: args.u64_or("io-retry-deadline-ms", d.io_retry_deadline_ms)?,
         })
     }
 
@@ -696,6 +781,61 @@ mod tests {
         assert!(OffloadConfig::from_args(&zero_burst).is_err());
         let huge_burst = args(&["gen", "--stage-burst-rows", "65537"]);
         assert!(OffloadConfig::from_args(&huge_burst).is_err());
+    }
+
+    #[test]
+    fn fault_flags_parse_validate_and_default_off() {
+        let d = OffloadConfig::default();
+        assert_eq!(d.fault_seed, None, "injection is off unless seeded");
+        assert_eq!(d.restore_wait_timeout_ms, 0, "late-arrival wait unbounded by default");
+        assert_eq!(d.io_retry_attempts, 3);
+
+        let a = args(&[
+            "gen",
+            "--fault-seed",
+            "42",
+            "--fault-io-rate",
+            "0.5",
+            "--fault-torn-rate",
+            "0",
+            "--fault-panic-rate",
+            "0.125",
+            "--fault-delay-rate",
+            "1",
+            "--fault-delay-us",
+            "50",
+            "--restore-wait-timeout-ms",
+            "250",
+            "--io-retry-attempts",
+            "5",
+            "--io-retry-backoff-us",
+            "10",
+            "--io-retry-deadline-ms",
+            "100",
+        ]);
+        let o = OffloadConfig::from_args(&a).unwrap();
+        assert_eq!(o.fault_seed, Some(42));
+        assert_eq!(o.fault_io_rate, 0.5);
+        assert_eq!(o.fault_torn_rate, 0.0);
+        assert_eq!(o.fault_panic_rate, 0.125);
+        assert_eq!(o.fault_delay_rate, 1.0);
+        assert_eq!(o.fault_delay_us, 50);
+        assert_eq!(o.restore_wait_timeout_ms, 250);
+        assert_eq!(o.io_retry_attempts, 5);
+        assert_eq!(o.io_retry_backoff_us, 10);
+        assert_eq!(o.io_retry_deadline_ms, 100);
+        assert_eq!(o.partitioned(2, 1).fault_seed, Some(42), "partition carries the seed");
+        assert_eq!(o.partitioned(2, 0).restore_wait_timeout_ms, 250);
+
+        // rates are probabilities; a bad seed string is a parse error
+        for bad in [
+            args(&["gen", "--fault-io-rate", "1.5"]),
+            args(&["gen", "--fault-panic-rate", "-0.1"]),
+            args(&["gen", "--fault-seed", "not-a-seed"]),
+            args(&["gen", "--io-retry-attempts", "0"]),
+        ] {
+            assert!(OffloadConfig::from_args(&bad).is_err());
+        }
     }
 
     #[test]

@@ -639,6 +639,7 @@ impl BatchEngine {
         // Published without a shard label: slot stores partition one
         // budget, so per-shard gauge series would collide across slots.
         let mut occ = TierOccupancy::default();
+        let mut degraded = 0usize;
         for slot in self.slots.iter().flatten() {
             let o = slot.session.store.occupancy();
             occ.hot_rows += o.hot_rows;
@@ -647,6 +648,17 @@ impl BatchEngine {
             occ.cold_bytes += o.cold_bytes;
             occ.spill_rows += o.spill_rows;
             occ.spill_bytes += o.spill_bytes;
+            degraded += slot.session.store.degraded_shards();
+        }
+        // degraded-mode admission: while any occupied slot's shards are
+        // rebuilding from spill, the controller discounts their capacity
+        // so new arrivals don't land on storage that is still warming
+        // back up. The window closes by itself (see
+        // `ShardedStore::degraded_shards`), so this poll both opens and
+        // clears the discount.
+        if self.admission.set_degraded(degraded) {
+            log::warn!("admission capacity discount: {degraded} shard(s) degraded");
+            Registry::global().gauge_set("asrkf_degraded_shards", &[], degraded as f64);
         }
         let mut per_class = [0usize; QosClass::COUNT];
         for slot in self.slots.iter().flatten() {

@@ -93,6 +93,14 @@ pub struct AdmissionController {
     /// `quantize_cold = false` makes budgets advisory (nothing ever
     /// demotes), so projection always admits.
     enforcing: bool,
+    /// Shards currently degraded (lost to a worker failure, or rebuilt
+    /// within the re-warm window) across the occupied sessions, fed by
+    /// the batcher each step. While non-zero, [`fits`] projects
+    /// against a proportionally discounted hot budget so admission
+    /// does not count capacity a rebuilding shard cannot yet serve.
+    ///
+    /// [`fits`]: AdmissionController::fits
+    degraded_shards: usize,
 }
 
 impl AdmissionController {
@@ -103,7 +111,29 @@ impl AdmissionController {
             shards: offload.shards.max(1),
             row_bytes: row_floats * std::mem::size_of::<f32>(),
             enforcing: offload.quantize_cold,
+            degraded_shards: 0,
         }
+    }
+
+    /// Update the degraded-shard count (clamped to the shard count).
+    /// Returns `true` when the value changed, so the caller can log the
+    /// transition without tracking its own copy.
+    pub fn set_degraded(&mut self, degraded: usize) -> bool {
+        let clamped = degraded.min(self.shards);
+        let changed = clamped != self.degraded_shards;
+        self.degraded_shards = clamped;
+        changed
+    }
+
+    /// The hot budget admission currently projects against: the
+    /// configured budget scaled by the fraction of shards actually
+    /// serving (`(shards - degraded) / shards`).
+    fn effective_hot_bytes(&self) -> usize {
+        if self.degraded_shards == 0 {
+            return self.hot_budget_bytes;
+        }
+        let live = self.shards - self.degraded_shards;
+        (self.hot_budget_bytes / self.shards) * live
     }
 
     pub fn weight(&self, class: QosClass) -> u64 {
@@ -138,7 +168,7 @@ impl AdmissionController {
         }
         let weights: Vec<u64> = members.iter().map(|&c| self.qos.weight(c)).collect();
         let floor = self.floor_bytes();
-        weighted_shares(self.hot_budget_bytes, &weights).into_iter().all(|h| h >= floor)
+        weighted_shares(self.effective_hot_bytes(), &weights).into_iter().all(|h| h >= floor)
     }
 
     /// Project admitting `requested` next to `occupied` (the classes of
@@ -254,6 +284,32 @@ mod tests {
             tiny.admit(&[], QosClass::Batch),
             Admission::Reject(RejectReason::HotEnvelope)
         );
+    }
+
+    #[test]
+    fn degraded_shards_discount_admission_capacity() {
+        // 8 KiB hot over 4 shards, floor 4096: two interactive members
+        // split to 4096 B each — fits exactly with all shards live
+        let mut c = ctl(8 << 10, 4, 0.0);
+        let occupied = vec![QosClass::Interactive];
+        assert_eq!(c.admit(&occupied, QosClass::Interactive), Admission::Admit);
+        // one shard rebuilding: the projection loses a quarter of the
+        // budget (6144 B over two members = 3072 B < floor) — even
+        // shedding to Batch leaves the candidate ~1229 B, so reject
+        assert!(c.set_degraded(1));
+        assert!(!c.set_degraded(1), "unchanged value reports no transition");
+        assert_eq!(
+            c.admit(&occupied, QosClass::Interactive),
+            Admission::Reject(RejectReason::HotEnvelope)
+        );
+        // the incumbent alone still fits on the discounted budget
+        assert!(c.fits(&occupied));
+        // recovery restores full capacity
+        assert!(c.set_degraded(0));
+        assert_eq!(c.admit(&occupied, QosClass::Interactive), Admission::Admit);
+        // the count clamps at the shard total (capacity floor of zero)
+        c.set_degraded(99);
+        assert!(!c.fits(&occupied));
     }
 
     #[test]

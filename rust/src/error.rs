@@ -18,6 +18,13 @@ pub enum Error {
     /// Tiered frozen-KV storage (`crate::offload`) failures: double
     /// stash, missing payload, spill-tier I/O.
     Offload(String),
+    /// Rows declared lost by a shard rebuild: the shard's worker died
+    /// and these positions had no spilled copy to recover from. The
+    /// positions are sorted and deduplicated. Unlike `Offload`, this
+    /// is a *final* verdict on the named rows — retrying cannot bring
+    /// them back — so callers should fail the owning session rather
+    /// than the whole process.
+    RowsLost(Vec<usize>),
 }
 
 impl fmt::Display for Error {
@@ -31,6 +38,16 @@ impl fmt::Display for Error {
             Error::Server(m) => write!(f, "server: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator: {m}"),
             Error::Offload(m) => write!(f, "offload: {m}"),
+            Error::RowsLost(p) => {
+                let shown: Vec<String> = p.iter().take(8).map(|x| x.to_string()).collect();
+                let more = if p.len() > 8 { ", .." } else { "" };
+                write!(
+                    f,
+                    "offload: {} row(s) lost to a shard failure (positions [{}{more}])",
+                    p.len(),
+                    shown.join(", ")
+                )
+            }
         }
     }
 }
@@ -73,6 +90,19 @@ mod tests {
     fn display_prefixes() {
         assert_eq!(format!("{}", Error::Offload("x".into())), "offload: x");
         assert_eq!(format!("{}", Error::Engine("y".into())), "engine: y");
+    }
+
+    #[test]
+    fn rows_lost_display_truncates() {
+        let few = Error::RowsLost(vec![3, 7]);
+        assert_eq!(
+            format!("{few}"),
+            "offload: 2 row(s) lost to a shard failure (positions [3, 7])"
+        );
+        let many = Error::RowsLost((0..12).collect());
+        let s = format!("{many}");
+        assert!(s.starts_with("offload: 12 row(s) lost"), "{s}");
+        assert!(s.contains(", .."), "{s}");
     }
 
     #[test]

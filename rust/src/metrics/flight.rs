@@ -15,10 +15,11 @@
 //! * `Drop` + `Supersede` events  == `total_dropped`
 //!
 //! The speculative restore pipeline's lifecycle causes (`SpecIssue` /
-//! `SpecLand` / `SpecCancel`) sit deliberately outside those groups:
-//! speculation is a cache fill, not a tier transition, so it must not
-//! perturb the conservation reconciliation. They render on their own
-//! trace track so overlap with the decode-step track is visible.
+//! `SpecLand` / `SpecCancel`, plus the bounded-wait `RestoreTimeout`)
+//! sit deliberately outside those groups: speculation is a cache fill,
+//! not a tier transition, so it must not perturb the conservation
+//! reconciliation. They render on their own trace track so overlap
+//! with the decode-step track is visible.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -62,6 +63,10 @@ pub enum Cause {
     /// speculative restore cancelled (superseded row, stale
     /// generation, or deadline expiry before consumption)
     SpecCancel,
+    /// a take's bounded wait on an in-flight speculative reply
+    /// expired (`--restore-wait-timeout-ms`): the take failed typed
+    /// instead of blocking on a dead or delayed shard
+    RestoreTimeout,
 }
 
 impl Cause {
@@ -79,6 +84,7 @@ impl Cause {
             Cause::SpecIssue => "spec-issue",
             Cause::SpecLand => "spec-land",
             Cause::SpecCancel => "spec-cancel",
+            Cause::RestoreTimeout => "restore_timeout",
         }
     }
 
@@ -86,7 +92,10 @@ impl Cause {
     /// on the dedicated speculative trace track, excluded from the
     /// conservation reconciliation).
     pub fn is_spec(&self) -> bool {
-        matches!(self, Cause::SpecIssue | Cause::SpecLand | Cause::SpecCancel)
+        matches!(
+            self,
+            Cause::SpecIssue | Cause::SpecLand | Cause::SpecCancel | Cause::RestoreTimeout
+        )
     }
 }
 

@@ -422,6 +422,43 @@ pub const CATALOG: &[MetricSpec] = &[
         labels: &[],
         help: "device decode batches dispatched",
     },
+    // -- fault injection / shard supervision ------------------------------
+    MetricSpec {
+        name: "asrkf_faults_injected_total",
+        kind: MetricKind::Counter,
+        unit: "faults",
+        labels: &["site", "shard"],
+        help: "faults fired by the seeded injector, per injection site",
+    },
+    MetricSpec {
+        name: "asrkf_io_retries_total",
+        kind: MetricKind::Counter,
+        unit: "retries",
+        labels: &["op", "outcome", "shard"],
+        help: "spill I/O retries beyond the first attempt: recovered | exhausted",
+    },
+    MetricSpec {
+        name: "asrkf_shard_rebuilds_total",
+        kind: MetricKind::Counter,
+        unit: "rebuilds",
+        labels: &[],
+        help: "shards rebuilt from their spill slice after a worker panic",
+    },
+    MetricSpec {
+        name: "asrkf_rows_lost_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &[],
+        help: "rows declared lost by shard rebuilds (no spilled copy survived)",
+    },
+    MetricSpec {
+        name: "asrkf_degraded_shards",
+        kind: MetricKind::Gauge,
+        unit: "shards",
+        labels: &[],
+        help: "shards currently lost or inside their post-rebuild warm-up window, \
+               summed over occupied slots; admission discounts this capacity",
+    },
     // -- bench harness -----------------------------------------------------
     MetricSpec {
         name: "asrkf_bench_section_us",
@@ -474,6 +511,8 @@ pub const SERVING_CSV_COLUMNS: &[CsvColumn] = &[
     CsvColumn { header: "late arrivals", metric: "asrkf_late_arrivals_total" },
     CsvColumn { header: "plan mean (us)", metric: "asrkf_plan_us" },
     CsvColumn { header: "plan p99 (us)", metric: "asrkf_plan_us" },
+    CsvColumn { header: "rows lost", metric: "asrkf_rows_lost_total" },
+    CsvColumn { header: "shard rebuilds", metric: "asrkf_shard_rebuilds_total" },
 ];
 
 /// Header strings of [`SERVING_CSV_COLUMNS`], in order.

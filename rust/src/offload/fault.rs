@@ -1,0 +1,552 @@
+//! Deterministic, seeded fault injection + retry policy for the
+//! offload I/O and worker-pool boundaries.
+//!
+//! Two cooperating pieces:
+//!
+//! * [`FaultInjector`] — a config-gated probability gate consulted at
+//!   the `SpillFile` / `Tier` / worker-pool seams. Disabled (the
+//!   default: no `--fault-seed`) it is a `None` check and costs
+//!   nothing; armed, every draw comes from a dedicated seeded
+//!   [`Pcg64`] stream so a fault trace replays bit-for-bit from its
+//!   seed. Sites: spill read/write/free I/O errors, torn (partial)
+//!   record writes, worker panics, and delayed worker replies.
+//! * [`RetryPolicy`] — bounded retry with exponential backoff,
+//!   seeded jitter, and a per-op wall-clock deadline, wrapped around
+//!   the spill read/write/free paths so a *transient* I/O error (real
+//!   or injected) no longer surfaces as a fail-fast `Error::Offload`.
+//!   `RetryPolicy::none()` (one attempt, the tier-level default)
+//!   reproduces the pre-retry behavior exactly.
+//!
+//! Both keep per-site / per-op atomic counters that `publish_flows`
+//! folds into `asrkf_faults_injected_total{site}` and
+//! `asrkf_io_retries_total{op,outcome}`.
+//!
+//! A third, test-only seam: [`arm_worker_kill`] registers a spill
+//! directory in a process-global one-shot kill list; the next worker
+//! op executed by a store whose spill dir lives under a registered
+//! path panics. This is how the coordinator test kills exactly one
+//! session's shard mid-flight without arming random injection for the
+//! whole batch. The fast path is a single relaxed atomic load.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::config::OffloadConfig;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Where a fault is injected. Doubles as the `site` label on
+/// `asrkf_faults_injected_total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `SpillFile::read_row` returns an I/O error.
+    SpillRead,
+    /// `SpillFile::write_row` returns an I/O error before writing.
+    SpillWrite,
+    /// `SpillFile::free_slot` returns an I/O error.
+    SpillFree,
+    /// `SpillFile` writes a truncated record, then errors — the torn
+    /// bytes must be rejected by the recovery scan, never re-served.
+    TornWrite,
+    /// A worker-pool op panics at entry (before mutating its shard).
+    WorkerPanic,
+    /// A worker-pool op sleeps before executing — a delayed reply.
+    ReplyDelay,
+}
+
+/// Number of fault sites (array-index space for the counters).
+pub const FAULT_SITES: usize = 6;
+
+impl FaultSite {
+    pub const ALL: [FaultSite; FAULT_SITES] = [
+        FaultSite::SpillRead,
+        FaultSite::SpillWrite,
+        FaultSite::SpillFree,
+        FaultSite::TornWrite,
+        FaultSite::WorkerPanic,
+        FaultSite::ReplyDelay,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::SpillRead => "spill_read",
+            FaultSite::SpillWrite => "spill_write",
+            FaultSite::SpillFree => "spill_free",
+            FaultSite::TornWrite => "torn_write",
+            FaultSite::WorkerPanic => "worker_panic",
+            FaultSite::ReplyDelay => "reply_delay",
+        }
+    }
+}
+
+struct FaultState {
+    /// Per-site injection probability in [0, 1], indexed by site.
+    rates: [f64; FAULT_SITES],
+    /// Sleep applied when a `ReplyDelay` fires.
+    delay_us: u64,
+    /// Dedicated draw stream — one per store, so a shard's fault
+    /// trace is a pure function of (seed, its own op sequence).
+    rng: Mutex<Pcg64>,
+    injected: [AtomicU64; FAULT_SITES],
+}
+
+/// Config-gated fault injector. `Clone` shares the underlying state
+/// (counters and rng stream), so the spill file, the tier, and the
+/// store all observe one coherent trace.
+#[derive(Clone, Default)]
+pub struct FaultInjector {
+    state: Option<Arc<FaultState>>,
+    /// Spill directory of the owning store — the kill-switch routing
+    /// key. Present even when injection is disabled so a targeted
+    /// test kill needs no `--fault-seed`.
+    dir: Option<Arc<PathBuf>>,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector").field("enabled", &self.state.is_some()).finish()
+    }
+}
+
+impl FaultInjector {
+    /// Inert injector: every check is a `None` branch.
+    pub fn disabled() -> Self {
+        FaultInjector::default()
+    }
+
+    /// Build from config. Armed only when `fault_seed` is set; the
+    /// spill dir (when configured) is always recorded for kill-switch
+    /// routing.
+    pub fn from_cfg(cfg: &OffloadConfig) -> Self {
+        let dir = cfg.spill_dir.as_ref().map(|s| Arc::new(PathBuf::from(s)));
+        let Some(seed) = cfg.fault_seed else {
+            return FaultInjector { state: None, dir };
+        };
+        let mut rates = [0.0; FAULT_SITES];
+        rates[FaultSite::SpillRead as usize] = cfg.fault_io_rate;
+        rates[FaultSite::SpillWrite as usize] = cfg.fault_io_rate;
+        rates[FaultSite::SpillFree as usize] = cfg.fault_io_rate;
+        rates[FaultSite::TornWrite as usize] = cfg.fault_torn_rate;
+        rates[FaultSite::WorkerPanic as usize] = cfg.fault_panic_rate;
+        rates[FaultSite::ReplyDelay as usize] = cfg.fault_delay_rate;
+        FaultInjector {
+            state: Some(Arc::new(FaultState {
+                rates,
+                delay_us: cfg.fault_delay_us,
+                rng: Mutex::new(Pcg64::with_stream(seed, 0xfa17)),
+                injected: std::array::from_fn(|_| AtomicU64::new(0)),
+            })),
+            dir,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Draw once against `site`'s rate; count and report a hit.
+    #[inline]
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let Some(st) = &self.state else { return false };
+        let rate = st.rates[site as usize];
+        if rate <= 0.0 {
+            return false;
+        }
+        let hit = st.rng.lock().unwrap_or_else(|p| p.into_inner()).f64() < rate;
+        if hit {
+            st.injected[site as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// `fire` packaged as the typed error the I/O seams return.
+    #[inline]
+    pub fn io_error(&self, site: FaultSite) -> Result<()> {
+        if self.fire(site) {
+            return Err(Error::Offload(format!("injected fault: {}", site.as_str())));
+        }
+        Ok(())
+    }
+
+    /// Worker-op entry hook: honor a targeted one-shot kill, then the
+    /// probabilistic panic/delay sites. Called *before* the op touches
+    /// its shard, so a panicked op is guaranteed to have done nothing.
+    #[inline]
+    pub fn worker_op(&self) {
+        if KILL_ARMED.load(Ordering::Relaxed) {
+            if let Some(dir) = &self.dir {
+                if take_kill(dir) {
+                    self.count(FaultSite::WorkerPanic);
+                    panic!("injected worker kill ({})", dir.display());
+                }
+            }
+        }
+        if self.state.is_none() {
+            return;
+        }
+        if self.fire(FaultSite::WorkerPanic) {
+            panic!("injected worker panic");
+        }
+        if self.fire(FaultSite::ReplyDelay) {
+            let us = self.state.as_ref().map(|s| s.delay_us).unwrap_or(0);
+            if us > 0 {
+                std::thread::sleep(Duration::from_micros(us));
+            }
+        }
+    }
+
+    fn count(&self, site: FaultSite) {
+        if let Some(st) = &self.state {
+            st.injected[site as usize].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Faults injected at `site` so far.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.state
+            .as_ref()
+            .map(|st| st.injected[site as usize].load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Total faults injected across all sites.
+    pub fn injected_total(&self) -> u64 {
+        FaultSite::ALL.iter().map(|&s| self.injected(s)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Targeted one-shot worker kill (test seam)
+
+static KILL_ARMED: AtomicBool = AtomicBool::new(false);
+static KILL_DIRS: OnceLock<Mutex<Vec<PathBuf>>> = OnceLock::new();
+
+/// Arm a one-shot kill: the next worker op executed by a store whose
+/// spill directory is `dir` or lives under it panics at op entry (the
+/// panic is supervised like any injected `WorkerPanic`). Used by
+/// tests to fail exactly one session's shard without probabilistic
+/// injection. Process-global; each armed dir fires at most once.
+pub fn arm_worker_kill<P: Into<PathBuf>>(dir: P) {
+    let mut g = KILL_DIRS
+        .get_or_init(|| Mutex::new(Vec::new()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner());
+    g.push(dir.into());
+    KILL_ARMED.store(true, Ordering::SeqCst);
+}
+
+fn take_kill(dir: &Path) -> bool {
+    let mut g = KILL_DIRS
+        .get_or_init(|| Mutex::new(Vec::new()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner());
+    let Some(i) = g.iter().position(|k| dir.starts_with(k)) else {
+        return false;
+    };
+    g.remove(i);
+    if g.is_empty() {
+        KILL_ARMED.store(false, Ordering::SeqCst);
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Retry policy
+
+/// Which spill operation a retry wraps. Doubles as the `op` label on
+/// `asrkf_io_retries_total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryOp {
+    Read,
+    Write,
+    Free,
+}
+
+pub const RETRY_OPS: usize = 3;
+
+impl RetryOp {
+    pub const ALL: [RetryOp; RETRY_OPS] = [RetryOp::Read, RetryOp::Write, RetryOp::Free];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RetryOp::Read => "read",
+            RetryOp::Write => "write",
+            RetryOp::Free => "free",
+        }
+    }
+}
+
+/// How a retried op ended. Doubles as the `outcome` label on
+/// `asrkf_io_retries_total` (the counter value is the number of
+/// *retries*, i.e. attempts beyond the first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryOutcome {
+    /// The op eventually succeeded after >= 1 retry.
+    Recovered,
+    /// Attempts (or the deadline) ran out; the last error surfaced.
+    Exhausted,
+}
+
+pub const RETRY_OUTCOMES: usize = 2;
+
+impl RetryOutcome {
+    pub const ALL: [RetryOutcome; RETRY_OUTCOMES] =
+        [RetryOutcome::Recovered, RetryOutcome::Exhausted];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RetryOutcome::Recovered => "recovered",
+            RetryOutcome::Exhausted => "exhausted",
+        }
+    }
+}
+
+struct RetryStats {
+    /// retries[op][outcome]
+    counts: [[AtomicU64; RETRY_OUTCOMES]; RETRY_OPS],
+}
+
+/// Bounded retry with exponential backoff + seeded jitter + per-op
+/// deadline. `Clone` shares the counters and jitter stream.
+#[derive(Clone)]
+pub struct RetryPolicy {
+    /// Total attempts (1 = no retries, the pre-PR fail-fast behavior).
+    pub attempts: u32,
+    /// First backoff; doubles per retry.
+    pub backoff_us: u64,
+    /// Wall-clock budget for one logical op including retries.
+    pub deadline_ms: u64,
+    jitter: Option<Arc<Mutex<Pcg64>>>,
+    stats: Arc<RetryStats>,
+}
+
+impl std::fmt::Debug for RetryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RetryPolicy")
+            .field("attempts", &self.attempts)
+            .field("backoff_us", &self.backoff_us)
+            .field("deadline_ms", &self.deadline_ms)
+            .finish()
+    }
+}
+
+impl RetryPolicy {
+    fn fresh_stats() -> Arc<RetryStats> {
+        Arc::new(RetryStats {
+            counts: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+        })
+    }
+
+    /// One attempt, no backoff — identical to the pre-retry error
+    /// path. The tier-level constructor default, so direct `SpillTier`
+    /// users (and their one-shot fault tests) see no behavior change.
+    pub fn none() -> Self {
+        RetryPolicy {
+            attempts: 1,
+            backoff_us: 0,
+            deadline_ms: 0,
+            jitter: None,
+            stats: Self::fresh_stats(),
+        }
+    }
+
+    /// Build from config. Jitter draws come from a stream derived
+    /// from `fault_seed` when set (so chaos runs replay exactly) and
+    /// from a fixed constant otherwise — jitter only shapes sleep
+    /// durations, never outcomes.
+    pub fn from_cfg(cfg: &OffloadConfig) -> Self {
+        let seed = cfg.fault_seed.unwrap_or(0x7e7);
+        RetryPolicy {
+            attempts: cfg.io_retry_attempts.max(1),
+            backoff_us: cfg.io_retry_backoff_us,
+            deadline_ms: cfg.io_retry_deadline_ms,
+            jitter: Some(Arc::new(Mutex::new(Pcg64::with_stream(seed, 0xba0f)))),
+            stats: Self::fresh_stats(),
+        }
+    }
+
+    /// Run `f` with up to `attempts` tries. Backoff before attempt
+    /// `k` (1-based retries) is `backoff_us * 2^(k-1)` plus up to 50%
+    /// seeded jitter; the loop stops early once `deadline_ms` of wall
+    /// clock has elapsed. All errors are treated as retryable — the
+    /// spill seams only produce I/O-shaped errors.
+    pub fn run<T>(&self, op: RetryOp, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        if self.attempts <= 1 {
+            return f();
+        }
+        let start = Instant::now();
+        let mut retries: u64 = 0;
+        loop {
+            match f() {
+                Ok(v) => {
+                    if retries > 0 {
+                        self.add(op, RetryOutcome::Recovered, retries);
+                    }
+                    return Ok(v);
+                }
+                Err(e) => {
+                    let out_of_attempts = retries + 1 >= self.attempts as u64;
+                    let out_of_time = self.deadline_ms > 0
+                        && start.elapsed() >= Duration::from_millis(self.deadline_ms);
+                    if out_of_attempts || out_of_time {
+                        if retries > 0 {
+                            self.add(op, RetryOutcome::Exhausted, retries);
+                        }
+                        return Err(e);
+                    }
+                    let base = self.backoff_us.saturating_mul(1u64 << retries.min(16));
+                    let jit = match &self.jitter {
+                        Some(j) if base > 0 => j
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .gen_range(0, base / 2 + 1),
+                        _ => 0,
+                    };
+                    if base + jit > 0 {
+                        std::thread::sleep(Duration::from_micros(base + jit));
+                    }
+                    retries += 1;
+                }
+            }
+        }
+    }
+
+    fn add(&self, op: RetryOp, outcome: RetryOutcome, n: u64) {
+        self.stats.counts[op as usize][outcome as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Retries recorded for (op, outcome).
+    pub fn retries(&self, op: RetryOp, outcome: RetryOutcome) -> u64 {
+        self.stats.counts[op as usize][outcome as usize].load(Ordering::Relaxed)
+    }
+
+    /// Total retries across every (op, outcome) pair.
+    pub fn retries_total(&self) -> u64 {
+        RetryOp::ALL
+            .iter()
+            .flat_map(|&op| RetryOutcome::ALL.iter().map(move |&o| self.retries(op, o)))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed_cfg(seed: u64, io: f64) -> OffloadConfig {
+        OffloadConfig {
+            fault_seed: Some(seed),
+            fault_io_rate: io,
+            fault_torn_rate: 0.0,
+            fault_panic_rate: 0.0,
+            fault_delay_rate: 0.0,
+            ..OffloadConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_injector_never_fires() {
+        let inj = FaultInjector::disabled();
+        assert!(!inj.enabled());
+        for _ in 0..1000 {
+            assert!(!inj.fire(FaultSite::SpillRead));
+        }
+        assert_eq!(inj.injected_total(), 0);
+        inj.worker_op(); // must not panic
+    }
+
+    #[test]
+    fn seeded_injector_is_deterministic() {
+        let a = FaultInjector::from_cfg(&armed_cfg(42, 0.3));
+        let b = FaultInjector::from_cfg(&armed_cfg(42, 0.3));
+        let trace_a: Vec<bool> = (0..200).map(|_| a.fire(FaultSite::SpillRead)).collect();
+        let trace_b: Vec<bool> = (0..200).map(|_| b.fire(FaultSite::SpillRead)).collect();
+        assert_eq!(trace_a, trace_b);
+        assert!(trace_a.iter().any(|&h| h), "rate 0.3 over 200 draws must hit");
+        assert_eq!(a.injected(FaultSite::SpillRead), trace_a.iter().filter(|&&h| h).count() as u64);
+    }
+
+    #[test]
+    fn zero_rate_site_never_fires_even_when_armed() {
+        let inj = FaultInjector::from_cfg(&armed_cfg(7, 0.0));
+        for _ in 0..500 {
+            assert!(!inj.fire(FaultSite::SpillRead));
+            assert!(!inj.fire(FaultSite::TornWrite));
+        }
+        assert_eq!(inj.injected_total(), 0);
+    }
+
+    #[test]
+    fn retry_recovers_after_transient_failures() {
+        let p = RetryPolicy {
+            attempts: 4,
+            backoff_us: 1,
+            deadline_ms: 1000,
+            jitter: None,
+            stats: RetryPolicy::fresh_stats(),
+        };
+        let mut left = 2; // fail twice, then succeed
+        let out = p.run(RetryOp::Read, || {
+            if left > 0 {
+                left -= 1;
+                Err(Error::Offload("transient".into()))
+            } else {
+                Ok(99)
+            }
+        });
+        assert_eq!(out.unwrap(), 99);
+        assert_eq!(p.retries(RetryOp::Read, RetryOutcome::Recovered), 2);
+        assert_eq!(p.retries(RetryOp::Read, RetryOutcome::Exhausted), 0);
+    }
+
+    #[test]
+    fn retry_exhausts_and_surfaces_last_error() {
+        let p = RetryPolicy {
+            attempts: 3,
+            backoff_us: 1,
+            deadline_ms: 1000,
+            jitter: None,
+            stats: RetryPolicy::fresh_stats(),
+        };
+        let mut calls = 0;
+        let out: Result<()> = p.run(RetryOp::Write, || {
+            calls += 1;
+            Err(Error::Offload(format!("boom {calls}")))
+        });
+        assert!(matches!(out, Err(Error::Offload(ref m)) if m == "boom 3"));
+        assert_eq!(calls, 3);
+        assert_eq!(p.retries(RetryOp::Write, RetryOutcome::Exhausted), 2);
+    }
+
+    #[test]
+    fn retry_none_is_single_attempt() {
+        let p = RetryPolicy::none();
+        let mut calls = 0;
+        let out: Result<()> = p.run(RetryOp::Free, || {
+            calls += 1;
+            Err(Error::Offload("once".into()))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1);
+        assert_eq!(p.retries_total(), 0);
+    }
+
+    #[test]
+    fn kill_switch_targets_only_its_dir() {
+        let inj_hit = FaultInjector {
+            state: None,
+            dir: Some(Arc::new(PathBuf::from("/tmp/asrkf-kill-test/slot-0"))),
+        };
+        let inj_miss = FaultInjector {
+            state: None,
+            dir: Some(Arc::new(PathBuf::from("/tmp/asrkf-kill-test/slot-1"))),
+        };
+        arm_worker_kill("/tmp/asrkf-kill-test/slot-0");
+        inj_miss.worker_op(); // different dir: no panic
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| inj_hit.worker_op()));
+        assert!(hit.is_err(), "armed dir must panic");
+        inj_hit.worker_op(); // one-shot: disarmed after firing
+    }
+}

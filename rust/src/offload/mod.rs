@@ -66,6 +66,7 @@
 //! backends under a fixed budget.
 
 pub mod cold;
+pub mod fault;
 pub mod hot;
 pub mod quant;
 pub mod sched;
@@ -75,6 +76,7 @@ pub mod store;
 pub mod tier;
 
 pub use cold::ColdTier;
+pub use fault::{FaultInjector, FaultSite, RetryOp, RetryOutcome, RetryPolicy};
 pub use hot::HotTier;
 pub use quant::{dequantize, dequantize_into, quantize, QuantRow};
 pub use sched::{SchedClass, ThawScheduler};
@@ -146,6 +148,18 @@ pub struct OffloadSummary {
     /// mean in-worker service time of speculative reads — the tier
     /// latency that ran overlapped with decode
     pub restore_overlap_mean_us: u64,
+    /// faults the seeded injector fired, all sites (0 unless armed)
+    pub faults_injected: u64,
+    /// spill I/O retries taken (attempts beyond the first), all
+    /// ops and outcomes
+    pub io_retries: u64,
+    /// shard rebuilds the supervisor performed after a worker panic
+    /// or loss (re-adopting spilled rows via the recovery path)
+    pub shard_rebuilds: u64,
+    /// rows a rebuild could not recover (no spilled copy) — declared
+    /// lost in the typed per-position loss set, never served as
+    /// wrong bytes
+    pub rows_lost: u64,
 }
 
 impl OffloadSummary {
@@ -208,6 +222,10 @@ impl OffloadSummary {
                 .hist("asrkf_restore_overlap_us", &[])
                 .map(|h| h.mean as u64)
                 .unwrap_or(0),
+            faults_injected: s.counter_sum("asrkf_faults_injected_total", &[]),
+            io_retries: s.counter_sum("asrkf_io_retries_total", &[]),
+            shard_rebuilds: s.counter_sum("asrkf_shard_rebuilds_total", &[]),
+            rows_lost: s.counter_sum("asrkf_rows_lost_total", &[]),
         }
     }
 

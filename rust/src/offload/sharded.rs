@@ -44,12 +44,20 @@
 //!   ([`ShardedStore::restore_parallelism`]), a burst-imbalance
 //!   counter, and per-shard occupancy gauges, all surfaced through
 //!   [`OffloadSummary`] and the server JSON.
+//! * **Supervision**: a shard whose op panics (on a pool worker or
+//!   inline) is not poisoned forever — the facade rebuilds it from its
+//!   slice of the persistent spill directory, recovering every row
+//!   with a verified spilled copy and declaring the rest as a typed
+//!   per-position loss set ([`Error::RowsLost`]). Takes of a declared
+//!   lost position fail with that error — never a silent `None` and
+//!   never wrong bytes — until a fresh stash supersedes the loss. See
+//!   the *Failure model* section of the module README.
 //!
 //! `shards = 1` degenerates to exactly the single-store behavior (no
 //! worker pool, every call inline) — property-tested against an
 //! unsharded `TieredStore` oracle in `tests/prop_offload.rs`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -100,6 +108,11 @@ enum ShardOut {
 /// The single execution path for both the inline (n = 1 / one engaged
 /// shard) and worker-pool branches, so they cannot drift.
 fn exec(store: &mut TieredStore, op: ShardOp) -> Result<ShardOut> {
+    // fault-injection hook at the worker boundary, *before* the op
+    // touches the store: an injected panic therefore provably mutated
+    // nothing, which is what lets the supervisor rebuild the shard
+    // from its spill file without wondering about half-applied ops
+    store.fault().worker_op();
     match op {
         ShardOp::Stash { items, step } => {
             for (pos, row, eta) in items {
@@ -228,6 +241,23 @@ struct PendingSpec {
     items: Vec<(usize, u64, u64)>,
 }
 
+/// A shard's monotone flow counters as of its last reinstall. The
+/// facade keeps one per shard so that when a worker panic destroys a
+/// store (the unwind drops it, counters and all), the dead life's
+/// history can still be folded into the facade totals — injected
+/// panics fire before the op mutates anything, so the cached values
+/// are exact at the moment of loss.
+#[derive(Clone, Copy, Default)]
+struct ShardFlows {
+    stashed: u64,
+    restored: u64,
+    dropped: u64,
+}
+
+fn flows_of(s: &TieredStore) -> ShardFlows {
+    ShardFlows { stashed: s.total_stashed, restored: s.total_restored, dropped: s.total_dropped }
+}
+
 /// A decoded speculative copy waiting in the landing buffer for its
 /// consuming take. Valid by construction: every mutation of the
 /// position fences (discards) it first, so presence implies
@@ -251,10 +281,11 @@ pub struct ShardedStore {
     /// Row size in floats (identical across shards); kept so budget
     /// re-slices can validate the per-shard one-row floor up front.
     row_floats: usize,
-    /// `None` only transiently while a shard is out with a worker, or
-    /// permanently if that shard's op panicked mid-burst (then every
-    /// touch of the shard reports `Error::Offload` instead of
-    /// panicking).
+    /// `None` only transiently while a shard is out with a worker or
+    /// between a mid-burst panic and the supervisor's rebuild
+    /// (`rebuild_shard`). A slot stays `None` only if the rebuild
+    /// itself failed; every touch then reports `Error::Offload`
+    /// instead of panicking.
     shards: Vec<Option<TieredStore>>,
     /// Shards engaged per restore burst — `max() > 1` is restore
     /// parallelism actually happening.
@@ -298,9 +329,35 @@ pub struct ShardedStore {
     /// Facade-level flight recorder for speculation lifecycle events
     /// (issue/land/cancel) — per-shard recorders keep tier moves.
     spec_flight: FlightRecorder,
-    /// Last step handed to `pipeline_advance`, used to stamp facade
-    /// flight events between advances.
+    /// Last step handed to `pipeline_advance` / `on_step`, used to
+    /// stamp facade flight events between advances and to age the
+    /// post-rebuild degraded window.
     last_step: u64,
+    /// Facade shadow of each shard's resident position set, updated on
+    /// every successful op (and re-derived from the store on the rare
+    /// partial-error path, while the store is provably home). When a
+    /// worker panic destroys a store, this is the only record of what
+    /// it held — the rebuild diffs it against the recovered rows to
+    /// produce the declared-lost set.
+    resident: Vec<HashSet<usize>>,
+    /// Flow counters per shard as of its last reinstall (see
+    /// [`ShardFlows`]).
+    flows_cache: Vec<ShardFlows>,
+    /// Flow history of dead shard lives, folded in at rebuild so the
+    /// facade totals (and the conservation identity) survive the loss.
+    carried: ShardFlows,
+    /// Positions declared lost by shard rebuilds and not yet
+    /// superseded by a fresh stash. Takes of these fail with
+    /// [`Error::RowsLost`]; a stash or drop clears the entry.
+    lost: BTreeSet<usize>,
+    /// Monotone count of rows ever declared lost (the conservation
+    /// term: `stashed == restored + dropped + lost + resident`).
+    rows_lost: u64,
+    /// Shard rebuilds completed by the supervisor.
+    shard_rebuilds: u64,
+    /// Step each shard was last rebuilt at (`None` = never); drives
+    /// the temporary admission-capacity discount.
+    rebuilt_at: Vec<Option<u64>>,
 }
 
 impl std::fmt::Debug for ShardedStore {
@@ -384,6 +441,14 @@ impl ShardedStore {
         if n > 1 || cfg.pipeline {
             worker_pool(); // warm the process-wide pool off the hot path
         }
+        // seed the supervisor's shadow state from the freshly built
+        // stores (non-empty only on a recovering resume)
+        let resident: Vec<HashSet<usize>> = shards
+            .iter()
+            .map(|s| s.as_ref().map(|s| s.positions().collect()).unwrap_or_default())
+            .collect();
+        let flows_cache: Vec<ShardFlows> =
+            shards.iter().map(|s| s.as_ref().map(flows_of).unwrap_or_default()).collect();
         let spec_flight = FlightRecorder::new(cfg.flight_recorder_cap);
         Ok(ShardedStore {
             n,
@@ -410,6 +475,13 @@ impl ShardedStore {
             late_arrivals: 0,
             spec_flight,
             last_step: 0,
+            resident,
+            flows_cache,
+            carried: ShardFlows::default(),
+            lost: BTreeSet::new(),
+            rows_lost: 0,
+            shard_rebuilds: 0,
+            rebuilt_at: (0..n).map(|_| None).collect(),
         })
     }
 
@@ -470,6 +542,157 @@ impl ShardedStore {
         self.shards.iter().flatten()
     }
 
+    // --- shard supervision ---
+    //
+    // Per-shard state machine:
+    //
+    //   live ──op panic──► lost ──rebuild (spill recover)──► live
+    //                        │            │
+    //                  (rebuild fails)    └─► rows without a spilled
+    //                        ▼                copy join the declared-
+    //                  lost forever           lost set (typed error
+    //                  (every touch errors)   on take, cleared by a
+    //                                         fresh stash)
+    //
+    // An injected panic fires at `exec` entry, before the op touches
+    // the store, so a lost store's shadow state (resident set + flow
+    // counters, refreshed at every reinstall) is exact at the moment
+    // of loss. The rebuild re-attaches the spill manifest (generation
+    // bump, so the dead life's records verify as recoverable), adopts
+    // every surviving record through the same `TieredStore::recover`
+    // path a process restart uses, and diffs the shadow resident set
+    // against the recovered rows to produce the loss set.
+
+    /// Cache shard `idx`'s flow counters (cheap: three u64 reads).
+    fn flows_refresh(&mut self, idx: usize) {
+        if let Some(s) = self.shards[idx].as_ref() {
+            self.flows_cache[idx] = flows_of(s);
+        }
+    }
+
+    /// Re-derive shard `idx`'s shadow resident set from the store
+    /// itself — used on error paths where an op may have partially
+    /// applied before failing. The store is home there, so it is
+    /// authoritative; no-op while the shard is lost.
+    fn shadow_resync(&mut self, idx: usize) {
+        if let Some(s) = self.shards[idx].as_ref() {
+            self.resident[idx] = s.positions().collect();
+        }
+        self.flows_refresh(idx);
+    }
+
+    /// Fold a successful op's membership effects into shard `idx`'s
+    /// shadow resident set. `stash_pos` carries the positions each
+    /// `ShardOp::Stash` shipped (captured before dispatch, since the
+    /// op itself is consumed by the worker).
+    fn shadow_apply(
+        &mut self,
+        idx: usize,
+        out: &ShardOut,
+        stash_pos: &mut HashMap<usize, Vec<usize>>,
+    ) {
+        match out {
+            ShardOut::Unit => {
+                // Stash (inserts) or OnStep (tier moves only — absent
+                // from the map, so the loop body never runs for it)
+                if let Some(ps) = stash_pos.remove(&idx) {
+                    for pos in ps {
+                        self.lost.remove(&pos);
+                        self.resident[idx].insert(pos);
+                    }
+                }
+            }
+            ShardOut::Rows(rows) => {
+                for (pos, payload) in rows {
+                    if payload.is_some() {
+                        self.resident[idx].remove(pos);
+                    }
+                }
+            }
+            ShardOut::Drained(_) => self.resident[idx].clear(),
+            // staging and speculative reads move rows between tiers
+            // without changing membership
+            ShardOut::Staged(_) | ShardOut::Spec { .. } => {}
+        }
+        self.flows_refresh(idx);
+    }
+
+    /// Respawn a shard lost to an op panic. With persistent spill the
+    /// shard's record file is re-opened under a bumped manifest
+    /// generation and every verifying record is adopted back via
+    /// [`TieredStore::recover`]; rows that lived only in the dead
+    /// store's hot/cold tiers are declared lost. Ephemeral-spill and
+    /// memory-only stores recover nothing — every resident row is
+    /// declared lost — but the shard still comes back empty and
+    /// usable. Returns `Err` (shard stays lost) only if the rebuild's
+    /// own I/O fails.
+    fn rebuild_shard(&mut self, idx: usize, ctx: &str) -> Result<()> {
+        use crate::offload::spill::{SpillManifest, SpillTier};
+        // landed copies cached rows of a store that no longer exists
+        let stale: Vec<usize> =
+            self.landed.keys().copied().filter(|&p| self.shard_of(p) == idx).collect();
+        for pos in stale {
+            self.landed.remove(&pos);
+            self.spec_gen.remove(&pos);
+            self.spec_cancelled += 1;
+            self.spec_flight.record(self.last_step, pos, None, None, Cause::SpecCancel, 0);
+        }
+        let scfg = self.cfg.partitioned(self.n, idx);
+        let store = match (self.cfg.spill_persist, self.cfg.spill_dir.as_deref()) {
+            (true, Some(dir)) => {
+                // the re-attach bumps the generation, so records
+                // written by the lost life verify as recoverable
+                // instead of being fenced as a concurrent writer's
+                let m = SpillManifest::attach(dir, self.row_floats, self.n, self.partition)?;
+                let spill = SpillTier::open_persistent(dir, self.row_floats, idx, m.generation)?;
+                let mut st = TieredStore::with_spill(self.row_floats, scfg, spill);
+                st.recover(self.last_step)?;
+                st
+            }
+            _ => TieredStore::new(self.row_floats, scfg),
+        };
+        let was = std::mem::take(&mut self.resident[idx]);
+        let recovered: HashSet<usize> = store.positions().collect();
+        let lost_now: Vec<usize> = {
+            let mut v: Vec<usize> = was.difference(&recovered).copied().collect();
+            v.sort_unstable();
+            v
+        };
+        self.rows_lost += lost_now.len() as u64;
+        self.lost.extend(lost_now.iter().copied());
+        // fold the dead life's flows into the carried totals; its
+        // recovered rows are re-counted as stashes of the new life
+        // (recover() counts them), so subtract them here to keep
+        // `stashed == restored + dropped + lost + resident` exact
+        let dead = self.flows_cache[idx];
+        self.carried.stashed += dead.stashed.saturating_sub(store.total_stashed);
+        self.carried.restored += dead.restored;
+        self.carried.dropped += dead.dropped;
+        self.resident[idx] = recovered;
+        self.shards[idx] = Some(store);
+        self.flows_refresh(idx);
+        self.shard_rebuilds += 1;
+        self.rebuilt_at[idx] = Some(self.last_step);
+        log::warn!(
+            "shard {idx} rebuilt after {ctx}: {} row(s) recovered from spill, {} declared lost",
+            self.resident[idx].len(),
+            lost_now.len()
+        );
+        Ok(())
+    }
+
+    /// Rebuild every shard in `lost`, logging (not propagating) a
+    /// rebuild failure — the burst's own error already describes the
+    /// panic, and a shard whose rebuild failed keeps reporting on
+    /// every touch.
+    fn rebuild_lost(&mut self, lost: Vec<usize>, ctx: &str) {
+        for idx in lost {
+            if let Err(e) = self.rebuild_shard(idx, ctx) {
+                log::error!("shard {idx} rebuild failed; shard stays lost: {e}");
+            }
+        }
+    }
+
     /// Execute one op per engaged shard — inline when unsharded or
     /// only one shard has work, otherwise fanned out to the shared
     /// worker pool and joined before returning. The first shard error
@@ -484,18 +707,58 @@ impl ShardedStore {
         for i in 0..ops.len() {
             self.ensure_home(ops[i].0)?;
         }
+        // positions each Stash op will insert, captured facade-side so
+        // the shadow resident set can be updated after the op (which
+        // the worker consumes) succeeds
+        let mut stash_pos: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (idx, op) in &ops {
+            if let ShardOp::Stash { items, .. } = op {
+                stash_pos.insert(*idx, items.iter().map(|it| it.0).collect());
+            }
+        }
         if self.n == 1 || ops.len() == 1 {
             let mut outs = Vec::with_capacity(ops.len());
+            let mut first_err = None;
+            let mut lost: Vec<usize> = Vec::new();
             for (idx, op) in ops {
-                let out = exec(self.shard_mut(idx)?, op)?;
-                outs.push((idx, out));
+                // supervise the inline path exactly like a pool
+                // worker: a panicking op loses the shard, which is
+                // then rebuilt from its spill file below
+                let res = {
+                    let store = self.shard_mut(idx)?;
+                    catch_unwind(AssertUnwindSafe(|| exec(store, op)))
+                };
+                match res {
+                    Ok(Ok(o)) => {
+                        self.shadow_apply(idx, &o, &mut stash_pos);
+                        outs.push((idx, o));
+                    }
+                    Ok(Err(e)) => {
+                        // the op may have partially applied; the store
+                        // is home, so re-derive its shadow from it
+                        self.shadow_resync(idx);
+                        first_err = first_err.or(Some(e));
+                    }
+                    Err(_) => {
+                        // the store's invariants can no longer be
+                        // trusted; drop it and rebuild from spill
+                        self.shards[idx] = None;
+                        lost.push(idx);
+                        first_err = first_err
+                            .or(Some(Error::Offload(format!("shard {idx} op panicked"))));
+                    }
+                }
             }
-            return Ok(outs);
+            self.rebuild_lost(lost, "an inline op panic");
+            return match first_err {
+                Some(e) => Err(e),
+                None => Ok(outs),
+            };
         }
-        let jobs = match worker_pool().jobs.lock() {
-            Ok(guard) => guard.clone(),
-            Err(_) => return Err(Error::Offload("shard worker pool mutex poisoned".into())),
-        };
+        // a poisoned pool mutex only means some thread panicked while
+        // *cloning a Sender* — the channel itself is untouched, so
+        // recover the guard instead of failing every future burst
+        let jobs = worker_pool().jobs.lock().unwrap_or_else(|p| p.into_inner()).clone();
         let (reply_tx, reply_rx) = channel::<Done>();
         let mut in_flight = 0usize;
         for (idx, op) in ops {
@@ -514,20 +777,32 @@ impl ShardedStore {
         drop(reply_tx);
         let mut outs = Vec::with_capacity(in_flight);
         let mut first_err = None;
+        let mut lost: Vec<usize> = Vec::new();
         for _ in 0..in_flight {
             match reply_rx.recv() {
                 Ok(Done { shard, store, out }) => {
-                    // a panicked op hands back no store: the shard slot
-                    // stays None and reports on every subsequent touch
+                    // a panicked op hands back no store: the shard is
+                    // marked lost here and rebuilt after the join
+                    let panicked = store.is_none();
                     self.shards[shard] = store;
+                    if panicked {
+                        lost.push(shard);
+                    }
                     match out {
-                        Ok(o) => outs.push((shard, o)),
-                        Err(e) => first_err = first_err.or(Some(e)),
+                        Ok(o) => {
+                            self.shadow_apply(shard, &o, &mut stash_pos);
+                            outs.push((shard, o));
+                        }
+                        Err(e) => {
+                            self.shadow_resync(shard);
+                            first_err = first_err.or(Some(e));
+                        }
                     }
                 }
                 Err(_) => return Err(Error::Offload("shard worker died mid-burst".into())),
             }
         }
+        self.rebuild_lost(lost, "a mid-burst worker panic");
         match first_err {
             Some(e) => Err(e),
             None => Ok(outs),
@@ -573,7 +848,40 @@ impl ShardedStore {
     fn ensure_home(&mut self, idx: usize) -> Result<()> {
         let Some(p) = self.pending[idx].take() else { return Ok(()) };
         let t0 = Instant::now();
-        match p.reply.recv() {
+        let timeout_ms = self.cfg.restore_wait_timeout_ms;
+        let recvd = if timeout_ms == 0 {
+            p.reply.recv().map_err(|_| ())
+        } else {
+            // bounded wait: a take that beats its speculative read by
+            // more than the budget fails typed instead of blocking
+            // forever on a dead or delayed shard reply
+            match p.reply.recv_timeout(Duration::from_millis(timeout_ms)) {
+                Ok(done) => Ok(done),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    let waited = t0.elapsed().as_micros() as u64;
+                    self.wait_us_acc += waited;
+                    self.step_wait_us += waited;
+                    for &(pos, _, eta) in &p.items {
+                        self.spec_flight.record(
+                            self.last_step,
+                            pos,
+                            None,
+                            None,
+                            Cause::RestoreTimeout,
+                            eta,
+                        );
+                    }
+                    // the job may still land: keep it pending so a
+                    // later settle (or Drop) can reclaim the store
+                    self.pending[idx] = Some(p);
+                    return Err(Error::Offload(format!(
+                        "shard {idx} restore wait exceeded {timeout_ms} ms"
+                    )));
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(()),
+            }
+        };
+        match recvd {
             Ok(done) => {
                 let waited = t0.elapsed().as_micros() as u64;
                 self.wait_us_acc += waited;
@@ -581,7 +889,7 @@ impl ShardedStore {
                 self.land(idx, p, done);
                 Ok(())
             }
-            Err(_) => {
+            Err(()) => {
                 for &(pos, _, _) in &p.items {
                     self.inflight.remove(&pos);
                     self.spec_gen.remove(&pos);
@@ -597,7 +905,8 @@ impl ShardedStore {
     /// swallowed — the speculative copy is a pure cache, so the
     /// eventual real take surfaces any real tier failure.
     fn land(&mut self, idx: usize, p: PendingSpec, done: Done) {
-        self.shards[idx] = done.store; // None on panic: shard lost
+        let panicked = done.store.is_none();
+        self.shards[idx] = done.store; // None on panic: rebuilt below
         for &(pos, _, _) in &p.items {
             self.inflight.remove(&pos);
         }
@@ -648,6 +957,13 @@ impl ShardedStore {
                 self.spec_cancelled += p.items.len() as u64;
             }
         }
+        if panicked {
+            self.rebuild_lost(vec![idx], "a speculative worker panic");
+        } else {
+            // spec reads never change membership, but they do promote
+            // tiers; keep the flow cache fresh for the next loss
+            self.flows_refresh(idx);
+        }
     }
 
     /// Generation fence, called before any mutation of `pos` (stash /
@@ -682,10 +998,8 @@ impl ShardedStore {
     /// store travels with the job (same checkout discipline as
     /// `fan_out`); until it lands, `ensure_home` is the only way back.
     fn issue(&mut self, idx: usize, items: Vec<(usize, u64, u64)>, now: u64) -> Result<()> {
-        let jobs = match worker_pool().jobs.lock() {
-            Ok(guard) => guard.clone(),
-            Err(_) => return Err(Error::Offload("shard worker pool mutex poisoned".into())),
-        };
+        // see fan_out: a poisoned guard still wraps a healthy Sender
+        let jobs = worker_pool().jobs.lock().unwrap_or_else(|p| p.into_inner()).clone();
         let store = self.shards[idx]
             .take()
             .ok_or_else(|| Error::Offload(format!("shard {idx} lost to a worker failure")))?;
@@ -828,11 +1142,26 @@ impl ShardedStore {
         let idx = self.shard_of(pos);
         self.ensure_home(idx)?;
         self.fence(pos);
-        self.shard_mut(idx)?.stash(pos, row, step, thaw_eta)
+        match self.shard_mut(idx)?.stash(pos, row, step, thaw_eta) {
+            Ok(()) => {
+                // a fresh stash supersedes any declared loss of pos
+                self.lost.remove(&pos);
+                self.resident[idx].insert(pos);
+                self.flows_refresh(idx);
+                Ok(())
+            }
+            Err(e) => {
+                self.shadow_resync(idx);
+                Err(e)
+            }
+        }
     }
 
     pub fn take(&mut self, pos: usize) -> Result<Option<Vec<f32>>> {
         let idx = self.shard_of(pos);
+        if self.lost.contains(&pos) {
+            return Err(Error::RowsLost(vec![pos]));
+        }
         if self.inflight.contains_key(&pos) {
             self.late_arrivals += 1;
         }
@@ -843,16 +1172,45 @@ impl ShardedStore {
             self.shard_mut(idx)?.confirm_restore(pos)?;
             self.spec_gen.remove(&pos);
             self.spec_consumed += 1;
+            self.resident[idx].remove(&pos);
+            self.flows_refresh(idx);
             return Ok(Some(l.row));
         }
-        self.shard_mut(idx)?.take(pos)
+        match self.shard_mut(idx)?.take(pos) {
+            Ok(payload) => {
+                if payload.is_some() {
+                    self.resident[idx].remove(&pos);
+                }
+                self.flows_refresh(idx);
+                Ok(payload)
+            }
+            Err(e) => {
+                self.shadow_resync(idx);
+                Err(e)
+            }
+        }
     }
 
     pub fn drop_row(&mut self, pos: usize) -> Result<()> {
+        // dropping a declared-lost row is trivially complete: the data
+        // is already gone and already accounted under `rows_lost`
+        if self.lost.remove(&pos) {
+            return Ok(());
+        }
         let idx = self.shard_of(pos);
         self.ensure_home(idx)?;
         self.fence(pos);
-        self.shard_mut(idx)?.drop_row(pos)
+        match self.shard_mut(idx)?.drop_row(pos) {
+            Ok(()) => {
+                self.resident[idx].remove(&pos);
+                self.flows_refresh(idx);
+                Ok(())
+            }
+            Err(e) => {
+                self.shadow_resync(idx);
+                Err(e)
+            }
+        }
     }
 
     // --- batched API (the parallel data path) ---
@@ -885,6 +1243,15 @@ impl ShardedStore {
         if positions.is_empty() {
             return Ok(Vec::new());
         }
+        // declared-lost positions fail the batch typed up front — a
+        // silent None would decode garbage where real data once was
+        if !self.lost.is_empty() {
+            let hit: Vec<usize> =
+                positions.iter().copied().filter(|p| self.lost.contains(p)).collect();
+            if !hit.is_empty() {
+                return Err(Error::RowsLost(hit));
+            }
+        }
         // pipeline consume path: count takes that beat their
         // speculative read (before settling hides the evidence), land
         // the owning shards, then serve whatever the landing buffer
@@ -903,6 +1270,8 @@ impl ShardedStore {
                     self.shard_mut(idx)?.confirm_restore(pos)?;
                     self.spec_gen.remove(&pos);
                     self.spec_consumed += 1;
+                    self.resident[idx].remove(&pos);
+                    self.flows_refresh(idx);
                     served.insert(pos, l.row);
                 }
             }
@@ -914,10 +1283,32 @@ impl ShardedStore {
             // unsharded fast path: no run split, no reassembly map
             if !rest.is_empty() {
                 self.restore_parallelism.record(1);
-                let store = self.shard_mut(0)?;
-                for &pos in &rest {
-                    by_pos.insert(pos, store.take(pos)?);
+                let mut err = None;
+                {
+                    let store = self.shard_mut(0)?;
+                    for &pos in &rest {
+                        match store.take(pos) {
+                            Ok(payload) => {
+                                by_pos.insert(pos, payload);
+                            }
+                            Err(e) => {
+                                err = Some(e);
+                                break;
+                            }
+                        }
+                    }
                 }
+                if let Some(e) = err {
+                    // takes before the failure still consumed rows
+                    self.shadow_resync(0);
+                    return Err(e);
+                }
+                for (pos, payload) in &by_pos {
+                    if payload.is_some() {
+                        self.resident[0].remove(pos);
+                    }
+                }
+                self.flows_refresh(0);
             }
         } else if !rest.is_empty() {
             let runs = coalesce_runs(&rest);
@@ -1016,6 +1407,9 @@ impl ShardedStore {
         // take return raw payload where a synchronous store would
         // already serve the quantized form)
         self.settle()?;
+        // keep the facade step clock moving even without the pipeline:
+        // it stamps flight events and ages the post-rebuild window
+        self.last_step = self.last_step.max(now);
         let mut ops: Vec<(usize, ShardOp)> = Vec::new();
         for i in 0..self.n {
             let pending = self.shards[i]
@@ -1083,15 +1477,50 @@ impl ShardedStore {
     }
 
     pub fn total_stashed(&self) -> u64 {
-        self.live_shards().map(|s| s.total_stashed).sum()
+        self.carried.stashed + self.live_shards().map(|s| s.total_stashed).sum::<u64>()
     }
 
     pub fn total_restored(&self) -> u64 {
-        self.live_shards().map(|s| s.total_restored).sum()
+        self.carried.restored + self.live_shards().map(|s| s.total_restored).sum::<u64>()
     }
 
     pub fn total_dropped(&self) -> u64 {
-        self.live_shards().map(|s| s.total_dropped).sum()
+        self.carried.dropped + self.live_shards().map(|s| s.total_dropped).sum::<u64>()
+    }
+
+    /// Rows ever declared lost by shard rebuilds — the fourth term of
+    /// the conservation identity
+    /// `stashed == restored + dropped + lost + resident`.
+    pub fn rows_lost_total(&self) -> u64 {
+        self.rows_lost
+    }
+
+    /// Shard rebuilds completed by the supervisor.
+    pub fn shard_rebuilds(&self) -> u64 {
+        self.shard_rebuilds
+    }
+
+    /// Positions currently declared lost (sorted ascending). A take of
+    /// any of these fails with [`Error::RowsLost`]; a fresh stash or a
+    /// drop clears the entry.
+    pub fn lost_rows(&self) -> Vec<usize> {
+        self.lost.iter().copied().collect()
+    }
+
+    /// Shards currently lost, or rebuilt within the last
+    /// `cold_after_steps` steps — capacity the admission controller
+    /// should temporarily discount while the rebuilt shard re-warms.
+    pub fn degraded_shards(&self) -> usize {
+        let window = self.cfg.cold_after_steps.max(1);
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| {
+                s.is_none()
+                    || self.rebuilt_at[*i]
+                        .is_some_and(|t| self.last_step < t.saturating_add(window))
+            })
+            .count()
     }
 
     pub fn staged_hits(&self) -> u64 {
@@ -1160,6 +1589,8 @@ impl ShardedStore {
         b.counter_add("asrkf_spec_cancelled_total", &[], self.spec_cancelled);
         b.counter_add("asrkf_spec_consumed_total", &[], self.spec_consumed);
         b.counter_add("asrkf_late_arrivals_total", &[], self.late_arrivals);
+        b.counter_add("asrkf_shard_rebuilds_total", &[], self.shard_rebuilds);
+        b.counter_add("asrkf_rows_lost_total", &[], self.rows_lost);
         b.time_merge("asrkf_restore_overlap_us", &[], &self.overlap_hist);
         b.time_merge("asrkf_restore_wait_us", &[], &self.wait_hist);
         b.count_merge("asrkf_spec_inflight_depth", &[], &self.inflight_depth);
@@ -1531,6 +1962,151 @@ mod tests {
         let got = s.take_batch(&[0, 1, 2, 3]).unwrap();
         assert!(got.iter().all(Option::is_some));
         assert_eq!(s.take_wait_us(), 0);
+    }
+
+    #[test]
+    fn restore_wait_timeout_fails_typed_then_recovers() {
+        let mut c = pcfg(1, ShardPartition::Hash);
+        c.pipeline_test_delay_us = 100_000; // 100 ms in-worker per row
+        c.restore_wait_timeout_ms = 5;
+        let mut s = ShardedStore::new(RF, c).unwrap();
+        s.stash(1, row(1.0), 0, 4).unwrap();
+        s.pipeline_advance(0).unwrap();
+        assert!(s.spec_busy(1), "the read is in flight behind the injected delay");
+        let err = s.take(1).unwrap_err();
+        assert!(format!("{err}").contains("restore wait exceeded"), "{err}");
+        assert!(
+            s.flight_events().iter().any(|(_, ev)| ev.cause == Cause::RestoreTimeout),
+            "the bounded wait must leave a restore_timeout flight event"
+        );
+        assert!(s.take_wait_us() > 0, "the timed-out wait is still charged");
+        // the straggler lands once the delay elapses; nothing is lost
+        std::thread::sleep(Duration::from_millis(150));
+        s.settle().unwrap();
+        let got = s.take(1).unwrap();
+        assert_eq!(got.unwrap(), row(1.0));
+        assert_eq!(s.total_stashed(), s.total_restored() + s.total_dropped());
+    }
+
+    /// Persistent-spill config with a zero cold budget: far-eta rows
+    /// spill immediately (recoverable), near-eta rows stay hot (lost
+    /// on a shard panic) — a deterministic mix for rebuild tests.
+    fn spill_cfg(n: usize, dir: &crate::util::TempDir, persist: bool) -> OffloadConfig {
+        let mut c = cfg(n, ShardPartition::Hash);
+        c.spill_dir = Some(dir.path_str());
+        c.spill_persist = persist;
+        c.cold_budget_bytes = 0;
+        c
+    }
+
+    #[test]
+    fn inline_panic_rebuilds_shard_from_spill_and_declares_hot_rows_lost() {
+        use crate::offload::fault::arm_worker_kill;
+        let dir = crate::util::TempDir::new("sharded-rebuild-inline").unwrap();
+        let mut s = ShardedStore::new(RF, spill_cfg(2, &dir, true)).unwrap();
+        // shard 0 (even positions): pos 0 hot, pos 2 and 4 spilled
+        s.stash(0, row(0.0), 0, 2).unwrap();
+        s.stash(2, row(2.0), 0, 100).unwrap();
+        s.stash(4, row(4.0), 0, 100).unwrap();
+        // shard 1: one hot sibling, untouched by the failure
+        s.stash(3, row(3.0), 0, 2).unwrap();
+        assert_eq!(s.occupancy().spill_rows, 2);
+        arm_worker_kill(dir.path());
+        // single-shard burst -> inline exec path -> supervised panic
+        let err = s.take_batch(&[2]).unwrap_err();
+        assert!(format!("{err}").contains("panicked"), "{err}");
+        assert_eq!(s.shard_rebuilds(), 1);
+        assert_eq!(s.rows_lost_total(), 1, "only the hot row had no spilled copy");
+        assert_eq!(s.lost_rows(), vec![0]);
+        assert_eq!(s.degraded_shards(), 1, "a fresh rebuild discounts capacity");
+        // the panicked op mutated nothing: both spilled rows survive
+        // and restore through the rebuilt shard
+        assert!(s.take(2).unwrap().is_some());
+        assert!(s.take(4).unwrap().is_some());
+        // a declared-lost take is a typed error, never a silent None
+        let lost = s.take(0).unwrap_err();
+        assert!(matches!(lost, Error::RowsLost(ref p) if p == &vec![0]), "{lost}");
+        // the sibling shard never noticed
+        assert_eq!(s.take(3).unwrap().unwrap(), row(3.0));
+        // conservation modulo the declared-lost set
+        assert_eq!(
+            s.total_stashed(),
+            s.total_restored() + s.total_dropped() + s.rows_lost_total() + s.len() as u64
+        );
+        // a fresh stash supersedes the loss and the store keeps working
+        s.stash(0, row(9.0), 10, 12).unwrap();
+        assert!(s.lost_rows().is_empty());
+        assert_eq!(s.take(0).unwrap().unwrap(), row(9.0));
+        // the step clock ages the rebuilt shard out of the window
+        s.on_step(20).unwrap();
+        assert_eq!(s.degraded_shards(), 0);
+        assert_eq!(
+            s.total_stashed(),
+            s.total_restored() + s.total_dropped() + s.rows_lost_total() + s.len() as u64
+        );
+    }
+
+    #[test]
+    fn pool_panic_mid_burst_rebuilds_and_conserves() {
+        use crate::offload::fault::arm_worker_kill;
+        let dir = crate::util::TempDir::new("sharded-rebuild-pool").unwrap();
+        let mut s = ShardedStore::new(RF, spill_cfg(2, &dir, true)).unwrap();
+        for p in 0..4 {
+            s.stash(p, row(p as f32), 0, 100).unwrap(); // all spilled
+        }
+        arm_worker_kill(dir.path());
+        // both shards engaged -> pool path; exactly one worker takes
+        // the one-shot kill (whichever dequeues first)
+        let err = s.take_batch(&[0, 1, 2, 3]).unwrap_err();
+        assert!(format!("{err}").contains("panicked"), "{err}");
+        assert_eq!(s.shard_rebuilds(), 1);
+        assert_eq!(s.rows_lost_total(), 0, "every row had a spilled copy");
+        // the surviving shard's slice was consumed by the failed burst
+        // (and discarded with the error); the panicked shard's slice
+        // recovered from spill — two rows remain either way
+        assert_eq!(s.len(), 2);
+        let mut takeable = 0;
+        for p in 0..4 {
+            if s.take(p).unwrap().is_some() {
+                takeable += 1;
+            }
+        }
+        assert_eq!(takeable, 2);
+        assert_eq!(
+            s.total_stashed(),
+            s.total_restored() + s.total_dropped() + s.rows_lost_total() + s.len() as u64
+        );
+        let sum = s.summary();
+        assert_eq!(sum.shard_rebuilds, 1);
+        assert_eq!(sum.rows_lost, 0);
+    }
+
+    #[test]
+    fn panic_without_persistent_spill_loses_rows_but_store_stays_usable() {
+        use crate::offload::fault::arm_worker_kill;
+        let dir = crate::util::TempDir::new("sharded-rebuild-ephemeral").unwrap();
+        // ephemeral spill: records die with the store, so a rebuild
+        // recovers nothing — every resident row is declared lost
+        let mut s = ShardedStore::new(RF, spill_cfg(2, &dir, false)).unwrap();
+        s.stash(0, row(0.0), 0, 100).unwrap();
+        s.stash(2, row(2.0), 0, 100).unwrap();
+        arm_worker_kill(dir.path());
+        let err = s.take_batch(&[0]).unwrap_err();
+        assert!(format!("{err}").contains("panicked"), "{err}");
+        assert_eq!(s.shard_rebuilds(), 1);
+        assert_eq!(s.rows_lost_total(), 2);
+        assert_eq!(s.lost_rows(), vec![0, 2]);
+        assert!(matches!(s.take_batch(&[0, 2]), Err(Error::RowsLost(ref p)) if p == &vec![0, 2]));
+        // dropping a lost row is trivially complete (already accounted)
+        s.drop_row(2).unwrap();
+        assert_eq!(s.lost_rows(), vec![0]);
+        // the shard itself came back empty and usable
+        s.stash(0, row(9.0), 1, 3).unwrap();
+        assert_eq!(s.take(0).unwrap().unwrap(), row(9.0));
+        assert_eq!(
+            s.total_stashed(),
+            s.total_restored() + s.total_dropped() + s.rows_lost_total() + s.len() as u64
+        );
     }
 
     #[test]

@@ -40,6 +40,7 @@ use std::time::Instant;
 use crate::config::ShardPartition;
 use crate::error::{Error, Result};
 use crate::metrics::{Histogram, TierKind, TierOccupancy};
+use crate::offload::fault::{FaultInjector, FaultSite, RetryOp, RetryPolicy};
 use crate::offload::quant::{QuantRow, ROW_HEADER_BYTES};
 use crate::offload::tier::{RowPayload, Tier};
 use crate::util::json::{parse, write_json, Json};
@@ -238,6 +239,9 @@ pub struct SpillFile {
     /// only in-module tests set these)
     fault_next_read: bool,
     fault_next_free: bool,
+    /// seeded probabilistic fault injection (`offload::fault`) at the
+    /// read / write / free / torn-write seams; inert by default
+    fault: FaultInjector,
 }
 
 impl std::fmt::Debug for SpillFile {
@@ -267,6 +271,7 @@ impl SpillFile {
             recovery_errors: 0,
             fault_next_read: false,
             fault_next_free: false,
+            fault: FaultInjector::disabled(),
         }
     }
 
@@ -454,6 +459,7 @@ impl SpillFile {
     }
 
     fn write_record(&mut self, slot: u32, pos: usize, qr: &QuantRow) -> Result<()> {
+        self.fault.io_error(FaultSite::SpillWrite)?;
         let mut rec = Vec::with_capacity(self.record_bytes);
         rec.extend_from_slice(&REC_MAGIC_LIVE.to_le_bytes());
         rec.extend_from_slice(&self.generation.to_le_bytes());
@@ -466,6 +472,16 @@ impl SpillFile {
         rec[20..28].copy_from_slice(&sum.to_le_bytes());
         self.file
             .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
+        if self.fault.fire(FaultSite::TornWrite) {
+            // torn write: half the record lands on disk, then the op
+            // errors. The caller's error path tombstones the slot; if
+            // even that is lost (a crash), the open-time scan rejects
+            // the torn bytes by checksum — never serves them.
+            self.file.write_all(&rec[..self.record_bytes / 2])?;
+            return Err(Error::Offload(format!(
+                "injected fault: torn write of pos {pos} (slot {slot})"
+            )));
+        }
         self.file.write_all(&rec)?;
         Ok(())
     }
@@ -537,6 +553,7 @@ impl SpillFile {
             self.fault_next_read = false;
             return Err(Error::Offload(format!("injected read fault for spill slot {slot}")));
         }
+        self.fault.io_error(FaultSite::SpillRead)?;
         self.file
             .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
         let mut rec = vec![0u8; self.record_bytes];
@@ -565,6 +582,7 @@ impl SpillFile {
             self.fault_next_free = false;
             return Err(Error::Offload(format!("injected free fault for spill slot {slot}")));
         }
+        self.fault.io_error(FaultSite::SpillFree)?;
         if self.persist {
             self.file
                 .seek(SeekFrom::Start(slot as u64 * self.record_bytes as u64))?;
@@ -637,6 +655,13 @@ pub struct SpillTier {
     pub read_us: Histogram,
     /// record write latency (demotion path)
     pub write_us: Histogram,
+    /// seeded fault injection, propagated into the backing file;
+    /// inert unless armed (`SpillTier::arm`)
+    fault: FaultInjector,
+    /// retry wrapper around the file ops. `RetryPolicy::none()` by
+    /// default, so direct tier users keep the fail-fast behavior;
+    /// `TieredStore::with_spill` arms the configured policy.
+    retry: RetryPolicy,
 }
 
 impl SpillTier {
@@ -650,7 +675,25 @@ impl SpillTier {
             slots: HashMap::new(),
             read_us: Histogram::default(),
             write_us: Histogram::default(),
+            fault: FaultInjector::disabled(),
+            retry: RetryPolicy::none(),
         }
+    }
+
+    /// Arm fault injection and the retry policy (store construction).
+    /// Propagates the injector into an already-open backing file;
+    /// lazily-created files inherit it at creation.
+    pub fn arm(&mut self, fault: FaultInjector, retry: RetryPolicy) {
+        if let Some(f) = self.file.as_mut() {
+            f.fault = fault.clone();
+        }
+        self.fault = fault;
+        self.retry = retry;
+    }
+
+    /// The armed retry policy (counter access for `publish_flows`).
+    pub fn retry(&self) -> &RetryPolicy {
+        &self.retry
     }
 
     /// Persistent tier for `shard`: opens the deterministic record
@@ -671,6 +714,8 @@ impl SpillTier {
             slots: HashMap::new(),
             read_us: Histogram::default(),
             write_us: Histogram::default(),
+            fault: FaultInjector::disabled(),
+            retry: RetryPolicy::none(),
         })
     }
 
@@ -722,11 +767,17 @@ impl Tier for SpillTier {
             return Err(Error::Offload(format!("spill tier already holds pos {pos}")));
         }
         if self.file.is_none() {
-            self.file = Some(SpillFile::create(&dir, self.row_floats)?);
+            let mut f = SpillFile::create(&dir, self.row_floats)?;
+            f.fault = self.fault.clone();
+            self.file = Some(f);
         }
         let qr = payload.into_quant();
         let t0 = Instant::now();
-        let slot = self.file.as_mut().unwrap().write_row(pos, &qr)?;
+        // retries re-run the whole write: a failed attempt already
+        // returned its slot to the free list (write_row's error path),
+        // so each attempt allocates cleanly
+        let file = self.file.as_mut().unwrap();
+        let slot = self.retry.run(RetryOp::Write, || file.write_row(pos, &qr))?;
         self.write_us.record(t0.elapsed());
         self.slots.insert(pos, slot);
         Ok(())
@@ -741,9 +792,12 @@ impl Tier for SpillTier {
         // file op first: an I/O error must leave the pos -> slot
         // mapping intact so the record stays reachable for a retry
         // (removing it first stranded the slot forever: never freed,
-        // counted by bytes(), unreachable by position)
+        // counted by bytes(), unreachable by position).
+        // take_row is idempotent until its release succeeds (the
+        // record stays live through a failed read or a failed
+        // tombstone), so re-running the whole op is safe.
         let t0 = Instant::now();
-        let qr = file.take_row(slot, pos)?;
+        let qr = self.retry.run(RetryOp::Read, || file.take_row(slot, pos))?;
         self.read_us.record(t0.elapsed());
         self.slots.remove(&pos);
         Ok(Some(RowPayload::Quant(qr)))
@@ -756,7 +810,7 @@ impl Tier for SpillTier {
             .as_mut()
             .ok_or_else(|| Error::Offload(format!("pos {pos} spilled but no file")))?;
         // same ordering as take: only unmap after the slot is freed
-        file.free_slot(slot, pos)?;
+        self.retry.run(RetryOp::Free, || file.free_slot(slot, pos))?;
         self.slots.remove(&pos);
         Ok(true)
     }
@@ -922,6 +976,41 @@ mod tests {
         assert!(t.discard(6).unwrap(), "retry must free the record");
         assert_eq!(t.rows(), 0);
         assert_eq!(t.bytes(), 0);
+    }
+
+    #[test]
+    fn armed_tier_retries_through_injected_faults() {
+        use crate::offload::fault::RetryOutcome;
+        let dir = TempDir::new("spill-fault-retry").unwrap();
+        let cfg = crate::config::OffloadConfig {
+            spill_dir: Some(dir.path_str()),
+            fault_seed: Some(7),
+            fault_io_rate: 0.4,
+            fault_torn_rate: 0.2,
+            fault_panic_rate: 0.0,
+            fault_delay_rate: 0.0,
+            io_retry_attempts: 16,
+            io_retry_backoff_us: 1,
+            io_retry_deadline_ms: 0,
+            ..Default::default()
+        };
+        let mut t = SpillTier::new(cfg.spill_dir.clone(), 4);
+        t.arm(FaultInjector::from_cfg(&cfg), RetryPolicy::from_cfg(&cfg));
+        for pos in 0..32usize {
+            t.stash(pos, RowPayload::Raw(vec![pos as f32; 4])).unwrap();
+        }
+        for pos in 0..32usize {
+            let back = t.take(pos).unwrap().expect("row present").into_raw();
+            assert_eq!(back[0], pos as f32, "payload survives retried I/O");
+        }
+        assert!(t.fault.injected_total() > 0, "rates 0.4/0.2 over 64 ops must inject");
+        let recovered: u64 = RetryOp::ALL
+            .iter()
+            .map(|&op| t.retry().retries(op, RetryOutcome::Recovered))
+            .sum();
+        assert!(recovered > 0, "retries must have absorbed the injected faults");
+        assert_eq!(t.rows(), 0);
+        assert_eq!(t.bytes(), 0, "no slot leaked through the fault/retry churn");
     }
 
     #[test]

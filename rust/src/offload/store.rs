@@ -35,6 +35,7 @@ use crate::metrics::{
     TierOccupancy,
 };
 use crate::offload::cold::ColdTier;
+use crate::offload::fault::{FaultInjector, FaultSite, RetryOp, RetryOutcome, RetryPolicy};
 use crate::offload::hot::HotTier;
 use crate::offload::sched::{SchedClass, ThawScheduler};
 use crate::offload::spill::SpillTier;
@@ -85,6 +86,10 @@ pub struct TieredStore {
     /// last decode step the store observed (stamps flight events whose
     /// trigger carries no step of its own, e.g. budget demotions)
     last_step: u64,
+    /// seeded fault injection (`offload::fault`), shared with the
+    /// spill tier; consulted by the worker pool at op entry. Inert
+    /// unless `cfg.fault_seed` armed it.
+    fault: FaultInjector,
 }
 
 impl std::fmt::Debug for TieredStore {
@@ -121,10 +126,17 @@ impl TieredStore {
     /// already-scanned variant). Call [`TieredStore::recover`] next to
     /// adopt its recovered records, or leave them for the spill tier's
     /// `reclaim_recovered` (done by the fresh-attach path).
-    pub fn with_spill(row_floats: usize, cfg: OffloadConfig, spill: SpillTier) -> Self {
+    pub fn with_spill(row_floats: usize, cfg: OffloadConfig, mut spill: SpillTier) -> Self {
         let hot = HotTier::new(row_floats, cfg.block_rows);
         let cold = ColdTier::new(row_floats);
         let flight_cap = cfg.flight_recorder_cap;
+        // one injector per store: the spill tier shares it (and its
+        // counters), so the whole store replays one coherent fault
+        // trace from the seed. The configured retry policy (default 3
+        // attempts) is armed here — direct `SpillTier` users keep the
+        // fail-fast `RetryPolicy::none()` default.
+        let fault = FaultInjector::from_cfg(&cfg);
+        spill.arm(fault.clone(), RetryPolicy::from_cfg(&cfg));
         TieredStore {
             row_floats,
             cfg,
@@ -149,11 +161,18 @@ impl TieredStore {
             sched_depth: CountHistogram::default(),
             flight: FlightRecorder::new(flight_cap),
             last_step: 0,
+            fault,
         }
     }
 
     pub fn config(&self) -> &OffloadConfig {
         &self.cfg
+    }
+
+    /// The store's fault injector (worker-pool op-entry hook and
+    /// counter access). Inert unless the config armed it.
+    pub fn fault(&self) -> &FaultInjector {
+        &self.fault
     }
 
     /// Adopt a re-sliced tier budget between steps (continuous-batching
@@ -330,7 +349,13 @@ impl TieredStore {
         }
         // the quantized record moves verbatim — no requantization
         let payload = self.cold.take(pos)?.ok_or_else(|| missing(pos, class))?;
-        self.spill.stash(pos, payload)?;
+        if let Err(e) = self.spill.stash(pos, payload.clone()) {
+            // a failed spill write must not lose the row: put the
+            // record back so the demotion is a clean no-op and the
+            // caller can retry under pressure at the next sweep
+            self.cold.stash(pos, payload)?;
+            return Err(e);
+        }
         self.sched.remove(SchedClass::Cold, eta, pos);
         self.sched.insert(SchedClass::Spill, eta, pos);
         self.entries.get_mut(&pos).unwrap().class = SchedClass::Spill;
@@ -733,6 +758,22 @@ impl TieredStore {
         b.time_merge("asrkf_spill_read_us", &[], &self.spill.read_us);
         b.time_merge("asrkf_spill_write_us", &[], &self.spill.write_us);
         b.count_merge("asrkf_sched_depth", &[], &self.sched_depth);
+        for site in FaultSite::ALL {
+            b.counter_add(
+                "asrkf_faults_injected_total",
+                &[("site", site.as_str()), ("shard", sh)],
+                self.fault.injected(site),
+            );
+        }
+        for op in RetryOp::ALL {
+            for outcome in RetryOutcome::ALL {
+                b.counter_add(
+                    "asrkf_io_retries_total",
+                    &[("op", op.as_str()), ("outcome", outcome.as_str()), ("shard", sh)],
+                    self.spill.retry().retries(op, outcome),
+                );
+            }
+        }
     }
 
     /// Publish the store's point-in-time occupancy gauges under the

@@ -1,0 +1,385 @@
+//! Chaos property test: a fault-armed `ShardedStore` driven through
+//! random op traces against a fault-free oracle.
+//!
+//! The contract under injected faults (I/O errors, torn writes, worker
+//! panics, delayed replies) is **containment**, not perfection:
+//!
+//! * surviving payloads are correct — bit-exact against the oracle
+//!   when the trace drew no faults, within the quantization bound of
+//!   the original row always (a rebuild re-stashes recovered rows, so
+//!   a row may legally cross the quantizer one extra time);
+//! * every row is accounted for — the conservation identity holds
+//!   after every op, extended by the declared-lost set:
+//!   `stashed == restored + dropped + rows_lost + resident`;
+//! * losses are declared, never silent — a position disappears only by
+//!   appearing in `lost_rows()` / `Error::RowsLost`, and the loss is
+//!   sticky until a caller acknowledges it (re-stash or drop);
+//! * the store stays usable — after any fault trace, fresh rows stash
+//!   and restore normally.
+//!
+//! A separate case proves the fault layer is inert when disabled: an
+//! armed-but-zero-rate injector must be bit-identical to no injector.
+
+use std::collections::{BTreeSet, HashMap};
+
+use asrkf::config::OffloadConfig;
+use asrkf::error::Error;
+use asrkf::offload::ShardedStore;
+use asrkf::prop_assert;
+use asrkf::util::prop::{prop_check, G};
+use asrkf::util::TempDir;
+
+const RF: usize = 32;
+
+fn random_row(g: &mut G) -> Vec<f32> {
+    g.vec_f32(RF, -4.0, 4.0)
+}
+
+/// Tiny tier budgets so demotion and spill I/O (the fault surface) run
+/// constantly; persistent spill so a panicked shard has something to
+/// rebuild from.
+fn chaos_cfg(g: &mut G, dir: &str, fault_seed: Option<u64>) -> OffloadConfig {
+    OffloadConfig {
+        hot_budget_bytes: g.usize(2, 8) * RF * 4,
+        cold_budget_bytes: g.usize(0, 4) * (RF + 8),
+        cold_after_steps: g.usize(0, 4) as u64,
+        quantize_cold: true,
+        spill_dir: Some(dir.to_owned()),
+        spill_persist: true,
+        block_rows: g.usize(1, 8),
+        shards: g.usize(1, 3),
+        fault_seed,
+        fault_io_rate: 0.08,
+        fault_torn_rate: 0.04,
+        fault_panic_rate: 0.015,
+        fault_delay_rate: 0.05,
+        fault_delay_us: 50,
+        io_retry_attempts: 3,
+        io_retry_backoff_us: 10,
+        io_retry_deadline_ms: 100,
+        ..OffloadConfig::default()
+    }
+}
+
+/// Quantization-bound payload check. `hops` is how many times the row
+/// may have crossed the quantizer (2 after a rebuild re-stash).
+fn within_bound(orig: &[f32], got: &[f32], rel: f32, hops: f32) -> bool {
+    let lo = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let bound = hops * rel * (hi - lo) + 1e-4;
+    orig.iter().zip(got).all(|(a, b)| (a - b).abs() <= bound)
+}
+
+#[test]
+fn prop_chaos_traces_contain_faults_and_conserve_rows() {
+    prop_check(8, |g| {
+        let tmp = TempDir::new("chaos").map_err(|e| format!("tempdir: {e}"))?;
+        let f_dir = tmp.path().join("faulty");
+        let o_dir = tmp.path().join("oracle");
+        let seed = g.usize(0, u32::MAX as usize) as u64;
+        let cfg = chaos_cfg(g, &f_dir.to_string_lossy(), Some(seed));
+        let mut oracle_cfg = cfg.clone();
+        oracle_cfg.spill_dir = Some(o_dir.to_string_lossy().into_owned());
+        oracle_cfg.fault_seed = None;
+        let rel = cfg.cold_quant_rel_error;
+
+        let mut faulty =
+            ShardedStore::new(RF, cfg).map_err(|e| format!("faulty new: {e}"))?;
+        let mut oracle =
+            ShardedStore::new(RF, oracle_cfg).map_err(|e| format!("oracle new: {e}"))?;
+
+        // membership model: `tracked` rows are known resident on both
+        // sides; `uncertain` rows rode an errored burst (consumed or
+        // not — the burst semantics discard mid-burst siblings);
+        // `lost_model` mirrors the store's declared-lost set.
+        let mut tracked: BTreeSet<usize> = BTreeSet::new();
+        let mut uncertain: BTreeSet<usize> = BTreeSet::new();
+        let mut lost_model: BTreeSet<usize> = BTreeSet::new();
+        let mut originals: HashMap<usize, Vec<f32>> = HashMap::new();
+        let mut next_pos = 0usize;
+
+        for step in 0..90u64 {
+            match g.usize(0, 9) {
+                // stash a fresh batch (weighted heaviest)
+                0..=3 => {
+                    let k = g.usize(1, 4);
+                    let mut items = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        let eta = step + g.usize(0, 20) as u64;
+                        let row = random_row(g);
+                        originals.insert(next_pos, row.clone());
+                        items.push((next_pos, row, eta));
+                        next_pos += 1;
+                    }
+                    for (pos, row, eta) in &items {
+                        oracle
+                            .stash(*pos, row.clone(), step, *eta)
+                            .map_err(|e| format!("oracle stash: {e}"))?;
+                    }
+                    let batch: Vec<usize> = items.iter().map(|it| it.0).collect();
+                    match faulty.stash_batch(items, step) {
+                        Ok(()) => tracked.extend(batch),
+                        // partial failure: per-shard slices may or may
+                        // not have landed
+                        Err(_) => uncertain.extend(batch),
+                    }
+                }
+                // restore a burst of tracked rows
+                4..=5 => {
+                    let burst: Vec<usize> =
+                        tracked.iter().copied().filter(|_| g.bool(0.3)).collect();
+                    if burst.is_empty() {
+                        continue;
+                    }
+                    match faulty.take_batch(&burst) {
+                        Ok(got) => {
+                            for (&pos, payload) in burst.iter().zip(&got) {
+                                tracked.remove(&pos);
+                                let p = payload.as_ref().ok_or_else(|| {
+                                    format!("tracked pos {pos} silently missing")
+                                })?;
+                                let want = oracle
+                                    .take(pos)
+                                    .map_err(|e| format!("oracle take: {e}"))?
+                                    .ok_or_else(|| format!("oracle lost pos {pos}"))?;
+                                prop_assert!(
+                                    p == &want
+                                        || within_bound(&originals[&pos], p, rel, 2.0),
+                                    "pos {pos}: surviving payload out of bound"
+                                );
+                            }
+                        }
+                        Err(Error::RowsLost(ps)) => {
+                            // typed loss: every named row was in play
+                            for p in ps {
+                                prop_assert!(
+                                    tracked.remove(&p)
+                                        || uncertain.remove(&p)
+                                        || lost_model.contains(&p),
+                                    "RowsLost named unknown pos {p}"
+                                );
+                                lost_model.insert(p);
+                            }
+                            // siblings were not consumed; still tracked
+                        }
+                        Err(_) => {
+                            // mid-burst failure: earlier takes consumed
+                            // and discarded their rows
+                            for p in burst {
+                                tracked.remove(&p);
+                                uncertain.insert(p);
+                            }
+                        }
+                    }
+                }
+                // drop one tracked row
+                6 => {
+                    if let Some(&pos) = tracked.iter().next() {
+                        match faulty.drop_row(pos) {
+                            Ok(()) => {
+                                tracked.remove(&pos);
+                                oracle.drop_row(pos).map_err(|e| format!("oracle drop: {e}"))?;
+                            }
+                            Err(_) => {
+                                tracked.remove(&pos);
+                                uncertain.insert(pos);
+                            }
+                        }
+                    }
+                }
+                // staging churn (promotion faults are transient; no
+                // membership change either way)
+                7 => {
+                    let _ = faulty.stage_upcoming(step, g.usize(0, 8) as u64, g.usize(0, 8));
+                    let _ = oracle.stage_upcoming(step, g.usize(0, 8) as u64, g.usize(0, 8));
+                }
+                // residency sweep
+                _ => {
+                    let _ = faulty.on_step(step);
+                    oracle.on_step(step).map_err(|e| format!("oracle on_step: {e}"))?;
+                }
+            }
+
+            // losses declared by a mid-op rebuild surface here even
+            // when the op's own error was untyped
+            for p in faulty.lost_rows() {
+                if !lost_model.contains(&p) {
+                    prop_assert!(
+                        tracked.remove(&p) || uncertain.remove(&p),
+                        "store declared unknown pos {p} lost"
+                    );
+                    lost_model.insert(p);
+                }
+            }
+            // conservation, extended by the declared-lost set
+            prop_assert!(
+                faulty.total_stashed()
+                    == faulty.total_restored()
+                        + faulty.total_dropped()
+                        + faulty.rows_lost_total()
+                        + faulty.len() as u64,
+                "conservation violated at step {step}: {} != {} + {} + {} + {}",
+                faulty.total_stashed(),
+                faulty.total_restored(),
+                faulty.total_dropped(),
+                faulty.rows_lost_total(),
+                faulty.len()
+            );
+        }
+
+        // --- final sweep: every in-play row survives or is declared ---
+        let no_faults = faulty.summary().faults_injected == 0;
+        for &pos in tracked.iter().chain(uncertain.iter()) {
+            let was_tracked = tracked.contains(&pos);
+            match faulty.take(pos) {
+                Ok(Some(p)) => {
+                    let want =
+                        oracle.take(pos).map_err(|e| format!("oracle take: {e}"))?;
+                    if no_faults {
+                        prop_assert!(
+                            Some(&p) == want.as_ref(),
+                            "pos {pos}: armed-but-silent injector changed bits"
+                        );
+                    }
+                    prop_assert!(
+                        Some(&p) == want.as_ref()
+                            || within_bound(&originals[&pos], &p, rel, 2.0),
+                        "pos {pos}: surviving payload out of bound at sweep"
+                    );
+                }
+                Ok(None) => {
+                    prop_assert!(
+                        !was_tracked,
+                        "tracked pos {pos} vanished without a declared loss"
+                    );
+                }
+                Err(Error::RowsLost(ps)) => {
+                    prop_assert!(ps.contains(&pos), "RowsLost missed pos {pos}");
+                    lost_model.insert(pos);
+                }
+                // a transient injected read fault at sweep time: the
+                // row is still resident, just unreadable this instant
+                Err(_) => {}
+            }
+        }
+        // --- declared losses are sticky until acknowledged ---
+        if let Some(&pos) = lost_model.iter().next() {
+            if faulty.lost_rows().contains(&pos) {
+                prop_assert!(
+                    matches!(faulty.take(pos), Err(Error::RowsLost(_))),
+                    "lost pos {pos} must stay typed-fatal until acknowledged"
+                );
+                faulty.drop_row(pos).map_err(|e| format!("ack drop: {e}"))?;
+                prop_assert!(
+                    !faulty.lost_rows().contains(&pos),
+                    "drop must acknowledge the loss of pos {pos}"
+                );
+            }
+        }
+        // --- the store stays usable after any fault trace ---
+        let base = next_pos;
+        for i in 0..8usize {
+            let row: Vec<f32> = (0..RF).map(|j| (i * RF + j) as f32 * 0.01).collect();
+            faulty
+                .stash(base + i, row, 1_000, 1_000 + i as u64)
+                .map_err(|e| format!("post-trace stash: {e}"))?;
+        }
+        for i in 0..8usize {
+            let got = faulty
+                .take(base + i)
+                .map_err(|e| format!("post-trace take: {e}"))?
+                .ok_or_else(|| format!("post-trace row {i} missing"))?;
+            let want: Vec<f32> = (0..RF).map(|j| (i * RF + j) as f32 * 0.01).collect();
+            prop_assert!(
+                within_bound(&want, &got, rel, 1.0),
+                "post-trace row {i} corrupted"
+            );
+        }
+        prop_assert!(
+            faulty.total_stashed()
+                == faulty.total_restored()
+                    + faulty.total_dropped()
+                    + faulty.rows_lost_total()
+                    + faulty.len() as u64,
+            "conservation violated after the post-trace probe"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_disabled_fault_layer_is_inert() {
+    // An armed injector whose every rate is zero must be bit-identical
+    // to no injector at all: same payloads, same counters, zero faults
+    // and retries recorded. This is the "provably inert when off"
+    // guarantee the config default relies on.
+    prop_check(6, |g| {
+        let tmp = TempDir::new("chaos-inert").map_err(|e| format!("tempdir: {e}"))?;
+        let a_dir = tmp.path().join("armed");
+        let b_dir = tmp.path().join("bare");
+        let mut armed_cfg = chaos_cfg(g, &a_dir.to_string_lossy(), Some(7));
+        armed_cfg.fault_io_rate = 0.0;
+        armed_cfg.fault_torn_rate = 0.0;
+        armed_cfg.fault_panic_rate = 0.0;
+        armed_cfg.fault_delay_rate = 0.0;
+        let mut bare_cfg = armed_cfg.clone();
+        bare_cfg.spill_dir = Some(b_dir.to_string_lossy().into_owned());
+        bare_cfg.fault_seed = None;
+
+        let mut armed = ShardedStore::new(RF, armed_cfg).map_err(|e| format!("new: {e}"))?;
+        let mut bare = ShardedStore::new(RF, bare_cfg).map_err(|e| format!("new: {e}"))?;
+        let mut resident: Vec<usize> = Vec::new();
+        let mut next_pos = 0usize;
+        for step in 0..80u64 {
+            match g.usize(0, 7) {
+                0..=3 => {
+                    let eta = step + g.usize(0, 20) as u64;
+                    let row = random_row(g);
+                    armed
+                        .stash(next_pos, row.clone(), step, eta)
+                        .map_err(|e| format!("armed stash: {e}"))?;
+                    bare.stash(next_pos, row, step, eta).map_err(|e| format!("bare stash: {e}"))?;
+                    resident.push(next_pos);
+                    next_pos += 1;
+                }
+                4..=5 => {
+                    if !resident.is_empty() {
+                        let pos = resident.swap_remove(g.usize(0, resident.len() - 1));
+                        let a = armed.take(pos).map_err(|e| format!("armed take: {e}"))?;
+                        let b = bare.take(pos).map_err(|e| format!("bare take: {e}"))?;
+                        prop_assert!(a == b, "pos {pos}: zero-rate injector changed bits");
+                    }
+                }
+                6 => {
+                    if !resident.is_empty() {
+                        let pos = resident.swap_remove(g.usize(0, resident.len() - 1));
+                        armed.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                        bare.drop_row(pos).map_err(|e| format!("drop: {e}"))?;
+                    }
+                }
+                _ => {
+                    armed.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                    bare.on_step(step).map_err(|e| format!("on_step: {e}"))?;
+                }
+            }
+        }
+        let sa = armed.summary();
+        let sb = bare.summary();
+        prop_assert!(sa.faults_injected == 0, "zero-rate injector fired");
+        prop_assert!(sa.io_retries == sb.io_retries, "retry counts diverged");
+        prop_assert!(
+            armed.total_stashed() == bare.total_stashed()
+                && armed.total_restored() == bare.total_restored()
+                && armed.total_dropped() == bare.total_dropped()
+                && armed.rows_lost_total() == 0
+                && armed.shard_rebuilds() == 0,
+            "armed-but-silent store diverged from bare store"
+        );
+        let mut a = armed.drain_all().map_err(|e| format!("drain: {e}"))?;
+        let mut b = bare.drain_all().map_err(|e| format!("drain: {e}"))?;
+        a.sort_by_key(|(p, _)| *p);
+        b.sort_by_key(|(p, _)| *p);
+        prop_assert!(a == b, "drained contents diverged");
+        Ok(())
+    });
+}

@@ -226,6 +226,54 @@ fn tiny_hot_budget_turns_into_typed_envelope_rejects() {
 }
 
 #[test]
+fn worker_kill_fails_one_session_while_siblings_survive() {
+    // Degraded-mode serving, end to end: one session's shard worker is
+    // killed mid-flight. The supervised panic must fail *that* session
+    // with a typed error on its ticket, leave the rest of the batch
+    // decoding, and leave the rebuilt slot usable for the next arrival.
+    let tmp = asrkf::util::TempDir::new("coord-kill").unwrap();
+    let mut cfg = EngineConfig::default();
+    cfg.offload.spill_persist = true;
+    cfg.offload.spill_dir = Some(tmp.path_str());
+    let server = ServerConfig { max_batch: 4, ..ServerConfig::default() };
+    let (handle, join) = spawn(cfg, server).expect("run `make artifacts` first");
+
+    // the first submission lands in slot 0 (lowest free slot); its
+    // store's spill dir is <tmp>/slot-0, so arming the kill on that
+    // subdirectory targets exactly this session's shards. The one-shot
+    // fires on the doomed store's first shard op (its first freeze).
+    asrkf::offload::fault::arm_worker_kill(tmp.path().join("slot-0"));
+
+    let prompt = format!(
+        "{} ",
+        asrkf::workload::synthetic::prose(&mut asrkf::util::rng::Pcg64::new(11), 300)
+    );
+    let doomed = handle.submit(params(&prompt, 80, "asrkf", 1)).unwrap();
+    let siblings: Vec<Ticket> = (0..3)
+        .map(|i| handle.submit(params(&prompt, 40, "asrkf", 2 + i)).unwrap())
+        .collect();
+
+    let failed = doomed.wait().unwrap();
+    let msg = failed.error.expect("killed session must resolve to a typed error");
+    assert!(
+        msg.contains("panicked") || msg.contains("lost"),
+        "error must name the supervised failure: {msg}"
+    );
+    for (i, t) in siblings.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert!(r.error.is_none(), "sibling {i} must survive the kill: {:?}", r.error);
+        assert_eq!(r.generated_tokens, 40, "sibling {i}");
+    }
+    // the freed slot 0 (its store rebuilt before the error surfaced)
+    // admits and serves a fresh request
+    let next = handle.submit(params(&prompt, 24, "asrkf", 9)).unwrap().wait().unwrap();
+    assert!(next.error.is_none(), "rebuilt slot must serve again: {:?}", next.error);
+    assert_eq!(next.generated_tokens, 24);
+    drop(handle);
+    join.join().unwrap();
+}
+
+#[test]
 fn equal_weights_reproduce_the_static_partition() {
     // the pre-QoS coordinator gave every slot a static 1/B slice
     // (OffloadConfig::partitioned); equal class weights must reproduce
