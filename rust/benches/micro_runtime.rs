@@ -1,52 +1,117 @@
 //! Micro-benchmarks for the §Perf iteration log: per-component costs of
 //! the decode hot path — literal construction (host->device analog),
 //! PJRT execute, output download — plus the host-only components that
-//! run without trained artifacts: cold-tier quantize/dequantize (the
-//! restore-path cost the prefetch stages hide) and the rust-side
-//! policy bookkeeping (indexed vs retained full-scan implementation).
+//! run without trained artifacts: the codec-ladder encode/decode
+//! kernels per rung (the restore-path cost the prefetch stages hide)
+//! and the rust-side policy bookkeeping (indexed vs retained full-scan
+//! implementation).
 //!
 //! Host-only rows are recorded before the runtime loads, so the
 //! BENCH_SMOKE schema CSV carries real numbers for them even on
-//! runners with no artifact set.
+//! runners with no artifact set. The `encode MB/s` / `decode MB/s`
+//! columns report f32-side throughput of each codec rung ("-" for
+//! non-codec rows); CI smoke greps for them.
 //!
 //! Output: timing lines + artifacts/micro_runtime.csv
 
 use asrkf::config::FreezeConfig;
 use asrkf::kv::{AsrKfPolicy, KvPolicy, ScanAsrKfPolicy};
-use asrkf::offload::{dequantize_into, quantize};
+use asrkf::offload::{
+    decode_ebq_into, dequantize_into, encode_ebq, pack_u4, quantize, unpack_u4_into,
+};
 use asrkf::runtime::{literal, DecodeInputs, Runtime};
-use asrkf::util::bench::{self, Bencher, Table};
+use asrkf::util::bench::{self, Bencher, Stats, Table};
 use asrkf::util::rng::Pcg64;
+
+/// f32-side throughput of a timed kernel pass over `floats` floats.
+fn mb_per_s(floats: usize, st: &Stats) -> String {
+    let secs = st.mean.as_secs_f64();
+    if secs <= 0.0 {
+        return "-".into();
+    }
+    format!("{:.0}", (floats * 4) as f64 / secs / 1e6)
+}
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
-    let mut table =
-        Table::new("Micro: decode hot-path components", &["component", "mean_us", "p50_us"]);
+    let mut table = Table::new(
+        "Micro: decode hot-path components",
+        &["component", "mean_us", "p50_us", "encode MB/s", "decode MB/s"],
+    );
     let mut rng = Pcg64::new(7);
     let b = Bencher::new(bench::smoke_size(3, 1), bench::smoke_size(15, 3));
 
     // --- host-only components (no artifacts needed) ---------------------
 
-    // cold-tier row compression: 1024 floats = one 4 KB KV row
+    // codec ladder rungs over one 4 KB KV row (1024 floats): each row
+    // times the rung's encode kernel (mean/p50 columns) and reports
+    // both directions as throughput
     let row: Vec<f32> = (0..1024).map(|_| rng.f32() * 4.0 - 2.0).collect();
-    let st = b.run("quant: quantize 4KB row", || {
+    let mut dst = vec![0.0f32; row.len()];
+
+    // u8: per-row affine quantization
+    let enc = b.run("codec u8: quantize 4KB row", || {
         std::hint::black_box(quantize(std::hint::black_box(&row)));
     });
-    table.row(&[
-        "quantize_row_4k".into(),
-        st.mean.as_micros().to_string(),
-        st.p50.as_micros().to_string(),
-    ]);
-
     let qr = quantize(&row);
-    let mut dst = vec![0.0f32; row.len()];
-    let st = b.run("quant: dequantize_into 4KB row", || {
+    let dec = b.run("codec u8: dequantize 4KB row", || {
         dequantize_into(std::hint::black_box(&qr), std::hint::black_box(&mut dst));
     });
     table.row(&[
-        "dequantize_row_4k".into(),
-        st.mean.as_micros().to_string(),
-        st.p50.as_micros().to_string(),
+        "codec_u8_row_4k".into(),
+        enc.mean.as_micros().to_string(),
+        enc.p50.as_micros().to_string(),
+        mb_per_s(row.len(), &enc),
+        mb_per_s(row.len(), &dec),
+    ]);
+
+    // u4: per-block affine, packed nibbles
+    let enc = b.run("codec u4: pack 4KB row", || {
+        std::hint::black_box(pack_u4(std::hint::black_box(&row)));
+    });
+    let pr = pack_u4(&row);
+    let dec = b.run("codec u4: unpack 4KB row", || {
+        unpack_u4_into(std::hint::black_box(&pr), std::hint::black_box(&mut dst));
+    });
+    table.row(&[
+        "codec_u4_row_4k".into(),
+        enc.mean.as_micros().to_string(),
+        enc.p50.as_micros().to_string(),
+        mb_per_s(row.len(), &enc),
+        mb_per_s(row.len(), &dec),
+    ]);
+
+    // ebq: error-bounded variable-rate blocks at the default target
+    let enc = b.run("codec ebq: encode 4KB row", || {
+        std::hint::black_box(encode_ebq(std::hint::black_box(&row), 0.02));
+    });
+    let br = encode_ebq(&row, 0.02);
+    let dec = b.run("codec ebq: decode 4KB row", || {
+        decode_ebq_into(std::hint::black_box(&br), std::hint::black_box(&mut dst));
+    });
+    table.row(&[
+        "codec_ebq_row_4k".into(),
+        enc.mean.as_micros().to_string(),
+        enc.p50.as_micros().to_string(),
+        mb_per_s(row.len(), &enc),
+        mb_per_s(row.len(), &dec),
+    ]);
+
+    // raw rung: a pair of memcpys — the bandwidth ceiling the encoded
+    // rungs trade against
+    let enc = b.run("codec raw: copy 4KB row", || {
+        std::hint::black_box(std::hint::black_box(&row).clone());
+    });
+    let dec = b.run("codec raw: copy-back 4KB row", || {
+        dst.copy_from_slice(std::hint::black_box(&row));
+        std::hint::black_box(&mut dst);
+    });
+    table.row(&[
+        "codec_raw_row_4k".into(),
+        enc.mean.as_micros().to_string(),
+        enc.p50.as_micros().to_string(),
+        mb_per_s(row.len(), &enc),
+        mb_per_s(row.len(), &dec),
     ]);
 
     // policy bookkeeping alone (no graph): indexed vs full-scan
@@ -64,6 +129,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "policy_50_steps".into(),
         st.mean.as_micros().to_string(),
         st.p50.as_micros().to_string(),
+        "-".into(),
+        "-".into(),
     ]);
 
     let st = b.run("policy: observe+plan x50 (full scan)", || {
@@ -78,6 +145,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "policy_50_steps_scan".into(),
         st.mean.as_micros().to_string(),
         st.p50.as_micros().to_string(),
+        "-".into(),
+        "-".into(),
     ]);
 
     // --- runtime-backed components --------------------------------------
@@ -112,6 +181,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "kv_literal_build".into(),
         st.mean.as_micros().to_string(),
         st.p50.as_micros().to_string(),
+        "-".into(),
+        "-".into(),
     ]);
 
     let st = b.run("decode step (end to end)", || {
@@ -123,6 +194,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "decode_step".into(),
         st.mean.as_micros().to_string(),
         st.p50.as_micros().to_string(),
+        "-".into(),
+        "-".into(),
     ]);
 
     table.print();

@@ -35,7 +35,7 @@ use asrkf::workload::trace::poisson_trace;
 
 const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
 
-/// Aggregate per-request offload summaries into the eleven CSV
+/// Aggregate per-request offload summaries into the fourteen CSV
 /// columns: per-request peak hot/cold KB (the max high-water mark any
 /// single session reached — summing peaks of sessions that never
 /// coexisted would overstate the footprint), staged-hit %, mean hot /
@@ -43,11 +43,14 @@ const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
 /// pair (rows restored / spans copied — spans << rows is the
 /// coalescing win), the restore-parallelism high-water mark across
 /// sessions, rows re-attached from a persistent spill directory at
-/// resume, and the pipelined-restore pair: total µs the decode path
+/// resume, the pipelined-restore pair: total µs the decode path
 /// blocked on in-flight speculative reads plus the takes that arrived
 /// before their read finished (both 0 with the pipeline off or fully
-/// hidden I/O).
-fn offload_columns(summaries: &[OffloadSummary]) -> [String; 11] {
+/// hidden I/O), and the codec-ladder triple: mean admitted payload
+/// bytes/row per tier ("-" until a tier admits a row — with a
+/// sub-byte ladder armed, cold/spill drop below the u8 baseline of
+/// `8 + row_floats`).
+fn offload_columns(summaries: &[OffloadSummary]) -> [String; 14] {
     let peak_hot: usize =
         summaries.iter().map(|s| s.occupancy.peak_hot_bytes).max().unwrap_or(0);
     let peak_cold: usize =
@@ -73,6 +76,16 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 11] {
     let recovered: u64 = summaries.iter().map(|s| s.recovered_rows).sum();
     let restore_wait: u64 = summaries.iter().map(|s| s.restore_wait_us).sum();
     let late: u64 = summaries.iter().map(|s| s.late_arrivals).sum();
+    // per-session cumulative means, averaged over the sessions whose
+    // tier actually admitted rows ("-" when none did)
+    let bytes_per_row = |f: fn(&OffloadSummary) -> u64| {
+        let vals: Vec<u64> = summaries.iter().map(f).filter(|&v| v > 0).collect();
+        if vals.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{}", vals.iter().sum::<u64>() / vals.len() as u64)
+        }
+    };
     [
         format!("{:.1}", peak_hot as f64 / 1024.0),
         format!("{:.1}", peak_cold as f64 / 1024.0),
@@ -85,6 +98,9 @@ fn offload_columns(summaries: &[OffloadSummary]) -> [String; 11] {
         recovered.to_string(),
         restore_wait.to_string(),
         late.to_string(),
+        bytes_per_row(|s| s.bytes_per_row_hot),
+        bytes_per_row(|s| s.bytes_per_row_cold),
+        bytes_per_row(|s| s.bytes_per_row_spill),
     ]
 }
 
@@ -153,12 +169,22 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
     const ROW_FLOATS: usize = 512; // 2 KB rows
     let waves = bench::smoke_size(24, 4);
     let burst = bench::smoke_size(256, 64);
-    for &n in &SHARD_SWEEP {
-        let _section = bench::section(&format!("store burst n={n}"));
+    // the u8-only sharded sweep, plus one row with the full codec
+    // ladder armed — its far-thaw stashes land on the sub-byte rungs,
+    // so `bytes/row (cold)` must drop below the u8 sweep's value
+    let full_ladder = asrkf::offload::CodecLadder::parse("0:u8,64:u4,512:ebq")?;
+    let variants: Vec<(&str, usize, asrkf::offload::CodecLadder)> = SHARD_SWEEP
+        .iter()
+        .map(|&n| ("store burst (hash)", n, asrkf::offload::CodecLadder::default()))
+        .chain(std::iter::once(("store burst (ladder)", 4, full_ladder)))
+        .collect();
+    for (label, n, ladder) in variants {
+        let _section = bench::section(&format!("store burst n={n} {label}"));
         let cfg = fault_smoke(asrkf::config::OffloadConfig {
             cold_after_steps: 4,
             shards: n,
             shard_partition: ShardPartition::Hash,
+            codec_ladder: ladder,
             ..Default::default()
         });
         let mut store = ShardedStore::new(ROW_FLOATS, cfg)?;
@@ -183,7 +209,7 @@ fn sharded_burst_rows(table: &mut Table) -> Result<(), Box<dyn std::error::Error
         let wall = t0.elapsed();
         let sum = store.summary();
         let mut cells = vec![
-            "store burst (hash)".to_string(),
+            label.to_string(),
             n.to_string(),
             waves.to_string(),
             restored.to_string(),
@@ -477,7 +503,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          boundaries and execute on the worker pool in parallel\n\
          pipeline claim: compare the `pipelined burst (on)` vs `(off)` rows — `mean e2e` drops \
          when speculative reads overlap the host work, and `restore wait (us)` / `late arrivals` \
-         bound the tier I/O the overlap failed to hide"
+         bound the tier I/O the overlap failed to hide\n\
+         ladder claim: compare `bytes/row (cold)` on the `store burst (ladder)` row vs the \
+         `store burst (hash)` sweep — sub-byte rungs pull admitted bytes/row below the u8 \
+         baseline of 8 + row_floats"
     );
     Ok(())
 }

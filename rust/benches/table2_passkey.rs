@@ -11,6 +11,7 @@
 //! Output: table + artifacts/table2_passkey.csv
 
 use asrkf::config::EngineConfig;
+use asrkf::offload::CodecLadder;
 use asrkf::runtime::Runtime;
 use asrkf::util::bench::{self, Table};
 use asrkf::workload::passkey::run_passkey;
@@ -21,6 +22,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let haystacks: &[usize] =
         if bench::smoke() { &[200] } else { &[200, 400, 600, 900] };
     let cfg = EngineConfig::default();
+    // Reversibility must survive the full compression ladder: frozen
+    // needle rows demoted onto sub-byte rungs still have to come back.
+    let mut ladder_cfg = cfg.clone();
+    ladder_cfg.offload.codec_ladder = CodecLadder::parse("0:u8,64:u4,512:ebq")?;
 
     let mut table = Table::new(
         "Table 2: passkey retrieval (greedy, T=0)",
@@ -39,13 +44,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         Err(e) => return Err(e.into()),
     };
     let mut recover_counts = std::collections::BTreeMap::new();
+    let variants: [(&str, &str, &EngineConfig); 5] = [
+        ("full", "full", &cfg),
+        ("asrkf", "asrkf", &cfg),
+        ("asrkf (ladder)", "asrkf", &ladder_cfg),
+        ("h2o", "h2o", &cfg),
+        ("streaming", "streaming", &cfg),
+    ];
     for &haystack in haystacks {
-        for policy in ["full", "asrkf", "h2o", "streaming"] {
+        for &(label, policy, vcfg) in &variants {
             let mut passes = 0;
             let mut recov = 0.0;
             let mut last = None;
             for seed in 1..=seeds {
-                let o = run_passkey(&rt, &cfg, policy, haystack, seed)?;
+                let o = run_passkey(&rt, vcfg, policy, haystack, seed)?;
                 if o.pass {
                     passes += 1;
                 }
@@ -53,9 +65,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 last = Some(o);
             }
             let o = last.unwrap();
-            *recover_counts.entry(policy).or_insert(0.0) += recov;
+            *recover_counts.entry(label).or_insert(0.0) += recov;
             table.row(&[
-                policy.to_string(),
+                label.to_string(),
                 format!("{haystack}B"),
                 o.target.clone(),
                 o.retrieved.clone(),
@@ -72,6 +84,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("NOTE: the 3.3M stand-in model lacks induction-copy skill (E2E column fails for ALL");
     println!("policies incl. Full KV — model limitation, not a KV-policy effect; EXPERIMENTS.md).");
     println!("The recoverability column measures the paper's reversibility claim directly.");
+    println!("`asrkf (ladder)` runs the same policy with the 0:u8,64:u4,512:ebq codec ladder armed.");
     println!("csv: artifacts/table2_passkey.csv");
     Ok(())
 }

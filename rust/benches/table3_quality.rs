@@ -11,6 +11,7 @@
 use asrkf::baselines::make_policy;
 use asrkf::config::EngineConfig;
 use asrkf::engine::Generator;
+use asrkf::offload::CodecLadder;
 use asrkf::runtime::Runtime;
 use asrkf::util::bench::{self, Table};
 
@@ -40,10 +41,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     asrkf::util::logging::init();
     let new_tokens = bench::smoke_size(200, 24);
     let cfg = EngineConfig::default();
+    // Same policy, full compression ladder on the cold/spill tiers:
+    // the quality gate must hold when demoted rows ride sub-byte rungs.
+    let mut ladder_cfg = cfg.clone();
+    ladder_cfg.offload.codec_ladder = CodecLadder::parse("0:u8,64:u4,512:ebq")?;
 
     let mut table = Table::new(
         "Table 3: explanation task (T=0.7, top-k=40, top-p=0.9)",
-        &["Metric", "Baseline", "ASR-KF-EGR"],
+        &["Metric", "Baseline", "ASR-KF-EGR", "ASR-KF-EGR (ladder)"],
     );
     let rt = match Runtime::load(&cfg.artifacts_dir) {
         Ok(rt) => rt,
@@ -63,39 +68,61 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for policy in ["full", "asrkf"] {
         outs.push(gen.generate(PROMPT, make_policy(policy, &cfg.freeze)?, new_tokens)?);
     }
+    let ladder_gen = Generator::new(&rt, ladder_cfg);
+    outs.push(ladder_gen.generate(PROMPT, make_policy("asrkf", &cfg.freeze)?, new_tokens)?);
     let ent = |o: &asrkf::engine::GenOutcome| {
         o.trace.iter().map(|t| t.entropy as f64).sum::<f64>() / o.trace.len() as f64
+    };
+    let cold_bpr = |o: &asrkf::engine::GenOutcome| {
+        let v = o.stats.offload.bytes_per_row_cold;
+        if v == 0 {
+            "-".into()
+        } else {
+            format!("{v}")
+        }
     };
     table.row(&[
         "Active KV".into(),
         format!("{} tokens", outs[0].stats.final_active_kv),
         format!("{} tokens", outs[1].stats.final_active_kv),
+        format!("{} tokens", outs[2].stats.final_active_kv),
     ]);
     table.row(&[
         "Compression".into(),
         format!("{:.2}%", outs[0].stats.compression * 100.0),
         format!("{:.2}%", outs[1].stats.compression * 100.0),
+        format!("{:.2}%", outs[2].stats.compression * 100.0),
     ]);
     table.row(&[
         "Mean entropy (nats)".into(),
         format!("{:.3}", ent(&outs[0])),
         format!("{:.3}", ent(&outs[1])),
+        format!("{:.3}", ent(&outs[2])),
     ]);
     table.row(&[
         "Repetition score".into(),
         format!("{:.3}", repetition_score(&outs[0].text)),
         format!("{:.3}", repetition_score(&outs[1].text)),
+        format!("{:.3}", repetition_score(&outs[2].text)),
+    ]);
+    table.row(&[
+        "Cold bytes/row".into(),
+        cold_bpr(&outs[0]),
+        cold_bpr(&outs[1]),
+        cold_bpr(&outs[2]),
     ]);
     table.row(&[
         "Wall time".into(),
         format!("{:.2}s", outs[0].stats.wall.as_secs_f64()),
         format!("{:.2}s", outs[1].stats.wall.as_secs_f64()),
+        format!("{:.2}s", outs[2].stats.wall.as_secs_f64()),
     ]);
     table.print();
     table.write_csv("artifacts/table3_quality.csv")?;
 
     println!("\n--- baseline ---\n{}", outs[0].text);
     println!("\n--- asr-kf-egr ---\n{}", outs[1].text);
+    println!("\n--- asr-kf-egr (ladder 0:u8,64:u4,512:ebq) ---\n{}", outs[2].text);
     println!("\npaper reference: 269 vs 119 active tokens (55.76% compression), comparable fluency");
     Ok(())
 }

@@ -2,6 +2,7 @@
 //! engine / recovery / serving knobs. Every bench and example builds on
 //! these defaults; CLI flags override individual fields.
 
+use crate::offload::codec::{CodecId, CodecLadder};
 use crate::util::cli::Args;
 
 /// Paper §4.1 hyper-parameters + scheduling extensions.
@@ -148,16 +149,32 @@ pub struct OffloadConfig {
     /// is at least this far away is quantized straight into the cold
     /// tier; hot rows that outstay this residency age are demoted.
     pub cold_after_steps: u64,
-    /// Quantize cold-tier rows (u8 + per-row scale). The escape hatch
-    /// (`--no-cold-quant`) disables demotion entirely: every frozen
-    /// row stays uncompressed in the hot tier and the byte budgets
-    /// become advisory (lossless storage, unbounded growth).
+    /// Compress demoted rows. Derived from [`OffloadConfig::codec_ladder`]
+    /// (`false` iff the ladder's sole rung is `raw`): when false,
+    /// demotion is disabled entirely — every frozen row stays
+    /// uncompressed in the hot tier and the byte budgets become
+    /// advisory (lossless storage, unbounded growth). The legacy
+    /// `--no-cold-quant` flag still parses (with a deprecation
+    /// warning) as `--cold-codec raw`.
     pub quantize_cold: bool,
-    /// Documented worst-case quantization error as a fraction of the
-    /// per-row value range (u8 affine: half a quantization step, plus
-    /// f32 rounding at the row's magnitude). Verified by
-    /// `tests/prop_offload.rs`.
+    /// Documented worst-case quantization error of the u8 rung as a
+    /// fraction of the per-row value range (u8 affine: half a
+    /// quantization step, plus f32 rounding at the row's magnitude).
+    /// Verified by `tests/prop_offload.rs`.
     pub cold_quant_rel_error: f32,
+    /// Eta-aware compression ladder (`--codec-ladder 0:u8,64:u4,512:ebq`):
+    /// demotion picks the codec rung from the row's predicted thaw
+    /// distance (`thaw_eta - now`), so rows expected back soon stay
+    /// cheap to decode and far-future rows compress hardest. The
+    /// default single-rung `0:u8` ladder reproduces the pre-ladder
+    /// cold tier byte-for-byte (oracle-tested in
+    /// `tests/prop_offload.rs`). `--cold-codec CODEC` is shorthand for
+    /// a single-rung ladder.
+    pub codec_ladder: CodecLadder,
+    /// Relative error target of the `ebq` rung (`--ebq-rel-error`), as
+    /// a fraction of the per-row value range: each 32-float block
+    /// picks the smallest width in {0, 2, 4, 8} bits that meets it.
+    pub ebq_rel_error: f32,
     /// Directory for the file-backed spill tier; `None` disables
     /// spilling (cold tier then overflows its budget rather than drop).
     pub spill_dir: Option<String>,
@@ -266,6 +283,8 @@ impl Default for OffloadConfig {
             // u8 affine quantization: worst case = range/255/2 ≈ 0.00196;
             // small headroom for f32 rounding.
             cold_quant_rel_error: 0.002,
+            codec_ladder: CodecLadder::default(),
+            ebq_rel_error: 0.02,
             spill_dir: None,
             spill_persist: false,
             prefetch_ahead: 2,
@@ -305,12 +324,50 @@ impl OffloadConfig {
             }
             Ok(v)
         };
+        let codec_ladder = {
+            let ladder_spec = args.str_or("codec-ladder", "");
+            let single = args.str_or("cold-codec", "");
+            let legacy_raw = args.bool("no-cold-quant");
+            let given =
+                usize::from(!ladder_spec.is_empty()) + usize::from(!single.is_empty())
+                    + usize::from(legacy_raw);
+            if given > 1 {
+                return Err(
+                    "--codec-ladder, --cold-codec, and --no-cold-quant are mutually \
+                     exclusive (they all set the compression ladder)"
+                        .to_string(),
+                );
+            }
+            if legacy_raw {
+                log::warn!(
+                    "--no-cold-quant is deprecated; use --cold-codec raw \
+                     (or --codec-ladder) instead"
+                );
+                CodecLadder::single(CodecId::Raw)
+            } else if !single.is_empty() {
+                CodecLadder::single(CodecId::parse(&single).map_err(|e| format!("--cold-codec: {e}"))?)
+            } else if !ladder_spec.is_empty() {
+                CodecLadder::parse(&ladder_spec).map_err(|e| format!("--codec-ladder: {e}"))?
+            } else {
+                d.codec_ladder.clone()
+            }
+        };
         Ok(OffloadConfig {
             hot_budget_bytes: args.usize_or("hot-budget-mb", d.hot_budget_bytes >> 20)? << 20,
             cold_budget_bytes: args.usize_or("cold-budget-mb", d.cold_budget_bytes >> 20)? << 20,
             cold_after_steps: args.u64_or("cold-after", d.cold_after_steps)?,
-            quantize_cold: !args.bool("no-cold-quant"),
+            quantize_cold: !codec_ladder.is_raw(),
             cold_quant_rel_error: d.cold_quant_rel_error,
+            ebq_rel_error: {
+                let v = args.f32_or("ebq-rel-error", d.ebq_rel_error)?;
+                if !v.is_finite() || v <= 0.0 || v > 0.5 {
+                    return Err(format!(
+                        "--ebq-rel-error: expected a relative error in (0, 0.5], got {v}"
+                    ));
+                }
+                v
+            },
+            codec_ladder,
             spill_dir: {
                 let s = args.str_or("spill-dir", "");
                 if s.is_empty() { None } else { Some(s) }
@@ -749,6 +806,51 @@ mod tests {
         let o = OffloadConfig::from_args(&a).unwrap();
         assert_eq!(o.flight_recorder_cap, 0);
         assert_eq!(o.partitioned(2, 1).flight_recorder_cap, 0, "partition carries the cap");
+    }
+
+    #[test]
+    fn codec_ladder_flags_parse_and_map_legacy() {
+        let d = OffloadConfig::default();
+        assert_eq!(d.codec_ladder, CodecLadder::single(CodecId::U8), "default is u8-only");
+        assert_eq!(d.ebq_rel_error, 0.02);
+
+        // full ladder: eta thresholds pick the rung
+        let a = args(&["gen", "--codec-ladder", "0:u8,64:u4,512:ebq", "--ebq-rel-error", "0.01"]);
+        let o = OffloadConfig::from_args(&a).unwrap();
+        assert!(o.quantize_cold);
+        assert_eq!(o.ebq_rel_error, 0.01);
+        assert_eq!(o.codec_ladder.pick(0), CodecId::U8);
+        assert_eq!(o.codec_ladder.pick(64), CodecId::U4);
+        assert_eq!(o.codec_ladder.pick(1000), CodecId::Ebq);
+        assert_eq!(o.partitioned(2, 1).codec_ladder, o.codec_ladder, "partition carries it");
+
+        // --cold-codec is single-rung shorthand; raw disables demotion
+        let o = OffloadConfig::from_args(&args(&["gen", "--cold-codec", "u4"])).unwrap();
+        assert_eq!(o.codec_ladder, CodecLadder::single(CodecId::U4));
+        assert!(o.quantize_cold);
+        let o = OffloadConfig::from_args(&args(&["gen", "--cold-codec", "raw"])).unwrap();
+        assert!(o.codec_ladder.is_raw());
+        assert!(!o.quantize_cold);
+
+        // legacy --no-cold-quant still parses (deprecated), maps to raw
+        let o = OffloadConfig::from_args(&args(&["gen", "--no-cold-quant"])).unwrap();
+        assert!(o.codec_ladder.is_raw());
+        assert!(!o.quantize_cold);
+
+        // the three spellings are mutually exclusive; bad specs reject
+        for bad in [
+            args(&["gen", "--no-cold-quant", "--codec-ladder", "0:u8"]),
+            args(&["gen", "--cold-codec", "u8", "--codec-ladder", "0:u8"]),
+            args(&["gen", "--no-cold-quant", "--cold-codec", "raw"]),
+            args(&["gen", "--codec-ladder", "5:u4"]),
+            args(&["gen", "--codec-ladder", "0:u8,64:u4,64:ebq"]),
+            args(&["gen", "--codec-ladder", "0:raw,64:u4"]),
+            args(&["gen", "--cold-codec", "nope"]),
+            args(&["gen", "--ebq-rel-error", "0"]),
+            args(&["gen", "--ebq-rel-error", "0.9"]),
+        ] {
+            assert!(OffloadConfig::from_args(&bad).is_err(), "{:?} must reject", bad);
+        }
     }
 
     #[test]

@@ -159,6 +159,22 @@ pub const CATALOG: &[MetricSpec] = &[
         help: "corrupt/torn/fenced spill records reclaimed (never served)",
     },
     MetricSpec {
+        name: "asrkf_tier_rows_stored_total",
+        kind: MetricKind::Counter,
+        unit: "rows",
+        labels: &["tier", "shard"],
+        help: "rows admitted into each tier (stash + demotion arrivals)",
+    },
+    MetricSpec {
+        name: "asrkf_tier_row_bytes_total",
+        kind: MetricKind::Counter,
+        unit: "bytes",
+        labels: &["tier", "shard"],
+        help: "encoded payload bytes admitted into each tier; divided by \
+               asrkf_tier_rows_stored_total this is the tier's bytes/row \
+               under the active codec ladder",
+    },
+    MetricSpec {
         name: "asrkf_shard_imbalance_total",
         kind: MetricKind::Counter,
         unit: "bursts",
@@ -200,6 +216,14 @@ pub const CATALOG: &[MetricSpec] = &[
         unit: "bytes",
         labels: &["shard"],
         help: "f32 bytes the resident frozen rows would occupy uncompressed",
+    },
+    MetricSpec {
+        name: "asrkf_codec_rows",
+        kind: MetricKind::Gauge,
+        unit: "rows",
+        labels: &["tier", "codec", "shard"],
+        help: "resident rows per tier broken down by codec rung \
+               (raw | u8 | u4 | ebq) of the compression ladder",
     },
     MetricSpec {
         name: "asrkf_shard_rows",
@@ -250,6 +274,20 @@ pub const CATALOG: &[MetricSpec] = &[
         unit: "us",
         labels: &[],
         help: "spill-file record write latency",
+    },
+    MetricSpec {
+        name: "asrkf_codec_encode_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &["codec"],
+        help: "ladder encode latency per row by codec rung",
+    },
+    MetricSpec {
+        name: "asrkf_codec_decode_us",
+        kind: MetricKind::TimeHistogram,
+        unit: "us",
+        labels: &["codec"],
+        help: "ladder decode latency per row by codec rung",
     },
     MetricSpec {
         name: "asrkf_plan_us",
@@ -509,6 +547,9 @@ pub const SERVING_CSV_COLUMNS: &[CsvColumn] = &[
     CsvColumn { header: "recovered rows", metric: "asrkf_recovered_rows_total" },
     CsvColumn { header: "restore wait (us)", metric: "asrkf_restore_wait_us" },
     CsvColumn { header: "late arrivals", metric: "asrkf_late_arrivals_total" },
+    CsvColumn { header: "bytes/row (hot)", metric: "asrkf_tier_row_bytes_total" },
+    CsvColumn { header: "bytes/row (cold)", metric: "asrkf_tier_row_bytes_total" },
+    CsvColumn { header: "bytes/row (spill)", metric: "asrkf_tier_row_bytes_total" },
     CsvColumn { header: "plan mean (us)", metric: "asrkf_plan_us" },
     CsvColumn { header: "plan p99 (us)", metric: "asrkf_plan_us" },
     CsvColumn { header: "rows lost", metric: "asrkf_rows_lost_total" },

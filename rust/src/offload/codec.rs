@@ -1,0 +1,709 @@
+//! The compression-codec ladder: eta-aware multi-precision payload
+//! representations for the cold/spill tiers.
+//!
+//! The paper's soft freeze keeps every frozen row recoverable; *how*
+//! each row is stored is a pure representation choice. KVComp
+//! (arXiv 2509.00579) shows KV tolerates far more aggressive lossy
+//! compression when precision is chosen per block — and this store
+//! already predicts, per row, how far away its thaw is. This module
+//! turns that prediction into a precision dial:
+//!
+//! | rung  | representation                  | bytes/row (rf floats)    | worst-case error      |
+//! |-------|---------------------------------|--------------------------|-----------------------|
+//! | `raw` | f32 verbatim                    | `4·rf`                   | 0                     |
+//! | `u8`  | per-row affine u8               | `8 + rf`                 | `range / 510`         |
+//! | `u4`  | per-block (32) affine u4        | `8·nb + ceil(rf/2)`      | `range / 30`          |
+//! | `ebq` | error-bounded 0/2/4/8-bit blocks| `9·nb + Σ code bytes`    | `ebq_rel_error·range` |
+//!
+//! (`nb = ceil(rf/32)`, `range` = the row's value range.)
+//!
+//! A [`CodecLadder`] maps predicted thaw distance (`thaw_eta - now`,
+//! in steps) to a rung: rows coming back soon stay cheap to decode and
+//! near-exact, rows predicted frozen for hundreds of steps pay for
+//! their distance with sub-byte codes. `TieredStore` consults the
+//! ladder once per demotion; tiers and the spill file store the
+//! codec-tagged [`RowPayload`] verbatim (the on-disk record header
+//! carries the codec byte). The default ladder is single-rung `0:u8`,
+//! which reproduces the pre-ladder cold tier byte-for-byte
+//! (oracle-tested in `tests/prop_offload.rs`).
+//!
+//! The encode/decode hot loops live in [`quant`]; this module owns
+//! identity (codec byte), policy (ladder), trait plumbing ([`Codec`])
+//! and the byte-level payload serialization the spill tier records.
+
+use crate::error::{Error, Result};
+use crate::offload::quant::{
+    self, ceil_div, BoundedRow, EbqBlock, PackedRow, QuantRow, EBQ_BLOCK,
+    EBQ_BLOCK_HEADER_BYTES, ROW_HEADER_BYTES, U4_BLOCK, U4_BLOCK_HEADER_BYTES,
+};
+use crate::offload::tier::RowPayload;
+
+/// Identity of one codec rung. The discriminant is the on-disk codec
+/// byte in spill v2 record headers — append-only, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecId {
+    /// f32 verbatim (lossless; never demoted to disk).
+    Raw = 0,
+    /// Per-row affine u8 — the pre-ladder cold representation.
+    U8 = 1,
+    /// Per-block affine u4, two codes per byte.
+    U4 = 2,
+    /// Error-bounded variable-rate blocks (0/2/4/8-bit).
+    Ebq = 3,
+}
+
+/// Documented worst-case u4 reconstruction error as a fraction of the
+/// row value range: half a 15-level step of a block's range (≤ the row
+/// range), plus f32 headroom. Verified by `tests/spill_recovery.rs`.
+pub const U4_REL_ERROR: f32 = 1.0 / 30.0 + 0.001;
+
+impl CodecId {
+    pub const COUNT: usize = 4;
+    /// All rungs, discriminant order (also the metrics label order).
+    pub const ALL: [CodecId; CodecId::COUNT] =
+        [CodecId::Raw, CodecId::U8, CodecId::U4, CodecId::Ebq];
+
+    /// The on-disk codec byte (spill v2 record header offset 28).
+    pub fn as_byte(self) -> u8 {
+        self as u8
+    }
+
+    /// Parse an on-disk codec byte.
+    pub fn from_byte(b: u8) -> Option<CodecId> {
+        CodecId::ALL.get(b as usize).copied()
+    }
+
+    /// Flag-value spelling (also the metrics `codec` label value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CodecId::Raw => "raw",
+            CodecId::U8 => "u8",
+            CodecId::U4 => "u4",
+            CodecId::Ebq => "ebq",
+        }
+    }
+
+    /// Parse a `--cold-codec` / `--codec-ladder` rung name.
+    pub fn parse(s: &str) -> std::result::Result<CodecId, String> {
+        match s {
+            "raw" => Ok(CodecId::Raw),
+            "u8" => Ok(CodecId::U8),
+            "u4" => Ok(CodecId::U4),
+            "ebq" => Ok(CodecId::Ebq),
+            other => Err(format!("codec: expected 'raw', 'u8', 'u4' or 'ebq', got '{other}'")),
+        }
+    }
+
+    /// Stable index into per-codec arrays (discriminant order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Worst-case encoded payload bytes for a `row_floats`-wide row
+    /// (`ebq` is variable-rate; this is its 8-bit-everywhere ceiling).
+    pub fn max_encoded_bytes(self, row_floats: usize) -> usize {
+        let nb = ceil_div(row_floats.max(1), U4_BLOCK);
+        match self {
+            CodecId::Raw => row_floats * std::mem::size_of::<f32>(),
+            CodecId::U8 => ROW_HEADER_BYTES + row_floats,
+            CodecId::U4 => nb * U4_BLOCK_HEADER_BYTES + ceil_div(row_floats, 2),
+            CodecId::Ebq => nb * EBQ_BLOCK_HEADER_BYTES + row_floats,
+        }
+    }
+
+    /// Documented worst-case reconstruction error as a fraction of the
+    /// row value range. `u8_rel` / `ebq_rel` come from
+    /// `OffloadConfig::{cold_quant_rel_error, ebq_rel_error}`.
+    pub fn rel_error_bound(self, u8_rel: f32, ebq_rel: f32) -> f32 {
+        match self {
+            CodecId::Raw => 0.0,
+            CodecId::U8 => u8_rel,
+            CodecId::U4 => U4_REL_ERROR,
+            // an 8-bit block always meets any target the CLI accepts,
+            // so the effective bound never exceeds the u8 rung's
+            CodecId::Ebq => ebq_rel.max(u8_rel),
+        }
+    }
+}
+
+/// Fixed spill-slot payload ceiling: the widest worst case across the
+/// spillable (non-raw) rungs, so one record size fits any codec the
+/// ladder may hand the spill tier.
+pub fn max_spill_payload_bytes(row_floats: usize) -> usize {
+    [CodecId::U8, CodecId::U4, CodecId::Ebq]
+        .iter()
+        .map(|c| c.max_encoded_bytes(row_floats))
+        .max()
+        .unwrap_or(0)
+}
+
+/// One codec rung as a pluggable encoder/decoder. Tiers and the store
+/// mostly dispatch through [`CodecSet`] (static match, no allocation);
+/// the trait is the extension seam for future rungs (e.g. an
+/// entropy-coded backend) and the surface the round-trip property
+/// tests drive.
+pub trait Codec {
+    /// Which rung this is (and the on-disk codec byte it stamps).
+    fn id(&self) -> CodecId;
+
+    /// Encode a full-precision row into a codec-tagged payload.
+    fn encode(&self, row: &[f32]) -> RowPayload;
+
+    /// Decode a payload of this codec into a caller-provided buffer
+    /// (len must match). Errors on a payload carrying another codec.
+    fn decode_into(&self, payload: &RowPayload, dst: &mut [f32]) -> Result<()>;
+
+    /// Worst-case encoded bytes for a `row_floats`-wide row.
+    fn bytes_per_row(&self, row_floats: usize) -> usize {
+        self.id().max_encoded_bytes(row_floats)
+    }
+
+    /// Worst-case absolute reconstruction error for a row with value
+    /// range `row_range`.
+    fn error_bound(&self, row_range: f32) -> f32;
+}
+
+fn codec_mismatch(want: CodecId, got: CodecId) -> Error {
+    Error::Offload(format!("codec mismatch: decoding {} payload as {}", got.as_str(), want.as_str()))
+}
+
+/// Lossless f32 rung.
+pub struct RawCodec;
+
+impl Codec for RawCodec {
+    fn id(&self) -> CodecId {
+        CodecId::Raw
+    }
+
+    fn encode(&self, row: &[f32]) -> RowPayload {
+        RowPayload::Raw(row.to_vec())
+    }
+
+    fn decode_into(&self, payload: &RowPayload, dst: &mut [f32]) -> Result<()> {
+        match payload {
+            RowPayload::Raw(r) => {
+                dst.copy_from_slice(r);
+                Ok(())
+            }
+            p => Err(codec_mismatch(self.id(), p.codec())),
+        }
+    }
+
+    fn error_bound(&self, _row_range: f32) -> f32 {
+        0.0
+    }
+}
+
+/// Per-row affine u8 rung (the pre-ladder cold representation).
+pub struct U8Codec;
+
+impl Codec for U8Codec {
+    fn id(&self) -> CodecId {
+        CodecId::U8
+    }
+
+    fn encode(&self, row: &[f32]) -> RowPayload {
+        RowPayload::Quant(quant::quantize(row))
+    }
+
+    fn decode_into(&self, payload: &RowPayload, dst: &mut [f32]) -> Result<()> {
+        match payload {
+            RowPayload::Quant(q) => {
+                quant::dequantize_into(q, dst);
+                Ok(())
+            }
+            p => Err(codec_mismatch(self.id(), p.codec())),
+        }
+    }
+
+    fn error_bound(&self, row_range: f32) -> f32 {
+        row_range / 510.0 + row_range * f32::EPSILON * 8.0
+    }
+}
+
+/// Per-block affine u4 rung.
+pub struct U4Codec;
+
+impl Codec for U4Codec {
+    fn id(&self) -> CodecId {
+        CodecId::U4
+    }
+
+    fn encode(&self, row: &[f32]) -> RowPayload {
+        RowPayload::Packed(quant::pack_u4(row))
+    }
+
+    fn decode_into(&self, payload: &RowPayload, dst: &mut [f32]) -> Result<()> {
+        match payload {
+            RowPayload::Packed(p) => {
+                quant::unpack_u4_into(p, dst);
+                Ok(())
+            }
+            p => Err(codec_mismatch(self.id(), p.codec())),
+        }
+    }
+
+    fn error_bound(&self, row_range: f32) -> f32 {
+        row_range * U4_REL_ERROR
+    }
+}
+
+/// Error-bounded variable-rate rung for far-future rows.
+pub struct EbqCodec {
+    /// Per-block error target as a fraction of the row value range.
+    pub rel_target: f32,
+}
+
+impl Codec for EbqCodec {
+    fn id(&self) -> CodecId {
+        CodecId::Ebq
+    }
+
+    fn encode(&self, row: &[f32]) -> RowPayload {
+        RowPayload::Bounded(quant::encode_ebq(row, self.rel_target))
+    }
+
+    fn decode_into(&self, payload: &RowPayload, dst: &mut [f32]) -> Result<()> {
+        match payload {
+            RowPayload::Bounded(b) => {
+                quant::decode_ebq_into(b, dst);
+                Ok(())
+            }
+            p => Err(codec_mismatch(self.id(), p.codec())),
+        }
+    }
+
+    fn error_bound(&self, row_range: f32) -> f32 {
+        // the 8-bit fallback caps the error even when the target is
+        // tighter than a block can meet
+        (row_range * self.rel_target).max(row_range / 510.0) + row_range * f32::EPSILON * 8.0
+    }
+}
+
+/// The rung dispatcher a store holds: encode/decode by [`CodecId`]
+/// with static dispatch (no per-row allocation or vtable), carrying
+/// the one config-dependent rung parameter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecSet {
+    /// `ebq` rung error target ([`OffloadConfig::ebq_rel_error`]).
+    pub ebq_rel_error: f32,
+}
+
+impl Default for CodecSet {
+    fn default() -> Self {
+        CodecSet { ebq_rel_error: 0.02 }
+    }
+}
+
+impl CodecSet {
+    /// Encode a row under the given rung.
+    pub fn encode(&self, id: CodecId, row: Vec<f32>) -> RowPayload {
+        match id {
+            CodecId::Raw => RowPayload::Raw(row),
+            CodecId::U8 => RowPayload::Quant(quant::quantize(&row)),
+            CodecId::U4 => RowPayload::Packed(quant::pack_u4(&row)),
+            CodecId::Ebq => RowPayload::Bounded(quant::encode_ebq(&row, self.ebq_rel_error)),
+        }
+    }
+
+    /// The rung as a trait object (the property-test / extension
+    /// surface; the store itself uses [`CodecSet::encode`]).
+    pub fn codec(&self, id: CodecId) -> Box<dyn Codec> {
+        match id {
+            CodecId::Raw => Box::new(RawCodec),
+            CodecId::U8 => Box::new(U8Codec),
+            CodecId::U4 => Box::new(U4Codec),
+            CodecId::Ebq => Box::new(EbqCodec { rel_target: self.ebq_rel_error }),
+        }
+    }
+}
+
+/// Thaw-distance → codec rung map (`--codec-ladder`, e.g.
+/// `0:u8,64:u4,512:ebq`): a demoted row whose predicted thaw is at
+/// least `threshold` steps away is encoded with that rung (largest
+/// matching threshold wins). Invariants enforced at parse: the base
+/// rung's threshold is 0 (every distance maps to something), the
+/// thresholds strictly increase, and `raw` may only appear as the sole
+/// rung (it maps onto the legacy `--no-cold-quant` no-demotion mode —
+/// a raw rung *above* lossy rungs would store far-future rows fatter
+/// than near ones).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecLadder {
+    /// `(min thaw distance in steps, rung)`, ascending; first is 0.
+    rungs: Vec<(u64, CodecId)>,
+}
+
+impl Default for CodecLadder {
+    /// Single-rung `0:u8` — byte-for-byte the pre-ladder cold tier.
+    fn default() -> Self {
+        CodecLadder::single(CodecId::U8)
+    }
+}
+
+impl CodecLadder {
+    /// A one-rung ladder: every demotion uses `codec`.
+    pub fn single(codec: CodecId) -> CodecLadder {
+        CodecLadder { rungs: vec![(0, codec)] }
+    }
+
+    /// Parse a `--codec-ladder` spec (`threshold:codec`, comma
+    /// separated).
+    pub fn parse(spec: &str) -> std::result::Result<CodecLadder, String> {
+        let mut rungs = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (t, c) = part
+                .split_once(':')
+                .ok_or_else(|| format!("--codec-ladder: expected 'steps:codec', got '{part}'"))?;
+            let threshold = t
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| format!("--codec-ladder: '{t}' is not a step count"))?;
+            let codec =
+                CodecId::parse(c.trim()).map_err(|e| format!("--codec-ladder: {e}"))?;
+            rungs.push((threshold, codec));
+        }
+        if rungs.is_empty() {
+            return Err("--codec-ladder: at least one rung required".to_string());
+        }
+        if rungs[0].0 != 0 {
+            return Err(format!(
+                "--codec-ladder: the base rung must start at 0 (got {})",
+                rungs[0].0
+            ));
+        }
+        if !rungs.windows(2).all(|w| w[0].0 < w[1].0) {
+            return Err("--codec-ladder: thresholds must strictly increase".to_string());
+        }
+        if rungs.iter().any(|&(_, c)| c == CodecId::Raw) && rungs.len() > 1 {
+            return Err(
+                "--codec-ladder: 'raw' disables demotion and must be the only rung".to_string()
+            );
+        }
+        Ok(CodecLadder { rungs })
+    }
+
+    /// The rung for a row whose predicted thaw is `eta_distance` steps
+    /// away: the largest threshold not exceeding the distance.
+    pub fn pick(&self, eta_distance: u64) -> CodecId {
+        self.rungs
+            .iter()
+            .rev()
+            .find(|&&(t, _)| t <= eta_distance)
+            .map(|&(_, c)| c)
+            .unwrap_or(self.rungs[0].1)
+    }
+
+    /// The base (distance-0) rung — what the cold tier holds at the
+    /// admission horizon.
+    pub fn base(&self) -> CodecId {
+        self.rungs[0].1
+    }
+
+    /// Whether this is the raw (no-demotion) ladder, the
+    /// `--no-cold-quant` equivalent.
+    pub fn is_raw(&self) -> bool {
+        self.rungs.len() == 1 && self.rungs[0].1 == CodecId::Raw
+    }
+
+    /// The rungs, ascending by threshold.
+    pub fn rungs(&self) -> &[(u64, CodecId)] {
+        &self.rungs
+    }
+
+    /// Canonical flag spelling (`0:u8,64:u4,...`).
+    pub fn as_spec(&self) -> String {
+        self.rungs
+            .iter()
+            .map(|&(t, c)| format!("{t}:{}", c.as_str()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl std::fmt::Display for CodecLadder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.as_spec())
+    }
+}
+
+// --- spill payload serialization -------------------------------------
+//
+// The byte-level form of each payload in a spill record body, after
+// the v2 record header (which carries the codec byte and payload
+// length). Every non-raw layout's size equals `RowPayload::bytes()`
+// exactly, so the admission byte accounting and the on-disk payload
+// agree.
+//
+//   u8  : min f32 | scale f32 | rf code bytes
+//   u4  : nb × (min f32 | scale f32) | ceil(rf/2) packed nibbles
+//   ebq : nblk × (min f32 | scale f32 | bits u8) | code bytes
+//   raw : rf × f32 LE (never written by the store; kept for
+//         completeness and tested for symmetry)
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_f32(b: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Serialize a payload into its spill record body form.
+pub fn payload_to_bytes(payload: &RowPayload) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.bytes());
+    match payload {
+        RowPayload::Raw(r) => {
+            for &x in r {
+                push_f32(&mut out, x);
+            }
+        }
+        RowPayload::Quant(q) => {
+            push_f32(&mut out, q.min);
+            push_f32(&mut out, q.scale);
+            out.extend_from_slice(&q.q);
+        }
+        RowPayload::Packed(p) => {
+            for &(min, scale) in &p.blocks {
+                push_f32(&mut out, min);
+                push_f32(&mut out, scale);
+            }
+            out.extend_from_slice(&p.q);
+        }
+        RowPayload::Bounded(b) => {
+            for blk in &b.blocks {
+                push_f32(&mut out, blk.min);
+                push_f32(&mut out, blk.scale);
+                out.push(blk.bits);
+            }
+            out.extend_from_slice(&b.q);
+        }
+    }
+    debug_assert_eq!(out.len(), payload.bytes());
+    out
+}
+
+/// Deserialize a spill record body back into a codec-tagged payload.
+/// `body` must be exactly the payload bytes the record header declared;
+/// every length is validated (a mismatch means record corruption the
+/// checksum failed to catch, or a reader/writer version skew).
+pub fn payload_from_bytes(codec: CodecId, row_floats: usize, body: &[u8]) -> Result<RowPayload> {
+    let bad = |what: &str| {
+        Error::Offload(format!(
+            "spill payload corrupt: {what} (codec {}, {} body bytes, {row_floats} floats)",
+            codec.as_str(),
+            body.len()
+        ))
+    };
+    match codec {
+        CodecId::Raw => {
+            if body.len() != row_floats * 4 {
+                return Err(bad("raw length mismatch"));
+            }
+            let row = (0..row_floats).map(|i| read_f32(body, i * 4)).collect();
+            Ok(RowPayload::Raw(row))
+        }
+        CodecId::U8 => {
+            if body.len() != ROW_HEADER_BYTES + row_floats {
+                return Err(bad("u8 length mismatch"));
+            }
+            let min = read_f32(body, 0);
+            let scale = read_f32(body, 4);
+            let q = body[ROW_HEADER_BYTES..].to_vec();
+            Ok(RowPayload::Quant(QuantRow { q, min, scale }))
+        }
+        CodecId::U4 => {
+            let nb = ceil_div(row_floats.max(1), U4_BLOCK);
+            if body.len() != nb * U4_BLOCK_HEADER_BYTES + ceil_div(row_floats, 2) {
+                return Err(bad("u4 length mismatch"));
+            }
+            let blocks = (0..nb)
+                .map(|i| (read_f32(body, i * 8), read_f32(body, i * 8 + 4)))
+                .collect();
+            let q = body[nb * U4_BLOCK_HEADER_BYTES..].to_vec();
+            Ok(RowPayload::Packed(PackedRow { q, blocks, floats: row_floats }))
+        }
+        CodecId::Ebq => {
+            let nb = ceil_div(row_floats.max(1), EBQ_BLOCK);
+            if body.len() < nb * EBQ_BLOCK_HEADER_BYTES {
+                return Err(bad("ebq header truncated"));
+            }
+            let mut blocks = Vec::with_capacity(nb);
+            let mut code_bytes = 0usize;
+            for i in 0..nb {
+                let off = i * EBQ_BLOCK_HEADER_BYTES;
+                let bits = body[off + 8];
+                if !matches!(bits, 0 | 2 | 4 | 8) {
+                    return Err(bad("ebq code width invalid"));
+                }
+                let block_len = EBQ_BLOCK.min(row_floats - i * EBQ_BLOCK);
+                if bits > 0 {
+                    code_bytes += ceil_div(block_len, 8 / bits as usize);
+                }
+                blocks.push(EbqBlock {
+                    min: read_f32(body, off),
+                    scale: read_f32(body, off + 4),
+                    bits,
+                });
+            }
+            if body.len() != nb * EBQ_BLOCK_HEADER_BYTES + code_bytes {
+                return Err(bad("ebq code length mismatch"));
+            }
+            let q = body[nb * EBQ_BLOCK_HEADER_BYTES..].to_vec();
+            // the serialized form carries no bound; recompute the
+            // guarantee from the block widths actually used
+            let bound = blocks
+                .iter()
+                .map(|b| {
+                    let range = if b.bits == 0 { b.scale } else { b.scale * ((1u32 << b.bits) - 1) as f32 };
+                    let half = if b.bits == 0 { 0.5 * range } else { 0.5 * b.scale };
+                    half + (b.min.abs() + range) * f32::EPSILON * 4.0
+                })
+                .fold(0.0f32, f32::max);
+            Ok(RowPayload::Bounded(BoundedRow { blocks, q, floats: row_floats, bound }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wavy(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.53).sin() * 2.0 + 0.25).collect()
+    }
+
+    #[test]
+    fn codec_byte_roundtrips_and_is_stable() {
+        for c in CodecId::ALL {
+            assert_eq!(CodecId::from_byte(c.as_byte()), Some(c));
+            assert_eq!(CodecId::parse(c.as_str()).unwrap(), c);
+        }
+        // on-disk bytes are frozen: renumbering breaks old records
+        assert_eq!(CodecId::Raw.as_byte(), 0);
+        assert_eq!(CodecId::U8.as_byte(), 1);
+        assert_eq!(CodecId::U4.as_byte(), 2);
+        assert_eq!(CodecId::Ebq.as_byte(), 3);
+        assert_eq!(CodecId::from_byte(4), None);
+        assert!(CodecId::parse("fp8").is_err());
+    }
+
+    #[test]
+    fn ladder_parses_picks_and_rejects() {
+        let l = CodecLadder::parse("0:u8,64:u4,512:ebq").unwrap();
+        assert_eq!(l.base(), CodecId::U8);
+        assert_eq!(l.pick(0), CodecId::U8);
+        assert_eq!(l.pick(63), CodecId::U8);
+        assert_eq!(l.pick(64), CodecId::U4);
+        assert_eq!(l.pick(511), CodecId::U4);
+        assert_eq!(l.pick(512), CodecId::Ebq);
+        assert_eq!(l.pick(u64::MAX), CodecId::Ebq);
+        assert_eq!(l.as_spec(), "0:u8,64:u4,512:ebq");
+        assert_eq!(CodecLadder::parse(&l.as_spec()).unwrap(), l, "spec roundtrips");
+        assert_eq!(CodecLadder::default(), CodecLadder::single(CodecId::U8));
+        assert!(CodecLadder::single(CodecId::Raw).is_raw());
+        assert!(!CodecLadder::default().is_raw());
+        for bad in [
+            "",            // empty
+            "64:u4",       // no base rung
+            "0:u8,64",     // missing codec
+            "0:u8,64:fp8", // unknown codec
+            "0:u8,64:u4,64:ebq", // duplicate threshold
+            "0:u8,64:raw", // raw above a lossy rung
+            "x:u8",        // bad threshold
+        ] {
+            assert!(CodecLadder::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn trait_rungs_roundtrip_within_their_bound() {
+        let row = wavy(100);
+        let (lo, hi) = row.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &x| {
+            (lo.min(x), hi.max(x))
+        });
+        let set = CodecSet::default();
+        for id in CodecId::ALL {
+            let c = set.codec(id);
+            assert_eq!(c.id(), id);
+            let payload = c.encode(&row);
+            assert_eq!(payload.codec(), id);
+            assert!(payload.bytes() <= c.bytes_per_row(row.len()), "{id:?} exceeds ceiling");
+            let mut back = vec![0.0f32; row.len()];
+            c.decode_into(&payload, &mut back).unwrap();
+            let bound = c.error_bound(hi - lo);
+            for (a, b) in row.iter().zip(&back) {
+                assert!((a - b).abs() <= bound, "{id:?}: {a} vs {b} (bound {bound})");
+            }
+            // decoding under the wrong rung is a typed error
+            if id != CodecId::U8 {
+                let u8c = set.codec(CodecId::U8);
+                assert!(u8c.decode_into(&payload, &mut back).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn sub_byte_rungs_are_smaller_than_u8() {
+        let rf = 1024;
+        let row = wavy(rf);
+        let set = CodecSet::default();
+        let u8b = set.encode(CodecId::U8, row.clone()).bytes();
+        let u4b = set.encode(CodecId::U4, row.clone()).bytes();
+        let ebqb = set.encode(CodecId::Ebq, row).bytes();
+        assert!(u4b < u8b, "u4 {u4b} vs u8 {u8b}");
+        assert!(ebqb < u8b, "ebq {ebqb} vs u8 {u8b}");
+    }
+
+    #[test]
+    fn payload_bytes_roundtrip_every_codec() {
+        let set = CodecSet::default();
+        for rf in [1usize, 31, 32, 33, 64, 100] {
+            let row = wavy(rf);
+            for id in CodecId::ALL {
+                let payload = set.encode(id, row.clone());
+                let body = payload_to_bytes(&payload);
+                if id != CodecId::Raw {
+                    assert_eq!(body.len(), payload.bytes(), "{id:?} rf={rf}");
+                }
+                let back = payload_from_bytes(id, rf, &body).unwrap();
+                assert_eq!(
+                    payload_to_bytes(&back),
+                    body,
+                    "{id:?} rf={rf} must survive a serialization round trip"
+                );
+                assert_eq!(back.codec(), id);
+                // decoded floats are identical, not merely close: the
+                // byte form is the payload, no re-encoding involved
+                assert_eq!(back.into_raw(), payload.clone().into_raw(), "{id:?} rf={rf}");
+            }
+        }
+    }
+
+    #[test]
+    fn payload_from_bytes_rejects_corrupt_lengths() {
+        let set = CodecSet::default();
+        let row = wavy(32);
+        for id in CodecId::ALL {
+            let body = payload_to_bytes(&set.encode(id, row.clone()));
+            assert!(payload_from_bytes(id, 32, &body[..body.len() - 1]).is_err(), "{id:?}");
+            let mut long = body.clone();
+            long.push(0);
+            assert!(payload_from_bytes(id, 32, &long).is_err(), "{id:?}");
+        }
+        // an ebq body with an invalid code width is rejected
+        let mut body = payload_to_bytes(&set.encode(CodecId::Ebq, row));
+        body[8] = 3;
+        assert!(payload_from_bytes(CodecId::Ebq, 32, &body).is_err());
+    }
+
+    #[test]
+    fn max_spill_payload_covers_every_spillable_rung() {
+        for rf in [1usize, 16, 32, 33, 1024] {
+            let cap = max_spill_payload_bytes(rf);
+            for id in [CodecId::U8, CodecId::U4, CodecId::Ebq] {
+                assert!(id.max_encoded_bytes(rf) <= cap, "{id:?} rf={rf}");
+            }
+        }
+    }
+}

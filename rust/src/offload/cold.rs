@@ -1,30 +1,45 @@
-//! Cold tier: u8-quantized rows (~4x smaller than f32) for rows the
-//! freeze ladder predicts will stay frozen past the admission horizon.
+//! Cold tier: codec-encoded rows (u8 / u4 / ebq, picked by the
+//! `offload::codec` ladder) for rows the freeze ladder predicts will
+//! stay frozen past the admission horizon.
 //!
-//! Stashing a raw row quantizes it here (lossy within the documented
-//! `OffloadConfig::cold_quant_rel_error` bound); stashing an
-//! already-quantized payload (a spill promotion in transit) moves the
-//! record verbatim. Restores served from this tier pay inline
-//! dequantization — the prefetch path exists to avoid exactly that.
+//! Stashing a raw row quantizes it here to the u8 rung (lossy within
+//! the documented `OffloadConfig::cold_quant_rel_error` bound) — the
+//! store's demotion path pre-encodes with the ladder, so a raw payload
+//! reaching this tier is the legacy/direct path. Stashing an
+//! already-encoded payload (a ladder demotion, or a spill promotion in
+//! transit) moves the record verbatim: no decode/re-encode round trip,
+//! no error accumulation. Restores served from this tier pay inline
+//! decoding — the prefetch path exists to avoid exactly that.
 
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 use crate::metrics::{TierKind, TierOccupancy};
-use crate::offload::quant::QuantRow;
+use crate::offload::codec::CodecId;
 use crate::offload::tier::{RowPayload, Tier};
 
-/// The in-memory quantized tier.
+/// The in-memory encoded tier.
 #[derive(Debug, Default)]
 pub struct ColdTier {
-    rows: HashMap<usize, QuantRow>,
+    rows: HashMap<usize, RowPayload>,
     bytes: usize,
     row_floats: usize,
+    codec_rows: [usize; CodecId::COUNT],
 }
 
 impl ColdTier {
     pub fn new(row_floats: usize) -> ColdTier {
-        ColdTier { rows: HashMap::new(), bytes: 0, row_floats }
+        ColdTier {
+            rows: HashMap::new(),
+            bytes: 0,
+            row_floats,
+            codec_rows: [0; CodecId::COUNT],
+        }
+    }
+
+    /// Resident rows per codec rung, indexed by `CodecId::index`.
+    pub fn codec_rows(&self) -> [usize; CodecId::COUNT] {
+        self.codec_rows
     }
 }
 
@@ -44,21 +59,29 @@ impl Tier for ColdTier {
                 self.row_floats
             )));
         }
-        let qr = payload.into_quant();
-        self.bytes += qr.bytes();
-        self.rows.insert(pos, qr);
+        // Raw rows are normalized to the u8 rung (this tier never
+        // holds f32); encoded payloads are kept verbatim.
+        let payload = match payload {
+            RowPayload::Raw(_) => RowPayload::Quant(payload.into_quant()),
+            encoded => encoded,
+        };
+        self.bytes += payload.bytes();
+        self.codec_rows[payload.codec().index()] += 1;
+        self.rows.insert(pos, payload);
         Ok(())
     }
 
     fn take(&mut self, pos: usize) -> Result<Option<RowPayload>> {
-        let Some(qr) = self.rows.remove(&pos) else { return Ok(None) };
-        self.bytes -= qr.bytes();
-        Ok(Some(RowPayload::Quant(qr)))
+        let Some(p) = self.rows.remove(&pos) else { return Ok(None) };
+        self.bytes -= p.bytes();
+        self.codec_rows[p.codec().index()] -= 1;
+        Ok(Some(p))
     }
 
     fn discard(&mut self, pos: usize) -> Result<bool> {
-        let Some(qr) = self.rows.remove(&pos) else { return Ok(false) };
-        self.bytes -= qr.bytes();
+        let Some(p) = self.rows.remove(&pos) else { return Ok(false) };
+        self.bytes -= p.bytes();
+        self.codec_rows[p.codec().index()] -= 1;
         Ok(true)
     }
 
@@ -89,9 +112,11 @@ mod tests {
         assert_eq!(t.rows(), 1);
         assert_eq!(t.bytes(), 16 + quant::ROW_HEADER_BYTES);
         assert!(t.bytes() < 16 * 4, "cold tier must be smaller than f32");
+        assert_eq!(t.codec_rows()[CodecId::U8.index()], 1);
         let back = t.take(5).unwrap().unwrap().into_raw();
         assert_eq!(back.len(), 16);
         assert_eq!(t.bytes(), 0);
+        assert_eq!(t.codec_rows()[CodecId::U8.index()], 0);
     }
 
     #[test]
@@ -101,8 +126,24 @@ mod tests {
         t.stash(0, RowPayload::Quant(qr.clone())).unwrap();
         match t.take(0).unwrap().unwrap() {
             RowPayload::Quant(back) => assert_eq!(back, qr),
-            RowPayload::Raw(_) => panic!("cold tier must keep the quantized record"),
+            other => panic!("cold tier must keep the quantized record, got {:?}", other.codec()),
         }
+    }
+
+    #[test]
+    fn sub_byte_payload_moves_verbatim() {
+        let mut t = ColdTier::new(64);
+        let row: Vec<f32> = (0..64).map(|i| (i as f32 * 0.3).cos()).collect();
+        let pr = quant::pack_u4(&row);
+        let expect_bytes = pr.bytes();
+        t.stash(9, RowPayload::Packed(pr)).unwrap();
+        assert_eq!(t.bytes(), expect_bytes);
+        assert_eq!(t.codec_rows()[CodecId::U4.index()], 1);
+        match t.take(9).unwrap().unwrap() {
+            RowPayload::Packed(back) => assert_eq!(back.bytes(), expect_bytes),
+            other => panic!("cold tier must keep the u4 record, got {:?}", other.codec()),
+        }
+        assert_eq!(t.bytes(), 0);
     }
 
     #[test]

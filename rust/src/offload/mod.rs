@@ -15,9 +15,9 @@
 //!               ┌───────────────────┼──────────────────────┐
 //!               ▼                   ▼                      ▼
 //!          HOT tier            COLD tier              SPILL tier
-//!      uncompressed f32     u8-quantized rows      file-backed cold
-//!      block-pooled rows    (~4x smaller, per-     records (very long
-//!      (byte budget)        row scale; budget)     contexts; optional)
+//!      uncompressed f32     codec-encoded rows     file-backed codec
+//!      block-pooled rows    (u8 / u4 / ebq by      records (very long
+//!      (byte budget)        thaw eta; budget)      contexts; optional)
 //!               ▲                   │                      │
 //!               └── stage() / stage_upcoming() ◄───────────┘
 //!                   prefetch-ahead: dequantize BETWEEN decode
@@ -26,9 +26,11 @@
 //!
 //! * **Admission/demotion** is driven by the freeze ladder's predicted
 //!   thaw step (`Plan::freeze_thaw_eta`): rows predicted back within
-//!   `OffloadConfig::cold_after_steps` stay hot, the rest are
-//!   quantized at stash time. `on_step` re-applies the rule so stale
-//!   prefetches drain back to cold.
+//!   `OffloadConfig::cold_after_steps` stay hot, the rest are encoded
+//!   at stash time with the [`codec::CodecLadder`] rung picked from
+//!   the predicted thaw distance (`--codec-ladder`, default u8-only).
+//!   `on_step` re-applies the rule so stale prefetches drain back to
+//!   cold.
 //! * **Prefetch-ahead** (`stage`, `stage_upcoming`) is fed by two
 //!   signals: the policy's imminent-thaw hints (`Plan::prefetch`) and
 //!   the `recovery::EntropyMonitor` trending toward a trigger
@@ -65,6 +67,7 @@
 //! of frozen rows; ARKV (arXiv 2603.08727) for pluggable storage
 //! backends under a fixed budget.
 
+pub mod codec;
 pub mod cold;
 pub mod fault;
 pub mod hot;
@@ -75,10 +78,14 @@ pub mod spill;
 pub mod store;
 pub mod tier;
 
+pub use codec::{Codec, CodecId, CodecLadder, CodecSet};
 pub use cold::ColdTier;
 pub use fault::{FaultInjector, FaultSite, RetryOp, RetryOutcome, RetryPolicy};
 pub use hot::HotTier;
-pub use quant::{dequantize, dequantize_into, quantize, QuantRow};
+pub use quant::{
+    decode_ebq, decode_ebq_into, dequantize, dequantize_into, encode_ebq, pack_u4, quantize,
+    unpack_u4, unpack_u4_into, BoundedRow, PackedRow, QuantRow,
+};
 pub use sched::{SchedClass, ThawScheduler};
 pub use sharded::{ShardedStore, MAX_SHARDS};
 pub use spill::{record_bytes_for, record_path, SpillFile, SpillManifest, SpillTier};
@@ -160,6 +167,17 @@ pub struct OffloadSummary {
     /// lost in the typed per-position loss set, never served as
     /// wrong bytes
     pub rows_lost: u64,
+    /// cumulative mean payload bytes per row admitted to each tier —
+    /// the codec ladder's compression win shows up as cold/spill
+    /// bytes/row dropping below the u8 baseline (`8 + row_floats`)
+    pub bytes_per_row_hot: u64,
+    pub bytes_per_row_cold: u64,
+    pub bytes_per_row_spill: u64,
+    /// resident rows currently held in a sub-byte encoding (u4 + ebq)
+    pub codec_rows_sub_byte: u64,
+    /// mean ladder encode / decode kernel time across codec rungs
+    pub codec_encode_mean_us: u64,
+    pub codec_decode_mean_us: u64,
 }
 
 impl OffloadSummary {
@@ -172,6 +190,28 @@ impl OffloadSummary {
     pub fn from_snapshot(s: &Snapshot) -> OffloadSummary {
         let tier_gauge = |name: &str, tier: &str| s.gauge_sum(name, &[("tier", tier)]) as usize;
         let restore = |tier: &str| s.hist("asrkf_restore_us", &[("tier", tier)]);
+        let bytes_per_row = |tier: &str| {
+            let rows = s.counter_sum("asrkf_tier_rows_stored_total", &[("tier", tier)]);
+            if rows == 0 {
+                0
+            } else {
+                s.counter_sum("asrkf_tier_row_bytes_total", &[("tier", tier)]) / rows
+            }
+        };
+        let codec_mean = |name: &str| {
+            let (mut count, mut sum) = (0u64, 0.0f64);
+            for id in CodecId::ALL {
+                if let Some(h) = s.hist(name, &[("codec", id.as_str())]) {
+                    count += h.count;
+                    sum += h.sum;
+                }
+            }
+            if count == 0 {
+                0
+            } else {
+                (sum / count as f64) as u64
+            }
+        };
         let occupancy = TierOccupancy {
             hot_rows: tier_gauge("asrkf_tier_rows", "hot"),
             hot_bytes: tier_gauge("asrkf_tier_bytes", "hot"),
@@ -226,6 +266,13 @@ impl OffloadSummary {
             io_retries: s.counter_sum("asrkf_io_retries_total", &[]),
             shard_rebuilds: s.counter_sum("asrkf_shard_rebuilds_total", &[]),
             rows_lost: s.counter_sum("asrkf_rows_lost_total", &[]),
+            bytes_per_row_hot: bytes_per_row("hot"),
+            bytes_per_row_cold: bytes_per_row("cold"),
+            bytes_per_row_spill: bytes_per_row("spill"),
+            codec_rows_sub_byte: s.gauge_sum("asrkf_codec_rows", &[("codec", "u4")]) as u64
+                + s.gauge_sum("asrkf_codec_rows", &[("codec", "ebq")]) as u64,
+            codec_encode_mean_us: codec_mean("asrkf_codec_encode_us"),
+            codec_decode_mean_us: codec_mean("asrkf_codec_decode_us"),
         }
     }
 

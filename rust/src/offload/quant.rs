@@ -1,15 +1,27 @@
-//! Cold-tier row compression: affine u8-per-float quantization with a
-//! per-row (min, scale) header.
+//! Cold-tier row compression kernels: the per-codec encode/decode hot
+//! loops behind `offload::codec`.
 //!
 //! Frozen rows tolerate lossy storage (KVComp, arXiv 2509.00579): a
 //! frozen row is excluded from attention until restored, and the
 //! restore error is bounded by half a quantization step of the row's
-//! own value range. With 255 levels that is `range / 510` — the bound
-//! documented in `OffloadConfig::cold_quant_rel_error` and verified by
-//! `tests/prop_offload.rs`.
+//! own value range. Three lossy representations live here, all built
+//! on the same fixed-width chunked loops so they auto-vectorize:
 //!
-//! Encoding: `x ≈ min + q * scale`, `q ∈ [0, 255]`,
-//! `scale = (max - min) / 255` (0 for constant rows).
+//! * [`QuantRow`] — per-row affine u8 (`x ≈ min + q * scale`,
+//!   `q ∈ [0, 255]`, `scale = (max - min) / 255`; 0 for constant
+//!   rows). Worst case `range / 510`, the bound documented in
+//!   `OffloadConfig::cold_quant_rel_error` and verified by
+//!   `tests/prop_offload.rs`.
+//! * [`PackedRow`] — per-block affine u4, two codes per byte over
+//!   [`U4_BLOCK`]-float blocks with per-block (min, scale). Worst case
+//!   half a 15-level step of the *block* range, ≤ `range / 30` of the
+//!   row range.
+//! * [`BoundedRow`] — error-bounded variable-rate blocks: each
+//!   [`EBQ_BLOCK`]-float block independently picks the narrowest code
+//!   width in {0, 2, 4, 8} bits that keeps its half-step error within
+//!   an absolute target derived from the row range
+//!   (`OffloadConfig::ebq_rel_error`). Near-constant blocks collapse
+//!   to the 9-byte header alone.
 
 /// One quantized row: `row_floats` u8 codes + per-row affine header.
 #[derive(Debug, Clone, PartialEq)]
@@ -132,6 +144,279 @@ pub fn dequantize(qr: &QuantRow) -> Vec<f32> {
     out
 }
 
+/// Finite-only (min, max) reduction over one block, 8-lane chunked
+/// like [`quantize`]'s row pass. Returns `(0.0, 0.0)` for an
+/// all-non-finite block.
+#[inline]
+fn block_min_max(block: &[f32]) -> (f32, f32) {
+    let mut lane_min = [f32::INFINITY; LANES];
+    let mut lane_max = [f32::NEG_INFINITY; LANES];
+    let mut chunks = block.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        for j in 0..LANES {
+            let x = ch[j];
+            let finite = x.is_finite();
+            lane_min[j] = lane_min[j].min(if finite { x } else { f32::INFINITY });
+            lane_max[j] = lane_max[j].max(if finite { x } else { f32::NEG_INFINITY });
+        }
+    }
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for j in 0..LANES {
+        min = min.min(lane_min[j]);
+        max = max.max(lane_max[j]);
+    }
+    for &x in chunks.remainder() {
+        if x.is_finite() {
+            min = min.min(x);
+            max = max.max(x);
+        }
+    }
+    if !min.is_finite() {
+        (0.0, 0.0)
+    } else {
+        (min, max)
+    }
+}
+
+/// Ceiling division (the crate's 1.70 MSRV predates `usize::div_ceil`).
+#[inline]
+pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+// --- u4 block quantization -------------------------------------------
+
+/// Block width (floats) of the u4 codec: per-block affine params over
+/// 32 values amortize the 8-byte header to 2 bits/value.
+pub const U4_BLOCK: usize = 32;
+
+/// Per-block header bytes of the u4 codec (min + scale as f32).
+pub const U4_BLOCK_HEADER_BYTES: usize = 8;
+
+/// One u4 block-quantized row: nibble codes packed two per byte (low
+/// nibble first, row-continuous) plus per-block affine headers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedRow {
+    /// `ceil(floats / 2)` bytes of packed 4-bit codes.
+    pub q: Vec<u8>,
+    /// Per-[`U4_BLOCK`] `(min, scale)` affine params.
+    pub blocks: Vec<(f32, f32)>,
+    /// Row width in floats (not recoverable from `q.len()` when odd).
+    pub floats: usize,
+}
+
+impl PackedRow {
+    /// Bytes this row occupies (packed codes + block headers) — also
+    /// its exact on-disk payload size in the spill record body.
+    pub fn bytes(&self) -> usize {
+        self.q.len() + self.blocks.len() * U4_BLOCK_HEADER_BYTES
+    }
+
+    /// Worst-case absolute reconstruction error for this row: half a
+    /// 15-level step of the widest block, plus f32 headroom.
+    pub fn error_bound(&self) -> f32 {
+        let mut bound = 0.0f32;
+        for &(min, scale) in &self.blocks {
+            let b = 0.5 * scale + (min.abs() + 15.0 * scale) * f32::EPSILON * 4.0;
+            bound = bound.max(b);
+        }
+        bound
+    }
+}
+
+/// Quantize a row into [`U4_BLOCK`]-float blocks of 4-bit codes.
+/// Non-finite inputs clamp into the block's finite range (NaN encodes
+/// as the block minimum), matching [`quantize`].
+#[inline]
+pub fn pack_u4(row: &[f32]) -> PackedRow {
+    let mut blocks = Vec::with_capacity(ceil_div(row.len(), U4_BLOCK));
+    let mut q = vec![0u8; ceil_div(row.len(), 2)];
+    let mut codes = [0u8; U4_BLOCK];
+    for (bi, block) in row.chunks(U4_BLOCK).enumerate() {
+        let (min, max) = block_min_max(block);
+        let scale = if max > min { (max - min) / 15.0 } else { 0.0 };
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        for (j, &x) in block.iter().enumerate() {
+            let x = if x.is_finite() { x.clamp(min, max) } else { min };
+            codes[j] = ((x - min) * inv).round().clamp(0.0, 15.0) as u8;
+        }
+        // row-continuous nibble packing: code i -> q[i / 2], low
+        // nibble for even i (a block boundary can split a byte)
+        let base = bi * U4_BLOCK;
+        for (j, &c) in codes[..block.len()].iter().enumerate() {
+            let i = base + j;
+            q[i / 2] |= c << ((i & 1) * 4);
+        }
+        blocks.push((min, scale));
+    }
+    PackedRow { q, blocks, floats: row.len() }
+}
+
+/// Reconstruct a u4 row into a caller-provided buffer (len must match).
+#[inline]
+pub fn unpack_u4_into(pr: &PackedRow, dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), pr.floats);
+    for (bi, block) in dst.chunks_mut(U4_BLOCK).enumerate() {
+        let (min, scale) = pr.blocks[bi];
+        let base = bi * U4_BLOCK;
+        for (j, d) in block.iter_mut().enumerate() {
+            let i = base + j;
+            let code = (pr.q[i / 2] >> ((i & 1) * 4)) & 0x0f;
+            *d = min + code as f32 * scale;
+        }
+    }
+}
+
+/// Reconstruct a u4 row as a fresh vec.
+#[inline]
+pub fn unpack_u4(pr: &PackedRow) -> Vec<f32> {
+    let mut out = vec![0.0f32; pr.floats];
+    unpack_u4_into(pr, &mut out);
+    out
+}
+
+// --- error-bounded variable-rate quantization ------------------------
+
+/// Block width (floats) of the error-bounded codec.
+pub const EBQ_BLOCK: usize = 32;
+
+/// Per-block header bytes of the error-bounded codec (min + scale as
+/// f32, plus the code width byte).
+pub const EBQ_BLOCK_HEADER_BYTES: usize = 9;
+
+/// One error-bounded block: affine params plus the code width this
+/// block needed to stay within the row's error target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EbqBlock {
+    pub min: f32,
+    /// Affine step for `bits > 0`; the full block range for
+    /// `bits == 0` (midpoint reconstruction).
+    pub scale: f32,
+    /// Code width in bits: 0, 2, 4 or 8.
+    pub bits: u8,
+}
+
+/// One error-bounded row: per-block variable-width codes, each block
+/// byte-aligned in `q`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoundedRow {
+    pub blocks: Vec<EbqBlock>,
+    /// Concatenated per-block code bytes
+    /// (`ceil(block_len * bits / 8)` each, LSB-first within a byte).
+    pub q: Vec<u8>,
+    /// Row width in floats.
+    pub floats: usize,
+    /// Worst-case absolute reconstruction error actually guaranteed by
+    /// the chosen per-block widths (≤ the encode-time target whenever
+    /// the target was achievable).
+    pub bound: f32,
+}
+
+/// Half-step error of encoding a `range`-wide block at `bits` width.
+#[inline]
+fn ebq_half_step(range: f32, bits: u8) -> f32 {
+    match bits {
+        0 => 0.5 * range, // midpoint reconstruction
+        b => 0.5 * range / ((1u32 << b) - 1) as f32,
+    }
+}
+
+impl BoundedRow {
+    /// Bytes this row occupies (code bytes + block headers) — also its
+    /// exact on-disk payload size in the spill record body.
+    pub fn bytes(&self) -> usize {
+        self.q.len() + self.blocks.len() * EBQ_BLOCK_HEADER_BYTES
+    }
+
+    /// Worst-case absolute reconstruction error for this row.
+    pub fn error_bound(&self) -> f32 {
+        self.bound
+    }
+}
+
+/// Encode a row with per-block code widths chosen to keep each block's
+/// half-step error within `rel_target` of the *row* value range. With
+/// the default target (`OffloadConfig::ebq_rel_error`, 2% of range)
+/// smooth blocks collapse to 2-bit codes or to the bare header, while
+/// an 8-bit block (error ≤ range/510) always satisfies any target the
+/// CLI accepts. Non-finite inputs clamp like [`quantize`].
+#[inline]
+pub fn encode_ebq(row: &[f32], rel_target: f32) -> BoundedRow {
+    let (row_min, row_max) = block_min_max(row);
+    let target = rel_target.max(0.0) * (row_max - row_min);
+    let mut blocks = Vec::with_capacity(ceil_div(row.len(), EBQ_BLOCK));
+    let mut q = Vec::with_capacity(row.len() / 4);
+    let mut bound = 0.0f32;
+    let mut codes = [0u8; EBQ_BLOCK];
+    for block in row.chunks(EBQ_BLOCK) {
+        let (min, max) = block_min_max(block);
+        let range = max - min;
+        let bits = *[0u8, 2, 4, 8]
+            .iter()
+            .find(|&&b| ebq_half_step(range, b) <= target)
+            .unwrap_or(&8);
+        let half = ebq_half_step(range, bits);
+        bound = bound.max(half + (min.abs() + range) * f32::EPSILON * 4.0);
+        if bits == 0 {
+            // header-only block: reconstructs to the midpoint
+            blocks.push(EbqBlock { min, scale: range, bits });
+            continue;
+        }
+        let levels = ((1u32 << bits) - 1) as f32;
+        let scale = if range > 0.0 { range / levels } else { 0.0 };
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        for (j, &x) in block.iter().enumerate() {
+            let x = if x.is_finite() { x.clamp(min, max) } else { min };
+            codes[j] = ((x - min) * inv).round().clamp(0.0, levels) as u8;
+        }
+        // byte-aligned per block, LSB-first within each byte
+        let per_byte = 8 / bits as usize;
+        for chunk in codes[..block.len()].chunks(per_byte) {
+            let mut byte = 0u8;
+            for (k, &c) in chunk.iter().enumerate() {
+                byte |= c << (k * bits as usize);
+            }
+            q.push(byte);
+        }
+        blocks.push(EbqBlock { min, scale, bits });
+    }
+    BoundedRow { blocks, q, floats: row.len(), bound }
+}
+
+/// Reconstruct an error-bounded row into a caller-provided buffer.
+#[inline]
+pub fn decode_ebq_into(br: &BoundedRow, dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), br.floats);
+    let mut off = 0usize;
+    for (bi, block) in dst.chunks_mut(EBQ_BLOCK).enumerate() {
+        let EbqBlock { min, scale, bits } = br.blocks[bi];
+        if bits == 0 {
+            let mid = min + 0.5 * scale;
+            for d in block.iter_mut() {
+                *d = mid;
+            }
+            continue;
+        }
+        let per_byte = 8 / bits as usize;
+        let mask = ((1u32 << bits) - 1) as u8;
+        for (j, d) in block.iter_mut().enumerate() {
+            let byte = br.q[off + j / per_byte];
+            let code = (byte >> ((j % per_byte) * bits as usize)) & mask;
+            *d = min + code as f32 * scale;
+        }
+        off += ceil_div(block.len(), per_byte);
+    }
+}
+
+/// Reconstruct an error-bounded row as a fresh vec.
+#[inline]
+pub fn decode_ebq(br: &BoundedRow) -> Vec<f32> {
+    let mut out = vec![0.0f32; br.floats];
+    decode_ebq_into(br, &mut out);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +463,78 @@ mod tests {
         assert!(back.iter().all(|v| v.is_finite()));
         assert!((back[0] - 1.0).abs() <= qr.error_bound());
         assert!((back[2] - 3.0).abs() <= qr.error_bound());
+    }
+
+    fn wavy(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37).sin() * 3.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn u4_roundtrip_within_bound_and_bytes_exact() {
+        for n in [1usize, 2, 15, 32, 33, 64, 97] {
+            let row = wavy(n);
+            let pr = pack_u4(&row);
+            assert_eq!(pr.bytes(), ceil_div(n, 2) + ceil_div(n, U4_BLOCK) * U4_BLOCK_HEADER_BYTES);
+            let back = unpack_u4(&pr);
+            let bound = pr.error_bound();
+            for (a, b) in row.iter().zip(&back) {
+                assert!((a - b).abs() <= bound, "n={n}: {a} vs {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn u4_constant_block_is_exact_and_odd_tail_packs() {
+        let mut row = vec![2.5f32; 32];
+        row.push(7.0); // odd length: high nibble of the last byte
+        let pr = pack_u4(&row);
+        let back = unpack_u4(&pr);
+        assert_eq!(&back[..32], &row[..32]);
+        assert_eq!(back[32], 7.0);
+    }
+
+    #[test]
+    fn ebq_roundtrip_within_declared_bound() {
+        for n in [1usize, 31, 32, 64, 100] {
+            for target in [0.5f32, 0.05, 0.02, 0.001] {
+                let row = wavy(n);
+                let br = encode_ebq(&row, target);
+                assert_eq!(
+                    br.bytes(),
+                    br.q.len() + br.blocks.len() * EBQ_BLOCK_HEADER_BYTES
+                );
+                let back = decode_ebq(&br);
+                for (a, b) in row.iter().zip(&back) {
+                    assert!(
+                        (a - b).abs() <= br.bound,
+                        "n={n} target={target}: {a} vs {b} (bound {})",
+                        br.bound
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ebq_spends_fewer_bits_on_looser_targets() {
+        let row = wavy(256);
+        let loose = encode_ebq(&row, 0.1);
+        let tight = encode_ebq(&row, 0.001);
+        assert!(loose.bytes() < tight.bytes(), "{} vs {}", loose.bytes(), tight.bytes());
+        // a constant row costs headers only
+        let flat = encode_ebq(&vec![1.5f32; 64], 0.02);
+        assert!(flat.q.is_empty());
+        assert_eq!(decode_ebq(&flat), vec![1.5f32; 64]);
+    }
+
+    #[test]
+    fn ebq_non_finite_inputs_stay_finite() {
+        let mut row = wavy(40);
+        row[3] = f32::NAN;
+        row[17] = f32::NEG_INFINITY;
+        let br = encode_ebq(&row, 0.02);
+        assert!(decode_ebq(&br).iter().all(|v| v.is_finite()));
+        let pr = pack_u4(&row);
+        assert!(unpack_u4(&pr).iter().all(|v| v.is_finite()));
     }
 }

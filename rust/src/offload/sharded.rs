@@ -40,6 +40,11 @@
 //!   bursts the facade answers every query without synchronization.
 //!   `on_step`, `stage_upcoming`, and budget eviction (inside each
 //!   shard's `stash`/`on_step`) fan out the same way.
+//! * **Codecs**: each shard runs the same `offload::codec` ladder
+//!   (config is cloned per slice), so codec-tagged payloads and the
+//!   per-rung `asrkf_codec_rows` gauges aggregate cleanly across
+//!   shards — a row's rung is decided by its own thaw distance, never
+//!   by which shard holds it.
 //! * **Telemetry**: shards engaged per restore burst
 //!   ([`ShardedStore::restore_parallelism`]), a burst-imbalance
 //!   counter, and per-shard occupancy gauges, all surfaced through

@@ -1,5 +1,5 @@
-//! File-backed spill tier: fixed-record storage for quantized rows that
-//! overflow the cold tier's byte budget on very long contexts.
+//! File-backed spill tier: fixed-slot storage for codec-encoded rows
+//! that overflow the cold tier's byte budget on very long contexts.
 //!
 //! Two lifetimes, one record format:
 //!
@@ -14,18 +14,48 @@
 //!   are tombstoned on disk so a crash never resurrects a row that was
 //!   already restored or dropped.
 //!
-//! Records are fixed-size ([`REC_HEADER_BYTES`] + quant header +
-//! `row_floats` code bytes) at `slot * record_bytes` offsets, with a
-//! free list so released slots are reused and a contiguous free tail
-//! truncates the file (disk usage is not a permanent high-water mark).
-//! Every record carries a magic marker, the writer's generation, its
-//! sequence position, and an FNV-1a checksum covering both the header
-//! identity and the payload — reads verify all four, so a poisoned
-//! record (including a corrupted position field) surfaces
-//! `Error::Offload` instead of bad floats. I/O errors leave the in-memory bookkeeping
-//! untouched (the failed record stays reachable for a retry) and
-//! surface through `TieredStore`'s fallible API — the engine fails the
-//! affected session rather than corrupting it.
+//! # Record format (v2, "KVR2")
+//!
+//! Slots are fixed-size — [`REC_HEADER_BYTES`] plus the worst-case
+//! encoded payload across the spillable codec rungs
+//! ([`codec::max_spill_payload_bytes`]) — at `slot * record_bytes`
+//! offsets, with a free list so released slots are reused and a
+//! contiguous free tail truncates the file (disk usage is not a
+//! permanent high-water mark). The header is:
+//!
+//! | offset | bytes | field |
+//! |-------:|------:|-------|
+//! | 0      | 4     | magic (`"KVR2"` live, `"KVFR"` tombstone) |
+//! | 4      | 8     | writer generation (u64 LE) |
+//! | 12     | 8     | sequence position (u64 LE) |
+//! | 20     | 8     | FNV-1a 64 checksum (u64 LE) |
+//! | 28     | 1     | codec byte ([`CodecId::as_byte`]) |
+//! | 29     | 4     | payload length (u32 LE) |
+//! | 33     | 3     | zero padding |
+//!
+//! The payload ([`codec::payload_to_bytes`]) follows at offset 36; the
+//! slot's slack is zero-filled. The checksum covers the whole record
+//! with only the checksum field itself excluded (`rec[..20]` +
+//! `rec[28..]`), so a bit flip anywhere — the position field, the
+//! codec byte, the length, the payload — fails verification instead of
+//! silently serving another position's (or another precision's) data.
+//! I/O errors leave the in-memory bookkeeping untouched (the failed
+//! record stays reachable for a retry) and surface through
+//! `TieredStore`'s fallible API — the engine fails the affected
+//! session rather than corrupting it.
+//!
+//! # v1 compatibility
+//!
+//! Pre-ladder directories hold `"KVR1"` records: a 28-byte header (no
+//! codec byte, no length) followed by one u8-quantized payload of
+//! exactly `ROW_HEADER_BYTES + row_floats` bytes. Opening such a shard
+//! file migrates it in place — every checksum-valid v1 record is
+//! rewritten as a v2 record with the u8 codec byte and its original
+//! generation stamp (so generation fencing still applies), tombstones
+//! stay tombstones, and corrupt v1 records are reclaimed and counted
+//! in `recovery_errors` exactly like corrupt v2 records. A v1 manifest
+//! (version < 2.0) is accepted if its identity matches and upgraded on
+//! attach.
 //!
 //! On-disk format and recovery semantics are documented in this
 //! module's `README.md` (section "Persistent spill").
@@ -40,6 +70,7 @@ use std::time::Instant;
 use crate::config::ShardPartition;
 use crate::error::{Error, Result};
 use crate::metrics::{Histogram, TierKind, TierOccupancy};
+use crate::offload::codec::{self, CodecId};
 use crate::offload::fault::{FaultInjector, FaultSite, RetryOp, RetryPolicy};
 use crate::offload::quant::{QuantRow, ROW_HEADER_BYTES};
 use crate::offload::tier::{RowPayload, Tier};
@@ -47,24 +78,37 @@ use crate::util::json::{parse, write_json, Json};
 
 static NEXT_FILE_ID: AtomicU64 = AtomicU64::new(0);
 
-/// Per-record header: magic (u32) + writer generation (u64) + sequence
-/// position (u64) + FNV-1a checksum (u64) over the rest of the record
-/// (header identity + payload, checksum field excluded).
-pub const REC_HEADER_BYTES: usize = 28;
+/// v2 record header: magic (u32) + writer generation (u64) + sequence
+/// position (u64) + FNV-1a checksum (u64) + codec byte + payload
+/// length (u32) + 3 bytes zero padding.
+pub const REC_HEADER_BYTES: usize = 36;
 
-/// Marker of a live record ("KVR1").
-const REC_MAGIC_LIVE: u32 = 0x3152_564B;
-/// Tombstone marker of a released slot ("KVFR").
+/// v1 (pre-codec-ladder) record header: magic + generation + position
+/// + checksum, directly followed by one u8-quantized payload.
+pub const REC_V1_HEADER_BYTES: usize = 28;
+
+/// Marker of a live v2 record ("KVR2").
+const REC_MAGIC_LIVE: u32 = 0x3252_564B;
+/// Marker of a live v1 record ("KVR1"); accepted by migration only.
+const REC_MAGIC_LIVE_V1: u32 = 0x3152_564B;
+/// Tombstone marker of a released slot ("KVFR"; shared by v1 and v2).
 const REC_MAGIC_FREE: u32 = 0x5246_564B;
 
 /// Manifest file name inside a persistent spill directory.
 pub const MANIFEST_FILE: &str = "spill-manifest.json";
 const MANIFEST_MAGIC: &str = "asrkf-spill";
-const MANIFEST_VERSION: f64 = 1.0;
+const MANIFEST_VERSION: f64 = 2.0;
 
-/// Total on-disk bytes of one record for `row_floats`-wide rows.
+/// Total on-disk bytes of one v2 record for `row_floats`-wide rows:
+/// the fixed slot fits the worst-case payload of every spillable
+/// codec rung, so a slot can be reused across rungs without resizing.
 pub fn record_bytes_for(row_floats: usize) -> usize {
-    REC_HEADER_BYTES + ROW_HEADER_BYTES + row_floats
+    REC_HEADER_BYTES + codec::max_spill_payload_bytes(row_floats)
+}
+
+/// Total on-disk bytes of one legacy v1 record (u8 payload only).
+pub fn record_bytes_v1_for(row_floats: usize) -> usize {
+    REC_V1_HEADER_BYTES + ROW_HEADER_BYTES + row_floats
 }
 
 /// Deterministic record file path for `shard` in persistent mode.
@@ -85,12 +129,14 @@ fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
     h
 }
 
-/// FNV-1a 64 over the whole record with the checksum field excluded:
-/// the header identity (magic, generation, position) is covered along
-/// with the payload, so a bit flip in the position field fails the
-/// checksum instead of silently serving another position's data.
+/// FNV-1a 64 over the whole record with the checksum field (bytes
+/// 20..28) excluded: the header identity (magic, generation, position)
+/// is covered along with the codec byte, payload length, payload, and
+/// slack, so a bit flip in any of them fails the checksum instead of
+/// silently serving wrong data. The same boundary holds for v1 records
+/// (their header simply ends where the payload begins).
 fn record_checksum(rec: &[u8]) -> u64 {
-    fnv1a64_update(fnv1a64_update(FNV_OFFSET, &rec[..20]), &rec[REC_HEADER_BYTES..])
+    fnv1a64_update(fnv1a64_update(FNV_OFFSET, &rec[..20]), &rec[28..])
 }
 
 /// The per-directory manifest of a persistent spill store: identity
@@ -114,7 +160,9 @@ impl SpillManifest {
     /// Attach to (or initialize) `dir` for a store of this shape.
     /// Identity mismatches (different row width, shard count, or
     /// partition than the directory was written with) are hard errors:
-    /// the records would be unreadable or mis-routed.
+    /// the records would be unreadable or mis-routed. A version-1
+    /// manifest is validated against the v1 record size and upgraded
+    /// to version 2 (the shard files migrate at open).
     ///
     /// Concurrency contract: **one live writer per directory at a
     /// time**. The generation fence protects against a *dead*
@@ -152,7 +200,13 @@ impl SpillManifest {
                 }
             };
             check("row_floats", row_floats)?;
-            check("record_bytes", record_bytes_for(row_floats))?;
+            let version = v.get("version").as_f64().unwrap_or(MANIFEST_VERSION);
+            let want_rb = if version < 2.0 {
+                record_bytes_v1_for(row_floats)
+            } else {
+                record_bytes_for(row_floats)
+            };
+            check("record_bytes", want_rb)?;
             check("shards", shards)?;
             match v.get("partition").as_str() {
                 Some(p) if p == partition.as_str() => {}
@@ -163,6 +217,12 @@ impl SpillManifest {
                         partition.as_str()
                     )))
                 }
+            }
+            if version < 2.0 {
+                log::info!(
+                    "spill dir {dir}: upgrading v{version} manifest to v{MANIFEST_VERSION} \
+                     (record files migrate at open)"
+                );
             }
             generation = v.get("generation").as_f64().unwrap_or(0.0) as u64 + 1;
         }
@@ -231,7 +291,7 @@ pub struct SpillFile {
     persist: bool,
     /// live records found by the open-time scan, awaiting
     /// `take_recovered` (resume) or `reclaim_recovered` (fresh attach)
-    recovered: Vec<(usize, u32)>,
+    recovered: Vec<(usize, u32, CodecId)>,
     /// records the scan rejected (bad magic/checksum, fenced
     /// generation, duplicate position, torn tail)
     pub recovery_errors: u64,
@@ -291,12 +351,13 @@ impl SpillFile {
     }
 
     /// Open (or initialize) the persistent record file for `shard`,
-    /// scanning existing records to rebuild the slot allocation, the
-    /// free list, and the recoverable `(pos, slot)` set. `generation`
-    /// is the manifest's freshly-claimed generation: records from
-    /// generations `1..generation` are recoverable; anything claiming
-    /// `generation` or beyond was written by a fenced-off concurrent
-    /// writer and is reclaimed, not re-served.
+    /// migrating a pre-ladder v1 file in place if needed, then
+    /// scanning to rebuild the slot allocation, the free list, and the
+    /// recoverable `(pos, slot, codec)` set. `generation` is the
+    /// manifest's freshly-claimed generation: records from generations
+    /// `1..generation` are recoverable; anything claiming `generation`
+    /// or beyond was written by a fenced-off concurrent writer and is
+    /// reclaimed, not re-served.
     pub fn open_or_create(
         dir: &str,
         row_floats: usize,
@@ -309,16 +370,85 @@ impl SpillFile {
         let mut s = SpillFile::empty(file, path, row_floats);
         s.generation = generation;
         s.persist = true;
+        s.migrate_v1()?;
         s.scan()?;
         s.compact_tail()?;
         Ok(s)
     }
 
+    /// Rewrite a pre-ladder v1 record file in the v2 layout. A file is
+    /// migrated only when it is *fully* v1-consistent: its length is a
+    /// multiple of the v1 record size and every slot opens with a
+    /// v1-era magic — a v2 file fails that probe at slot 0 (different
+    /// live magic, different stride) and is left untouched for the
+    /// regular scan. Checksum-valid live records are re-emitted with
+    /// the u8 codec byte and their original generation stamp (fencing
+    /// still applies at scan); corrupt ones are tombstoned and counted
+    /// as recovery errors.
+    fn migrate_v1(&mut self) -> Result<()> {
+        let len = self.file.metadata()?.len() as usize;
+        let v1_rb = record_bytes_v1_for(self.row_floats);
+        if len == 0 || len % v1_rb != 0 {
+            return Ok(());
+        }
+        let nrec = len / v1_rb;
+        let mut old = vec![0u8; len];
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.read_exact(&mut old)?;
+        let magic_at = |i: usize| {
+            u32::from_le_bytes(old[i * v1_rb..i * v1_rb + 4].try_into().unwrap())
+        };
+        if !(0..nrec).all(|i| matches!(magic_at(i), REC_MAGIC_LIVE_V1 | REC_MAGIC_FREE)) {
+            return Ok(());
+        }
+        let mut new = Vec::with_capacity(nrec * self.record_bytes);
+        let mut migrated = 0u64;
+        for i in 0..nrec {
+            let rec = &old[i * v1_rb..(i + 1) * v1_rb];
+            let mut out = vec![0u8; self.record_bytes];
+            if magic_at(i) == REC_MAGIC_FREE {
+                out[0..4].copy_from_slice(&REC_MAGIC_FREE.to_le_bytes());
+                new.extend_from_slice(&out);
+                continue;
+            }
+            let sum = u64::from_le_bytes(rec[20..28].try_into().unwrap());
+            if sum != record_checksum(rec) {
+                // corrupt in its previous life: reclaim, don't carry
+                // bad bytes into the new format under a fresh checksum
+                self.recovery_errors += 1;
+                out[0..4].copy_from_slice(&REC_MAGIC_FREE.to_le_bytes());
+                new.extend_from_slice(&out);
+                continue;
+            }
+            let body = &rec[REC_V1_HEADER_BYTES..];
+            out[0..4].copy_from_slice(&REC_MAGIC_LIVE.to_le_bytes());
+            out[4..20].copy_from_slice(&rec[4..20]); // generation + position
+            out[28] = CodecId::U8.as_byte();
+            out[29..33].copy_from_slice(&(body.len() as u32).to_le_bytes());
+            out[REC_HEADER_BYTES..REC_HEADER_BYTES + body.len()].copy_from_slice(body);
+            let sum = record_checksum(&out);
+            out[20..28].copy_from_slice(&sum.to_le_bytes());
+            new.extend_from_slice(&out);
+            migrated += 1;
+        }
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.write_all(&new)?;
+        self.file.sync_all()?;
+        log::info!(
+            "spill file {}: migrated {migrated} v1 record(s) across {nrec} slot(s) to the v2 \
+             codec-tagged format",
+            self.path.display()
+        );
+        Ok(())
+    }
+
     /// Rebuild in-memory state from the on-disk records (persistent
     /// open). Each slot is classified exactly once: tombstone -> free,
     /// valid live record -> recoverable, anything else (bad magic,
-    /// fenced generation, checksum mismatch, duplicate position) ->
-    /// reclaimed (tombstoned + freed) and counted as a recovery error.
+    /// fenced generation, checksum mismatch, bad codec byte or payload
+    /// length, duplicate position) -> reclaimed (tombstoned + freed)
+    /// and counted as a recovery error.
     fn scan(&mut self) -> Result<()> {
         let len = self.file.metadata()?.len();
         let rb = self.record_bytes as u64;
@@ -329,9 +459,10 @@ impl SpillFile {
             self.file.set_len(nrec as u64 * rb)?;
         }
         self.next_slot = nrec;
-        let mut by_pos: HashMap<usize, (u32, u64)> = HashMap::new();
+        let mut by_pos: HashMap<usize, (u32, u64, CodecId)> = HashMap::new();
         let mut reclaim: Vec<u32> = Vec::new();
         let mut rec = vec![0u8; self.record_bytes];
+        let max_payload = self.record_bytes - REC_HEADER_BYTES;
         self.file.seek(SeekFrom::Start(0))?;
         for slot in 0..nrec {
             self.file.read_exact(&mut rec)?;
@@ -343,27 +474,31 @@ impl SpillFile {
             let gen = u64::from_le_bytes(rec[4..12].try_into().unwrap());
             let pos = u64::from_le_bytes(rec[12..20].try_into().unwrap()) as usize;
             let sum = u64::from_le_bytes(rec[20..28].try_into().unwrap());
+            let codec = CodecId::from_byte(rec[28]).filter(|&c| c != CodecId::Raw);
+            let plen = u32::from_le_bytes(rec[29..33].try_into().unwrap()) as usize;
             let valid = magic == REC_MAGIC_LIVE
                 && gen >= 1
                 && gen < self.generation
+                && codec.is_some()
+                && plen <= max_payload
                 && sum == record_checksum(&rec);
-            if !valid {
+            let Some(codec) = codec.filter(|_| valid) else {
                 self.recovery_errors += 1;
                 reclaim.push(slot);
                 continue;
-            }
+            };
             match by_pos.entry(pos) {
                 std::collections::hash_map::Entry::Vacant(v) => {
-                    v.insert((slot, gen));
+                    v.insert((slot, gen, codec));
                 }
                 std::collections::hash_map::Entry::Occupied(mut o) => {
                     // two generations claim the same position (a
                     // tombstone write lost in the crash): serve the
                     // newer copy, reclaim the other
                     self.recovery_errors += 1;
-                    let (old_slot, old_gen) = *o.get();
+                    let (old_slot, old_gen, _) = *o.get();
                     if gen > old_gen {
-                        o.insert((slot, gen));
+                        o.insert((slot, gen, codec));
                         reclaim.push(old_slot);
                     } else {
                         reclaim.push(slot);
@@ -375,7 +510,8 @@ impl SpillFile {
             self.tombstone(slot)?;
             self.free.insert(slot);
         }
-        self.recovered = by_pos.into_iter().map(|(pos, (slot, _))| (pos, slot)).collect();
+        self.recovered =
+            by_pos.into_iter().map(|(pos, (slot, _, codec))| (pos, slot, codec)).collect();
         self.recovered.sort_unstable();
         Ok(())
     }
@@ -389,9 +525,9 @@ impl SpillFile {
         self.record_bytes
     }
 
-    /// Drain the open-time scan's recovered `(pos, slot)` pairs
-    /// (resume path; sorted by position).
-    pub fn take_recovered(&mut self) -> Vec<(usize, u32)> {
+    /// Drain the open-time scan's recovered `(pos, slot, codec)`
+    /// triples (resume path; sorted by position).
+    pub fn take_recovered(&mut self) -> Vec<(usize, u32, CodecId)> {
         std::mem::take(&mut self.recovered)
     }
 
@@ -419,21 +555,39 @@ impl SpillFile {
         // (directly after open_or_create, before any write) the scan
         // invariant above always holds and this loop is unreachable
         debug_assert!(false, "reclaim_recovered called on a file with post-scan writes");
-        for (_pos, slot) in recovered {
+        for (_pos, slot, _codec) in recovered {
             self.release_slot(slot)?;
         }
         Ok(n)
     }
 
-    /// Write a quantized row for `pos`; returns the slot to read it
-    /// back from. On a write error the allocated slot returns to the
-    /// free list (no slot is leaked by a failed write).
+    /// Write a u8-quantized row for `pos` (legacy/direct path; the
+    /// tier spills arbitrary encoded payloads via `write_payload`).
     pub fn write_row(&mut self, pos: usize, qr: &QuantRow) -> Result<u32> {
-        if qr.q.len() != self.row_floats {
+        self.write_payload(pos, &RowPayload::Quant(qr.clone()))
+    }
+
+    /// Write an encoded payload for `pos`; returns the slot to read it
+    /// back from. Raw (f32) payloads are rejected — they exceed the
+    /// fixed slot, and the ladder never demotes raw rows to disk. On a
+    /// write error the allocated slot returns to the free list (no
+    /// slot is leaked by a failed write).
+    pub fn write_payload(&mut self, pos: usize, payload: &RowPayload) -> Result<u32> {
+        if payload.row_floats() != self.row_floats {
             return Err(Error::Offload(format!(
-                "spill row has {} codes, store expects {}",
-                qr.q.len(),
+                "spill row has {} floats, store expects {}",
+                payload.row_floats(),
                 self.row_floats
+            )));
+        }
+        let codec = payload.codec();
+        let body = codec::payload_to_bytes(payload);
+        if codec == CodecId::Raw || body.len() > self.record_bytes - REC_HEADER_BYTES {
+            return Err(Error::Offload(format!(
+                "spill of pos {pos}: {} payload of {} bytes does not fit the {}-byte slot body",
+                codec.as_str(),
+                body.len(),
+                self.record_bytes - REC_HEADER_BYTES
             )));
         }
         let slot = self.free.pop_first().unwrap_or_else(|| {
@@ -441,7 +595,7 @@ impl SpillFile {
             self.next_slot += 1;
             s
         });
-        match self.write_record(slot, pos, qr) {
+        match self.write_record(slot, pos, codec, &body) {
             Ok(()) => Ok(slot),
             Err(e) => {
                 // the slot holds no live record: stamp a tombstone over
@@ -458,16 +612,16 @@ impl SpillFile {
         }
     }
 
-    fn write_record(&mut self, slot: u32, pos: usize, qr: &QuantRow) -> Result<()> {
+    fn write_record(&mut self, slot: u32, pos: usize, codec: CodecId, body: &[u8]) -> Result<()> {
         self.fault.io_error(FaultSite::SpillWrite)?;
-        let mut rec = Vec::with_capacity(self.record_bytes);
-        rec.extend_from_slice(&REC_MAGIC_LIVE.to_le_bytes());
-        rec.extend_from_slice(&self.generation.to_le_bytes());
-        rec.extend_from_slice(&(pos as u64).to_le_bytes());
-        rec.extend_from_slice(&[0u8; 8]); // checksum patched below
-        rec.extend_from_slice(&qr.min.to_le_bytes());
-        rec.extend_from_slice(&qr.scale.to_le_bytes());
-        rec.extend_from_slice(&qr.q);
+        let mut rec = vec![0u8; self.record_bytes];
+        rec[0..4].copy_from_slice(&REC_MAGIC_LIVE.to_le_bytes());
+        rec[4..12].copy_from_slice(&self.generation.to_le_bytes());
+        rec[12..20].copy_from_slice(&(pos as u64).to_le_bytes());
+        // 20..28: checksum, patched below
+        rec[28] = codec.as_byte();
+        rec[29..33].copy_from_slice(&(body.len() as u32).to_le_bytes());
+        rec[REC_HEADER_BYTES..REC_HEADER_BYTES + body.len()].copy_from_slice(body);
         let sum = record_checksum(&rec);
         rec[20..28].copy_from_slice(&sum.to_le_bytes());
         self.file
@@ -534,20 +688,27 @@ impl SpillFile {
         Ok(())
     }
 
-    /// Read a row back and release its slot. The slot is released only
-    /// after a verified read (and, in persistent mode, a durable
+    /// Read a payload back and release its slot. The slot is released
+    /// only after a verified read (and, in persistent mode, a durable
     /// tombstone), so an I/O error keeps the record reachable.
+    pub fn take_payload(&mut self, slot: u32, pos: usize) -> Result<RowPayload> {
+        let payload = self.read_payload(slot, pos)?;
+        self.release_slot(slot)?;
+        Ok(payload)
+    }
+
+    /// `take_payload` narrowed to the u8 rung (legacy/direct path).
     pub fn take_row(&mut self, slot: u32, pos: usize) -> Result<QuantRow> {
         let qr = self.read_row(slot, pos)?;
         self.release_slot(slot)?;
         Ok(qr)
     }
 
-    /// Read a row without releasing the slot (staging keeps the record
-    /// until the hot copy is consumed or re-demoted). Verifies the
-    /// header and the payload checksum: a poisoned record surfaces
-    /// `Error::Offload`, never bad floats.
-    pub fn read_row(&mut self, slot: u32, pos: usize) -> Result<QuantRow> {
+    /// Read a payload without releasing the slot (staging keeps the
+    /// record until the hot copy is consumed or re-demoded). Verifies
+    /// the header, the codec tag, and the checksum: a poisoned record
+    /// surfaces `Error::Offload`, never bad floats.
+    pub fn read_payload(&mut self, slot: u32, pos: usize) -> Result<RowPayload> {
         self.check_live(slot)?;
         if self.fault_next_read {
             self.fault_next_read = false;
@@ -565,10 +726,35 @@ impl SpillFile {
                 "spill record for pos {pos} (slot {slot}) failed its checksum"
             )));
         }
-        let body = &rec[REC_HEADER_BYTES..];
-        let min = f32::from_le_bytes(body[0..4].try_into().unwrap());
-        let scale = f32::from_le_bytes(body[4..8].try_into().unwrap());
-        Ok(QuantRow { q: body[ROW_HEADER_BYTES..].to_vec(), min, scale })
+        let codec = CodecId::from_byte(rec[28])
+            .filter(|&c| c != CodecId::Raw)
+            .ok_or_else(|| {
+                Error::Offload(format!(
+                    "spill record for pos {pos} (slot {slot}) carries invalid codec byte {}",
+                    rec[28]
+                ))
+            })?;
+        let plen = u32::from_le_bytes(rec[29..33].try_into().unwrap()) as usize;
+        if plen > self.record_bytes - REC_HEADER_BYTES {
+            return Err(Error::Offload(format!(
+                "spill record for pos {pos} (slot {slot}) claims {plen} payload bytes, slot \
+                 body is {}",
+                self.record_bytes - REC_HEADER_BYTES
+            )));
+        }
+        codec::payload_from_bytes(codec, self.row_floats, &rec[REC_HEADER_BYTES..REC_HEADER_BYTES + plen])
+    }
+
+    /// `read_payload` narrowed to the u8 rung (legacy/direct path):
+    /// a record encoded by another rung is a bookkeeping error here.
+    pub fn read_row(&mut self, slot: u32, pos: usize) -> Result<QuantRow> {
+        match self.read_payload(slot, pos)? {
+            RowPayload::Quant(qr) => Ok(qr),
+            other => Err(Error::Offload(format!(
+                "spill slot {slot} (pos {pos}) holds a {} record, expected u8",
+                other.codec().as_str()
+            ))),
+        }
     }
 
     /// Release a slot without reading its payload (row dropped by a
@@ -640,17 +826,20 @@ impl Drop for SpillFile {
 }
 
 /// The file-backed tier: cold rows that overflowed their byte budget
-/// on very long contexts. The ephemeral backing file is created lazily
-/// on first stash so configurations that never spill touch no disk;
-/// the persistent variant ([`SpillTier::open_persistent`]) opens and
-/// scans its record file eagerly so recovery happens before any
-/// traffic.
+/// on very long contexts. Payloads keep whatever codec rung encoded
+/// them — a u4 demotion stays u4 on disk and comes back u4. The
+/// ephemeral backing file is created lazily on first stash so
+/// configurations that never spill touch no disk; the persistent
+/// variant ([`SpillTier::open_persistent`]) opens and scans its record
+/// file eagerly so recovery happens before any traffic.
 #[derive(Debug)]
 pub struct SpillTier {
     dir: Option<String>,
     row_floats: usize,
     file: Option<SpillFile>,
-    slots: HashMap<usize, u32>,
+    slots: HashMap<usize, (u32, CodecId)>,
+    /// resident rows per codec rung, indexed by `CodecId::index`
+    codec_rows: [usize; CodecId::COUNT],
     /// record read+verify latency (restore and staging paths)
     pub read_us: Histogram,
     /// record write latency (demotion path)
@@ -673,6 +862,7 @@ impl SpillTier {
             row_floats,
             file: None,
             slots: HashMap::new(),
+            codec_rows: [0; CodecId::COUNT],
             read_us: Histogram::default(),
             write_us: Histogram::default(),
             fault: FaultInjector::disabled(),
@@ -712,6 +902,7 @@ impl SpillTier {
             row_floats,
             file: Some(file),
             slots: HashMap::new(),
+            codec_rows: [0; CodecId::COUNT],
             read_us: Histogram::default(),
             write_us: Histogram::default(),
             fault: FaultInjector::disabled(),
@@ -721,6 +912,11 @@ impl SpillTier {
 
     pub fn enabled(&self) -> bool {
         self.dir.is_some()
+    }
+
+    /// Resident rows per codec rung, indexed by `CodecId::index`.
+    pub fn codec_rows(&self) -> [usize; CodecId::COUNT] {
+        self.codec_rows
     }
 
     /// Records the open-time scan rejected (checksum/magic/generation
@@ -735,8 +931,9 @@ impl SpillTier {
         let Some(file) = self.file.as_mut() else { return Vec::new() };
         let recovered = file.take_recovered();
         let mut out = Vec::with_capacity(recovered.len());
-        for (pos, slot) in recovered {
-            self.slots.insert(pos, slot);
+        for (pos, slot, codec) in recovered {
+            self.slots.insert(pos, (slot, codec));
+            self.codec_rows[codec.index()] += 1;
             out.push(pos);
         }
         out
@@ -771,20 +968,28 @@ impl Tier for SpillTier {
             f.fault = self.fault.clone();
             self.file = Some(f);
         }
-        let qr = payload.into_quant();
+        // raw rows are u8-normalized (f32 exceeds the fixed slot and
+        // this tier is colder than the ladder's base rung); encoded
+        // payloads spill verbatim — no decode/re-encode round trip
+        let payload = match payload {
+            RowPayload::Raw(_) => RowPayload::Quant(payload.into_quant()),
+            encoded => encoded,
+        };
+        let codec = payload.codec();
         let t0 = Instant::now();
         // retries re-run the whole write: a failed attempt already
-        // returned its slot to the free list (write_row's error path),
-        // so each attempt allocates cleanly
+        // returned its slot to the free list (write_payload's error
+        // path), so each attempt allocates cleanly
         let file = self.file.as_mut().unwrap();
-        let slot = self.retry.run(RetryOp::Write, || file.write_row(pos, &qr))?;
+        let slot = self.retry.run(RetryOp::Write, || file.write_payload(pos, &payload))?;
         self.write_us.record(t0.elapsed());
-        self.slots.insert(pos, slot);
+        self.slots.insert(pos, (slot, codec));
+        self.codec_rows[codec.index()] += 1;
         Ok(())
     }
 
     fn take(&mut self, pos: usize) -> Result<Option<RowPayload>> {
-        let Some(&slot) = self.slots.get(&pos) else { return Ok(None) };
+        let Some(&(slot, codec)) = self.slots.get(&pos) else { return Ok(None) };
         let file = self
             .file
             .as_mut()
@@ -793,18 +998,19 @@ impl Tier for SpillTier {
         // mapping intact so the record stays reachable for a retry
         // (removing it first stranded the slot forever: never freed,
         // counted by bytes(), unreachable by position).
-        // take_row is idempotent until its release succeeds (the
+        // take_payload is idempotent until its release succeeds (the
         // record stays live through a failed read or a failed
         // tombstone), so re-running the whole op is safe.
         let t0 = Instant::now();
-        let qr = self.retry.run(RetryOp::Read, || file.take_row(slot, pos))?;
+        let payload = self.retry.run(RetryOp::Read, || file.take_payload(slot, pos))?;
         self.read_us.record(t0.elapsed());
         self.slots.remove(&pos);
-        Ok(Some(RowPayload::Quant(qr)))
+        self.codec_rows[codec.index()] -= 1;
+        Ok(Some(payload))
     }
 
     fn discard(&mut self, pos: usize) -> Result<bool> {
-        let Some(&slot) = self.slots.get(&pos) else { return Ok(false) };
+        let Some(&(slot, codec)) = self.slots.get(&pos) else { return Ok(false) };
         let file = self
             .file
             .as_mut()
@@ -812,6 +1018,7 @@ impl Tier for SpillTier {
         // same ordering as take: only unmap after the slot is freed
         self.retry.run(RetryOp::Free, || file.free_slot(slot, pos))?;
         self.slots.remove(&pos);
+        self.codec_rows[codec.index()] -= 1;
         Ok(true)
     }
 
@@ -832,7 +1039,7 @@ impl Tier for SpillTier {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::offload::quant::quantize;
+    use crate::offload::quant::{pack_u4, quantize};
     use crate::util::TempDir;
 
     fn tmpdir() -> String {
@@ -886,6 +1093,33 @@ mod tests {
     fn rejects_wrong_row_width() {
         let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
         assert!(s.write_row(0, &quantize(&[1.0; 3])).is_err());
+    }
+
+    #[test]
+    fn rejects_raw_payloads() {
+        let mut s = SpillFile::create(&tmpdir(), 4).unwrap();
+        let err = s.write_payload(0, &RowPayload::Raw(vec![1.0; 4])).unwrap_err();
+        assert!(format!("{err}").contains("raw"), "{err}");
+        assert_eq!(s.bytes(), 0, "rejected write must not allocate a slot");
+    }
+
+    #[test]
+    fn sub_byte_payload_roundtrips_through_the_fixed_slot() {
+        let mut s = SpillFile::create(&tmpdir(), 64).unwrap();
+        let row: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let pr = pack_u4(&row);
+        let payload_bytes = pr.bytes();
+        assert!(payload_bytes < s.record_bytes() - REC_HEADER_BYTES);
+        let slot = s.write_payload(5, &RowPayload::Packed(pr.clone())).unwrap();
+        match s.take_payload(slot, 5).unwrap() {
+            RowPayload::Packed(back) => {
+                assert_eq!(back.bytes(), payload_bytes);
+                assert_eq!(back.q, pr.q, "nibble codes must survive the disk round trip");
+                assert_eq!(back.blocks, pr.blocks);
+            }
+            other => panic!("u4 record must come back u4, got {:?}", other.codec()),
+        }
+        assert_eq!(s.bytes(), 0);
     }
 
     #[test]
@@ -958,10 +1192,12 @@ mod tests {
         // unreachable). The mapping must survive the error:
         assert_eq!(t.rows(), 1, "failed take must not unmap the row");
         assert!(t.bytes() > 0);
+        assert_eq!(t.codec_rows()[CodecId::U8.index()], 1, "codec gauge must survive too");
         let back = t.take(5).unwrap().expect("retry must reach the record");
         assert_eq!(back.into_raw().len(), 4);
         assert_eq!(t.rows(), 0);
         assert_eq!(t.bytes(), 0);
+        assert_eq!(t.codec_rows()[CodecId::U8.index()], 0);
     }
 
     #[test]
@@ -1045,6 +1281,21 @@ mod tests {
         assert_eq!(off.bytes(), 0);
     }
 
+    #[test]
+    fn spill_tier_keeps_sub_byte_payloads_verbatim() {
+        let mut t = SpillTier::new(Some(tmpdir()), 64);
+        let row: Vec<f32> = (0..64).map(|i| (i as f32 * 0.21).cos()).collect();
+        let pr = pack_u4(&row);
+        let expect = pr.bytes();
+        t.stash(3, RowPayload::Packed(pr)).unwrap();
+        assert_eq!(t.codec_rows()[CodecId::U4.index()], 1);
+        match t.take(3).unwrap().unwrap() {
+            RowPayload::Packed(back) => assert_eq!(back.bytes(), expect),
+            other => panic!("spill must keep the u4 record, got {:?}", other.codec()),
+        }
+        assert_eq!(t.codec_rows()[CodecId::U4.index()], 0);
+    }
+
     // --- persistent mode ---
 
     #[test]
@@ -1094,10 +1345,34 @@ mod tests {
         let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
         assert_eq!(f.recovery_errors, 0);
         let rec = f.take_recovered();
-        let positions: Vec<usize> = rec.iter().map(|&(p, _)| p).collect();
+        let positions: Vec<usize> = rec.iter().map(|&(p, _, _)| p).collect();
         assert_eq!(positions, vec![11, 12], "freed slot 13 must not resurrect");
-        let (_, slot) = rec[0];
+        assert!(rec.iter().all(|&(_, _, c)| c == CodecId::U8), "u8 records recover as u8");
+        let (_, slot, _) = rec[0];
         assert_eq!(f.read_row(slot, 11).unwrap(), qr, "recovered payload bit-exact");
+    }
+
+    #[test]
+    fn persistent_sub_byte_records_recover_with_their_codec() {
+        let dir = TempDir::new("spill-persist-u4").unwrap();
+        let d = dir.path_str();
+        let row: Vec<f32> = (0..64).map(|i| (i as f32 * 0.13).sin()).collect();
+        let pr = pack_u4(&row);
+        {
+            let m = SpillManifest::attach(&d, 64, 1, ShardPartition::Hash).unwrap();
+            let mut f = SpillFile::open_or_create(&d, 64, 0, m.generation).unwrap();
+            f.write_payload(21, &RowPayload::Packed(pr.clone())).unwrap();
+        }
+        let m = SpillManifest::attach(&d, 64, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 64, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 0);
+        let rec = f.take_recovered();
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0], (21, 0, CodecId::U4), "codec tag must survive the restart");
+        match f.read_payload(rec[0].1, 21).unwrap() {
+            RowPayload::Packed(back) => assert_eq!(back.q, pr.q, "nibbles bit-exact"),
+            other => panic!("u4 record must recover as u4, got {:?}", other.codec()),
+        }
     }
 
     #[test]
@@ -1120,6 +1395,25 @@ mod tests {
             f.take_recovered().is_empty(),
             "a record with corrupt identity must never be served under the wrong position"
         );
+    }
+
+    #[test]
+    fn corrupted_codec_byte_is_rejected_by_the_checksum() {
+        let dir = TempDir::new("spill-codecflip").unwrap();
+        let d = dir.path_str();
+        {
+            let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+            let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+            f.write_row(3, &quantize(&[1.0; 4])).unwrap();
+        }
+        let path = record_path(&d, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[28] = CodecId::U4.as_byte(); // u8 record relabeled as u4
+        std::fs::write(&path, &bytes).unwrap();
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 1, "a relabeled codec byte must fail the checksum");
+        assert!(f.take_recovered().is_empty(), "never decode u8 bytes as u4");
     }
 
     #[test]
@@ -1169,5 +1463,106 @@ mod tests {
         assert_eq!(rec[0].0, 0);
         let back = f.read_row(rec[0].1, 0).unwrap();
         assert_eq!(back, quantize(&[1.0; 4]));
+    }
+
+    // --- v1 on-disk compatibility ---
+
+    /// Hand-craft one v1-format record ("KVR1" + 28-byte header + u8
+    /// payload) exactly as the pre-ladder writer laid it out.
+    fn v1_record(generation: u64, pos: u64, row: &[f32]) -> Vec<u8> {
+        let qr = quantize(row);
+        let mut rec = Vec::with_capacity(record_bytes_v1_for(row.len()));
+        rec.extend_from_slice(&REC_MAGIC_LIVE_V1.to_le_bytes());
+        rec.extend_from_slice(&generation.to_le_bytes());
+        rec.extend_from_slice(&pos.to_le_bytes());
+        rec.extend_from_slice(&[0u8; 8]);
+        rec.extend_from_slice(&qr.min.to_le_bytes());
+        rec.extend_from_slice(&qr.scale.to_le_bytes());
+        rec.extend_from_slice(&qr.q);
+        let sum = record_checksum(&rec);
+        rec[20..28].copy_from_slice(&sum.to_le_bytes());
+        rec
+    }
+
+    fn write_v1_manifest(d: &str, row_floats: usize, generation: u64) {
+        let m = Json::obj(vec![
+            ("magic", Json::str(MANIFEST_MAGIC)),
+            ("version", Json::num(1.0)),
+            ("row_floats", Json::num(row_floats as f64)),
+            ("record_bytes", Json::num(record_bytes_v1_for(row_floats) as f64)),
+            ("shards", Json::num(1.0)),
+            ("partition", Json::str("hash")),
+            ("generation", Json::num(generation as f64)),
+        ]);
+        let mut text = String::new();
+        write_json(&m, &mut text);
+        std::fs::write(Path::new(d).join(MANIFEST_FILE), text).unwrap();
+    }
+
+    #[test]
+    fn v1_directory_migrates_on_open_and_records_recover() {
+        let dir = TempDir::new("spill-v1-compat").unwrap();
+        let d = dir.path_str();
+        let v1_rb = record_bytes_v1_for(4);
+        // a pre-ladder generation-1 shard file: two live records and a
+        // tombstoned slot between lives and tail
+        let mut bytes = v1_record(1, 11, &[1.0, -2.0, 0.5, 3.0]);
+        bytes.extend_from_slice(&v1_record(1, 12, &[4.0; 4]));
+        let mut tomb = vec![0u8; v1_rb];
+        tomb[0..4].copy_from_slice(&REC_MAGIC_FREE.to_le_bytes());
+        bytes.extend_from_slice(&tomb);
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(record_path(&d, 0), &bytes).unwrap();
+        write_v1_manifest(&d, 4, 1);
+
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        assert_eq!(m.generation, 2, "v1 generation must carry forward through the upgrade");
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 0, "clean v1 records must migrate without loss");
+        let rec = f.take_recovered();
+        let positions: Vec<usize> = rec.iter().map(|&(p, _, _)| p).collect();
+        assert_eq!(positions, vec![11, 12]);
+        assert!(rec.iter().all(|&(_, _, c)| c == CodecId::U8), "v1 payloads recover as u8");
+        let back = f.read_row(rec[0].1, 11).unwrap();
+        assert_eq!(back, quantize(&[1.0, -2.0, 0.5, 3.0]), "payload bit-exact across migration");
+        drop(f);
+
+        // the migrated directory is v2 now: a second restart scans it
+        // as such (no second migration) and still recovers everything
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 0);
+        assert_eq!(f.take_recovered().len(), 2);
+    }
+
+    #[test]
+    fn v1_migration_reclaims_corrupt_records() {
+        let dir = TempDir::new("spill-v1-corrupt").unwrap();
+        let d = dir.path_str();
+        let mut bytes = v1_record(1, 0, &[1.0; 4]);
+        let mut bad = v1_record(1, 1, &[2.0; 4]);
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF; // poison the payload, keep the magic
+        bytes.extend_from_slice(&bad);
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(record_path(&d, 0), &bytes).unwrap();
+        write_v1_manifest(&d, 4, 1);
+
+        let m = SpillManifest::attach(&d, 4, 1, ShardPartition::Hash).unwrap();
+        let mut f = SpillFile::open_or_create(&d, 4, 0, m.generation).unwrap();
+        assert_eq!(f.recovery_errors, 1, "corrupt v1 record must be counted, not carried");
+        let rec = f.take_recovered();
+        assert_eq!(rec.len(), 1, "only the intact v1 record survives migration");
+        assert_eq!(rec[0].0, 0);
+    }
+
+    #[test]
+    fn v1_manifest_with_mismatched_identity_still_errors() {
+        let dir = TempDir::new("spill-v1-identity").unwrap();
+        let d = dir.path_str();
+        std::fs::create_dir_all(&d).unwrap();
+        write_v1_manifest(&d, 4, 1);
+        // wrong row width against a v1 manifest is still a hard error
+        assert!(SpillManifest::attach(&d, 8, 1, ShardPartition::Hash).is_err());
     }
 }

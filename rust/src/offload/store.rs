@@ -7,8 +7,11 @@
 //!
 //! * rows predicted back within `cold_after_steps` stay **hot**
 //!   (uncompressed, block-pooled for batched gather/scatter),
-//! * rows predicted to stay frozen are quantized into the **cold**
-//!   tier at stash time (u8 affine, ~4x smaller),
+//! * rows predicted to stay frozen are encoded into the **cold** tier
+//!   at stash time, with the codec rung picked by the configured
+//!   `codec::CodecLadder` from the predicted thaw distance (u8 affine
+//!   by default, ~4x smaller; u4 / error-bounded rungs for far-future
+//!   rows),
 //! * cold rows overflowing their byte budget demote to the
 //!   file-backed **spill** tier when one is configured.
 //!
@@ -31,9 +34,10 @@ use std::time::Instant;
 use crate::config::OffloadConfig;
 use crate::error::{Error, Result};
 use crate::metrics::{
-    Cause, CountHistogram, FlightRecorder, RestoreLatency, Snapshot, SnapshotBuilder, TierKind,
-    TierOccupancy,
+    Cause, CountHistogram, FlightRecorder, Histogram, RestoreLatency, Snapshot, SnapshotBuilder,
+    TierKind, TierOccupancy,
 };
+use crate::offload::codec::{CodecId, CodecSet};
 use crate::offload::cold::ColdTier;
 use crate::offload::fault::{FaultInjector, FaultSite, RetryOp, RetryOutcome, RetryPolicy};
 use crate::offload::hot::HotTier;
@@ -90,6 +94,20 @@ pub struct TieredStore {
     /// spill tier; consulted by the worker pool at op entry. Inert
     /// unless `cfg.fault_seed` armed it.
     fault: FaultInjector,
+    /// rows / payload bytes admitted per tier (hot=0, cold=1, spill=2)
+    /// over the store's lifetime. `bytes / rows` is the achieved
+    /// bytes/row per tier — the codec ladder's observable win (payload
+    /// bytes, not disk slot size, so sub-byte rungs show through even
+    /// though spill slots are fixed-width).
+    pub tier_rows_stored: [u64; 3],
+    pub tier_row_bytes_stored: [u64; 3],
+    /// ladder encode / decode kernel latency, per codec rung
+    /// (indexed by `CodecId::index`)
+    pub codec_encode_us: [Histogram; CodecId::COUNT],
+    pub codec_decode_us: [Histogram; CodecId::COUNT],
+    /// codec rung implementations, parameterized by the config
+    /// (`ebq_rel_error`)
+    codecs: CodecSet,
 }
 
 impl std::fmt::Debug for TieredStore {
@@ -137,6 +155,7 @@ impl TieredStore {
         // fail-fast `RetryPolicy::none()` default.
         let fault = FaultInjector::from_cfg(&cfg);
         spill.arm(fault.clone(), RetryPolicy::from_cfg(&cfg));
+        let codecs = CodecSet { ebq_rel_error: cfg.ebq_rel_error };
         TieredStore {
             row_floats,
             cfg,
@@ -162,6 +181,11 @@ impl TieredStore {
             flight: FlightRecorder::new(flight_cap),
             last_step: 0,
             fault,
+            tier_rows_stored: [0; 3],
+            tier_row_bytes_stored: [0; 3],
+            codec_encode_us: std::array::from_fn(|_| Histogram::default()),
+            codec_decode_us: std::array::from_fn(|_| Histogram::default()),
+            codecs,
         }
     }
 
@@ -253,6 +277,34 @@ impl TieredStore {
         }
     }
 
+    /// Record a tier admission for the bytes/row accounting
+    /// (hot=0, cold=1, spill=2). Called at policy admissions only —
+    /// `peek_decode`'s stash-back is a non-destructive read, not an
+    /// admission, and is excluded.
+    fn note_stored(&mut self, tier: usize, bytes: usize) {
+        self.tier_rows_stored[tier] += 1;
+        self.tier_row_bytes_stored[tier] += bytes as u64;
+    }
+
+    /// Encode a raw row with the ladder rung picked for a predicted
+    /// thaw `distance` steps out, timing the kernel per codec.
+    fn encode_for_distance(&mut self, row: Vec<f32>, distance: u64) -> RowPayload {
+        let id = self.cfg.codec_ladder.pick(distance);
+        let t0 = Instant::now();
+        let payload = self.codecs.encode(id, row);
+        self.codec_encode_us[id.index()].record(t0.elapsed());
+        payload
+    }
+
+    /// Decode a payload to f32, timing the kernel per codec.
+    fn decode_timed(&mut self, payload: RowPayload) -> Vec<f32> {
+        let id = payload.codec();
+        let t0 = Instant::now();
+        let row = payload.into_raw();
+        self.codec_decode_us[id.index()].record(t0.elapsed());
+        row
+    }
+
     /// Stash a gathered row bundle for `pos` (active -> frozen).
     /// `thaw_eta` is the policy's predicted restore step — it drives
     /// tier admission. Double-stashing is an engine invariant breach
@@ -280,11 +332,18 @@ impl TieredStore {
         let goes_cold = self.cfg.quantize_cold
             && thaw_eta.saturating_sub(step) >= self.cfg.cold_after_steps;
         let class = if goes_cold {
-            self.cold.stash(pos, RowPayload::Raw(row))?;
+            // the ladder picks the rung from the predicted thaw
+            // distance: rows expected back soon stay cheap to decode,
+            // far-future rows compress hardest
+            let payload = self.encode_for_distance(row, thaw_eta.saturating_sub(step));
+            let bytes = payload.bytes();
+            self.cold.stash(pos, payload)?;
+            self.note_stored(1, bytes);
             self.demotions_cold += 1;
             SchedClass::Cold
         } else {
             self.hot.stash(pos, RowPayload::Raw(row))?;
+            self.note_stored(0, self.row_bytes());
             SchedClass::HotResident
         };
         self.entries.insert(pos, Entry { class, thaw_eta, recovered: false });
@@ -329,7 +388,18 @@ impl TieredStore {
             return Err(Error::Offload(format!("demote of non-hot pos {pos}")));
         }
         let payload = self.hot.take(pos)?.ok_or_else(|| missing(pos, class))?;
+        // hot rows are raw: encode with the rung for the remaining
+        // predicted thaw distance (an already-encoded payload would
+        // move verbatim, but the hot tier never holds one)
+        let payload = match payload {
+            RowPayload::Raw(row) => {
+                self.encode_for_distance(row, eta.saturating_sub(self.last_step))
+            }
+            encoded => encoded,
+        };
+        let bytes = payload.bytes();
         self.cold.stash(pos, payload)?;
+        self.note_stored(1, bytes);
         self.sched.remove(class, eta, pos);
         self.sched.insert(SchedClass::Cold, eta, pos);
         self.entries.get_mut(&pos).unwrap().class = SchedClass::Cold;
@@ -347,8 +417,9 @@ impl TieredStore {
         if class != SchedClass::Cold {
             return Err(Error::Offload(format!("spill of non-cold pos {pos}")));
         }
-        // the quantized record moves verbatim — no requantization
+        // the encoded record moves verbatim — no re-encoding
         let payload = self.cold.take(pos)?.ok_or_else(|| missing(pos, class))?;
+        let bytes = payload.bytes();
         if let Err(e) = self.spill.stash(pos, payload.clone()) {
             // a failed spill write must not lose the row: put the
             // record back so the demotion is a clean no-op and the
@@ -356,6 +427,7 @@ impl TieredStore {
             self.cold.stash(pos, payload)?;
             return Err(e);
         }
+        self.note_stored(2, bytes);
         self.sched.remove(SchedClass::Cold, eta, pos);
         self.sched.insert(SchedClass::Spill, eta, pos);
         self.entries.get_mut(&pos).unwrap().class = SchedClass::Spill;
@@ -392,7 +464,9 @@ impl TieredStore {
             .tier_mut(class)
             .stage(pos)?
             .ok_or_else(|| missing(pos, class))?;
-        self.hot.stash(pos, RowPayload::Raw(payload.into_raw()))?;
+        let row = self.decode_timed(payload);
+        self.hot.stash(pos, RowPayload::Raw(row))?;
+        self.note_stored(0, self.row_bytes());
         self.sched.remove(class, eta, pos);
         self.sched.insert(SchedClass::HotStaged, eta, pos);
         self.entries.get_mut(&pos).unwrap().class = SchedClass::HotStaged;
@@ -499,7 +573,7 @@ impl TieredStore {
             .tier_mut(class)
             .take(pos)?
             .ok_or_else(|| missing(pos, class))?;
-        let row = payload.clone().into_raw();
+        let row = self.decode_timed(payload.clone());
         self.tier_mut(class).stash(pos, payload)?;
         Ok(Some(row))
     }
@@ -619,7 +693,7 @@ impl TieredStore {
                 TierKind::Spill
             }
         };
-        let row = payload.into_raw();
+        let row = self.decode_timed(payload);
         self.restore_latency.record(tier, t0.elapsed());
         self.total_restored += 1;
         self.flight.record(self.last_step, pos, Some(tier), None, cause, eta);
@@ -752,6 +826,16 @@ impl TieredStore {
         b.counter_add("asrkf_recovered_rows_total", &l, self.recovered_rows);
         b.counter_add("asrkf_recovery_errors_total", &l, self.spill.recovery_errors());
         b.counter_add("asrkf_flight_events_dropped_total", &l, self.flight.dropped());
+        for (i, tier) in ["hot", "cold", "spill"].iter().enumerate() {
+            let lt = [("tier", *tier), ("shard", sh)];
+            b.counter_add("asrkf_tier_rows_stored_total", &lt, self.tier_rows_stored[i]);
+            b.counter_add("asrkf_tier_row_bytes_total", &lt, self.tier_row_bytes_stored[i]);
+        }
+        for id in CodecId::ALL {
+            let lc = [("codec", id.as_str())];
+            b.time_merge("asrkf_codec_encode_us", &lc, &self.codec_encode_us[id.index()]);
+            b.time_merge("asrkf_codec_decode_us", &lc, &self.codec_decode_us[id.index()]);
+        }
         b.time_merge("asrkf_restore_us", &[("tier", "hot")], &self.restore_latency.hot);
         b.time_merge("asrkf_restore_us", &[("tier", "cold")], &self.restore_latency.cold);
         b.time_merge("asrkf_restore_us", &[("tier", "spill")], &self.restore_latency.spill);
@@ -797,6 +881,23 @@ impl TieredStore {
         }
         b.gauge_set("asrkf_uncompressed_bytes", &[("shard", sh)], o.uncompressed_bytes as f64);
         b.gauge_set("asrkf_shard_rows", &[("shard", sh)], self.entries.len() as f64);
+        // resident rows per codec rung: the hot tier is raw by
+        // construction; cold and spill track their own per-codec counts
+        b.gauge_set(
+            "asrkf_codec_rows",
+            &[("tier", "hot"), ("codec", "raw"), ("shard", sh)],
+            self.hot.rows() as f64,
+        );
+        let (cold_codecs, spill_codecs) = (self.cold.codec_rows(), self.spill.codec_rows());
+        for id in CodecId::ALL {
+            for (tier, counts) in [("cold", &cold_codecs), ("spill", &spill_codecs)] {
+                b.gauge_set(
+                    "asrkf_codec_rows",
+                    &[("tier", tier), ("codec", id.as_str()), ("shard", sh)],
+                    counts[id.index()] as f64,
+                );
+            }
+        }
     }
 
     /// Publish flows and gauges together (per-store snapshots).
@@ -1254,6 +1355,42 @@ mod tests {
         assert!(s.promote_speculative(2).unwrap());
         assert_eq!(s.tier_of(2), Some((TierKind::Hot, true)));
         assert!(s.spec_candidates(10, 100, 8).is_empty(), "promoted row leaves the frozen queue");
+    }
+
+    #[test]
+    fn ladder_picks_rung_by_thaw_distance_and_accounts_bytes() {
+        use crate::offload::codec::CodecLadder;
+        use crate::offload::quant;
+
+        let mut c = cfg();
+        c.codec_ladder = CodecLadder::parse("0:u8,64:u4").unwrap();
+        let mut s = TieredStore::new(RF, c);
+        s.stash(1, row(RF, 1.0), 0, 20).unwrap(); // distance 20 -> u8
+        s.stash(2, row(RF, 2.0), 0, 100).unwrap(); // distance 100 -> u4
+        assert_eq!(s.occupancy().cold_rows, 2);
+        let cold = s.cold.codec_rows();
+        assert_eq!(cold[CodecId::U8.index()], 1);
+        assert_eq!(cold[CodecId::U4.index()], 1);
+        // admission accounting: the u4 rung must pull cold bytes/row
+        // below the u8 baseline
+        assert_eq!(s.tier_rows_stored[1], 2);
+        let u8_bytes = (RF + quant::ROW_HEADER_BYTES) as u64;
+        assert!(
+            s.tier_row_bytes_stored[1] < 2 * u8_bytes,
+            "u4 rung must shrink cold bytes/row ({} vs u8 baseline {})",
+            s.tier_row_bytes_stored[1],
+            2 * u8_bytes
+        );
+        // a u4 restore comes back within the rung's error bound and is
+        // attributed to the rung that served it
+        let back = s.take(2).unwrap().unwrap();
+        let range = 0.01 * (RF - 1) as f32;
+        let bound = range / 30.0 + 1e-5;
+        for (a, b) in row(RF, 2.0).iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}");
+        }
+        assert_eq!(s.codec_encode_us[CodecId::U4.index()].count(), 1);
+        assert_eq!(s.codec_decode_us[CodecId::U4.index()].count(), 1);
     }
 
     #[test]

@@ -12,31 +12,50 @@
 //! arXiv 2603.08727) — implement this trait and slot in without
 //! touching the scheduler or the engine.
 //!
-//! Payloads move between tiers as [`RowPayload`]: either raw f32 rows
-//! or quantized records. A tier stores whichever representation it
-//! wants (`into_raw` / `into_quant` convert on demand), so a
-//! cold -> spill demotion moves the quantized record verbatim instead
-//! of paying a dequantize/requantize round trip.
+//! Payloads move between tiers as [`RowPayload`]: a raw f32 row or one
+//! of the `offload::codec` ladder's encoded representations, tagged by
+//! [`CodecId`]. A tier stores the payload it is handed verbatim
+//! (`into_raw` / `into_quant` convert on demand), so a cold -> spill
+//! demotion moves the encoded record as-is instead of paying a
+//! decode/re-encode round trip.
 
 use crate::error::Result;
 use crate::metrics::{TierKind, TierOccupancy};
-use crate::offload::quant::{self, QuantRow};
+use crate::offload::codec::CodecId;
+use crate::offload::quant::{self, BoundedRow, PackedRow, QuantRow};
 
-/// A frozen-row payload in transit between tiers.
+/// A frozen-row payload in transit between tiers, tagged by the codec
+/// rung that produced it (`RowPayload::codec`).
 #[derive(Debug, Clone)]
 pub enum RowPayload {
     /// Full-precision row bundle (`row_floats` f32s).
     Raw(Vec<f32>),
     /// u8-quantized row with per-row affine header.
     Quant(QuantRow),
+    /// u4 block-quantized row (per-block affine, packed nibbles).
+    Packed(PackedRow),
+    /// Error-bounded variable-rate row (0/2/4/8-bit blocks).
+    Bounded(BoundedRow),
 }
 
 impl RowPayload {
+    /// The codec rung this payload is encoded with.
+    pub fn codec(&self) -> CodecId {
+        match self {
+            RowPayload::Raw(_) => CodecId::Raw,
+            RowPayload::Quant(_) => CodecId::U8,
+            RowPayload::Packed(_) => CodecId::U4,
+            RowPayload::Bounded(_) => CodecId::Ebq,
+        }
+    }
+
     /// Bytes this payload occupies in its current representation.
     pub fn bytes(&self) -> usize {
         match self {
             RowPayload::Raw(r) => r.len() * std::mem::size_of::<f32>(),
             RowPayload::Quant(q) => q.bytes(),
+            RowPayload::Packed(p) => p.bytes(),
+            RowPayload::Bounded(b) => b.bytes(),
         }
     }
 
@@ -45,18 +64,36 @@ impl RowPayload {
         match self {
             RowPayload::Raw(r) => r.len(),
             RowPayload::Quant(q) => q.q.len(),
+            RowPayload::Packed(p) => p.floats,
+            RowPayload::Bounded(b) => b.floats,
         }
     }
 
-    /// Reconstruct the full-precision row (dequantizes if needed).
+    /// Decode the full-precision row into a caller-provided buffer
+    /// (len must match) without consuming the payload.
+    pub fn decode_into(&self, dst: &mut [f32]) {
+        match self {
+            RowPayload::Raw(r) => dst.copy_from_slice(r),
+            RowPayload::Quant(q) => quant::dequantize_into(q, dst),
+            RowPayload::Packed(p) => quant::unpack_u4_into(p, dst),
+            RowPayload::Bounded(b) => quant::decode_ebq_into(b, dst),
+        }
+    }
+
+    /// Reconstruct the full-precision row (decodes if needed).
     pub fn into_raw(self) -> Vec<f32> {
         match self {
             RowPayload::Raw(r) => r,
             RowPayload::Quant(q) => quant::dequantize(&q),
+            RowPayload::Packed(p) => quant::unpack_u4(&p),
+            RowPayload::Bounded(b) => quant::decode_ebq(&b),
         }
     }
 
-    /// Convert to the quantized representation (quantizes if needed).
+    /// Convert to the u8-quantized representation (encodes a raw row;
+    /// decodes-then-requantizes a sub-byte one — a representation
+    /// *change*, so callers on the data path should prefer storing the
+    /// payload verbatim).
     ///
     /// Re-quantizing a row that was itself dequantized from a u8
     /// record is exact: quantization always assigns code 0 to the row
@@ -64,8 +101,8 @@ impl RowPayload {
     /// regenerate the identical lattice.
     pub fn into_quant(self) -> QuantRow {
         match self {
-            RowPayload::Raw(r) => quant::quantize(&r),
             RowPayload::Quant(q) => q,
+            other => quant::quantize(&other.into_raw()),
         }
     }
 }

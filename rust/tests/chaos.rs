@@ -5,9 +5,10 @@
 //! panics, delayed replies) is **containment**, not perfection:
 //!
 //! * surviving payloads are correct — bit-exact against the oracle
-//!   when the trace drew no faults, within the quantization bound of
-//!   the original row always (a rebuild re-stashes recovered rows, so
-//!   a row may legally cross the quantizer one extra time);
+//!   when the trace drew no faults, within the error bound of the
+//!   worst armed codec rung always (traces randomly arm the full
+//!   compression ladder, and a rebuild re-stashes recovered rows, so
+//!   a row may legally cross a codec one extra time);
 //! * every row is accounted for — the conservation identity holds
 //!   after every op, extended by the declared-lost set:
 //!   `stashed == restored + dropped + rows_lost + resident`;
@@ -24,7 +25,7 @@ use std::collections::{BTreeSet, HashMap};
 
 use asrkf::config::OffloadConfig;
 use asrkf::error::Error;
-use asrkf::offload::ShardedStore;
+use asrkf::offload::{CodecLadder, ShardedStore};
 use asrkf::prop_assert;
 use asrkf::util::prop::{prop_check, G};
 use asrkf::util::TempDir;
@@ -37,9 +38,17 @@ fn random_row(g: &mut G) -> Vec<f32> {
 
 /// Tiny tier budgets so demotion and spill I/O (the fault surface) run
 /// constantly; persistent spill so a panicked shard has something to
-/// rebuild from.
+/// rebuild from. Half the traces arm the full compression ladder with
+/// thresholds small enough that trace etas (distance <= 20 steps) land
+/// rows on every rung, so faults interleave with sub-byte payloads.
 fn chaos_cfg(g: &mut G, dir: &str, fault_seed: Option<u64>) -> OffloadConfig {
+    let codec_ladder = if g.bool(0.5) {
+        CodecLadder::parse("0:u8,6:u4,14:ebq").expect("chaos ladder spec")
+    } else {
+        CodecLadder::default()
+    };
     OffloadConfig {
+        codec_ladder,
         hot_budget_bytes: g.usize(2, 8) * RF * 4,
         cold_budget_bytes: g.usize(0, 4) * (RF + 8),
         cold_after_steps: g.usize(0, 4) as u64,
@@ -81,7 +90,15 @@ fn prop_chaos_traces_contain_faults_and_conserve_rows() {
         let mut oracle_cfg = cfg.clone();
         oracle_cfg.spill_dir = Some(o_dir.to_string_lossy().into_owned());
         oracle_cfg.fault_seed = None;
-        let rel = cfg.cold_quant_rel_error;
+        // A surviving payload may have ridden any armed rung depending
+        // on its thaw distance, so containment uses the worst rung's
+        // relative bound.
+        let rel = cfg
+            .codec_ladder
+            .rungs()
+            .iter()
+            .map(|&(_, id)| id.rel_error_bound(cfg.cold_quant_rel_error, cfg.ebq_rel_error))
+            .fold(cfg.cold_quant_rel_error, f32::max);
 
         let mut faulty =
             ShardedStore::new(RF, cfg).map_err(|e| format!("faulty new: {e}"))?;

@@ -201,6 +201,131 @@ fn prop_quantize_roundtrip_bound() {
 }
 
 // ---------------------------------------------------------------------------
+// Codec-ladder oracles
+
+#[test]
+fn prop_codec_rungs_roundtrip_within_declared_bound() {
+    use asrkf::offload::codec::{self, CodecId, CodecSet};
+    prop_check(120, |g| {
+        let set = CodecSet { ebq_rel_error: g.f32(0.005, 0.1) };
+        let n = g.usize(1, 200);
+        let scale = g.f32(1e-3, 50.0);
+        let offset = g.f32(-25.0, 25.0);
+        let row: Vec<f32> = (0..n).map(|_| offset + g.f32(-1.0, 1.0) * scale).collect();
+        let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let (range, mag) = (hi - lo, hi.abs().max(lo.abs()));
+        for id in CodecId::ALL {
+            let c = set.codec(id);
+            let payload = c.encode(&row);
+            prop_assert!(
+                payload.codec() == id,
+                "codec {} tagged its payload as {}",
+                id.as_str(),
+                payload.codec().as_str()
+            );
+            prop_assert!(
+                payload.bytes() <= id.max_encoded_bytes(n),
+                "codec {}: {} bytes exceeds declared ceiling {}",
+                id.as_str(),
+                payload.bytes(),
+                id.max_encoded_bytes(n)
+            );
+            // reconstruction within the rung's declared bound (plus
+            // f32 rounding at the row magnitude, as in the u8 test)
+            let mut dst = vec![0.0f32; n];
+            c.decode_into(&payload, &mut dst).map_err(|e| format!("decode: {e}"))?;
+            let bound = c.error_bound(range) + mag * f32::EPSILON * 8.0 + 1e-6;
+            for (a, b) in row.iter().zip(&dst) {
+                prop_assert!(
+                    (a - b).abs() <= bound,
+                    "codec {}: {a} -> {b} exceeds bound {bound} (n {n})",
+                    id.as_str()
+                );
+            }
+            // spill body serialization is exact: `bytes()` matches the
+            // emitted body, the body round-trips byte for byte, and
+            // the reconstructed payload decodes bit-identically
+            let body = codec::payload_to_bytes(&payload);
+            prop_assert!(
+                body.len() == payload.bytes(),
+                "codec {}: body {} bytes != bytes() {}",
+                id.as_str(),
+                body.len(),
+                payload.bytes()
+            );
+            let back = codec::payload_from_bytes(id, n, &body)
+                .map_err(|e| format!("from_bytes: {e}"))?;
+            prop_assert!(
+                codec::payload_to_bytes(&back) == body,
+                "codec {}: serialization round trip not exact",
+                id.as_str()
+            );
+            let mut dst2 = vec![0.0f32; n];
+            back.decode_into(&mut dst2);
+            prop_assert!(
+                dst.iter().zip(&dst2).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "codec {}: deserialized payload decodes differently",
+                id.as_str()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_u8_ladder_reproduces_legacy_cold_bytes() {
+    use asrkf::offload::QuantRow;
+    use asrkf::util::TempDir;
+    prop_check(25, |g| {
+        // The default (u8-only) ladder is an on-disk and in-memory
+        // no-op relative to the pre-ladder store: every cold/spilled
+        // row holds exactly the bytes direct `quantize` produces, so
+        // restores decode to bit-identical floats.
+        let spill = g.bool(0.5);
+        let dir = TempDir::new("prop-u8-ladder").map_err(|e| e.to_string())?;
+        let cfg = OffloadConfig {
+            cold_after_steps: 0, // admit everything cold
+            cold_budget_bytes: if spill { (RF + 8) * 4 } else { 1 << 24 },
+            spill_dir: if spill { Some(dir.path_str()) } else { None },
+            ..OffloadConfig::default()
+        };
+        let mut store = TieredStore::new(RF, cfg);
+        let mut shadow: HashMap<usize, QuantRow> = HashMap::new();
+        let n = g.usize(8, 40);
+        for pos in 0..n {
+            let row = random_row(g);
+            shadow.insert(pos, quantize(&row));
+            store.stash(pos, row, 0, 1_000).map_err(|e| format!("stash: {e}"))?;
+        }
+        let o = store.occupancy();
+        if spill {
+            prop_assert!(o.spill_rows > 0, "tiny cold budget pushed nothing to disk");
+        } else {
+            let want: usize = shadow.values().map(|q| q.bytes()).sum();
+            prop_assert!(o.cold_rows == n, "expected all {n} rows cold, got {}", o.cold_rows);
+            prop_assert!(
+                o.cold_bytes == want,
+                "u8 ladder cold bytes {} != legacy quantizer bytes {want}",
+                o.cold_bytes
+            );
+        }
+        for (pos, qr) in &shadow {
+            let got = store
+                .take(*pos)
+                .map_err(|e| format!("take: {e}"))?
+                .ok_or_else(|| format!("pos {pos} lost"))?;
+            let want = dequantize(qr);
+            prop_assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "pos {pos}: u8-ladder restore diverged from the legacy quantizer bits"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Scheduler oracle: a brute-force full-scan mirror of the store's
 // residency rules. `TieredStore` answers every per-step question (who
 // demotes, who stages) from its eta index; the oracle answers them by

@@ -33,6 +33,21 @@ fn expected_roundtrip(r: &[f32]) -> Vec<f32> {
     dequantize(&quantize(r))
 }
 
+/// FNV-1a over a record minus its checksum field (bytes 20..28) — the
+/// on-disk integrity contract shared by the v1 and v2 record formats
+/// (the exclusion window is the checksum *field*, not the header, so
+/// it stays at 20..28 even though the v2 header is 36 bytes).
+fn record_checksum(rec: &[u8]) -> u64 {
+    fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+    fnv(fnv(0xcbf2_9ce4_8422_2325, &rec[..20]), &rec[28..])
+}
+
 /// Everything-cold-must-spill persistent configuration rooted at `dir`.
 fn persist_cfg(dir: &TempDir, shards: usize, partition: ShardPartition) -> OffloadConfig {
     OffloadConfig {
@@ -264,14 +279,7 @@ fn stale_generation_records_are_fenced_and_reclaimed() {
     let path = record_path(&dir.path_str(), 0);
     let mut bytes = std::fs::read(&path).unwrap();
     bytes[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
-    fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-        h
-    }
-    let sum = fnv(fnv(0xcbf2_9ce4_8422_2325, &bytes[..20]), &bytes[REC_HEADER_BYTES..]);
+    let sum = record_checksum(&bytes);
     bytes[20..28].copy_from_slice(&sum.to_le_bytes());
     std::fs::write(&path, &bytes).unwrap();
 
@@ -303,6 +311,124 @@ fn manifest_rejects_mismatched_store_shapes() {
     // the matching shape still resumes
     let re = ShardedStore::resume(RF, cfg).unwrap();
     assert_eq!(re.summary().recovered_rows, 1);
+}
+
+/// One hand-crafted v1 (pre-codec-ladder) record: 28-byte header
+/// (magic "KVR1", generation, position, checksum) followed by the
+/// fixed u8 payload `min f32 | scale f32 | rf code bytes`.
+fn v1_record(generation: u64, pos: u64, r: &[f32]) -> Vec<u8> {
+    let q = quantize(r);
+    let mut rec = vec![0u8; 28 + 8 + RF];
+    rec[0..4].copy_from_slice(&0x3152_564Bu32.to_le_bytes()); // "KVR1"
+    rec[4..12].copy_from_slice(&generation.to_le_bytes());
+    rec[12..20].copy_from_slice(&pos.to_le_bytes());
+    rec[28..32].copy_from_slice(&q.min.to_le_bytes());
+    rec[32..36].copy_from_slice(&q.scale.to_le_bytes());
+    rec[36..36 + RF].copy_from_slice(&q.q);
+    let sum = record_checksum(&rec);
+    rec[20..28].copy_from_slice(&sum.to_le_bytes());
+    rec
+}
+
+/// Write a version-1 manifest the way the pre-ladder release did:
+/// same identity keys, v1 record size, no codec byte anywhere.
+fn write_v1_manifest(dir: &TempDir, generation: u64) {
+    let manifest = format!(
+        "{{\"magic\":\"asrkf-spill\",\"version\":1,\"row_floats\":{RF},\
+         \"record_bytes\":{},\"shards\":1,\"partition\":\"hash\",\
+         \"generation\":{generation}}}",
+        28 + 8 + RF
+    );
+    std::fs::write(
+        std::path::Path::new(&dir.path_str()).join("spill-manifest.json"),
+        manifest,
+    )
+    .unwrap();
+}
+
+/// Forward compatibility: a directory written by the pre-ladder (v1)
+/// release resumes under the codec-ladder store. The shard file
+/// migrates to the v2 codec-tagged record format at open — keeping
+/// each record's original generation stamp so fencing still applies —
+/// and every v1 row recovers bit-exact as a u8 record. This is an
+/// on-disk compatibility refactor, not a reset.
+#[test]
+fn v1_format_directory_resumes_migrates_and_restores_bit_exact() {
+    let dir = TempDir::new("spill-v1-compat").unwrap();
+    let rows = [row(1.0), row(2.0), row(3.0)];
+    let mut file = Vec::new();
+    for (pos, r) in rows.iter().enumerate() {
+        file.extend_from_slice(&v1_record(1, pos as u64, r));
+    }
+    std::fs::write(record_path(&dir.path_str(), 0), &file).unwrap();
+    write_v1_manifest(&dir, 1);
+
+    let mut re = ShardedStore::resume(RF, persist_cfg(&dir, 1, ShardPartition::Hash)).unwrap();
+    let sum = re.summary();
+    assert_eq!(sum.recovered_rows, 3, "every v1 record must recover");
+    assert_eq!(sum.recovery_errors, 0);
+    for (pos, r) in rows.iter().enumerate() {
+        assert_eq!(
+            re.take(pos).unwrap().unwrap(),
+            expected_roundtrip(r),
+            "v1 row {pos} must restore the exact u8 lattice it was written with"
+        );
+    }
+
+    // the shard file is now v2: wider records, codec byte = u8 (1)
+    drop(re);
+    let dir2 = TempDir::new("spill-v1-compat-b").unwrap();
+    let mut file2 = Vec::new();
+    for (pos, r) in rows.iter().enumerate() {
+        file2.extend_from_slice(&v1_record(1, pos as u64, r));
+    }
+    std::fs::write(record_path(&dir2.path_str(), 0), &file2).unwrap();
+    write_v1_manifest(&dir2, 1);
+    let re2 = ShardedStore::resume(RF, persist_cfg(&dir2, 1, ShardPartition::Hash)).unwrap();
+    let migrated = std::fs::read(record_path(&dir2.path_str(), 0)).unwrap();
+    let rb = record_bytes_for(RF);
+    assert_eq!(migrated.len(), 3 * rb, "migrated file must use v2 record slots");
+    for slot in 0..3 {
+        let rec = &migrated[slot * rb..(slot + 1) * rb];
+        assert_eq!(&rec[0..4], &0x3252_564Bu32.to_le_bytes(), "v2 magic (KVR2)");
+        assert_eq!(rec[28], 1, "migrated record must carry the u8 codec byte");
+        assert_eq!(
+            u64::from_le_bytes(rec[4..12].try_into().unwrap()),
+            1,
+            "migration must preserve the original generation stamp"
+        );
+    }
+    drop(re2);
+
+    // a second resume scans the directory as native v2
+    let re3 = ShardedStore::resume(RF, persist_cfg(&dir2, 1, ShardPartition::Hash)).unwrap();
+    let sum = re3.summary();
+    assert_eq!(sum.recovered_rows, 3);
+    assert_eq!(sum.recovery_errors, 0);
+}
+
+/// Backward-compat scan safety: a v1 record corrupted while the
+/// process was down is tombstoned during migration (counted as a
+/// recovery error), never decoded into wrong floats, while intact v1
+/// neighbors still recover.
+#[test]
+fn corrupt_v1_record_is_reclaimed_during_migration() {
+    let dir = TempDir::new("spill-v1-corrupt").unwrap();
+    let good = row(7.0);
+    let mut file = Vec::new();
+    file.extend_from_slice(&v1_record(1, 0, &good));
+    let mut bad = v1_record(1, 1, &row(8.0));
+    bad[30] ^= 0xFF; // flip a payload byte under the checksum
+    file.extend_from_slice(&bad);
+    std::fs::write(record_path(&dir.path_str(), 0), &file).unwrap();
+    write_v1_manifest(&dir, 1);
+
+    let mut re = ShardedStore::resume(RF, persist_cfg(&dir, 1, ShardPartition::Hash)).unwrap();
+    let sum = re.summary();
+    assert_eq!(sum.recovered_rows, 1, "only the intact v1 record recovers");
+    assert_eq!(sum.recovery_errors, 1, "the corrupt v1 record is counted");
+    assert_eq!(re.take(0).unwrap().unwrap(), expected_roundtrip(&good));
+    assert!(re.take(1).unwrap().is_none(), "corrupt v1 row reclaimed, not served");
 }
 
 /// Recovery compacts as it scans: a trace that freed its tail leaves a
